@@ -1,0 +1,94 @@
+//! **End-to-end validation driver** (the repository's headline example,
+//! recorded in EXPERIMENTS.md): full tiny-VGG inference through the
+//! simulated accelerator at the paper's representative design point.
+//!
+//! Every tensor byte travels through the interconnect under test; the
+//! conv math executes via the AOT-compiled JAX/Pallas artifacts on PJRT
+//! (golden fallback if artifacts are missing); each layer's output is
+//! verified bit-for-bit against the Q8.8 golden model AND against what
+//! actually landed in simulated DRAM. Both interconnects run at the
+//! fabric clock the P&R model says they close at (Fig 6), so the final
+//! comparison shows the *system-level* consequence of the paper's
+//! frequency results.
+//!
+//! Run with: `cargo run --release --example vgg_inference`
+
+use medusa::accel::dnn::Network;
+use medusa::accel::quant::Fixed16;
+use medusa::config::SystemConfig;
+use medusa::coordinator::{ComputeBackend, InferenceDriver};
+use medusa::interconnect::Design;
+use medusa::runtime::ConvExecutor;
+use medusa::types::Geometry;
+use medusa::util::Prng;
+
+fn backend() -> ComputeBackend {
+    match ConvExecutor::new() {
+        Ok(exec) => {
+            println!("compute backend: PJRT (AOT JAX/Pallas artifacts)");
+            ComputeBackend::Pjrt(Box::new(exec))
+        }
+        Err(e) => {
+            println!("compute backend: golden (artifacts unavailable: {e})");
+            ComputeBackend::Golden
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let net = Network::tiny_vgg();
+    let input: Vec<Fixed16> = {
+        let mut p = Prng::new(0xda7a);
+        (0..net.layers[0].ifmap_words())
+            .map(|_| Fixed16::from_f32((p.f64() as f32) * 2.0 - 1.0))
+            .collect()
+    };
+    println!(
+        "workload: {} — {} layers, {:.1} MMACs, {} input words\n",
+        net.name,
+        net.layers.len(),
+        net.total_macs() as f64 / 1e6,
+        input.len()
+    );
+
+    let mut results = Vec::new();
+    for design in [Design::Medusa, Design::Baseline] {
+        let cfg = SystemConfig {
+            design,
+            geometry: Geometry::paper_default(),
+            dotprod_units: 64,
+            mem_clock_mhz: 200.0,
+            fabric_clock_mhz: None, // P&R timing model decides (Fig 6)
+            ddr3_timing: true,
+            rotator_stages: 0,
+            seed: 2024,
+        };
+        // PJRT backend only for the first run to keep runtime modest;
+        // data equality across designs is asserted below either way.
+        let be = if design == Design::Medusa { backend() } else { ComputeBackend::Golden };
+        let mut drv = InferenceDriver::new(cfg, be)?;
+        let (report, fm) = drv.run(&net, &input)?;
+        println!("{report}");
+        anyhow::ensure!(report.all_verified(), "{design:?}: verification failed");
+        results.push((design, report, fm));
+    }
+
+    let (m, b) = (&results[0], &results[1]);
+    anyhow::ensure!(m.2 == b.2, "final feature maps must match across interconnects (§III-F)");
+    let speedup = b.1.total_time_ms() / m.1.total_time_ms();
+    println!("== system-level result ==");
+    println!(
+        "medusa @ {:.0} MHz: {:.3} ms | baseline @ {:.0} MHz: {:.3} ms | speedup {speedup:.2}x",
+        m.1.fabric_mhz,
+        m.1.total_time_ms(),
+        b.1.fabric_mhz,
+        b.1.total_time_ms()
+    );
+    println!(
+        "effective DRAM bandwidth: medusa {:.2} GB/s vs baseline {:.2} GB/s (peak 12.8)",
+        m.1.effective_bandwidth_gbs(512),
+        b.1.effective_bandwidth_gbs(512)
+    );
+    println!("all layers verified on both interconnects ✓");
+    Ok(())
+}

@@ -1,0 +1,87 @@
+"""AOT lowering: JAX model -> HLO text artifacts + manifest.
+
+Run once at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import pathlib
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# Width of the transposition demo tile (the paper's representative
+# W_line/W_acc = 512/16 = 32).
+TRANSPOSE_N = 32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_artifacts(out_dir: pathlib.Path, use_pallas=True, verbose=True):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest_lines = [
+        "# name kind in_c in_h in_w out_c k stride pad relu path",
+    ]
+    for spec in model.ALL_LAYERS:
+        fwd = model.layer_forward(spec, use_pallas=use_pallas)
+        lowered = jax.jit(fwd).lower(*model.layer_example_args(spec))
+        text = to_hlo_text(lowered)
+        fname = f"{spec.name}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        manifest_lines.append(
+            f"{spec.name} conv {spec.in_c} {spec.in_h} {spec.in_w} "
+            f"{spec.out_c} {spec.k} {spec.stride} {spec.pad} "
+            f"{1 if spec.relu else 0} {fname}"
+        )
+        if verbose:
+            print(f"  {spec.name}: {len(text)} chars -> {fname}")
+
+    # The Medusa transposition kernel as its own artifact.
+    n = TRANSPOSE_N
+    fwd = model.transpose_forward(n)
+    lowered = jax.jit(fwd).lower(*model.transpose_example_args(n))
+    text = to_hlo_text(lowered)
+    fname = "medusa_transpose.hlo.txt"
+    (out_dir / fname).write_text(text)
+    manifest_lines.append(f"medusa_transpose transpose {n} {n} 0 {n} 0 0 0 0 {fname}")
+    if verbose:
+        print(f"  medusa_transpose: {len(text)} chars -> {fname}")
+
+    (out_dir / "manifest.txt").write_text("\n".join(manifest_lines) + "\n")
+    if verbose:
+        print(f"wrote {len(manifest_lines) - 1} artifacts to {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    ap.add_argument(
+        "--no-pallas",
+        action="store_true",
+        help="lower the pure-jnp reference instead of the Pallas kernels (debugging)",
+    )
+    args = ap.parse_args()
+    build_artifacts(pathlib.Path(args.out_dir), use_pallas=not args.no_pallas)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,96 @@
+"""L1 Pallas kernel: the layer processor's compute hot-spot — tiled
+vector dot-products (the paper's 32-wide DPUs) as an im2col matmul.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): patches [P, K] x weights
+[K, OC] tiled so each grid step stages a (TP x K) activation tile and a
+(K x TOC) weight tile in VMEM and issues an MXU matmul; the BlockSpec
+grid expresses the HBM<->VMEM double-buffered streaming the paper's
+layer processors do with their ifmap/weight buffers. Arithmetic is in
+the raw-Q8.8-in-f64 domain (exact integers), so the artifact is
+bit-identical to the Rust golden model after requantization.
+
+interpret=True: CPU-PJRT cannot execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes: P-tiles sized for the MXU's 128 rows; OC tiles of 16 match
+# the small output-channel counts of the workloads (padded as needed).
+TILE_P = 128
+TILE_OC = 16
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (TP x K) x (K x TOC) tile product, full-K (K fits VMEM for
+    conv workloads: K = in_c*k*k <= 576 words)."""
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], precision="highest")
+
+
+def dotprod_matmul(patches, weights_t, *, interpret=True):
+    """[P, K] @ [K, OC] with Pallas tiling; P and OC padded to tiles."""
+    p, k = patches.shape
+    k2, oc = weights_t.shape
+    assert k == k2
+    pp = -(-p // TILE_P) * TILE_P
+    poc = -(-oc // TILE_OC) * TILE_OC
+    a = jnp.zeros((pp, k), patches.dtype).at[:p, :].set(patches)
+    b = jnp.zeros((k, poc), weights_t.dtype).at[:, :oc].set(weights_t)
+    grid = (pp // TILE_P, poc // TILE_OC)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_P, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, TILE_OC), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE_P, TILE_OC), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pp, poc), patches.dtype),
+        interpret=interpret,
+    )(a, b)
+    return out[:p, :oc]
+
+
+def im2col(x, *, k, stride, pad):
+    """[C, H, W] -> patches [OH*OW, C*k*k] with (c, ky, kx) feature order
+    (must match rust/src/accel/golden.rs::weight_index)."""
+    c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    cols = []
+    for ky in range(k):
+        for kx in range(k):
+            sl = xp[:, ky : ky + stride * oh : stride, kx : kx + stride * ow : stride]
+            cols.append(sl)  # [C, OH, OW]
+    # Stack to [k*k, C, OH, OW] -> reorder to (C, ky*kx) feature order.
+    stacked = jnp.stack(cols, axis=0).reshape(k * k, c, oh, ow)
+    feat = jnp.transpose(stacked, (1, 0, 2, 3)).reshape(c * k * k, oh * ow)
+    return feat.T  # [P, K]
+
+
+def conv2d_q88_pallas(
+    ifmap, weights, bias, *, in_c, in_h, in_w, out_c, k, stride, pad, relu, interpret=True
+):
+    """Conv layer forward in raw-Q8.8 domain using the Pallas matmul.
+
+    Same signature/contract as ref.conv2d_q88_ref.
+    """
+    from . import ref
+
+    x = jnp.reshape(jnp.asarray(ifmap, jnp.float64), (in_c, in_h, in_w))
+    w = jnp.reshape(jnp.asarray(weights, jnp.float64), (out_c, in_c * k * k))
+    b = jnp.asarray(bias, jnp.float64)
+    patches = im2col(x, k=k, stride=stride, pad=pad)  # [P, K]
+    acc = dotprod_matmul(patches, w.T, interpret=interpret)  # [P, OC]
+    acc = acc + (b * ref.SCALE)[None, :]
+    out = ref.requantize_acc(acc)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    oh = (in_h + 2 * pad - k) // stride + 1
+    ow = (in_w + 2 * pad - k) // stride + 1
+    # [P, OC] -> channel-major [OC, OH, OW] flat (the DRAM layout).
+    return jnp.transpose(out.reshape(oh * ow, out_c), (1, 0)).reshape(-1)

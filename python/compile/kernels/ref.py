@@ -1,0 +1,77 @@
+"""Pure-jnp reference oracles (L1 correctness ground truth).
+
+Everything operates in the "raw Q8.8" domain: tensors carry the integer
+representation of Q8.8 fixed-point values in float64 (exact: products fit
+in 2**30, receptive-field sums far below 2**53). This mirrors
+rust/src/accel/{quant,golden}.rs bit-for-bit — the cross-language contract
+the end-to-end verification depends on.
+"""
+
+import jax.lax as lax
+import jax.numpy as jnp
+
+FRAC_BITS = 8
+SCALE = float(1 << FRAC_BITS)
+Q_MIN = -32768.0
+Q_MAX = 32767.0
+
+
+def quantize_f32(x):
+    """Float -> raw Q8.8 (round-half-even, saturate)."""
+    return jnp.clip(jnp.round(jnp.asarray(x, jnp.float64) * SCALE), Q_MIN, Q_MAX)
+
+
+def dequantize(q):
+    return jnp.asarray(q, jnp.float64) / SCALE
+
+
+def requantize_acc(acc):
+    """Raw Q16.16 accumulator -> raw Q8.8: shift with round-half-even,
+    saturate. jnp.round implements ties-to-even, matching the Rust
+    `shift_round_half_even`."""
+    return jnp.clip(jnp.round(jnp.asarray(acc, jnp.float64) / SCALE), Q_MIN, Q_MAX)
+
+
+def conv2d_q88_ref(ifmap, weights, bias, *, in_c, in_h, in_w, out_c, k, stride, pad, relu):
+    """Reference conv in raw-Q8.8 domain.
+
+    ifmap:   [in_c*in_h*in_w] raw Q8.8 (f64)
+    weights: [out_c*in_c*k*k] raw Q8.8
+    bias:    [out_c]          raw Q8.8
+    returns  [out_c*out_h*out_w] raw Q8.8
+    """
+    x = jnp.reshape(jnp.asarray(ifmap, jnp.float64), (1, in_c, in_h, in_w))
+    w = jnp.reshape(jnp.asarray(weights, jnp.float64), (out_c, in_c, k, k))
+    b = jnp.asarray(bias, jnp.float64)
+    acc = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    acc = acc + (b * SCALE)[None, :, None, None]  # bias << FRAC_BITS
+    out = requantize_acc(acc)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return jnp.reshape(out, (-1,))
+
+
+def transpose_ref(lines):
+    """Medusa read-direction transposition oracle (paper Fig 4).
+
+    `lines[x]` is the memory line destined to port x (n words each, the
+    single-line-per-port snapshot of Fig 4). The data-transfer job is:
+    output bank x must hold exactly lines[x] in word order. The kernel
+    under test implements this with the paper's diagonal-read + rotate +
+    transposed-store schedule; composed, the schedule must be the
+    identity on this layout.
+    """
+    m = jnp.asarray(lines)
+    assert m.ndim == 2 and m.shape[0] == m.shape[1], "one line per port"
+    return m
+
+
+def rotate_left_ref(v, amount):
+    """Barrel-rotator oracle: out[j] = v[(j + amount) mod n]."""
+    return jnp.roll(jnp.asarray(v), -int(amount), axis=0)

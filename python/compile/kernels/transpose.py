@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: the Medusa transposition schedule (paper §III-A, Fig 4).
+
+TPU mapping of the paper's insight (DESIGN.md §Hardware-Adaptation): the
+input buffer is a VMEM-resident [N, N] word tile laid out bank-major
+(entry [y, x] = word index y of the line destined to port x — exactly the
+paper's "words destined to port i are stored at address i of each input
+buffer bank"). Each of the N schedule steps performs
+
+  1. a diagonal read   v[k] = in[k, (k - c) mod N]
+  2. a barrel rotation rot = roll(v, -c)          (the VPU cross-lane
+     shuffle standing in for the Fig 5 barrel shifter)
+  3. a transposed store out[j, (j + c) mod N] = rot[j]
+
+so after N steps the output tile is port-major: out[x] = the words of
+port x's line in index order. The schedule composes to a transpose of
+the input tile; ref.transpose_ref is the oracle.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _transpose_kernel(in_ref, out_ref, *, n):
+    """One pallas program: run the full N-cycle transposition schedule."""
+    idx = jnp.arange(n)
+
+    def cycle(c, acc):
+        # 1. Diagonal read: v[k] = in[k, (k - c) mod n].
+        v = in_ref[idx, (idx - c) % n]
+        # 2. Rotation unit: left-rotate by c (out[j] = v[(j + c) mod n]).
+        rot = jnp.roll(v, -c)
+        # 3. Transposed store: out[j, (j + c) mod n] = rot[j], expressed
+        #    as accumulation with the cycle's permutation matrix (each
+        #    output bank is written exactly once per cycle).
+        perm = (idx[None, :] == ((idx[:, None] + c) % n)).astype(acc.dtype)
+        return acc + rot[:, None] * perm
+
+    acc = jax.lax.fori_loop(0, n, cycle, jnp.zeros((n, n), in_ref.dtype))
+    out_ref[...] = acc
+
+
+def medusa_transpose(lines_bank_major, *, n=None, interpret=True):
+    """Run the transposition kernel on an [N, N] bank-major word tile.
+
+    Returns the port-major tile: row x = the word stream port x receives.
+    """
+    m = jnp.asarray(lines_bank_major)
+    assert m.ndim == 2 and m.shape[0] == m.shape[1]
+    n = n or m.shape[0]
+    kernel = functools.partial(_transpose_kernel, n=n)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, n), m.dtype),
+        interpret=interpret,
+    )(m)
+
+
+def lines_to_bank_major(lines):
+    """Pack per-port lines [port, word] into the paper's input-buffer
+    layout [bank, port]: entry [y, x] = lines[x, y]."""
+    return jnp.asarray(lines).T

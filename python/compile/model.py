@@ -1,0 +1,131 @@
+"""L2: the layer processor's computation as a JAX model (build-time only).
+
+Each tiny-VGG layer becomes one jitted function over flat raw-Q8.8
+tensors, its hot loop implemented by the L1 Pallas dot-product kernel
+(kernels/conv_dotprod.py). `aot.py` lowers each to HLO text for the Rust
+runtime; Python never runs at inference time.
+
+The layer list below MUST mirror rust/src/accel/dnn.rs::Network::tiny_vgg
+— the artifact names and shapes are the cross-language contract.
+"""
+
+import dataclasses
+import functools
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # raw-Q8.8 integers ride in f64
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels import conv_dotprod, ref  # noqa: E402
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    name: str
+    in_c: int
+    in_h: int
+    in_w: int
+    out_c: int
+    k: int
+    stride: int
+    pad: int
+    relu: bool
+
+    @property
+    def out_h(self):
+        return (self.in_h + 2 * self.pad - self.k) // self.stride + 1
+
+    @property
+    def out_w(self):
+        return (self.in_w + 2 * self.pad - self.k) // self.stride + 1
+
+    @property
+    def ifmap_words(self):
+        return self.in_c * self.in_h * self.in_w
+
+    @property
+    def weight_count(self):
+        return self.out_c * self.in_c * self.k * self.k
+
+    @property
+    def ofmap_words(self):
+        return self.out_c * self.out_h * self.out_w
+
+
+def _conv(name, in_c, in_hw, out_c, *, stride=1):
+    return LayerSpec(name, in_c, in_hw, in_hw, out_c, 3, stride, 1, True)
+
+
+# Mirror of Network::tiny_vgg (rust/src/accel/dnn.rs).
+TINY_VGG = [
+    _conv("conv1", 3, 32, 16),
+    _conv("conv2", 16, 32, 16),
+    _conv("down1", 16, 32, 32, stride=2),
+    _conv("conv3", 32, 16, 32),
+    _conv("down2", 32, 16, 64, stride=2),
+    _conv("conv4", 64, 8, 64),
+]
+
+# A small extra shape used by the quickstart example and kernel tests.
+QUICKSTART = LayerSpec("quickstart", 2, 8, 8, 4, 3, 1, 1, True)
+
+ALL_LAYERS = TINY_VGG + [QUICKSTART]
+
+
+def layer_forward(spec: LayerSpec, use_pallas=True):
+    """Build the jittable forward fn for one layer.
+
+    Signature: (ifmap[f64 N], weights[f64 M], bias[f64 out_c]) ->
+    (ofmap[f64 P],) — a 1-tuple, lowered with return_tuple=True so the
+    Rust side unwraps with to_tuple1/decompose.
+    """
+    kw = dict(
+        in_c=spec.in_c,
+        in_h=spec.in_h,
+        in_w=spec.in_w,
+        out_c=spec.out_c,
+        k=spec.k,
+        stride=spec.stride,
+        pad=spec.pad,
+        relu=spec.relu,
+    )
+    impl = conv_dotprod.conv2d_q88_pallas if use_pallas else ref.conv2d_q88_ref
+
+    def fwd(ifmap, weights, bias):
+        return (impl(ifmap, weights, bias, **kw),)
+
+    return fwd
+
+
+def layer_example_args(spec: LayerSpec):
+    f64 = jnp.float64
+    return (
+        jax.ShapeDtypeStruct((spec.ifmap_words,), f64),
+        jax.ShapeDtypeStruct((spec.weight_count,), f64),
+        jax.ShapeDtypeStruct((spec.out_c,), f64),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def spec_by_name(name: str) -> LayerSpec:
+    for s in ALL_LAYERS:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+def transpose_forward(n: int):
+    """The Medusa transposition kernel as an exported computation
+    (kind=transpose artifact; the quickstart demo runs it via PJRT)."""
+    from .kernels import transpose
+
+    def fwd(tile):
+        return (transpose.medusa_transpose(tile, n=n),)
+
+    return fwd
+
+
+def transpose_example_args(n: int):
+    return (jax.ShapeDtypeStruct((n, n), jnp.float64),)

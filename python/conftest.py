@@ -1,0 +1,8 @@
+"""Make `pytest python/tests` work from the repository root (and from
+python/): put the python/ directory on sys.path so `compile.*` imports
+resolve regardless of the invocation directory."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,150 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes and data; everything is exact-integer (raw Q8.8
+in f64), so comparisons are strict equality.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import conv_dotprod, ref, transpose
+
+# ---------------------------------------------------------------------------
+# Transposition kernel (the Medusa schedule)
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 32])
+def test_transpose_identity_on_port_layout(n):
+    rng = np.random.default_rng(n)
+    lines = rng.integers(0, 1 << 16, size=(n, n)).astype(np.float64)
+    tile = transpose.lines_to_bank_major(lines)
+    out = transpose.medusa_transpose(tile, n=n)
+    np.testing.assert_array_equal(np.asarray(out), ref.transpose_ref(lines))
+
+
+def test_transpose_fig4_example():
+    # Paper Fig 4: N=4. Word (x, y) encoded as 16*x + y. After
+    # transposition, port x's row must be its line's words in order.
+    n = 4
+    lines = np.array([[16 * x + y for y in range(n)] for x in range(n)], dtype=np.float64)
+    out = transpose.medusa_transpose(transpose.lines_to_bank_major(lines), n=n)
+    np.testing.assert_array_equal(np.asarray(out), lines)
+
+
+@given(
+    n=st.sampled_from([2, 4, 8, 16]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_transpose_random_data_exact(n, seed):
+    rng = np.random.default_rng(seed)
+    lines = rng.integers(-(1 << 15), 1 << 15, size=(n, n)).astype(np.float64)
+    out = transpose.medusa_transpose(transpose.lines_to_bank_major(lines), n=n)
+    np.testing.assert_array_equal(np.asarray(out), lines)
+
+
+@pytest.mark.parametrize("amount", range(8))
+def test_rotator_oracle(amount):
+    v = jnp.arange(8.0)
+    out = ref.rotate_left_ref(v, amount)
+    expect = [(j + amount) % 8 for j in range(8)]
+    np.testing.assert_array_equal(np.asarray(out), expect)
+
+
+# ---------------------------------------------------------------------------
+# Dot-product (conv) kernel
+
+
+def rand_layer_data(rng, in_c, in_h, in_w, out_c, k):
+    ifmap = rng.integers(-(1 << 11), 1 << 11, size=in_c * in_h * in_w).astype(np.float64)
+    weights = rng.integers(-(1 << 7), 1 << 7, size=out_c * in_c * k * k).astype(np.float64)
+    bias = rng.integers(-(1 << 7), 1 << 7, size=out_c).astype(np.float64)
+    return ifmap, weights, bias
+
+
+CONV_SHAPES = [
+    dict(in_c=1, in_h=4, in_w=4, out_c=1, k=1, stride=1, pad=0, relu=False),
+    dict(in_c=2, in_h=8, in_w=8, out_c=4, k=3, stride=1, pad=1, relu=True),
+    dict(in_c=3, in_h=6, in_w=6, out_c=5, k=3, stride=2, pad=1, relu=True),
+    dict(in_c=4, in_h=5, in_w=7, out_c=2, k=3, stride=1, pad=0, relu=False),
+]
+
+
+@pytest.mark.parametrize("shape", CONV_SHAPES)
+def test_conv_pallas_matches_ref(shape):
+    rng = np.random.default_rng(42)
+    ifmap, weights, bias = rand_layer_data(
+        rng, shape["in_c"], shape["in_h"], shape["in_w"], shape["out_c"], shape["k"]
+    )
+    got = conv_dotprod.conv2d_q88_pallas(ifmap, weights, bias, **shape)
+    want = ref.conv2d_q88_ref(ifmap, weights, bias, **shape)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(
+    in_c=st.integers(1, 4),
+    hw=st.integers(3, 10),
+    out_c=st.integers(1, 6),
+    k=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_conv_pallas_matches_ref_hypothesis(in_c, hw, out_c, k, stride, relu, seed):
+    pad = k // 2
+    rng = np.random.default_rng(seed)
+    ifmap, weights, bias = rand_layer_data(rng, in_c, hw, hw, out_c, k)
+    kw = dict(in_c=in_c, in_h=hw, in_w=hw, out_c=out_c, k=k, stride=stride, pad=pad, relu=relu)
+    got = conv_dotprod.conv2d_q88_pallas(ifmap, weights, bias, **kw)
+    want = ref.conv2d_q88_ref(ifmap, weights, bias, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_conv_saturation_behaviour():
+    # Saturating requantization: huge accumulators clamp to i16 range.
+    shape = dict(in_c=1, in_h=3, in_w=3, out_c=1, k=3, stride=1, pad=0, relu=False)
+    ifmap = np.full(9, 32767.0)
+    weights = np.full(9, 32767.0)
+    bias = np.zeros(1)
+    got = np.asarray(conv_dotprod.conv2d_q88_pallas(ifmap, weights, bias, **shape))
+    assert got.shape == (1,)
+    assert got[0] == 32767.0
+
+
+def test_im2col_feature_order_matches_weight_layout():
+    # Feature order must be (c, ky, kx) — the rust weight_index layout.
+    x = jnp.arange(2 * 3 * 3, dtype=jnp.float64).reshape(2, 3, 3)
+    patches = conv_dotprod.im2col(x, k=3, stride=1, pad=0)
+    assert patches.shape == (1, 18)
+    expect = np.concatenate([np.asarray(x[0]).ravel(), np.asarray(x[1]).ravel()])
+    np.testing.assert_array_equal(np.asarray(patches[0]), expect)
+
+
+# ---------------------------------------------------------------------------
+# Quantization helpers
+
+
+def test_quantize_round_half_even():
+    vals = jnp.asarray([0.5 / 256, 1.5 / 256, -0.5 / 256, -1.5 / 256])
+    q = ref.quantize_f32(vals)
+    np.testing.assert_array_equal(np.asarray(q), [0.0, 2.0, 0.0, -2.0])
+
+
+def test_quantize_saturates():
+    q = ref.quantize_f32(jnp.asarray([1e6, -1e6]))
+    np.testing.assert_array_equal(np.asarray(q), [32767.0, -32768.0])
+
+
+def test_requantize_matches_rust_semantics():
+    # acc = 384 (1.5 LSB) -> 2; acc = 128 (0.5 LSB) -> 0; -128 -> 0;
+    # -384 -> -2 (ties to even) — mirrors quant.rs tests.
+    acc = jnp.asarray([384.0, 128.0, -128.0, -384.0])
+    np.testing.assert_array_equal(np.asarray(ref.requantize_acc(acc)), [2.0, 0.0, -0.0, -2.0])

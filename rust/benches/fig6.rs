@@ -1,0 +1,75 @@
+//! Bench target for **Figure 6** (paper §IV-D): the scaling sweep —
+//! peak P&R frequency for baseline vs Medusa across all 11 design
+//! points and four memory-interface regions, plus the system-level
+//! consequence: simulated end-to-end bandwidth delivered to the
+//! accelerator at each point's achievable clock.
+
+use medusa::accel::prefetch::{partition, Region};
+use medusa::config::SystemConfig;
+use medusa::coordinator::System;
+use medusa::eval;
+use medusa::fpga::DesignPoint;
+use medusa::interconnect::Design;
+use medusa::types::Line;
+use medusa::util::bench::Bench;
+
+/// Simulated time (ps) to stream `total_lines` through a design point's
+/// read path at its modelled fabric clock.
+fn stream_time_ps(dp: &DesignPoint, total_lines: usize) -> Option<u64> {
+    let cfg = SystemConfig {
+        design: dp.design,
+        geometry: dp.geometry,
+        dotprod_units: dp.dpus,
+        mem_clock_mhz: 200.0,
+        fabric_clock_mhz: None, // use the P&R model
+        ddr3_timing: false,
+        rotator_stages: 0,
+        seed: 1,
+    };
+    let mut sys = System::new(cfg).ok()?; // None = failed timing
+    let n = dp.geometry.words_per_line();
+    sys.controller_mut().preload(0, (0..total_lines as u64).map(|_| Line::zeroed(n)));
+    let scheds = partition(&[Region { base: 0, lines: total_lines }], dp.geometry.read_ports);
+    sys.lp.begin_layer(&scheds, 1);
+    sys.run_until_compute_done(50_000_000).ok()?;
+    Some(sys.now_ps())
+}
+
+fn main() {
+    println!("{}", eval::fig6().to_text());
+    println!();
+    print!("{}", eval::fig6::ascii_plot());
+    println!();
+
+    // System-level: delivered read bandwidth (GB/s) at the modelled clock.
+    println!("### delivered bandwidth at modelled fabric clock (2048 lines, ideal DRAM)");
+    println!("{:>6} {:>9} {:>10} {:>14} {:>14}", "DSPs", "iface", "lines", "base GB/s", "medusa GB/s");
+    let total_lines = 2048usize;
+    for step in 0..=10 {
+        let b = DesignPoint::fig6_step(Design::Baseline, step);
+        let m = DesignPoint::fig6_step(Design::Medusa, step);
+        let gbs = |dp: &DesignPoint| -> String {
+            match stream_time_ps(dp, total_lines) {
+                Some(ps) => {
+                    let bytes = (total_lines * dp.geometry.w_line / 8) as f64;
+                    format!("{:.2}", bytes / (ps as f64 / 1e12) / 1e9)
+                }
+                None => "fail".to_string(),
+            }
+        };
+        println!(
+            "{:>6} {:>9} {:>10} {:>14} {:>14}",
+            b.dsps(),
+            format!("{}b", b.geometry.w_line),
+            total_lines,
+            gbs(&b),
+            gbs(&m)
+        );
+    }
+    println!();
+
+    // Wall-clock cost of regenerating the figure (the P&R search itself).
+    let mut bench = Bench::new();
+    bench.run("fig6/full_sweep_regeneration", 22, "P&R searches", || eval::fig6::sweep());
+    bench.report("fig6 regeneration");
+}

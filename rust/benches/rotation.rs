@@ -1,0 +1,43 @@
+//! Rotation-unit micro-benchmarks (paper §III-B / Fig 5): combinational
+//! vs pipelined barrel rotation across sizes — the Medusa datapath's
+//! innermost operation in the simulator.
+
+use medusa::hw::rotator::{rotate_left, PipelinedRotator};
+use medusa::types::Word;
+use medusa::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    for n in [8usize, 16, 32, 64] {
+        let base: Vec<Word> = (0..n as u64).collect();
+        let iters = 100_000u64;
+        b.run(format!("combinational/n{n}/{iters}_rots"), iters, "rotations", || {
+            let mut v = base.clone();
+            let mut acc = 0u64;
+            for i in 0..iters {
+                rotate_left(&mut v, (i as usize) % n);
+                acc = acc.wrapping_add(v[0]);
+            }
+            acc
+        });
+        let items = 10_000u64;
+        b.run(format!("pipelined/n{n}/{items}_items"), items, "items", || {
+            let mut r: PipelinedRotator<u64> = PipelinedRotator::new(n);
+            let mut sent = 0u64;
+            let mut recv = 0u64;
+            let mut acc = 0u64;
+            while recv < items {
+                if let Some((words, _tag)) = r.tick() {
+                    recv += 1;
+                    acc = acc.wrapping_add(words[0]);
+                }
+                if sent < items && r.can_accept() {
+                    r.accept(base.clone(), (sent as usize) % n, sent);
+                    sent += 1;
+                }
+            }
+            acc
+        });
+    }
+    b.report("rotation unit micro-benchmarks");
+}

@@ -1,0 +1,43 @@
+//! Bench target for **Table I** (paper §IV-B): baseline vs AXI4-Stream
+//! data transfer networks at 1x256-bit -> 16x16-bit, FIFO depth 32.
+//!
+//! Regenerates the table from the resource model and benchmarks the
+//! *behavioural* networks moving the same traffic, so the comparison
+//! covers both cost (resources) and function (data transfer).
+
+use medusa::eval;
+use medusa::interconnect::harness::{drive_read, drive_write, gen_lines};
+use medusa::interconnect::{build_read_network, build_write_network, Design};
+use medusa::util::bench::Bench;
+
+fn main() {
+    println!("{}", eval::table1().to_text());
+
+    let g = eval::table1::geometry();
+    let lines = gen_lines(&g, 2_048, 0x7ab1e1);
+    let mut b = Bench::new();
+    for design in [Design::Baseline, Design::Axis] {
+        b.run(format!("read_network/{}/2048_lines", design.name()), 2_048, "lines", || {
+            let mut net = build_read_network(design, g);
+            drive_read(net.as_mut(), &lines, false).0
+        });
+        b.run(format!("write_network/{}/2048_lines", design.name()), 2_048, "lines", || {
+            let mut net = build_write_network(design, g);
+            drive_write(net.as_mut(), 2_048 / g.write_ports, 0x7ab1e2, false).0
+        });
+    }
+    b.report("table1 behavioural networks (simulated lines moved per wall-second)");
+
+    // Cycle-efficiency comparison (the architectural claim): both reach
+    // ~1 line/cycle, AXIS pays extra latency only.
+    for design in [Design::Baseline, Design::Axis] {
+        let mut net = build_read_network(design, g);
+        let (res, _) = drive_read(net.as_mut(), &lines, false);
+        println!(
+            "cycle efficiency {}: {:.3} lines/cycle over {} lines",
+            design.name(),
+            res.lines_per_cycle(),
+            res.lines_moved
+        );
+    }
+}

@@ -1,0 +1,53 @@
+//! Bench target for **Table II** (paper §IV-C): Medusa vs baseline at the
+//! representative design point — resource table, headline factors, and
+//! the behavioural networks' simulated throughput at the same geometry.
+
+use medusa::eval;
+use medusa::interconnect::harness::{drive_read, drive_write, gen_lines};
+use medusa::interconnect::{build_read_network, build_write_network, Design};
+use medusa::util::bench::Bench;
+
+fn main() {
+    println!("{}", eval::table2().to_text());
+    let h = eval::table2::headline();
+    println!(
+        "headline: {:.2}x LUT / {:.2}x FF network savings (paper 4.73x / 6.02x); \
+         networks are {:.1}%/{:.1}% of baseline total LUT/FF (paper 22.6%/22.7%), \
+         {:.1}%/{:.1}% with Medusa (paper 6.1%/4.7%)\n",
+        h.lut_factor,
+        h.ff_factor,
+        h.baseline_net_lut_share,
+        h.baseline_net_ff_share,
+        h.medusa_net_lut_share,
+        h.medusa_net_ff_share
+    );
+
+    let g = eval::table2::geometry();
+    let lines = gen_lines(&g, 4_096, 0x7ab1e2);
+    let mut b = Bench::new();
+    for design in [Design::Baseline, Design::Medusa] {
+        b.run(format!("read_network/{}/4096_lines", design.name()), 4_096, "lines", || {
+            let mut net = build_read_network(design, g);
+            drive_read(net.as_mut(), &lines, false).0
+        });
+        b.run(format!("write_network/{}/4096_lines", design.name()), 4_096, "lines", || {
+            let mut net = build_write_network(design, g);
+            drive_write(net.as_mut(), 4_096 / g.write_ports, 1, false).0
+        });
+    }
+    b.report("table2 behavioural networks at 512b/32+32 ports");
+
+    for design in [Design::Baseline, Design::Medusa] {
+        let mut rd = build_read_network(design, g);
+        let (r, _) = drive_read(rd.as_mut(), &lines, false);
+        let mut wr = build_write_network(design, g);
+        let (w, _) = drive_write(wr.as_mut(), 4_096 / g.write_ports, 1, false);
+        println!(
+            "cycle efficiency {}: read {:.3} lines/cycle, write {:.3} lines/cycle \
+             (both designs must sustain ~1.0 — §III-A)",
+            design.name(),
+            r.lines_per_cycle(),
+            w.lines_per_cycle()
+        );
+    }
+}

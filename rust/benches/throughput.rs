@@ -1,0 +1,45 @@
+//! Simulator hot-path throughput (§Perf primary metric): simulated
+//! line-transfers per wall-second through each data-transfer network,
+//! across geometries — the number the performance pass optimizes.
+
+use medusa::interconnect::harness::{drive_read, drive_write_streams, gen_lines, gen_write_streams};
+use medusa::interconnect::{build_read_network, build_write_network, Design};
+use medusa::types::Geometry;
+use medusa::util::bench::Bench;
+
+fn main() {
+    let geoms = [
+        ("128b/8p", Geometry { w_line: 128, w_acc: 16, read_ports: 8, write_ports: 8, max_burst: 32 }),
+        ("512b/32p", Geometry::paper_default()),
+        ("1024b/64p", Geometry { w_line: 1024, w_acc: 16, read_ports: 64, write_ports: 64, max_burst: 32 }),
+    ];
+    let total = 8_192usize;
+    let mut b = Bench::new();
+    for (gname, g) in geoms {
+        let lines = gen_lines(&g, total, 42);
+        let streams = gen_write_streams(&g, total / g.write_ports, 43);
+        for design in [Design::Baseline, Design::Medusa] {
+            b.run(format!("read/{}/{gname}", design.name()), total as u64, "lines", || {
+                let mut net = build_read_network(design, g);
+                drive_read(net.as_mut(), &lines, false).0
+            });
+            b.run(format!("write/{}/{gname}", design.name()), total as u64, "lines", || {
+                let mut net = build_write_network(design, g);
+                drive_write_streams(net.as_mut(), &streams, false).0
+            });
+        }
+    }
+    let report = b.report("interconnect simulator throughput (simulated lines per wall-second)");
+    // The §Perf target: >= 1M simulated line-transfers/s on the paper
+    // geometry read path.
+    let paper_read = b
+        .results()
+        .iter()
+        .find(|m| m.name == "read/medusa/512b/32p")
+        .expect("paper-point measurement");
+    println!(
+        "\n§Perf gate: medusa read @512b/32p = {:.3e} lines/s (target >= 1e6)",
+        paper_read.throughput()
+    );
+    let _ = report;
+}

@@ -1,0 +1,160 @@
+//! Golden (software) convolution in the exact Q8.8 semantics of the
+//! hardware: wide accumulation, single round, saturate, optional ReLU.
+//!
+//! Used to verify (a) data integrity through the simulated interconnects
+//! and (b) the PJRT-executed JAX/Pallas artifact, which implements the
+//! same quantization (python/compile/kernels/ref.py).
+
+use crate::accel::dnn::ConvLayer;
+use crate::accel::quant::{relu, Fixed16};
+
+/// Feature maps are stored channel-major: `fm[c][y][x]` flattened as
+/// `c * H * W + y * W + x` — the layout the prefetch generators assume.
+pub fn fmap_index(w: usize, h: usize, c: usize, y: usize, x: usize) -> usize {
+    c * h * w + y * w + x
+}
+
+/// Weights stored as `weights[oc][ic][ky][kx]` flattened; biases appended
+/// per output channel by the caller's buffer layout.
+pub fn weight_index(l: &ConvLayer, oc: usize, ic: usize, ky: usize, kx: usize) -> usize {
+    ((oc * l.in_c + ic) * l.k + ky) * l.k + kx
+}
+
+/// Compute one conv layer on quantized inputs. `ifmap` has
+/// `in_c*in_h*in_w` words, `weights` has `out_c*in_c*k*k`, `bias` has
+/// `out_c`. Returns the `out_c*out_h*out_w` output map.
+pub fn conv2d_q88(
+    l: &ConvLayer,
+    ifmap: &[Fixed16],
+    weights: &[Fixed16],
+    bias: &[Fixed16],
+) -> Vec<Fixed16> {
+    assert_eq!(ifmap.len(), l.ifmap_words());
+    assert_eq!(weights.len(), l.out_c * l.in_c * l.k * l.k);
+    assert_eq!(bias.len(), l.out_c);
+    let (oh, ow) = (l.out_h(), l.out_w());
+    let mut out = vec![Fixed16::ZERO; l.out_c * oh * ow];
+    for oc in 0..l.out_c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                // Wide Q16.16 accumulation across the whole receptive
+                // field (matches the DSP-cascade + final-round hardware
+                // and the JAX kernel).
+                let mut acc: i64 = (bias[oc].0 as i64) << super::quant::FRAC_BITS;
+                for ic in 0..l.in_c {
+                    for ky in 0..l.k {
+                        for kx in 0..l.k {
+                            let iy = (oy * l.stride + ky) as isize - l.pad as isize;
+                            let ix = (ox * l.stride + kx) as isize - l.pad as isize;
+                            if iy < 0 || ix < 0 || iy >= l.in_h as isize || ix >= l.in_w as isize {
+                                continue; // zero padding
+                            }
+                            let iv = ifmap[fmap_index(l.in_w, l.in_h, ic, iy as usize, ix as usize)];
+                            let wv = weights[weight_index(l, oc, ic, ky, kx)];
+                            acc += iv.0 as i64 * wv.0 as i64;
+                        }
+                    }
+                }
+                let q = crate::accel::quant::Fixed16(
+                    shift_round(acc).clamp(i16::MIN as i64, i16::MAX as i64) as i16,
+                );
+                let v = if l.relu { relu(q) } else { q };
+                out[fmap_index(ow, oh, oc, oy, ox)] = v;
+            }
+        }
+    }
+    out
+}
+
+fn shift_round(acc: i64) -> i64 {
+    // Round-half-even shift by FRAC_BITS, same as quant::dot.
+    let bits = super::quant::FRAC_BITS;
+    let div = 1i64 << bits;
+    let q = acc >> bits;
+    let rem = acc - (q << bits);
+    let half = div / 2;
+    if rem > half || (rem == half && (q & 1) == 1) {
+        q + 1
+    } else {
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn identity_layer() -> ConvLayer {
+        ConvLayer { name: "id", in_c: 1, in_h: 4, in_w: 4, out_c: 1, k: 1, stride: 1, pad: 0, relu: false }
+    }
+
+    #[test]
+    fn identity_kernel_passes_through() {
+        let l = identity_layer();
+        let ifmap: Vec<Fixed16> = (0..16).map(|i| Fixed16::from_f32(i as f32 * 0.5)).collect();
+        let weights = vec![Fixed16::from_f32(1.0)];
+        let bias = vec![Fixed16::ZERO];
+        let out = conv2d_q88(&l, &ifmap, &weights, &bias);
+        assert_eq!(out, ifmap);
+    }
+
+    #[test]
+    fn bias_adds() {
+        let l = identity_layer();
+        let ifmap = vec![Fixed16::ZERO; 16];
+        let weights = vec![Fixed16::from_f32(1.0)];
+        let bias = vec![Fixed16::from_f32(2.5)];
+        let out = conv2d_q88(&l, &ifmap, &weights, &bias);
+        assert!(out.iter().all(|v| v.to_f32() == 2.5));
+    }
+
+    #[test]
+    fn averaging_kernel_3x3() {
+        let l = ConvLayer { name: "avg", in_c: 1, in_h: 3, in_w: 3, out_c: 1, k: 3, stride: 1, pad: 0, relu: false };
+        let ifmap: Vec<Fixed16> = (1..=9).map(|i| Fixed16::from_f32(i as f32)).collect();
+        let weights = vec![Fixed16::from_f32(1.0 / 16.0); 9]; // Q8.8-exact
+        let bias = vec![Fixed16::ZERO];
+        let out = conv2d_q88(&l, &ifmap, &weights, &bias);
+        // sum(1..9) = 45; 45/16 = 2.8125 exactly in Q8.8.
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].to_f32(), 2.8125);
+    }
+
+    #[test]
+    fn padding_zeros_at_border() {
+        let l = ConvLayer { name: "p", in_c: 1, in_h: 2, in_w: 2, out_c: 1, k: 3, stride: 1, pad: 1, relu: false };
+        let ifmap = vec![Fixed16::from_f32(1.0); 4];
+        let weights = vec![Fixed16::from_f32(1.0); 9];
+        let bias = vec![Fixed16::ZERO];
+        let out = conv2d_q88(&l, &ifmap, &weights, &bias);
+        // Corner output sees 4 ones; all 4 outputs are corners on 2x2.
+        assert!(out.iter().all(|v| v.to_f32() == 4.0));
+    }
+
+    #[test]
+    fn relu_applied_when_requested() {
+        let mut l = identity_layer();
+        l.relu = true;
+        let ifmap = vec![Fixed16::from_f32(-1.0); 16];
+        let weights = vec![Fixed16::from_f32(1.0)];
+        let bias = vec![Fixed16::ZERO];
+        let out = conv2d_q88(&l, &ifmap, &weights, &bias);
+        assert!(out.iter().all(|v| *v == Fixed16::ZERO));
+    }
+
+    #[test]
+    fn deterministic_on_random_input() {
+        let l = ConvLayer { name: "r", in_c: 2, in_h: 5, in_w: 5, out_c: 3, k: 3, stride: 1, pad: 1, relu: true };
+        let mut p = Prng::new(5);
+        let ifmap: Vec<Fixed16> =
+            (0..l.ifmap_words()).map(|_| Fixed16((p.next_u64() & 0x3ff) as i16 - 512)).collect();
+        let weights: Vec<Fixed16> =
+            (0..l.out_c * l.in_c * 9).map(|_| Fixed16((p.next_u64() & 0xff) as i16 - 128)).collect();
+        let bias: Vec<Fixed16> = (0..l.out_c).map(|_| Fixed16((p.next_u64() & 0xff) as i16)).collect();
+        let a = conv2d_q88(&l, &ifmap, &weights, &bias);
+        let b = conv2d_q88(&l, &ifmap, &weights, &bias);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), l.ofmap_words());
+    }
+}

@@ -1,0 +1,14 @@
+//! The DNN accelerator substrate: convolutional layer processors, their
+//! buffers and perfect-prefetch traffic, DNN workload descriptors, and
+//! the 16-bit fixed-point arithmetic + golden reference the end-to-end
+//! integrity checks rely on.
+
+pub mod dnn;
+pub mod golden;
+pub mod layer_processor;
+pub mod prefetch;
+pub mod quant;
+
+pub use dnn::{ConvLayer, Network};
+pub use layer_processor::LayerProcessor;
+pub use quant::Fixed16;

@@ -1,0 +1,213 @@
+//! Perfect-prefetch transfer planning.
+//!
+//! The paper's key workload observation (§I): "a layer processor knows
+//! its access pattern and can perform perfect prefetch for future data
+//! access". This module turns a conv layer + a DRAM tensor layout into
+//! the deterministic, contiguous, bursty per-port transfer schedule the
+//! layer processor executes — every read known in advance, bandwidth
+//! statically and evenly partitioned across ports.
+
+use crate::types::{Geometry, LineAddr};
+
+/// A contiguous run of `W_line` lines in DRAM.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Region {
+    pub base: LineAddr,
+    pub lines: usize,
+}
+
+impl Region {
+    pub fn end(&self) -> LineAddr {
+        self.base + self.lines as u64
+    }
+}
+
+/// Where a layer's tensors live in (line-granular) DRAM.
+#[derive(Clone, Copy, Debug)]
+pub struct TensorMap {
+    pub ifmap: Region,
+    pub weights: Region,
+    pub ofmap: Region,
+}
+
+impl TensorMap {
+    /// Lay out a layer's tensors back to back starting at `base`.
+    /// `words_per_line` comes from the interconnect geometry; tensors are
+    /// padded to line boundaries.
+    pub fn layout(
+        layer: &crate::accel::dnn::ConvLayer,
+        words_per_line: usize,
+        base: LineAddr,
+    ) -> TensorMap {
+        let lines = |words: usize| words.div_ceil(words_per_line);
+        let ifmap = Region { base, lines: lines(layer.ifmap_words()) };
+        let weights = Region { base: ifmap.end(), lines: lines(layer.weight_words()) };
+        let ofmap = Region { base: weights.end(), lines: lines(layer.ofmap_words()) };
+        TensorMap { ifmap, weights, ofmap }
+    }
+
+    pub fn total_lines(&self) -> usize {
+        self.ifmap.lines + self.weights.lines + self.ofmap.lines
+    }
+}
+
+/// A per-port schedule: the contiguous address runs this port will
+/// stream, in order.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PortSchedule {
+    pub runs: Vec<Region>,
+}
+
+impl PortSchedule {
+    pub fn total_lines(&self) -> usize {
+        self.runs.iter().map(|r| r.lines).sum()
+    }
+}
+
+/// Evenly partition a set of regions across `ports`, keeping each port's
+/// share contiguous (so its bursts are contiguous) and splitting at
+/// region boundaries. Ports may receive zero lines when there are more
+/// ports than lines.
+pub fn partition(regions: &[Region], ports: usize) -> Vec<PortSchedule> {
+    assert!(ports >= 1);
+    let total: usize = regions.iter().map(|r| r.lines).sum();
+    let mut out = vec![PortSchedule::default(); ports];
+    if total == 0 {
+        return out;
+    }
+    // Port p gets lines [p*total/ports, (p+1)*total/ports) of the
+    // concatenated line sequence — even to within one line.
+    let mut bounds: Vec<(usize, usize)> = (0..ports)
+        .map(|p| (p * total / ports, (p + 1) * total / ports))
+        .collect();
+    bounds.retain(|(a, b)| b > a);
+    let mut region_iter = regions.iter();
+    let mut cur = *region_iter.next().unwrap();
+    let mut consumed = 0usize; // lines of the concatenated sequence consumed
+    for (p, (start, end)) in bounds.iter().enumerate() {
+        let mut need = end - start;
+        debug_assert_eq!(consumed, *start);
+        while need > 0 {
+            if cur.lines == 0 {
+                cur = *region_iter.next().expect("ran out of regions");
+                continue;
+            }
+            let take = need.min(cur.lines);
+            out[p].runs.push(Region { base: cur.base, lines: take });
+            cur.base += take as u64;
+            cur.lines -= take;
+            consumed += take;
+            need -= take;
+        }
+    }
+    out
+}
+
+/// Break a port schedule into bursts of at most `max_burst` lines — the
+/// request stream the port hands to the arbiter.
+pub fn bursts(schedule: &PortSchedule, max_burst: usize) -> Vec<Region> {
+    let mut out = Vec::new();
+    for run in &schedule.runs {
+        let mut base = run.base;
+        let mut left = run.lines;
+        while left > 0 {
+            let take = left.min(max_burst);
+            out.push(Region { base, lines: take });
+            base += take as u64;
+            left -= take;
+        }
+    }
+    out
+}
+
+/// Full read plan for a layer under a geometry: ifmap + weights streamed
+/// through the read ports.
+pub fn read_schedules(map: &TensorMap, geom: &Geometry) -> Vec<PortSchedule> {
+    partition(&[map.ifmap, map.weights], geom.read_ports)
+}
+
+/// Write plan: ofmap streamed through the write ports.
+pub fn write_schedules(map: &TensorMap, geom: &Geometry) -> Vec<PortSchedule> {
+    partition(&[map.ofmap], geom.write_ports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::dnn::ConvLayer;
+
+    #[test]
+    fn layout_is_contiguous_and_padded() {
+        let l = ConvLayer { name: "t", in_c: 3, in_h: 8, in_w: 8, out_c: 4, k: 3, stride: 1, pad: 1, relu: true };
+        let m = TensorMap::layout(&l, 32, 100);
+        assert_eq!(m.ifmap.base, 100);
+        assert_eq!(m.ifmap.lines, (3 * 64usize).div_ceil(32));
+        assert_eq!(m.weights.base, m.ifmap.end());
+        assert_eq!(m.ofmap.base, m.weights.end());
+    }
+
+    #[test]
+    fn partition_covers_exactly_once() {
+        let regions = [Region { base: 0, lines: 10 }, Region { base: 50, lines: 7 }];
+        for ports in [1usize, 2, 3, 5, 17, 32] {
+            let parts = partition(&regions, ports);
+            assert_eq!(parts.len(), ports);
+            let mut seen = Vec::new();
+            for p in &parts {
+                for r in &p.runs {
+                    for a in r.base..r.end() {
+                        seen.push(a);
+                    }
+                }
+            }
+            let expect: Vec<u64> = (0..10).chain(50..57).collect();
+            assert_eq!(seen, expect, "ports={ports}");
+        }
+    }
+
+    #[test]
+    fn partition_is_even() {
+        let regions = [Region { base: 0, lines: 64 }];
+        let parts = partition(&regions, 8);
+        for p in &parts {
+            assert_eq!(p.total_lines(), 8);
+        }
+    }
+
+    #[test]
+    fn partition_more_ports_than_lines() {
+        let regions = [Region { base: 0, lines: 3 }];
+        let parts = partition(&regions, 8);
+        let nonzero = parts.iter().filter(|p| p.total_lines() > 0).count();
+        assert_eq!(nonzero, 3);
+        let total: usize = parts.iter().map(|p| p.total_lines()).sum();
+        assert_eq!(total, 3);
+    }
+
+    #[test]
+    fn bursts_respect_max_and_cover() {
+        let sched = PortSchedule { runs: vec![Region { base: 0, lines: 70 }, Region { base: 100, lines: 5 }] };
+        let bs = bursts(&sched, 32);
+        assert!(bs.iter().all(|b| b.lines <= 32));
+        let total: usize = bs.iter().map(|b| b.lines).sum();
+        assert_eq!(total, 75);
+        assert_eq!(bs[0], Region { base: 0, lines: 32 });
+        assert_eq!(bs[2], Region { base: 64, lines: 6 });
+        assert_eq!(bs[3], Region { base: 100, lines: 5 });
+    }
+
+    #[test]
+    fn schedules_match_geometry_ports() {
+        let l = ConvLayer { name: "t", in_c: 16, in_h: 16, in_w: 16, out_c: 16, k: 3, stride: 1, pad: 1, relu: true };
+        let g = crate::types::Geometry::paper_default();
+        let m = TensorMap::layout(&l, g.words_per_line(), 0);
+        let rs = read_schedules(&m, &g);
+        let ws = write_schedules(&m, &g);
+        assert_eq!(rs.len(), 32);
+        assert_eq!(ws.len(), 32);
+        let read_total: usize = rs.iter().map(|p| p.total_lines()).sum();
+        assert_eq!(read_total, m.ifmap.lines + m.weights.lines);
+        let write_total: usize = ws.iter().map(|p| p.total_lines()).sum();
+        assert_eq!(write_total, m.ofmap.lines);
+    }
+}

@@ -1,0 +1,170 @@
+//! 16-bit fixed-point arithmetic (Q8.8), the numeric format of the
+//! paper's layer processors ("vectors of 16-bit fixed point values",
+//! §IV-A).
+//!
+//! The same format is implemented on the Python side
+//! (`python/compile/kernels/ref.py` quantization helpers), so the PJRT
+//! artifact, the Rust golden model, and the simulated datapath agree
+//! bit-for-bit after quantization.
+
+use crate::types::Word;
+
+/// Fractional bits in the Q8.8 format.
+pub const FRAC_BITS: u32 = 8;
+pub const SCALE: f32 = (1 << FRAC_BITS) as f32;
+
+/// A Q8.8 fixed-point value carried in an i16.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub struct Fixed16(pub i16);
+
+impl Fixed16 {
+    pub const ZERO: Fixed16 = Fixed16(0);
+    pub const MAX: Fixed16 = Fixed16(i16::MAX);
+    pub const MIN: Fixed16 = Fixed16(i16::MIN);
+
+    /// Quantize an f32 (round-to-nearest-even, saturating).
+    pub fn from_f32(v: f32) -> Self {
+        let scaled = v * SCALE;
+        let r = round_half_even(scaled);
+        Fixed16(r.clamp(i16::MIN as i64, i16::MAX as i64) as i16)
+    }
+
+    pub fn to_f32(self) -> f32 {
+        self.0 as f32 / SCALE
+    }
+
+    /// Saturating fixed-point multiply: (a*b) >> FRAC_BITS, round to
+    /// nearest even, saturate.
+    pub fn mul(self, o: Fixed16) -> Fixed16 {
+        let prod = self.0 as i64 * o.0 as i64; // Q16.16
+        let shifted = shift_round_half_even(prod, FRAC_BITS);
+        Fixed16(shifted.clamp(i16::MIN as i64, i16::MAX as i64) as i16)
+    }
+
+    /// Saturating add.
+    pub fn add(self, o: Fixed16) -> Fixed16 {
+        Fixed16(self.0.saturating_add(o.0))
+    }
+
+    /// Pack into a 16-bit interconnect word.
+    pub fn to_word(self) -> Word {
+        self.0 as u16 as Word
+    }
+
+    pub fn from_word(w: Word) -> Self {
+        Fixed16((w & 0xffff) as u16 as i16)
+    }
+}
+
+/// Dot product in widened Q16.16 accumulation (what a DSP cascade does:
+/// full-precision accumulate, single rounding at the end).
+pub fn dot(a: &[Fixed16], b: &[Fixed16]) -> Fixed16 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc: i64 = 0; // Q16.16
+    for (x, y) in a.iter().zip(b.iter()) {
+        acc += x.0 as i64 * y.0 as i64;
+    }
+    let shifted = shift_round_half_even(acc, FRAC_BITS);
+    Fixed16(shifted.clamp(i16::MIN as i64, i16::MAX as i64) as i16)
+}
+
+/// ReLU in fixed point.
+pub fn relu(v: Fixed16) -> Fixed16 {
+    if v.0 < 0 {
+        Fixed16::ZERO
+    } else {
+        v
+    }
+}
+
+fn round_half_even(v: f32) -> i64 {
+    // f32 -> nearest integer, ties to even (matches jnp.round).
+    let r = v.round_ties_even();
+    r as i64
+}
+
+fn shift_round_half_even(v: i64, bits: u32) -> i64 {
+    // Arithmetic shift floors, so `rem` is always in [0, 2^bits):
+    // round up iff the remainder exceeds half, or ties with an odd
+    // quotient (ties-to-even).
+    let q = v >> bits;
+    let rem = v - (q << bits);
+    let half = 1i64 << (bits - 1);
+    if rem > half || (rem == half && (q & 1) == 1) {
+        q + 1
+    } else {
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact_values() {
+        for v in [-3.5f32, -1.0, -0.00390625, 0.0, 0.5, 1.0, 2.25, 100.0] {
+            let q = Fixed16::from_f32(v);
+            assert_eq!(q.to_f32(), v, "Q8.8-exact value {v}");
+        }
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(Fixed16::from_f32(1e6), Fixed16::MAX);
+        assert_eq!(Fixed16::from_f32(-1e6), Fixed16::MIN);
+        assert_eq!(Fixed16::MAX.add(Fixed16::MAX), Fixed16::MAX);
+        assert_eq!(Fixed16::MIN.add(Fixed16::MIN), Fixed16::MIN);
+    }
+
+    #[test]
+    fn multiply_basics() {
+        let a = Fixed16::from_f32(1.5);
+        let b = Fixed16::from_f32(2.0);
+        assert_eq!(a.mul(b).to_f32(), 3.0);
+        let c = Fixed16::from_f32(-0.5);
+        assert_eq!(a.mul(c).to_f32(), -0.75);
+    }
+
+    #[test]
+    fn dot_matches_scalar_loop_with_wide_accumulation() {
+        // Magnitudes chosen so the exact sum (~10.6) stays in Q8.8 range.
+        let a: Vec<Fixed16> = (0..32).map(|i| Fixed16::from_f32(0.0625 * i as f32)).collect();
+        let b: Vec<Fixed16> =
+            (0..32).map(|i| Fixed16::from_f32(0.03125 * (32 - i) as f32)).collect();
+        let d = dot(&a, &b);
+        let expect: f32 = a.iter().zip(&b).map(|(x, y)| x.to_f32() * y.to_f32()).sum();
+        assert!((d.to_f32() - expect).abs() <= 1.0 / SCALE, "{} vs {expect}", d.to_f32());
+    }
+
+    #[test]
+    fn dot_saturates_on_overflow() {
+        let a = vec![Fixed16::from_f32(100.0); 32];
+        let b = vec![Fixed16::from_f32(100.0); 32];
+        assert_eq!(dot(&a, &b), Fixed16::MAX);
+    }
+
+    #[test]
+    fn word_roundtrip_negative() {
+        let v = Fixed16::from_f32(-1.25);
+        let w = v.to_word();
+        assert!(w <= 0xffff);
+        assert_eq!(Fixed16::from_word(w), v);
+    }
+
+    #[test]
+    fn relu_clamps_negative() {
+        assert_eq!(relu(Fixed16::from_f32(-2.0)), Fixed16::ZERO);
+        assert_eq!(relu(Fixed16::from_f32(2.0)).to_f32(), 2.0);
+    }
+
+    #[test]
+    fn rounding_ties_to_even() {
+        // 0.5/256 in Q8.8 is exactly representable; check the mul path
+        // rounding: 0.5 * (1/256) = 0.001953125 -> Q8.8 0.5 ties -> even.
+        let half_lsb = Fixed16(1).mul(Fixed16::from_f32(0.5));
+        assert_eq!(half_lsb, Fixed16(0), "0.5 LSB must round to even (0)");
+        let one_and_half_lsb = Fixed16(3).mul(Fixed16::from_f32(0.5));
+        assert_eq!(one_and_half_lsb, Fixed16(2), "1.5 LSB must round to even (2)");
+    }
+}

@@ -1,0 +1,161 @@
+//! Hand-rolled CLI argument parsing (no `clap` in the offline registry).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! and per-subcommand help generation. Used by the `medusa` binary and
+//! the example drivers.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed arguments: options + positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    /// Declared option names (for typo detection).
+    known: Vec<(&'static str, &'static str, bool)>, // (name, help, takes_value)
+}
+
+impl Args {
+    /// Declare an option that takes a value.
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.known.push((name, help, true));
+        self
+    }
+
+    /// Declare a boolean flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.known.push((name, help, false));
+        self
+    }
+
+    /// Parse a raw argument list (excluding argv[0] / subcommand).
+    pub fn parse(mut self, raw: &[String]) -> Result<Self> {
+        let mut it = raw.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                let (name, inline_val) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let decl = self
+                    .known
+                    .iter()
+                    .find(|(n, _, _)| *n == name)
+                    .ok_or_else(|| anyhow!("unknown option --{name}\n{}", self.usage()))?;
+                if decl.2 {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow!("option --{name} needs a value"))?
+                            .clone(),
+                    };
+                    self.opts.insert(name, val);
+                } else {
+                    if inline_val.is_some() {
+                        bail!("flag --{name} does not take a value");
+                    }
+                    self.flags.push(name);
+                }
+            } else {
+                self.positional.push(a.clone());
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::from("options:\n");
+        for (name, help, takes_value) in &self.known {
+            if *takes_value {
+                s.push_str(&format!("  --{name} <value>   {help}\n"));
+            } else {
+                s.push_str(&format!("  --{name}           {help}\n"));
+            }
+        }
+        s
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        self.get(name)
+            .map(|v| v.parse::<usize>().map_err(|_| anyhow!("--{name}: expected integer, got {v:?}")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        self.get(name)
+            .map(|v| v.parse::<f64>().map_err(|_| anyhow!("--{name}: expected number, got {v:?}")))
+            .transpose()
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_opts_flags_positionals() {
+        let a = Args::default()
+            .opt("ports", "port count")
+            .opt("design", "which design")
+            .flag("verbose", "chatty")
+            .parse(&argv(&["--ports", "32", "--design=medusa", "--verbose", "run.toml"]))
+            .unwrap();
+        assert_eq!(a.get("ports"), Some("32"));
+        assert_eq!(a.get("design"), Some("medusa"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional(), &["run.toml".to_string()]);
+        assert_eq!(a.get_usize("ports").unwrap(), Some(32));
+    }
+
+    #[test]
+    fn unknown_option_rejected_with_usage() {
+        let err = Args::default()
+            .opt("ports", "port count")
+            .parse(&argv(&["--prots", "32"]))
+            .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("unknown option --prots"));
+        assert!(msg.contains("--ports"));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        let err = Args::default().opt("ports", "p").parse(&argv(&["--ports"])).unwrap_err();
+        assert!(format!("{err}").contains("needs a value"));
+    }
+
+    #[test]
+    fn bad_number_rejected() {
+        let a = Args::default().opt("ports", "p").parse(&argv(&["--ports", "abc"])).unwrap();
+        assert!(a.get_usize("ports").is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        let err = Args::default().flag("v", "verbose").parse(&argv(&["--v=1"])).unwrap_err();
+        assert!(format!("{err}").contains("does not take a value"));
+    }
+}

@@ -1,0 +1,316 @@
+//! Configuration system: design points and system settings, loadable
+//! from a TOML-subset file or built programmatically.
+//!
+//! The offline registry has no `serde`/`toml`, so this module includes a
+//! small parser for the subset we use: `[section]` headers,
+//! `key = value` pairs (integers, floats, booleans, quoted strings),
+//! `#` comments. That covers every config in `examples/` and keeps the
+//! launcher dependency-free.
+
+use crate::interconnect::Design;
+use crate::types::Geometry;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A fully specified system configuration: what the launcher builds.
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    /// Which data-transfer network design to instantiate.
+    pub design: Design,
+    pub geometry: Geometry,
+    /// Number of 32-wide vector dot-product units in the layer processor.
+    pub dotprod_units: usize,
+    /// Memory controller clock (MHz). The paper's DDR3-800 setup: 200.
+    pub mem_clock_mhz: f64,
+    /// Fabric clock (MHz). `None` = ask the P&R timing model.
+    pub fabric_clock_mhz: Option<f64>,
+    /// Use detailed DDR3 timing (vs ideal memory).
+    pub ddr3_timing: bool,
+    /// Extra rotator pipeline stages (Medusa ablation).
+    pub rotator_stages: usize,
+    /// PRNG seed for workload generation.
+    pub seed: u64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            design: Design::Medusa,
+            geometry: Geometry::paper_default(),
+            dotprod_units: 64,
+            mem_clock_mhz: 200.0,
+            fabric_clock_mhz: None,
+            ddr3_timing: true,
+            rotator_stages: 0,
+            seed: 7,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// The paper's representative design point (§IV-C): 64 DPUs, 512-bit
+    /// interface, 32r + 32w 16-bit ports.
+    pub fn paper_default() -> Self {
+        Self::default()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.geometry.validate()?;
+        anyhow::ensure!(self.dotprod_units >= 1, "need at least one dot-product unit");
+        anyhow::ensure!(self.mem_clock_mhz > 0.0, "mem clock must be positive");
+        if let Some(f) = self.fabric_clock_mhz {
+            anyhow::ensure!(f > 0.0, "fabric clock must be positive");
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML-subset file (see module docs).
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {}", path.as_ref().display()))?;
+        Self::from_str(&text)
+    }
+
+    /// Parse from config text.
+    #[allow(clippy::should_implement_trait)]
+    pub fn from_str(text: &str) -> Result<Self> {
+        let raw = parse_toml_subset(text)?;
+        let mut cfg = SystemConfig::default();
+        for (key, value) in &raw {
+            match key.as_str() {
+                "system.design" | "design" => {
+                    cfg.design = Design::parse(value.as_str()?)
+                        .ok_or_else(|| anyhow!("unknown design {value:?}"))?;
+                }
+                "geometry.w_line" => cfg.geometry.w_line = value.as_usize()?,
+                "geometry.w_acc" => cfg.geometry.w_acc = value.as_usize()?,
+                "geometry.read_ports" => cfg.geometry.read_ports = value.as_usize()?,
+                "geometry.write_ports" => cfg.geometry.write_ports = value.as_usize()?,
+                "geometry.max_burst" => cfg.geometry.max_burst = value.as_usize()?,
+                "accelerator.dotprod_units" | "dotprod_units" => {
+                    cfg.dotprod_units = value.as_usize()?
+                }
+                "clocks.mem_mhz" => cfg.mem_clock_mhz = value.as_f64()?,
+                "clocks.fabric_mhz" => cfg.fabric_clock_mhz = Some(value.as_f64()?),
+                "memory.ddr3_timing" => cfg.ddr3_timing = value.as_bool()?,
+                "medusa.rotator_stages" => cfg.rotator_stages = value.as_usize()?,
+                "system.seed" | "seed" => cfg.seed = value.as_usize()? as u64,
+                other => bail!("unknown config key {other:?}"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl Value {
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Ok(*i as usize),
+            _ => bail!("expected non-negative integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Int(i) => Ok(*i as f64),
+            Value::Float(f) => Ok(*f),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected boolean, got {self:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+}
+
+/// Parse the TOML subset into `section.key -> value` (keys outside any
+/// section keep their bare name).
+pub fn parse_toml_subset(text: &str) -> Result<BTreeMap<String, Value>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw_line) in text.lines().enumerate() {
+        let line = strip_comment(raw_line).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[') {
+            let name = inner
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("line {}: malformed section header", lineno + 1))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        anyhow::ensure!(!key.is_empty(), "line {}: empty key", lineno + 1);
+        let full_key =
+            if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        let value = parse_value(value.trim())
+            .with_context(|| format!("line {}: value for {full_key:?}", lineno + 1))?;
+        if out.insert(full_key.clone(), value).is_some() {
+            bail!("line {}: duplicate key {full_key:?}", lineno + 1);
+        }
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_config() {
+        let text = r#"
+# Paper representative point
+[system]
+design = "medusa"
+seed = 42
+
+[geometry]
+w_line = 512
+w_acc = 16
+read_ports = 32
+write_ports = 32
+max_burst = 32
+
+[accelerator]
+dotprod_units = 64
+
+[clocks]
+mem_mhz = 200
+fabric_mhz = 225.0
+
+[memory]
+ddr3_timing = true
+"#;
+        let cfg = SystemConfig::from_str(text).unwrap();
+        assert_eq!(cfg.design, Design::Medusa);
+        assert_eq!(cfg.geometry, Geometry::paper_default());
+        assert_eq!(cfg.dotprod_units, 64);
+        assert_eq!(cfg.fabric_clock_mhz, Some(225.0));
+        assert_eq!(cfg.seed, 42);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(SystemConfig::from_str("bogus = 1").is_err());
+    }
+
+    #[test]
+    fn invalid_geometry_rejected() {
+        let text = "[geometry]\nw_line = 512\nw_acc = 13\n";
+        assert!(SystemConfig::from_str(text).is_err());
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse_toml_subset("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let m = parse_toml_subset("s = \"a # not comment\" # real comment\nn = -3\nf = 1.5\n")
+            .unwrap();
+        assert_eq!(m["s"], Value::Str("a # not comment".into()));
+        assert_eq!(m["n"], Value::Int(-3));
+        assert_eq!(m["f"], Value::Float(1.5));
+    }
+
+    #[test]
+    fn value_conversions() {
+        assert_eq!(Value::Int(5).as_usize().unwrap(), 5);
+        assert!(Value::Int(-5).as_usize().is_err());
+        assert_eq!(Value::Int(5).as_f64().unwrap(), 5.0);
+        assert!(Value::Str("x".into()).as_bool().is_err());
+    }
+
+    #[test]
+    fn default_is_paper_point() {
+        let cfg = SystemConfig::paper_default();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.geometry.w_line, 512);
+        assert_eq!(cfg.dotprod_units, 64);
+    }
+}
+
+#[cfg(test)]
+mod file_tests {
+    use super::*;
+
+    #[test]
+    fn shipped_paper_config_loads() {
+        // configs/paper.toml is the documented entry point; keep it valid.
+        let path = if std::path::Path::new("configs/paper.toml").exists() {
+            "configs/paper.toml"
+        } else {
+            "../configs/paper.toml"
+        };
+        let cfg = SystemConfig::from_file(path).expect("configs/paper.toml must parse");
+        assert_eq!(cfg.design, Design::Medusa);
+        assert_eq!(cfg.geometry, Geometry::paper_default());
+        assert_eq!(cfg.dotprod_units, 64);
+        assert!(cfg.ddr3_timing);
+        assert_eq!(cfg.fabric_clock_mhz, None, "fabric clock left to the P&R model");
+    }
+
+    #[test]
+    fn missing_file_errors_cleanly() {
+        let err = SystemConfig::from_file("/nonexistent/zz.toml").unwrap_err();
+        assert!(format!("{err:#}").contains("reading config"));
+    }
+}

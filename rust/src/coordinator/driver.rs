@@ -1,0 +1,300 @@
+//! Inference driver: runs a whole [`Network`] through the simulated
+//! system layer by layer — every tensor byte travels through the
+//! interconnect under test, the math runs on the chosen backend, and
+//! every layer's output is verified against the Q8.8 golden model and
+//! against what actually landed in simulated DRAM.
+
+use crate::accel::dnn::{ConvLayer, Network};
+use crate::accel::golden::conv2d_q88;
+use crate::accel::prefetch::{partition, Region, TensorMap};
+use crate::accel::quant::Fixed16;
+use crate::config::SystemConfig;
+use crate::coordinator::metrics::{LayerReport, RunReport};
+use crate::coordinator::System;
+use crate::runtime::ConvExecutor;
+use crate::types::{Line, LineAddr, Word};
+use crate::util::Prng;
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+
+/// Who does the arithmetic.
+pub enum ComputeBackend {
+    /// Pure-Rust Q8.8 golden model (always available).
+    Golden,
+    /// The AOT-compiled JAX/Pallas artifact via PJRT. Results are
+    /// cross-checked against the golden model per layer.
+    Pjrt(Box<ConvExecutor>),
+}
+
+impl ComputeBackend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ComputeBackend::Golden => "golden",
+            ComputeBackend::Pjrt(_) => "pjrt",
+        }
+    }
+}
+
+pub struct InferenceDriver {
+    pub sys: System,
+    backend: ComputeBackend,
+    /// Next free DRAM line.
+    alloc: LineAddr,
+}
+
+impl InferenceDriver {
+    pub fn new(cfg: SystemConfig, backend: ComputeBackend) -> Result<Self> {
+        let sys = System::new(cfg)?;
+        Ok(InferenceDriver { sys, backend, alloc: 0 })
+    }
+
+    fn words_per_line(&self) -> usize {
+        self.sys.cfg.geometry.words_per_line()
+    }
+
+    fn alloc_lines(&mut self, words: usize) -> Region {
+        let lines = words.div_ceil(self.words_per_line());
+        let r = Region { base: self.alloc, lines };
+        self.alloc += lines as u64;
+        r
+    }
+
+    /// Pack quantized words into lines (zero padded) and preload them.
+    fn preload_words(&mut self, region: Region, data: &[Fixed16]) {
+        let n = self.words_per_line();
+        let mut lines = Vec::with_capacity(region.lines);
+        for li in 0..region.lines {
+            let mut line = Line::zeroed(n);
+            for y in 0..n {
+                let idx = li * n + y;
+                if idx < data.len() {
+                    line.set_word(y, data[idx].to_word());
+                }
+            }
+            lines.push(line);
+        }
+        self.sys.controller_mut().preload(region.base, lines);
+    }
+
+    /// Allocate a fresh line region and upload `data` to simulated DRAM
+    /// (the tensor-upload path examples and tests use).
+    pub fn alloc_and_preload(&mut self, data: &[Fixed16]) -> Region {
+        let region = self.alloc_lines(data.len());
+        self.preload_words(region, data);
+        region
+    }
+
+    /// Deterministic Q8.8 test weights: small magnitudes so receptive
+    /// fields stay well within range (realistic trained-net scale).
+    pub fn gen_weights(prng: &mut Prng, layer: &ConvLayer) -> (Vec<Fixed16>, Vec<Fixed16>) {
+        let wcount = layer.out_c * layer.in_c * layer.k * layer.k;
+        let scale = 1.0 / (layer.in_c as f32 * layer.k as f32 * layer.k as f32).sqrt();
+        let weights = (0..wcount)
+            .map(|_| Fixed16::from_f32((prng.f64() as f32 * 2.0 - 1.0) * scale))
+            .collect();
+        let bias = (0..layer.out_c)
+            .map(|_| Fixed16::from_f32((prng.f64() as f32 * 2.0 - 1.0) * 0.25))
+            .collect();
+        (weights, bias)
+    }
+
+    /// Run one layer whose input already lives at `ifmap_region`;
+    /// returns (report, ofmap region, computed ofmap).
+    pub fn run_layer(
+        &mut self,
+        layer: &ConvLayer,
+        ifmap_region: Region,
+        weights: &[Fixed16],
+        bias: &[Fixed16],
+    ) -> Result<(LayerReport, Region, Vec<Fixed16>)> {
+        let n = self.words_per_line();
+        let geom = self.sys.cfg.geometry;
+        // Weights (+bias appended) and ofmap get fresh regions.
+        let wregion = self.alloc_lines(layer.weight_words());
+        let ofmap_region = self.alloc_lines(layer.ofmap_words());
+        let mut wdata: Vec<Fixed16> = weights.to_vec();
+        wdata.extend_from_slice(bias);
+        self.preload_words(wregion, &wdata);
+
+        let map = TensorMap { ifmap: ifmap_region, weights: wregion, ofmap: ofmap_region };
+        let read_scheds = partition(&[map.ifmap, map.weights], geom.read_ports);
+        let write_scheds = partition(&[map.ofmap], geom.write_ports);
+
+        let t0 = self.sys.now_ps();
+        let load0 = self.sys.lp.load_cycles;
+        let comp0 = self.sys.lp.compute_cycles;
+        let drain0 = self.sys.lp.drain_cycles;
+
+        // --- Load phase + compute stall.
+        self.sys.lp.begin_layer(&read_scheds, layer.macs());
+        let total_read_lines = (map.ifmap.lines + map.weights.lines) as u64;
+        let budget = 64 * (total_read_lines + 64) * n as u64 + layer.macs() / 8 + 10_000;
+        self.sys.run_until_compute_done(budget).with_context(|| format!("layer {}", layer.name))?;
+
+        // --- Reassemble the loaded tensors from the port streams.
+        let line_map = {
+            let lp = &self.sys.lp;
+            self.sys.reassemble(&read_scheds, |p| lp.loaded(p).to_vec())
+        };
+        let extract = |region: Region, words: usize| -> Vec<Fixed16> {
+            let mut out = Vec::with_capacity(words);
+            'outer: for a in region.base..region.end() {
+                let line = &line_map[&a];
+                for &w in line {
+                    if out.len() == words {
+                        break 'outer;
+                    }
+                    out.push(Fixed16::from_word(w));
+                }
+            }
+            out
+        };
+        let ifmap = extract(map.ifmap, layer.ifmap_words());
+        let loaded_w = extract(map.weights, layer.weight_words());
+        let (lw, lb) = loaded_w.split_at(layer.weight_words() - layer.out_c);
+
+        // --- Compute on the backend; always cross-check vs golden.
+        let golden = conv2d_q88(layer, &ifmap, lw, lb);
+        let (ofmap, backend_ok) = match &mut self.backend {
+            ComputeBackend::Golden => (golden.clone(), true),
+            ComputeBackend::Pjrt(exec) => {
+                let got = exec.run_conv(layer.name, &ifmap, lw, lb)?;
+                let ok = got == golden;
+                (got, ok)
+            }
+        };
+
+        // --- Drain phase: pad ofmap to line boundary, split per port.
+        let mut padded: Vec<Word> = ofmap.iter().map(|v| v.to_word()).collect();
+        padded.resize(ofmap_region.lines * n, 0);
+        let data_per_port: Vec<VecDeque<Word>> = write_scheds
+            .iter()
+            .map(|s| {
+                let mut q = VecDeque::new();
+                for run in &s.runs {
+                    for a in run.base..run.end() {
+                        let off = ((a - ofmap_region.base) as usize) * n;
+                        q.extend(&padded[off..off + n]);
+                    }
+                }
+                q
+            })
+            .collect();
+        self.sys.lp.supply_output(&write_scheds, data_per_port);
+        let drain_budget = 64 * (ofmap_region.lines as u64 + 64) * n as u64 + 10_000;
+        self.sys.run_until_drained(drain_budget).with_context(|| format!("layer {}", layer.name))?;
+
+        // --- Verify what actually landed in DRAM.
+        let dumped = self.sys.controller().dump(ofmap_region.base, ofmap_region.lines);
+        let mut dram_words: Vec<Word> = Vec::with_capacity(padded.len());
+        for l in &dumped {
+            dram_words.extend_from_slice(l.words());
+        }
+        let dram_ok = dram_words == padded;
+
+        let report = LayerReport {
+            layer: layer.name,
+            load_cycles: self.sys.lp.load_cycles - load0,
+            compute_cycles: self.sys.lp.compute_cycles - comp0,
+            drain_cycles: self.sys.lp.drain_cycles - drain0,
+            lines_read: total_read_lines,
+            lines_written: ofmap_region.lines as u64,
+            sim_time_ps: self.sys.now_ps() - t0,
+            verified: backend_ok && dram_ok,
+        };
+        Ok((report, ofmap_region, ofmap))
+    }
+
+    /// Run a whole network on `input`; returns the run report and the
+    /// final feature map.
+    pub fn run(&mut self, net: &Network, input: &[Fixed16]) -> Result<(RunReport, Vec<Fixed16>)> {
+        net.validate()?;
+        anyhow::ensure!(
+            input.len() == net.layers[0].ifmap_words(),
+            "input size {} != layer0 ifmap {}",
+            input.len(),
+            net.layers[0].ifmap_words()
+        );
+        let mut prng = Prng::new(self.sys.cfg.seed);
+        let mut report = RunReport {
+            network: net.name,
+            design: self.sys.cfg.design.name(),
+            fabric_mhz: self.sys.fabric_mhz,
+            layers: Vec::new(),
+        };
+        // Upload the network input.
+        let mut cur_region = self.alloc_lines(input.len());
+        self.preload_words(cur_region, input);
+        let mut cur_map: Vec<Fixed16> = input.to_vec();
+        for layer in &net.layers {
+            let (weights, bias) = Self::gen_weights(&mut prng, layer);
+            let (lr, ofr, ofmap) = self.run_layer(layer, cur_region, &weights, &bias)?;
+            report.layers.push(lr);
+            cur_region = ofr;
+            cur_map = ofmap;
+        }
+        Ok((report, cur_map))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interconnect::Design;
+    use crate::types::Geometry;
+
+    fn cfg(design: Design) -> SystemConfig {
+        SystemConfig {
+            design,
+            geometry: Geometry { w_line: 128, w_acc: 16, read_ports: 8, write_ports: 8, max_burst: 8 },
+            dotprod_units: 8,
+            mem_clock_mhz: 200.0,
+            fabric_clock_mhz: Some(200.0),
+            ddr3_timing: false,
+            rotator_stages: 0,
+            seed: 11,
+        }
+    }
+
+    fn tiny_layer() -> ConvLayer {
+        ConvLayer { name: "t", in_c: 2, in_h: 8, in_w: 8, out_c: 4, k: 3, stride: 1, pad: 1, relu: true }
+    }
+
+    #[test]
+    fn single_layer_verified_on_both_designs() {
+        for design in [Design::Medusa, Design::Baseline] {
+            let mut drv = InferenceDriver::new(cfg(design), ComputeBackend::Golden).unwrap();
+            let layer = tiny_layer();
+            let input: Vec<Fixed16> =
+                (0..layer.ifmap_words()).map(|i| Fixed16::from_f32((i % 13) as f32 * 0.125 - 0.75)).collect();
+            let region = drv.alloc_lines(input.len());
+            drv.preload_words(region, &input);
+            let mut prng = Prng::new(3);
+            let (w, b) = InferenceDriver::gen_weights(&mut prng, &layer);
+            let (rep, _, ofmap) = drv.run_layer(&layer, region, &w, &b).unwrap();
+            assert!(rep.verified, "{design:?}: layer must verify");
+            assert_eq!(ofmap.len(), layer.ofmap_words());
+            assert!(rep.load_cycles > 0 && rep.drain_cycles > 0);
+            // Cross-design determinism: golden math is design-independent.
+            let golden = conv2d_q88(&layer, &input, &w, &b);
+            assert_eq!(ofmap, golden);
+        }
+    }
+
+    #[test]
+    fn designs_move_identical_data() {
+        // §III-F: Medusa is a drop-in replacement — same network, same
+        // seed, same final feature map on both interconnects.
+        let net = Network::tiny_vgg();
+        let input: Vec<Fixed16> =
+            (0..net.layers[0].ifmap_words()).map(|i| Fixed16::from_f32(((i % 29) as f32 - 14.0) / 32.0)).collect();
+        let mut out = Vec::new();
+        for design in [Design::Medusa, Design::Baseline] {
+            let mut drv = InferenceDriver::new(cfg(design), ComputeBackend::Golden).unwrap();
+            let (rep, fm) = drv.run(&net, &input).unwrap();
+            assert!(rep.all_verified(), "{design:?}");
+            out.push(fm);
+        }
+        assert_eq!(out[0], out[1], "interconnects must be data-transparent");
+    }
+}

@@ -1,0 +1,158 @@
+//! Per-layer and per-run reports: the numbers the end-to-end examples
+//! print and EXPERIMENTS.md records.
+
+use std::fmt;
+
+/// Measured execution of one layer through the simulated system.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub layer: &'static str,
+    /// Fabric cycles spent loading ifmap + weights.
+    pub load_cycles: u64,
+    /// Fabric cycles of modelled MAC-array busy time.
+    pub compute_cycles: u64,
+    /// Fabric cycles draining the ofmap (incl. write flush).
+    pub drain_cycles: u64,
+    /// Lines moved in / out.
+    pub lines_read: u64,
+    pub lines_written: u64,
+    /// Wall-clock simulated time (ps) for the layer.
+    pub sim_time_ps: u64,
+    /// Did the output match the golden model bit-for-bit?
+    pub verified: bool,
+}
+
+impl LayerReport {
+    pub fn total_cycles(&self) -> u64 {
+        self.load_cycles + self.compute_cycles + self.drain_cycles
+    }
+
+    /// Fraction of load cycles in which the memory system delivered at
+    /// full port rate (1.0 = interconnect kept every port fed).
+    pub fn read_bandwidth_utilization(&self, read_ports: usize, words_per_line: usize) -> f64 {
+        if self.load_cycles == 0 {
+            return 1.0;
+        }
+        let words = self.lines_read as f64 * words_per_line as f64;
+        let ideal_cycles = words / read_ports as f64;
+        (ideal_cycles / self.load_cycles as f64).min(1.0)
+    }
+}
+
+/// A full inference run.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub network: &'static str,
+    pub design: &'static str,
+    pub fabric_mhz: f64,
+    pub layers: Vec<LayerReport>,
+}
+
+impl RunReport {
+    pub fn total_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.total_cycles()).sum()
+    }
+
+    pub fn total_time_ms(&self) -> f64 {
+        self.layers.iter().map(|l| l.sim_time_ps).sum::<u64>() as f64 / 1e9
+    }
+
+    pub fn all_verified(&self) -> bool {
+        self.layers.iter().all(|l| l.verified)
+    }
+
+    pub fn total_lines_moved(&self) -> u64 {
+        self.layers.iter().map(|l| l.lines_read + l.lines_written).sum()
+    }
+
+    /// Effective DRAM bandwidth achieved (GB/s) over the whole run.
+    pub fn effective_bandwidth_gbs(&self, w_line_bits: usize) -> f64 {
+        let bytes = self.total_lines_moved() as f64 * w_line_bits as f64 / 8.0;
+        let secs = self.total_time_ms() / 1e3;
+        if secs == 0.0 {
+            0.0
+        } else {
+            bytes / secs / 1e9
+        }
+    }
+}
+
+impl fmt::Display for RunReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "run: {} on {} interconnect @ {:.0} MHz fabric",
+            self.network, self.design, self.fabric_mhz
+        )?;
+        writeln!(
+            f,
+            "{:<10} {:>10} {:>10} {:>10} {:>9} {:>9} {:>9}  ok",
+            "layer", "load_cyc", "comp_cyc", "drain_cyc", "rd_lines", "wr_lines", "time_us"
+        )?;
+        for l in &self.layers {
+            writeln!(
+                f,
+                "{:<10} {:>10} {:>10} {:>10} {:>9} {:>9} {:>9.1}  {}",
+                l.layer,
+                l.load_cycles,
+                l.compute_cycles,
+                l.drain_cycles,
+                l.lines_read,
+                l.lines_written,
+                l.sim_time_ps as f64 / 1e6,
+                if l.verified { "✓" } else { "✗" }
+            )?;
+        }
+        writeln!(
+            f,
+            "total: {} fabric cycles, {:.3} ms simulated, {:.2} GB/s effective",
+            self.total_cycles(),
+            self.total_time_ms(),
+            self.effective_bandwidth_gbs(512)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(load: u64, lines: u64) -> LayerReport {
+        LayerReport {
+            layer: "t",
+            load_cycles: load,
+            compute_cycles: 10,
+            drain_cycles: 5,
+            lines_read: lines,
+            lines_written: 2,
+            sim_time_ps: 1_000_000,
+            verified: true,
+        }
+    }
+
+    #[test]
+    fn utilization_full_rate_is_one() {
+        // 4 ports, 4 words/line: 16 lines = 64 words at 4 words/cycle =
+        // 16 ideal cycles.
+        let l = layer(16, 16);
+        assert!((l.read_bandwidth_utilization(4, 4) - 1.0).abs() < 1e-9);
+        let stalled = layer(32, 16);
+        assert!((stalled.read_bandwidth_utilization(4, 4) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn run_report_aggregates() {
+        let r = RunReport {
+            network: "tiny",
+            design: "medusa",
+            fabric_mhz: 200.0,
+            layers: vec![layer(16, 16), layer(20, 8)],
+        };
+        assert_eq!(r.total_cycles(), 16 + 15 + 20 + 15);
+        assert_eq!(r.total_lines_moved(), 16 + 2 + 8 + 2);
+        assert!(r.all_verified());
+        assert!(r.effective_bandwidth_gbs(512) > 0.0);
+        let s = format!("{r}");
+        assert!(s.contains("medusa"));
+    }
+}

@@ -1,0 +1,19 @@
+//! The L3 coordinator: assembles the full system — layer processor,
+//! interconnect under test, request arbiter, CDC channels, and the DDR3
+//! controller in its own clock domain — and drives complete DNN
+//! inference passes through it.
+//!
+//! This is the paper's system context (§IV-C): a convolutional layer
+//! processor using all narrow ports of the interconnect, a 512-bit
+//! 200 MHz DDR3 controller interface, and the interconnect as the only
+//! thing between them. The coordinator owns the event loop; compute is
+//! delegated to a [`crate::coordinator::driver::ComputeBackend`] (Rust
+//! golden model or the AOT-compiled JAX/Pallas artifact via PJRT).
+
+pub mod driver;
+pub mod metrics;
+pub mod system;
+
+pub use driver::{ComputeBackend, InferenceDriver};
+pub use metrics::{LayerReport, RunReport};
+pub use system::System;

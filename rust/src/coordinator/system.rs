@@ -1,0 +1,351 @@
+//! System wiring: clocks, networks, arbiter, controller, layer processor.
+
+use crate::accel::layer_processor::{LayerProcessor, Phase};
+use crate::accel::prefetch::PortSchedule;
+use crate::config::SystemConfig;
+use crate::dram::{DdrTiming, MemoryController};
+use crate::fpga::timing::peak_frequency;
+use crate::fpga::DesignPoint;
+use crate::interconnect::arbiter::{Arbiter, MemCommand, Policy};
+use crate::interconnect::medusa::MedusaTuning;
+use crate::interconnect::{self, Design, ReadNetwork, WriteNetwork};
+use crate::sim::{Channel, ClockDomain, Scheduler, Stats};
+use crate::types::{Line, LineAddr, TaggedLine, Word};
+use anyhow::Result;
+
+/// Fabric domain index in the scheduler.
+const DOM_FABRIC: usize = 0;
+/// Memory-controller domain index.
+const DOM_MEM: usize = 1;
+
+pub struct System {
+    pub cfg: SystemConfig,
+    pub fabric_mhz: f64,
+    rd_net: Box<dyn ReadNetwork + Send>,
+    wr_net: Box<dyn WriteNetwork + Send>,
+    pub arbiter: Arbiter,
+    controller: MemoryController,
+    pub lp: LayerProcessor,
+    sched: Scheduler,
+    /// Fabric -> mem commands.
+    cmd_ch: Channel<MemCommand>,
+    /// Mem -> fabric read data.
+    rd_line_ch: Channel<TaggedLine>,
+    /// Fabric -> mem write data.
+    wr_data_ch: Channel<Line>,
+    pub stats: Stats,
+    fabric_cycles: u64,
+    mem_cycles: u64,
+}
+
+impl System {
+    /// Build a system from a config. If no fabric clock is pinned, ask
+    /// the P&R timing model what this design point closes at — the
+    /// system-level consequence of Fig 6.
+    pub fn new(cfg: SystemConfig) -> Result<Self> {
+        cfg.validate()?;
+        let geom = cfg.geometry;
+        let fabric_mhz = match cfg.fabric_clock_mhz {
+            Some(f) => f,
+            None => {
+                let dp = DesignPoint { design: cfg.design, geometry: geom, dpus: cfg.dotprod_units };
+                let f = peak_frequency(&dp);
+                anyhow::ensure!(
+                    f > 0,
+                    "design point fails timing at 25 MHz ({:?}, {} DSPs) — see Fig 6",
+                    cfg.design,
+                    dp.dsps()
+                );
+                f as f64
+            }
+        };
+        let (rd_net, wr_net) = if cfg.design == Design::Medusa && cfg.rotator_stages > 0 {
+            let tuning = MedusaTuning { rotator_stages: cfg.rotator_stages };
+            (
+                Box::new(interconnect::medusa::MedusaReadNetwork::with_tuning(geom, tuning))
+                    as Box<dyn ReadNetwork + Send>,
+                Box::new(interconnect::medusa::MedusaWriteNetwork::with_tuning(geom, tuning))
+                    as Box<dyn WriteNetwork + Send>,
+            )
+        } else {
+            (interconnect::build_read_network(cfg.design, geom), interconnect::build_write_network(cfg.design, geom))
+        };
+        let timing = if cfg.ddr3_timing { DdrTiming::ddr3_800() } else { DdrTiming::ideal() };
+        Ok(System {
+            fabric_mhz,
+            rd_net,
+            wr_net,
+            arbiter: Arbiter::new(geom.read_ports, geom.write_ports, Policy::RoundRobin),
+            controller: MemoryController::new(timing, geom.words_per_line()),
+            lp: LayerProcessor::new(geom, cfg.dotprod_units),
+            sched: Scheduler::new(vec![
+                ClockDomain::from_mhz("fabric", fabric_mhz),
+                ClockDomain::from_mhz("mem", cfg.mem_clock_mhz),
+            ]),
+            cmd_ch: Channel::new("cmd", 8),
+            rd_line_ch: Channel::new("rd_lines", 8),
+            wr_data_ch: Channel::new("wr_lines", 8),
+            stats: Stats::new(),
+            fabric_cycles: 0,
+            mem_cycles: 0,
+            cfg,
+        })
+    }
+
+    pub fn controller_mut(&mut self) -> &mut MemoryController {
+        &mut self.controller
+    }
+
+    pub fn controller(&self) -> &MemoryController {
+        &self.controller
+    }
+
+    pub fn fabric_cycles(&self) -> u64 {
+        self.fabric_cycles
+    }
+
+    pub fn mem_cycles(&self) -> u64 {
+        self.mem_cycles
+    }
+
+    pub fn now_ps(&self) -> u64 {
+        self.sched.now_ps()
+    }
+
+    /// Advance to the next clock edge(s) and execute them.
+    pub fn step(&mut self) {
+        let fired = self.sched.step();
+        for dom in fired {
+            match dom {
+                DOM_FABRIC => self.fabric_edge(),
+                DOM_MEM => self.mem_edge(),
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    fn fabric_edge(&mut self) {
+        let c = self.fabric_cycles;
+        self.fabric_cycles += 1;
+        // 1. Datapath tick.
+        self.rd_net.tick(c, &mut self.stats);
+        self.wr_net.tick(c, &mut self.stats);
+        // 2. Memory-side adapter: one read line per fabric cycle into the
+        //    read network (this is the 512-bit interface crossing into
+        //    the fabric domain — if the fabric is slower than the
+        //    controller, bandwidth is lost right here, which is exactly
+        //    the Fig 6 system-level effect).
+        if let Some(tl) = self.rd_line_ch.peek() {
+            if self.rd_net.mem_can_deliver(tl.port) {
+                let tl = self.rd_line_ch.pop().unwrap();
+                let port = tl.port;
+                self.rd_net.mem_deliver(tl);
+                self.arbiter.on_read_line_delivered(port);
+                self.stats.bump("sys.read_lines_into_fabric");
+            } else {
+                self.stats.bump("sys.read_line_backpressure");
+            }
+        }
+        // 3. Arbiter: issue commands, stream write data.
+        self.arbiter.tick(
+            self.rd_net.as_ref(),
+            self.wr_net.as_mut(),
+            &mut self.cmd_ch,
+            &mut self.wr_data_ch,
+            &mut self.stats,
+        );
+        // 4. Layer processor moves its port words.
+        self.lp.tick(self.rd_net.as_mut(), self.wr_net.as_mut(), &mut self.arbiter, &mut self.stats);
+        // 5. Commit fabric-side channel pushes.
+        self.cmd_ch.commit();
+        self.wr_data_ch.commit();
+    }
+
+    fn mem_edge(&mut self) {
+        let c = self.mem_cycles;
+        self.mem_cycles += 1;
+        self.controller.tick(c, &mut self.cmd_ch, &mut self.rd_line_ch, &mut self.wr_data_ch, &mut self.stats);
+        self.rd_line_ch.commit();
+    }
+
+    /// Run until the layer processor's load completes and the compute
+    /// stall elapses. Returns fabric cycles spent.
+    pub fn run_until_compute_done(&mut self, max_fabric_cycles: u64) -> Result<u64> {
+        let start = self.fabric_cycles;
+        while !self.lp.compute_done() {
+            self.step();
+            anyhow::ensure!(
+                self.fabric_cycles - start < max_fabric_cycles,
+                "load/compute did not finish within {max_fabric_cycles} fabric cycles \
+                 (phase {:?}, stats:\n{})",
+                self.lp.phase(),
+                self.stats
+            );
+        }
+        Ok(self.fabric_cycles - start)
+    }
+
+    /// Run until the drain phase completes AND every issued write has
+    /// landed in DRAM.
+    pub fn run_until_drained(&mut self, max_fabric_cycles: u64) -> Result<u64> {
+        let start = self.fabric_cycles;
+        loop {
+            let lp_done = self.lp.phase() == Phase::Done;
+            let writes_flushed = self.arbiter.pending_requests() == 0
+                && self.arbiter.writes_in_flight() == 0
+                && self.wr_data_ch.is_empty()
+                && self.cmd_ch.is_empty()
+                && self.controller.is_idle();
+            if lp_done && writes_flushed {
+                return Ok(self.fabric_cycles - start);
+            }
+            self.step();
+            anyhow::ensure!(
+                self.fabric_cycles - start < max_fabric_cycles,
+                "drain did not finish within {max_fabric_cycles} fabric cycles \
+                 (phase {:?}, stats:\n{})",
+                self.lp.phase(),
+                self.stats
+            );
+        }
+    }
+
+    /// Reassemble the words a set of port schedules loaded, keyed by
+    /// line address.
+    pub fn reassemble(
+        &self,
+        scheds: &[PortSchedule],
+        loaded: impl Fn(usize) -> Vec<Word>,
+    ) -> std::collections::HashMap<LineAddr, Vec<Word>> {
+        let n = self.cfg.geometry.words_per_line();
+        let mut out = std::collections::HashMap::new();
+        for (p, sched) in scheds.iter().enumerate() {
+            let words = loaded(p);
+            let mut idx = 0usize;
+            for run in &sched.runs {
+                for a in run.base..run.end() {
+                    out.insert(a, words[idx..idx + n].to_vec());
+                    idx += n;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::prefetch::{partition, Region};
+
+    fn small_cfg(design: Design) -> SystemConfig {
+        SystemConfig {
+            design,
+            geometry: crate::types::Geometry {
+                w_line: 64,
+                w_acc: 16,
+                read_ports: 4,
+                write_ports: 4,
+                max_burst: 4,
+            },
+            dotprod_units: 4,
+            mem_clock_mhz: 200.0,
+            fabric_clock_mhz: Some(200.0),
+            ddr3_timing: false,
+            rotator_stages: 0,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn load_roundtrip_both_designs() {
+        for design in [Design::Baseline, Design::Medusa] {
+            let mut sys = System::new(small_cfg(design)).unwrap();
+            let n = sys.cfg.geometry.words_per_line();
+            // Preload 16 lines of known data.
+            sys.controller_mut().preload(
+                0,
+                (0..16u64).map(|i| Line::from_words((0..n as u64).map(|y| i * 100 + y).collect())),
+            );
+            let scheds = partition(&[Region { base: 0, lines: 16 }], 4);
+            sys.lp.begin_layer(&scheds, 1);
+            sys.run_until_compute_done(100_000).unwrap();
+            let lines = sys.reassemble(&scheds, |p| sys.lp.loaded(p).to_vec());
+            for i in 0..16u64 {
+                let expect: Vec<Word> = (0..n as u64).map(|y| i * 100 + y).collect();
+                assert_eq!(lines[&i], expect, "{design:?} line {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn write_roundtrip_both_designs() {
+        for design in [Design::Baseline, Design::Medusa] {
+            let mut sys = System::new(small_cfg(design)).unwrap();
+            let n = sys.cfg.geometry.words_per_line();
+            // No reads; straight to compute, then drain 8 lines.
+            let scheds = partition(&[], 4);
+            sys.lp.begin_layer(&scheds, 1);
+            sys.run_until_compute_done(10_000).unwrap();
+            let wscheds = partition(&[Region { base: 32, lines: 8 }], 4);
+            let data: Vec<std::collections::VecDeque<Word>> = wscheds
+                .iter()
+                .map(|s| {
+                    let mut q = std::collections::VecDeque::new();
+                    for r in &s.runs {
+                        for a in r.base..r.end() {
+                            for y in 0..n as u64 {
+                                q.push_back(a * 7 + y);
+                            }
+                        }
+                    }
+                    q
+                })
+                .collect();
+            sys.lp.supply_output(&wscheds, data);
+            sys.run_until_drained(100_000).unwrap();
+            for a in 32..40u64 {
+                let line = sys.controller().dump(a, 1).remove(0);
+                let expect: Vec<Word> = (0..n as u64).map(|y| (a * 7 + y) & 0xffff).collect();
+                assert_eq!(line.words(), &expect[..], "{design:?} line {a}");
+            }
+        }
+    }
+
+    #[test]
+    fn slower_fabric_loses_bandwidth() {
+        // Same load at 200 vs 50 MHz fabric: the slow fabric must take
+        // ~4x the wall-clock time (Fig 6's system-level consequence).
+        let time_for = |mhz: f64| -> u64 {
+            let mut cfg = small_cfg(Design::Medusa);
+            cfg.fabric_clock_mhz = Some(mhz);
+            let mut sys = System::new(cfg).unwrap();
+            sys.controller_mut().preload(0, (0..512u64).map(|_| Line::zeroed(4)));
+            let scheds = partition(&[Region { base: 0, lines: 512 }], 4);
+            sys.lp.begin_layer(&scheds, 1);
+            sys.run_until_compute_done(10_000_000).unwrap();
+            sys.now_ps()
+        };
+        let fast = time_for(200.0);
+        let slow = time_for(50.0);
+        let ratio = slow as f64 / fast as f64;
+        // Ratio approaches 4x asymptotically; fixed command/latency
+        // overheads (constant in ns) keep it below that on this length.
+        assert!(ratio > 2.5, "50MHz fabric should be ~3-4x slower, got {ratio:.2}x");
+    }
+
+    #[test]
+    fn timing_model_gates_unbuildable_designs() {
+        // A baseline design point in the 1024-bit region fails timing;
+        // System::new must refuse it when no clock is pinned.
+        let dp = DesignPoint::fig6_step(Design::Baseline, 9);
+        let cfg = SystemConfig {
+            design: Design::Baseline,
+            geometry: dp.geometry,
+            dotprod_units: dp.dpus,
+            fabric_clock_mhz: None,
+            ..small_cfg(Design::Baseline)
+        };
+        assert!(System::new(cfg).is_err());
+    }
+}

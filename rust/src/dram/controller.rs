@@ -1,0 +1,373 @@
+//! In-order memory controller executing line-granular burst commands
+//! against a simulated DRAM backing store.
+//!
+//! Runs in its own clock domain (200 MHz for the paper's DDR3-800 setup)
+//! and talks to the fabric through CDC channels owned by the system:
+//! commands in, read lines out (tagged with their destination port),
+//! write lines in (in command order). The interconnect under test is the
+//! only thing between this controller and the accelerator ports.
+
+use crate::dram::DdrTiming;
+use crate::interconnect::arbiter::MemCommand;
+use crate::sim::{Channel, Stats};
+use crate::types::{Line, LineAddr, TaggedLine};
+use std::collections::HashMap;
+
+#[derive(Debug)]
+enum Active {
+    Read { port: usize, next_addr: LineAddr, remaining: usize },
+    Write { next_addr: LineAddr, remaining: usize },
+}
+
+pub struct MemoryController {
+    timing: DdrTiming,
+    words_per_line: usize,
+    /// Backing store, sparse: absent lines read as zero.
+    store: HashMap<LineAddr, Line>,
+    /// Open row per bank.
+    open_rows: Vec<Option<u64>>,
+    active: Option<Active>,
+    /// Busy until this controller cycle (timing stall).
+    busy_until: u64,
+    cycle: u64,
+}
+
+impl MemoryController {
+    pub fn new(timing: DdrTiming, words_per_line: usize) -> Self {
+        MemoryController {
+            timing,
+            words_per_line,
+            store: HashMap::new(),
+            open_rows: vec![None; timing.banks],
+            active: None,
+            busy_until: 0,
+            cycle: 0,
+        }
+    }
+
+    /// Preload lines into the backing store (tensor upload path).
+    pub fn preload(&mut self, base: LineAddr, lines: impl IntoIterator<Item = Line>) {
+        for (i, line) in lines.into_iter().enumerate() {
+            assert_eq!(line.num_words(), self.words_per_line);
+            self.store.insert(base + i as u64, line);
+        }
+    }
+
+    /// Read lines back out (result download / golden checks).
+    pub fn dump(&self, base: LineAddr, count: usize) -> Vec<Line> {
+        (0..count as u64)
+            .map(|i| {
+                self.store
+                    .get(&(base + i))
+                    .cloned()
+                    .unwrap_or_else(|| Line::zeroed(self.words_per_line))
+            })
+            .collect()
+    }
+
+    pub fn lines_stored(&self) -> usize {
+        self.store.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.active.is_none()
+    }
+
+    /// Account bank/row timing for accessing `addr`; returns the cycle at
+    /// which the access may complete.
+    fn access_ready_cycle(&mut self, addr: LineAddr, stats: &mut Stats) -> u64 {
+        let (bank, row) = self.timing.map(addr);
+        let mut ready = self.cycle.max(self.busy_until);
+        if self.open_rows[bank] != Some(row) {
+            ready += self.timing.row_miss_cycles;
+            self.open_rows[bank] = Some(row);
+            stats.bump("dram.row_misses");
+        } else {
+            stats.bump("dram.row_hits");
+        }
+        ready + self.timing.line_cycles - 1
+    }
+
+    /// One controller-domain cycle.
+    pub fn tick(
+        &mut self,
+        cycle: u64,
+        cmd_ch: &mut Channel<MemCommand>,
+        rd_line_ch: &mut Channel<TaggedLine>,
+        wr_data_ch: &mut Channel<Line>,
+        stats: &mut Stats,
+    ) {
+        self.cycle = cycle;
+
+        // Accept a new command when idle.
+        if self.active.is_none() {
+            if let Some(cmd) = cmd_ch.pop() {
+                match cmd {
+                    MemCommand::Read { port, addr, burst_len } => {
+                        self.active =
+                            Some(Active::Read { port, next_addr: addr, remaining: burst_len });
+                        self.busy_until = cycle + self.timing.read_latency_cycles;
+                        stats.bump("dram.read_bursts");
+                    }
+                    MemCommand::Write { addr, burst_len, .. } => {
+                        self.active = Some(Active::Write { next_addr: addr, remaining: burst_len });
+                        self.busy_until = cycle + self.timing.write_latency_cycles;
+                        stats.bump("dram.write_bursts");
+                    }
+                }
+            }
+        }
+
+        let Some(active) = self.active.as_mut() else {
+            stats.bump("dram.idle_cycles");
+            return;
+        };
+
+        match active {
+            Active::Read { port, next_addr, remaining: _ } => {
+                if !rd_line_ch.can_push() {
+                    stats.bump("dram.read_return_stall");
+                    return;
+                }
+                let addr = *next_addr;
+                let port = *port;
+                let ready = self.access_ready_cycle(addr, stats);
+                if ready > cycle {
+                    self.busy_until = ready;
+                    stats.bump("dram.timing_stall_cycles");
+                    return;
+                }
+                let line = self
+                    .store
+                    .get(&addr)
+                    .cloned()
+                    .unwrap_or_else(|| Line::zeroed(self.words_per_line));
+                rd_line_ch.push(TaggedLine { port, line });
+                stats.bump("dram.read_lines");
+                match self.active.as_mut().unwrap() {
+                    Active::Read { next_addr, remaining, .. } => {
+                        *next_addr += 1;
+                        *remaining -= 1;
+                        if *remaining == 0 {
+                            self.active = None;
+                        }
+                    }
+                    _ => unreachable!(),
+                }
+            }
+            Active::Write { next_addr, remaining: _ } => {
+                let addr = *next_addr;
+                let ready = self.access_ready_cycle(addr, stats);
+                if ready > cycle {
+                    self.busy_until = ready;
+                    stats.bump("dram.timing_stall_cycles");
+                    return;
+                }
+                let Some(line) = wr_data_ch.pop() else {
+                    stats.bump("dram.write_data_stall");
+                    return;
+                };
+                self.store.insert(addr, line);
+                stats.bump("dram.write_lines");
+                match self.active.as_mut().unwrap() {
+                    Active::Write { next_addr, remaining } => {
+                        *next_addr += 1;
+                        *remaining -= 1;
+                        if *remaining == 0 {
+                            self.active = None;
+                        }
+                    }
+                    _ => unreachable!(),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_line(n: usize, seed: u64) -> Line {
+        Line::from_words((0..n as u64).map(|y| seed * 100 + y).collect())
+    }
+
+    fn run_read(
+        ctl: &mut MemoryController,
+        cmd: MemCommand,
+        max_cycles: u64,
+    ) -> (Vec<TaggedLine>, u64) {
+        let mut cmd_ch = Channel::new("cmd", 4);
+        let mut rd_ch = Channel::new("rd", 64);
+        let mut wr_ch = Channel::new("wr", 4);
+        let mut stats = Stats::new();
+        cmd_ch.push(cmd);
+        cmd_ch.commit();
+        let mut out = Vec::new();
+        let mut last = 0;
+        for c in 0..max_cycles {
+            ctl.tick(c, &mut cmd_ch, &mut rd_ch, &mut wr_ch, &mut stats);
+            cmd_ch.commit();
+            rd_ch.commit();
+            wr_ch.commit();
+            while let Some(tl) = rd_ch.pop() {
+                out.push(tl);
+                last = c;
+            }
+            if ctl.is_idle() && rd_ch.is_empty() && !out.is_empty() {
+                break;
+            }
+        }
+        (out, last)
+    }
+
+    #[test]
+    fn read_returns_preloaded_data() {
+        let mut ctl = MemoryController::new(DdrTiming::ideal(), 4);
+        ctl.preload(10, (0..3).map(|i| mk_line(4, i)));
+        let (out, _) = run_read(&mut ctl, MemCommand::Read { port: 2, addr: 10, burst_len: 3 }, 100);
+        assert_eq!(out.len(), 3);
+        for (i, tl) in out.iter().enumerate() {
+            assert_eq!(tl.port, 2);
+            assert_eq!(tl.line, mk_line(4, i as u64));
+        }
+    }
+
+    #[test]
+    fn unwritten_lines_read_zero() {
+        let mut ctl = MemoryController::new(DdrTiming::ideal(), 4);
+        let (out, _) = run_read(&mut ctl, MemCommand::Read { port: 0, addr: 99, burst_len: 1 }, 50);
+        assert_eq!(out[0].line, Line::zeroed(4));
+    }
+
+    #[test]
+    fn burst_streams_one_line_per_cycle_in_open_row() {
+        let mut ctl = MemoryController::new(DdrTiming::ddr3_800(), 4);
+        ctl.preload(0, (0..8).map(|i| mk_line(4, i)));
+        let (out, last) = run_read(&mut ctl, MemCommand::Read { port: 0, addr: 0, burst_len: 8 }, 200);
+        assert_eq!(out.len(), 8);
+        // 8 lines in one row: one row miss + ~1 line/cycle streaming.
+        let t = DdrTiming::ddr3_800();
+        assert!(
+            last <= t.read_latency_cycles + t.row_miss_cycles + 8 + 4,
+            "burst took until cycle {last}"
+        );
+    }
+
+    #[test]
+    fn row_misses_cost_cycles() {
+        // Two bursts in different rows must be slower than two in the
+        // same row.
+        let t = DdrTiming::ddr3_800();
+        let same_row = {
+            let mut ctl = MemoryController::new(t, 4);
+            let (_, last) =
+                run_read(&mut ctl, MemCommand::Read { port: 0, addr: 0, burst_len: 8 }, 300);
+            last
+        };
+        let cross_rows = {
+            let mut ctl = MemoryController::new(t, 4);
+            // Stride so every line lands in a new row (row_lines=16, 8
+            // banks: stride by 16*8=128 lines revisits bank 0 row+1).
+            let mut cmd_ch = Channel::new("cmd", 16);
+            let mut rd_ch = Channel::new("rd", 64);
+            let mut wr_ch = Channel::new("wr", 4);
+            let mut stats = Stats::new();
+            for i in 0..8u64 {
+                cmd_ch.push(MemCommand::Read { port: 0, addr: i * 128, burst_len: 1 });
+            }
+            cmd_ch.commit();
+            let mut got = 0;
+            let mut last = 0;
+            for c in 0..2000 {
+                ctl.tick(c, &mut cmd_ch, &mut rd_ch, &mut wr_ch, &mut stats);
+                cmd_ch.commit();
+                rd_ch.commit();
+                while rd_ch.pop().is_some() {
+                    got += 1;
+                    last = c;
+                }
+                if got == 8 {
+                    break;
+                }
+            }
+            assert_eq!(got, 8);
+            last
+        };
+        assert!(
+            cross_rows > same_row + 4 * t.row_miss_cycles,
+            "row misses too cheap: same={same_row} cross={cross_rows}"
+        );
+    }
+
+    #[test]
+    fn write_then_read_roundtrip() {
+        let mut ctl = MemoryController::new(DdrTiming::ideal(), 4);
+        let mut cmd_ch = Channel::new("cmd", 4);
+        let mut rd_ch = Channel::new("rd", 16);
+        let mut wr_ch = Channel::new("wr", 16);
+        let mut stats = Stats::new();
+        cmd_ch.push(MemCommand::Write { port: 1, addr: 5, burst_len: 2 });
+        for i in 0..2 {
+            wr_ch.push(mk_line(4, 40 + i));
+        }
+        cmd_ch.commit();
+        wr_ch.commit();
+        for c in 0..50 {
+            ctl.tick(c, &mut cmd_ch, &mut rd_ch, &mut wr_ch, &mut stats);
+            cmd_ch.commit();
+            rd_ch.commit();
+            wr_ch.commit();
+            if ctl.is_idle() && c > 5 {
+                break;
+            }
+        }
+        assert_eq!(ctl.lines_stored(), 2);
+        assert_eq!(ctl.dump(5, 2), vec![mk_line(4, 40), mk_line(4, 41)]);
+    }
+
+    #[test]
+    fn write_stalls_until_data_arrives() {
+        let mut ctl = MemoryController::new(DdrTiming::ideal(), 4);
+        let mut cmd_ch = Channel::new("cmd", 4);
+        let mut rd_ch = Channel::new("rd", 4);
+        let mut wr_ch = Channel::new("wr", 4);
+        let mut stats = Stats::new();
+        cmd_ch.push(MemCommand::Write { port: 0, addr: 0, burst_len: 1 });
+        cmd_ch.commit();
+        for c in 0..10 {
+            ctl.tick(c, &mut cmd_ch, &mut rd_ch, &mut wr_ch, &mut stats);
+            cmd_ch.commit();
+        }
+        assert!(!ctl.is_idle(), "write must wait for its data");
+        assert!(stats.get("dram.write_data_stall") > 0);
+        wr_ch.push(mk_line(4, 7));
+        wr_ch.commit();
+        for c in 10..20 {
+            ctl.tick(c, &mut cmd_ch, &mut rd_ch, &mut wr_ch, &mut stats);
+            wr_ch.commit();
+        }
+        assert!(ctl.is_idle());
+        assert_eq!(ctl.dump(0, 1)[0], mk_line(4, 7));
+    }
+
+    #[test]
+    fn backpressure_on_read_return() {
+        let mut ctl = MemoryController::new(DdrTiming::ideal(), 4);
+        ctl.preload(0, (0..4).map(|i| mk_line(4, i)));
+        let mut cmd_ch = Channel::new("cmd", 4);
+        let mut rd_ch = Channel::new("rd", 1); // tiny return channel
+        let mut wr_ch = Channel::new("wr", 4);
+        let mut stats = Stats::new();
+        cmd_ch.push(MemCommand::Read { port: 0, addr: 0, burst_len: 4 });
+        cmd_ch.commit();
+        // Never pop rd_ch: the controller must stall, not drop lines.
+        for c in 0..30 {
+            ctl.tick(c, &mut cmd_ch, &mut rd_ch, &mut wr_ch, &mut stats);
+            cmd_ch.commit();
+            rd_ch.commit();
+        }
+        assert!(stats.get("dram.read_return_stall") > 0);
+        assert_eq!(stats.get("dram.read_lines"), 1);
+    }
+}

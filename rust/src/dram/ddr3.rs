@@ -1,0 +1,106 @@
+//! DDR3 channel timing model, at the granularity the interconnect cares
+//! about: one `W_line`-bit controller line per controller cycle when
+//! streaming within an open row, plus row activate/precharge penalties on
+//! row misses.
+//!
+//! A DDR3-800 x64 channel moves 64 bits x 2 (DDR) x 400 MHz = 12.8 GB/s;
+//! its BL8 burst is 64 B = 512 bits — exactly one controller line — and
+//! the controller's 200 MHz x 512-bit interface is bandwidth-matched to
+//! it. Timing parameters below are expressed in 200 MHz controller
+//! cycles (1 controller cycle = 2 DRAM clock cycles).
+
+/// Address geometry + timing of one DRAM channel.
+#[derive(Clone, Copy, Debug)]
+pub struct DdrTiming {
+    /// Banks per channel.
+    pub banks: usize,
+    /// Row size in `W_line` lines (DDR3 1KB pages / 64B line = 16).
+    pub row_lines: usize,
+    /// Controller-cycle cost to stream one line within an open row.
+    pub line_cycles: u64,
+    /// Extra controller cycles on a row miss (tRP + tRCD at DDR3-800,
+    /// 13.75 ns each ~= 11 DRAM cycles -> ~6 controller cycles each).
+    pub row_miss_cycles: u64,
+    /// Pipeline latency from command acceptance to first read data
+    /// (controller + PHY + CAS).
+    pub read_latency_cycles: u64,
+    /// Pipeline latency from write data acceptance to commit.
+    pub write_latency_cycles: u64,
+}
+
+impl DdrTiming {
+    /// Single-channel 800 MT/s DDR3 as in the paper's representative
+    /// setup (§IV-C).
+    pub fn ddr3_800() -> Self {
+        DdrTiming {
+            banks: 8,
+            row_lines: 16,
+            line_cycles: 1,
+            row_miss_cycles: 12,
+            read_latency_cycles: 10,
+            write_latency_cycles: 4,
+        }
+    }
+
+    /// Ideal memory: fixed small latency, one line per cycle, no bank or
+    /// row effects. Used by interconnect-only experiments so measured
+    /// effects are attributable to the networks alone.
+    pub fn ideal() -> Self {
+        DdrTiming {
+            banks: 1,
+            row_lines: usize::MAX,
+            line_cycles: 1,
+            row_miss_cycles: 0,
+            read_latency_cycles: 2,
+            write_latency_cycles: 1,
+        }
+    }
+
+    /// Map a line address to (bank, row) with low-order bank
+    /// interleaving: consecutive rows of lines rotate across banks so
+    /// sequential bursts from different ports land in different banks.
+    pub fn map(&self, line_addr: u64) -> (usize, u64) {
+        if self.row_lines == usize::MAX {
+            return (0, 0);
+        }
+        let row_seq = line_addr / self.row_lines as u64;
+        let bank = (row_seq % self.banks as u64) as usize;
+        let row = row_seq / self.banks as u64;
+        (bank, row)
+    }
+
+    /// Peak bandwidth in lines per controller cycle.
+    pub fn peak_lines_per_cycle(&self) -> f64 {
+        1.0 / self.line_cycles as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mapping_interleaves_banks() {
+        let t = DdrTiming::ddr3_800();
+        let (b0, r0) = t.map(0);
+        let (b1, _) = t.map(16); // next row of lines
+        assert_eq!((b0, r0), (0, 0));
+        assert_eq!(b1, 1, "consecutive rows must hit different banks");
+        // Same row, consecutive lines: same bank/row.
+        assert_eq!(t.map(3), (0, 0));
+        assert_eq!(t.map(15), (0, 0));
+    }
+
+    #[test]
+    fn ideal_memory_is_flat() {
+        let t = DdrTiming::ideal();
+        assert_eq!(t.map(12345), (0, 0));
+        assert_eq!(t.row_miss_cycles, 0);
+    }
+
+    #[test]
+    fn ddr3_800_is_bandwidth_matched() {
+        let t = DdrTiming::ddr3_800();
+        assert_eq!(t.peak_lines_per_cycle(), 1.0);
+    }
+}

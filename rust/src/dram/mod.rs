@@ -1,0 +1,11 @@
+//! DRAM substrate: DDR3 channel timing and the memory controller that
+//! exposes the wide (`W_line`-bit) line interface the interconnects
+//! multiplex (paper §IV-C: "single channel 800MHz DDR3 ... the memory
+//! controller runs in its own clock domain at 200MHz, and exposes a
+//! 512-bit interface to the rest of the FPGA").
+
+pub mod controller;
+pub mod ddr3;
+
+pub use controller::MemoryController;
+pub use ddr3::DdrTiming;

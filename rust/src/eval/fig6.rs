@@ -1,0 +1,150 @@
+//! Figure 6: peak post-P&R frequency as the accelerator scales, baseline
+//! vs Medusa, across the four memory-interface-width regions (§IV-D).
+
+use crate::eval::report::Table;
+use crate::fpga::par::search_peak_frequency;
+use crate::fpga::timing::TimingModel;
+use crate::fpga::{DesignPoint, Device};
+use crate::interconnect::Design;
+
+/// One sweep point of the regenerated figure.
+#[derive(Clone, Copy, Debug)]
+pub struct Fig6Point {
+    pub dsps: u64,
+    pub ports: usize,
+    pub w_line: usize,
+    pub baseline_mhz: u32,
+    pub medusa_mhz: u32,
+}
+
+/// Regenerate the Fig 6 series (both lines).
+pub fn sweep() -> Vec<Fig6Point> {
+    let model = TimingModel::calibrated();
+    let dev = Device::virtex7_690t();
+    DesignPoint::fig6_sweep(Design::Baseline)
+        .into_iter()
+        .zip(DesignPoint::fig6_sweep(Design::Medusa))
+        .map(|(b, m)| Fig6Point {
+            dsps: b.dsps(),
+            ports: b.geometry.read_ports,
+            w_line: b.geometry.w_line,
+            baseline_mhz: search_peak_frequency(&model, &b, &dev).peak_mhz,
+            medusa_mhz: search_peak_frequency(&model, &m, &dev).peak_mhz,
+        })
+        .collect()
+}
+
+/// Render as the table backing the figure.
+pub fn fig6() -> Table {
+    let mut t = Table::new(
+        "Fig 6 — peak frequency vs accelerator size (25 MHz P&R search)",
+        &["DSPs", "r/w ports", "mem iface", "baseline MHz", "medusa MHz", "speedup"],
+    );
+    for p in sweep() {
+        let speedup = if p.baseline_mhz == 0 {
+            "∞".to_string()
+        } else {
+            format!("{:.2}x", p.medusa_mhz as f64 / p.baseline_mhz as f64)
+        };
+        t.row(vec![
+            p.dsps.to_string(),
+            format!("{}+{}", p.ports, p.ports),
+            format!("{}-bit", p.w_line),
+            p.baseline_mhz.to_string(),
+            p.medusa_mhz.to_string(),
+            speedup,
+        ]);
+    }
+    t
+}
+
+/// ASCII rendering of the figure itself (frequency vs DSPs, two series).
+pub fn ascii_plot() -> String {
+    let pts = sweep();
+    let fmax = 425u32;
+    let mut out = String::new();
+    out.push_str("peak MHz (B = baseline, M = medusa, X = both)\n");
+    let rows: Vec<u32> = (0..=(fmax / 25)).rev().map(|i| i * 25).collect();
+    for f in rows {
+        let mut line = format!("{f:>4} |");
+        for p in &pts {
+            let b = p.baseline_mhz == f;
+            let m = p.medusa_mhz == f;
+            line.push_str(match (b, m) {
+                (true, true) => "  X ",
+                (true, false) => "  B ",
+                (false, true) => "  M ",
+                (false, false) => "  . ",
+            });
+        }
+        out.push_str(&line);
+        out.push('\n');
+    }
+    out.push_str("     +");
+    for _ in &pts {
+        out.push_str("----");
+    }
+    out.push('\n');
+    out.push_str("      ");
+    for p in &pts {
+        out.push_str(&format!("{:>4}", p.dsps / 32)); // DPUs to keep width small
+    }
+    out.push_str("  (DPUs; x32 = DSPs)\n");
+    out.push_str("      ");
+    let mut last_w = 0;
+    for p in &pts {
+        if p.w_line != last_w {
+            out.push_str(&format!("{:>4}", p.w_line));
+            last_w = p.w_line;
+        } else {
+            out.push_str("   .");
+        }
+    }
+    out.push_str("  (memory interface width regions)\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_has_eleven_points_and_four_regions() {
+        let pts = sweep();
+        assert_eq!(pts.len(), 11);
+        let mut widths: Vec<usize> = pts.iter().map(|p| p.w_line).collect();
+        widths.dedup();
+        assert_eq!(widths, vec![128, 256, 512, 1024]);
+        assert_eq!(pts[0].dsps, 512);
+        assert_eq!(pts[10].dsps, 3072);
+    }
+
+    #[test]
+    fn figure_reproduces_paper_claims() {
+        let pts = sweep();
+        // Medusa always outperforms from 1024 DSPs on.
+        for p in pts.iter().filter(|p| p.dsps >= 1024) {
+            assert!(p.medusa_mhz >= p.baseline_mhz, "{p:?}");
+        }
+        // 512-bit region: speedup reaches ~1.8x.
+        let max_512: f64 = pts
+            .iter()
+            .filter(|p| p.w_line == 512 && p.baseline_mhz > 0)
+            .map(|p| p.medusa_mhz as f64 / p.baseline_mhz as f64)
+            .fold(0.0, f64::max);
+        assert!(max_512 >= 1.5, "max 512b speedup {max_512:.2}");
+        // 1024-bit region: baseline <= 50 MHz with some 0s; Medusa 200+.
+        for p in pts.iter().filter(|p| p.w_line == 1024) {
+            assert!(p.baseline_mhz <= 50, "{p:?}");
+            assert!(p.medusa_mhz >= 200, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn ascii_plot_renders() {
+        let s = ascii_plot();
+        assert!(s.contains('M'));
+        assert!(s.contains("memory interface"));
+        assert!(s.lines().count() > 15);
+    }
+}

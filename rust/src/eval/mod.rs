@@ -1,0 +1,13 @@
+//! Evaluation harness: regenerates every table and figure of the paper's
+//! evaluation section (§IV). Each submodule produces the same rows /
+//! series the paper reports; `report` renders them as aligned text and
+//! CSV. EXPERIMENTS.md records paper-vs-measured for each cell.
+
+pub mod fig6;
+pub mod report;
+pub mod table1;
+pub mod table2;
+
+pub use fig6::fig6;
+pub use table1::table1;
+pub use table2::table2;

@@ -1,0 +1,80 @@
+//! Table I: baseline data transfer networks vs AXI4-Stream networks
+//! (1x256-bit port to 16x16-bit ports, FIFO depth 32; post-synthesis
+//! LUT/FF; no DSPs or BRAMs are used by either).
+
+use crate::eval::report::{count_pct, Table};
+use crate::fpga::resources::{axis_read, axis_write, baseline_read, baseline_write};
+use crate::fpga::Device;
+use crate::types::Geometry;
+
+/// The paper's published Table I numbers, for side-by-side reporting.
+pub const PAPER: &[(&str, u64, u64)] = &[
+    ("Base (Read)", 5_313, 5_404),
+    ("AXIS (Read)", 11_562, 27_173),
+    ("Base (Write)", 6_810, 9_023),
+    ("AXIS (Write)", 9_170, 26_554),
+];
+
+pub fn geometry() -> Geometry {
+    Geometry { w_line: 256, w_acc: 16, read_ports: 16, write_ports: 16, max_burst: 32 }
+}
+
+/// Regenerate Table I from the resource model.
+pub fn table1() -> Table {
+    let g = geometry();
+    let dev = Device::virtex7_690t();
+    let cells = [
+        ("Base (Read)", baseline_read(&g)),
+        ("AXIS (Read)", axis_read(&g)),
+        ("Base (Write)", baseline_write(&g)),
+        ("AXIS (Write)", axis_write(&g)),
+    ];
+    let mut t = Table::new(
+        "Table I — baseline vs AXI4-Stream networks (256b -> 16x16b)",
+        &["network", "LUT (model)", "FF (model)", "LUT (paper)", "FF (paper)", "LUT err%", "FF err%"],
+    );
+    for ((name, r), (pname, plut, pff)) in cells.iter().zip(PAPER.iter()) {
+        assert_eq!(name, pname);
+        let le = 100.0 * (r.lut as f64 - *plut as f64) / *plut as f64;
+        let fe = 100.0 * (r.ff as f64 - *pff as f64) / *pff as f64;
+        t.row(vec![
+            name.to_string(),
+            count_pct(r.lut, dev.pct_lut(r.lut)),
+            count_pct(r.ff, dev.pct_ff(r.ff)),
+            count_pct(*plut, dev.pct_lut(*plut)),
+            count_pct(*pff, dev.pct_ff(*pff)),
+            format!("{le:+.1}"),
+            format!("{fe:+.1}"),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_all_four_networks() {
+        let t = table1();
+        assert_eq!(t.rows.len(), 4);
+        let text = t.to_text();
+        for (name, ..) in PAPER {
+            assert!(text.contains(name), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn table1_ordering_matches_paper() {
+        // The claim Table I supports: our baseline is cheaper than the
+        // AXIS IP on every metric.
+        let g = geometry();
+        assert!(baseline_read(&g).lut < axis_read(&g).lut);
+        assert!(baseline_read(&g).ff < axis_read(&g).ff);
+        assert!(baseline_write(&g).lut < axis_write(&g).lut);
+        assert!(baseline_write(&g).ff < axis_write(&g).ff);
+        // And the FF gap is the dominant one, as in the paper (5x / 2.9x).
+        let ff_ratio = axis_read(&g).ff as f64 / baseline_read(&g).ff as f64;
+        assert!(ff_ratio > 2.0, "AXIS read FF ratio {ff_ratio:.2}");
+    }
+}

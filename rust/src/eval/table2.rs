@@ -1,0 +1,116 @@
+//! Table II: Medusa vs baseline full FPGA resource use at the
+//! representative design point (§IV-C): 64-DPU layer processor, 512-bit
+//! interface, 32 read + 32 write 16-bit ports, 32-line max bursts.
+
+use crate::eval::report::{count_pct, Table};
+use crate::fpga::resources::{
+    baseline_read, baseline_write, full_design, medusa_read, medusa_write, Resources,
+};
+use crate::fpga::Device;
+use crate::interconnect::Design;
+use crate::types::Geometry;
+
+/// Paper's Table II: (row, LUT, FF, BRAM18, DSP).
+pub const PAPER: &[(&str, u64, u64, u64, u64)] = &[
+    ("Baseline Read Network", 18_168, 19_210, 0, 0),
+    ("Baseline Write Network", 26_810, 35_451, 0, 0),
+    ("Baseline Total", 198_887, 240_449, 726, 2_048),
+    ("Medusa Read Network", 4_733, 4_759, 32, 0),
+    ("Medusa Write Network", 4_777, 4_325, 32, 0),
+    ("Medusa Total", 156_409, 195_158, 790, 2_048),
+];
+
+pub fn geometry() -> Geometry {
+    Geometry::paper_default()
+}
+
+pub const DPUS: usize = 64;
+
+/// Model rows in the same order as `PAPER`.
+pub fn model_rows() -> Vec<(&'static str, Resources)> {
+    let g = geometry();
+    vec![
+        ("Baseline Read Network", baseline_read(&g)),
+        ("Baseline Write Network", baseline_write(&g)),
+        ("Baseline Total", full_design(Design::Baseline, &g, DPUS)),
+        ("Medusa Read Network", medusa_read(&g)),
+        ("Medusa Write Network", medusa_write(&g)),
+        ("Medusa Total", full_design(Design::Medusa, &g, DPUS)),
+    ]
+}
+
+/// Regenerate Table II.
+pub fn table2() -> Table {
+    let dev = Device::virtex7_690t();
+    let mut t = Table::new(
+        "Table II — Medusa vs baseline FPGA resource use (512b, 32r+32w, 64 DPUs)",
+        &["component", "LUT", "FF", "BRAM-18K", "DSP", "LUT paper", "FF paper"],
+    );
+    for ((name, r), (pname, plut, pff, _pbram, _pdsp)) in model_rows().iter().zip(PAPER.iter()) {
+        assert_eq!(name, pname);
+        t.row(vec![
+            name.to_string(),
+            count_pct(r.lut, dev.pct_lut(r.lut)),
+            count_pct(r.ff, dev.pct_ff(r.ff)),
+            count_pct(r.bram18, dev.pct_bram(r.bram18)),
+            count_pct(r.dsp, dev.pct_dsp(r.dsp)),
+            count_pct(*plut, dev.pct_lut(*plut)),
+            count_pct(*pff, dev.pct_ff(*pff)),
+        ]);
+    }
+    t
+}
+
+/// The headline factors the abstract quotes.
+pub struct Headline {
+    pub lut_factor: f64,
+    pub ff_factor: f64,
+    pub medusa_extra_bram: u64,
+    /// Networks' share of total baseline LUT/FF (paper: 22.6% / 22.7%).
+    pub baseline_net_lut_share: f64,
+    pub baseline_net_ff_share: f64,
+    /// ... reduced by Medusa to (paper: 6.1% / 4.7%).
+    pub medusa_net_lut_share: f64,
+    pub medusa_net_ff_share: f64,
+}
+
+pub fn headline() -> Headline {
+    let g = geometry();
+    let b = baseline_read(&g) + baseline_write(&g);
+    let m = medusa_read(&g) + medusa_write(&g);
+    let bt = full_design(Design::Baseline, &g, DPUS);
+    let mt = full_design(Design::Medusa, &g, DPUS);
+    Headline {
+        lut_factor: b.lut as f64 / m.lut as f64,
+        ff_factor: b.ff as f64 / m.ff as f64,
+        medusa_extra_bram: m.bram18,
+        baseline_net_lut_share: 100.0 * b.lut as f64 / bt.lut as f64,
+        baseline_net_ff_share: 100.0 * b.ff as f64 / bt.ff as f64,
+        medusa_net_lut_share: 100.0 * m.lut as f64 / mt.lut as f64,
+        medusa_net_ff_share: 100.0 * m.ff as f64 / mt.ff as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_structure() {
+        let t = table2();
+        assert_eq!(t.rows.len(), 6);
+        assert!(t.to_text().contains("Medusa Total"));
+    }
+
+    #[test]
+    fn headline_shares_match_paper_shape() {
+        // Paper §IV-C: networks are 22.6%/22.7% of baseline LUT/FF,
+        // reduced to 6.1%/4.7% by Medusa.
+        let h = headline();
+        assert!((18.0..28.0).contains(&h.baseline_net_lut_share), "{}", h.baseline_net_lut_share);
+        assert!((18.0..28.0).contains(&h.baseline_net_ff_share), "{}", h.baseline_net_ff_share);
+        assert!(h.medusa_net_lut_share < 9.0, "{}", h.medusa_net_lut_share);
+        assert!(h.medusa_net_ff_share < 7.0, "{}", h.medusa_net_ff_share);
+        assert_eq!(h.medusa_extra_bram, 64);
+    }
+}

@@ -1,0 +1,67 @@
+//! FPGA device capacity models.
+
+/// Capacities of one FPGA device, used to normalize resource reports
+/// (the percentages in Tables I/II) and to drive the congestion model.
+#[derive(Clone, Copy, Debug)]
+pub struct Device {
+    pub name: &'static str,
+    pub luts: u64,
+    pub ffs: u64,
+    /// 18Kbit BRAM blocks.
+    pub bram18: u64,
+    pub dsps: u64,
+    /// Abstract routing supply (bit x span units) for the congestion
+    /// model — calibrated, see `fpga::timing`.
+    pub routing_supply: f64,
+}
+
+impl Device {
+    /// Xilinx Virtex-7 690T — the paper's target device (§IV-A).
+    /// Capacities cross-checked against the paper's own percentages:
+    /// 198,887 LUT = 45.9% -> 433,200; 240,449 FF = 27.8% -> 866,400;
+    /// 726 BRAM-18K = 24.7% -> 2,940; 2,048 DSP = 56.9% -> 3,600.
+    pub fn virtex7_690t() -> Self {
+        Device {
+            name: "xc7vx690t",
+            luts: 433_200,
+            ffs: 866_400,
+            bram18: 2_940,
+            dsps: 3_600,
+            routing_supply: 60_000.0,
+        }
+    }
+
+    pub fn pct_lut(&self, n: u64) -> f64 {
+        100.0 * n as f64 / self.luts as f64
+    }
+
+    pub fn pct_ff(&self, n: u64) -> f64 {
+        100.0 * n as f64 / self.ffs as f64
+    }
+
+    pub fn pct_bram(&self, n: u64) -> f64 {
+        100.0 * n as f64 / self.bram18 as f64
+    }
+
+    pub fn pct_dsp(&self, n: u64) -> f64 {
+        100.0 * n as f64 / self.dsps as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_percentages_reproduce() {
+        let d = Device::virtex7_690t();
+        // Table II's own normalization.
+        assert!((d.pct_lut(198_887) - 45.9).abs() < 0.05);
+        assert!((d.pct_ff(240_449) - 27.8).abs() < 0.05);
+        assert!((d.pct_bram(726) - 24.7).abs() < 0.05);
+        assert!((d.pct_dsp(2_048) - 56.9).abs() < 0.05);
+        // Table I's normalization.
+        assert!((d.pct_lut(5_313) - 1.2).abs() < 0.05);
+        assert!((d.pct_ff(27_173) - 3.1).abs() < 0.05);
+    }
+}

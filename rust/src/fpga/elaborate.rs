@@ -1,0 +1,114 @@
+//! Design-point elaboration: the parameterized design generation the
+//! paper did with Bluespec (§IV-A: "the implementations are highly
+//! parameterized to allow easy generation of various design points").
+
+use crate::fpga::resources::{self, Resources, DSP_PER_DPU};
+use crate::fpga::Device;
+use crate::interconnect::Design;
+use crate::types::Geometry;
+use crate::util::next_pow2;
+
+/// One accelerator design point: a layer processor of `dpus` vector
+/// dot-product units coupled to an interconnect of the given geometry.
+#[derive(Clone, Copy, Debug)]
+pub struct DesignPoint {
+    pub design: Design,
+    pub geometry: Geometry,
+    pub dpus: usize,
+}
+
+impl DesignPoint {
+    /// The Fig 6 scaling rule (§IV-D): start at 16 DPUs / 8r+8w ports /
+    /// 128-bit interface; each step adds 8 DPUs and 4r+4w ports; the
+    /// memory interface is the smallest power of two that accommodates
+    /// all read ports.
+    pub fn fig6_step(design: Design, step: usize) -> DesignPoint {
+        let dpus = 16 + 8 * step;
+        let ports = 8 + 4 * step;
+        let w_line = next_pow2(ports * 16);
+        DesignPoint {
+            design,
+            geometry: Geometry {
+                w_line,
+                w_acc: 16,
+                read_ports: ports,
+                write_ports: ports,
+                max_burst: 32,
+            },
+            dpus,
+        }
+    }
+
+    /// All Fig 6 points for one design (up to 3072 DSPs, where the
+    /// 1024-bit region ends in the paper's figure).
+    pub fn fig6_sweep(design: Design) -> Vec<DesignPoint> {
+        (0..=10).map(|s| Self::fig6_step(design, s)).collect()
+    }
+
+    /// Accelerator size in DSP slices (Fig 6's x-axis).
+    pub fn dsps(&self) -> u64 {
+        self.dpus as u64 * DSP_PER_DPU
+    }
+
+    /// Total resource roll-up (layer processor + both networks).
+    pub fn resources(&self) -> Resources {
+        resources::full_design(self.design, &self.geometry, self.dpus)
+    }
+
+    /// Resource utilization pressure on a device: the max utilization
+    /// fraction across resource classes — the quantity P&R difficulty
+    /// tracks.
+    pub fn utilization(&self, dev: &Device) -> f64 {
+        let r = self.resources();
+        let fracs = [
+            r.lut as f64 / dev.luts as f64,
+            r.ff as f64 / dev.ffs as f64,
+            r.bram18 as f64 / dev.bram18 as f64,
+            r.dsp as f64 / dev.dsps as f64,
+        ];
+        fracs.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_first_point_matches_paper() {
+        let p = DesignPoint::fig6_step(Design::Baseline, 0);
+        assert_eq!(p.dpus, 16);
+        assert_eq!(p.dsps(), 512);
+        assert_eq!(p.geometry.read_ports, 8);
+        assert_eq!(p.geometry.w_line, 128);
+    }
+
+    #[test]
+    fn fig6_interface_width_regions() {
+        // §IV-D: (8,16] ports -> 256-bit; (16,32] -> 512-bit.
+        let widths: Vec<usize> =
+            DesignPoint::fig6_sweep(Design::Medusa).iter().map(|p| p.geometry.w_line).collect();
+        assert_eq!(widths, vec![128, 256, 256, 512, 512, 512, 512, 1024, 1024, 1024, 1024]);
+    }
+
+    #[test]
+    fn fig6_table2_point_is_2048_dsps() {
+        // §IV-D: "the 2048-DSP points correspond to the designs whose
+        // resource use metrics were evaluated in Table II".
+        let p = DesignPoint::fig6_step(Design::Medusa, 6);
+        assert_eq!(p.dsps(), 2048);
+        assert_eq!(p.geometry, Geometry::paper_default());
+        assert_eq!(p.dpus, 64);
+    }
+
+    #[test]
+    fn utilization_monotonic_in_size() {
+        let dev = Device::virtex7_690t();
+        let sweep = DesignPoint::fig6_sweep(Design::Baseline);
+        for w in sweep.windows(2) {
+            assert!(w[1].utilization(&dev) > w[0].utilization(&dev));
+        }
+        // Largest point must still fit the device.
+        assert!(sweep.last().unwrap().utilization(&dev) < 1.0);
+    }
+}

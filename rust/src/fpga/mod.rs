@@ -1,0 +1,14 @@
+//! FPGA implementation models: device capacities, analytical resource
+//! costing, and the routing-congestion timing model that substitutes for
+//! Vivado synthesis + place-and-route (see DESIGN.md §1 and §5 for the
+//! substitution rationale and calibration method).
+
+pub mod device;
+pub mod elaborate;
+pub mod par;
+pub mod resources;
+pub mod timing;
+
+pub use device::Device;
+pub use elaborate::DesignPoint;
+pub use resources::Resources;

@@ -1,0 +1,111 @@
+//! Simulated place-and-route frequency search.
+//!
+//! The paper finds each design's peak frequency by re-running Vivado P&R
+//! at 25 MHz steps (§IV-A). We reproduce the search discipline: walk the
+//! grid from the ceiling down, "attempting" each target against the
+//! timing model (which adds a small deterministic per-run jitter, as
+//! real P&R exhibits run-to-run variance around the achievable point),
+//! and report the highest target that closes.
+
+use crate::fpga::timing::TimingModel;
+use crate::fpga::{DesignPoint, Device};
+
+/// Outcome of one frequency search.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ParResult {
+    /// Highest 25 MHz grid point that met timing; 0 = failed at 25 MHz.
+    pub peak_mhz: u32,
+    /// Number of P&R attempts the search performed.
+    pub attempts: u32,
+    /// Worst negative slack (ns) observed at the first failing target
+    /// above the peak (0 if the ceiling closed).
+    pub wns_at_fail_ns: f64,
+}
+
+/// Deterministic per-(design-point, target) jitter in [-2%, +2%] of the
+/// critical path — models P&R seed noise without breaking
+/// reproducibility.
+fn par_jitter(p: &DesignPoint, target_mhz: u32) -> f64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in [
+        p.dpus as u64,
+        p.geometry.w_line as u64,
+        p.geometry.read_ports as u64,
+        p.design.name().len() as u64,
+        target_mhz as u64,
+    ] {
+        h ^= v;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    ((h >> 11) as f64 / (1u64 << 53) as f64 - 0.5) * 0.04
+}
+
+/// Run the 25 MHz-step search for one design point.
+pub fn search_peak_frequency(model: &TimingModel, p: &DesignPoint, dev: &Device) -> ParResult {
+    // The analytic achievable frequency (un-snapped).
+    let analytic = model.peak_frequency_mhz(p, dev);
+    let mut attempts = 0;
+    let mut wns = 0.0;
+    // Walk down from the model ceiling.
+    let mut target = (model.f_max_mhz as u32 / 25) * 25;
+    while target >= 25 {
+        attempts += 1;
+        // A target closes if the (jittered) critical path fits its period.
+        let base_t_ns = 1000.0 / (analytic.max(1) as f64 + 12.5); // center of the snap bin
+        let t_ns = base_t_ns * (1.0 + par_jitter(p, target));
+        let period_ns = 1000.0 / target as f64;
+        if t_ns <= period_ns {
+            return ParResult { peak_mhz: target, attempts, wns_at_fail_ns: wns };
+        }
+        wns = t_ns - period_ns;
+        target -= 25;
+    }
+    ParResult { peak_mhz: 0, attempts, wns_at_fail_ns: wns }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interconnect::Design;
+
+    #[test]
+    fn search_agrees_with_model_within_one_step() {
+        let model = TimingModel::calibrated();
+        let dev = Device::virtex7_690t();
+        for design in [Design::Baseline, Design::Medusa] {
+            for p in DesignPoint::fig6_sweep(design) {
+                let direct = model.peak_frequency_mhz(&p, &dev);
+                let searched = search_peak_frequency(&model, &p, &dev).peak_mhz;
+                let diff = (direct as i64 - searched as i64).abs();
+                assert!(
+                    diff <= 25,
+                    "{design:?} {} DSPs: direct {direct} vs searched {searched}",
+                    p.dsps()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn search_is_deterministic() {
+        let model = TimingModel::calibrated();
+        let dev = Device::virtex7_690t();
+        let p = DesignPoint::fig6_step(Design::Medusa, 5);
+        let a = search_peak_frequency(&model, &p, &dev);
+        let b = search_peak_frequency(&model, &p, &dev);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn failing_designs_report_zero_with_slack() {
+        let model = TimingModel::calibrated();
+        let dev = Device::virtex7_690t();
+        // Largest 1024-bit baseline point: expected to fail at 25 MHz.
+        let p = DesignPoint::fig6_step(Design::Baseline, 10);
+        let r = search_peak_frequency(&model, &p, &dev);
+        if r.peak_mhz == 0 {
+            assert!(r.wns_at_fail_ns > 0.0);
+        }
+        assert!(r.attempts >= 1);
+    }
+}

@@ -1,0 +1,232 @@
+//! Post-place-and-route timing model.
+//!
+//! Substitutes for Vivado P&R (DESIGN.md §1). The achievable clock of a
+//! design point is modelled as the critical path through:
+//!
+//! * register clock-to-out + the design's logic levels (LUT delays) —
+//!   baseline: the `N:1` width-converter mux tree read out of LUTRAM;
+//!   Medusa: a BRAM access plus one (pipelined) rotator stage;
+//! * a routing term that inflates with **congestion**: the ratio of the
+//!   design's wide-bus wire demand to the device's routing supply,
+//!   de-rated by how full the device is (placed logic both lengthens the
+//!   wide buses and consumes routing). This is the mechanism the paper
+//!   identifies (§II-C: "a large number of buses as wide as the DRAM
+//!   controller interface is widely distributed within this design ...
+//!   greatly limiting the peak clock frequency").
+//!
+//! Baseline wire demand scales with `W_line x N` distributed buses;
+//! Medusa's with `W_line x log2(N)` localized rotator wiring — the same
+//! asymmetry as the paper's logic-complexity analysis, §III-D.
+//!
+//! Constants are calibrated against Fig 6's anchors (see
+//! `rust/tests/calibration.rs`): Medusa >= 1.8x in the 512-bit region's
+//! large points, baseline collapsing below 25 MHz in the 1024-bit region
+//! while Medusa holds 200–225 MHz.
+
+use crate::fpga::{DesignPoint, Device};
+use crate::interconnect::Design;
+use crate::util::{ceil_log2, snap_to_freq_grid};
+
+/// Calibrated timing-model constants (Virtex-7 speed grade -2-ish).
+#[derive(Clone, Copy, Debug)]
+pub struct TimingModel {
+    /// Register clock-to-out + setup (ns).
+    pub t_ff_ns: f64,
+    /// One LUT + local interconnect (ns).
+    pub t_lut_ns: f64,
+    /// BRAM clock-to-out (ns) — on Medusa's path.
+    pub t_bram_ns: f64,
+    /// LUTRAM read (ns) — on the baseline converter path.
+    pub t_lutram_ns: f64,
+    /// Base routing delay at zero congestion (ns).
+    pub t_route0_ns: f64,
+    /// Congestion exponent: route delay multiplies by (1+gamma)^beta.
+    pub beta: f64,
+    /// Global clocking ceiling (MHz).
+    pub f_max_mhz: f64,
+}
+
+impl TimingModel {
+    pub fn calibrated() -> Self {
+        TimingModel {
+            t_ff_ns: 0.5,
+            t_lut_ns: 0.45,
+            t_bram_ns: 1.7,
+            t_lutram_ns: 0.9,
+            t_route0_ns: 0.8,
+            beta: 4.2,
+            f_max_mhz: 400.0,
+        }
+    }
+
+    /// Logic-levels delay of the design's critical path (ns).
+    fn logic_delay_ns(&self, design: Design, n_words: usize) -> f64 {
+        match design {
+            Design::Baseline | Design::Axis => {
+                // LUTRAM FIFO read, then the N:1 converter mux tree
+                // (4:1 per LUT level), plus a control level.
+                let mux_levels = ceil_log2(n_words).div_ceil(2) as f64 + 1.0;
+                self.t_ff_ns + self.t_lutram_ns + mux_levels * self.t_lut_ns
+            }
+            Design::Medusa => {
+                // BRAM bank read, one rotator stage (pipelined), output
+                // staging level.
+                self.t_ff_ns + self.t_bram_ns + 2.0 * self.t_lut_ns
+            }
+        }
+    }
+
+    /// Congestion ratio gamma for a design point on a device.
+    fn congestion(&self, p: &DesignPoint, dev: &Device) -> f64 {
+        let u = p.utilization(dev);
+        let w = p.geometry.w_line as f64;
+        let ports = p.geometry.read_ports.max(p.geometry.write_ports) as f64;
+        let n_words = p.geometry.words_per_line() as f64;
+        let (bus_bits, spread) = match p.design {
+            Design::Baseline | Design::Axis => {
+                // N wide buses (demux legs + mux legs) distributed across
+                // the die; their span grows as placed logic pushes
+                // endpoints apart.
+                let spread = 1.0 + 0.8 * u;
+                (w * (ports + 2.0), spread * spread)
+            }
+            Design::Medusa => {
+                // log2(N) rotator stages of W_line wiring, localized, plus
+                // the narrow per-port wiring.
+                let stages = n_words.log2().ceil().max(1.0);
+                let loc = 1.0 + 0.25 * u;
+                (w * (stages + 2.0) + p.geometry.w_acc as f64 * ports, loc * loc)
+            }
+        };
+        bus_bits * spread / dev.routing_supply
+    }
+
+    /// Peak post-P&R frequency, snapped to the paper's 25 MHz search
+    /// grid; 0 means "failed timing at 25 MHz".
+    pub fn peak_frequency_mhz(&self, p: &DesignPoint, dev: &Device) -> u32 {
+        let gamma = self.congestion(p, dev);
+        let route = self.t_route0_ns * (1.0 + gamma).powf(self.beta);
+        let t_ns = self.logic_delay_ns(p.design, p.geometry.words_per_line()) + route;
+        let f = (1000.0 / t_ns).min(self.f_max_mhz);
+        snap_to_freq_grid(f)
+    }
+}
+
+/// Convenience: peak frequency with the calibrated model on the paper's
+/// device.
+pub fn peak_frequency(p: &DesignPoint) -> u32 {
+    TimingModel::calibrated().peak_frequency_mhz(p, &Device::virtex7_690t())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::DesignPoint;
+
+    fn sweep(design: Design) -> Vec<(u64, u32)> {
+        DesignPoint::fig6_sweep(design).iter().map(|p| (p.dsps(), peak_frequency(p))).collect()
+    }
+
+    #[test]
+    fn fig6_monotone_decrease_with_size() {
+        for design in [Design::Baseline, Design::Medusa] {
+            let s = sweep(design);
+            for w in s.windows(2) {
+                assert!(
+                    w[1].1 <= w[0].1,
+                    "{design:?}: freq must not increase with size: {s:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fig6_small_designs_baseline_competitive() {
+        // Below 1024 DSPs the baseline meets or beats Medusa (§IV-D:
+        // "starting from the point with 1024 DSPs, Medusa designs always
+        // outperform baseline designs").
+        let b = sweep(Design::Baseline);
+        let m = sweep(Design::Medusa);
+        for i in 0..2 {
+            assert!(
+                b[i].1 >= m[i].1,
+                "at {} DSPs baseline {} should be >= medusa {}",
+                b[i].0,
+                b[i].1,
+                m[i].1
+            );
+        }
+        for i in 2..b.len() {
+            assert!(
+                m[i].1 >= b[i].1,
+                "at {} DSPs medusa {} should be >= baseline {}",
+                m[i].0,
+                m[i].1,
+                b[i].1
+            );
+        }
+    }
+
+    #[test]
+    fn fig6_512bit_region_speedup() {
+        // §IV-D: "within the 512-bit memory interface region ... Medusa
+        // outperforms the baseline by up to 1.8x (the designs with 1280
+        // DSPs and 2048 DSPs)".
+        let b = sweep(Design::Baseline);
+        let m = sweep(Design::Medusa);
+        // Steps 3..=6 are the 512-bit region (1280..2048 DSPs).
+        let mut max_ratio: f64 = 0.0;
+        for i in 3..=6 {
+            assert!(b[i].1 > 0, "baseline must still close timing in the 512b region");
+            let r = m[i].1 as f64 / b[i].1 as f64;
+            max_ratio = max_ratio.max(r);
+        }
+        assert!(
+            (1.5..=2.4).contains(&max_ratio),
+            "max 512b-region speedup {max_ratio:.2} (paper: 1.8x)"
+        );
+    }
+
+    #[test]
+    fn fig6_1024bit_region_baseline_collapses() {
+        // §IV-D: "within the 1024-bit memory interface region ... the
+        // baseline is barely usable, with some points failing to make
+        // timing even at 50MHz or lower. Nonetheless, the Medusa designs
+        // ... keep running at 200 to 225MHz".
+        let b = sweep(Design::Baseline);
+        let m = sweep(Design::Medusa);
+        for i in 7..=10 {
+            assert!(b[i].1 <= 50, "baseline at {} DSPs should be <=50 MHz, got {}", b[i].0, b[i].1);
+            assert!(
+                (200..=250).contains(&m[i].1),
+                "medusa at {} DSPs should hold 200-225 MHz, got {}",
+                m[i].0,
+                m[i].1
+            );
+        }
+        assert!(
+            b[7..].iter().any(|&(_, f)| f == 0),
+            "some 1024-bit baseline points must fail timing entirely"
+        );
+    }
+
+    #[test]
+    fn medusa_holds_mem_clock_at_table2_point() {
+        // The representative 512-bit/DDR3-800 system needs >= 200 MHz to
+        // match the controller clock; Medusa achieves it, baseline not.
+        let m = DesignPoint::fig6_step(Design::Medusa, 6);
+        let b = DesignPoint::fig6_step(Design::Baseline, 6);
+        assert!(peak_frequency(&m) >= 200);
+        assert!(peak_frequency(&b) < 200);
+    }
+
+    #[test]
+    fn axis_no_faster_than_baseline() {
+        for step in [0usize, 1] {
+            // (AXIS capped at 16 ports; steps 0-1 are 8/12 ports.)
+            let a = DesignPoint::fig6_step(Design::Axis, step);
+            let b = DesignPoint::fig6_step(Design::Baseline, step);
+            assert!(peak_frequency(&a) <= peak_frequency(&b));
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Bounded FIFO for *intra-component* buffering.
+//!
+//! Unlike [`crate::sim::Channel`] (which registers pushes across a cycle
+//! boundary for inter-component determinism), `BoundedFifo` is immediate:
+//! a component's `tick` is sequential code, so within one component the
+//! evaluation order is already well defined. The capacity bound is the
+//! hardware-faithful part — the baseline interconnect's per-port FIFOs
+//! are provisioned at exactly `MaxBurstLen` lines (paper §II-A) and the
+//! models must respect that.
+
+use std::collections::VecDeque;
+
+#[derive(Clone, Debug)]
+pub struct BoundedFifo<T> {
+    cap: usize,
+    q: VecDeque<T>,
+    high_water: usize,
+}
+
+impl<T> BoundedFifo<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1);
+        BoundedFifo { cap, q: VecDeque::with_capacity(cap), high_water: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.q.len() == self.cap
+    }
+
+    pub fn free(&self) -> usize {
+        self.cap - self.q.len()
+    }
+
+    /// Highest occupancy ever reached — used to verify provisioning
+    /// claims (e.g. that bursts never overflow a `MaxBurstLen` FIFO).
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    pub fn push(&mut self, v: T) {
+        assert!(!self.is_full(), "FIFO overflow (cap {})", self.cap);
+        self.q.push_back(v);
+        self.high_water = self.high_water.max(self.q.len());
+    }
+
+    pub fn try_push(&mut self, v: T) -> Result<(), T> {
+        if self.is_full() {
+            Err(v)
+        } else {
+            self.push(v);
+            Ok(())
+        }
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        self.q.pop_front()
+    }
+
+    pub fn peek(&self) -> Option<&T> {
+        self.q.front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_capacity() {
+        let mut f = BoundedFifo::new(3);
+        f.push(1);
+        f.push(2);
+        f.push(3);
+        assert!(f.is_full());
+        assert_eq!(f.try_push(4), Err(4));
+        assert_eq!(f.pop(), Some(1));
+        assert_eq!(f.pop(), Some(2));
+        assert_eq!(f.pop(), Some(3));
+        assert_eq!(f.pop(), None);
+    }
+
+    #[test]
+    fn high_water_tracks_peak() {
+        let mut f = BoundedFifo::new(8);
+        for i in 0..5 {
+            f.push(i);
+        }
+        for _ in 0..5 {
+            f.pop();
+        }
+        f.push(9);
+        assert_eq!(f.high_water(), 5);
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "FIFO overflow")]
+    fn overflow_panics() {
+        let mut f = BoundedFifo::new(1);
+        f.push(1);
+        f.push(2);
+    }
+}

@@ -1,0 +1,19 @@
+//! Behavioural models of the FPGA hardware primitives both interconnects
+//! are built from.
+//!
+//! These are *functional, cycle-level* models: they enforce the same
+//! structural constraints the real primitives have (FIFO capacity, one
+//! access per SRAM bank port per cycle, `log2 N` rotator stages) so that
+//! the interconnect models built on top cannot accidentally assume more
+//! hardware than the paper's designs instantiate. Resource *costing* of
+//! the same primitives lives separately in [`crate::fpga::resources`].
+
+pub mod fifo;
+pub mod rotator;
+pub mod sram;
+pub mod width_conv;
+
+pub use fifo::BoundedFifo;
+pub use rotator::{rotate_left, PipelinedRotator};
+pub use sram::BankedSram;
+pub use width_conv::{Packer, Unpacker};

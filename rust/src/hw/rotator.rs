@@ -1,0 +1,231 @@
+//! The Medusa data rotation unit (paper §III-B, Fig 5).
+//!
+//! Takes `N` words of `W_acc` bits and left-rotates them in word
+//! increments through a barrel-shifter structure of `ceil(log2 N)`
+//! stages; stage `l` rotates by `2^l` words iff bit `l` of the rotation
+//! amount is set. "Data rotation can either be performed in a single
+//! cycle or be pipelined, depending on the frequency requirements" — both
+//! variants are modelled: [`rotate_left`] is the single-cycle
+//! (combinational) form, [`PipelinedRotator`] registers every stage.
+
+use crate::types::Word;
+use crate::util::ceil_log2;
+
+/// Combinational left-rotation of `words` by `amount` positions
+/// (`out[j] = in[(j + amount) mod N]`), evaluated stage by stage exactly
+/// as the barrel structure does so that the stage decomposition itself is
+/// covered by tests.
+pub fn rotate_left(words: &mut [Word], amount: usize) {
+    let n = words.len();
+    if n <= 1 {
+        return;
+    }
+    let amount = amount % n;
+    let stages = ceil_log2(n);
+    let mut scratch = vec![0 as Word; n];
+    for l in 0..stages {
+        if (amount >> l) & 1 == 1 {
+            let shift = 1usize << l;
+            for (j, s) in scratch.iter_mut().enumerate() {
+                *s = words[(j + shift) % n];
+            }
+            words.copy_from_slice(&scratch);
+        }
+    }
+}
+
+/// One in-flight item in the pipelined rotator: the words, the remaining
+/// rotation control bits, and an opaque tag the caller uses to associate
+/// the output with bookkeeping (e.g. destination buffer addresses).
+#[derive(Clone, Debug)]
+struct InFlight<T> {
+    words: Vec<Word>,
+    amount: usize,
+    tag: T,
+    stage: usize,
+}
+
+/// Pipelined barrel rotator: `ceil(log2 N)` register stages, one item
+/// enters and one leaves per cycle once full. Latency = number of stages.
+#[derive(Debug)]
+pub struct PipelinedRotator<T> {
+    n: usize,
+    stages: usize,
+    pipe: Vec<Option<InFlight<T>>>,
+}
+
+impl<T> PipelinedRotator<T> {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        let stages = ceil_log2(n).max(1);
+        let mut pipe = Vec::with_capacity(stages);
+        for _ in 0..stages {
+            pipe.push(None);
+        }
+        PipelinedRotator { n, stages, pipe }
+    }
+
+    pub fn latency(&self) -> usize {
+        self.stages
+    }
+
+    pub fn num_words(&self) -> usize {
+        self.n
+    }
+
+    /// True if a new item can be accepted this cycle (stage 0 empty after
+    /// the shift performed by `tick`).
+    pub fn can_accept(&self) -> bool {
+        self.pipe[0].is_none()
+    }
+
+    /// Insert an item into stage 0. Call after `tick` in the owner's
+    /// cycle evaluation.
+    pub fn accept(&mut self, words: Vec<Word>, amount: usize, tag: T) {
+        assert_eq!(words.len(), self.n);
+        assert!(self.can_accept(), "rotator stage 0 occupied");
+        self.pipe[0] = Some(InFlight { words, amount: amount % self.n.max(1), tag, stage: 0 });
+    }
+
+    /// Advance the pipeline one cycle; returns the item leaving the final
+    /// stage, fully rotated, if any.
+    pub fn tick(&mut self) -> Option<(Vec<Word>, T)> {
+        // Pop the last stage.
+        let out = self.pipe[self.stages - 1].take().map(|mut f| {
+            Self::apply_stage(self.n, &mut f);
+            (f.words, f.tag)
+        });
+        // Shift the rest forward, applying each stage's partial rotation.
+        for i in (0..self.stages - 1).rev() {
+            if let Some(mut f) = self.pipe[i].take() {
+                Self::apply_stage(self.n, &mut f);
+                f.stage = i + 1;
+                self.pipe[i + 1] = Some(f);
+            }
+        }
+        out
+    }
+
+    /// Apply the rotation contribution of the stage the item currently
+    /// occupies: rotate by `2^stage` iff that control bit is set.
+    fn apply_stage(n: usize, f: &mut InFlight<T>) {
+        let l = f.stage;
+        if (f.amount >> l) & 1 == 1 {
+            let shift = 1usize << l;
+            let old = f.words.clone();
+            for j in 0..n {
+                f.words[j] = old[(j + shift) % n];
+            }
+        }
+    }
+
+    /// Number of items currently in flight.
+    pub fn in_flight(&self) -> usize {
+        self.pipe.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.in_flight() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_rotate(v: &[Word], amt: usize) -> Vec<Word> {
+        let n = v.len();
+        (0..n).map(|j| v[(j + amt) % n]).collect()
+    }
+
+    #[test]
+    fn combinational_matches_naive_all_amounts() {
+        for n in [1usize, 2, 4, 8, 16, 32] {
+            let base: Vec<Word> = (0..n as u64).collect();
+            for amt in 0..2 * n {
+                let mut w = base.clone();
+                rotate_left(&mut w, amt);
+                assert_eq!(w, naive_rotate(&base, amt), "n={n} amt={amt}");
+            }
+        }
+    }
+
+    #[test]
+    fn combinational_non_power_of_two() {
+        // §III-G: irregular port counts still rotate correctly through the
+        // pow2-sized barrel (modulo arithmetic on the actual n).
+        for n in [3usize, 5, 6, 7, 12, 20, 24] {
+            let base: Vec<Word> = (0..n as u64).map(|x| x * 7 + 1).collect();
+            for amt in 0..n {
+                let mut w = base.clone();
+                rotate_left(&mut w, amt);
+                assert_eq!(w, naive_rotate(&base, amt), "n={n} amt={amt}");
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_latency_is_log2() {
+        let r: PipelinedRotator<()> = PipelinedRotator::new(8);
+        assert_eq!(r.latency(), 3);
+        let r: PipelinedRotator<()> = PipelinedRotator::new(32);
+        assert_eq!(r.latency(), 5);
+        let r: PipelinedRotator<()> = PipelinedRotator::new(20);
+        assert_eq!(r.latency(), 5); // ceil(log2 20)
+    }
+
+    #[test]
+    fn pipelined_matches_combinational() {
+        let n = 8;
+        let mut r: PipelinedRotator<usize> = PipelinedRotator::new(n);
+        let inputs: Vec<(Vec<Word>, usize)> =
+            (0..20).map(|i| ((0..n as u64).map(|x| x + 100 * i).collect(), (i as usize) % n)).collect();
+        let mut outputs = Vec::new();
+        let mut next_in = 0;
+        for _cycle in 0..200 {
+            if let Some((words, tag)) = r.tick() {
+                outputs.push((words, tag));
+            }
+            if next_in < inputs.len() && r.can_accept() {
+                let (w, amt) = inputs[next_in].clone();
+                r.accept(w, amt, next_in);
+                next_in += 1;
+            }
+            if outputs.len() == inputs.len() {
+                break;
+            }
+        }
+        assert_eq!(outputs.len(), inputs.len());
+        for (words, tag) in outputs {
+            let (ref iw, amt) = inputs[tag];
+            let mut expect = iw.clone();
+            rotate_left(&mut expect, amt);
+            assert_eq!(words, expect, "item {tag}");
+        }
+    }
+
+    #[test]
+    fn pipelined_sustains_one_per_cycle() {
+        // Once the pipe is full, an item must leave every cycle — the
+        // rotator is on the full-bandwidth path (one W_line line/cycle).
+        let n = 16;
+        let mut r: PipelinedRotator<u64> = PipelinedRotator::new(n);
+        let mut received = 0u64;
+        let total = 100u64;
+        let mut sent = 0u64;
+        let mut cycles = 0u64;
+        while received < total {
+            cycles += 1;
+            if r.tick().is_some() {
+                received += 1;
+            }
+            if sent < total && r.can_accept() {
+                r.accept(vec![sent; n], (sent % n as u64) as usize, sent);
+                sent += 1;
+            }
+            assert!(cycles < total + 20, "rotator stalled");
+        }
+        // Steady-state throughput 1/cycle: total cycles = total + latency + O(1).
+        assert!(cycles <= total + r.latency() as u64 + 2, "cycles={cycles}");
+    }
+}

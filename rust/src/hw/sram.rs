@@ -1,0 +1,162 @@
+//! Banked SRAM model (the deep/narrow BRAM banks Medusa's transposition
+//! buffers are built from, paper §III-A/Fig 4).
+//!
+//! Physical constraint enforced: each bank is a simple dual-port RAM —
+//! at most **one read and one write per bank per cycle** (exactly what a
+//! BRAM-18K in SDP mode provides). The interconnect models call
+//! [`BankedSram::new_cycle`] at the top of every tick; a second access to
+//! the same bank port within one cycle panics, catching any modelling
+//! bug that would require more physical ports than the paper's design
+//! instantiates.
+
+use crate::types::Word;
+
+#[derive(Debug)]
+pub struct BankedSram {
+    banks: usize,
+    depth: usize,
+    data: Vec<Word>,
+    /// Per-bank access flags for the current cycle.
+    read_used: Vec<bool>,
+    write_used: Vec<bool>,
+    /// Lifetime access counts (feeds utilization stats).
+    reads: u64,
+    writes: u64,
+}
+
+impl BankedSram {
+    pub fn new(banks: usize, depth: usize) -> Self {
+        assert!(banks >= 1 && depth >= 1);
+        BankedSram {
+            banks,
+            depth,
+            data: vec![0; banks * depth],
+            read_used: vec![false; banks],
+            write_used: vec![false; banks],
+            reads: 0,
+            writes: 0,
+        }
+    }
+
+    pub fn banks(&self) -> usize {
+        self.banks
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Reset the per-cycle port-usage flags. Owners call this once at the
+    /// start of each tick.
+    pub fn new_cycle(&mut self) {
+        self.read_used.fill(false);
+        self.write_used.fill(false);
+    }
+
+    #[inline]
+    pub fn read(&mut self, bank: usize, addr: usize) -> Word {
+        // Range errors are modelling bugs caught in debug/test builds;
+        // the port-conflict check is the physical constraint and stays on
+        // in release (it is one predictable branch on the hot path).
+        debug_assert!(bank < self.banks, "bank {bank} out of range");
+        debug_assert!(addr < self.depth, "addr {addr} out of range (depth {})", self.depth);
+        assert!(!self.read_used[bank], "second read on bank {bank} in one cycle");
+        self.read_used[bank] = true;
+        self.reads += 1;
+        self.data[bank * self.depth + addr]
+    }
+
+    #[inline]
+    pub fn write(&mut self, bank: usize, addr: usize, v: Word) {
+        debug_assert!(bank < self.banks, "bank {bank} out of range");
+        debug_assert!(addr < self.depth, "addr {addr} out of range (depth {})", self.depth);
+        assert!(!self.write_used[bank], "second write on bank {bank} in one cycle");
+        self.write_used[bank] = true;
+        self.writes += 1;
+        self.data[bank * self.depth + addr] = v;
+    }
+
+    /// Debug/testing peek that bypasses port accounting.
+    pub fn peek(&self, bank: usize, addr: usize) -> Word {
+        self.data[bank * self.depth + addr]
+    }
+
+    pub fn total_reads(&self) -> u64 {
+        self.reads
+    }
+
+    pub fn total_writes(&self) -> u64 {
+        self.writes
+    }
+
+    /// Storage bits given a word width — used by resource accounting
+    /// sanity tests.
+    pub fn bits(&self, word_width: usize) -> usize {
+        self.banks * self.depth * word_width
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_write_roundtrip() {
+        let mut s = BankedSram::new(4, 16);
+        s.new_cycle();
+        s.write(2, 7, 0xabcd);
+        s.new_cycle();
+        assert_eq!(s.read(2, 7), 0xabcd);
+        assert_eq!(s.peek(0, 0), 0);
+    }
+
+    #[test]
+    fn one_read_one_write_same_bank_same_cycle_ok() {
+        // Simple dual port: one read AND one write per cycle is legal.
+        let mut s = BankedSram::new(2, 8);
+        s.new_cycle();
+        s.write(1, 3, 42);
+        let _ = s.read(1, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "second read on bank")]
+    fn double_read_same_bank_panics() {
+        let mut s = BankedSram::new(2, 8);
+        s.new_cycle();
+        let _ = s.read(0, 0);
+        let _ = s.read(0, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "second write on bank")]
+    fn double_write_same_bank_panics() {
+        let mut s = BankedSram::new(2, 8);
+        s.new_cycle();
+        s.write(0, 0, 1);
+        s.write(0, 1, 2);
+    }
+
+    #[test]
+    fn parallel_banks_all_accessible_per_cycle() {
+        let mut s = BankedSram::new(8, 4);
+        s.new_cycle();
+        for b in 0..8 {
+            s.write(b, 0, b as Word);
+        }
+        s.new_cycle();
+        for b in 0..8 {
+            assert_eq!(s.read(b, 0), b as Word);
+        }
+        assert_eq!(s.total_writes(), 8);
+        assert_eq!(s.total_reads(), 8);
+    }
+
+    #[test]
+    fn bits_accounting() {
+        let s = BankedSram::new(32, 1024);
+        // The paper's Medusa read input buffer: 32 banks x 16b x 1024 deep
+        // = 512 Kib = 32 BRAM-18K.
+        assert_eq!(s.bits(16), 32 * 1024 * 16);
+    }
+}

@@ -1,0 +1,180 @@
+//! Data-width converters (paper §II-A): the baseline interconnect's
+//! per-port shims between the `W_line`-bit FIFO side and the `W_acc`-bit
+//! accelerator side.
+//!
+//! * [`Unpacker`] (read path): accepts one `W_line` line, emits its `N`
+//!   words one per cycle in increasing index order.
+//! * [`Packer`] (write path): accepts one `W_acc` word per cycle, emits a
+//!   full `W_line` line every `N` words.
+//!
+//! Each is the behavioural twin of the `W_acc x (N-1)` 2:1-mux structure
+//! whose cost the resource model charges (`fpga::resources`).
+
+use crate::types::{Line, Word};
+
+/// Line -> words, one word per cycle.
+#[derive(Debug)]
+pub struct Unpacker {
+    words_per_line: usize,
+    current: Option<Line>,
+    idx: usize,
+}
+
+impl Unpacker {
+    pub fn new(words_per_line: usize) -> Self {
+        assert!(words_per_line >= 1);
+        Unpacker { words_per_line, current: None, idx: 0 }
+    }
+
+    /// Can a new line be loaded? (Previous line fully drained.)
+    pub fn can_load(&self) -> bool {
+        self.current.is_none()
+    }
+
+    pub fn load(&mut self, line: Line) {
+        assert!(self.can_load(), "unpacker busy");
+        assert_eq!(line.num_words(), self.words_per_line);
+        self.current = Some(line);
+        self.idx = 0;
+    }
+
+    /// Is a word available this cycle?
+    pub fn has_word(&self) -> bool {
+        self.current.is_some()
+    }
+
+    /// Emit the next word (one per cycle enforced by the caller's tick
+    /// structure).
+    pub fn take_word(&mut self) -> Option<Word> {
+        let line = self.current.as_ref()?;
+        let w = line.word(self.idx);
+        self.idx += 1;
+        if self.idx == self.words_per_line {
+            self.current = None;
+            self.idx = 0;
+        }
+        Some(w)
+    }
+
+    /// Words remaining in the currently loaded line.
+    pub fn remaining(&self) -> usize {
+        if self.current.is_some() {
+            self.words_per_line - self.idx
+        } else {
+            0
+        }
+    }
+}
+
+/// Words -> line, one word per cycle in, one line out per `N` words.
+#[derive(Debug)]
+pub struct Packer {
+    words_per_line: usize,
+    acc: Vec<Word>,
+    ready_line: Option<Line>,
+}
+
+impl Packer {
+    pub fn new(words_per_line: usize) -> Self {
+        assert!(words_per_line >= 1);
+        Packer { words_per_line, acc: Vec::with_capacity(words_per_line), ready_line: None }
+    }
+
+    /// Can a word be accepted this cycle? Blocked only while a completed
+    /// line is waiting to be taken (single output register, as in the
+    /// baseline's converter).
+    pub fn can_accept(&self) -> bool {
+        self.ready_line.is_none() || self.acc.len() < self.words_per_line
+    }
+
+    pub fn accept(&mut self, w: Word) {
+        assert!(self.acc.len() < self.words_per_line, "packer accumulator full");
+        self.acc.push(w);
+        if self.acc.len() == self.words_per_line && self.ready_line.is_none() {
+            self.ready_line = Some(Line::from_words(std::mem::take(&mut self.acc)));
+        }
+    }
+
+    /// A full line is ready to hand to the FIFO.
+    pub fn has_line(&self) -> bool {
+        self.ready_line.is_some()
+    }
+
+    pub fn take_line(&mut self) -> Option<Line> {
+        let out = self.ready_line.take();
+        // If the accumulator filled while the output register was
+        // occupied, promote it now.
+        if self.acc.len() == self.words_per_line {
+            self.ready_line = Some(Line::from_words(std::mem::take(&mut self.acc)));
+        }
+        out
+    }
+
+    /// Words currently accumulated toward the next line.
+    pub fn pending_words(&self) -> usize {
+        self.acc.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unpacker_emits_words_in_order() {
+        let mut u = Unpacker::new(4);
+        u.load(Line::from_words(vec![10, 11, 12, 13]));
+        assert!(!u.can_load());
+        let got: Vec<Word> = (0..4).map(|_| u.take_word().unwrap()).collect();
+        assert_eq!(got, vec![10, 11, 12, 13]);
+        assert!(u.can_load());
+        assert_eq!(u.take_word(), None);
+    }
+
+    #[test]
+    fn unpacker_remaining_counts_down() {
+        let mut u = Unpacker::new(3);
+        assert_eq!(u.remaining(), 0);
+        u.load(Line::from_words(vec![1, 2, 3]));
+        assert_eq!(u.remaining(), 3);
+        u.take_word();
+        assert_eq!(u.remaining(), 2);
+    }
+
+    #[test]
+    fn packer_builds_lines() {
+        let mut p = Packer::new(4);
+        for w in [1u64, 2, 3, 4] {
+            assert!(p.can_accept());
+            p.accept(w);
+        }
+        assert!(p.has_line());
+        assert_eq!(p.take_line().unwrap(), Line::from_words(vec![1, 2, 3, 4]));
+        assert!(!p.has_line());
+    }
+
+    #[test]
+    fn packer_double_buffers_one_line() {
+        let mut p = Packer::new(2);
+        p.accept(1);
+        p.accept(2); // line 1 complete -> output register
+        assert!(p.has_line());
+        // Accumulator is free again while line 1 waits.
+        p.accept(3);
+        p.accept(4);
+        assert_eq!(p.take_line().unwrap(), Line::from_words(vec![1, 2]));
+        assert!(p.has_line(), "second line promoted on take");
+        assert_eq!(p.take_line().unwrap(), Line::from_words(vec![3, 4]));
+    }
+
+    #[test]
+    #[should_panic(expected = "packer accumulator full")]
+    fn packer_overflow_panics() {
+        let mut p = Packer::new(2);
+        p.accept(1);
+        p.accept(2);
+        p.accept(3); // output reg occupied AND accumulator full
+        p.accept(4);
+        p.accept(5);
+    }
+}

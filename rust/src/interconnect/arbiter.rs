@@ -1,0 +1,371 @@
+//! Memory request arbiter — shared by both interconnect designs (paper
+//! §IV: "both interconnects use the same request arbitration logic").
+//!
+//! Responsibilities:
+//!
+//! * queue per-port read/write burst requests from the layer processors;
+//! * **read credit control**: a read burst is only issued when the read
+//!   network has buffer space for every line of the burst (in-flight
+//!   lines included), so bursts can never back-pressure the DRAM
+//!   controller (§II-A1 / §III-C1 provisioning);
+//! * **write readiness**: a write burst is only issued once the port has
+//!   accumulated the full burst inside the write network (§III-C2 — this
+//!   requirement applies to the baseline too);
+//! * round-robin fairness across ports, alternating read/write grants;
+//! * stream issued write bursts' data lines toward the controller in
+//!   command order.
+
+use crate::interconnect::{ReadNetwork, WriteNetwork};
+use crate::sim::{Channel, Stats};
+use crate::types::{Line, LineAddr, PortId, ReadRequest, WriteRequest};
+use std::collections::VecDeque;
+
+/// A command crossing into the memory controller's clock domain.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MemCommand {
+    Read { port: PortId, addr: LineAddr, burst_len: usize },
+    Write { port: PortId, addr: LineAddr, burst_len: usize },
+}
+
+/// Arbitration policy (ablation knob; the paper uses plain fair sharing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Alternate read/write grant opportunities, round-robin within each.
+    RoundRobin,
+    /// Always grant reads first (reads are latency-critical for
+    /// prefetch-driven layer processors).
+    ReadPriority,
+}
+
+pub struct Arbiter {
+    read_q: Vec<VecDeque<ReadRequest>>,
+    write_q: Vec<VecDeque<WriteRequest>>,
+    /// Read lines issued to the controller but not yet delivered into the
+    /// read network (per port) — counted against network buffer space.
+    in_flight_read_lines: Vec<usize>,
+    /// Issued write bursts whose data lines still need to be streamed
+    /// from the write network to the controller, in command order.
+    issued_writes: VecDeque<(PortId, usize)>,
+    /// Write lines already spoken for by issued-but-not-yet-pulled bursts
+    /// (per port) — prevents double-issuing against the same data.
+    reserved_write_lines: Vec<usize>,
+    rr_read: usize,
+    rr_write: usize,
+    grant_writes_next: bool,
+    policy: Policy,
+    queue_cap: usize,
+}
+
+impl Arbiter {
+    pub fn new(read_ports: usize, write_ports: usize, policy: Policy) -> Self {
+        Arbiter {
+            read_q: (0..read_ports).map(|_| VecDeque::new()).collect(),
+            write_q: (0..write_ports).map(|_| VecDeque::new()).collect(),
+            in_flight_read_lines: vec![0; read_ports],
+            issued_writes: VecDeque::new(),
+            reserved_write_lines: vec![0; write_ports],
+            rr_read: 0,
+            rr_write: 0,
+            grant_writes_next: false,
+            policy,
+            queue_cap: 8,
+        }
+    }
+
+    /// Queue a read burst on behalf of a port. Returns false (and drops
+    /// nothing) if the port's request queue is full — the layer
+    /// processor retries next cycle, exactly like a stalled request
+    /// handshake.
+    pub fn submit_read(&mut self, r: ReadRequest) -> bool {
+        debug_assert!(r.burst_len >= 1);
+        let q = &mut self.read_q[r.port];
+        if q.len() >= self.queue_cap {
+            return false;
+        }
+        q.push_back(r);
+        true
+    }
+
+    pub fn submit_write(&mut self, r: WriteRequest) -> bool {
+        debug_assert!(r.burst_len >= 1);
+        let q = &mut self.write_q[r.port];
+        if q.len() >= self.queue_cap {
+            return false;
+        }
+        q.push_back(r);
+        true
+    }
+
+    /// Number of queued (not yet issued) requests.
+    pub fn pending_requests(&self) -> usize {
+        self.read_q.iter().map(|q| q.len()).sum::<usize>()
+            + self.write_q.iter().map(|q| q.len()).sum::<usize>()
+    }
+
+    /// Write bursts issued whose data is still streaming out.
+    pub fn writes_in_flight(&self) -> usize {
+        self.issued_writes.len()
+    }
+
+    /// The interface adapter calls this when a read line lands in the
+    /// read network (credit return).
+    pub fn on_read_line_delivered(&mut self, port: PortId) {
+        debug_assert!(self.in_flight_read_lines[port] > 0);
+        self.in_flight_read_lines[port] -= 1;
+    }
+
+    /// One fabric cycle: issue at most one command and stream at most one
+    /// write-data line.
+    pub fn tick(
+        &mut self,
+        rd_net: &dyn ReadNetwork,
+        wr_net: &mut dyn WriteNetwork,
+        cmd_ch: &mut Channel<MemCommand>,
+        wr_data_ch: &mut Channel<Line>,
+        stats: &mut Stats,
+    ) {
+        // --- Stream write data for the oldest issued burst (§III-C2
+        // guarantees the data is fully buffered, so this never stalls on
+        // the network side).
+        if let Some(&(port, remaining)) = self.issued_writes.front() {
+            if wr_data_ch.can_push() && wr_net.mem_lines_ready(port) > 0 {
+                let line = wr_net.mem_take_line(port).expect("ready line vanished");
+                wr_data_ch.push(line);
+                stats.bump("arbiter.write_lines_streamed");
+                self.reserved_write_lines[port] -= 1;
+                if remaining == 1 {
+                    self.issued_writes.pop_front();
+                } else {
+                    self.issued_writes.front_mut().unwrap().1 = remaining - 1;
+                }
+            }
+        }
+
+        // --- Issue one command.
+        if !cmd_ch.can_push() {
+            stats.bump("arbiter.cmd_channel_stall");
+            return;
+        }
+        let try_write_first = match self.policy {
+            Policy::RoundRobin => self.grant_writes_next,
+            Policy::ReadPriority => false,
+        };
+        let issued = if try_write_first {
+            self.try_issue_write(wr_net, cmd_ch, stats) || self.try_issue_read(rd_net, cmd_ch, stats)
+        } else {
+            self.try_issue_read(rd_net, cmd_ch, stats) || self.try_issue_write(wr_net, cmd_ch, stats)
+        };
+        if issued && self.policy == Policy::RoundRobin {
+            self.grant_writes_next = !self.grant_writes_next;
+        }
+    }
+
+    fn try_issue_read(
+        &mut self,
+        rd_net: &dyn ReadNetwork,
+        cmd_ch: &mut Channel<MemCommand>,
+        stats: &mut Stats,
+    ) -> bool {
+        let nports = self.read_q.len();
+        for k in 0..nports {
+            let p = (self.rr_read + k) % nports;
+            let Some(&req) = self.read_q[p].front() else { continue };
+            // Credit check: space for the whole burst beyond lines already
+            // in flight (§III-C1).
+            let free = rd_net.port_free_lines(p);
+            if free < self.in_flight_read_lines[p] + req.burst_len {
+                stats.bump("arbiter.read_credit_stall");
+                continue;
+            }
+            self.read_q[p].pop_front();
+            self.in_flight_read_lines[p] += req.burst_len;
+            cmd_ch.push(MemCommand::Read { port: p, addr: req.addr, burst_len: req.burst_len });
+            stats.bump("arbiter.reads_issued");
+            self.rr_read = p + 1;
+            return true;
+        }
+        false
+    }
+
+    fn try_issue_write(
+        &mut self,
+        wr_net: &dyn WriteNetwork,
+        cmd_ch: &mut Channel<MemCommand>,
+        stats: &mut Stats,
+    ) -> bool {
+        let nports = self.write_q.len();
+        for k in 0..nports {
+            let p = (self.rr_write + k) % nports;
+            let Some(&req) = self.write_q[p].front() else { continue };
+            // §III-C2: only issue once the full burst is buffered (and not
+            // already reserved by a previously issued burst).
+            let available = wr_net.mem_lines_ready(p).saturating_sub(self.reserved_write_lines[p]);
+            if available < req.burst_len {
+                stats.bump("arbiter.write_data_stall");
+                continue;
+            }
+            self.write_q[p].pop_front();
+            self.reserved_write_lines[p] += req.burst_len;
+            self.issued_writes.push_back((p, req.burst_len));
+            cmd_ch.push(MemCommand::Write { port: p, addr: req.addr, burst_len: req.burst_len });
+            stats.bump("arbiter.writes_issued");
+            self.rr_write = p + 1;
+            return true;
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interconnect::baseline::{BaselineReadNetwork, BaselineWriteNetwork};
+    use crate::types::Geometry;
+
+    fn geom() -> Geometry {
+        Geometry { w_line: 64, w_acc: 16, read_ports: 4, write_ports: 4, max_burst: 4 }
+    }
+
+    #[test]
+    fn read_issued_only_with_credit() {
+        let g = geom();
+        let rd = BaselineReadNetwork::new(g);
+        let mut wr = BaselineWriteNetwork::new(g);
+        let mut arb = Arbiter::new(4, 4, Policy::RoundRobin);
+        let mut cmd = Channel::new("cmd", 4);
+        let mut data = Channel::new("wdata", 4);
+        let mut stats = Stats::new();
+
+        // Burst larger than the network's per-port capacity: never issued.
+        assert!(arb.submit_read(ReadRequest { port: 0, addr: 0, burst_len: 5 }));
+        arb.tick(&rd, &mut wr, &mut cmd, &mut data, &mut stats);
+        cmd.commit();
+        assert!(!cmd.can_pop(), "over-capacity burst must stall");
+        assert_eq!(stats.get("arbiter.read_credit_stall"), 1);
+
+        // In-capacity burst issues.
+        let mut arb = Arbiter::new(4, 4, Policy::RoundRobin);
+        assert!(arb.submit_read(ReadRequest { port: 1, addr: 16, burst_len: 4 }));
+        arb.tick(&rd, &mut wr, &mut cmd, &mut data, &mut stats);
+        cmd.commit();
+        assert_eq!(
+            cmd.pop(),
+            Some(MemCommand::Read { port: 1, addr: 16, burst_len: 4 })
+        );
+    }
+
+    #[test]
+    fn credit_returns_on_delivery() {
+        let g = geom();
+        let rd = BaselineReadNetwork::new(g);
+        let mut wr = BaselineWriteNetwork::new(g);
+        let mut arb = Arbiter::new(4, 4, Policy::RoundRobin);
+        let mut cmd = Channel::new("cmd", 4);
+        let mut data = Channel::new("wdata", 4);
+        let mut stats = Stats::new();
+
+        arb.submit_read(ReadRequest { port: 0, addr: 0, burst_len: 4 });
+        arb.submit_read(ReadRequest { port: 0, addr: 4, burst_len: 4 });
+        arb.tick(&rd, &mut wr, &mut cmd, &mut data, &mut stats);
+        cmd.commit();
+        assert_eq!(stats.get("arbiter.reads_issued"), 1);
+        // Second burst stalls: 4 lines already in flight.
+        arb.tick(&rd, &mut wr, &mut cmd, &mut data, &mut stats);
+        cmd.commit();
+        assert_eq!(stats.get("arbiter.reads_issued"), 1);
+        // Lines delivered (and instantly drained in this fake) return
+        // credit. Simulate 4 deliveries without touching the network —
+        // free space in the real flow comes from the network; here the
+        // network is empty so port_free_lines is already max. The gate was
+        // in_flight, which on_read_line_delivered releases.
+        for _ in 0..4 {
+            arb.on_read_line_delivered(0);
+        }
+        arb.tick(&rd, &mut wr, &mut cmd, &mut data, &mut stats);
+        cmd.commit();
+        assert_eq!(stats.get("arbiter.reads_issued"), 2);
+    }
+
+    #[test]
+    fn write_waits_for_accumulated_data() {
+        let g = geom();
+        let n = g.words_per_line();
+        let rd = BaselineReadNetwork::new(g);
+        let mut wr = BaselineWriteNetwork::new(g);
+        let mut arb = Arbiter::new(4, 4, Policy::RoundRobin);
+        let mut cmd = Channel::new("cmd", 4);
+        let mut data = Channel::new("wdata", 8);
+        let mut stats = Stats::new();
+
+        arb.submit_write(WriteRequest { port: 2, addr: 8, burst_len: 2 });
+        // No data yet: stall.
+        wr.tick(0, &mut stats);
+        arb.tick(&rd, &mut wr, &mut cmd, &mut data, &mut stats);
+        cmd.commit();
+        assert_eq!(stats.get("arbiter.writes_issued"), 0);
+
+        // Push 2 lines worth of words into port 2.
+        let mut c = 1u64;
+        for i in 0..2 * n {
+            wr.tick(c, &mut stats);
+            wr.port_push_word(2, i as u64);
+            c += 1;
+        }
+        for _ in 0..4 {
+            wr.tick(c, &mut stats);
+            c += 1;
+        }
+        assert_eq!(wr.mem_lines_ready(2), 2);
+        arb.tick(&rd, &mut wr, &mut cmd, &mut data, &mut stats);
+        cmd.commit();
+        assert_eq!(
+            cmd.pop(),
+            Some(MemCommand::Write { port: 2, addr: 8, burst_len: 2 })
+        );
+        // Data lines stream out over the following cycles.
+        for _ in 0..4 {
+            wr.tick(c, &mut stats);
+            arb.tick(&rd, &mut wr, &mut cmd, &mut data, &mut stats);
+            data.commit();
+            cmd.commit();
+            c += 1;
+        }
+        assert_eq!(data.len(), 2, "both burst lines streamed");
+        assert_eq!(arb.writes_in_flight(), 0);
+    }
+
+    #[test]
+    fn round_robin_is_fair_across_ports() {
+        let g = geom();
+        let rd = BaselineReadNetwork::new(g);
+        let mut wr = BaselineWriteNetwork::new(g);
+        let mut arb = Arbiter::new(4, 4, Policy::RoundRobin);
+        let mut cmd = Channel::new("cmd", 16);
+        let mut data = Channel::new("wdata", 4);
+        let mut stats = Stats::new();
+        for p in 0..4 {
+            arb.submit_read(ReadRequest { port: p, addr: p as u64, burst_len: 1 });
+        }
+        let mut order = Vec::new();
+        for _ in 0..4 {
+            arb.tick(&rd, &mut wr, &mut cmd, &mut data, &mut stats);
+            cmd.commit();
+            if let Some(MemCommand::Read { port, .. }) = cmd.pop() {
+                order.push(port);
+            }
+        }
+        assert_eq!(order, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn queue_capacity_backpressures_submitter() {
+        let mut arb = Arbiter::new(1, 1, Policy::RoundRobin);
+        let mut accepted = 0;
+        for i in 0..20 {
+            if arb.submit_read(ReadRequest { port: 0, addr: i, burst_len: 1 }) {
+                accepted += 1;
+            }
+        }
+        assert_eq!(accepted, 8, "queue cap must bound outstanding requests");
+    }
+}

@@ -1,0 +1,10 @@
+//! The traditional ("baseline") interconnect data-transfer networks the
+//! paper compares against (paper §II, Figs 1–2), representative of
+//! mainstream mux/demux interconnects (Xilinx AXI Interconnect, Altera
+//! Qsys).
+
+mod read;
+mod write;
+
+pub use read::BaselineReadNetwork;
+pub use write::BaselineWriteNetwork;

@@ -1,0 +1,264 @@
+//! Baseline memory-read data transfer network (paper §II-A1, Fig 1).
+//!
+//! A 1-to-N demux routes each incoming `W_line` line from the memory
+//! controller into the destination port's FIFO; each FIFO is `W_line`
+//! wide and `MaxBurstLen` deep (large enough to hold the largest burst a
+//! port can request, so bursts never back-pressure the controller); each
+//! FIFO feeds a data-width converter presenting the narrow `W_acc` port.
+
+use crate::hw::{BoundedFifo, Unpacker};
+use crate::interconnect::ReadNetwork;
+use crate::sim::Stats;
+use crate::types::{Geometry, Line, PortId, TaggedLine, Word};
+
+struct PortLane {
+    fifo: BoundedFifo<Line>,
+    conv: Unpacker,
+    /// Per-cycle guard: at most one word popped per port per cycle.
+    word_taken_this_cycle: bool,
+}
+
+pub struct BaselineReadNetwork {
+    geom: Geometry,
+    lanes: Vec<PortLane>,
+    /// Per-cycle guard: the memory interface delivers at most one line.
+    delivered_this_cycle: bool,
+    cycle: u64,
+}
+
+impl BaselineReadNetwork {
+    pub fn new(geom: Geometry) -> Self {
+        geom.validate().expect("invalid geometry");
+        let n = geom.words_per_line();
+        let lanes = (0..geom.read_ports)
+            .map(|_| PortLane {
+                fifo: BoundedFifo::new(geom.max_burst),
+                conv: Unpacker::new(n),
+                word_taken_this_cycle: false,
+            })
+            .collect();
+        BaselineReadNetwork { geom, lanes, delivered_this_cycle: false, cycle: 0 }
+    }
+
+    /// Peak FIFO occupancy across ports (provisioning check).
+    pub fn max_fifo_high_water(&self) -> usize {
+        self.lanes.iter().map(|l| l.fifo.high_water()).max().unwrap_or(0)
+    }
+}
+
+impl ReadNetwork for BaselineReadNetwork {
+    fn geometry(&self) -> &Geometry {
+        &self.geom
+    }
+
+    fn mem_can_deliver(&self, port: PortId) -> bool {
+        !self.delivered_this_cycle && !self.lanes[port].fifo.is_full()
+    }
+
+    fn mem_deliver(&mut self, tl: TaggedLine) {
+        assert!(!self.delivered_this_cycle, "second line on the memory interface in one cycle");
+        assert_eq!(tl.line.num_words(), self.geom.words_per_line());
+        self.delivered_this_cycle = true;
+        self.lanes[tl.port].fifo.push(tl.line);
+    }
+
+    fn port_free_lines(&self, port: PortId) -> usize {
+        // Space for future lines: FIFO free slots. The converter's
+        // in-flight line is already drained from the FIFO.
+        self.lanes[port].fifo.free()
+    }
+
+    fn port_word_available(&self, port: PortId) -> bool {
+        let l = &self.lanes[port];
+        !l.word_taken_this_cycle && l.conv.has_word()
+    }
+
+    fn port_take_word(&mut self, port: PortId) -> Option<Word> {
+        let l = &mut self.lanes[port];
+        assert!(!l.word_taken_this_cycle, "port {port} popped twice in one cycle");
+        let w = l.conv.take_word()?;
+        l.word_taken_this_cycle = true;
+        Some(w)
+    }
+
+    fn tick(&mut self, cycle: u64, stats: &mut Stats) {
+        self.cycle = cycle;
+        self.delivered_this_cycle = false;
+        for lane in self.lanes.iter_mut() {
+            lane.word_taken_this_cycle = false;
+            // FIFO -> converter refill: one line transfer per port per
+            // cycle, only when the converter has fully drained.
+            if lane.conv.can_load() {
+                if let Some(line) = lane.fifo.pop() {
+                    lane.conv.load(line);
+                    stats.bump("baseline_read.lines_into_converter");
+                }
+            }
+        }
+    }
+
+    fn nominal_latency(&self) -> usize {
+        // Demux register + FIFO fall-through + converter load.
+        2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Line;
+
+    fn geom4() -> Geometry {
+        Geometry { w_line: 64, w_acc: 16, read_ports: 4, write_ports: 4, max_burst: 4 }
+    }
+
+    fn line_for(port: usize, tag: u64, n: usize) -> Line {
+        Line::from_words((0..n as u64).map(|y| (port as u64) << 32 | tag << 8 | y).collect())
+    }
+
+    #[test]
+    fn single_line_delivered_in_order() {
+        let g = geom4();
+        let mut net = BaselineReadNetwork::new(g);
+        let mut stats = Stats::new();
+        let n = g.words_per_line();
+        net.tick(0, &mut stats);
+        net.mem_deliver(TaggedLine { port: 1, line: line_for(1, 0, n) });
+        let mut got = Vec::new();
+        for c in 1..20 {
+            net.tick(c, &mut stats);
+            if net.port_word_available(1) {
+                got.push(net.port_take_word(1).unwrap());
+            }
+        }
+        assert_eq!(got, line_for(1, 0, n).words().to_vec());
+    }
+
+    #[test]
+    fn words_only_appear_on_destination_port() {
+        let g = geom4();
+        let mut net = BaselineReadNetwork::new(g);
+        let mut stats = Stats::new();
+        net.tick(0, &mut stats);
+        net.mem_deliver(TaggedLine { port: 2, line: line_for(2, 0, 4) });
+        for c in 1..10 {
+            net.tick(c, &mut stats);
+            for p in [0usize, 1, 3] {
+                assert!(!net.port_word_available(p), "port {p} should stay empty");
+            }
+            while net.port_word_available(2) {
+                net.port_take_word(2);
+            }
+        }
+    }
+
+    #[test]
+    fn full_bandwidth_one_line_per_cycle() {
+        // With all ports draining, the network must accept one line per
+        // cycle indefinitely (§II-A1: "the demux can accept a new input
+        // from the memory controller on every cycle").
+        let g = geom4();
+        let n = g.words_per_line();
+        let mut net = BaselineReadNetwork::new(g);
+        let mut stats = Stats::new();
+        let total_lines = 64usize;
+        let mut delivered = 0usize;
+        let mut popped = vec![0usize; g.read_ports];
+        for c in 0..10_000u64 {
+            net.tick(c, &mut stats);
+            // Round-robin destination: every port gets every 4th line, so
+            // each port consumes words at exactly rate 1 (4 ports x 1
+            // word/cycle = 1 line/cycle aggregate).
+            if delivered < total_lines {
+                let port = delivered % g.read_ports;
+                if net.mem_can_deliver(port) {
+                    net.mem_deliver(TaggedLine { port, line: line_for(port, delivered as u64, n) });
+                    delivered += 1;
+                }
+            }
+            for p in 0..g.read_ports {
+                if net.port_word_available(p) {
+                    net.port_take_word(p).unwrap();
+                    popped[p] += 1;
+                }
+            }
+            if popped.iter().sum::<usize>() == total_lines * n {
+                // Aggregate throughput check: popping 64 lines x 4 words
+                // at 4 words/cycle needs >= 64 cycles; allow small
+                // pipeline fill slack.
+                assert!(c < (total_lines as u64 + 16), "took too long: {c} cycles");
+                return;
+            }
+        }
+        panic!("did not drain: popped {popped:?} delivered {delivered}");
+    }
+
+    #[test]
+    fn burst_fits_without_backpressure() {
+        // A full MaxBurst to one idle port must be absorbed at one line
+        // per cycle (FIFO is provisioned for the largest burst, §II-A1).
+        let g = geom4();
+        let n = g.words_per_line();
+        let mut net = BaselineReadNetwork::new(g);
+        let mut stats = Stats::new();
+        for c in 0..g.max_burst as u64 {
+            net.tick(c, &mut stats);
+            assert!(net.mem_can_deliver(0), "burst line {c} back-pressured");
+            net.mem_deliver(TaggedLine { port: 0, line: line_for(0, c, n) });
+        }
+        // One line is moved into the converter each refill, so high water
+        // stays within the provisioned FIFO depth.
+        assert!(net.max_fifo_high_water() <= g.max_burst);
+    }
+
+    #[test]
+    fn latency_is_small_constant() {
+        let g = geom4();
+        let n = g.words_per_line();
+        let mut net = BaselineReadNetwork::new(g);
+        let mut stats = Stats::new();
+        net.tick(0, &mut stats);
+        net.mem_deliver(TaggedLine { port: 0, line: line_for(0, 7, n) });
+        let mut first_word_cycle = None;
+        for c in 1..10 {
+            net.tick(c, &mut stats);
+            if net.port_word_available(0) {
+                first_word_cycle = Some(c);
+                break;
+            }
+        }
+        let lat = first_word_cycle.expect("word never arrived") - 0;
+        assert!(lat as usize <= net.nominal_latency(), "latency {lat} > nominal");
+    }
+
+    #[test]
+    #[should_panic(expected = "second line on the memory interface")]
+    fn two_lines_same_cycle_panics() {
+        let g = geom4();
+        let n = g.words_per_line();
+        let mut net = BaselineReadNetwork::new(g);
+        let mut stats = Stats::new();
+        net.tick(0, &mut stats);
+        net.mem_deliver(TaggedLine { port: 0, line: line_for(0, 0, n) });
+        net.mem_deliver(TaggedLine { port: 1, line: line_for(1, 0, n) });
+    }
+
+    #[test]
+    fn irregular_port_count_fewer_ports_than_words() {
+        // §III-G / §IV-D: e.g. 3 ports on a 64-bit interface (4 words).
+        let g = Geometry { w_line: 64, w_acc: 16, read_ports: 3, write_ports: 3, max_burst: 2 };
+        let n = g.words_per_line();
+        let mut net = BaselineReadNetwork::new(g);
+        let mut stats = Stats::new();
+        net.tick(0, &mut stats);
+        net.mem_deliver(TaggedLine { port: 2, line: line_for(2, 1, n) });
+        let mut got = Vec::new();
+        for c in 1..20 {
+            net.tick(c, &mut stats);
+            if net.port_word_available(2) {
+                got.push(net.port_take_word(2).unwrap());
+            }
+        }
+        assert_eq!(got.len(), n);
+    }
+}

@@ -1,0 +1,228 @@
+//! Traffic-driving harness: saturate a data-transfer network and measure
+//! cycles. Used by the benchmark targets, the property tests, and the
+//! integration suite — one implementation of "drive this network at full
+//! rate" shared everywhere.
+
+use crate::interconnect::{ReadNetwork, WriteNetwork};
+use crate::sim::Stats;
+use crate::types::{Geometry, Line, TaggedLine, Word};
+use crate::util::Prng;
+
+/// Outcome of a saturation run.
+#[derive(Clone, Copy, Debug)]
+pub struct DriveResult {
+    pub cycles: u64,
+    pub lines_moved: u64,
+    pub words_moved: u64,
+}
+
+impl DriveResult {
+    /// Aggregate lines per cycle (1.0 = full DRAM interface bandwidth).
+    pub fn lines_per_cycle(&self) -> f64 {
+        self.lines_moved as f64 / self.cycles as f64
+    }
+}
+
+/// Generate `total` lines round-robin across ports with seeded content.
+pub fn gen_lines(geom: &Geometry, total: usize, seed: u64) -> Vec<TaggedLine> {
+    let n = geom.words_per_line();
+    let mut p = Prng::new(seed);
+    (0..total)
+        .map(|i| TaggedLine {
+            port: i % geom.read_ports,
+            line: Line::from_words(
+                (0..n).map(|_| p.next_u64() & geom.word_mask()).collect(),
+            ),
+        })
+        .collect()
+}
+
+/// Push `lines` through a read network as fast as it accepts them, popping
+/// every port every cycle. Panics if the network stalls for 10k cycles.
+/// Returns the measured totals and (optionally) the received streams.
+pub fn drive_read(
+    net: &mut dyn ReadNetwork,
+    lines: &[TaggedLine],
+    collect: bool,
+) -> (DriveResult, Vec<Vec<Word>>) {
+    let geom = *net.geometry();
+    let n = geom.words_per_line();
+    let total_words = lines.len() * n;
+    let mut stats = Stats::new();
+    let mut got: Vec<Vec<Word>> = vec![Vec::new(); geom.read_ports];
+    let mut next = 0usize;
+    let mut popped = 0usize;
+    let mut cycles = 0u64;
+    let mut idle = 0u32;
+    while popped < total_words {
+        net.tick(cycles, &mut stats);
+        let mut progress = false;
+        if next < lines.len() && net.mem_can_deliver(lines[next].port) {
+            net.mem_deliver(lines[next].clone());
+            next += 1;
+            progress = true;
+        }
+        for p in 0..geom.read_ports {
+            if net.port_word_available(p) {
+                let w = net.port_take_word(p).unwrap();
+                if collect {
+                    got[p].push(w);
+                }
+                popped += 1;
+                progress = true;
+            }
+        }
+        cycles += 1;
+        idle = if progress { 0 } else { idle + 1 };
+        assert!(idle < 10_000, "read network stalled at {popped}/{total_words} words");
+    }
+    (DriveResult { cycles, lines_moved: lines.len() as u64, words_moved: popped as u64 }, got)
+}
+
+/// Generate the per-port word streams `drive_write` pushes (exposed so
+/// benchmarks can hoist generation out of the timed region).
+pub fn gen_write_streams(geom: &Geometry, lines_per_port: usize, seed: u64) -> Vec<Vec<Word>> {
+    let n = geom.words_per_line();
+    let mut prng = Prng::new(seed);
+    (0..geom.write_ports)
+        .map(|_| (0..lines_per_port * n).map(|_| prng.next_u64() & geom.word_mask()).collect())
+        .collect()
+}
+
+/// Push `lines_per_port` lines of words into every write port, draining
+/// completed lines round-robin on the memory side.
+pub fn drive_write(
+    net: &mut dyn WriteNetwork,
+    lines_per_port: usize,
+    seed: u64,
+    collect: bool,
+) -> (DriveResult, Vec<Vec<Line>>) {
+    let streams = gen_write_streams(net.geometry(), lines_per_port, seed);
+    drive_write_streams(net, &streams, collect)
+}
+
+/// `drive_write` over pre-generated streams (each stream must be a whole
+/// number of lines).
+pub fn drive_write_streams(
+    net: &mut dyn WriteNetwork,
+    streams: &[Vec<Word>],
+    collect: bool,
+) -> (DriveResult, Vec<Vec<Line>>) {
+    let geom = *net.geometry();
+    let n = geom.words_per_line();
+    assert_eq!(streams.len(), geom.write_ports);
+    let lines_per_port = streams[0].len() / n;
+    let mut cursors: Vec<usize> = vec![0; geom.write_ports];
+    let total = lines_per_port * geom.write_ports;
+    let mut stats = Stats::new();
+    let mut got: Vec<Vec<Line>> = vec![Vec::new(); geom.write_ports];
+    let mut taken = 0usize;
+    let mut cycles = 0u64;
+    let mut rr = 0usize;
+    let mut idle = 0u32;
+    while taken < total {
+        net.tick(cycles, &mut stats);
+        let mut progress = false;
+        for k in 0..geom.write_ports {
+            let p = (rr + k) % geom.write_ports;
+            if net.mem_lines_ready(p) > 0 {
+                let line = net.mem_take_line(p).unwrap();
+                if collect {
+                    got[p].push(line);
+                }
+                taken += 1;
+                rr = p + 1;
+                progress = true;
+                break;
+            }
+        }
+        for (p, cur) in cursors.iter_mut().enumerate() {
+            if *cur < streams[p].len() && net.port_can_accept(p) {
+                net.port_push_word(p, streams[p][*cur]);
+                *cur += 1;
+                progress = true;
+            }
+        }
+        cycles += 1;
+        idle = if progress { 0 } else { idle + 1 };
+        assert!(idle < 10_000, "write network stalled at {taken}/{total} lines");
+    }
+    (
+        DriveResult { cycles, lines_moved: taken as u64, words_moved: (taken * n) as u64 },
+        got,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interconnect::{build_read_network, build_write_network, Design};
+
+    fn geom() -> Geometry {
+        Geometry { w_line: 128, w_acc: 16, read_ports: 8, write_ports: 8, max_burst: 8 }
+    }
+
+    #[test]
+    fn drive_read_reaches_full_bandwidth() {
+        for design in [Design::Baseline, Design::Medusa] {
+            let mut net = build_read_network(design, geom());
+            let lines = gen_lines(&geom(), 256, 1);
+            let (res, _) = drive_read(net.as_mut(), &lines, false);
+            assert!(
+                res.lines_per_cycle() > 0.85,
+                "{design:?}: {:.3} lines/cycle",
+                res.lines_per_cycle()
+            );
+        }
+    }
+
+    #[test]
+    fn drive_write_reaches_full_bandwidth() {
+        for design in [Design::Baseline, Design::Medusa] {
+            let mut net = build_write_network(design, geom());
+            let (res, _) = drive_write(net.as_mut(), 32, 2, false);
+            assert!(
+                res.lines_per_cycle() > 0.85,
+                "{design:?}: {:.3} lines/cycle",
+                res.lines_per_cycle()
+            );
+        }
+    }
+
+    #[test]
+    fn read_data_integrity_all_designs() {
+        let g = geom();
+        let lines = gen_lines(&g, 64, 3);
+        for design in [Design::Baseline, Design::Medusa, Design::Axis] {
+            let mut net = build_read_network(design, g);
+            let (_, got) = drive_read(net.as_mut(), &lines, true);
+            for p in 0..g.read_ports {
+                let expect: Vec<Word> = lines
+                    .iter()
+                    .filter(|l| l.port == p)
+                    .flat_map(|l| l.line.words().to_vec())
+                    .collect();
+                assert_eq!(got[p], expect, "{design:?} port {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn write_data_integrity_all_designs() {
+        let g = geom();
+        for design in [Design::Baseline, Design::Medusa, Design::Axis] {
+            let mut net = build_write_network(design, g);
+            let (_, got) = drive_write(net.as_mut(), 8, 4, true);
+            // Recreate the pushed streams with the same PRNG.
+            let n = g.words_per_line();
+            let mut prng = Prng::new(4);
+            for p in 0..g.write_ports {
+                let words: Vec<Word> =
+                    (0..8 * n).map(|_| prng.next_u64() & g.word_mask()).collect();
+                let flat: Vec<Word> =
+                    got[p].iter().flat_map(|l| l.words().to_vec()).collect();
+                assert_eq!(flat, words, "{design:?} port {p}");
+            }
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! The Medusa transposition-based interconnect (paper §III, Figs 3–5).
+//!
+//! Instead of routing full-bandwidth lines through wide demuxes/muxes,
+//! Medusa *transposes*: memory lines land in a deep, banked input buffer
+//! (one `W_acc`-wide bank per word index, per-port address regions); a
+//! shared barrel rotator moves one diagonal of words per cycle into a
+//! banked output buffer laid out per-port. All parts operate on
+//! `W_line` bits per cycle, so full DRAM bandwidth is preserved and
+//! statically, evenly partitioned across the ports.
+//!
+//! ## Transposition schedule (read direction, paper Fig 4)
+//!
+//! Word `(x, y)` = word index `y` of a line destined to port `x`, stored
+//! in input-buffer **bank `y`** at the address of `x`'s head line slot.
+//! On fabric cycle `c` (`rot = c mod N`):
+//!
+//! * each *active* port `x` reads word index `y = (x + c) mod N`, i.e.
+//!   input bank `(x + c) mod N` — a diagonal; banks are touched at most
+//!   once;
+//! * the shared rotator left-rotates the diagonal by `rot`, landing the
+//!   word for port `j` at vector position `j`;
+//! * output bank `j` (one bank per port) stores it at word address
+//!   `(j + c) mod N` of the port's fill half.
+//!
+//! A line finishes after `N` participating cycles — the constant §III-E
+//! latency. Ports join and leave the schedule independently (§III-F);
+//! the global cycle counter keeps every port's read index aligned with
+//! the single shared rotation control.
+
+mod read;
+mod write;
+
+pub use read::MedusaReadNetwork;
+pub use write::MedusaWriteNetwork;
+
+/// Configuration knobs beyond the geometry (ablations).
+#[derive(Clone, Copy, Debug)]
+pub struct MedusaTuning {
+    /// Extra pipeline stages in the rotation unit (0 = single-cycle
+    /// combinational rotation, the default; `ceil(log2 N)` = fully
+    /// pipelined as in Fig 5). Pipelining raises achievable frequency at
+    /// the cost of `stages` extra cycles of latency.
+    pub rotator_stages: usize,
+}
+
+impl Default for MedusaTuning {
+    fn default() -> Self {
+        MedusaTuning { rotator_stages: 0 }
+    }
+}

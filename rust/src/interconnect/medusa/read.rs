@@ -1,0 +1,555 @@
+//! Medusa memory-read data transfer network (paper §III-A1, Figs 3a/4).
+
+use super::MedusaTuning;
+use crate::hw::BankedSram;
+use crate::interconnect::ReadNetwork;
+use crate::sim::Stats;
+use crate::types::{Geometry, PortId, TaggedLine, Word};
+use std::collections::VecDeque;
+
+/// Per-port control state: head/tail pointers over the port's input
+/// buffer region (§III-C1) plus double-buffer bookkeeping on the output
+/// side (Fig 3a: "buffers next to the DNN accelerator are double
+/// buffered").
+#[derive(Debug)]
+struct PortCtl {
+    /// Lines currently resident in the port's input region (including the
+    /// one being transposed).
+    in_count: usize,
+    /// Input region slot of the line currently/next being transposed.
+    head: usize,
+    /// Input region slot the next arriving line will occupy.
+    tail: usize,
+    /// Words of the head line already sent through the rotator.
+    done_words: usize,
+    /// Head line is mid-transposition.
+    active: bool,
+    /// Output half currently being filled by the rotator.
+    fill_half: usize,
+    /// Output half currently being drained by the port.
+    drain_half: usize,
+    /// Which output halves hold a complete line.
+    half_full: [bool; 2],
+    /// Words already drained from `drain_half`.
+    drain_idx: usize,
+    /// Per-cycle pop guard.
+    word_taken_this_cycle: bool,
+    /// Cycle at which each resident line arrived (latency accounting).
+    arrival_cycles: VecDeque<u64>,
+}
+
+impl PortCtl {
+    fn new() -> Self {
+        PortCtl {
+            in_count: 0,
+            head: 0,
+            tail: 0,
+            done_words: 0,
+            active: false,
+            fill_half: 0,
+            drain_half: 0,
+            half_full: [false; 2],
+            drain_idx: 0,
+            word_taken_this_cycle: false,
+            arrival_cycles: VecDeque::new(),
+        }
+    }
+}
+
+/// A completed fill waiting for the (ablation-only) pipelined rotator to
+/// flush before the half becomes visible to the port.
+#[derive(Debug)]
+struct PendingHalf {
+    port: PortId,
+    half: usize,
+    ready_cycle: u64,
+}
+
+pub struct MedusaReadNetwork {
+    geom: Geometry,
+    tuning: MedusaTuning,
+    /// N banks (one per word index), W_acc wide, `ports * max_burst` deep.
+    input: BankedSram,
+    /// One bank per port, 2 * N deep (double buffer).
+    output: BankedSram,
+    ports: Vec<PortCtl>,
+    pending_halves: VecDeque<PendingHalf>,
+    delivered_this_cycle: bool,
+    cycle: u64,
+}
+
+impl MedusaReadNetwork {
+    pub fn new(geom: Geometry) -> Self {
+        Self::with_tuning(geom, MedusaTuning::default())
+    }
+
+    pub fn with_tuning(geom: Geometry, tuning: MedusaTuning) -> Self {
+        geom.validate().expect("invalid geometry");
+        let n = geom.words_per_line();
+        MedusaReadNetwork {
+            geom,
+            tuning,
+            input: BankedSram::new(n, geom.read_ports * geom.max_burst),
+            output: BankedSram::new(geom.read_ports, 2 * n),
+            ports: (0..geom.read_ports).map(|_| PortCtl::new()).collect(),
+            pending_halves: VecDeque::new(),
+            delivered_this_cycle: false,
+            cycle: 0,
+        }
+    }
+
+    fn n(&self) -> usize {
+        self.geom.words_per_line()
+    }
+
+    /// Input-region base address for a port.
+    fn region(&self, port: PortId) -> usize {
+        port * self.geom.max_burst
+    }
+}
+
+impl ReadNetwork for MedusaReadNetwork {
+    fn geometry(&self) -> &Geometry {
+        &self.geom
+    }
+
+    fn mem_can_deliver(&self, port: PortId) -> bool {
+        !self.delivered_this_cycle && self.ports[port].in_count < self.geom.max_burst
+    }
+
+    fn mem_deliver(&mut self, tl: TaggedLine) {
+        assert!(!self.delivered_this_cycle, "second line on the memory interface in one cycle");
+        let n = self.n();
+        assert_eq!(tl.line.num_words(), n);
+        let p = tl.port;
+        assert!(self.ports[p].in_count < self.geom.max_burst, "input region overflow, port {p}");
+        self.delivered_this_cycle = true;
+        let slot = self.region(p) + self.ports[p].tail;
+        // The W_line line is written across all N banks in one cycle
+        // (word y -> bank y), at the port's tail slot address.
+        for y in 0..n {
+            self.input.write(y, slot, tl.line.word(y) & self.geom.word_mask());
+        }
+        let ctl = &mut self.ports[p];
+        ctl.tail = (ctl.tail + 1) % self.geom.max_burst;
+        ctl.in_count += 1;
+        ctl.arrival_cycles.push_back(self.cycle);
+    }
+
+    fn port_free_lines(&self, port: PortId) -> usize {
+        self.geom.max_burst - self.ports[port].in_count
+    }
+
+    fn port_word_available(&self, port: PortId) -> bool {
+        let c = &self.ports[port];
+        !c.word_taken_this_cycle && c.half_full[c.drain_half]
+    }
+
+    fn port_take_word(&mut self, port: PortId) -> Option<Word> {
+        let n = self.n();
+        let ctl = &mut self.ports[port];
+        assert!(!ctl.word_taken_this_cycle, "port {port} popped twice in one cycle");
+        if !ctl.half_full[ctl.drain_half] {
+            return None;
+        }
+        let addr = ctl.drain_half * n + ctl.drain_idx;
+        let w = self.output.read(port, addr);
+        ctl.word_taken_this_cycle = true;
+        ctl.drain_idx += 1;
+        if ctl.drain_idx == n {
+            ctl.half_full[ctl.drain_half] = false;
+            ctl.drain_half = 1 - ctl.drain_half;
+            ctl.drain_idx = 0;
+        }
+        Some(w)
+    }
+
+    fn tick(&mut self, cycle: u64, stats: &mut Stats) {
+        self.cycle = cycle;
+        self.delivered_this_cycle = false;
+        self.input.new_cycle();
+        self.output.new_cycle();
+        let n = self.n();
+        let rot = (cycle % n as u64) as usize;
+
+        // Release halves whose pipelined-rotator flush completed.
+        while let Some(p) = self.pending_halves.front() {
+            if p.ready_cycle <= cycle {
+                let p = self.pending_halves.pop_front().unwrap();
+                self.ports[p.port].half_full[p.half] = true;
+            } else {
+                break;
+            }
+        }
+
+        // Activation: a port starts transposing its head line when one is
+        // resident and its fill half is free (§III-F: no waiting on other
+        // ports).
+        for port in 0..self.geom.read_ports {
+            let pending_blocks = self
+                .pending_halves
+                .iter()
+                .any(|ph| ph.port == port && ph.half == self.ports[port].fill_half);
+            let ctl = &mut self.ports[port];
+            ctl.word_taken_this_cycle = false;
+            if !ctl.active && ctl.in_count > 0 && !ctl.half_full[ctl.fill_half] && !pending_blocks
+            {
+                ctl.active = true;
+                ctl.done_words = 0;
+            }
+        }
+
+        // Diagonal read + shared rotation + transposed store, fused.
+        //
+        // The physical datapath (Fig 4) reads the diagonal
+        // `v[k] = bank[k][head(port (k - rot) mod N)]`, left-rotates the
+        // vector by `rot` through the shared barrel shifter, and stores
+        // position j into output bank j at word address (j + rot) mod N.
+        // Composing the three steps: output bank j receives exactly the
+        // word read from input bank (j + rot) mod N — so the simulator
+        // applies the composition directly per port, touching each input
+        // and output bank at most once per cycle (the SRAM models still
+        // enforce the physical port limits). The rotation unit itself is
+        // modelled and tested in `hw::rotator`; its pipeline latency is
+        // accounted by `tuning.rotator_stages`. The property suite
+        // (prop_read_data_integrity, fig4_example) pins the composed
+        // schedule to the paper's semantics.
+        let mut completed = 0u64;
+        let mut words_rotated = 0u64;
+        for j in 0..self.geom.read_ports {
+            if !self.ports[j].active {
+                continue;
+            }
+            let k = (j + rot) % n;
+            let slot = self.region(j) + self.ports[j].head;
+            let word = self.input.read(k, slot);
+            let ctl = &self.ports[j];
+            self.output.write(j, ctl.fill_half * n + k, word);
+            let ctl = &mut self.ports[j];
+            ctl.done_words += 1;
+            words_rotated += 1;
+            if ctl.done_words == n {
+                // Line fully transposed: advance head, free the input
+                // slot, flip the fill half.
+                ctl.active = false;
+                ctl.done_words = 0;
+                ctl.head = (ctl.head + 1) % self.geom.max_burst;
+                ctl.in_count -= 1;
+                if let Some(arr) = ctl.arrival_cycles.pop_front() {
+                    stats.sample("medusa_read.line_latency_cycles", cycle - arr);
+                }
+                if self.tuning.rotator_stages == 0 {
+                    ctl.half_full[ctl.fill_half] = true;
+                } else {
+                    self.pending_halves.push_back(PendingHalf {
+                        port: j,
+                        half: ctl.fill_half,
+                        ready_cycle: cycle + self.tuning.rotator_stages as u64,
+                    });
+                }
+                ctl.fill_half = 1 - ctl.fill_half;
+                completed += 1;
+            }
+        }
+        stats.add("medusa_read.words_rotated", words_rotated);
+        stats.add("medusa_read.lines_transposed", completed);
+    }
+
+    fn nominal_latency(&self) -> usize {
+        // §III-E: constant W_line / W_acc cycles, plus rotator pipelining
+        // if enabled, plus one activation cycle.
+        self.n() + self.tuning.rotator_stages + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Line;
+
+    fn geom(n_ports: usize, w_line: usize, max_burst: usize) -> Geometry {
+        Geometry { w_line, w_acc: 16, read_ports: n_ports, write_ports: n_ports, max_burst }
+    }
+
+    fn mk_line(port: usize, tag: u64, n: usize) -> Line {
+        // Distinct 16-bit words: [port:5][tag:5][y:6] (ports are masked
+        // to W_acc = 16 bits at the memory interface, so stay within it).
+        Line::from_words(
+            (0..n as u64)
+                .map(|y| (((port as u64) & 0x1f) << 11) | ((tag & 0x1f) << 6) | y)
+                .collect(),
+        )
+    }
+
+    /// Drive the network: deliver `lines[i]` when possible, pop words
+    /// eagerly from all ports, return per-port word streams.
+    fn run(
+        net: &mut MedusaReadNetwork,
+        lines: Vec<TaggedLine>,
+        max_cycles: u64,
+    ) -> Vec<Vec<Word>> {
+        let mut stats = Stats::new();
+        let nports = net.geometry().read_ports;
+        let total_words = lines.len() * net.geometry().words_per_line();
+        let mut got: Vec<Vec<Word>> = vec![Vec::new(); nports];
+        let mut next = 0usize;
+        for c in 0..max_cycles {
+            net.tick(c, &mut stats);
+            if next < lines.len() && net.mem_can_deliver(lines[next].port) {
+                net.mem_deliver(lines[next].clone());
+                next += 1;
+            }
+            for p in 0..nports {
+                if net.port_word_available(p) {
+                    got[p].push(net.port_take_word(p).unwrap());
+                }
+            }
+            if got.iter().map(|v| v.len()).sum::<usize>() == total_words {
+                break;
+            }
+        }
+        got
+    }
+
+    #[test]
+    fn fig4_example_n4() {
+        // The paper's Fig 4: W_line = 64, W_acc = 16, N = 4. One line per
+        // port; each port must receive its own line's words in index
+        // order.
+        let g = geom(4, 64, 4);
+        let n = g.words_per_line();
+        let mut net = MedusaReadNetwork::new(g);
+        let lines: Vec<TaggedLine> =
+            (0..4).map(|p| TaggedLine { port: p, line: mk_line(p, 0, n) }).collect();
+        let got = run(&mut net, lines, 100);
+        for p in 0..4 {
+            assert_eq!(got[p], mk_line(p, 0, n).words().to_vec(), "port {p}");
+        }
+    }
+
+    #[test]
+    fn latency_overhead_is_constant_n() {
+        // §III-E: first word arrives W_line/W_acc (+O(1)) cycles after
+        // the line is delivered — for every port, regardless of when the
+        // transfer starts.
+        for start_port in 0..4usize {
+            let g = geom(4, 64, 4);
+            let n = g.words_per_line();
+            let mut net = MedusaReadNetwork::new(g);
+            let mut stats = Stats::new();
+            // Warm up an odd number of cycles so transfers start at
+            // arbitrary rotation phases.
+            let warm = 3 + start_port as u64;
+            for c in 0..warm {
+                net.tick(c, &mut stats);
+            }
+            net.mem_deliver(TaggedLine { port: start_port, line: mk_line(start_port, 1, n) });
+            let mut first = None;
+            for c in warm..warm + 40 {
+                net.tick(c, &mut stats);
+                if net.port_word_available(start_port) {
+                    first = Some(c - warm + 1);
+                    break;
+                }
+            }
+            let lat = first.expect("word never arrived") as usize;
+            assert!(
+                lat <= net.nominal_latency() && lat >= n,
+                "port {start_port}: latency {lat}, nominal {} (N = {n})",
+                net.nominal_latency()
+            );
+        }
+    }
+
+    #[test]
+    fn full_bandwidth_one_line_per_cycle() {
+        // All ports busy: the network must absorb one line per cycle and
+        // deliver one word per port per cycle, sustained.
+        let g = geom(4, 64, 4);
+        let n = g.words_per_line();
+        let mut net = MedusaReadNetwork::new(g);
+        let total = 64usize;
+        let lines: Vec<TaggedLine> =
+            (0..total).map(|i| TaggedLine { port: i % 4, line: mk_line(i % 4, i as u64, n) }).collect();
+        let mut stats = Stats::new();
+        let mut next = 0usize;
+        let mut popped = 0usize;
+        let mut done_at = 0u64;
+        for c in 0..2000u64 {
+            net.tick(c, &mut stats);
+            if next < lines.len() && net.mem_can_deliver(lines[next].port) {
+                net.mem_deliver(lines[next].clone());
+                next += 1;
+            }
+            for p in 0..4 {
+                if net.port_word_available(p) {
+                    net.port_take_word(p).unwrap();
+                    popped += 1;
+                }
+            }
+            if popped == total * n {
+                done_at = c;
+                break;
+            }
+        }
+        assert_eq!(popped, total * n, "did not drain");
+        // 64 lines x 4 words at 4 words/cycle = 64 cycles + pipeline fill.
+        assert!(
+            done_at <= total as u64 + 3 * n as u64,
+            "took {done_at} cycles for {total} lines (N = {n})"
+        );
+    }
+
+    #[test]
+    fn no_interference_between_ports() {
+        // §III-F: a port joining mid-stream progresses at full rate and
+        // does not perturb ports already in progress. Port 0 streams
+        // continuously; port 1 joins late. Compare port 0's word-arrival
+        // cadence with and without port 1's traffic.
+        let g = geom(4, 64, 8);
+        let n = g.words_per_line();
+
+        let cadence = |with_p1: bool| -> Vec<u64> {
+            let mut net = MedusaReadNetwork::new(g);
+            let mut stats = Stats::new();
+            let mut arrivals = Vec::new();
+            let mut sent0 = 0u64;
+            let mut sent1 = 0u64;
+            for c in 0..400u64 {
+                net.tick(c, &mut stats);
+                // Port 0 keeps its region topped up.
+                if sent0 < 16 && net.mem_can_deliver(0) {
+                    net.mem_deliver(TaggedLine { port: 0, line: mk_line(0, sent0, n) });
+                    sent0 += 1;
+                } else if with_p1 && c >= 17 && sent1 < 8 && net.mem_can_deliver(1) {
+                    net.mem_deliver(TaggedLine { port: 1, line: mk_line(1, sent1, n) });
+                    sent1 += 1;
+                }
+                if net.port_word_available(0) {
+                    net.port_take_word(0).unwrap();
+                    arrivals.push(c);
+                }
+                if with_p1 && net.port_word_available(1) {
+                    net.port_take_word(1).unwrap();
+                }
+            }
+            arrivals
+        };
+
+        let solo = cadence(false);
+        let shared = cadence(true);
+        assert_eq!(solo, shared, "port 1's traffic changed port 0's word cadence");
+    }
+
+    #[test]
+    fn burst_to_single_port_absorbed() {
+        // §III-C1: the input buffer holds MaxBurstLen lines per port; a
+        // full burst arrives back-to-back at one line/cycle with no
+        // backpressure.
+        let g = geom(4, 64, 8);
+        let n = g.words_per_line();
+        let mut net = MedusaReadNetwork::new(g);
+        let mut stats = Stats::new();
+        net.tick(0, &mut stats);
+        // Burst arrival requires draining in parallel after N cycles; we
+        // deliver 8 lines on consecutive cycles.
+        for i in 0..8u64 {
+            assert!(net.mem_can_deliver(0), "line {i} back-pressured");
+            net.mem_deliver(TaggedLine { port: 0, line: mk_line(0, i, n) });
+            net.tick(i + 1, &mut stats);
+            if net.port_word_available(0) {
+                net.port_take_word(0).unwrap();
+            }
+        }
+        // Drain everything; verify order across the whole burst.
+        let mut got = Vec::new();
+        for c in 9..400u64 {
+            net.tick(c, &mut stats);
+            if net.port_word_available(0) {
+                got.push(net.port_take_word(0).unwrap());
+            }
+            if got.len() == 8 * n - 1 {
+                break;
+            }
+        }
+        // (one word was popped during the arrival loop — re-derive full
+        // expected stream minus that prefix)
+        let mut expect = Vec::new();
+        for i in 0..8u64 {
+            expect.extend(mk_line(0, i, n).words().to_vec());
+        }
+        // The popped prefix words were in order; `got` must be the
+        // remaining suffix.
+        assert_eq!(&expect[expect.len() - got.len()..], &got[..]);
+    }
+
+    #[test]
+    fn irregular_port_count() {
+        // §III-G: 3 ports on a 4-word interface — unused port pruned.
+        let g = Geometry { w_line: 64, w_acc: 16, read_ports: 3, write_ports: 3, max_burst: 4 };
+        let n = g.words_per_line();
+        let mut net = MedusaReadNetwork::new(g);
+        let lines: Vec<TaggedLine> =
+            (0..9).map(|i| TaggedLine { port: i % 3, line: mk_line(i % 3, i as u64, n) }).collect();
+        let got = run(&mut net, lines, 1000);
+        for p in 0..3 {
+            let mut expect = Vec::new();
+            for i in 0..9 {
+                if i % 3 == p {
+                    expect.extend(mk_line(p, i as u64, n).words().to_vec());
+                }
+            }
+            assert_eq!(got[p], expect, "port {p}");
+        }
+    }
+
+    #[test]
+    fn wide_interface_32_ports() {
+        // The paper's representative point: 512-bit interface, 32 ports.
+        let g = geom(32, 512, 4);
+        let n = g.words_per_line();
+        assert_eq!(n, 32);
+        let mut net = MedusaReadNetwork::new(g);
+        let lines: Vec<TaggedLine> =
+            (0..64).map(|i| TaggedLine { port: i % 32, line: mk_line(i % 32, i as u64, n) }).collect();
+        let got = run(&mut net, lines, 5000);
+        for p in 0..32 {
+            let mut expect = Vec::new();
+            for i in 0..64 {
+                if i % 32 == p {
+                    expect.extend(mk_line(p, i as u64, n).words().to_vec());
+                }
+            }
+            assert_eq!(got[p], expect, "port {p}");
+        }
+    }
+
+    #[test]
+    fn pipelined_rotator_same_data_more_latency() {
+        let g = geom(8, 128, 4);
+        let n = g.words_per_line();
+        let lines: Vec<TaggedLine> =
+            (0..16).map(|i| TaggedLine { port: i % 8, line: mk_line(i % 8, i as u64, n) }).collect();
+
+        let mut plain = MedusaReadNetwork::new(g);
+        let got_plain = run(&mut plain, lines.clone(), 2000);
+
+        let mut piped =
+            MedusaReadNetwork::with_tuning(g, MedusaTuning { rotator_stages: 3 });
+        assert_eq!(piped.nominal_latency(), plain.nominal_latency() + 3);
+        let got_piped = run(&mut piped, lines, 2000);
+        assert_eq!(got_plain, got_piped, "pipelining must not change data");
+    }
+
+    #[test]
+    fn credit_accounting_matches_occupancy() {
+        let g = geom(4, 64, 4);
+        let n = g.words_per_line();
+        let mut net = MedusaReadNetwork::new(g);
+        let mut stats = Stats::new();
+        net.tick(0, &mut stats);
+        assert_eq!(net.port_free_lines(2), 4);
+        net.mem_deliver(TaggedLine { port: 2, line: mk_line(2, 0, n) });
+        assert_eq!(net.port_free_lines(2), 3);
+    }
+}

@@ -1,0 +1,463 @@
+//! Medusa memory-write data transfer network (paper §III-A2, Fig 3b).
+//!
+//! The mirror image of the read direction: each accelerator port writes
+//! words into its own bank of a double-buffered input buffer; the shared
+//! rotator transposes completed port lines into the line-organized,
+//! `MaxBurstLen x N`-deep output buffer; the request arbiter only issues
+//! a write once a port has accumulated the full burst there (§III-C2).
+//!
+//! Schedule derivation (inverse of the read direction): on cycle `c`
+//! (`rot = c mod N`), active port `x` reads word index `y = (x + c) mod N`
+//! from its own input bank; the vector indexed by *port* is rotated
+//! **right** by `rot`, landing `word(p, j)` at position `j` where
+//! `p = (j - c) mod N`; output bank `j` (one bank per word index) stores
+//! it at port `p`'s current output line slot.
+
+use super::MedusaTuning;
+use crate::hw::BankedSram;
+use crate::interconnect::WriteNetwork;
+use crate::sim::Stats;
+use crate::types::{Geometry, Line, PortId, Word};
+use std::collections::VecDeque;
+
+#[derive(Debug)]
+struct PortCtl {
+    /// Input half being filled by the accelerator port.
+    fill_half: usize,
+    /// Words pushed into the fill half so far.
+    fill_idx: usize,
+    /// Which input halves hold a complete, untransposed line.
+    half_full: [bool; 2],
+    /// Input half being drained by the rotator.
+    drain_half: usize,
+    /// Transposition in progress for `drain_half`.
+    active: bool,
+    done_words: usize,
+    /// Output region slot the in-progress line is landing in.
+    out_tail: usize,
+    /// Output region slot of the oldest completed line.
+    out_head: usize,
+    /// Completed lines resident in the output region.
+    ready: usize,
+    /// Lines in the output region (completed + in-progress).
+    out_count: usize,
+    word_pushed_this_cycle: bool,
+}
+
+impl PortCtl {
+    fn new() -> Self {
+        PortCtl {
+            fill_half: 0,
+            fill_idx: 0,
+            half_full: [false; 2],
+            drain_half: 0,
+            active: false,
+            done_words: 0,
+            out_tail: 0,
+            out_head: 0,
+            ready: 0,
+            out_count: 0,
+            word_pushed_this_cycle: false,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct PendingReady {
+    port: PortId,
+    ready_cycle: u64,
+}
+
+pub struct MedusaWriteNetwork {
+    geom: Geometry,
+    tuning: MedusaTuning,
+    /// One bank per port, 2 * N deep (input double buffer, Fig 3b).
+    input: BankedSram,
+    /// N banks (one per word index), `ports * max_burst` deep.
+    output: BankedSram,
+    ports: Vec<PortCtl>,
+    pending_ready: VecDeque<PendingReady>,
+    line_taken_this_cycle: bool,
+    cycle: u64,
+}
+
+impl MedusaWriteNetwork {
+    pub fn new(geom: Geometry) -> Self {
+        Self::with_tuning(geom, MedusaTuning::default())
+    }
+
+    pub fn with_tuning(geom: Geometry, tuning: MedusaTuning) -> Self {
+        geom.validate().expect("invalid geometry");
+        let n = geom.words_per_line();
+        MedusaWriteNetwork {
+            geom,
+            tuning,
+            input: BankedSram::new(geom.write_ports, 2 * n),
+            output: BankedSram::new(n, geom.write_ports * geom.max_burst),
+            ports: (0..geom.write_ports).map(|_| PortCtl::new()).collect(),
+            pending_ready: VecDeque::new(),
+            line_taken_this_cycle: false,
+            cycle: 0,
+        }
+    }
+
+    fn n(&self) -> usize {
+        self.geom.words_per_line()
+    }
+
+    fn region(&self, port: PortId) -> usize {
+        port * self.geom.max_burst
+    }
+}
+
+impl WriteNetwork for MedusaWriteNetwork {
+    fn geometry(&self) -> &Geometry {
+        &self.geom
+    }
+
+    fn port_can_accept(&self, port: PortId) -> bool {
+        let c = &self.ports[port];
+        !c.word_pushed_this_cycle && !c.half_full[c.fill_half]
+    }
+
+    fn port_push_word(&mut self, port: PortId, w: Word) {
+        let n = self.n();
+        let mask = self.geom.word_mask();
+        let ctl = &mut self.ports[port];
+        assert!(!ctl.word_pushed_this_cycle, "port {port} pushed twice in one cycle");
+        assert!(!ctl.half_full[ctl.fill_half], "input half overflow, port {port}");
+        let addr = ctl.fill_half * n + ctl.fill_idx;
+        ctl.word_pushed_this_cycle = true;
+        ctl.fill_idx += 1;
+        let fill_half = ctl.fill_half;
+        if ctl.fill_idx == n {
+            ctl.half_full[fill_half] = true;
+            ctl.fill_half = 1 - fill_half;
+            ctl.fill_idx = 0;
+        }
+        self.input.write(port, addr, w & mask);
+    }
+
+    fn mem_lines_ready(&self, port: PortId) -> usize {
+        self.ports[port].ready
+    }
+
+    fn mem_take_line(&mut self, port: PortId) -> Option<Line> {
+        assert!(!self.line_taken_this_cycle, "second line on the memory interface in one cycle");
+        let n = self.n();
+        if self.ports[port].ready == 0 {
+            return None;
+        }
+        let slot = self.region(port) + self.ports[port].out_head;
+        let mut words = Vec::with_capacity(n);
+        for y in 0..n {
+            words.push(self.output.read(y, slot));
+        }
+        let ctl = &mut self.ports[port];
+        ctl.out_head = (ctl.out_head + 1) % self.geom.max_burst;
+        ctl.ready -= 1;
+        ctl.out_count -= 1;
+        self.line_taken_this_cycle = true;
+        Some(Line::from_words(words))
+    }
+
+    fn tick(&mut self, cycle: u64, stats: &mut Stats) {
+        self.cycle = cycle;
+        self.line_taken_this_cycle = false;
+        self.input.new_cycle();
+        self.output.new_cycle();
+        let n = self.n();
+        let rot = (cycle % n as u64) as usize;
+
+        while let Some(p) = self.pending_ready.front() {
+            if p.ready_cycle <= cycle {
+                let p = self.pending_ready.pop_front().unwrap();
+                self.ports[p.port].ready += 1;
+            } else {
+                break;
+            }
+        }
+
+        // Activation: start transposing a completed input half when the
+        // output region has a free slot.
+        for port in 0..self.geom.write_ports {
+            let ctl = &mut self.ports[port];
+            ctl.word_pushed_this_cycle = false;
+            if !ctl.active && ctl.half_full[ctl.drain_half] && ctl.out_count < self.geom.max_burst
+            {
+                ctl.active = true;
+                ctl.done_words = 0;
+                ctl.out_count += 1; // reserve the slot at out_tail
+            }
+        }
+
+        // Diagonal read + right-rotation + line-organized store, fused.
+        //
+        // The physical datapath reads `v[x] = input bank x, word index
+        // (x + rot) mod N`, right-rotates by `rot` through the shared
+        // barrel shifter (landing word(p, j) at position j, with
+        // p = (j - rot) mod N), and stores position j into output bank
+        // j at port p's reserved slot. Composed per port: the word read
+        // from input bank p at index j = (p + rot) mod N goes straight
+        // to output bank j — each input and output bank touched at most
+        // once per cycle, with the SRAM models enforcing the physical
+        // port limits. Rotation hardware is modelled/tested in
+        // `hw::rotator`; its latency is `tuning.rotator_stages`.
+        let mut completed = 0u64;
+        let mut words_rotated = 0u64;
+        for p in 0..self.geom.write_ports {
+            if !self.ports[p].active {
+                continue;
+            }
+            let j = (p + rot) % n;
+            let addr = self.ports[p].drain_half * n + j;
+            let word = self.input.read(p, addr);
+            let slot = self.region(p) + self.ports[p].out_tail;
+            self.output.write(j, slot, word);
+            let ctl = &mut self.ports[p];
+            ctl.done_words += 1;
+            words_rotated += 1;
+            if ctl.done_words == n {
+                // Line fully transposed: release the input half, finalize
+                // the output slot.
+                ctl.active = false;
+                ctl.done_words = 0;
+                ctl.half_full[ctl.drain_half] = false;
+                ctl.drain_half = 1 - ctl.drain_half;
+                ctl.out_tail = (ctl.out_tail + 1) % self.geom.max_burst;
+                if self.tuning.rotator_stages == 0 {
+                    ctl.ready += 1;
+                } else {
+                    self.pending_ready.push_back(PendingReady {
+                        port: p,
+                        ready_cycle: cycle + self.tuning.rotator_stages as u64,
+                    });
+                }
+                completed += 1;
+            }
+        }
+        stats.add("medusa_write.words_rotated", words_rotated);
+        stats.add("medusa_write.lines_transposed", completed);
+    }
+
+    fn nominal_latency(&self) -> usize {
+        self.n() + self.tuning.rotator_stages + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom(n_ports: usize, w_line: usize, max_burst: usize) -> Geometry {
+        Geometry { w_line, w_acc: 16, read_ports: n_ports, write_ports: n_ports, max_burst }
+    }
+
+    fn word_of(port: usize, line: u64, y: usize) -> Word {
+        ((port as u64) << 12) | ((line & 0x3f) << 6) | y as u64
+    }
+
+    /// Push `lines_per_port` lines of words on every port, drain lines on
+    /// the memory side round-robin; return lines per port in arrival
+    /// order.
+    fn run(
+        net: &mut MedusaWriteNetwork,
+        lines_per_port: usize,
+        max_cycles: u64,
+    ) -> Vec<Vec<Line>> {
+        let mut stats = Stats::new();
+        let g = *net.geometry();
+        let n = g.words_per_line();
+        let mut pushed = vec![0usize; g.write_ports];
+        let mut got: Vec<Vec<Line>> = vec![Vec::new(); g.write_ports];
+        let mut rr = 0usize;
+        for c in 0..max_cycles {
+            net.tick(c, &mut stats);
+            // Memory side: take one ready line per cycle, round-robin.
+            for k in 0..g.write_ports {
+                let p = (rr + k) % g.write_ports;
+                if net.mem_lines_ready(p) > 0 {
+                    got[p].push(net.mem_take_line(p).unwrap());
+                    rr = p + 1;
+                    break;
+                }
+            }
+            // Port side: push next word on each port.
+            for p in 0..g.write_ports {
+                if pushed[p] < lines_per_port * n && net.port_can_accept(p) {
+                    let line_idx = (pushed[p] / n) as u64;
+                    let y = pushed[p] % n;
+                    net.port_push_word(p, word_of(p, line_idx, y));
+                    pushed[p] += 1;
+                }
+            }
+            if got.iter().map(|v| v.len()).sum::<usize>() == lines_per_port * g.write_ports {
+                break;
+            }
+        }
+        got
+    }
+
+    #[test]
+    fn transposes_port_words_into_lines() {
+        let g = geom(4, 64, 4);
+        let n = g.words_per_line();
+        let mut net = MedusaWriteNetwork::new(g);
+        let got = run(&mut net, 2, 500);
+        for p in 0..4 {
+            assert_eq!(got[p].len(), 2, "port {p}");
+            for (li, line) in got[p].iter().enumerate() {
+                for y in 0..n {
+                    assert_eq!(
+                        line.word(y),
+                        word_of(p, li as u64, y),
+                        "port {p} line {li} word {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_ports_full_rate_aggregate_bandwidth() {
+        // 4 ports x 1 word/cycle = 1 line/cycle aggregate; draining 32
+        // lines must take ~32 + fill cycles.
+        let g = geom(4, 64, 8);
+        let n = g.words_per_line();
+        let mut net = MedusaWriteNetwork::new(g);
+        let lines_per_port = 8usize;
+        let mut stats = Stats::new();
+        let mut pushed = vec![0usize; 4];
+        let mut taken = 0usize;
+        let total = lines_per_port * 4;
+        let mut rr = 0;
+        let mut done_at = 0u64;
+        for c in 0..4000u64 {
+            net.tick(c, &mut stats);
+            for k in 0..4 {
+                let p = (rr + k) % 4;
+                if net.mem_lines_ready(p) > 0 {
+                    net.mem_take_line(p).unwrap();
+                    taken += 1;
+                    rr = p + 1;
+                    break;
+                }
+            }
+            for p in 0..4 {
+                if pushed[p] < lines_per_port * n && net.port_can_accept(p) {
+                    net.port_push_word(p, word_of(p, (pushed[p] / n) as u64, pushed[p] % n));
+                    pushed[p] += 1;
+                }
+            }
+            if taken == total {
+                done_at = c;
+                break;
+            }
+        }
+        assert_eq!(taken, total);
+        assert!(done_at <= (lines_per_port * n) as u64 + 4 * n as u64, "took {done_at} cycles");
+    }
+
+    #[test]
+    fn write_latency_constant_overhead() {
+        // From last word pushed to line ready ~= N cycles (§III-E applies
+        // symmetrically).
+        let g = geom(4, 64, 4);
+        let n = g.words_per_line();
+        let mut net = MedusaWriteNetwork::new(g);
+        let mut stats = Stats::new();
+        let mut c = 0u64;
+        for y in 0..n {
+            net.tick(c, &mut stats);
+            net.port_push_word(0, word_of(0, 0, y));
+            c += 1;
+        }
+        let pushed_done = c;
+        loop {
+            net.tick(c, &mut stats);
+            if net.mem_lines_ready(0) > 0 {
+                break;
+            }
+            c += 1;
+            assert!(c < pushed_done + 3 * n as u64, "line never became ready");
+        }
+        let overhead = (c - pushed_done) as usize;
+        assert!(overhead <= net.nominal_latency() + 1, "overhead {overhead} cycles");
+    }
+
+    #[test]
+    fn arbiter_view_only_counts_complete_lines() {
+        let g = geom(4, 64, 4);
+        let n = g.words_per_line();
+        let mut net = MedusaWriteNetwork::new(g);
+        let mut stats = Stats::new();
+        for y in 0..n - 1 {
+            net.tick(y as u64, &mut stats);
+            net.port_push_word(0, y as Word);
+        }
+        // Partial line: never ready no matter how long we wait.
+        for c in n as u64..(4 * n) as u64 {
+            net.tick(c, &mut stats);
+            assert_eq!(net.mem_lines_ready(0), 0);
+        }
+    }
+
+    #[test]
+    fn irregular_port_count() {
+        let g = Geometry { w_line: 64, w_acc: 16, read_ports: 3, write_ports: 3, max_burst: 4 };
+        let n = g.words_per_line();
+        let mut net = MedusaWriteNetwork::new(g);
+        let got = run(&mut net, 3, 1000);
+        for p in 0..3 {
+            assert_eq!(got[p].len(), 3);
+            for (li, line) in got[p].iter().enumerate() {
+                for y in 0..n {
+                    assert_eq!(line.word(y), word_of(p, li as u64, y));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wide_32_port_roundtrip() {
+        let g = geom(32, 512, 4);
+        let mut net = MedusaWriteNetwork::new(g);
+        let got = run(&mut net, 2, 10_000);
+        for p in 0..32 {
+            assert_eq!(got[p].len(), 2, "port {p}");
+        }
+    }
+
+    #[test]
+    fn backpressure_when_output_region_full() {
+        // Never drain the memory side: after max_burst lines + both input
+        // halves, the port must be back-pressured.
+        let g = geom(4, 64, 2);
+        let n = g.words_per_line();
+        let mut net = MedusaWriteNetwork::new(g);
+        let mut stats = Stats::new();
+        let mut pushed = 0usize;
+        for c in 0..400u64 {
+            net.tick(c, &mut stats);
+            if net.port_can_accept(0) {
+                net.port_push_word(0, pushed as Word);
+                pushed += 1;
+            }
+        }
+        // Capacity: max_burst output slots + 2 input halves = 4 lines.
+        let max_capacity = (g.max_burst + 2) * n;
+        assert!(pushed <= max_capacity, "pushed {pushed} > capacity {max_capacity}");
+        assert!(pushed >= g.max_burst * n, "absorbed too little: {pushed}");
+        assert_eq!(net.mem_lines_ready(0), g.max_burst);
+    }
+
+    #[test]
+    fn pipelined_rotator_same_data() {
+        let g = geom(8, 128, 4);
+        let mut plain = MedusaWriteNetwork::new(g);
+        let got_plain = run(&mut plain, 4, 4000);
+        let mut piped = MedusaWriteNetwork::with_tuning(g, MedusaTuning { rotator_stages: 3 });
+        let got_piped = run(&mut piped, 4, 4000);
+        assert_eq!(got_plain, got_piped);
+    }
+}

@@ -1,0 +1,169 @@
+//! The memory interconnect data-transfer networks — the paper's subject.
+//!
+//! Two families, behaviourally interchangeable (paper §III-F: Medusa is a
+//! "drop-in replacement" for the baseline, differing only by a constant
+//! latency):
+//!
+//! * [`baseline`] — the traditional design (paper §II, Figs 1–2): a wide
+//!   1-to-N demux into per-port `W_line`-wide FIFOs and data-width
+//!   converters (read), and converters into FIFOs into an N-to-1 mux
+//!   (write).
+//! * [`medusa`] — the transposition-based design (paper §III, Figs 3–5):
+//!   deep banked buffers and a shared barrel rotator.
+//! * [`axis`] — an AXI4-Stream-IP-like variant of the baseline used by
+//!   the Table I comparison.
+//!
+//! Both implement [`ReadNetwork`] / [`WriteNetwork`], so the arbiter, the
+//! DRAM controller, the layer processors and the whole evaluation harness
+//! are design-agnostic.
+//!
+//! ## Cycle contract
+//!
+//! The system owner advances one fabric cycle as:
+//!
+//! 1. `network.tick(cycle, stats)` — internal datapath advance;
+//! 2. memory-side interactions (`mem_deliver` / `mem_take_line`);
+//! 3. port-side interactions (`port_take_word` / `port_push_word`);
+//!
+//! Data moved in steps 2–3 becomes visible to the datapath at the next
+//! `tick`, giving registered (order-independent) semantics. Each port may
+//! move at most one word per cycle and the memory side at most one line
+//! per cycle — the networks assert this.
+
+pub mod arbiter;
+pub mod axis;
+pub mod baseline;
+pub mod harness;
+pub mod medusa;
+
+use crate::sim::Stats;
+use crate::types::{Geometry, Line, PortId, TaggedLine, Word};
+
+/// Which interconnect design a component should instantiate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Design {
+    Baseline,
+    Medusa,
+    /// Baseline built from AXI4-Stream-style IP (Table I comparator).
+    Axis,
+}
+
+impl Design {
+    pub fn parse(s: &str) -> Option<Design> {
+        match s.to_ascii_lowercase().as_str() {
+            "baseline" | "base" => Some(Design::Baseline),
+            "medusa" | "transpose" => Some(Design::Medusa),
+            "axis" | "axi4-stream" => Some(Design::Axis),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Design::Baseline => "baseline",
+            Design::Medusa => "medusa",
+            Design::Axis => "axis",
+        }
+    }
+}
+
+/// Read-side data transfer network: wide memory lines in, narrow port
+/// words out.
+pub trait ReadNetwork {
+    fn geometry(&self) -> &Geometry;
+
+    /// May the memory controller deliver a line destined to `port` this
+    /// cycle? (Backpressure; with a credit-respecting arbiter this is
+    /// always true — the networks are provisioned for `max_burst` lines
+    /// per port, §II-A/§III-C1.)
+    fn mem_can_deliver(&self, port: PortId) -> bool;
+
+    /// Deliver one `W_line` line from the memory controller (at most one
+    /// per cycle across all ports — it is a single shared interface).
+    fn mem_deliver(&mut self, line: TaggedLine);
+
+    /// Lines of space currently available for `port` (the arbiter's
+    /// credit counter source).
+    fn port_free_lines(&self, port: PortId) -> usize;
+
+    /// Is a word available on `port` this cycle?
+    fn port_word_available(&self, port: PortId) -> bool;
+
+    /// Pop one word from `port` (at most once per port per cycle).
+    fn port_take_word(&mut self, port: PortId) -> Option<Word>;
+
+    /// Advance one fabric cycle.
+    fn tick(&mut self, cycle: u64, stats: &mut Stats);
+
+    /// Constant latency overhead vs an ideal wire, in cycles — used by
+    /// the §III-E latency validation tests.
+    fn nominal_latency(&self) -> usize;
+}
+
+/// Write-side data transfer network: narrow port words in, wide memory
+/// lines out.
+pub trait WriteNetwork {
+    fn geometry(&self) -> &Geometry;
+
+    /// May `port` push a word this cycle?
+    fn port_can_accept(&self, port: PortId) -> bool;
+
+    /// Push one word from `port` (at most once per port per cycle).
+    fn port_push_word(&mut self, port: PortId, w: Word);
+
+    /// Number of complete `W_line` lines ready for `port` on the memory
+    /// side. The request arbiter "must monitor data coming from the write
+    /// ports, and only issue requests for ports that have accumulated
+    /// enough data" (§III-C2).
+    fn mem_lines_ready(&self, port: PortId) -> usize;
+
+    /// Pop one completed line for `port` toward the memory controller
+    /// (at most one line per cycle across all ports).
+    fn mem_take_line(&mut self, port: PortId) -> Option<Line>;
+
+    fn tick(&mut self, cycle: u64, stats: &mut Stats);
+
+    fn nominal_latency(&self) -> usize;
+}
+
+/// Construct a read network of the given design.
+pub fn build_read_network(design: Design, geom: Geometry) -> Box<dyn ReadNetwork + Send> {
+    match design {
+        Design::Baseline => Box::new(baseline::BaselineReadNetwork::new(geom)),
+        Design::Medusa => Box::new(medusa::MedusaReadNetwork::new(geom)),
+        Design::Axis => Box::new(axis::AxisReadNetwork::new(geom)),
+    }
+}
+
+/// Construct a write network of the given design.
+pub fn build_write_network(design: Design, geom: Geometry) -> Box<dyn WriteNetwork + Send> {
+    match design {
+        Design::Baseline => Box::new(baseline::BaselineWriteNetwork::new(geom)),
+        Design::Medusa => Box::new(medusa::MedusaWriteNetwork::new(geom)),
+        Design::Axis => Box::new(axis::AxisWriteNetwork::new(geom)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn design_parsing() {
+        assert_eq!(Design::parse("baseline"), Some(Design::Baseline));
+        assert_eq!(Design::parse("MEDUSA"), Some(Design::Medusa));
+        assert_eq!(Design::parse("axi4-stream"), Some(Design::Axis));
+        assert_eq!(Design::parse("nope"), None);
+    }
+
+    #[test]
+    fn factory_builds_all_designs() {
+        let g = Geometry { w_line: 64, w_acc: 16, read_ports: 4, write_ports: 4, max_burst: 4 };
+        for d in [Design::Baseline, Design::Medusa, Design::Axis] {
+            let r = build_read_network(d, g);
+            assert_eq!(r.geometry().read_ports, 4);
+            let w = build_write_network(d, g);
+            assert_eq!(w.geometry().write_ports, 4);
+        }
+    }
+}

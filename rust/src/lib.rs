@@ -1,0 +1,42 @@
+//! # Medusa — a scalable memory interconnect for many-port DNN accelerators
+//!
+//! Full-system reproduction of *"Medusa: A Scalable Interconnect for
+//! Many-Port DNN Accelerators and Wide DRAM Controller Interfaces"*
+//! (Shen, Ji, Ferdman, Milder — 2018).
+//!
+//! The paper's testbed (Virtex-7 FPGA + Vivado P&R + Bluespec RTL) is
+//! substituted per DESIGN.md §1 with:
+//!
+//! * a **cycle-accurate RTL-level simulator** of both the traditional
+//!   (crossbar + FIFO + width-converter) interconnect and the Medusa
+//!   transposition-based interconnect ([`sim`], [`hw`], [`interconnect`]);
+//! * an **analytical FPGA resource model** and a **routing-congestion
+//!   timing model** calibrated against the paper's Tables I/II and
+//!   Figure 6 ([`fpga`]);
+//! * a **DDR3 memory-controller model** ([`dram`]) and a **convolutional
+//!   layer-processor model** ([`accel`]) that generate the paper's port
+//!   traffic (perfect prefetch, double buffering);
+//! * a **PJRT runtime** ([`runtime`]) that loads the JAX/Pallas-authored,
+//!   AOT-lowered compute artifacts so the end-to-end examples run real
+//!   DNN math through the simulated memory system ([`coordinator`]).
+//!
+//! The evaluation harness ([`eval`]) regenerates every table and figure
+//! of the paper's evaluation section; see `EXPERIMENTS.md` for
+//! paper-vs-measured numbers.
+
+pub mod accel;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dram;
+pub mod eval;
+pub mod fpga;
+pub mod hw;
+pub mod interconnect;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+pub mod types;
+pub mod util;
+
+pub use types::{Geometry, Line, PortId, Word};

@@ -1,0 +1,249 @@
+//! `medusa` — leader binary: evaluation harness, simulation launcher,
+//! and design-space tools for the Medusa interconnect reproduction.
+//!
+//! Subcommands:
+//!   eval <table1|table2|fig6|all>   regenerate the paper's tables/figures
+//!   infer [--design D] [...]        run tiny-VGG inference through the
+//!                                   simulated system (golden or PJRT)
+//!   resources [--design D] [...]    resource report for a design point
+//!   freq [--design D] [...]         P&R frequency for a design point
+//!   sweep                           Fig 6 sweep as CSV
+//!   info                            environment / artifact status
+
+use anyhow::{bail, Result};
+use medusa::accel::dnn::Network;
+use medusa::accel::quant::Fixed16;
+use medusa::cli::Args;
+use medusa::config::SystemConfig;
+use medusa::coordinator::{ComputeBackend, InferenceDriver};
+use medusa::eval;
+use medusa::fpga::timing::peak_frequency;
+use medusa::fpga::{DesignPoint, Device};
+use medusa::interconnect::Design;
+use medusa::runtime::{Artifacts, ConvExecutor};
+use medusa::types::Geometry;
+use medusa::util::logging;
+
+fn main() {
+    logging::init(None);
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "eval" => cmd_eval(rest),
+        "infer" => cmd_infer(rest),
+        "resources" => cmd_resources(rest),
+        "freq" => cmd_freq(rest),
+        "sweep" => cmd_sweep(rest),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?} (try `medusa help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "medusa — transposition-based memory interconnect reproduction\n\n\
+         usage: medusa <subcommand> [options]\n\n\
+         subcommands:\n\
+         \x20 eval <table1|table2|fig6|all>   regenerate the paper's evaluation\n\
+         \x20 infer [options]                 tiny-VGG inference through the simulator\n\
+         \x20 resources [options]             resource report for one design point\n\
+         \x20 freq [options]                  P&R peak frequency for one design point\n\
+         \x20 sweep                           Fig 6 sweep as CSV\n\
+         \x20 info                            environment / artifacts status\n"
+    );
+}
+
+fn design_opt(args: &Args) -> Result<Design> {
+    let s = args.get_or("design", "medusa");
+    Design::parse(s).ok_or_else(|| anyhow::anyhow!("unknown design {s:?}"))
+}
+
+fn geometry_opts(args: &Args) -> Result<Geometry> {
+    let mut g = Geometry::paper_default();
+    if let Some(v) = args.get_usize("w-line")? {
+        g.w_line = v;
+    }
+    if let Some(v) = args.get_usize("ports")? {
+        g.read_ports = v;
+        g.write_ports = v;
+    }
+    if let Some(v) = args.get_usize("max-burst")? {
+        g.max_burst = v;
+    }
+    g.validate()?;
+    Ok(g)
+}
+
+fn cmd_eval(rest: &[String]) -> Result<()> {
+    let which = rest.first().map(|s| s.as_str()).unwrap_or("all");
+    match which {
+        "table1" => print!("{}", eval::table1().to_text()),
+        "table2" => {
+            print!("{}", eval::table2().to_text());
+            let h = eval::table2::headline();
+            println!(
+                "headline: {:.2}x LUT and {:.2}x FF savings on the combined networks \
+                 (paper: 4.73x / 6.02x), +{} BRAM-18K",
+                h.lut_factor, h.ff_factor, h.medusa_extra_bram
+            );
+        }
+        "fig6" => {
+            print!("{}", eval::fig6().to_text());
+            println!();
+            print!("{}", eval::fig6::ascii_plot());
+        }
+        "all" => {
+            for t in ["table1", "table2", "fig6"] {
+                cmd_eval(&[t.to_string()])?;
+                println!();
+            }
+        }
+        other => bail!("unknown eval target {other:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_infer(rest: &[String]) -> Result<()> {
+    let args = Args::default()
+        .opt("design", "baseline | medusa | axis")
+        .opt("backend", "golden | pjrt")
+        .opt("fabric-mhz", "pin the fabric clock (default: P&R model)")
+        .opt("dpus", "dot-product units (default 64)")
+        .opt("seed", "workload seed")
+        .flag("ddr3", "use detailed DDR3 timing (default ideal)")
+        .parse(rest)?;
+    let mut cfg = SystemConfig::paper_default();
+    cfg.design = design_opt(&args)?;
+    cfg.ddr3_timing = args.has_flag("ddr3");
+    if let Some(v) = args.get_f64("fabric-mhz")? {
+        cfg.fabric_clock_mhz = Some(v);
+    }
+    if let Some(v) = args.get_usize("dpus")? {
+        cfg.dotprod_units = v;
+    }
+    if let Some(v) = args.get_usize("seed")? {
+        cfg.seed = v as u64;
+    }
+    let backend = match args.get_or("backend", "golden") {
+        "golden" => ComputeBackend::Golden,
+        "pjrt" => ComputeBackend::Pjrt(Box::new(ConvExecutor::new()?)),
+        other => bail!("unknown backend {other:?}"),
+    };
+    let net = Network::tiny_vgg();
+    let input: Vec<Fixed16> = {
+        let mut p = medusa::util::Prng::new(cfg.seed ^ 0xda7a);
+        (0..net.layers[0].ifmap_words())
+            .map(|_| Fixed16::from_f32((p.f64() as f32) * 2.0 - 1.0))
+            .collect()
+    };
+    let mut drv = InferenceDriver::new(cfg, backend)?;
+    let (report, fm) = drv.run(&net, &input)?;
+    println!("{report}");
+    println!(
+        "final feature map: {} values, checksum {:#018x}",
+        fm.len(),
+        fm.iter().fold(0xcbf29ce484222325u64, |h, v| {
+            (h ^ (v.0 as u16 as u64)).wrapping_mul(0x100000001b3)
+        })
+    );
+    anyhow::ensure!(report.all_verified(), "verification FAILED");
+    println!("all layers verified ✓");
+    Ok(())
+}
+
+fn cmd_resources(rest: &[String]) -> Result<()> {
+    let args = Args::default()
+        .opt("design", "baseline | medusa | axis")
+        .opt("w-line", "memory interface width bits")
+        .opt("ports", "read (=write) port count")
+        .opt("max-burst", "max burst in lines")
+        .opt("dpus", "dot-product units")
+        .parse(rest)?;
+    let design = design_opt(&args)?;
+    let g = geometry_opts(&args)?;
+    let dpus = args.get_usize("dpus")?.unwrap_or(64);
+    let dev = Device::virtex7_690t();
+    let dp = DesignPoint { design, geometry: g, dpus };
+    let r = dp.resources();
+    println!(
+        "design point: {} | {}b iface | {}r+{}w ports | {} DPUs ({} DSPs)",
+        design.name(),
+        g.w_line,
+        g.read_ports,
+        g.write_ports,
+        dpus,
+        dp.dsps()
+    );
+    println!("  {r}");
+    println!(
+        "  utilization: LUT {:.1}%  FF {:.1}%  BRAM {:.1}%  DSP {:.1}%",
+        dev.pct_lut(r.lut),
+        dev.pct_ff(r.ff),
+        dev.pct_bram(r.bram18),
+        dev.pct_dsp(r.dsp)
+    );
+    Ok(())
+}
+
+fn cmd_freq(rest: &[String]) -> Result<()> {
+    let args = Args::default()
+        .opt("design", "baseline | medusa | axis")
+        .opt("w-line", "memory interface width bits")
+        .opt("ports", "read (=write) port count")
+        .opt("max-burst", "max burst in lines")
+        .opt("dpus", "dot-product units")
+        .parse(rest)?;
+    let design = design_opt(&args)?;
+    let g = geometry_opts(&args)?;
+    let dpus = args.get_usize("dpus")?.unwrap_or(64);
+    let dp = DesignPoint { design, geometry: g, dpus };
+    let f = peak_frequency(&dp);
+    if f == 0 {
+        println!("{}: FAILS timing at 25 MHz", design.name());
+    } else {
+        println!("{}: {f} MHz peak (25 MHz search grid)", design.name());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(_rest: &[String]) -> Result<()> {
+    print!("{}", eval::fig6().to_csv());
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("medusa {} — three-layer rust+JAX+Pallas reproduction", env!("CARGO_PKG_VERSION"));
+    println!("device model: {:?}", Device::virtex7_690t().name);
+    match Artifacts::discover() {
+        Ok(a) => {
+            println!("artifacts: {} ({} entries)", a.dir.display(), a.names().len());
+            for e in a.entries() {
+                println!(
+                    "  {:<16} {:<9} {}x{}x{} -> {} (k={}, s={}, p={}, relu={})",
+                    e.name, e.kind, e.in_c, e.in_h, e.in_w, e.out_c, e.k, e.stride, e.pad, e.relu
+                );
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    match medusa::runtime::RuntimeClient::cpu() {
+        Ok(c) => println!("PJRT: platform {} OK", c.platform()),
+        Err(e) => println!("PJRT: unavailable ({e})"),
+    }
+    Ok(())
+}

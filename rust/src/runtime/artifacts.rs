@@ -1,0 +1,145 @@
+//! Artifact discovery: find `artifacts/` and parse the manifest that
+//! `python/compile/aot.py` writes alongside the HLO text files.
+//!
+//! Manifest format (one artifact per line):
+//! `name kind in_c in_h in_w out_c k stride pad relu path`
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One compiled computation we know how to call.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// "conv" (layer forward) or "transpose" (the Medusa kernel demo).
+    pub kind: String,
+    pub in_c: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub out_c: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub relu: bool,
+    pub path: PathBuf,
+}
+
+#[derive(Debug)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    entries: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Artifacts {
+    /// Locate the artifacts directory: `$MEDUSA_ARTIFACTS`, else
+    /// `./artifacts`, else `../artifacts` (for tests running from the
+    /// crate dir). Errors if no manifest is found — run `make artifacts`.
+    pub fn discover() -> Result<Self> {
+        let candidates: Vec<PathBuf> = std::env::var("MEDUSA_ARTIFACTS")
+            .map(|p| vec![PathBuf::from(p)])
+            .unwrap_or_else(|_| vec![PathBuf::from("artifacts"), PathBuf::from("../artifacts")]);
+        for dir in candidates {
+            if dir.join("manifest.txt").is_file() {
+                return Self::load(&dir);
+            }
+        }
+        bail!("artifacts not found — run `make artifacts` first (or set MEDUSA_ARTIFACTS)")
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        let mut entries = BTreeMap::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split_whitespace().collect();
+            if f.len() != 11 {
+                bail!("manifest line {}: expected 11 fields, got {}", ln + 1, f.len());
+            }
+            let parse = |s: &str, what: &str| -> Result<usize> {
+                s.parse().map_err(|_| anyhow!("manifest line {}: bad {what}: {s:?}", ln + 1))
+            };
+            let e = ArtifactEntry {
+                name: f[0].to_string(),
+                kind: f[1].to_string(),
+                in_c: parse(f[2], "in_c")?,
+                in_h: parse(f[3], "in_h")?,
+                in_w: parse(f[4], "in_w")?,
+                out_c: parse(f[5], "out_c")?,
+                k: parse(f[6], "k")?,
+                stride: parse(f[7], "stride")?,
+                pad: parse(f[8], "pad")?,
+                relu: f[9] == "1" || f[9] == "true",
+                path: dir.join(f[10]),
+            };
+            if !e.path.is_file() {
+                bail!("manifest entry {} points to missing file {}", e.name, e.path.display());
+            }
+            entries.insert(e.name.clone(), e);
+        }
+        anyhow::ensure!(!entries.is_empty(), "manifest is empty");
+        Ok(Artifacts { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact named {name:?}; have: {:?}", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &ArtifactEntry> {
+        self.entries.values()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("manifest.txt")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let dir = std::env::temp_dir().join("medusa_test_artifacts_ok");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("conv1.hlo.txt"), "HloModule x").unwrap();
+        write_manifest(&dir, "# comment\nconv1 conv 3 32 32 16 3 1 1 1 conv1.hlo.txt\n");
+        let a = Artifacts::load(&dir).unwrap();
+        let e = a.get("conv1").unwrap();
+        assert_eq!(e.in_c, 3);
+        assert_eq!(e.out_c, 16);
+        assert!(e.relu);
+        assert_eq!(a.names(), vec!["conv1"]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_rejected() {
+        let dir = std::env::temp_dir().join("medusa_test_artifacts_miss");
+        write_manifest(&dir, "conv1 conv 3 32 32 16 3 1 1 1 nope.hlo.txt\n");
+        assert!(Artifacts::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn malformed_line_rejected() {
+        let dir = std::env::temp_dir().join("medusa_test_artifacts_bad");
+        write_manifest(&dir, "conv1 conv 3 32\n");
+        assert!(Artifacts::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,80 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client: compile HLO text
+//! once, execute many times.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+    /// Compiled executables, keyed by artifact name.
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl RuntimeClient {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(RuntimeClient { client, executables: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO text file and cache the executable under `name`.
+    pub fn load_hlo_text(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-UTF8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name} ({})", path.display()))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Execute a loaded computation. The artifacts are lowered with
+    /// `return_tuple=True`, so the single output is a tuple; we return
+    /// its elements as literals.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("artifact {name} not loaded"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {name}"))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {name}"))?;
+        let elems = tuple.decompose_tuple().context("decomposing result tuple")?;
+        Ok(elems)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Client tests that need real artifacts live in
+    // rust/tests/runtime_integration.rs (they require `make artifacts`).
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let c = RuntimeClient::cpu().unwrap();
+        assert_eq!(c.platform(), "cpu");
+        assert!(!c.is_loaded("nothing"));
+    }
+
+    #[test]
+    fn missing_executable_errors() {
+        let c = RuntimeClient::cpu().unwrap();
+        assert!(c.execute("ghost", &[]).is_err());
+    }
+}

@@ -1,0 +1,102 @@
+//! Conv-layer executor: runs the AOT-compiled JAX/Pallas artifacts on
+//! Q8.8 tensors.
+//!
+//! Numeric contract with `python/compile/model.py`: tensors cross the
+//! boundary as **raw Q8.8 integers carried in f64** (exact: products fit
+//! in 2^30, receptive-field sums in well under 2^53). The artifact
+//! performs the convolution in this integer-in-f64 domain, then the
+//! round-half-even shift, saturation, and optional ReLU — bit-identical
+//! to `accel::golden::conv2d_q88`.
+
+use crate::accel::dnn::ConvLayer;
+use crate::accel::quant::Fixed16;
+use crate::runtime::{Artifacts, RuntimeClient};
+use anyhow::{Context, Result};
+
+pub struct ConvExecutor {
+    client: RuntimeClient,
+    artifacts: Artifacts,
+}
+
+impl ConvExecutor {
+    /// Discover artifacts and bring up the PJRT CPU client.
+    pub fn new() -> Result<Self> {
+        Ok(ConvExecutor { client: RuntimeClient::cpu()?, artifacts: Artifacts::discover()? })
+    }
+
+    pub fn with_artifacts(artifacts: Artifacts) -> Result<Self> {
+        Ok(ConvExecutor { client: RuntimeClient::cpu()?, artifacts })
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.artifacts.names()
+    }
+
+    /// The ConvLayer shape an artifact was compiled for (shape is baked
+    /// into the HLO; the caller must match it).
+    pub fn layer_of(&self, name: &str) -> Result<ConvLayer> {
+        let e = self.artifacts.get(name)?;
+        anyhow::ensure!(e.kind == "conv", "artifact {name} is {:?}, not conv", e.kind);
+        Ok(ConvLayer {
+            name: "artifact",
+            in_c: e.in_c,
+            in_h: e.in_h,
+            in_w: e.in_w,
+            out_c: e.out_c,
+            k: e.k,
+            stride: e.stride,
+            pad: e.pad,
+            relu: e.relu,
+        })
+    }
+
+    /// Execute the named conv artifact. Input sizes must match the baked
+    /// shape; returns the quantized output map.
+    pub fn run_conv(
+        &mut self,
+        name: &str,
+        ifmap: &[Fixed16],
+        weights: &[Fixed16],
+        bias: &[Fixed16],
+    ) -> Result<Vec<Fixed16>> {
+        let layer = self.layer_of(name)?;
+        anyhow::ensure!(
+            ifmap.len() == layer.ifmap_words(),
+            "ifmap size {} != expected {}",
+            ifmap.len(),
+            layer.ifmap_words()
+        );
+        anyhow::ensure!(weights.len() == layer.out_c * layer.in_c * layer.k * layer.k);
+        anyhow::ensure!(bias.len() == layer.out_c);
+        if !self.client.is_loaded(name) {
+            let path = self.artifacts.get(name)?.path.clone();
+            self.client.load_hlo_text(name, &path)?;
+        }
+        let to_f64 = |xs: &[Fixed16]| -> Vec<f64> { xs.iter().map(|v| v.0 as f64).collect() };
+        let lit = |xs: &[Fixed16]| -> Result<xla::Literal> {
+            Ok(xla::Literal::vec1(&to_f64(xs)))
+        };
+        let outputs = self
+            .client
+            .execute(name, &[lit(ifmap)?, lit(weights)?, lit(bias)?])
+            .with_context(|| format!("conv artifact {name}"))?;
+        anyhow::ensure!(outputs.len() == 1, "expected 1 output, got {}", outputs.len());
+        let raw: Vec<f64> = outputs[0].to_vec::<f64>().context("reading output literal")?;
+        anyhow::ensure!(
+            raw.len() == layer.ofmap_words(),
+            "output size {} != expected {}",
+            raw.len(),
+            layer.ofmap_words()
+        );
+        Ok(raw
+            .into_iter()
+            .map(|v| {
+                debug_assert!(v.fract() == 0.0, "artifact output must be integral, got {v}");
+                Fixed16(v.clamp(i16::MIN as f64, i16::MAX as f64) as i16)
+            })
+            .collect())
+    }
+}
+
+// Integration tests (needing real artifacts) are in
+// rust/tests/runtime_integration.rs.

@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the HLO-text artifacts that `python/compile/aot.py`
+//! produced at build time and executes them from the Rust hot path.
+//! Python is never involved at run time.
+//!
+//! Interchange is HLO **text**, not serialized `HloModuleProto` —
+//! jax >= 0.5 emits protos with 64-bit instruction ids that the
+//! xla_extension 0.5.1 backing the `xla` crate rejects; the text parser
+//! reassigns ids and round-trips cleanly (see /opt/xla-example/README).
+
+pub mod artifacts;
+pub mod client;
+pub mod executor;
+
+pub use artifacts::Artifacts;
+pub use client::RuntimeClient;
+pub use executor::ConvExecutor;

@@ -1,0 +1,192 @@
+//! Registered valid/ready stream channel.
+//!
+//! Semantics (matching a synchronous RTL FIFO with registered flags):
+//!
+//! * `pop`/`peek` only observe items committed on *previous* cycles, so a
+//!   push and a pop in the same cycle never race regardless of component
+//!   tick order — an item pushed on cycle `c` is poppable on `c+1` at the
+//!   earliest (one register stage of latency, as real inter-module FIFOs
+//!   have).
+//! * `can_push` compares start-of-cycle occupancy plus this cycle's
+//!   pushes against capacity: space freed by a pop on cycle `c` becomes
+//!   visible to the producer on `c+1` (registered `full`), which is the
+//!   conservative behaviour real designs use to close timing.
+//!
+//! The netlist owner must call [`Channel::commit`] exactly once per cycle
+//! after ticking all components.
+
+use std::collections::VecDeque;
+
+#[derive(Debug)]
+pub struct Channel<T> {
+    name: &'static str,
+    cap: usize,
+    /// Items visible to the consumer (committed on prior cycles).
+    q: VecDeque<T>,
+    /// Items pushed this cycle; moved into `q` at commit.
+    staged: Vec<T>,
+    /// Occupancy at the start of the current cycle (set by commit).
+    start_len: usize,
+    /// Lifetime counters.
+    pushed_total: u64,
+    popped_total: u64,
+}
+
+impl<T> Channel<T> {
+    pub fn new(name: &'static str, cap: usize) -> Self {
+        assert!(cap >= 1, "channel {name} needs capacity >= 1");
+        Channel {
+            name,
+            cap,
+            q: VecDeque::with_capacity(cap),
+            staged: Vec::new(),
+            start_len: 0,
+            pushed_total: 0,
+            popped_total: 0,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Producer-side ready: may `push` be called this cycle?
+    pub fn can_push(&self) -> bool {
+        self.start_len + self.staged.len() < self.cap
+    }
+
+    /// Push an item; visible to the consumer from the next cycle.
+    /// Panics if `can_push()` is false — producers must check ready,
+    /// exactly as RTL must respect backpressure.
+    pub fn push(&mut self, v: T) {
+        assert!(self.can_push(), "push into full channel {}", self.name);
+        self.staged.push(v);
+        self.pushed_total += 1;
+    }
+
+    /// Consumer-side valid: is there a committed item to pop?
+    pub fn can_pop(&self) -> bool {
+        !self.q.is_empty()
+    }
+
+    pub fn peek(&self) -> Option<&T> {
+        self.q.front()
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        let v = self.q.pop_front();
+        if v.is_some() {
+            self.popped_total += 1;
+        }
+        v
+    }
+
+    /// Number of items currently visible to the consumer.
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Total occupancy including uncommitted pushes (for assertions and
+    /// capacity accounting, not for component logic).
+    pub fn occupancy(&self) -> usize {
+        self.q.len() + self.staged.len()
+    }
+
+    pub fn pushed_total(&self) -> u64 {
+        self.pushed_total
+    }
+
+    pub fn popped_total(&self) -> u64 {
+        self.popped_total
+    }
+
+    /// End-of-cycle commit: make this cycle's pushes visible and latch
+    /// the occupancy that next cycle's `can_push` checks against.
+    pub fn commit(&mut self) {
+        self.q.extend(self.staged.drain(..));
+        self.start_len = self.q.len();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_not_visible_until_commit() {
+        let mut ch = Channel::new("t", 4);
+        ch.push(1u32);
+        assert!(!ch.can_pop(), "push must not be visible same cycle");
+        ch.commit();
+        assert!(ch.can_pop());
+        assert_eq!(ch.pop(), Some(1));
+    }
+
+    #[test]
+    fn registered_ready_conservative() {
+        let mut ch = Channel::new("t", 1);
+        ch.push(1u32);
+        ch.commit();
+        // Cycle 2: consumer pops, but producer still sees full (registered
+        // full flag) because start-of-cycle occupancy was 1.
+        assert_eq!(ch.pop(), Some(1));
+        assert!(!ch.can_push());
+        ch.commit();
+        // Cycle 3: space is now visible.
+        assert!(ch.can_push());
+        ch.push(2);
+        ch.commit();
+        assert_eq!(ch.pop(), Some(2));
+    }
+
+    #[test]
+    fn capacity_respected_within_cycle() {
+        let mut ch = Channel::new("t", 2);
+        ch.push(1u32);
+        ch.push(2);
+        assert!(!ch.can_push());
+        ch.commit();
+        assert_eq!(ch.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "push into full channel")]
+    fn push_when_full_panics() {
+        let mut ch = Channel::new("t", 1);
+        ch.push(1u32);
+        ch.push(2);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut ch = Channel::new("t", 8);
+        for i in 0..5u32 {
+            ch.push(i);
+        }
+        ch.commit();
+        for i in 0..5u32 {
+            assert_eq!(ch.pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn counters_track_traffic() {
+        let mut ch = Channel::new("t", 4);
+        for i in 0..3u32 {
+            ch.push(i);
+        }
+        ch.commit();
+        ch.pop();
+        assert_eq!(ch.pushed_total(), 3);
+        assert_eq!(ch.popped_total(), 1);
+        assert_eq!(ch.occupancy(), 2);
+    }
+}

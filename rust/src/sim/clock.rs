@@ -1,0 +1,155 @@
+//! Multi-rate clocking.
+//!
+//! The paper's systems have (at least) two clock domains: the DDR3
+//! memory controller's fixed 200 MHz domain and the accelerator fabric
+//! domain whose frequency is whatever place-and-route achieves (25–450
+//! MHz in Fig 6). Bandwidth delivered to the accelerator depends on the
+//! *ratio* of these clocks, so the simulator models domains explicitly.
+//!
+//! [`Scheduler`] advances simulated time edge by edge: at each step it
+//! finds the domain(s) with the earliest next rising edge and reports
+//! which domains fire. Components are grouped per domain by the netlist
+//! owner, which ticks + commits them when their domain fires.
+
+/// One clock domain, defined by its period in picoseconds.
+#[derive(Clone, Debug)]
+pub struct ClockDomain {
+    pub name: &'static str,
+    pub period_ps: u64,
+    /// Cycles elapsed in this domain.
+    pub cycles: u64,
+    /// Absolute time (ps) of the next rising edge.
+    next_edge_ps: u64,
+}
+
+impl ClockDomain {
+    pub fn from_mhz(name: &'static str, mhz: f64) -> Self {
+        assert!(mhz > 0.0, "clock {name} must have positive frequency");
+        let period_ps = (1_000_000.0 / mhz).round() as u64;
+        ClockDomain { name, period_ps, cycles: 0, next_edge_ps: 0 }
+    }
+
+    pub fn freq_mhz(&self) -> f64 {
+        1_000_000.0 / self.period_ps as f64
+    }
+}
+
+/// Edge-ordered scheduler over a set of clock domains.
+#[derive(Debug)]
+pub struct Scheduler {
+    domains: Vec<ClockDomain>,
+    now_ps: u64,
+}
+
+impl Scheduler {
+    pub fn new(domains: Vec<ClockDomain>) -> Self {
+        assert!(!domains.is_empty());
+        Scheduler { domains, now_ps: 0 }
+    }
+
+    /// Single-domain convenience constructor.
+    pub fn single(name: &'static str, mhz: f64) -> Self {
+        Scheduler::new(vec![ClockDomain::from_mhz(name, mhz)])
+    }
+
+    pub fn now_ps(&self) -> u64 {
+        self.now_ps
+    }
+
+    pub fn domain(&self, idx: usize) -> &ClockDomain {
+        &self.domains[idx]
+    }
+
+    pub fn num_domains(&self) -> usize {
+        self.domains.len()
+    }
+
+    /// Advance to the next rising edge(s). Returns the indices of every
+    /// domain that fires at that instant (simultaneous edges fire
+    /// together, as in RTL simulation) and updates their cycle counters.
+    pub fn step(&mut self) -> Vec<usize> {
+        let t = self.domains.iter().map(|d| d.next_edge_ps).min().unwrap();
+        self.now_ps = t;
+        let mut fired = Vec::new();
+        for (i, d) in self.domains.iter_mut().enumerate() {
+            if d.next_edge_ps == t {
+                d.cycles += 1;
+                d.next_edge_ps += d.period_ps;
+                fired.push(i);
+            }
+        }
+        fired
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_domain_counts_cycles() {
+        let mut s = Scheduler::single("clk", 200.0);
+        for _ in 0..10 {
+            let fired = s.step();
+            assert_eq!(fired, vec![0]);
+        }
+        assert_eq!(s.domain(0).cycles, 10);
+        // 200 MHz -> 5 ns period; 10 edges end at t = 9 periods after the
+        // first edge at t=0.
+        assert_eq!(s.now_ps(), 9 * 5_000);
+    }
+
+    #[test]
+    fn two_to_one_ratio() {
+        // Fabric at 100 MHz, controller at 200 MHz: controller should see
+        // exactly 2x the edges over a long window.
+        let mut s = Scheduler::new(vec![
+            ClockDomain::from_mhz("fabric", 100.0),
+            ClockDomain::from_mhz("mem", 200.0),
+        ]);
+        let (mut fab, mut mem) = (0u64, 0u64);
+        for _ in 0..3000 {
+            for d in s.step() {
+                match d {
+                    0 => fab += 1,
+                    1 => mem += 1,
+                    _ => unreachable!(),
+                }
+            }
+        }
+        assert!(mem > 0 && fab > 0);
+        let ratio = mem as f64 / fab as f64;
+        assert!((ratio - 2.0).abs() < 0.01, "ratio {ratio}");
+    }
+
+    #[test]
+    fn irrational_ratio_approximates() {
+        // 225 MHz fabric vs 200 MHz controller — the Fig 6 sweet spot.
+        let mut s = Scheduler::new(vec![
+            ClockDomain::from_mhz("fabric", 225.0),
+            ClockDomain::from_mhz("mem", 200.0),
+        ]);
+        let (mut fab, mut mem) = (0u64, 0u64);
+        for _ in 0..10_000 {
+            for d in s.step() {
+                match d {
+                    0 => fab += 1,
+                    1 => mem += 1,
+                    _ => unreachable!(),
+                }
+            }
+        }
+        let ratio = fab as f64 / mem as f64;
+        assert!((ratio - 225.0 / 200.0).abs() < 0.02, "ratio {ratio}");
+    }
+
+    #[test]
+    fn simultaneous_edges_fire_together() {
+        let mut s = Scheduler::new(vec![
+            ClockDomain::from_mhz("a", 100.0),
+            ClockDomain::from_mhz("b", 100.0),
+        ]);
+        let fired = s.step();
+        assert_eq!(fired, vec![0, 1]);
+    }
+}

@@ -1,0 +1,35 @@
+//! Cycle-accurate simulation kernel.
+//!
+//! The interconnect, DRAM controller, and layer-processor models are all
+//! *clocked components*: structs that advance one fabric cycle at a time
+//! under two-phase (evaluate/commit) semantics so the result of a cycle
+//! never depends on the order in which components are ticked.
+//!
+//! * [`channel::Channel`] — a registered valid/ready stream between two
+//!   components: pushes become visible at the next commit, `ready` is
+//!   computed against start-of-cycle occupancy (like an RTL FIFO with a
+//!   registered `full` flag).
+//! * [`clock::ClockDomain`] / [`clock::Scheduler`] — multi-rate clocking
+//!   (the DDR3 controller runs in its own 200 MHz domain; the fabric
+//!   runs at whatever the P&R model says the design closes at).
+//! * [`stats::Stats`] — named counters shared by all components.
+//! * [`trace::Trace`] — optional bounded event trace for debugging.
+
+pub mod channel;
+pub mod clock;
+pub mod stats;
+pub mod trace;
+
+pub use channel::Channel;
+pub use clock::{ClockDomain, Scheduler};
+pub use stats::Stats;
+pub use trace::Trace;
+
+/// A clocked hardware component. `tick` evaluates one cycle's worth of
+/// combinational logic + register updates against the component's *own*
+/// state and its channels' committed state; cross-component visibility of
+/// channel pushes is deferred to [`Channel::commit`], which the owner of
+/// the netlist calls once per cycle after all components have ticked.
+pub trait Clocked {
+    fn tick(&mut self, cycle: u64);
+}

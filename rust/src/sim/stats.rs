@@ -1,0 +1,156 @@
+//! Named counters and simple distributions collected during simulation.
+//!
+//! Components take `&mut Stats` during ticks; the coordinator aggregates
+//! and prints them. String keys are interned as `&'static str` at the
+//! call sites (all counter names are literals), so the hot path is a
+//! `HashMap<&'static str, u64>` bump — cheap enough that counters stay on
+//! even in benchmark runs.
+
+use std::collections::HashMap;
+use std::fmt;
+
+#[derive(Default, Debug)]
+pub struct Stats {
+    counters: HashMap<&'static str, u64>,
+    /// min/max/sum/count per named sample series (e.g. latencies).
+    samples: HashMap<&'static str, Series>,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Series {
+    pub min: u64,
+    pub max: u64,
+    pub sum: u64,
+    pub count: u64,
+}
+
+impl Series {
+    fn new() -> Self {
+        Series { min: u64::MAX, max: 0, sum: 0, count: 0 }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Stats::default()
+    }
+
+    pub fn bump(&mut self, key: &'static str) {
+        *self.counters.entry(key).or_insert(0) += 1;
+    }
+
+    pub fn add(&mut self, key: &'static str, n: u64) {
+        *self.counters.entry(key).or_insert(0) += n;
+    }
+
+    pub fn get(&self, key: &str) -> u64 {
+        self.counters.get(key).copied().unwrap_or(0)
+    }
+
+    pub fn sample(&mut self, key: &'static str, v: u64) {
+        let s = self.samples.entry(key).or_insert_with(Series::new);
+        s.min = s.min.min(v);
+        s.max = s.max.max(v);
+        s.sum += v;
+        s.count += 1;
+    }
+
+    pub fn series(&self, key: &str) -> Option<&Series> {
+        self.samples.get(key)
+    }
+
+    /// Merge another Stats into this one (used when joining per-thread
+    /// sweeps).
+    pub fn merge(&mut self, other: &Stats) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k).or_insert(0) += v;
+        }
+        for (k, s) in &other.samples {
+            let e = self.samples.entry(k).or_insert_with(Series::new);
+            e.min = e.min.min(s.min);
+            e.max = e.max.max(s.max);
+            e.sum += s.sum;
+            e.count += s.count;
+        }
+    }
+
+    pub fn counters(&self) -> impl Iterator<Item = (&&'static str, &u64)> {
+        self.counters.iter()
+    }
+}
+
+impl fmt::Display for Stats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut keys: Vec<_> = self.counters.keys().collect();
+        keys.sort();
+        for k in keys {
+            writeln!(f, "  {k:<40} {}", self.counters[*k])?;
+        }
+        let mut keys: Vec<_> = self.samples.keys().collect();
+        keys.sort();
+        for k in keys {
+            let s = &self.samples[*k];
+            writeln!(
+                f,
+                "  {k:<40} min={} max={} mean={:.2} n={}",
+                if s.count == 0 { 0 } else { s.min },
+                s.max,
+                s.mean(),
+                s.count
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut s = Stats::new();
+        s.bump("a");
+        s.bump("a");
+        s.add("a", 3);
+        assert_eq!(s.get("a"), 5);
+        assert_eq!(s.get("missing"), 0);
+    }
+
+    #[test]
+    fn samples_track_min_max_mean() {
+        let mut s = Stats::new();
+        for v in [3u64, 1, 4, 1, 5] {
+            s.sample("lat", v);
+        }
+        let series = s.series("lat").unwrap();
+        assert_eq!(series.min, 1);
+        assert_eq!(series.max, 5);
+        assert_eq!(series.count, 5);
+        assert!((series.mean() - 2.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Stats::new();
+        a.add("x", 2);
+        a.sample("lat", 10);
+        let mut b = Stats::new();
+        b.add("x", 3);
+        b.sample("lat", 2);
+        a.merge(&b);
+        assert_eq!(a.get("x"), 5);
+        let s = a.series("lat").unwrap();
+        assert_eq!(s.min, 2);
+        assert_eq!(s.max, 10);
+        assert_eq!(s.count, 2);
+    }
+}

@@ -1,0 +1,102 @@
+//! Bounded event trace for debugging cycle-level behaviour.
+//!
+//! Off by default (zero cost beyond a branch); when enabled it records
+//! `(cycle, component, event)` tuples into a ring buffer and can dump
+//! them as text or a minimal VCD-like listing. Used heavily while
+//! bringing up the transposition control logic.
+
+use std::collections::VecDeque;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub cycle: u64,
+    pub component: &'static str,
+    pub detail: String,
+}
+
+#[derive(Debug)]
+pub struct Trace {
+    enabled: bool,
+    cap: usize,
+    events: VecDeque<Event>,
+    dropped: u64,
+}
+
+impl Trace {
+    pub fn disabled() -> Self {
+        Trace { enabled: false, cap: 0, events: VecDeque::new(), dropped: 0 }
+    }
+
+    pub fn bounded(cap: usize) -> Self {
+        Trace { enabled: true, cap, events: VecDeque::with_capacity(cap.min(4096)), dropped: 0 }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    #[inline]
+    pub fn record(&mut self, cycle: u64, component: &'static str, detail: impl FnOnce() -> String) {
+        if !self.enabled {
+            return;
+        }
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(Event { cycle, component, detail: detail() });
+    }
+
+    pub fn events(&self) -> impl Iterator<Item = &Event> {
+        self.events.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        if self.dropped > 0 {
+            out.push_str(&format!("... {} earlier events dropped ...\n", self.dropped));
+        }
+        for e in &self.events {
+            out.push_str(&format!("@{:>8} {:<24} {}\n", e.cycle, e.component, e.detail));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let mut t = Trace::disabled();
+        t.record(1, "x", || "should not materialize".to_string());
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn bounded_trace_drops_oldest() {
+        let mut t = Trace::bounded(2);
+        t.record(1, "a", || "e1".into());
+        t.record(2, "b", || "e2".into());
+        t.record(3, "c", || "e3".into());
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.dropped(), 1);
+        let evs: Vec<_> = t.events().map(|e| e.cycle).collect();
+        assert_eq!(evs, vec![2, 3]);
+        assert!(t.dump().contains("earlier events dropped"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Minimal property-based testing harness.
+//!
+//! The offline registry has no `proptest`/`quickcheck`, so invariant
+//! tests use this small in-repo harness: seeded random case generation
+//! with greedy shrinking on failure. It is intentionally tiny — enough to
+//! express "for all geometries and traffic patterns, transposition
+//! preserves data" style properties with reproducible failures.
+
+pub mod prop;
+
+pub use prop::{check, Config, Gen};

@@ -1,0 +1,226 @@
+//! `check(cfg, gen, prop)` — run `prop` over `cfg.cases` random inputs
+//! drawn via `gen`; on failure, greedily shrink the failing input and
+//! panic with the minimal case and the seed to reproduce it.
+
+use crate::util::Prng;
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+/// Default seed: ASCII "MEDUSA!1".
+pub const DEFAULT_SEED: u64 = 0x4d45_4455_5341_2131;
+
+impl Default for Config {
+    fn default() -> Self {
+        // MEDUSA_PROP_CASES / MEDUSA_PROP_SEED override for soak runs.
+        let cases = std::env::var("MEDUSA_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        let seed = std::env::var("MEDUSA_PROP_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(DEFAULT_SEED);
+        Config { cases, seed, max_shrink_steps: 400 }
+    }
+}
+
+/// Something that can generate values of `T` from randomness, and shrink
+/// a failing value toward smaller cases.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Prng) -> T;
+    /// Candidate smaller values, most aggressive first. Empty = atomic.
+    fn shrink(&self, value: &T) -> Vec<T>;
+}
+
+/// Run the property; panics with a reproducer on failure.
+pub fn check<T, G, P>(cfg: Config, gen: &G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Gen<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Prng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen.generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (min_input, min_msg, steps) =
+                shrink_loop(cfg, gen, &prop, input.clone(), msg.clone());
+            panic!(
+                "property failed (case {case}/{}, seed {:#x}):\n  original: {input:?}\n  original error: {msg}\n  shrunk ({steps} steps): {min_input:?}\n  shrunk error: {min_msg}\n  reproduce with MEDUSA_PROP_SEED={}",
+                cfg.cases, cfg.seed, cfg.seed
+            );
+        }
+    }
+}
+
+fn shrink_loop<T, G, P>(
+    cfg: Config,
+    gen: &G,
+    prop: &P,
+    mut failing: T,
+    mut msg: String,
+) -> (T, String, usize)
+where
+    T: std::fmt::Debug + Clone,
+    G: Gen<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut steps = 0;
+    'outer: while steps < cfg.max_shrink_steps {
+        for cand in gen.shrink(&failing) {
+            steps += 1;
+            if steps >= cfg.max_shrink_steps {
+                break 'outer;
+            }
+            if let Err(m) = prop(&cand) {
+                failing = cand;
+                msg = m;
+                continue 'outer;
+            }
+        }
+        break; // no candidate still fails: local minimum
+    }
+    (failing, msg, steps)
+}
+
+/// Generator for integers in an inclusive range, shrinking toward `lo`.
+pub struct IntRange {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen<usize> for IntRange {
+    fn generate(&self, rng: &mut Prng) -> usize {
+        rng.range(self.lo, self.hi)
+    }
+
+    fn shrink(&self, value: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let v = *value;
+        if v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (v - self.lo) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out.retain(|&c| c != v);
+        out
+    }
+}
+
+/// Generator pairing two independent generators.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<T, U, A: Gen<T>, B: Gen<U>> Gen<(T, U)> for Pair<A, B>
+where
+    T: Clone,
+    U: Clone,
+{
+    fn generate(&self, rng: &mut Prng) -> (T, U) {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, value: &(T, U)) -> Vec<(T, U)> {
+        let mut out = Vec::new();
+        for a in self.0.shrink(&value.0) {
+            out.push((a, value.1.clone()));
+        }
+        for b in self.1.shrink(&value.1) {
+            out.push((value.0.clone(), b));
+        }
+        out
+    }
+}
+
+/// Generator for vectors with length in `[0, max_len]`, shrinking by
+/// halving the vector and shrinking elements.
+pub struct VecOf<G> {
+    pub elem: G,
+    pub max_len: usize,
+}
+
+impl<T: Clone, G: Gen<T>> Gen<Vec<T>> for VecOf<G> {
+    fn generate(&self, rng: &mut Prng) -> Vec<T> {
+        let len = rng.range(0, self.max_len);
+        (0..len).map(|_| self.elem.generate(rng)).collect()
+    }
+
+    fn shrink(&self, value: &Vec<T>) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        if !value.is_empty() {
+            out.push(value[..value.len() / 2].to_vec());
+            out.push(value[1..].to_vec());
+            let mut butlast = value.clone();
+            butlast.pop();
+            out.push(butlast);
+            // Shrink the first element as a representative.
+            for e in self.elem.shrink(&value[0]) {
+                let mut v = value.clone();
+                v[0] = e;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let cfg = Config { cases: 50, seed: 1, max_shrink_steps: 10 };
+        check(cfg, &IntRange { lo: 0, hi: 100 }, |&v| {
+            if v <= 100 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimum() {
+        let cfg = Config { cases: 200, seed: 2, max_shrink_steps: 200 };
+        let result = std::panic::catch_unwind(|| {
+            check(cfg, &IntRange { lo: 0, hi: 1000 }, |&v| {
+                if v < 50 {
+                    Ok(())
+                } else {
+                    Err(format!("{v} >= 50"))
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Greedy shrink should land exactly on the boundary.
+        assert!(msg.contains("shrunk"), "{msg}");
+        assert!(msg.contains(": 50"), "should shrink to 50, got: {msg}");
+    }
+
+    #[test]
+    fn vec_generator_shrinks_toward_empty() {
+        let g = VecOf { elem: IntRange { lo: 0, hi: 9 }, max_len: 8 };
+        let mut rng = Prng::new(3);
+        let v = g.generate(&mut rng);
+        assert!(v.len() <= 8);
+        if !v.is_empty() {
+            let shrunk = g.shrink(&v);
+            assert!(shrunk.iter().any(|s| s.len() < v.len()));
+        }
+    }
+
+    #[test]
+    fn pair_generator_shrinks_components() {
+        let g = Pair(IntRange { lo: 0, hi: 10 }, IntRange { lo: 5, hi: 9 });
+        let cands = g.shrink(&(10, 9));
+        assert!(cands.contains(&(0, 9)));
+        assert!(cands.contains(&(10, 5)));
+    }
+}

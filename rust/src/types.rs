@@ -1,0 +1,226 @@
+//! Core data types shared across the simulator: words, memory lines, and
+//! the interconnect geometry that parameterizes every design point.
+
+use std::fmt;
+
+/// One accelerator-port word. The paper's accelerators use 8- or 16-bit
+/// fixed-point words; we carry them in a `u64` so a single simulator
+/// handles any `W_acc` up to 64 bits. Values are always masked to
+/// `W_acc` bits at the boundaries.
+pub type Word = u64;
+
+/// Index of a narrow accelerator port (read and write ports are numbered
+/// independently, each from 0).
+pub type PortId = usize;
+
+/// Address of a memory line (in units of `W_line`-bit lines).
+pub type LineAddr = u64;
+
+/// One `W_line`-bit memory line, as the `N = W_line / W_acc` accelerator
+/// words it carries. Word `y` of the line occupies bits
+/// `[y*W_acc, (y+1)*W_acc)` of the DRAM controller interface.
+#[derive(Clone, PartialEq, Eq)]
+pub struct Line {
+    words: Box<[Word]>,
+}
+
+impl Line {
+    /// A line of `n` zero words.
+    pub fn zeroed(n: usize) -> Self {
+        Line { words: vec![0; n].into_boxed_slice() }
+    }
+
+    /// Build a line from its words (word 0 = least-significant lane).
+    pub fn from_words(words: Vec<Word>) -> Self {
+        Line { words: words.into_boxed_slice() }
+    }
+
+    /// Number of `W_acc` words in the line (= interconnect port count N).
+    pub fn num_words(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn word(&self, idx: usize) -> Word {
+        self.words[idx]
+    }
+
+    pub fn set_word(&mut self, idx: usize, w: Word) {
+        self.words[idx] = w;
+    }
+
+    pub fn words(&self) -> &[Word] {
+        &self.words
+    }
+
+    /// Deterministic content hash (FNV-1a), used by integrity checks.
+    pub fn fnv1a(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for w in self.words.iter() {
+            for b in w.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x1000_0000_01b3);
+            }
+        }
+        h
+    }
+}
+
+impl fmt::Debug for Line {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Line[")?;
+        for (i, w) in self.words.iter().enumerate() {
+            if i > 0 {
+                write!(f, " ")?;
+            }
+            write!(f, "{w:04x}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Geometry of one interconnect design point: the widths and port counts
+/// that parameterize both the baseline and the Medusa data-transfer
+/// networks (paper §II-B notation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Geometry {
+    /// DRAM controller interface width in bits (`W_line`), e.g. 512.
+    pub w_line: usize,
+    /// Narrow accelerator-port width in bits (`W_acc`), e.g. 16.
+    pub w_acc: usize,
+    /// Number of read ports.
+    pub read_ports: usize,
+    /// Number of write ports.
+    pub write_ports: usize,
+    /// Maximum burst length a single port request may generate, in
+    /// `W_line`-bit lines (the paper evaluates 32).
+    pub max_burst: usize,
+}
+
+impl Geometry {
+    /// The paper's representative design point (§IV-C): 512-bit DDR3
+    /// controller interface multiplexed to 32 16-bit read ports and 32
+    /// 16-bit write ports, 32-line maximum bursts.
+    pub fn paper_default() -> Self {
+        Geometry { w_line: 512, w_acc: 16, read_ports: 32, write_ports: 32, max_burst: 32 }
+    }
+
+    /// Words per memory line (`N` in the paper when ports fully subscribe
+    /// the interface).
+    pub fn words_per_line(&self) -> usize {
+        debug_assert_eq!(self.w_line % self.w_acc, 0, "W_line must be a multiple of W_acc");
+        self.w_line / self.w_acc
+    }
+
+    /// Mask selecting the low `w_acc` bits of a word.
+    pub fn word_mask(&self) -> Word {
+        if self.w_acc >= 64 {
+            Word::MAX
+        } else {
+            (1u64 << self.w_acc) - 1
+        }
+    }
+
+    /// The transposition latency overhead the paper derives in §III-E:
+    /// `W_line / W_acc` fabric cycles.
+    pub fn transpose_latency(&self) -> usize {
+        self.words_per_line()
+    }
+
+    /// Validate structural constraints shared by all designs.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.w_line > 0 && self.w_acc > 0, "widths must be positive");
+        anyhow::ensure!(self.w_line % self.w_acc == 0, "W_line must be a multiple of W_acc");
+        anyhow::ensure!(self.w_line.is_power_of_two(), "W_line must be a power of two");
+        anyhow::ensure!(self.w_acc <= 64, "W_acc wider than 64 bits is unsupported");
+        anyhow::ensure!(self.read_ports >= 1, "need at least one read port");
+        anyhow::ensure!(self.write_ports >= 1, "need at least one write port");
+        anyhow::ensure!(
+            self.read_ports <= self.words_per_line(),
+            "more read ports than words per line ({} > {})",
+            self.read_ports,
+            self.words_per_line()
+        );
+        anyhow::ensure!(
+            self.write_ports <= self.words_per_line(),
+            "more write ports than words per line ({} > {})",
+            self.write_ports,
+            self.words_per_line()
+        );
+        anyhow::ensure!(self.max_burst >= 1, "max burst must be at least 1 line");
+        Ok(())
+    }
+}
+
+/// A burst read request issued on behalf of one narrow port: deliver
+/// `burst_len` consecutive lines starting at `addr`, all destined to
+/// `port` (paper §III-C1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReadRequest {
+    pub port: PortId,
+    pub addr: LineAddr,
+    pub burst_len: usize,
+}
+
+/// A burst write request issued on behalf of one narrow port: write
+/// `burst_len` lines accumulated from `port` to memory starting at
+/// `addr`. The arbiter only issues it once the port has accumulated the
+/// full burst in the interconnect (paper §III-C2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WriteRequest {
+    pub port: PortId,
+    pub addr: LineAddr,
+    pub burst_len: usize,
+}
+
+/// A line travelling from the DRAM controller toward the read network,
+/// tagged with its destination port (the arbiter established the tag when
+/// it issued the request).
+#[derive(Clone, Debug)]
+pub struct TaggedLine {
+    pub port: PortId,
+    pub line: Line,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_paper_default_is_valid() {
+        let g = Geometry::paper_default();
+        g.validate().unwrap();
+        assert_eq!(g.words_per_line(), 32);
+        assert_eq!(g.transpose_latency(), 32);
+        assert_eq!(g.word_mask(), 0xffff);
+    }
+
+    #[test]
+    fn geometry_rejects_bad_widths() {
+        let mut g = Geometry::paper_default();
+        g.w_acc = 24; // not a divisor of 512
+        assert!(g.validate().is_err());
+        let mut g = Geometry::paper_default();
+        g.read_ports = 64; // more ports than words per line
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn geometry_allows_non_power_of_two_ports() {
+        // Paper §III-G: irregular (non-power-of-two) port counts are legal.
+        let g = Geometry { w_line: 512, w_acc: 16, read_ports: 20, write_ports: 20, max_burst: 32 };
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn line_roundtrip_and_hash() {
+        let mut l = Line::zeroed(4);
+        l.set_word(2, 0xbeef);
+        assert_eq!(l.word(2), 0xbeef);
+        assert_eq!(l.num_words(), 4);
+        let l2 = Line::from_words(vec![0, 0, 0xbeef, 0]);
+        assert_eq!(l, l2);
+        assert_eq!(l.fnv1a(), l2.fnv1a());
+        let l3 = Line::from_words(vec![0, 0, 0xbeee, 0]);
+        assert_ne!(l.fnv1a(), l3.fnv1a());
+    }
+}

@@ -1,0 +1,153 @@
+//! Minimal benchmarking harness (the offline registry has no criterion).
+//!
+//! `cargo bench` runs each `[[bench]]` target with `harness = false`;
+//! targets use [`Bench`] to time closures with warmup, multiple samples,
+//! and median/mean/min reporting, and print aligned rows so
+//! `bench_output.txt` is self-describing.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<Duration>,
+    /// Work units per iteration (e.g. lines transferred) for throughput.
+    pub units_per_iter: u64,
+    pub unit_name: &'static str,
+}
+
+impl Measurement {
+    pub fn median(&self) -> Duration {
+        let mut s = self.samples.clone();
+        s.sort();
+        s[s.len() / 2]
+    }
+
+    pub fn min(&self) -> Duration {
+        *self.samples.iter().min().unwrap()
+    }
+
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len() as u32
+    }
+
+    /// Units per second at the median sample.
+    pub fn throughput(&self) -> f64 {
+        let secs = self.median().as_secs_f64();
+        if secs == 0.0 {
+            f64::INFINITY
+        } else {
+            self.units_per_iter as f64 / secs
+        }
+    }
+}
+
+pub struct Bench {
+    pub warmup: usize,
+    pub samples: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        // MEDUSA_BENCH_SAMPLES=1 gives quick smoke runs in CI.
+        let samples = std::env::var("MEDUSA_BENCH_SAMPLES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(10);
+        Bench { warmup: 2, samples, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Bench::default()
+    }
+
+    /// Time `f` (whole-call granularity); `units` is the work done per
+    /// call for throughput reporting.
+    pub fn run<R>(&mut self, name: impl Into<String>, units: u64, unit_name: &'static str, mut f: impl FnMut() -> R) {
+        let name = name.into();
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        self.results.push(Measurement { name, samples, units_per_iter: units, unit_name });
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Print the aligned report; returns it too (for tee-style capture).
+    pub fn report(&self, title: &str) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("### bench: {title}\n"));
+        out.push_str(&format!(
+            "{:<44} {:>12} {:>12} {:>12} {:>16}\n",
+            "case", "median", "mean", "min", "throughput"
+        ));
+        for m in &self.results {
+            out.push_str(&format!(
+                "{:<44} {:>12} {:>12} {:>12} {:>13.3e} {}/s\n",
+                m.name,
+                fmt_dur(m.median()),
+                fmt_dur(m.mean()),
+                fmt_dur(m.min()),
+                m.throughput(),
+                m.unit_name,
+            ));
+        }
+        print!("{out}");
+        out
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_reports() {
+        let mut b = Bench { warmup: 1, samples: 3, results: Vec::new() };
+        let mut acc = 0u64;
+        b.run("spin", 1000, "items", || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert_eq!(b.results().len(), 1);
+        let m = &b.results()[0];
+        assert_eq!(m.samples.len(), 3);
+        assert!(m.throughput() > 0.0);
+        let rep = b.report("test");
+        assert!(rep.contains("spin"));
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500ns");
+        assert_eq!(fmt_dur(Duration::from_micros(1500)), "1.50ms");
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+}

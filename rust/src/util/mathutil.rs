@@ -1,0 +1,82 @@
+//! Integer math helpers for the resource and timing models.
+
+/// Ceiling division for positive integers.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// `ceil(log2(n))` — the number of select bits / mux layers needed to
+/// address or rotate among `n` items. `ceil_log2(1) == 0`.
+pub fn ceil_log2(n: usize) -> usize {
+    debug_assert!(n > 0);
+    (usize::BITS - (n - 1).leading_zeros()) as usize
+}
+
+/// Smallest power of two >= `n` (used to size memory interfaces for
+/// irregular port counts, paper §IV-D: "the width of the memory interface
+/// is always set to a power of two").
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// Linear interpolation.
+pub fn lerp(a: f64, b: f64, t: f64) -> f64 {
+    a + (b - a) * t
+}
+
+/// Snap a frequency down to the paper's 25 MHz P&R search grid
+/// (§IV-A: "searching in steps of 25MHz"); frequencies below 25 MHz
+/// report 0 ("Vivado was not able to meet timing at 25MHz").
+pub fn snap_to_freq_grid(mhz: f64) -> u32 {
+    if mhz < 25.0 {
+        0
+    } else {
+        ((mhz / 25.0).floor() as u32) * 25
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(0, 3), 0);
+        assert_eq!(ceil_div(1, 1), 1);
+    }
+
+    #[test]
+    fn ceil_log2_basics() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(32), 5);
+        assert_eq!(ceil_log2(33), 6);
+    }
+
+    #[test]
+    fn next_pow2_basics() {
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(8), 8);
+        assert_eq!(next_pow2(9), 16);
+        // Paper §IV-D examples: 12 ports * 16b = 192b -> 256b iface;
+        // 20 ports * 16b = 320b -> 512b iface.
+        assert_eq!(next_pow2(12 * 16), 256);
+        assert_eq!(next_pow2(20 * 16), 512);
+    }
+
+    #[test]
+    fn freq_grid_snapping() {
+        assert_eq!(snap_to_freq_grid(24.9), 0);
+        assert_eq!(snap_to_freq_grid(25.0), 25);
+        assert_eq!(snap_to_freq_grid(49.9), 25);
+        assert_eq!(snap_to_freq_grid(226.0), 225);
+        assert_eq!(snap_to_freq_grid(200.0), 200);
+    }
+}

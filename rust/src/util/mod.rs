@@ -1,0 +1,11 @@
+//! Small self-contained utilities: a deterministic PRNG (the offline
+//! registry has no `rand`), a leveled logger, and integer math helpers
+//! used throughout the resource and timing models.
+
+pub mod bench;
+pub mod logging;
+pub mod mathutil;
+pub mod prng;
+
+pub use mathutil::{ceil_div, ceil_log2, next_pow2, snap_to_freq_grid};
+pub use prng::Prng;

@@ -1,0 +1,112 @@
+//! Calibration lock: every cell of the paper's Tables I/II and every
+//! qualitative claim of Fig 6, asserted against the models. If a model
+//! change drifts outside tolerance, this suite fails — the reproduction
+//! contract in executable form. EXPERIMENTS.md records the same numbers.
+
+use medusa::eval::{fig6, table1, table2};
+use medusa::fpga::resources::{
+    axis_read, axis_write, baseline_read, baseline_write, full_design, medusa_read, medusa_write,
+};
+use medusa::interconnect::Design;
+
+fn pct_err(model: u64, paper: u64) -> f64 {
+    100.0 * (model as f64 - paper as f64) / paper as f64
+}
+
+#[test]
+fn table1_every_cell_within_15pct() {
+    let g = table1::geometry();
+    let model = [
+        (baseline_read(&g).lut, baseline_read(&g).ff),
+        (axis_read(&g).lut, axis_read(&g).ff),
+        (baseline_write(&g).lut, baseline_write(&g).ff),
+        (axis_write(&g).lut, axis_write(&g).ff),
+    ];
+    for ((name, plut, pff), (mlut, mff)) in table1::PAPER.iter().zip(model.iter()) {
+        let le = pct_err(*mlut, *plut);
+        let fe = pct_err(*mff, *pff);
+        assert!(le.abs() <= 15.0, "{name} LUT: model {mlut} vs paper {plut} ({le:+.1}%)");
+        assert!(fe.abs() <= 15.0, "{name} FF: model {mff} vs paper {pff} ({fe:+.1}%)");
+    }
+}
+
+#[test]
+fn table2_network_cells_within_15pct_and_brams_exact() {
+    let g = table2::geometry();
+    let cells = [
+        ("base read", baseline_read(&g), 18_168u64, 19_210u64, 0u64),
+        ("base write", baseline_write(&g), 26_810, 35_451, 0),
+        ("medusa read", medusa_read(&g), 4_733, 4_759, 32),
+        ("medusa write", medusa_write(&g), 4_777, 4_325, 32),
+    ];
+    for (name, r, plut, pff, pbram) in cells {
+        assert!(pct_err(r.lut, plut).abs() <= 15.0, "{name} LUT {} vs {plut}", r.lut);
+        assert!(pct_err(r.ff, pff).abs() <= 15.0, "{name} FF {} vs {pff}", r.ff);
+        assert_eq!(r.bram18, pbram, "{name} BRAM");
+    }
+}
+
+#[test]
+fn table2_totals_within_10pct() {
+    let g = table2::geometry();
+    let base = full_design(Design::Baseline, &g, table2::DPUS);
+    let med = full_design(Design::Medusa, &g, table2::DPUS);
+    assert!(pct_err(base.lut, 198_887).abs() <= 10.0, "baseline total LUT {}", base.lut);
+    assert!(pct_err(base.ff, 240_449).abs() <= 10.0, "baseline total FF {}", base.ff);
+    assert!(pct_err(base.bram18, 726).abs() <= 5.0, "baseline total BRAM {}", base.bram18);
+    assert_eq!(base.dsp, 2_048);
+    assert!(pct_err(med.lut, 156_409).abs() <= 10.0, "medusa total LUT {}", med.lut);
+    assert!(pct_err(med.ff, 195_158).abs() <= 10.0, "medusa total FF {}", med.ff);
+    assert!(pct_err(med.bram18, 790).abs() <= 5.0, "medusa total BRAM {}", med.bram18);
+    assert_eq!(med.dsp, 2_048);
+}
+
+#[test]
+fn abstract_headline_factors() {
+    // "reduce LUT and FF use by 4.7x and 6.0x, and improves frequency by
+    // 1.8x" — the three numbers in the abstract.
+    let h = table2::headline();
+    assert!((3.8..=5.6).contains(&h.lut_factor), "LUT factor {:.2}", h.lut_factor);
+    assert!((4.8..=7.2).contains(&h.ff_factor), "FF factor {:.2}", h.ff_factor);
+    let pts = fig6::sweep();
+    let at_2048 = pts.iter().find(|p| p.dsps == 2048).unwrap();
+    let speedup = at_2048.medusa_mhz as f64 / at_2048.baseline_mhz.max(1) as f64;
+    assert!(speedup >= 1.8, "frequency speedup at the Table II point: {speedup:.2} (paper 1.8x+)");
+}
+
+#[test]
+fn fig6_regions_and_crossover() {
+    let pts = fig6::sweep();
+    assert_eq!(pts.len(), 11);
+    // Crossover: baseline >= medusa below 1024 DSPs, medusa >= baseline
+    // from 1024 on (§IV-D).
+    for p in &pts {
+        if p.dsps < 1024 {
+            assert!(p.baseline_mhz >= p.medusa_mhz, "{p:?}");
+        } else {
+            assert!(p.medusa_mhz >= p.baseline_mhz, "{p:?}");
+        }
+    }
+    // 1024-bit region: baseline barely usable / failing; Medusa 200-225.
+    for p in pts.iter().filter(|p| p.w_line == 1024) {
+        assert!(p.baseline_mhz <= 50, "{p:?}");
+        assert!((200..=225).contains(&p.medusa_mhz), "{p:?}");
+    }
+    assert!(pts.iter().any(|p| p.w_line == 1024 && p.baseline_mhz == 0));
+    // Medusa can feed the 200 MHz DDR3 controller at every 512-bit point;
+    // the baseline cannot at the larger ones.
+    for p in pts.iter().filter(|p| p.w_line == 512) {
+        assert!(p.medusa_mhz >= 200, "{p:?}");
+    }
+    assert!(pts.iter().any(|p| p.w_line == 512 && p.baseline_mhz < 200));
+}
+
+#[test]
+fn paper_960_bram_claim() {
+    // §IV-C: a BRAM-based baseline would need 960 BRAMs (32x512b FIFO =
+    // 15 BRAM-18K, x64 FIFOs), vs Medusa's 64.
+    use medusa::fpga::resources::bram18_for;
+    assert_eq!(bram18_for(512, 32) * 64, 960);
+    let g = table2::geometry();
+    assert_eq!(medusa_read(&g).bram18 + medusa_write(&g).bram18, 64);
+}

@@ -1,0 +1,105 @@
+//! CLI smoke tests: run the `medusa` binary end-to-end and check its
+//! surfaces (help, eval regeneration, design-point tools, error paths).
+
+use std::process::Command;
+
+fn medusa(args: &[&str]) -> (bool, String, String) {
+    let bin = env!("CARGO_BIN_EXE_medusa");
+    let out = Command::new(bin).args(args).output().expect("binary runs");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+    )
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let (ok, stdout, _) = medusa(&["help"]);
+    assert!(ok);
+    for cmd in ["eval", "infer", "resources", "freq", "sweep", "info"] {
+        assert!(stdout.contains(cmd), "help missing {cmd}");
+    }
+}
+
+#[test]
+fn no_args_prints_usage_successfully() {
+    let (ok, stdout, _) = medusa(&[]);
+    assert!(ok);
+    assert!(stdout.contains("usage: medusa"));
+}
+
+#[test]
+fn unknown_subcommand_fails_with_message() {
+    let (ok, _, stderr) = medusa(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown subcommand"));
+}
+
+#[test]
+fn eval_table1_prints_paper_comparison() {
+    let (ok, stdout, _) = medusa(&["eval", "table1"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("Table I"));
+    assert!(stdout.contains("5,313"), "paper column present");
+}
+
+#[test]
+fn eval_table2_prints_headline() {
+    let (ok, stdout, _) = medusa(&["eval", "table2"]);
+    assert!(ok);
+    assert!(stdout.contains("Medusa Total"));
+    assert!(stdout.contains("headline:"));
+}
+
+#[test]
+fn eval_fig6_prints_regions_and_plot() {
+    let (ok, stdout, _) = medusa(&["eval", "fig6"]);
+    assert!(ok);
+    assert!(stdout.contains("1024-bit"));
+    assert!(stdout.contains("memory interface width regions"));
+}
+
+#[test]
+fn sweep_emits_csv() {
+    let (ok, stdout, _) = medusa(&["sweep"]);
+    assert!(ok);
+    let mut lines = stdout.lines();
+    assert!(lines.next().unwrap().starts_with("DSPs,"));
+    assert_eq!(lines.count(), 11);
+}
+
+#[test]
+fn resources_reports_design_point() {
+    let (ok, stdout, _) = medusa(&["resources", "--design", "baseline", "--ports", "16"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("baseline"));
+    assert!(stdout.contains("utilization"));
+}
+
+#[test]
+fn freq_reports_peak_or_failure() {
+    let (ok, stdout, _) = medusa(&["freq", "--design", "medusa", "--ports", "32"]);
+    assert!(ok);
+    assert!(stdout.contains("MHz peak"), "{stdout}");
+    // The 1024-bit baseline point fails timing (Fig 6).
+    let (ok, stdout, _) =
+        medusa(&["freq", "--design", "baseline", "--ports", "64", "--w-line", "1024", "--dpus", "96"]);
+    assert!(ok);
+    assert!(stdout.contains("FAILS timing"), "{stdout}");
+}
+
+#[test]
+fn bad_geometry_rejected() {
+    let (ok, _, stderr) = medusa(&["resources", "--ports", "999"]);
+    assert!(!ok);
+    assert!(stderr.contains("error"), "{stderr}");
+}
+
+#[test]
+fn info_reports_environment() {
+    let (ok, stdout, _) = medusa(&["info"]);
+    assert!(ok);
+    assert!(stdout.contains("device model"));
+    assert!(stdout.contains("PJRT"));
+}

@@ -1,0 +1,230 @@
+//! Failure injection & robustness: random stalls on every boundary of
+//! the data-transfer networks (memory-side delivery, port-side
+//! consumption, memory-side drain), arbiter policy ablation, and burst
+//! configuration sweeps. The invariant under all of it: data is never
+//! lost, duplicated, or reordered.
+
+use medusa::interconnect::arbiter::{Arbiter, MemCommand, Policy};
+use medusa::interconnect::harness::gen_lines;
+use medusa::interconnect::{build_read_network, build_write_network, Design};
+use medusa::sim::{Channel, Stats};
+use medusa::types::{Geometry, ReadRequest, Word, WriteRequest};
+use medusa::util::Prng;
+
+fn geom(ports: usize, w_line: usize, burst: usize) -> Geometry {
+    Geometry { w_line, w_acc: 16, read_ports: ports, write_ports: ports, max_burst: burst }
+}
+
+/// Read path under random stall storms on both sides.
+#[test]
+fn read_integrity_under_random_stalls() {
+    for design in [Design::Baseline, Design::Medusa, Design::Axis] {
+        for stall_p in [0.1, 0.5, 0.9] {
+            let g = geom(8, 128, 4);
+            let lines = gen_lines(&g, 96, 11);
+            let mut net = build_read_network(design, g);
+            let mut stats = Stats::new();
+            let mut prng = Prng::new(0xfa11 ^ (stall_p * 100.0) as u64);
+            let mut got: Vec<Vec<Word>> = vec![Vec::new(); g.read_ports];
+            let mut next = 0usize;
+            let total_words = lines.len() * g.words_per_line();
+            let mut popped = 0usize;
+            let mut cycles = 0u64;
+            while popped < total_words {
+                net.tick(cycles, &mut stats);
+                // Memory side stalls randomly (a DRAM controller under
+                // bank conflicts / refresh).
+                if next < lines.len() && !prng.chance(stall_p) && net.mem_can_deliver(lines[next].port)
+                {
+                    net.mem_deliver(lines[next].clone());
+                    next += 1;
+                }
+                // Ports stall randomly (layer processor busy).
+                for p in 0..g.read_ports {
+                    if !prng.chance(stall_p) && net.port_word_available(p) {
+                        got[p].push(net.port_take_word(p).unwrap());
+                        popped += 1;
+                    }
+                }
+                cycles += 1;
+                assert!(cycles < 3_000_000, "{design:?}@{stall_p}: livelock");
+            }
+            for p in 0..g.read_ports {
+                let expect: Vec<Word> = lines
+                    .iter()
+                    .filter(|l| l.port == p)
+                    .flat_map(|l| l.line.words().to_vec())
+                    .collect();
+                assert_eq!(got[p], expect, "{design:?}@{stall_p} port {p}");
+            }
+        }
+    }
+}
+
+/// Write path with the memory side drained erratically.
+#[test]
+fn write_integrity_under_erratic_drain() {
+    for design in [Design::Baseline, Design::Medusa] {
+        let g = geom(4, 64, 2);
+        let n = g.words_per_line();
+        let mut net = build_write_network(design, g);
+        let mut stats = Stats::new();
+        let mut prng = Prng::new(77);
+        let lines_per_port = 12usize;
+        let mut sent = vec![0usize; g.write_ports];
+        let mut got: Vec<Vec<Word>> = vec![Vec::new(); g.write_ports];
+        let mut taken = 0usize;
+        let mut cycles = 0u64;
+        while taken < lines_per_port * g.write_ports {
+            net.tick(cycles, &mut stats);
+            // Drain only 30% of cycles, random port order.
+            if prng.chance(0.3) {
+                let start = prng.range(0, g.write_ports - 1);
+                for k in 0..g.write_ports {
+                    let p = (start + k) % g.write_ports;
+                    if net.mem_lines_ready(p) > 0 {
+                        got[p].extend(net.mem_take_line(p).unwrap().words().to_vec());
+                        taken += 1;
+                        break;
+                    }
+                }
+            }
+            for p in 0..g.write_ports {
+                if sent[p] < lines_per_port * n && net.port_can_accept(p) {
+                    net.port_push_word(p, (p * 100_000 + sent[p]) as Word & g.word_mask());
+                    sent[p] += 1;
+                }
+            }
+            cycles += 1;
+            assert!(cycles < 1_000_000, "{design:?}: livelock");
+        }
+        for p in 0..g.write_ports {
+            let expect: Vec<Word> =
+                (0..lines_per_port * n).map(|i| (p * 100_000 + i) as Word & g.word_mask()).collect();
+            assert_eq!(got[p], expect, "{design:?} port {p}");
+        }
+    }
+}
+
+/// Arbiter policy ablation: ReadPriority must starve writes under read
+/// pressure but never corrupt anything; RoundRobin must stay fair.
+#[test]
+fn arbiter_policy_ablation() {
+    let g = geom(4, 64, 4);
+    let n = g.words_per_line();
+    let run = |policy: Policy| -> (u64, u64) {
+        let rd = build_read_network(Design::Medusa, g);
+        let mut wr = build_write_network(Design::Medusa, g);
+        let mut arb = Arbiter::new(4, 4, policy);
+        let mut cmd: Channel<MemCommand> = Channel::new("cmd", 2);
+        let mut wdata = Channel::new("wdata", 8);
+        let mut stats = Stats::new();
+        // Preload write data so write requests are always issuable.
+        let mut c = 0u64;
+        for _ in 0..2 * n {
+            wr.tick(c, &mut stats);
+            for p in 0..4 {
+                if wr.port_can_accept(p) {
+                    wr.port_push_word(p, 7);
+                }
+            }
+            c += 1;
+        }
+        // Saturate both queues, run a fixed window, count grants.
+        let (mut reads, mut writes) = (0u64, 0u64);
+        for i in 0..64u64 {
+            arb.submit_read(ReadRequest { port: (i % 4) as usize, addr: i * 4, burst_len: 1 });
+            arb.submit_write(WriteRequest { port: (i % 4) as usize, addr: 512 + i, burst_len: 1 });
+        }
+        for _ in 0..200 {
+            wr.tick(c, &mut stats);
+            arb.tick(rd.as_ref(), wr.as_mut(), &mut cmd, &mut wdata, &mut stats);
+            cmd.commit();
+            wdata.commit();
+            while let Some(cmdv) = cmd.pop() {
+                match cmdv {
+                    MemCommand::Read { .. } => reads += 1,
+                    MemCommand::Write { .. } => writes += 1,
+                }
+            }
+            while wdata.pop().is_some() {}
+            c += 1;
+        }
+        (reads, writes)
+    };
+    let (rr_reads, rr_writes) = run(Policy::RoundRobin);
+    let (rp_reads, rp_writes) = run(Policy::ReadPriority);
+    // Round-robin alternates grants while both classes are backlogged.
+    assert!(rr_reads > 0 && rr_writes > 0);
+    let imbalance = (rr_reads as i64 - rr_writes as i64).abs();
+    assert!(imbalance <= 8, "round-robin imbalance {rr_reads} vs {rr_writes}");
+    // Read-priority issues every queued read before any further write
+    // beyond data-driven interleaving.
+    assert!(rp_reads >= rr_reads, "{rp_reads} vs {rr_reads}");
+    assert!(rp_writes <= rr_writes, "{rp_writes} vs {rr_writes}");
+}
+
+/// Burst-length sweep: throughput and integrity must hold for any
+/// MaxBurst provisioning (the buffers scale with it, §III-C).
+#[test]
+fn burst_length_sweep() {
+    for burst in [1usize, 2, 4, 16, 32, 64] {
+        let g = geom(8, 128, burst);
+        let lines = gen_lines(&g, 128, burst as u64);
+        for design in [Design::Baseline, Design::Medusa] {
+            let mut net = build_read_network(design, g);
+            let (res, got) = medusa::interconnect::harness::drive_read(net.as_mut(), &lines, true);
+            assert!(
+                res.lines_per_cycle() > 0.8,
+                "{design:?} burst {burst}: {:.3} lines/cycle",
+                res.lines_per_cycle()
+            );
+            let total: usize = got.iter().map(|v| v.len()).sum();
+            assert_eq!(total, 128 * g.words_per_line());
+        }
+    }
+}
+
+/// Word-width sweep: 8-bit ports (the paper's other accelerator width)
+/// and wider ones must round-trip too.
+#[test]
+fn word_width_sweep() {
+    for w_acc in [8usize, 16, 32] {
+        let n = 8;
+        let g = Geometry { w_line: n * w_acc, w_acc, read_ports: n, write_ports: n, max_burst: 4 };
+        let lines = gen_lines(&g, 64, w_acc as u64);
+        for design in [Design::Baseline, Design::Medusa] {
+            let mut net = build_read_network(design, g);
+            let (_, got) = medusa::interconnect::harness::drive_read(net.as_mut(), &lines, true);
+            for p in 0..n {
+                let expect: Vec<Word> = lines
+                    .iter()
+                    .filter(|l| l.port == p)
+                    .flat_map(|l| l.line.words().to_vec())
+                    .collect();
+                assert_eq!(got[p], expect, "{design:?} w_acc={w_acc} port {p}");
+                assert!(got[p].iter().all(|w| *w <= g.word_mask()));
+            }
+        }
+    }
+}
+
+/// Back-to-back layers with no settle time between them (the arbiter and
+/// networks must be reusable without reset).
+#[test]
+fn no_reset_between_workloads() {
+    let g = geom(4, 64, 4);
+    let mut net = build_read_network(Design::Medusa, g);
+    for round in 0..5u64 {
+        let lines = gen_lines(&g, 32, round);
+        let (_, got) = medusa::interconnect::harness::drive_read(net.as_mut(), &lines, true);
+        for p in 0..g.read_ports {
+            let expect: Vec<Word> = lines
+                .iter()
+                .filter(|l| l.port == p)
+                .flat_map(|l| l.line.words().to_vec())
+                .collect();
+            assert_eq!(got[p], expect, "round {round} port {p}");
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! Property-based invariants over the interconnect designs, using the
+//! in-repo shrinking harness (`medusa::testing`). These are the paper's
+//! §III data-transfer-characteristics claims as universally quantified
+//! statements over random geometries and traffic.
+
+use medusa::interconnect::harness::{drive_read, drive_write, gen_lines};
+use medusa::interconnect::{build_read_network, build_write_network, Design};
+use medusa::sim::Stats;
+use medusa::testing::prop::{check, Config, Gen};
+use medusa::types::{Geometry, TaggedLine, Word};
+use medusa::util::Prng;
+
+/// A random-but-valid interconnect test case.
+#[derive(Clone, Debug)]
+struct Case {
+    geom: Geometry,
+    lines: usize,
+    seed: u64,
+}
+
+struct CaseGen;
+
+impl Gen<Case> for CaseGen {
+    fn generate(&self, rng: &mut Prng) -> Case {
+        let n_pow = rng.range(1, 5); // words/line in {2,4,8,16,32}
+        let n = 1usize << n_pow;
+        let w_acc = 16;
+        let w_line = n * w_acc;
+        // Ports: anywhere from 1 to N, including non-powers of two (§III-G).
+        let ports = rng.range(1, n);
+        let max_burst = [1usize, 2, 4, 8, 32][rng.range(0, 4)];
+        Case {
+            geom: Geometry { w_line, w_acc, read_ports: ports, write_ports: ports, max_burst },
+            lines: rng.range(1, 96),
+            seed: rng.next_u64(),
+        }
+    }
+
+    fn shrink(&self, c: &Case) -> Vec<Case> {
+        let mut out = Vec::new();
+        if c.lines > 1 {
+            out.push(Case { lines: c.lines / 2, ..c.clone() });
+            out.push(Case { lines: c.lines - 1, ..c.clone() });
+        }
+        if c.geom.read_ports > 1 {
+            let mut g = c.geom;
+            g.read_ports -= 1;
+            g.write_ports -= 1;
+            out.push(Case { geom: g, ..c.clone() });
+        }
+        if c.geom.w_line > 2 * c.geom.w_acc {
+            let mut g = c.geom;
+            g.w_line /= 2;
+            g.read_ports = g.read_ports.min(g.w_line / g.w_acc);
+            g.write_ports = g.read_ports;
+            out.push(Case { geom: g, ..c.clone() });
+        }
+        out
+    }
+}
+
+fn cfg() -> Config {
+    Config { cases: 48, ..Config::default() }
+}
+
+/// §III-F + §III-A: for any traffic, each read port receives exactly the
+/// words of its own lines, in order — on every design.
+#[test]
+fn prop_read_data_integrity_all_designs() {
+    check(cfg(), &CaseGen, |c: &Case| {
+        let lines = gen_lines(&c.geom, c.lines, c.seed);
+        for design in [Design::Baseline, Design::Medusa] {
+            let mut net = build_read_network(design, c.geom);
+            let (_, got) = drive_read(net.as_mut(), &lines, true);
+            for p in 0..c.geom.read_ports {
+                let expect: Vec<Word> = lines
+                    .iter()
+                    .filter(|l| l.port == p)
+                    .flat_map(|l| l.line.words().to_vec())
+                    .collect();
+                if got[p] != expect {
+                    return Err(format!("{design:?} port {p}: data mismatch"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Write direction: lines leaving the network are exactly the pushed
+/// words, re-lined, in order.
+#[test]
+fn prop_write_data_integrity_all_designs() {
+    check(cfg(), &CaseGen, |c: &Case| {
+        let lines_per_port = (c.lines / c.geom.write_ports).max(1);
+        for design in [Design::Baseline, Design::Medusa] {
+            let mut net = build_write_network(design, c.geom);
+            let (_, got) = drive_write(net.as_mut(), lines_per_port, c.seed, true);
+            let n = c.geom.words_per_line();
+            let mut prng = Prng::new(c.seed);
+            for p in 0..c.geom.write_ports {
+                let expect: Vec<Word> =
+                    (0..lines_per_port * n).map(|_| prng.next_u64() & c.geom.word_mask()).collect();
+                let flat: Vec<Word> = got[p].iter().flat_map(|l| l.words().to_vec()).collect();
+                if flat != expect {
+                    return Err(format!("{design:?} port {p}: write data mismatch"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Both designs sustain full aggregate bandwidth when all ports are
+/// saturated (§III-A: "capable of processing one W_line-bit line per
+/// cycle").
+#[test]
+fn prop_full_bandwidth_when_saturated() {
+    check(cfg(), &CaseGen, |c: &Case| {
+        // Saturation needs all ports busy: round-robin traffic, enough of
+        // it, and ports == words_per_line.
+        let mut g = c.geom;
+        g.read_ports = g.words_per_line();
+        g.write_ports = g.words_per_line();
+        let total = 128.max(g.read_ports * 8);
+        let lines = gen_lines(&g, total, c.seed);
+        for design in [Design::Baseline, Design::Medusa] {
+            let mut net = build_read_network(design, g);
+            let (res, _) = drive_read(net.as_mut(), &lines, false);
+            if res.lines_per_cycle() < 0.8 {
+                return Err(format!(
+                    "{design:?}: only {:.3} lines/cycle with {} ports",
+                    res.lines_per_cycle(),
+                    g.read_ports
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// §III-E: Medusa's first-word latency exceeds the baseline's by at most
+/// the constant `W_line/W_acc (+ activation)` cycles, for any geometry
+/// and any arrival phase.
+#[test]
+fn prop_latency_overhead_bounded() {
+    check(cfg(), &CaseGen, |c: &Case| {
+        let n = c.geom.words_per_line();
+        let port = (c.seed as usize) % c.geom.read_ports;
+        let phase = (c.seed >> 8) % 17;
+        let latency_of = |design: Design| -> Result<u64, String> {
+            let mut net = build_read_network(design, c.geom);
+            let mut stats = Stats::new();
+            let mut cyc = 0u64;
+            for _ in 0..phase {
+                net.tick(cyc, &mut stats);
+                cyc += 1;
+            }
+            let line = gen_lines(&c.geom, 1, c.seed).remove(0);
+            net.mem_deliver(TaggedLine { port, line: line.line });
+            let start = cyc;
+            loop {
+                net.tick(cyc, &mut stats);
+                cyc += 1;
+                if net.port_word_available(port) {
+                    return Ok(cyc - start);
+                }
+                if cyc - start > (4 * n + 16) as u64 {
+                    return Err(format!("{design:?}: word never arrived"));
+                }
+            }
+        };
+        let base = latency_of(Design::Baseline)?;
+        let medusa = latency_of(Design::Medusa)?;
+        let overhead = medusa.saturating_sub(base);
+        if overhead > (n + 2) as u64 {
+            return Err(format!(
+                "latency overhead {overhead} > N+2 = {} (base {base}, medusa {medusa})",
+                n + 2
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// §III-F: no interference — a port's word-arrival cadence is unchanged
+/// by other ports' traffic (Medusa).
+#[test]
+fn prop_no_interference_medusa() {
+    check(Config { cases: 24, ..Config::default() }, &CaseGen, |c: &Case| {
+        if c.geom.read_ports < 2 {
+            return Ok(());
+        }
+        let victim = 0usize;
+        let cadence = |with_noise: bool| -> Vec<u64> {
+            let mut net = build_read_network(Design::Medusa, c.geom);
+            let mut stats = Stats::new();
+            let mut prng = Prng::new(c.seed);
+            let victim_lines: Vec<TaggedLine> = gen_lines(&c.geom, 8, c.seed ^ 1)
+                .into_iter()
+                .map(|mut l| {
+                    l.port = victim;
+                    l
+                })
+                .collect();
+            let mut vi = 0usize;
+            let mut arrivals = Vec::new();
+            for cyc in 0..600u64 {
+                net.tick(cyc, &mut stats);
+                if vi < victim_lines.len() && net.mem_can_deliver(victim) {
+                    net.mem_deliver(victim_lines[vi].clone());
+                    vi += 1;
+                } else if with_noise {
+                    // Random other-port traffic whenever the interface is
+                    // free (deterministic given the seed).
+                    let p = 1 + (prng.next_u64() as usize) % (c.geom.read_ports - 1);
+                    if net.mem_can_deliver(p) {
+                        let line = gen_lines(&c.geom, 1, prng.next_u64()).remove(0);
+                        net.mem_deliver(TaggedLine { port: p, line: line.line });
+                    }
+                }
+                if net.port_word_available(victim) {
+                    net.port_take_word(victim).unwrap();
+                    arrivals.push(cyc);
+                }
+                // Drain noise ports so they keep flowing.
+                for p in 1..c.geom.read_ports {
+                    if net.port_word_available(p) {
+                        net.port_take_word(p).unwrap();
+                    }
+                }
+            }
+            arrivals
+        };
+        let solo = cadence(false);
+        let noisy = cadence(true);
+        if solo != noisy {
+            return Err("victim port cadence changed under other-port traffic".into());
+        }
+        Ok(())
+    });
+}
+
+/// Baseline and Medusa are **drop-in interchangeable**: identical traffic
+/// yields identical per-port word streams (order included).
+#[test]
+fn prop_designs_equivalent_streams() {
+    check(cfg(), &CaseGen, |c: &Case| {
+        let lines = gen_lines(&c.geom, c.lines, c.seed);
+        let mut base = build_read_network(Design::Baseline, c.geom);
+        let (_, got_b) = drive_read(base.as_mut(), &lines, true);
+        let mut med = build_read_network(Design::Medusa, c.geom);
+        let (_, got_m) = drive_read(med.as_mut(), &lines, true);
+        if got_b != got_m {
+            return Err("baseline and medusa delivered different streams".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,110 @@
+//! Runtime integration: the AOT-compiled JAX/Pallas artifacts, loaded and
+//! executed from Rust via PJRT, must agree bit-for-bit with the Q8.8
+//! golden model. Requires `make artifacts`.
+
+use medusa::accel::dnn::ConvLayer;
+use medusa::accel::golden::conv2d_q88;
+use medusa::accel::quant::Fixed16;
+use medusa::runtime::{Artifacts, ConvExecutor, RuntimeClient};
+use medusa::util::Prng;
+
+fn executor_or_skip() -> Option<ConvExecutor> {
+    match ConvExecutor::new() {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("SKIP (run `make artifacts` first): {err}");
+            None
+        }
+    }
+}
+
+fn rand_tensors(prng: &mut Prng, l: &ConvLayer) -> (Vec<Fixed16>, Vec<Fixed16>, Vec<Fixed16>) {
+    let ifmap = (0..l.ifmap_words()).map(|_| Fixed16((prng.next_u64() & 0xfff) as i16 - 2048)).collect();
+    let weights = (0..l.out_c * l.in_c * l.k * l.k)
+        .map(|_| Fixed16((prng.next_u64() & 0xff) as i16 - 128))
+        .collect();
+    let bias = (0..l.out_c).map(|_| Fixed16((prng.next_u64() & 0xff) as i16 - 128)).collect();
+    (ifmap, weights, bias)
+}
+
+#[test]
+fn artifacts_manifest_complete() {
+    let Some(exec) = executor_or_skip() else { return };
+    let names = exec.artifact_names();
+    for expect in ["conv1", "conv2", "down1", "conv3", "down2", "conv4", "quickstart", "medusa_transpose"] {
+        assert!(names.contains(&expect), "missing artifact {expect}; have {names:?}");
+    }
+}
+
+#[test]
+fn quickstart_artifact_matches_golden() {
+    let Some(mut exec) = executor_or_skip() else { return };
+    let layer = exec.layer_of("quickstart").unwrap();
+    let mut prng = Prng::new(99);
+    let (ifmap, weights, bias) = rand_tensors(&mut prng, &layer);
+    let got = exec.run_conv("quickstart", &ifmap, &weights, &bias).unwrap();
+    let want = conv2d_q88(&layer, &ifmap, &weights, &bias);
+    assert_eq!(got, want, "PJRT artifact must be bit-identical to the golden model");
+}
+
+#[test]
+fn all_tiny_vgg_layers_match_golden() {
+    let Some(mut exec) = executor_or_skip() else { return };
+    let mut prng = Prng::new(7);
+    for name in ["conv1", "conv2", "down1", "conv3", "down2", "conv4"] {
+        let layer = exec.layer_of(name).unwrap();
+        let (ifmap, weights, bias) = rand_tensors(&mut prng, &layer);
+        let got = exec.run_conv(name, &ifmap, &weights, &bias).unwrap();
+        let want = conv2d_q88(&layer, &ifmap, &weights, &bias);
+        assert_eq!(got, want, "layer {name}");
+    }
+}
+
+#[test]
+fn executor_rejects_wrong_shapes() {
+    let Some(mut exec) = executor_or_skip() else { return };
+    let layer = exec.layer_of("quickstart").unwrap();
+    let bad_ifmap = vec![Fixed16::ZERO; layer.ifmap_words() + 1];
+    let weights = vec![Fixed16::ZERO; layer.out_c * layer.in_c * layer.k * layer.k];
+    let bias = vec![Fixed16::ZERO; layer.out_c];
+    assert!(exec.run_conv("quickstart", &bad_ifmap, &weights, &bias).is_err());
+}
+
+#[test]
+fn transpose_artifact_runs_and_transposes() {
+    let Some(_) = executor_or_skip() else { return };
+    let artifacts = Artifacts::discover().unwrap();
+    let entry = artifacts.get("medusa_transpose").unwrap();
+    let n = entry.in_c; // manifest packs N in the in_c field
+    let mut client = RuntimeClient::cpu().unwrap();
+    client.load_hlo_text("medusa_transpose", &entry.path).unwrap();
+    // Bank-major input tile: entry [y, x] = word y of port x's line; the
+    // kernel must emit the port-major tile (row x = port x's line).
+    let lines: Vec<Vec<f64>> =
+        (0..n).map(|x| (0..n).map(|y| (x * n + y) as f64).collect()).collect();
+    let mut bank_major = vec![0f64; n * n];
+    for x in 0..n {
+        for y in 0..n {
+            bank_major[y * n + x] = lines[x][y];
+        }
+    }
+    let input = xla::Literal::vec1(&bank_major).reshape(&[n as i64, n as i64]).unwrap();
+    let out = client.execute("medusa_transpose", &[input]).unwrap();
+    let flat: Vec<f64> = out[0].to_vec().unwrap();
+    for x in 0..n {
+        for y in 0..n {
+            assert_eq!(flat[x * n + y], lines[x][y], "port {x} word {y}");
+        }
+    }
+}
+
+#[test]
+fn repeated_execution_is_deterministic() {
+    let Some(mut exec) = executor_or_skip() else { return };
+    let layer = exec.layer_of("quickstart").unwrap();
+    let mut prng = Prng::new(1234);
+    let (ifmap, weights, bias) = rand_tensors(&mut prng, &layer);
+    let a = exec.run_conv("quickstart", &ifmap, &weights, &bias).unwrap();
+    let b = exec.run_conv("quickstart", &ifmap, &weights, &bias).unwrap();
+    assert_eq!(a, b);
+}
