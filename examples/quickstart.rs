@@ -83,6 +83,7 @@ fn main() -> anyhow::Result<()> {
         fabric_clock_mhz: Some(200.0),
         ddr3_timing: true,
         rotator_stages: 0,
+        channel_depths: Default::default(),
         seed: 1,
     };
     let mut drv = InferenceDriver::new(cfg, backend)?;

@@ -61,6 +61,7 @@ fn main() -> anyhow::Result<()> {
             fabric_clock_mhz: None, // P&R timing model decides (Fig 6)
             ddr3_timing: true,
             rotator_stages: 0,
+            channel_depths: Default::default(),
             seed: 2024,
         };
         // PJRT backend only for the first run to keep runtime modest;

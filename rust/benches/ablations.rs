@@ -21,6 +21,7 @@ use medusa::interconnect::harness::{drive_read, gen_lines};
 use medusa::interconnect::medusa::{MedusaReadNetwork, MedusaTuning};
 use medusa::interconnect::{Design, ReadNetwork};
 use medusa::types::Geometry;
+use medusa::util::par_map;
 use medusa::util::Prng;
 
 fn main() {
@@ -42,7 +43,10 @@ fn ablation_rotator_pipelining() {
     let dev = Device::virtex7_690t();
     let dp = DesignPoint { design: Design::Medusa, geometry: g, dpus: 64 };
     let piped_mhz = model.peak_frequency_mhz(&dp, &dev);
-    for stages in [0usize, 1, 3, 5] {
+    // The four stage counts are independent simulations: run them across
+    // threads, print rows in order.
+    let stage_counts = [0usize, 1, 3, 5];
+    let rows = par_map(&stage_counts, |&stages| {
         let mut net = MedusaReadNetwork::with_tuning(g, MedusaTuning { rotator_stages: stages });
         // First-word latency: one line to port 0.
         let mut stats = medusa::sim::Stats::new();
@@ -65,7 +69,10 @@ fn ablation_rotator_pipelining() {
         // levels (~0.45ns each) to the pipelined critical path.
         let extra_ns = if stages == 0 { 5.0 * 0.45 } else { (5 - stages.min(5)) as f64 * 0.45 };
         let mhz = (1000.0 / (1000.0 / piped_mhz as f64 + extra_ns)) as u32;
-        println!("{:>7} {:>12} {:>14.3} {:>12}", stages, lat, res.lines_per_cycle(), mhz / 25 * 25);
+        (stages, lat, res.lines_per_cycle(), mhz / 25 * 25)
+    });
+    for (stages, lat, lpc, mhz) in rows {
+        println!("{stages:>7} {lat:>12} {lpc:>14.3} {mhz:>12}");
     }
     println!("-> pipelining trades +stages cycles of constant latency for ~60% higher clock\n");
 }
@@ -75,7 +82,8 @@ fn ablation_rotator_pipelining() {
 fn ablation_burst_provisioning() {
     println!("### ablation 2: burst provisioning (512b/32p, bursty single-port traffic)");
     println!("{:>9} {:>12} {:>12} {:>14}", "max_burst", "medusa BRAM", "base LUTRAM", "lines/cyc");
-    for burst in [4usize, 8, 16, 32, 64] {
+    let bursts = [4usize, 8, 16, 32, 64];
+    let rows = par_map(&bursts, |&burst| {
         let g = Geometry { max_burst: burst, ..Geometry::paper_default() };
         let m = resources::medusa_read(&g).bram18 + resources::medusa_write(&g).bram18;
         let b_lut = resources::baseline_read(&g).lut + resources::baseline_write(&g).lut;
@@ -95,7 +103,10 @@ fn ablation_burst_provisioning() {
         }
         let mut net = medusa::interconnect::build_read_network(Design::Medusa, g);
         let (res, _) = drive_read(net.as_mut(), &lines, false);
-        println!("{:>9} {:>12} {:>12} {:>14.3}", burst, m, b_lut, res.lines_per_cycle());
+        (burst, m, b_lut, res.lines_per_cycle())
+    });
+    for (burst, m, b_lut, lpc) in rows {
+        println!("{burst:>9} {m:>12} {b_lut:>12} {lpc:>14.3}");
     }
     println!("-> bandwidth holds at every provisioning; BRAM cost scales with MaxBurst\n");
 }
@@ -127,7 +138,10 @@ fn ablation_ddr3_vs_ideal() {
             .map(|_| Fixed16::from_f32((p.f64() as f32) - 0.5))
             .collect()
     };
-    for ddr3 in [false, true] {
+    // The two memory models are independent full-inference simulations
+    // (each System is Send); run them on two threads.
+    let modes = [false, true];
+    let reports = par_map(&modes, |&ddr3| {
         let cfg = SystemConfig {
             design: Design::Medusa,
             ddr3_timing: ddr3,
@@ -136,9 +150,12 @@ fn ablation_ddr3_vs_ideal() {
         };
         let mut drv = InferenceDriver::new(cfg, ComputeBackend::Golden).unwrap();
         let (rep, _) = drv.run(&net, &input).unwrap();
+        rep
+    });
+    for (ddr3, rep) in modes.iter().zip(reports) {
         println!(
             "  {:<6} {:>9} fabric cycles, {:>7.3} ms, {:>5.2} GB/s effective, verified={}",
-            if ddr3 { "ddr3" } else { "ideal" },
+            if *ddr3 { "ddr3" } else { "ideal" },
             rep.total_cycles(),
             rep.total_time_ms(),
             rep.effective_bandwidth_gbs(512),

@@ -12,6 +12,7 @@ use medusa::fpga::DesignPoint;
 use medusa::interconnect::Design;
 use medusa::types::Line;
 use medusa::util::bench::Bench;
+use medusa::util::par_map;
 
 /// Simulated time (ps) to stream `total_lines` through a design point's
 /// read path at its modelled fabric clock.
@@ -24,6 +25,7 @@ fn stream_time_ps(dp: &DesignPoint, total_lines: usize) -> Option<u64> {
         fabric_clock_mhz: None, // use the P&R model
         ddr3_timing: false,
         rotator_stages: 0,
+        channel_depths: Default::default(),
         seed: 1,
     };
     let mut sys = System::new(cfg).ok()?; // None = failed timing
@@ -42,28 +44,34 @@ fn main() {
     println!();
 
     // System-level: delivered read bandwidth (GB/s) at the modelled clock.
+    // Each design point is an independent System simulation; the 22 sims
+    // run across threads and the rows print in order afterwards.
     println!("### delivered bandwidth at modelled fabric clock (2048 lines, ideal DRAM)");
     println!("{:>6} {:>9} {:>10} {:>14} {:>14}", "DSPs", "iface", "lines", "base GB/s", "medusa GB/s");
     let total_lines = 2048usize;
-    for step in 0..=10 {
+    let steps: Vec<usize> = (0..=10).collect();
+    let gbs = |dp: &DesignPoint| -> String {
+        match stream_time_ps(dp, total_lines) {
+            Some(ps) => {
+                let bytes = (total_lines * dp.geometry.w_line / 8) as f64;
+                format!("{:.2}", bytes / (ps as f64 / 1e12) / 1e9)
+            }
+            None => "fail".to_string(),
+        }
+    };
+    let rows = par_map(&steps, |&step| {
         let b = DesignPoint::fig6_step(Design::Baseline, step);
         let m = DesignPoint::fig6_step(Design::Medusa, step);
-        let gbs = |dp: &DesignPoint| -> String {
-            match stream_time_ps(dp, total_lines) {
-                Some(ps) => {
-                    let bytes = (total_lines * dp.geometry.w_line / 8) as f64;
-                    format!("{:.2}", bytes / (ps as f64 / 1e12) / 1e9)
-                }
-                None => "fail".to_string(),
-            }
-        };
+        (b.dsps(), b.geometry.w_line, gbs(&b), gbs(&m))
+    });
+    for (dsps, w_line, base_gbs, medusa_gbs) in rows {
         println!(
             "{:>6} {:>9} {:>10} {:>14} {:>14}",
-            b.dsps(),
-            format!("{}b", b.geometry.w_line),
+            dsps,
+            format!("{w_line}b"),
             total_lines,
-            gbs(&b),
-            gbs(&m)
+            base_gbs,
+            medusa_gbs
         );
     }
     println!();

@@ -1,0 +1,123 @@
+//! Smoke benchmark (PR 1): a short fig6 sweep plus the simulation-core
+//! throughput number (simulated fabric cycles per wall-second on the
+//! paper-default geometry), written to `BENCH_PR1.json` so future PRs
+//! have a perf trajectory to compare against.
+//!
+//! Run with `cargo bench --bench smoke` (set `MEDUSA_BENCH_SAMPLES=1`
+//! for the quickest run). The sweep runs twice — sequentially
+//! (`MEDUSA_THREADS=1`) and with the default thread count — and asserts
+//! the results are bit-identical, which is the correctness contract of
+//! the parallel sweep path.
+
+use medusa::accel::prefetch::{partition, Region};
+use medusa::config::SystemConfig;
+use medusa::coordinator::System;
+use medusa::eval::fig6;
+use medusa::interconnect::Design;
+use medusa::types::Line;
+use medusa::util::bench::Bench;
+use std::path::Path;
+use std::time::Instant;
+
+/// Build the paper-default system with a pinned fabric clock and stream
+/// `lines` read lines through it; returns (fabric cycles, wall seconds).
+fn sim_throughput(design: Design, lines: usize) -> (u64, f64) {
+    let cfg = SystemConfig {
+        design,
+        fabric_clock_mhz: Some(225.0),
+        ddr3_timing: false,
+        ..SystemConfig::paper_default()
+    };
+    let mut sys = System::new(cfg).unwrap();
+    let n = sys.cfg.geometry.words_per_line();
+    sys.controller_mut().preload(0, (0..lines as u64).map(|_| Line::zeroed(n)));
+    let scheds = partition(&[Region { base: 0, lines }], sys.cfg.geometry.read_ports);
+    sys.lp.begin_layer(&scheds, 1);
+    let t0 = Instant::now();
+    sys.run_until_compute_done(200_000_000).unwrap();
+    (sys.fabric_cycles(), t0.elapsed().as_secs_f64())
+}
+
+fn json_f(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn main() {
+    let mut b = Bench::new();
+
+    // --- 1. fig6 sweep: sequential vs parallel, identical results.
+    std::env::set_var("MEDUSA_THREADS", "1");
+    let t0 = Instant::now();
+    let seq = fig6::sweep();
+    let seq_secs = t0.elapsed().as_secs_f64();
+    std::env::remove_var("MEDUSA_THREADS");
+    let t0 = Instant::now();
+    let par = fig6::sweep();
+    let par_secs = t0.elapsed().as_secs_f64();
+    let identical = seq.len() == par.len()
+        && seq
+            .iter()
+            .zip(par.iter())
+            .all(|(a, b)| a.baseline_mhz == b.baseline_mhz && a.medusa_mhz == b.medusa_mhz);
+    assert!(identical, "parallel fig6 sweep diverged from sequential run");
+    let sweep_speedup = seq_secs / par_secs.max(1e-12);
+    println!(
+        "fig6 sweep: sequential {seq_secs:.4}s, parallel {par_secs:.4}s ({sweep_speedup:.2}x), results identical"
+    );
+    b.run("fig6/sweep_parallel", seq.len() as u64, "points", fig6::sweep);
+
+    // --- 2. Simulation-core throughput: simulated fabric cycles per
+    // wall-clock second at the paper-default geometry.
+    let lines = 4096usize;
+    let mut core = Vec::new();
+    for design in [Design::Medusa, Design::Baseline] {
+        let (cycles, secs) = sim_throughput(design, lines);
+        let cps = cycles as f64 / secs.max(1e-12);
+        println!(
+            "core throughput {}: {} fabric cycles in {:.4}s = {:.3e} cycles/s",
+            design.name(),
+            cycles,
+            secs,
+            cps
+        );
+        core.push((design.name(), cycles, secs, cps));
+        b.run(format!("system/{}/{}_lines", design.name(), lines), lines as u64, "lines", || {
+            sim_throughput(design, lines).0
+        });
+    }
+    b.report("smoke: simulation core + fig6 sweep");
+
+    // --- 3. Persist the trajectory point.
+    let out_path = if Path::new("../ROADMAP.md").exists() {
+        "../BENCH_PR1.json"
+    } else {
+        "BENCH_PR1.json"
+    };
+    let mut j = String::from("{\n");
+    j.push_str("  \"bench\": \"smoke_pr1\",\n");
+    j.push_str(&format!("  \"threads_parallel\": {},\n", medusa::util::parallel::max_threads()));
+    j.push_str(&format!(
+        "  \"fig6_sweep\": {{\"points\": {}, \"sequential_s\": {}, \"parallel_s\": {}, \"speedup\": {}, \"results_identical\": {}}},\n",
+        seq.len(),
+        json_f(seq_secs),
+        json_f(par_secs),
+        json_f(sweep_speedup),
+        identical
+    ));
+    j.push_str("  \"core_throughput\": [\n");
+    for (i, (name, cycles, secs, cps)) in core.iter().enumerate() {
+        j.push_str(&format!(
+            "    {{\"design\": \"{name}\", \"lines\": {lines}, \"fabric_cycles\": {cycles}, \"wall_s\": {}, \"sim_cycles_per_s\": {}}}{}\n",
+            json_f(*secs),
+            json_f(*cps),
+            if i + 1 < core.len() { "," } else { "" }
+        ));
+    }
+    j.push_str("  ]\n}\n");
+    std::fs::write(out_path, &j).expect("writing BENCH_PR1.json");
+    println!("wrote {out_path}");
+}

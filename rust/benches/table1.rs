@@ -29,10 +29,15 @@ fn main() {
     b.report("table1 behavioural networks (simulated lines moved per wall-second)");
 
     // Cycle-efficiency comparison (the architectural claim): both reach
-    // ~1 line/cycle, AXIS pays extra latency only.
-    for design in [Design::Baseline, Design::Axis] {
+    // ~1 line/cycle, AXIS pays extra latency only. The two 2048-line
+    // simulations are independent — run them across threads (untimed
+    // section, so concurrency cannot skew a measurement).
+    let designs = [Design::Baseline, Design::Axis];
+    let results = medusa::util::par_map(&designs, |&design| {
         let mut net = build_read_network(design, g);
-        let (res, _) = drive_read(net.as_mut(), &lines, false);
+        drive_read(net.as_mut(), &lines, false).0
+    });
+    for (design, res) in designs.iter().zip(results) {
         println!(
             "cycle efficiency {}: {:.3} lines/cycle over {} lines",
             design.name(),

@@ -37,11 +37,17 @@ fn main() {
     }
     b.report("table2 behavioural networks at 512b/32+32 ports");
 
-    for design in [Design::Baseline, Design::Medusa] {
+    // Independent 4096-line read+write simulations per design: run the
+    // four across threads (untimed section).
+    let designs = [Design::Baseline, Design::Medusa];
+    let results = medusa::util::par_map(&designs, |&design| {
         let mut rd = build_read_network(design, g);
         let (r, _) = drive_read(rd.as_mut(), &lines, false);
         let mut wr = build_write_network(design, g);
         let (w, _) = drive_write(wr.as_mut(), 4_096 / g.write_ports, 1, false);
+        (r, w)
+    });
+    for (design, (r, w)) in designs.iter().zip(results) {
         println!(
             "cycle efficiency {}: read {:.3} lines/cycle, write {:.3} lines/cycle \
              (both designs must sustain ~1.0 — §III-A)",

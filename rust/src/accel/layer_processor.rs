@@ -9,6 +9,7 @@
 use crate::accel::prefetch::{bursts, PortSchedule, Region};
 use crate::interconnect::arbiter::Arbiter;
 use crate::interconnect::{ReadNetwork, WriteNetwork};
+use crate::sim::stats::Counter;
 use crate::sim::Stats;
 use crate::types::{Geometry, ReadRequest, Word, WriteRequest};
 use std::collections::VecDeque;
@@ -141,13 +142,17 @@ impl LayerProcessor {
 
     /// One fabric cycle. The coordinator calls this after ticking the
     /// networks. Returns the (possibly advanced) phase.
-    pub fn tick(
+    pub fn tick<R, W>(
         &mut self,
-        rd_net: &mut dyn ReadNetwork,
-        wr_net: &mut dyn WriteNetwork,
+        rd_net: &mut R,
+        wr_net: &mut W,
         arbiter: &mut Arbiter,
         stats: &mut Stats,
-    ) -> Phase {
+    ) -> Phase
+    where
+        R: ReadNetwork + ?Sized,
+        W: WriteNetwork + ?Sized,
+    {
         match self.phase {
             Phase::Load => {
                 self.load_cycles += 1;
@@ -158,7 +163,7 @@ impl LayerProcessor {
                     if let Some(&b) = st.pending_bursts.front() {
                         if arbiter.submit_read(ReadRequest { port: p, addr: b.base, burst_len: b.lines }) {
                             st.pending_bursts.pop_front();
-                            stats.bump("lp.read_bursts_submitted");
+                            stats.bump(Counter::LpReadBurstsSubmitted);
                         }
                     }
                     // Consume one word per cycle — the paper's port rate.
@@ -166,9 +171,9 @@ impl LayerProcessor {
                         if rd_net.port_word_available(p) {
                             st.received.push(rd_net.port_take_word(p).unwrap());
                             st.words_left -= 1;
-                            stats.bump("lp.words_loaded");
+                            stats.bump(Counter::LpWordsLoaded);
                         } else {
-                            stats.bump("lp.load_stall_port_cycles");
+                            stats.bump(Counter::LpLoadStallPortCycles);
                         }
                     }
                     all_done &= st.words_left == 0 && st.pending_bursts.is_empty();
@@ -191,16 +196,16 @@ impl LayerProcessor {
                     if let Some(&b) = st.pending_bursts.front() {
                         if arbiter.submit_write(WriteRequest { port: p, addr: b.base, burst_len: b.lines }) {
                             st.pending_bursts.pop_front();
-                            stats.bump("lp.write_bursts_submitted");
+                            stats.bump(Counter::LpWriteBurstsSubmitted);
                         }
                     }
                     if let Some(&w) = st.to_send.front() {
                         if wr_net.port_can_accept(p) {
                             wr_net.port_push_word(p, w);
                             st.to_send.pop_front();
-                            stats.bump("lp.words_drained");
+                            stats.bump(Counter::LpWordsDrained);
                         } else {
-                            stats.bump("lp.drain_stall_port_cycles");
+                            stats.bump(Counter::LpDrainStallPortCycles);
                         }
                     }
                     all_done &= st.to_send.is_empty() && st.pending_bursts.is_empty();

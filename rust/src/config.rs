@@ -13,6 +13,38 @@ use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 
+/// Depths of the clock-domain-crossing channels the system owner wires
+/// between the fabric and the memory controller. The seed hardcoded all
+/// three at 8; they are now configurable (CDC sizing studies) with the
+/// same default.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChannelDepths {
+    /// Fabric -> controller command channel.
+    pub cmd: usize,
+    /// Controller -> fabric read-line channel.
+    pub rd_line: usize,
+    /// Fabric -> controller write-data channel.
+    pub wr_data: usize,
+}
+
+impl Default for ChannelDepths {
+    fn default() -> Self {
+        ChannelDepths { cmd: 8, rd_line: 8, wr_data: 8 }
+    }
+}
+
+impl ChannelDepths {
+    pub fn validate(&self) -> Result<()> {
+        for (name, d) in
+            [("cmd", self.cmd), ("rd_line", self.rd_line), ("wr_data", self.wr_data)]
+        {
+            anyhow::ensure!(d >= 1, "channel depth {name} must be at least 1");
+            anyhow::ensure!(d <= 1024, "channel depth {name} = {d} is implausibly deep (max 1024)");
+        }
+        Ok(())
+    }
+}
+
 /// A fully specified system configuration: what the launcher builds.
 #[derive(Clone, Debug)]
 pub struct SystemConfig {
@@ -29,6 +61,8 @@ pub struct SystemConfig {
     pub ddr3_timing: bool,
     /// Extra rotator pipeline stages (Medusa ablation).
     pub rotator_stages: usize,
+    /// CDC channel depths between fabric and controller.
+    pub channel_depths: ChannelDepths,
     /// PRNG seed for workload generation.
     pub seed: u64,
 }
@@ -43,6 +77,7 @@ impl Default for SystemConfig {
             fabric_clock_mhz: None,
             ddr3_timing: true,
             rotator_stages: 0,
+            channel_depths: ChannelDepths::default(),
             seed: 7,
         }
     }
@@ -57,6 +92,7 @@ impl SystemConfig {
 
     pub fn validate(&self) -> Result<()> {
         self.geometry.validate()?;
+        self.channel_depths.validate()?;
         anyhow::ensure!(self.dotprod_units >= 1, "need at least one dot-product unit");
         anyhow::ensure!(self.mem_clock_mhz > 0.0, "mem clock must be positive");
         if let Some(f) = self.fabric_clock_mhz {
@@ -95,6 +131,9 @@ impl SystemConfig {
                 "clocks.fabric_mhz" => cfg.fabric_clock_mhz = Some(value.as_f64()?),
                 "memory.ddr3_timing" => cfg.ddr3_timing = value.as_bool()?,
                 "medusa.rotator_stages" => cfg.rotator_stages = value.as_usize()?,
+                "channels.cmd_depth" => cfg.channel_depths.cmd = value.as_usize()?,
+                "channels.rd_line_depth" => cfg.channel_depths.rd_line = value.as_usize()?,
+                "channels.wr_data_depth" => cfg.channel_depths.wr_data = value.as_usize()?,
                 "system.seed" | "seed" => cfg.seed = value.as_usize()? as u64,
                 other => bail!("unknown config key {other:?}"),
             }
@@ -285,6 +324,20 @@ ddr3_timing = true
         cfg.validate().unwrap();
         assert_eq!(cfg.geometry.w_line, 512);
         assert_eq!(cfg.dotprod_units, 64);
+        assert_eq!(cfg.channel_depths, ChannelDepths::default());
+    }
+
+    #[test]
+    fn channel_depths_parse_and_validate() {
+        let cfg = SystemConfig::from_str(
+            "[channels]\ncmd_depth = 4\nrd_line_depth = 16\nwr_data_depth = 2\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.channel_depths, ChannelDepths { cmd: 4, rd_line: 16, wr_data: 2 });
+        // Depth 0 is rejected at validation.
+        assert!(SystemConfig::from_str("[channels]\ncmd_depth = 0\n").is_err());
+        // Implausibly deep channels are rejected too.
+        assert!(SystemConfig::from_str("[channels]\nrd_line_depth = 100000\n").is_err());
     }
 }
 

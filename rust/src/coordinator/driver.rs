@@ -252,6 +252,7 @@ mod tests {
             fabric_clock_mhz: Some(200.0),
             ddr3_timing: false,
             rotator_stages: 0,
+            channel_depths: Default::default(),
             seed: 11,
         }
     }

@@ -8,7 +8,8 @@ use crate::fpga::timing::peak_frequency;
 use crate::fpga::DesignPoint;
 use crate::interconnect::arbiter::{Arbiter, MemCommand, Policy};
 use crate::interconnect::medusa::MedusaTuning;
-use crate::interconnect::{self, Design, ReadNetwork, WriteNetwork};
+use crate::interconnect::{AnyReadNetwork, AnyWriteNetwork, Design, ReadNetwork, WriteNetwork};
+use crate::sim::stats::Counter;
 use crate::sim::{Channel, ClockDomain, Scheduler, Stats};
 use crate::types::{Line, LineAddr, TaggedLine, Word};
 use anyhow::Result;
@@ -21,8 +22,10 @@ const DOM_MEM: usize = 1;
 pub struct System {
     pub cfg: SystemConfig,
     pub fabric_mhz: f64,
-    rd_net: Box<dyn ReadNetwork + Send>,
-    wr_net: Box<dyn WriteNetwork + Send>,
+    /// Statically dispatched networks: the per-cycle `tick`/`port_*`
+    /// calls inline instead of going through a vtable.
+    rd_net: AnyReadNetwork,
+    wr_net: AnyWriteNetwork,
     pub arbiter: Arbiter,
     controller: MemoryController,
     pub lp: LayerProcessor,
@@ -62,14 +65,13 @@ impl System {
         let (rd_net, wr_net) = if cfg.design == Design::Medusa && cfg.rotator_stages > 0 {
             let tuning = MedusaTuning { rotator_stages: cfg.rotator_stages };
             (
-                Box::new(interconnect::medusa::MedusaReadNetwork::with_tuning(geom, tuning))
-                    as Box<dyn ReadNetwork + Send>,
-                Box::new(interconnect::medusa::MedusaWriteNetwork::with_tuning(geom, tuning))
-                    as Box<dyn WriteNetwork + Send>,
+                AnyReadNetwork::medusa_with_tuning(geom, tuning),
+                AnyWriteNetwork::medusa_with_tuning(geom, tuning),
             )
         } else {
-            (interconnect::build_read_network(cfg.design, geom), interconnect::build_write_network(cfg.design, geom))
+            (AnyReadNetwork::build(cfg.design, geom), AnyWriteNetwork::build(cfg.design, geom))
         };
+        let depths = cfg.channel_depths;
         let timing = if cfg.ddr3_timing { DdrTiming::ddr3_800() } else { DdrTiming::ideal() };
         Ok(System {
             fabric_mhz,
@@ -82,9 +84,9 @@ impl System {
                 ClockDomain::from_mhz("fabric", fabric_mhz),
                 ClockDomain::from_mhz("mem", cfg.mem_clock_mhz),
             ]),
-            cmd_ch: Channel::new("cmd", 8),
-            rd_line_ch: Channel::new("rd_lines", 8),
-            wr_data_ch: Channel::new("wr_lines", 8),
+            cmd_ch: Channel::new("cmd", depths.cmd),
+            rd_line_ch: Channel::new("rd_lines", depths.rd_line),
+            wr_data_ch: Channel::new("wr_lines", depths.wr_data),
             stats: Stats::new(),
             fabric_cycles: 0,
             mem_cycles: 0,
@@ -113,14 +115,29 @@ impl System {
     }
 
     /// Advance to the next clock edge(s) and execute them.
+    ///
+    /// Allocation-free: the scheduler returns a `Copy` bitmask and both
+    /// edge handlers dispatch statically.
+    #[inline]
     pub fn step(&mut self) {
         let fired = self.sched.step();
-        for dom in fired {
-            match dom {
-                DOM_FABRIC => self.fabric_edge(),
-                DOM_MEM => self.mem_edge(),
-                _ => unreachable!(),
-            }
+        if fired.contains(DOM_FABRIC) {
+            self.fabric_edge();
+        }
+        if fired.contains(DOM_MEM) {
+            self.mem_edge();
+        }
+    }
+
+    /// Batched fast path: advance `n` scheduler edges with the dispatch
+    /// hoisted out of any caller-side bookkeeping. Use this when no
+    /// per-edge termination check is needed (benchmarks, fixed-length
+    /// warm-up, fast-forward). `step` is `#[inline]`, so this compiles
+    /// to the same loop as hand-inlining it while keeping one copy of
+    /// the edge-dispatch logic.
+    pub fn run_edges(&mut self, n: u64) {
+        for _ in 0..n {
+            self.step();
         }
     }
 
@@ -141,21 +158,21 @@ impl System {
                 let port = tl.port;
                 self.rd_net.mem_deliver(tl);
                 self.arbiter.on_read_line_delivered(port);
-                self.stats.bump("sys.read_lines_into_fabric");
+                self.stats.bump(Counter::SysReadLinesIntoFabric);
             } else {
-                self.stats.bump("sys.read_line_backpressure");
+                self.stats.bump(Counter::SysReadLineBackpressure);
             }
         }
         // 3. Arbiter: issue commands, stream write data.
         self.arbiter.tick(
-            self.rd_net.as_ref(),
-            self.wr_net.as_mut(),
+            &self.rd_net,
+            &mut self.wr_net,
             &mut self.cmd_ch,
             &mut self.wr_data_ch,
             &mut self.stats,
         );
         // 4. Layer processor moves its port words.
-        self.lp.tick(self.rd_net.as_mut(), self.wr_net.as_mut(), &mut self.arbiter, &mut self.stats);
+        self.lp.tick(&mut self.rd_net, &mut self.wr_net, &mut self.arbiter, &mut self.stats);
         // 5. Commit fabric-side channel pushes.
         self.cmd_ch.commit();
         self.wr_data_ch.commit();
@@ -253,6 +270,7 @@ mod tests {
             fabric_clock_mhz: Some(200.0),
             ddr3_timing: false,
             rotator_stages: 0,
+            channel_depths: Default::default(),
             seed: 1,
         }
     }
@@ -332,6 +350,64 @@ mod tests {
         // Ratio approaches 4x asymptotically; fixed command/latency
         // overheads (constant in ns) keep it below that on this length.
         assert!(ratio > 2.5, "50MHz fabric should be ~3-4x slower, got {ratio:.2}x");
+    }
+
+    #[test]
+    fn run_edges_matches_stepwise_execution() {
+        // The batched fast path must be cycle-for-cycle identical to
+        // per-step driving (same channels, same stats, same time).
+        let build = || {
+            let mut sys = System::new(small_cfg(Design::Medusa)).unwrap();
+            sys.controller_mut().preload(
+                0,
+                (0..64u64).map(|i| Line::from_words((0..4u64).map(|y| i * 10 + y).collect())),
+            );
+            let scheds = partition(&[Region { base: 0, lines: 64 }], 4);
+            sys.lp.begin_layer(&scheds, 1);
+            sys
+        };
+        let mut a = build();
+        let mut b = build();
+        a.run_edges(500);
+        for _ in 0..500 {
+            b.step();
+        }
+        assert_eq!(a.now_ps(), b.now_ps());
+        assert_eq!(a.fabric_cycles(), b.fabric_cycles());
+        assert_eq!(a.mem_cycles(), b.mem_cycles());
+        assert_eq!(
+            a.stats.get("sys.read_lines_into_fabric"),
+            b.stats.get("sys.read_lines_into_fabric")
+        );
+        assert_eq!(a.stats.get("lp.words_loaded"), b.stats.get("lp.words_loaded"));
+    }
+
+    #[test]
+    fn custom_channel_depths_still_roundtrip() {
+        // Shallow CDC channels throttle but must never corrupt data.
+        let mut cfg = small_cfg(Design::Medusa);
+        cfg.channel_depths = crate::config::ChannelDepths { cmd: 1, rd_line: 2, wr_data: 1 };
+        let mut sys = System::new(cfg).unwrap();
+        let n = sys.cfg.geometry.words_per_line();
+        sys.controller_mut().preload(
+            0,
+            (0..16u64).map(|i| Line::from_words((0..n as u64).map(|y| i * 100 + y).collect())),
+        );
+        let scheds = partition(&[Region { base: 0, lines: 16 }], 4);
+        sys.lp.begin_layer(&scheds, 1);
+        sys.run_until_compute_done(200_000).unwrap();
+        let lines = sys.reassemble(&scheds, |p| sys.lp.loaded(p).to_vec());
+        for i in 0..16u64 {
+            let expect: Vec<Word> = (0..n as u64).map(|y| i * 100 + y).collect();
+            assert_eq!(lines[&i], expect, "line {i}");
+        }
+    }
+
+    #[test]
+    fn zero_depth_channel_rejected() {
+        let mut cfg = small_cfg(Design::Medusa);
+        cfg.channel_depths.rd_line = 0;
+        assert!(System::new(cfg).is_err());
     }
 
     #[test]

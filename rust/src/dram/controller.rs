@@ -9,6 +9,7 @@
 
 use crate::dram::DdrTiming;
 use crate::interconnect::arbiter::MemCommand;
+use crate::sim::stats::Counter;
 use crate::sim::{Channel, Stats};
 use crate::types::{Line, LineAddr, TaggedLine};
 use std::collections::HashMap;
@@ -81,9 +82,9 @@ impl MemoryController {
         if self.open_rows[bank] != Some(row) {
             ready += self.timing.row_miss_cycles;
             self.open_rows[bank] = Some(row);
-            stats.bump("dram.row_misses");
+            stats.bump(Counter::DramRowMisses);
         } else {
-            stats.bump("dram.row_hits");
+            stats.bump(Counter::DramRowHits);
         }
         ready + self.timing.line_cycles - 1
     }
@@ -107,26 +108,26 @@ impl MemoryController {
                         self.active =
                             Some(Active::Read { port, next_addr: addr, remaining: burst_len });
                         self.busy_until = cycle + self.timing.read_latency_cycles;
-                        stats.bump("dram.read_bursts");
+                        stats.bump(Counter::DramReadBursts);
                     }
                     MemCommand::Write { addr, burst_len, .. } => {
                         self.active = Some(Active::Write { next_addr: addr, remaining: burst_len });
                         self.busy_until = cycle + self.timing.write_latency_cycles;
-                        stats.bump("dram.write_bursts");
+                        stats.bump(Counter::DramWriteBursts);
                     }
                 }
             }
         }
 
         let Some(active) = self.active.as_mut() else {
-            stats.bump("dram.idle_cycles");
+            stats.bump(Counter::DramIdleCycles);
             return;
         };
 
         match active {
             Active::Read { port, next_addr, remaining: _ } => {
                 if !rd_line_ch.can_push() {
-                    stats.bump("dram.read_return_stall");
+                    stats.bump(Counter::DramReadReturnStall);
                     return;
                 }
                 let addr = *next_addr;
@@ -134,7 +135,7 @@ impl MemoryController {
                 let ready = self.access_ready_cycle(addr, stats);
                 if ready > cycle {
                     self.busy_until = ready;
-                    stats.bump("dram.timing_stall_cycles");
+                    stats.bump(Counter::DramTimingStallCycles);
                     return;
                 }
                 let line = self
@@ -143,7 +144,7 @@ impl MemoryController {
                     .cloned()
                     .unwrap_or_else(|| Line::zeroed(self.words_per_line));
                 rd_line_ch.push(TaggedLine { port, line });
-                stats.bump("dram.read_lines");
+                stats.bump(Counter::DramReadLines);
                 match self.active.as_mut().unwrap() {
                     Active::Read { next_addr, remaining, .. } => {
                         *next_addr += 1;
@@ -160,15 +161,15 @@ impl MemoryController {
                 let ready = self.access_ready_cycle(addr, stats);
                 if ready > cycle {
                     self.busy_until = ready;
-                    stats.bump("dram.timing_stall_cycles");
+                    stats.bump(Counter::DramTimingStallCycles);
                     return;
                 }
                 let Some(line) = wr_data_ch.pop() else {
-                    stats.bump("dram.write_data_stall");
+                    stats.bump(Counter::DramWriteDataStall);
                     return;
                 };
                 self.store.insert(addr, line);
-                stats.bump("dram.write_lines");
+                stats.bump(Counter::DramWriteLines);
                 match self.active.as_mut().unwrap() {
                     Active::Write { next_addr, remaining } => {
                         *next_addr += 1;

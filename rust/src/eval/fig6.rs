@@ -6,6 +6,7 @@ use crate::fpga::par::search_peak_frequency;
 use crate::fpga::timing::TimingModel;
 use crate::fpga::{DesignPoint, Device};
 use crate::interconnect::Design;
+use crate::util::par_map;
 
 /// One sweep point of the regenerated figure.
 #[derive(Clone, Copy, Debug)]
@@ -18,20 +19,26 @@ pub struct Fig6Point {
 }
 
 /// Regenerate the Fig 6 series (both lines).
+///
+/// Each design point is an independent P&R frequency search, so the
+/// sweep runs points across threads (`util::par_map`); results are
+/// ordered and bit-identical to a sequential run — the search itself is
+/// deterministic and shares no state between points. Set
+/// `MEDUSA_THREADS=1` to force the sequential path.
 pub fn sweep() -> Vec<Fig6Point> {
     let model = TimingModel::calibrated();
     let dev = Device::virtex7_690t();
-    DesignPoint::fig6_sweep(Design::Baseline)
+    let pairs: Vec<(DesignPoint, DesignPoint)> = DesignPoint::fig6_sweep(Design::Baseline)
         .into_iter()
         .zip(DesignPoint::fig6_sweep(Design::Medusa))
-        .map(|(b, m)| Fig6Point {
-            dsps: b.dsps(),
-            ports: b.geometry.read_ports,
-            w_line: b.geometry.w_line,
-            baseline_mhz: search_peak_frequency(&model, &b, &dev).peak_mhz,
-            medusa_mhz: search_peak_frequency(&model, &m, &dev).peak_mhz,
-        })
-        .collect()
+        .collect();
+    par_map(&pairs, |(b, m)| Fig6Point {
+        dsps: b.dsps(),
+        ports: b.geometry.read_ports,
+        w_line: b.geometry.w_line,
+        baseline_mhz: search_peak_frequency(&model, b, &dev).peak_mhz,
+        medusa_mhz: search_peak_frequency(&model, m, &dev).peak_mhz,
+    })
 }
 
 /// Render as the table backing the figure.

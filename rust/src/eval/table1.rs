@@ -3,7 +3,7 @@
 //! LUT/FF; no DSPs or BRAMs are used by either).
 
 use crate::eval::report::{count_pct, Table};
-use crate::fpga::resources::{axis_read, axis_write, baseline_read, baseline_write};
+use crate::fpga::resources::{axis_read, axis_write, baseline_read, baseline_write, Resources};
 use crate::fpga::Device;
 use crate::types::Geometry;
 
@@ -19,16 +19,24 @@ pub fn geometry() -> Geometry {
     Geometry { w_line: 256, w_acc: 16, read_ports: 16, write_ports: 16, max_burst: 32 }
 }
 
-/// Regenerate Table I from the resource model.
-pub fn table1() -> Table {
+/// Model rows in paper order. The cells are closed-form resource
+/// formulas (nanoseconds each), so this stays sequential — threads only
+/// pay off for the P&R searches (`eval::fig6`) and the behavioural
+/// simulations (bench targets).
+pub fn model_rows() -> Vec<(&'static str, Resources)> {
     let g = geometry();
-    let dev = Device::virtex7_690t();
-    let cells = [
+    vec![
         ("Base (Read)", baseline_read(&g)),
         ("AXIS (Read)", axis_read(&g)),
         ("Base (Write)", baseline_write(&g)),
         ("AXIS (Write)", axis_write(&g)),
-    ];
+    ]
+}
+
+/// Regenerate Table I from the resource model.
+pub fn table1() -> Table {
+    let dev = Device::virtex7_690t();
+    let cells = model_rows();
     let mut t = Table::new(
         "Table I — baseline vs AXI4-Stream networks (256b -> 16x16b)",
         &["network", "LUT (model)", "FF (model)", "LUT (paper)", "FF (paper)", "LUT err%", "FF err%"],

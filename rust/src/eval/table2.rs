@@ -26,7 +26,8 @@ pub fn geometry() -> Geometry {
 
 pub const DPUS: usize = 64;
 
-/// Model rows in the same order as `PAPER`.
+/// Model rows in the same order as `PAPER`. Closed-form formulas —
+/// sequential on purpose; see `table1::model_rows`.
 pub fn model_rows() -> Vec<(&'static str, Resources)> {
     let g = geometry();
     vec![

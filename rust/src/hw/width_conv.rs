@@ -67,32 +67,50 @@ impl Unpacker {
 }
 
 /// Words -> line, one word per cycle in, one line out per `N` words.
+///
+/// Accumulates directly into a [`Line`] so the per-word hot path never
+/// grows a `Vec`; for inline-sized lines (`N` ≤ 32) the whole
+/// accumulate/promote cycle is allocation-free.
 #[derive(Debug)]
 pub struct Packer {
     words_per_line: usize,
-    acc: Vec<Word>,
+    acc: Line,
+    acc_len: usize,
     ready_line: Option<Line>,
 }
 
 impl Packer {
     pub fn new(words_per_line: usize) -> Self {
         assert!(words_per_line >= 1);
-        Packer { words_per_line, acc: Vec::with_capacity(words_per_line), ready_line: None }
+        Packer {
+            words_per_line,
+            acc: Line::zeroed(words_per_line),
+            acc_len: 0,
+            ready_line: None,
+        }
     }
 
     /// Can a word be accepted this cycle? Blocked only while a completed
     /// line is waiting to be taken (single output register, as in the
     /// baseline's converter).
     pub fn can_accept(&self) -> bool {
-        self.ready_line.is_none() || self.acc.len() < self.words_per_line
+        self.ready_line.is_none() || self.acc_len < self.words_per_line
     }
 
     pub fn accept(&mut self, w: Word) {
-        assert!(self.acc.len() < self.words_per_line, "packer accumulator full");
-        self.acc.push(w);
-        if self.acc.len() == self.words_per_line && self.ready_line.is_none() {
-            self.ready_line = Some(Line::from_words(std::mem::take(&mut self.acc)));
+        assert!(self.acc_len < self.words_per_line, "packer accumulator full");
+        self.acc.set_word(self.acc_len, w);
+        self.acc_len += 1;
+        if self.acc_len == self.words_per_line && self.ready_line.is_none() {
+            self.promote();
         }
+    }
+
+    /// Move the full accumulator into the output register and reset it.
+    fn promote(&mut self) {
+        let full = std::mem::replace(&mut self.acc, Line::zeroed(self.words_per_line));
+        self.ready_line = Some(full);
+        self.acc_len = 0;
     }
 
     /// A full line is ready to hand to the FIFO.
@@ -104,15 +122,15 @@ impl Packer {
         let out = self.ready_line.take();
         // If the accumulator filled while the output register was
         // occupied, promote it now.
-        if self.acc.len() == self.words_per_line {
-            self.ready_line = Some(Line::from_words(std::mem::take(&mut self.acc)));
+        if self.acc_len == self.words_per_line {
+            self.promote();
         }
         out
     }
 
     /// Words currently accumulated toward the next line.
     pub fn pending_words(&self) -> usize {
-        self.acc.len()
+        self.acc_len
     }
 }
 

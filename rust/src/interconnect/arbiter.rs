@@ -16,6 +16,7 @@
 //!   command order.
 
 use crate::interconnect::{ReadNetwork, WriteNetwork};
+use crate::sim::stats::Counter;
 use crate::sim::{Channel, Stats};
 use crate::types::{Line, LineAddr, PortId, ReadRequest, WriteRequest};
 use std::collections::VecDeque;
@@ -116,14 +117,21 @@ impl Arbiter {
 
     /// One fabric cycle: issue at most one command and stream at most one
     /// write-data line.
-    pub fn tick(
+    ///
+    /// Generic over the network types so the per-cycle calls are static
+    /// when the caller holds concrete networks (or the `Any*` enums);
+    /// `R`/`W` may still be `dyn` trait objects for harness code.
+    pub fn tick<R, W>(
         &mut self,
-        rd_net: &dyn ReadNetwork,
-        wr_net: &mut dyn WriteNetwork,
+        rd_net: &R,
+        wr_net: &mut W,
         cmd_ch: &mut Channel<MemCommand>,
         wr_data_ch: &mut Channel<Line>,
         stats: &mut Stats,
-    ) {
+    ) where
+        R: ReadNetwork + ?Sized,
+        W: WriteNetwork + ?Sized,
+    {
         // --- Stream write data for the oldest issued burst (§III-C2
         // guarantees the data is fully buffered, so this never stalls on
         // the network side).
@@ -131,7 +139,7 @@ impl Arbiter {
             if wr_data_ch.can_push() && wr_net.mem_lines_ready(port) > 0 {
                 let line = wr_net.mem_take_line(port).expect("ready line vanished");
                 wr_data_ch.push(line);
-                stats.bump("arbiter.write_lines_streamed");
+                stats.bump(Counter::ArbiterWriteLinesStreamed);
                 self.reserved_write_lines[port] -= 1;
                 if remaining == 1 {
                     self.issued_writes.pop_front();
@@ -143,7 +151,7 @@ impl Arbiter {
 
         // --- Issue one command.
         if !cmd_ch.can_push() {
-            stats.bump("arbiter.cmd_channel_stall");
+            stats.bump(Counter::ArbiterCmdChannelStall);
             return;
         }
         let try_write_first = match self.policy {
@@ -160,9 +168,9 @@ impl Arbiter {
         }
     }
 
-    fn try_issue_read(
+    fn try_issue_read<R: ReadNetwork + ?Sized>(
         &mut self,
-        rd_net: &dyn ReadNetwork,
+        rd_net: &R,
         cmd_ch: &mut Channel<MemCommand>,
         stats: &mut Stats,
     ) -> bool {
@@ -174,22 +182,22 @@ impl Arbiter {
             // in flight (§III-C1).
             let free = rd_net.port_free_lines(p);
             if free < self.in_flight_read_lines[p] + req.burst_len {
-                stats.bump("arbiter.read_credit_stall");
+                stats.bump(Counter::ArbiterReadCreditStall);
                 continue;
             }
             self.read_q[p].pop_front();
             self.in_flight_read_lines[p] += req.burst_len;
             cmd_ch.push(MemCommand::Read { port: p, addr: req.addr, burst_len: req.burst_len });
-            stats.bump("arbiter.reads_issued");
+            stats.bump(Counter::ArbiterReadsIssued);
             self.rr_read = p + 1;
             return true;
         }
         false
     }
 
-    fn try_issue_write(
+    fn try_issue_write<W: WriteNetwork + ?Sized>(
         &mut self,
-        wr_net: &dyn WriteNetwork,
+        wr_net: &W,
         cmd_ch: &mut Channel<MemCommand>,
         stats: &mut Stats,
     ) -> bool {
@@ -201,14 +209,14 @@ impl Arbiter {
             // already reserved by a previously issued burst).
             let available = wr_net.mem_lines_ready(p).saturating_sub(self.reserved_write_lines[p]);
             if available < req.burst_len {
-                stats.bump("arbiter.write_data_stall");
+                stats.bump(Counter::ArbiterWriteDataStall);
                 continue;
             }
             self.write_q[p].pop_front();
             self.reserved_write_lines[p] += req.burst_len;
             self.issued_writes.push_back((p, req.burst_len));
             cmd_ch.push(MemCommand::Write { port: p, addr: req.addr, burst_len: req.burst_len });
-            stats.bump("arbiter.writes_issued");
+            stats.bump(Counter::ArbiterWritesIssued);
             self.rr_write = p + 1;
             return true;
         }

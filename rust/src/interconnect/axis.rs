@@ -14,6 +14,7 @@
 
 use crate::interconnect::baseline::{BaselineReadNetwork, BaselineWriteNetwork};
 use crate::interconnect::{ReadNetwork, WriteNetwork};
+use crate::sim::stats::Counter;
 use crate::sim::Stats;
 use crate::types::{Geometry, Line, PortId, TaggedLine, Word};
 use std::collections::VecDeque;
@@ -87,7 +88,7 @@ impl ReadNetwork for AxisReadNetwork {
             if front.ready_cycle <= cycle && self.inner.mem_can_deliver(front.item.port) {
                 let d = self.slice.pop_front().unwrap();
                 self.inner.mem_deliver(d.item);
-                stats.bump("axis_read.lines_through_slices");
+                stats.bump(Counter::AxisReadLinesThroughSlices);
             }
         }
     }
@@ -157,7 +158,7 @@ impl WriteNetwork for AxisWriteNetwork {
                         item: (p, line),
                         ready_cycle: cycle + REG_SLICE_STAGES,
                     });
-                    stats.bump("axis_write.lines_through_slices");
+                    stats.bump(Counter::AxisWriteLinesThroughSlices);
                     break;
                 }
             }

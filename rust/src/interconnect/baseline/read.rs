@@ -8,6 +8,7 @@
 
 use crate::hw::{BoundedFifo, Unpacker};
 use crate::interconnect::ReadNetwork;
+use crate::sim::stats::Counter;
 use crate::sim::Stats;
 use crate::types::{Geometry, Line, PortId, TaggedLine, Word};
 
@@ -91,7 +92,7 @@ impl ReadNetwork for BaselineReadNetwork {
             if lane.conv.can_load() {
                 if let Some(line) = lane.fifo.pop() {
                     lane.conv.load(line);
-                    stats.bump("baseline_read.lines_into_converter");
+                    stats.bump(Counter::BaselineReadLinesIntoConverter);
                 }
             }
         }

@@ -8,6 +8,7 @@
 
 use crate::hw::{BoundedFifo, Packer};
 use crate::interconnect::WriteNetwork;
+use crate::sim::stats::Counter;
 use crate::sim::Stats;
 use crate::types::{Geometry, Line, PortId, Word};
 
@@ -81,7 +82,7 @@ impl WriteNetwork for BaselineWriteNetwork {
             // Converter -> FIFO: move a completed line if there is room.
             if lane.conv.has_line() && !lane.fifo.is_full() {
                 lane.fifo.push(lane.conv.take_line().unwrap());
-                stats.bump("baseline_write.lines_into_fifo");
+                stats.bump(Counter::BaselineWriteLinesIntoFifo);
             }
         }
     }

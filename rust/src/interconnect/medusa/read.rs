@@ -3,6 +3,7 @@
 use super::MedusaTuning;
 use crate::hw::BankedSram;
 use crate::interconnect::ReadNetwork;
+use crate::sim::stats::{Counter, SampleId};
 use crate::sim::Stats;
 use crate::types::{Geometry, PortId, TaggedLine, Word};
 use std::collections::VecDeque;
@@ -236,7 +237,7 @@ impl ReadNetwork for MedusaReadNetwork {
                 ctl.head = (ctl.head + 1) % self.geom.max_burst;
                 ctl.in_count -= 1;
                 if let Some(arr) = ctl.arrival_cycles.pop_front() {
-                    stats.sample("medusa_read.line_latency_cycles", cycle - arr);
+                    stats.sample(SampleId::MedusaReadLineLatencyCycles, cycle - arr);
                 }
                 if self.tuning.rotator_stages == 0 {
                     ctl.half_full[ctl.fill_half] = true;
@@ -251,8 +252,8 @@ impl ReadNetwork for MedusaReadNetwork {
                 completed += 1;
             }
         }
-        stats.add("medusa_read.words_rotated", words_rotated);
-        stats.add("medusa_read.lines_transposed", completed);
+        stats.add(Counter::MedusaReadWordsRotated, words_rotated);
+        stats.add(Counter::MedusaReadLinesTransposed, completed);
     }
 
     fn nominal_latency(&self) -> usize {

@@ -16,6 +16,7 @@
 use super::MedusaTuning;
 use crate::hw::BankedSram;
 use crate::interconnect::WriteNetwork;
+use crate::sim::stats::Counter;
 use crate::sim::Stats;
 use crate::types::{Geometry, Line, PortId, Word};
 use std::collections::VecDeque;
@@ -149,16 +150,16 @@ impl WriteNetwork for MedusaWriteNetwork {
             return None;
         }
         let slot = self.region(port) + self.ports[port].out_head;
-        let mut words = Vec::with_capacity(n);
-        for y in 0..n {
-            words.push(self.output.read(y, slot));
-        }
+        // Fill the line straight from the banks — no intermediate Vec,
+        // and for inline-sized lines (N <= 32) no allocation at all.
+        let output = &mut self.output;
+        let line = Line::from_fn(n, |y| output.read(y, slot));
         let ctl = &mut self.ports[port];
         ctl.out_head = (ctl.out_head + 1) % self.geom.max_burst;
         ctl.ready -= 1;
         ctl.out_count -= 1;
         self.line_taken_this_cycle = true;
-        Some(Line::from_words(words))
+        Some(line)
     }
 
     fn tick(&mut self, cycle: u64, stats: &mut Stats) {
@@ -236,8 +237,8 @@ impl WriteNetwork for MedusaWriteNetwork {
                 completed += 1;
             }
         }
-        stats.add("medusa_write.words_rotated", words_rotated);
-        stats.add("medusa_write.lines_transposed", completed);
+        stats.add(Counter::MedusaWriteWordsRotated, words_rotated);
+        stats.add(Counter::MedusaWriteLinesTransposed, completed);
     }
 
     fn nominal_latency(&self) -> usize {

@@ -127,6 +127,10 @@ pub trait WriteNetwork {
 }
 
 /// Construct a read network of the given design.
+///
+/// Returns a trait object for harness/test code that wants design
+/// erasure; the per-cycle simulation core uses [`AnyReadNetwork`]
+/// instead so every `tick` devirtualizes and inlines.
 pub fn build_read_network(design: Design, geom: Geometry) -> Box<dyn ReadNetwork + Send> {
     match design {
         Design::Baseline => Box::new(baseline::BaselineReadNetwork::new(geom)),
@@ -135,12 +139,178 @@ pub fn build_read_network(design: Design, geom: Geometry) -> Box<dyn ReadNetwork
     }
 }
 
-/// Construct a write network of the given design.
+/// Construct a write network of the given design (trait-object form; see
+/// [`build_read_network`]).
 pub fn build_write_network(design: Design, geom: Geometry) -> Box<dyn WriteNetwork + Send> {
     match design {
         Design::Baseline => Box::new(baseline::BaselineWriteNetwork::new(geom)),
         Design::Medusa => Box::new(medusa::MedusaWriteNetwork::new(geom)),
         Design::Axis => Box::new(axis::AxisWriteNetwork::new(geom)),
+    }
+}
+
+/// Statically dispatched read network: a closed enum over the three
+/// designs. `System` holds this instead of `Box<dyn ReadNetwork>` so the
+/// per-cycle `tick`/`port_*` calls monomorphize into direct (inlinable)
+/// calls — the match on a three-variant discriminant predicts perfectly,
+/// where a vtable load did not. The [`ReadNetwork`] trait impl keeps it
+/// interchangeable with the boxed path for the harness and tests.
+pub enum AnyReadNetwork {
+    Baseline(baseline::BaselineReadNetwork),
+    Medusa(medusa::MedusaReadNetwork),
+    Axis(axis::AxisReadNetwork),
+}
+
+impl AnyReadNetwork {
+    pub fn build(design: Design, geom: Geometry) -> Self {
+        match design {
+            Design::Baseline => AnyReadNetwork::Baseline(baseline::BaselineReadNetwork::new(geom)),
+            Design::Medusa => AnyReadNetwork::Medusa(medusa::MedusaReadNetwork::new(geom)),
+            Design::Axis => AnyReadNetwork::Axis(axis::AxisReadNetwork::new(geom)),
+        }
+    }
+
+    /// Medusa with explicit tuning (rotator-pipelining ablations).
+    pub fn medusa_with_tuning(geom: Geometry, tuning: medusa::MedusaTuning) -> Self {
+        AnyReadNetwork::Medusa(medusa::MedusaReadNetwork::with_tuning(geom, tuning))
+    }
+
+    pub fn design(&self) -> Design {
+        match self {
+            AnyReadNetwork::Baseline(_) => Design::Baseline,
+            AnyReadNetwork::Medusa(_) => Design::Medusa,
+            AnyReadNetwork::Axis(_) => Design::Axis,
+        }
+    }
+}
+
+macro_rules! any_read_dispatch {
+    ($self:expr, $net:ident => $body:expr) => {
+        match $self {
+            AnyReadNetwork::Baseline($net) => $body,
+            AnyReadNetwork::Medusa($net) => $body,
+            AnyReadNetwork::Axis($net) => $body,
+        }
+    };
+}
+
+impl ReadNetwork for AnyReadNetwork {
+    #[inline]
+    fn geometry(&self) -> &Geometry {
+        any_read_dispatch!(self, n => n.geometry())
+    }
+
+    #[inline]
+    fn mem_can_deliver(&self, port: PortId) -> bool {
+        any_read_dispatch!(self, n => n.mem_can_deliver(port))
+    }
+
+    #[inline]
+    fn mem_deliver(&mut self, line: TaggedLine) {
+        any_read_dispatch!(self, n => n.mem_deliver(line))
+    }
+
+    #[inline]
+    fn port_free_lines(&self, port: PortId) -> usize {
+        any_read_dispatch!(self, n => n.port_free_lines(port))
+    }
+
+    #[inline]
+    fn port_word_available(&self, port: PortId) -> bool {
+        any_read_dispatch!(self, n => n.port_word_available(port))
+    }
+
+    #[inline]
+    fn port_take_word(&mut self, port: PortId) -> Option<Word> {
+        any_read_dispatch!(self, n => n.port_take_word(port))
+    }
+
+    #[inline]
+    fn tick(&mut self, cycle: u64, stats: &mut Stats) {
+        any_read_dispatch!(self, n => n.tick(cycle, stats))
+    }
+
+    #[inline]
+    fn nominal_latency(&self) -> usize {
+        any_read_dispatch!(self, n => n.nominal_latency())
+    }
+}
+
+/// Statically dispatched write network; see [`AnyReadNetwork`].
+pub enum AnyWriteNetwork {
+    Baseline(baseline::BaselineWriteNetwork),
+    Medusa(medusa::MedusaWriteNetwork),
+    Axis(axis::AxisWriteNetwork),
+}
+
+impl AnyWriteNetwork {
+    pub fn build(design: Design, geom: Geometry) -> Self {
+        match design {
+            Design::Baseline => {
+                AnyWriteNetwork::Baseline(baseline::BaselineWriteNetwork::new(geom))
+            }
+            Design::Medusa => AnyWriteNetwork::Medusa(medusa::MedusaWriteNetwork::new(geom)),
+            Design::Axis => AnyWriteNetwork::Axis(axis::AxisWriteNetwork::new(geom)),
+        }
+    }
+
+    pub fn medusa_with_tuning(geom: Geometry, tuning: medusa::MedusaTuning) -> Self {
+        AnyWriteNetwork::Medusa(medusa::MedusaWriteNetwork::with_tuning(geom, tuning))
+    }
+
+    pub fn design(&self) -> Design {
+        match self {
+            AnyWriteNetwork::Baseline(_) => Design::Baseline,
+            AnyWriteNetwork::Medusa(_) => Design::Medusa,
+            AnyWriteNetwork::Axis(_) => Design::Axis,
+        }
+    }
+}
+
+macro_rules! any_write_dispatch {
+    ($self:expr, $net:ident => $body:expr) => {
+        match $self {
+            AnyWriteNetwork::Baseline($net) => $body,
+            AnyWriteNetwork::Medusa($net) => $body,
+            AnyWriteNetwork::Axis($net) => $body,
+        }
+    };
+}
+
+impl WriteNetwork for AnyWriteNetwork {
+    #[inline]
+    fn geometry(&self) -> &Geometry {
+        any_write_dispatch!(self, n => n.geometry())
+    }
+
+    #[inline]
+    fn port_can_accept(&self, port: PortId) -> bool {
+        any_write_dispatch!(self, n => n.port_can_accept(port))
+    }
+
+    #[inline]
+    fn port_push_word(&mut self, port: PortId, w: Word) {
+        any_write_dispatch!(self, n => n.port_push_word(port, w))
+    }
+
+    #[inline]
+    fn mem_lines_ready(&self, port: PortId) -> usize {
+        any_write_dispatch!(self, n => n.mem_lines_ready(port))
+    }
+
+    #[inline]
+    fn mem_take_line(&mut self, port: PortId) -> Option<Line> {
+        any_write_dispatch!(self, n => n.mem_take_line(port))
+    }
+
+    #[inline]
+    fn tick(&mut self, cycle: u64, stats: &mut Stats) {
+        any_write_dispatch!(self, n => n.tick(cycle, stats))
+    }
+
+    #[inline]
+    fn nominal_latency(&self) -> usize {
+        any_write_dispatch!(self, n => n.nominal_latency())
     }
 }
 
@@ -164,6 +334,20 @@ mod tests {
             assert_eq!(r.geometry().read_ports, 4);
             let w = build_write_network(d, g);
             assert_eq!(w.geometry().write_ports, 4);
+        }
+    }
+
+    #[test]
+    fn any_network_matches_boxed_factory() {
+        let g = Geometry { w_line: 64, w_acc: 16, read_ports: 4, write_ports: 4, max_burst: 4 };
+        for d in [Design::Baseline, Design::Medusa, Design::Axis] {
+            let r = AnyReadNetwork::build(d, g);
+            assert_eq!(r.design(), d);
+            assert_eq!(r.geometry().read_ports, 4);
+            assert_eq!(r.nominal_latency(), build_read_network(d, g).nominal_latency());
+            let w = AnyWriteNetwork::build(d, g);
+            assert_eq!(w.design(), d);
+            assert_eq!(w.nominal_latency(), build_write_network(d, g).nominal_latency());
         }
     }
 }

@@ -6,11 +6,27 @@
 //! jax >= 0.5 emits protos with 64-bit instruction ids that the
 //! xla_extension 0.5.1 backing the `xla` crate rejects; the text parser
 //! reassigns ids and round-trips cleanly (see /opt/xla-example/README).
+//!
+//! The real client requires the `xla` crate, which is not in the offline
+//! registry; it compiles only under the `pjrt` feature (add the crate as
+//! a path/git dependency alongside). Without the feature, [`stub`]
+//! provides the same public types whose constructors return a clear
+//! error, so every caller (driver, CLI, examples, e2e tests) falls back
+//! to the Rust golden-model backend exactly as it does when artifacts
+//! are missing.
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod executor;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
 
 pub use artifacts::Artifacts;
+#[cfg(feature = "pjrt")]
 pub use client::RuntimeClient;
+#[cfg(feature = "pjrt")]
 pub use executor::ConvExecutor;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{ConvExecutor, RuntimeClient};

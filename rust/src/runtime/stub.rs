@@ -1,0 +1,77 @@
+//! Compile-time stand-ins for the PJRT runtime when the `pjrt` feature
+//! (and its `xla` crate dependency) is absent. Constructors return
+//! errors; since no instance can ever exist, the execution methods are
+//! unreachable but keep the same signatures so call sites compile
+//! unchanged and fall back to the golden backend at run time.
+
+use crate::accel::dnn::ConvLayer;
+use crate::accel::quant::Fixed16;
+use crate::runtime::Artifacts;
+use anyhow::{bail, Result};
+
+const UNAVAILABLE: &str =
+    "PJRT support not compiled in — build with `--features pjrt` and provide the `xla` crate";
+
+/// Stub of the PJRT CPU client wrapper.
+pub struct RuntimeClient {
+    _private: (),
+}
+
+impl RuntimeClient {
+    pub fn cpu() -> Result<Self> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn platform(&self) -> String {
+        unreachable!("RuntimeClient cannot be constructed without the pjrt feature")
+    }
+
+    pub fn is_loaded(&self, _name: &str) -> bool {
+        unreachable!("RuntimeClient cannot be constructed without the pjrt feature")
+    }
+}
+
+/// Stub of the conv-artifact executor.
+pub struct ConvExecutor {
+    _private: (),
+}
+
+impl ConvExecutor {
+    pub fn new() -> Result<Self> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn with_artifacts(_artifacts: Artifacts) -> Result<Self> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        unreachable!("ConvExecutor cannot be constructed without the pjrt feature")
+    }
+
+    pub fn layer_of(&self, _name: &str) -> Result<ConvLayer> {
+        unreachable!("ConvExecutor cannot be constructed without the pjrt feature")
+    }
+
+    pub fn run_conv(
+        &mut self,
+        _name: &str,
+        _ifmap: &[Fixed16],
+        _weights: &[Fixed16],
+        _bias: &[Fixed16],
+    ) -> Result<Vec<Fixed16>> {
+        unreachable!("ConvExecutor cannot be constructed without the pjrt feature")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stubs_error_cleanly() {
+        let err = RuntimeClient::cpu().unwrap_err();
+        assert!(format!("{err}").contains("pjrt"));
+        assert!(ConvExecutor::new().is_err());
+    }
+}

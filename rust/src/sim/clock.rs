@@ -8,43 +8,139 @@
 //!
 //! [`Scheduler`] advances simulated time edge by edge: at each step it
 //! finds the domain(s) with the earliest next rising edge and reports
-//! which domains fire. Components are grouped per domain by the netlist
-//! owner, which ticks + commits them when their domain fires.
+//! which domains fire as a [`Fired`] bitmask — a `Copy` value, so the
+//! hot loop performs **no heap allocation**. Components are grouped per
+//! domain by the netlist owner, which ticks + commits them when their
+//! domain fires.
+//!
+//! Periods are carried in **femtoseconds**: at picosecond granularity a
+//! 225 MHz clock rounds to 4444 ps (≈225.02 MHz), a 1e-4 relative error
+//! that drifts systematically over long runs. At femtosecond granularity
+//! the worst-case rounding error is 0.5 fs per period (relative error
+//! ≤ ~1e-7 for every Fig 6 frequency), which keeps multi-billion-edge
+//! runs on the intended clock ratio.
 
-/// One clock domain, defined by its period in picoseconds.
+/// Picoseconds are the simulator's reporting unit; periods are tracked
+/// at this finer granularity internally.
+pub const FS_PER_PS: u64 = 1_000;
+
+/// One clock domain, defined by its period in femtoseconds.
 #[derive(Clone, Debug)]
 pub struct ClockDomain {
     pub name: &'static str,
-    pub period_ps: u64,
+    period_fs: u64,
     /// Cycles elapsed in this domain.
     pub cycles: u64,
-    /// Absolute time (ps) of the next rising edge.
-    next_edge_ps: u64,
+    /// Absolute time (fs) of the next rising edge.
+    next_edge_fs: u64,
 }
 
 impl ClockDomain {
     pub fn from_mhz(name: &'static str, mhz: f64) -> Self {
         assert!(mhz > 0.0, "clock {name} must have positive frequency");
-        let period_ps = (1_000_000.0 / mhz).round() as u64;
-        ClockDomain { name, period_ps, cycles: 0, next_edge_ps: 0 }
+        // 1 MHz -> 1e9 fs period.
+        let period_fs = (1_000_000_000.0 / mhz).round() as u64;
+        assert!(period_fs > 0, "clock {name} period underflows 1 fs");
+        ClockDomain { name, period_fs, cycles: 0, next_edge_fs: 0 }
+    }
+
+    pub fn period_fs(&self) -> u64 {
+        self.period_fs
+    }
+
+    /// Period in picoseconds (rounded; reporting only — stepping uses
+    /// the exact femtosecond period).
+    pub fn period_ps(&self) -> u64 {
+        (self.period_fs + FS_PER_PS / 2) / FS_PER_PS
     }
 
     pub fn freq_mhz(&self) -> f64 {
-        1_000_000.0 / self.period_ps as f64
+        1_000_000_000.0 / self.period_fs as f64
     }
 }
 
+/// The set of domains that fired at one scheduler step, as a bitmask.
+/// `Copy`, allocation-free, iterable in ascending domain order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct Fired(u64);
+
+impl Fired {
+    pub const EMPTY: Fired = Fired(0);
+
+    #[inline(always)]
+    pub fn contains(self, domain: usize) -> bool {
+        self.0 & (1u64 << domain) != 0
+    }
+
+    #[inline(always)]
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+
+    #[inline(always)]
+    pub fn count(self) -> u32 {
+        self.0.count_ones()
+    }
+
+    #[inline(always)]
+    pub fn iter(self) -> FiredIter {
+        FiredIter(self.0)
+    }
+
+    /// The raw bitmask (bit i = domain i fired).
+    #[inline(always)]
+    pub fn mask(self) -> u64 {
+        self.0
+    }
+}
+
+impl IntoIterator for Fired {
+    type Item = usize;
+    type IntoIter = FiredIter;
+
+    #[inline(always)]
+    fn into_iter(self) -> FiredIter {
+        FiredIter(self.0)
+    }
+}
+
+/// Iterator over set bits of a [`Fired`] mask, ascending.
+#[derive(Clone, Copy, Debug)]
+pub struct FiredIter(u64);
+
+impl Iterator for FiredIter {
+    type Item = usize;
+
+    #[inline(always)]
+    fn next(&mut self) -> Option<usize> {
+        if self.0 == 0 {
+            return None;
+        }
+        let i = self.0.trailing_zeros() as usize;
+        self.0 &= self.0 - 1;
+        Some(i)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let n = self.0.count_ones() as usize;
+        (n, Some(n))
+    }
+}
+
+impl ExactSizeIterator for FiredIter {}
+
 /// Edge-ordered scheduler over a set of clock domains.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub struct Scheduler {
     domains: Vec<ClockDomain>,
-    now_ps: u64,
+    now_fs: u64,
 }
 
 impl Scheduler {
     pub fn new(domains: Vec<ClockDomain>) -> Self {
         assert!(!domains.is_empty());
-        Scheduler { domains, now_ps: 0 }
+        assert!(domains.len() <= 64, "Fired bitmask supports at most 64 domains");
+        Scheduler { domains, now_fs: 0 }
     }
 
     /// Single-domain convenience constructor.
@@ -52,8 +148,13 @@ impl Scheduler {
         Scheduler::new(vec![ClockDomain::from_mhz(name, mhz)])
     }
 
+    pub fn now_fs(&self) -> u64 {
+        self.now_fs
+    }
+
+    /// Current simulated time in picoseconds (truncated from fs).
     pub fn now_ps(&self) -> u64 {
-        self.now_ps
+        self.now_fs / FS_PER_PS
     }
 
     pub fn domain(&self, idx: usize) -> &ClockDomain {
@@ -64,21 +165,32 @@ impl Scheduler {
         self.domains.len()
     }
 
-    /// Advance to the next rising edge(s). Returns the indices of every
+    /// Advance to the next rising edge(s). Returns the bitmask of every
     /// domain that fires at that instant (simultaneous edges fire
     /// together, as in RTL simulation) and updates their cycle counters.
-    pub fn step(&mut self) -> Vec<usize> {
-        let t = self.domains.iter().map(|d| d.next_edge_ps).min().unwrap();
-        self.now_ps = t;
-        let mut fired = Vec::new();
+    /// Allocation-free: the returned [`Fired`] is a `Copy` bitmask.
+    #[inline]
+    pub fn step(&mut self) -> Fired {
+        let mut t = u64::MAX;
+        for d in self.domains.iter() {
+            t = t.min(d.next_edge_fs);
+        }
+        self.now_fs = t;
+        let mut mask = 0u64;
         for (i, d) in self.domains.iter_mut().enumerate() {
-            if d.next_edge_ps == t {
+            if d.next_edge_fs == t {
                 d.cycles += 1;
-                d.next_edge_ps += d.period_ps;
-                fired.push(i);
+                // u64 femtoseconds cap the horizon at ~5.1 hours of
+                // simulated time; fail loudly instead of wrapping and
+                // silently corrupting the clock ratio.
+                d.next_edge_fs = d
+                    .next_edge_fs
+                    .checked_add(d.period_fs)
+                    .expect("simulated time overflowed u64 femtoseconds (~5.1 h)");
+                mask |= 1u64 << i;
             }
         }
-        fired
+        Fired(mask)
     }
 }
 
@@ -86,12 +198,18 @@ impl Scheduler {
 mod tests {
     use super::*;
 
+    fn fired_vec(f: Fired) -> Vec<usize> {
+        f.iter().collect()
+    }
+
     #[test]
     fn single_domain_counts_cycles() {
         let mut s = Scheduler::single("clk", 200.0);
         for _ in 0..10 {
             let fired = s.step();
-            assert_eq!(fired, vec![0]);
+            assert_eq!(fired_vec(fired), vec![0]);
+            assert!(fired.contains(0));
+            assert_eq!(fired.count(), 1);
         }
         assert_eq!(s.domain(0).cycles, 10);
         // 200 MHz -> 5 ns period; 10 edges end at t = 9 periods after the
@@ -125,6 +243,8 @@ mod tests {
     #[test]
     fn irrational_ratio_approximates() {
         // 225 MHz fabric vs 200 MHz controller — the Fig 6 sweet spot.
+        // With femtosecond periods the ratio must be right to ~1e-6 even
+        // on a short window (it was only ~1e-2 at ps granularity).
         let mut s = Scheduler::new(vec![
             ClockDomain::from_mhz("fabric", 225.0),
             ClockDomain::from_mhz("mem", 200.0),
@@ -140,7 +260,36 @@ mod tests {
             }
         }
         let ratio = fab as f64 / mem as f64;
-        assert!((ratio - 225.0 / 200.0).abs() < 0.02, "ratio {ratio}");
+        assert!((ratio - 225.0 / 200.0).abs() < 0.002, "ratio {ratio}");
+    }
+
+    #[test]
+    fn long_run_does_not_drift() {
+        // The satellite fix this guards: at ps granularity 225 MHz became
+        // 4444 ps (225.02 MHz), so over 1M controller cycles the fabric
+        // gained ~100 edges vs the exact 9:8 ratio. At fs granularity the
+        // error bound over the same window is a handful of edges.
+        let mut s = Scheduler::new(vec![
+            ClockDomain::from_mhz("fabric", 225.0),
+            ClockDomain::from_mhz("mem", 200.0),
+        ]);
+        while s.domain(1).cycles < 1_000_000 {
+            s.step();
+        }
+        let fab = s.domain(0).cycles as i64;
+        let expect = 1_000_000i64 * 9 / 8;
+        assert!(
+            (fab - expect).abs() <= 4,
+            "fabric cycles {fab} drifted from exact {expect}"
+        );
+    }
+
+    #[test]
+    fn period_precision_is_femtoseconds() {
+        let d = ClockDomain::from_mhz("f", 225.0);
+        assert_eq!(d.period_fs(), 4_444_444);
+        assert_eq!(d.period_ps(), 4_444);
+        assert!((d.freq_mhz() - 225.0).abs() < 1e-4);
     }
 
     #[test]
@@ -150,6 +299,16 @@ mod tests {
             ClockDomain::from_mhz("b", 100.0),
         ]);
         let fired = s.step();
-        assert_eq!(fired, vec![0, 1]);
+        assert_eq!(fired_vec(fired), vec![0, 1]);
+        assert_eq!(fired.count(), 2);
+    }
+
+    #[test]
+    fn fired_mask_iterates_set_bits() {
+        let f = Fired(0b1010_0001);
+        assert_eq!(fired_vec(f), vec![0, 5, 7]);
+        assert!(f.contains(5) && !f.contains(1));
+        assert!(Fired::EMPTY.is_empty());
+        assert_eq!(f.iter().len(), 3);
     }
 }

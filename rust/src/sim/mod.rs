@@ -21,8 +21,8 @@ pub mod stats;
 pub mod trace;
 
 pub use channel::Channel;
-pub use clock::{ClockDomain, Scheduler};
-pub use stats::Stats;
+pub use clock::{ClockDomain, Fired, Scheduler};
+pub use stats::{Counter, SampleId, Stats};
 pub use trace::Trace;
 
 /// A clocked hardware component. `tick` evaluates one cycle's worth of

@@ -1,19 +1,99 @@
 //! Named counters and simple distributions collected during simulation.
 //!
 //! Components take `&mut Stats` during ticks; the coordinator aggregates
-//! and prints them. String keys are interned as `&'static str` at the
-//! call sites (all counter names are literals), so the hot path is a
-//! `HashMap<&'static str, u64>` bump — cheap enough that counters stay on
-//! even in benchmark runs.
+//! and prints them. The hot path is fully interned: every counter is a
+//! compile-time [`Counter`] id and every sample series a [`SampleId`],
+//! so `bump`/`add`/`sample` are a single indexed add into a fixed-size
+//! array — no hashing, no heap, no branches beyond the bounds check the
+//! compiler elides. The `&'static str` names live in a parallel table
+//! used only by the (cold) reporting and string-keyed lookup paths. The
+//! report layout is unchanged; the one behavioural difference is that
+//! counters whose value is zero are omitted (the map used to print a
+//! key touched only by `add(k, 0)`).
 
-use std::collections::HashMap;
 use std::fmt;
 
-#[derive(Default, Debug)]
-pub struct Stats {
-    counters: HashMap<&'static str, u64>,
-    /// min/max/sum/count per named sample series (e.g. latencies).
-    samples: HashMap<&'static str, Series>,
+/// Declare the counter registry: enum + name table + count, kept in one
+/// place so an id and its report name can never drift apart.
+macro_rules! counters {
+    ($enum_name:ident, $count_const:ident, $all_const:ident; $($variant:ident => $name:literal,)*) => {
+        /// Compile-time id of one simulation counter.
+        #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+        #[repr(usize)]
+        pub enum $enum_name {
+            $($variant,)*
+        }
+
+        impl $enum_name {
+            pub const $count_const: usize = [$($name,)*].len();
+            pub const $all_const: [$enum_name; Self::$count_const] = [$($enum_name::$variant,)*];
+
+            /// The report name (the legacy string key).
+            #[inline]
+            pub const fn name(self) -> &'static str {
+                match self {
+                    $($enum_name::$variant => $name,)*
+                }
+            }
+
+            /// Resolve a legacy string key to its id (cold path: tests
+            /// and report tooling only).
+            pub fn from_name(name: &str) -> Option<$enum_name> {
+                match name {
+                    $($name => Some($enum_name::$variant),)*
+                    _ => None,
+                }
+            }
+        }
+    };
+}
+
+counters! {
+    Counter, COUNT, ALL;
+    // Request arbiter.
+    ArbiterCmdChannelStall => "arbiter.cmd_channel_stall",
+    ArbiterReadCreditStall => "arbiter.read_credit_stall",
+    ArbiterReadsIssued => "arbiter.reads_issued",
+    ArbiterWriteDataStall => "arbiter.write_data_stall",
+    ArbiterWriteLinesStreamed => "arbiter.write_lines_streamed",
+    ArbiterWritesIssued => "arbiter.writes_issued",
+    // AXI4-Stream comparator networks.
+    AxisReadLinesThroughSlices => "axis_read.lines_through_slices",
+    AxisWriteLinesThroughSlices => "axis_write.lines_through_slices",
+    // Baseline networks.
+    BaselineReadLinesIntoConverter => "baseline_read.lines_into_converter",
+    BaselineWriteLinesIntoFifo => "baseline_write.lines_into_fifo",
+    // DDR3 memory controller.
+    DramIdleCycles => "dram.idle_cycles",
+    DramReadBursts => "dram.read_bursts",
+    DramReadLines => "dram.read_lines",
+    DramReadReturnStall => "dram.read_return_stall",
+    DramRowHits => "dram.row_hits",
+    DramRowMisses => "dram.row_misses",
+    DramTimingStallCycles => "dram.timing_stall_cycles",
+    DramWriteBursts => "dram.write_bursts",
+    DramWriteDataStall => "dram.write_data_stall",
+    DramWriteLines => "dram.write_lines",
+    // Layer processor.
+    LpDrainStallPortCycles => "lp.drain_stall_port_cycles",
+    LpLoadStallPortCycles => "lp.load_stall_port_cycles",
+    LpReadBurstsSubmitted => "lp.read_bursts_submitted",
+    LpWordsDrained => "lp.words_drained",
+    LpWordsLoaded => "lp.words_loaded",
+    LpWriteBurstsSubmitted => "lp.write_bursts_submitted",
+    // Medusa networks.
+    MedusaReadLinesTransposed => "medusa_read.lines_transposed",
+    MedusaReadWordsRotated => "medusa_read.words_rotated",
+    MedusaWriteLinesTransposed => "medusa_write.lines_transposed",
+    MedusaWriteWordsRotated => "medusa_write.words_rotated",
+    // System-level CDC adapters.
+    SysReadLineBackpressure => "sys.read_line_backpressure",
+    SysReadLinesIntoFabric => "sys.read_lines_into_fabric",
+}
+
+counters! {
+    SampleId, COUNT, ALL;
+    MedusaReadLineLatencyCycles => "medusa_read.line_latency_cycles",
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -25,7 +105,7 @@ pub struct Series {
 }
 
 impl Series {
-    fn new() -> Self {
+    const fn new() -> Self {
         Series { min: u64::MAX, max: 0, sum: 0, count: 0 }
     }
 
@@ -38,43 +118,77 @@ impl Series {
     }
 }
 
+#[derive(Clone, Debug)]
+pub struct Stats {
+    counters: [u64; Counter::COUNT],
+    samples: [Series; SampleId::COUNT],
+}
+
+impl Default for Stats {
+    fn default() -> Self {
+        Stats::new()
+    }
+}
+
 impl Stats {
-    pub fn new() -> Self {
-        Stats::default()
+    pub const fn new() -> Self {
+        Stats {
+            counters: [0; Counter::COUNT],
+            samples: [Series::new(); SampleId::COUNT],
+        }
     }
 
-    pub fn bump(&mut self, key: &'static str) {
-        *self.counters.entry(key).or_insert(0) += 1;
+    #[inline(always)]
+    pub fn bump(&mut self, id: Counter) {
+        self.counters[id as usize] += 1;
     }
 
-    pub fn add(&mut self, key: &'static str, n: u64) {
-        *self.counters.entry(key).or_insert(0) += n;
+    #[inline(always)]
+    pub fn add(&mut self, id: Counter, n: u64) {
+        self.counters[id as usize] += n;
     }
 
+    /// Fast indexed read.
+    #[inline(always)]
+    pub fn count(&self, id: Counter) -> u64 {
+        self.counters[id as usize]
+    }
+
+    /// Legacy string-keyed read (cold: tests and report tooling).
+    /// Unknown keys read as 0, matching the old `HashMap` behaviour.
     pub fn get(&self, key: &str) -> u64 {
-        self.counters.get(key).copied().unwrap_or(0)
+        Counter::from_name(key).map_or(0, |id| self.count(id))
     }
 
-    pub fn sample(&mut self, key: &'static str, v: u64) {
-        let s = self.samples.entry(key).or_insert_with(Series::new);
+    #[inline(always)]
+    pub fn sample(&mut self, id: SampleId, v: u64) {
+        let s = &mut self.samples[id as usize];
         s.min = s.min.min(v);
         s.max = s.max.max(v);
         s.sum += v;
         s.count += 1;
     }
 
+    #[inline(always)]
+    pub fn series_of(&self, id: SampleId) -> &Series {
+        &self.samples[id as usize]
+    }
+
+    /// Legacy string-keyed series lookup; `None` for unknown keys or
+    /// series with no samples (matching the old map semantics).
     pub fn series(&self, key: &str) -> Option<&Series> {
-        self.samples.get(key)
+        let s = self.series_of(SampleId::from_name(key)?);
+        (s.count > 0).then_some(s)
     }
 
     /// Merge another Stats into this one (used when joining per-thread
     /// sweeps).
     pub fn merge(&mut self, other: &Stats) {
-        for (k, v) in &other.counters {
-            *self.counters.entry(k).or_insert(0) += v;
+        for i in 0..Counter::COUNT {
+            self.counters[i] += other.counters[i];
         }
-        for (k, s) in &other.samples {
-            let e = self.samples.entry(k).or_insert_with(Series::new);
+        for i in 0..SampleId::COUNT {
+            let (e, s) = (&mut self.samples[i], &other.samples[i]);
             e.min = e.min.min(s.min);
             e.max = e.max.max(s.max);
             e.sum += s.sum;
@@ -82,26 +196,34 @@ impl Stats {
         }
     }
 
-    pub fn counters(&self) -> impl Iterator<Item = (&&'static str, &u64)> {
-        self.counters.iter()
+    /// All touched counters as `(name, value)`, sorted by name (the
+    /// registry is declared in name order).
+    pub fn counters(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
+        Counter::ALL
+            .iter()
+            .map(move |&id| (id.name(), self.count(id)))
+            .filter(|&(_, v)| v > 0)
     }
 }
 
 impl fmt::Display for Stats {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        let mut keys: Vec<_> = self.counters.keys().collect();
-        keys.sort();
-        for k in keys {
-            writeln!(f, "  {k:<40} {}", self.counters[*k])?;
+        // The registry arrays are declared sorted by name, so iteration
+        // order matches the old sorted-HashMap report. Counters that were
+        // never touched are omitted, as before.
+        for (name, v) in self.counters() {
+            writeln!(f, "  {name:<40} {v}")?;
         }
-        let mut keys: Vec<_> = self.samples.keys().collect();
-        keys.sort();
-        for k in keys {
-            let s = &self.samples[*k];
+        for &id in SampleId::ALL.iter() {
+            let s = self.series_of(id);
+            if s.count == 0 {
+                continue;
+            }
             writeln!(
                 f,
-                "  {k:<40} min={} max={} mean={:.2} n={}",
-                if s.count == 0 { 0 } else { s.min },
+                "  {:<40} min={} max={} mean={:.2} n={}",
+                id.name(),
+                s.min,
                 s.max,
                 s.mean(),
                 s.count
@@ -118,10 +240,11 @@ mod tests {
     #[test]
     fn counters_accumulate() {
         let mut s = Stats::new();
-        s.bump("a");
-        s.bump("a");
-        s.add("a", 3);
-        assert_eq!(s.get("a"), 5);
+        s.bump(Counter::ArbiterReadsIssued);
+        s.bump(Counter::ArbiterReadsIssued);
+        s.add(Counter::ArbiterReadsIssued, 3);
+        assert_eq!(s.count(Counter::ArbiterReadsIssued), 5);
+        assert_eq!(s.get("arbiter.reads_issued"), 5);
         assert_eq!(s.get("missing"), 0);
     }
 
@@ -129,28 +252,50 @@ mod tests {
     fn samples_track_min_max_mean() {
         let mut s = Stats::new();
         for v in [3u64, 1, 4, 1, 5] {
-            s.sample("lat", v);
+            s.sample(SampleId::MedusaReadLineLatencyCycles, v);
         }
-        let series = s.series("lat").unwrap();
+        let series = s.series("medusa_read.line_latency_cycles").unwrap();
         assert_eq!(series.min, 1);
         assert_eq!(series.max, 5);
         assert_eq!(series.count, 5);
         assert!((series.mean() - 2.8).abs() < 1e-9);
+        assert!(s.series("nope").is_none());
     }
 
     #[test]
     fn merge_combines() {
         let mut a = Stats::new();
-        a.add("x", 2);
-        a.sample("lat", 10);
+        a.add(Counter::DramReadLines, 2);
+        a.sample(SampleId::MedusaReadLineLatencyCycles, 10);
         let mut b = Stats::new();
-        b.add("x", 3);
-        b.sample("lat", 2);
+        b.add(Counter::DramReadLines, 3);
+        b.sample(SampleId::MedusaReadLineLatencyCycles, 2);
         a.merge(&b);
-        assert_eq!(a.get("x"), 5);
-        let s = a.series("lat").unwrap();
+        assert_eq!(a.count(Counter::DramReadLines), 5);
+        let s = a.series_of(SampleId::MedusaReadLineLatencyCycles);
         assert_eq!(s.min, 2);
         assert_eq!(s.max, 10);
         assert_eq!(s.count, 2);
+    }
+
+    #[test]
+    fn registry_names_are_unique_and_sorted() {
+        let names: Vec<&str> = Counter::ALL.iter().map(|c| c.name()).collect();
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(names, sorted, "counter registry must be declared in sorted order, no dups");
+        for &id in Counter::ALL.iter() {
+            assert_eq!(Counter::from_name(id.name()), Some(id));
+        }
+    }
+
+    #[test]
+    fn display_skips_untouched_counters() {
+        let mut s = Stats::new();
+        s.bump(Counter::DramRowHits);
+        let text = format!("{s}");
+        assert!(text.contains("dram.row_hits"));
+        assert!(!text.contains("dram.row_misses"));
     }
 }

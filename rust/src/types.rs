@@ -16,46 +16,114 @@ pub type PortId = usize;
 /// Address of a memory line (in units of `W_line`-bit lines).
 pub type LineAddr = u64;
 
+/// Lines of up to this many words are stored inline (no heap). The
+/// paper's widest common interface (512-bit / 16-bit words) is exactly
+/// 32 words, so every hop of a paper-default `TaggedLine` through a
+/// `Channel` or a controller store is a flat memcpy.
+pub const LINE_INLINE_WORDS: usize = 32;
+
+#[derive(Clone)]
+enum LineRepr {
+    /// Words `[0, len)` are live; the tail stays zeroed.
+    Inline { len: u8, words: [Word; LINE_INLINE_WORDS] },
+    /// Fallback for wide interfaces (1024-bit regions of Fig 6).
+    Heap(Box<[Word]>),
+}
+
 /// One `W_line`-bit memory line, as the `N = W_line / W_acc` accelerator
 /// words it carries. Word `y` of the line occupies bits
 /// `[y*W_acc, (y+1)*W_acc)` of the DRAM controller interface.
-#[derive(Clone, PartialEq, Eq)]
+///
+/// Small lines (≤ [`LINE_INLINE_WORDS`] words) are stored inline, so
+/// cloning them — the hot operation as lines hop between the DRAM
+/// controller, CDC channels, and the networks — never touches the
+/// allocator.
+#[derive(Clone)]
 pub struct Line {
-    words: Box<[Word]>,
+    repr: LineRepr,
 }
 
 impl Line {
     /// A line of `n` zero words.
+    #[inline]
     pub fn zeroed(n: usize) -> Self {
-        Line { words: vec![0; n].into_boxed_slice() }
+        if n <= LINE_INLINE_WORDS {
+            Line { repr: LineRepr::Inline { len: n as u8, words: [0; LINE_INLINE_WORDS] } }
+        } else {
+            Line { repr: LineRepr::Heap(vec![0; n].into_boxed_slice()) }
+        }
+    }
+
+    /// Build a line of `n` words from a per-index function, without an
+    /// intermediate `Vec` (allocation-free for inline-sized lines).
+    #[inline]
+    pub fn from_fn(n: usize, mut f: impl FnMut(usize) -> Word) -> Self {
+        let mut line = Line::zeroed(n);
+        let words = line.words_mut();
+        for (i, w) in words.iter_mut().enumerate() {
+            *w = f(i);
+        }
+        line
     }
 
     /// Build a line from its words (word 0 = least-significant lane).
+    /// Heap-sized lines move the existing allocation; inline-sized lines
+    /// copy into the inline array and drop the `Vec`.
     pub fn from_words(words: Vec<Word>) -> Self {
-        Line { words: words.into_boxed_slice() }
+        if words.len() > LINE_INLINE_WORDS {
+            Line { repr: LineRepr::Heap(words.into_boxed_slice()) }
+        } else {
+            Line::from_slice(&words)
+        }
+    }
+
+    /// Build a line by copying a word slice.
+    #[inline]
+    pub fn from_slice(words: &[Word]) -> Self {
+        let mut line = Line::zeroed(words.len());
+        line.words_mut().copy_from_slice(words);
+        line
     }
 
     /// Number of `W_acc` words in the line (= interconnect port count N).
+    #[inline]
     pub fn num_words(&self) -> usize {
-        self.words.len()
+        match &self.repr {
+            LineRepr::Inline { len, .. } => *len as usize,
+            LineRepr::Heap(w) => w.len(),
+        }
     }
 
+    #[inline]
     pub fn word(&self, idx: usize) -> Word {
-        self.words[idx]
+        self.words()[idx]
     }
 
+    #[inline]
     pub fn set_word(&mut self, idx: usize, w: Word) {
-        self.words[idx] = w;
+        self.words_mut()[idx] = w;
     }
 
+    #[inline]
     pub fn words(&self) -> &[Word] {
-        &self.words
+        match &self.repr {
+            LineRepr::Inline { len, words } => &words[..*len as usize],
+            LineRepr::Heap(w) => w,
+        }
+    }
+
+    #[inline]
+    pub fn words_mut(&mut self) -> &mut [Word] {
+        match &mut self.repr {
+            LineRepr::Inline { len, words } => &mut words[..*len as usize],
+            LineRepr::Heap(w) => w,
+        }
     }
 
     /// Deterministic content hash (FNV-1a), used by integrity checks.
     pub fn fnv1a(&self) -> u64 {
         let mut h = 0xcbf2_9ce4_8422_2325u64;
-        for w in self.words.iter() {
+        for w in self.words() {
             for b in w.to_le_bytes() {
                 h ^= b as u64;
                 h = h.wrapping_mul(0x1000_0000_01b3);
@@ -65,10 +133,18 @@ impl Line {
     }
 }
 
+impl PartialEq for Line {
+    fn eq(&self, other: &Self) -> bool {
+        self.words() == other.words()
+    }
+}
+
+impl Eq for Line {}
+
 impl fmt::Debug for Line {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "Line[")?;
-        for (i, w) in self.words.iter().enumerate() {
+        for (i, w) in self.words().iter().enumerate() {
             if i > 0 {
                 write!(f, " ")?;
             }
@@ -209,6 +285,25 @@ mod tests {
         // Paper §III-G: irregular (non-power-of-two) port counts are legal.
         let g = Geometry { w_line: 512, w_acc: 16, read_ports: 20, write_ports: 20, max_burst: 32 };
         g.validate().unwrap();
+    }
+
+    #[test]
+    fn line_inline_and_heap_reprs_agree() {
+        // Inline (<= 32 words) and heap (> 32 words) lines expose the
+        // same behaviour; equality is content-based across sizes.
+        for n in [1usize, 31, 32, 33, 64] {
+            let mut a = Line::zeroed(n);
+            assert_eq!(a.num_words(), n);
+            for i in 0..n {
+                a.set_word(i, (i as Word) * 3 + 1);
+            }
+            let b = Line::from_fn(n, |i| (i as Word) * 3 + 1);
+            let c = Line::from_words((0..n).map(|i| (i as Word) * 3 + 1).collect());
+            assert_eq!(a, b, "n={n}");
+            assert_eq!(b, c, "n={n}");
+            assert_eq!(a.fnv1a(), c.fnv1a(), "n={n}");
+            assert_eq!(a.words().len(), n);
+        }
     }
 
     #[test]

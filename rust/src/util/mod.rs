@@ -5,7 +5,9 @@
 pub mod bench;
 pub mod logging;
 pub mod mathutil;
+pub mod parallel;
 pub mod prng;
 
 pub use mathutil::{ceil_div, ceil_log2, next_pow2, snap_to_freq_grid};
+pub use parallel::{par_map, par_map_owned};
 pub use prng::Prng;

@@ -1,0 +1,137 @@
+//! Order-preserving parallel map over independent work items, built on
+//! `std::thread::scope` (the offline registry has no rayon).
+//!
+//! Used by the evaluation sweeps (`eval::fig6`, the table generators)
+//! and the benchmark targets: each design point is an independent, pure,
+//! deterministic computation, so running them across threads changes
+//! wall-clock only — results are returned in input order and are
+//! bit-identical to a sequential run (asserted by the smoke benchmark).
+//!
+//! Thread count: `MEDUSA_THREADS` if set (1 forces the sequential path,
+//! useful for before/after benchmarking), else the machine's available
+//! parallelism, capped by the number of items.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// How many worker threads a parallel region may use.
+pub fn max_threads() -> usize {
+    if let Ok(v) = std::env::var("MEDUSA_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Map `f` over `items` in parallel, preserving input order in the
+/// output. `f` runs at most once per item; panics in workers propagate
+/// to the caller.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let workers = max_threads().min(items.len());
+    if workers <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = items.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker completed every claimed item"))
+        .collect()
+}
+
+/// `par_map` over owned items (moves each item into exactly one worker).
+pub fn par_map_owned<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let workers = max_threads().min(items.len());
+    if workers <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let slots: Vec<Mutex<Option<R>>> = items.iter().map(|_| Mutex::new(None)).collect();
+    let work: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= work.len() {
+                    break;
+                }
+                let item = work[i].lock().unwrap().take().expect("item claimed once");
+                let r = f(item);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker completed every claimed item"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_and_covers_all_items() {
+        let items: Vec<u64> = (0..257).collect();
+        let out = par_map(&items, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn owned_variant_moves_items() {
+        let items: Vec<String> = (0..50).map(|i| format!("s{i}")).collect();
+        let out = par_map_owned(items, |s| s.len());
+        assert_eq!(out.len(), 50);
+        assert_eq!(out[0], 2);
+        assert_eq!(out[10], 3);
+    }
+
+    #[test]
+    fn empty_and_single_inputs() {
+        let none: Vec<u32> = Vec::new();
+        assert!(par_map(&none, |&x| x).is_empty());
+        assert_eq!(par_map(&[7u32], |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn matches_sequential_bit_for_bit() {
+        // The determinism contract the sweeps rely on: same inputs, same
+        // outputs, regardless of thread count.
+        let items: Vec<u64> = (0..64).collect();
+        let f = |&x: &u64| -> u64 {
+            // A little non-trivial arithmetic (FNV-style mix).
+            let mut h = 0xcbf2_9ce4_8422_2325u64 ^ x;
+            for _ in 0..100 {
+                h = h.wrapping_mul(0x1000_0000_01b3).rotate_left(7);
+            }
+            h
+        };
+        let seq: Vec<u64> = items.iter().map(f).collect();
+        let par = par_map(&items, f);
+        assert_eq!(seq, par);
+    }
+}

@@ -21,6 +21,7 @@ fn paper_cfg(design: Design) -> SystemConfig {
         fabric_clock_mhz: None, // ask the P&R model — the honest path
         ddr3_timing: true,
         rotator_stages: 0,
+        channel_depths: Default::default(),
         seed: 2024,
     }
 }

@@ -1,0 +1,84 @@
+//! Allocation audit for the simulation hot loop (PR 1 acceptance
+//! criterion): `Scheduler::step` and the structures it hands around must
+//! not touch the heap, and small `Line`s must clone without allocating.
+//!
+//! A counting global allocator wraps the system allocator for this test
+//! binary; the audit measures the allocation-count delta across each
+//! region. Everything lives in ONE `#[test]` so no sibling test thread
+//! can allocate concurrently and pollute the counters.
+
+use std::alloc::{GlobalAlloc, Layout, System as SysAlloc};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        SysAlloc.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        SysAlloc.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        SysAlloc.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+use medusa::sim::{ClockDomain, Scheduler};
+use medusa::types::Line;
+
+#[test]
+fn hot_loop_performs_no_heap_allocation() {
+    // --- 1. Scheduler::step over the paper's two-domain clocking.
+    let mut s = Scheduler::new(vec![
+        ClockDomain::from_mhz("fabric", 225.0),
+        ClockDomain::from_mhz("mem", 200.0),
+    ]);
+    // Warm up (construction above already allocated the domain Vec).
+    for _ in 0..10 {
+        s.step();
+    }
+    let before = alloc_count();
+    let mut fired_total = 0u64;
+    for _ in 0..100_000 {
+        let fired = s.step();
+        fired_total += fired.count() as u64;
+    }
+    let delta = alloc_count() - before;
+    assert!(fired_total >= 100_000, "steps must fire domains");
+    assert_eq!(delta, 0, "Scheduler::step allocated {delta} times in 100k steps");
+
+    // --- 2. Inline Line clone at the paper-default geometry (32 words).
+    let line = Line::from_fn(32, |i| i as u64);
+    let before = alloc_count();
+    let mut acc = 0u64;
+    for _ in 0..10_000 {
+        let c = line.clone();
+        acc = acc.wrapping_add(c.word(31));
+        std::hint::black_box(&c);
+    }
+    let delta = alloc_count() - before;
+    assert_eq!(acc, 31u64.wrapping_mul(10_000));
+    assert_eq!(delta, 0, "inline Line clone allocated {delta} times in 10k clones");
+
+    // --- 3. Wide lines (1024-bit region, 64 words) exceed the inline
+    // capacity and fall back to the boxed slice — correctness there.
+    let wide = Line::from_fn(64, |i| i as u64 * 7);
+    let c = wide.clone();
+    assert_eq!(c.num_words(), 64);
+    assert_eq!(c.word(63), 63 * 7);
+    assert_eq!(wide, c);
+}

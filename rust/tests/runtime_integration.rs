@@ -1,6 +1,9 @@
 //! Runtime integration: the AOT-compiled JAX/Pallas artifacts, loaded and
 //! executed from Rust via PJRT, must agree bit-for-bit with the Q8.8
-//! golden model. Requires `make artifacts`.
+//! golden model. Requires `make artifacts` and the `pjrt` feature (the
+//! `xla` crate is not in the offline registry, so this whole suite is
+//! compiled out by default).
+#![cfg(feature = "pjrt")]
 
 use medusa::accel::dnn::ConvLayer;
 use medusa::accel::golden::conv2d_q88;
