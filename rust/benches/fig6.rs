@@ -32,7 +32,7 @@ fn stream_time_ps(dp: &DesignPoint, total_lines: usize) -> Option<u64> {
     let n = dp.geometry.words_per_line();
     sys.controller_mut().preload(0, (0..total_lines as u64).map(|_| Line::zeroed(n)));
     let scheds = partition(&[Region { base: 0, lines: total_lines }], dp.geometry.read_ports);
-    sys.lp.begin_layer(&scheds, 1);
+    sys.lp_mut().begin_layer(&scheds, 1);
     sys.run_until_compute_done(50_000_000).ok()?;
     Some(sys.now_ps())
 }

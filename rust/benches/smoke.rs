@@ -1,13 +1,16 @@
-//! Smoke benchmark (PR 1): a short fig6 sweep plus the simulation-core
+//! Smoke benchmark: a short fig6 sweep plus the simulation-core
 //! throughput number (simulated fabric cycles per wall-second on the
-//! paper-default geometry), written to `BENCH_PR1.json` so future PRs
-//! have a perf trajectory to compare against.
+//! paper-default geometry), written to `BENCH_PR1.json`, and the
+//! scenario-engine numbers (per-scenario wall time, capture overhead,
+//! replay speedup) written to `BENCH_PR3.json` — the perf trajectory
+//! future PRs compare against.
 //!
 //! Run with `cargo bench --bench smoke` (set `MEDUSA_BENCH_SAMPLES=1`
-//! for the quickest run). The sweep runs twice — sequentially
+//! for the quickest run). The fig6 sweep runs twice — sequentially
 //! (`MEDUSA_THREADS=1`) and with the default thread count — and asserts
 //! the results are bit-identical, which is the correctness contract of
-//! the parallel sweep path.
+//! the parallel sweep path; the scenario matrix asserts the same via
+//! explicit worker counts.
 
 use medusa::accel::prefetch::{partition, Region};
 use medusa::config::SystemConfig;
@@ -32,7 +35,7 @@ fn sim_throughput(design: Design, lines: usize) -> (u64, f64) {
     let n = sys.cfg.geometry.words_per_line();
     sys.controller_mut().preload(0, (0..lines as u64).map(|_| Line::zeroed(n)));
     let scheds = partition(&[Region { base: 0, lines }], sys.cfg.geometry.read_ports);
-    sys.lp.begin_layer(&scheds, 1);
+    sys.lp_mut().begin_layer(&scheds, 1);
     let t0 = Instant::now();
     sys.run_until_compute_done(200_000_000).unwrap();
     (sys.fabric_cycles(), t0.elapsed().as_secs_f64())
@@ -91,12 +94,10 @@ fn main() {
     }
     b.report("smoke: simulation core + fig6 sweep");
 
-    // --- 3. Persist the trajectory point.
-    let out_path = if Path::new("../ROADMAP.md").exists() {
-        "../BENCH_PR1.json"
-    } else {
-        "BENCH_PR1.json"
-    };
+    // --- 3. Persist the trajectory point. Both JSON outputs land next
+    // to ROADMAP.md (repo root when run from rust/, cwd otherwise).
+    let json_dir = if Path::new("../ROADMAP.md").exists() { ".." } else { "." };
+    let out_path = format!("{json_dir}/BENCH_PR1.json");
     let mut j = String::from("{\n");
     j.push_str("  \"bench\": \"smoke_pr1\",\n");
     j.push_str(&format!("  \"threads_parallel\": {},\n", medusa::util::parallel::max_threads()));
@@ -118,6 +119,70 @@ fn main() {
         ));
     }
     j.push_str("  ]\n}\n");
-    std::fs::write(out_path, &j).expect("writing BENCH_PR1.json");
+    std::fs::write(&out_path, &j).expect("writing BENCH_PR1.json");
     println!("wrote {out_path}");
+
+    // --- 4. PR 3: scenario engine + trace capture/replay numbers.
+    let t0 = Instant::now();
+    let seq = medusa::eval::scenarios::sweep_with_threads(1);
+    let seq_secs = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let par = medusa::eval::scenarios::sweep_with_threads(medusa::util::parallel::max_threads());
+    let par_secs = t0.elapsed().as_secs_f64();
+    let identical = seq.len() == par.len()
+        && seq.iter().zip(par.iter()).all(|(a, b)| a.fingerprint == b.fingerprint);
+    assert!(identical, "parallel scenario matrix diverged from sequential run");
+    println!(
+        "scenario matrix: sequential {seq_secs:.4}s, parallel {par_secs:.4}s ({:.2}x), results identical",
+        seq_secs / par_secs.max(1e-12)
+    );
+    // Capture vs replay on the heaviest builtin: replay skips workload
+    // generation + golden math — the trace-driven scaling surface.
+    let sc = medusa::workload::Scenario::builtin("single-tiny-vgg").unwrap();
+    let t0 = Instant::now();
+    let (_, trace) = medusa::workload::run_scenario_captured(&sc).expect("capture");
+    let capture_secs = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let replayed = medusa::workload::replay(&trace).expect("replay");
+    let replay_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(replayed.fabric_cycles, trace.expect.fabric_cycles, "replay cycle drift");
+    let replay_speedup = capture_secs / replay_secs.max(1e-12);
+    println!(
+        "trace replay: capture {capture_secs:.4}s, replay {replay_secs:.4}s ({replay_speedup:.2}x workload-skip speedup)"
+    );
+    let pr3_path = format!("{json_dir}/BENCH_PR3.json");
+    let mut j = String::from("{\n");
+    j.push_str("  \"bench\": \"smoke_pr3\",\n");
+    j.push_str(&format!("  \"threads_parallel\": {},\n", medusa::util::parallel::max_threads()));
+    j.push_str(&format!(
+        "  \"scenario_matrix\": {{\"points\": {}, \"sequential_s\": {}, \"parallel_s\": {}, \"speedup\": {}, \"results_identical\": {}}},\n",
+        seq.len(),
+        json_f(seq_secs),
+        json_f(par_secs),
+        json_f(seq_secs / par_secs.max(1e-12)),
+        identical
+    ));
+    j.push_str("  \"scenarios\": [\n");
+    for (i, p) in seq.iter().enumerate() {
+        j.push_str(&format!(
+            "    {{\"scenario\": \"{}\", \"design\": \"{}\", \"fabric_cycles\": {}, \"lines_moved\": {}, \"verified\": {}}}{}\n",
+            p.scenario,
+            p.design.name(),
+            p.fabric_cycles,
+            p.lines_moved,
+            p.verified,
+            if i + 1 < seq.len() { "," } else { "" }
+        ));
+    }
+    j.push_str("  ],\n");
+    j.push_str(&format!(
+        "  \"trace_replay\": {{\"scenario\": \"single-tiny-vgg\", \"capture_s\": {}, \"replay_s\": {}, \"workload_skip_speedup\": {}, \"fabric_cycles\": {}}}\n",
+        json_f(capture_secs),
+        json_f(replay_secs),
+        json_f(replay_speedup),
+        replayed.fabric_cycles
+    ));
+    j.push_str("}\n");
+    std::fs::write(&pr3_path, &j).expect("writing BENCH_PR3.json");
+    println!("wrote {pr3_path}");
 }

@@ -1,6 +1,12 @@
 //! DNN workload descriptors: convolution layer shapes and small
 //! VGG-style networks used by the traffic generators, the end-to-end
 //! examples, and the benchmark harness.
+//!
+//! This module keeps the original straight-chain dense-conv form; the
+//! generalized workload representation (grouped/depthwise convs, GEMMs,
+//! residual graphs, multi-tenant scenarios) lives in
+//! [`crate::workload`], which converts these legacy networks via
+//! [`crate::workload::WorkloadNet::from_legacy`].
 
 /// One 3D convolution layer (the paper's layer processors compute these).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -66,6 +66,72 @@ pub fn conv2d_q88(
     out
 }
 
+/// Grouped convolution in the same Q8.8 semantics: input and output
+/// channels are split into `groups` equal slices and slice `g` of the
+/// output only sees slice `g` of the input. `groups == 1` is exactly
+/// [`conv2d_q88`]; `groups == in_c == out_c` is a depthwise convolution
+/// (MobileNet-style stacks). Weights are laid out
+/// `weights[oc][ic_local][ky][kx]` with `ic_local < in_c / groups`.
+pub fn conv2d_grouped_q88(
+    l: &ConvLayer,
+    groups: usize,
+    ifmap: &[Fixed16],
+    weights: &[Fixed16],
+    bias: &[Fixed16],
+) -> Vec<Fixed16> {
+    assert!(groups >= 1 && l.in_c % groups == 0 && l.out_c % groups == 0);
+    let icg = l.in_c / groups;
+    let ocg = l.out_c / groups;
+    assert_eq!(ifmap.len(), l.ifmap_words());
+    assert_eq!(weights.len(), l.out_c * icg * l.k * l.k);
+    assert_eq!(bias.len(), l.out_c);
+    let (oh, ow) = (l.out_h(), l.out_w());
+    let mut out = vec![Fixed16::ZERO; l.out_c * oh * ow];
+    for oc in 0..l.out_c {
+        let g = oc / ocg;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc: i64 = (bias[oc].0 as i64) << super::quant::FRAC_BITS;
+                for ic_local in 0..icg {
+                    let ic = g * icg + ic_local;
+                    for ky in 0..l.k {
+                        for kx in 0..l.k {
+                            let iy = (oy * l.stride + ky) as isize - l.pad as isize;
+                            let ix = (ox * l.stride + kx) as isize - l.pad as isize;
+                            if iy < 0 || ix < 0 || iy >= l.in_h as isize || ix >= l.in_w as isize {
+                                continue;
+                            }
+                            let iv = ifmap[fmap_index(l.in_w, l.in_h, ic, iy as usize, ix as usize)];
+                            let wv = weights[((oc * icg + ic_local) * l.k + ky) * l.k + kx];
+                            acc += iv.0 as i64 * wv.0 as i64;
+                        }
+                    }
+                }
+                let q = Fixed16(shift_round(acc).clamp(i16::MIN as i64, i16::MAX as i64) as i16);
+                let v = if l.relu { relu(q) } else { q };
+                out[fmap_index(ow, oh, oc, oy, ox)] = v;
+            }
+        }
+    }
+    out
+}
+
+/// Elementwise saturating Q8.8 add (residual joins), optional ReLU.
+pub fn add_q88(a: &[Fixed16], b: &[Fixed16], apply_relu: bool) -> Vec<Fixed16> {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| {
+            let s = x.add(*y);
+            if apply_relu {
+                relu(s)
+            } else {
+                s
+            }
+        })
+        .collect()
+}
+
 fn shift_round(acc: i64) -> i64 {
     // Round-half-even shift by FRAC_BITS, same as quant::dot.
     let bits = super::quant::FRAC_BITS;
@@ -141,6 +207,41 @@ mod tests {
         let bias = vec![Fixed16::ZERO];
         let out = conv2d_q88(&l, &ifmap, &weights, &bias);
         assert!(out.iter().all(|v| *v == Fixed16::ZERO));
+    }
+
+    #[test]
+    fn grouped_conv_with_one_group_matches_dense() {
+        let l = ConvLayer { name: "g1", in_c: 4, in_h: 5, in_w: 5, out_c: 6, k: 3, stride: 1, pad: 1, relu: true };
+        let mut p = Prng::new(17);
+        let ifmap: Vec<Fixed16> =
+            (0..l.ifmap_words()).map(|_| Fixed16((p.next_u64() & 0x3ff) as i16 - 512)).collect();
+        let weights: Vec<Fixed16> =
+            (0..l.out_c * l.in_c * 9).map(|_| Fixed16((p.next_u64() & 0xff) as i16 - 128)).collect();
+        let bias: Vec<Fixed16> = (0..l.out_c).map(|_| Fixed16((p.next_u64() & 0x7f) as i16)).collect();
+        assert_eq!(conv2d_grouped_q88(&l, 1, &ifmap, &weights, &bias), conv2d_q88(&l, &ifmap, &weights, &bias));
+    }
+
+    #[test]
+    fn depthwise_conv_keeps_channels_independent() {
+        // 2-channel depthwise with an identity 1x1 kernel on channel 0
+        // and a zero kernel on channel 1: output ch0 = input ch0, ch1 = 0.
+        let l = ConvLayer { name: "dw", in_c: 2, in_h: 3, in_w: 3, out_c: 2, k: 1, stride: 1, pad: 0, relu: false };
+        let ifmap: Vec<Fixed16> = (0..18).map(|i| Fixed16::from_f32(i as f32 * 0.25)).collect();
+        let weights = vec![Fixed16::from_f32(1.0), Fixed16::ZERO];
+        let bias = vec![Fixed16::ZERO; 2];
+        let out = conv2d_grouped_q88(&l, 2, &ifmap, &weights, &bias);
+        assert_eq!(&out[..9], &ifmap[..9]);
+        assert!(out[9..].iter().all(|v| *v == Fixed16::ZERO));
+    }
+
+    #[test]
+    fn add_saturates_and_relus() {
+        let a = vec![Fixed16(30000), Fixed16(-200), Fixed16(100)];
+        let b = vec![Fixed16(30000), Fixed16(100), Fixed16(28)];
+        let plain = add_q88(&a, &b, false);
+        assert_eq!(plain, vec![Fixed16(i16::MAX), Fixed16(-100), Fixed16(128)]);
+        let relu = add_q88(&a, &b, true);
+        assert_eq!(relu, vec![Fixed16(i16::MAX), Fixed16::ZERO, Fixed16(128)]);
     }
 
     #[test]

@@ -26,6 +26,56 @@ pub enum Phase {
     Done,
 }
 
+/// The contiguous slice of fabric ports one layer processor drives.
+///
+/// A single-tenant system uses [`PortGroup::full`] (every port); the
+/// workload scenario engine slices the fabric into disjoint groups so
+/// several layer processors — one per tenant network — share one
+/// interconnect and one DRAM controller.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PortGroup {
+    /// First global read-port index this processor owns.
+    pub read_base: usize,
+    /// Number of read ports it owns.
+    pub read_ports: usize,
+    /// First global write-port index it owns.
+    pub write_base: usize,
+    /// Number of write ports it owns.
+    pub write_ports: usize,
+}
+
+impl PortGroup {
+    /// The whole fabric (single-tenant case).
+    pub fn full(geom: &Geometry) -> Self {
+        PortGroup {
+            read_base: 0,
+            read_ports: geom.read_ports,
+            write_base: 0,
+            write_ports: geom.write_ports,
+        }
+    }
+
+    pub fn validate(&self, geom: &Geometry) -> anyhow::Result<()> {
+        anyhow::ensure!(self.read_ports >= 1, "port group needs at least one read port");
+        anyhow::ensure!(self.write_ports >= 1, "port group needs at least one write port");
+        anyhow::ensure!(
+            self.read_base + self.read_ports <= geom.read_ports,
+            "read port group {}..{} exceeds geometry ({} read ports)",
+            self.read_base,
+            self.read_base + self.read_ports,
+            geom.read_ports
+        );
+        anyhow::ensure!(
+            self.write_base + self.write_ports <= geom.write_ports,
+            "write port group {}..{} exceeds geometry ({} write ports)",
+            self.write_base,
+            self.write_base + self.write_ports,
+            geom.write_ports
+        );
+        Ok(())
+    }
+}
+
 struct ReadPortState {
     /// Bursts not yet submitted to the arbiter.
     pending_bursts: VecDeque<Region>,
@@ -43,6 +93,10 @@ struct WritePortState {
 
 pub struct LayerProcessor {
     geom: Geometry,
+    /// The slice of fabric ports this processor owns (local port `p`
+    /// maps to global read port `group.read_base + p`, and likewise for
+    /// writes).
+    group: PortGroup,
     /// Number of vector dot-product units (compute-rate model).
     dpus: usize,
     phase: Phase,
@@ -55,10 +109,21 @@ pub struct LayerProcessor {
     pub load_cycles: u64,
     pub compute_cycles: u64,
     pub drain_cycles: u64,
+    /// Cumulative cycles each local read port spent waiting for a word
+    /// (the per-port wait counters the trace expect-block records).
+    read_wait_cycles: Vec<u64>,
+    /// Cumulative cycles each local write port spent back-pressured.
+    write_wait_cycles: Vec<u64>,
 }
 
 impl LayerProcessor {
     pub fn new(geom: Geometry, dpus: usize) -> Self {
+        Self::new_grouped(geom, dpus, PortGroup::full(&geom))
+    }
+
+    /// A processor driving only `group`'s slice of the fabric ports
+    /// (multi-tenant scenarios).
+    pub fn new_grouped(geom: Geometry, dpus: usize, group: PortGroup) -> Self {
         LayerProcessor {
             geom,
             dpus,
@@ -70,6 +135,9 @@ impl LayerProcessor {
             load_cycles: 0,
             compute_cycles: 0,
             drain_cycles: 0,
+            read_wait_cycles: vec![0; group.read_ports],
+            write_wait_cycles: vec![0; group.write_ports],
+            group,
         }
     }
 
@@ -77,10 +145,25 @@ impl LayerProcessor {
         self.phase
     }
 
+    pub fn group(&self) -> PortGroup {
+        self.group
+    }
+
+    /// Cumulative wait cycles of local read port `p` across all layers.
+    pub fn read_wait_cycles(&self, p: usize) -> u64 {
+        self.read_wait_cycles[p]
+    }
+
+    /// Cumulative back-pressure cycles of local write port `p`.
+    pub fn write_wait_cycles(&self, p: usize) -> u64 {
+        self.write_wait_cycles[p]
+    }
+
     /// Arm the processor for one layer: per-port read schedules (from
-    /// `prefetch::read_schedules`) and the layer's MAC count.
+    /// `prefetch::read_schedules`, one per *local* port) and the layer's
+    /// MAC count.
     pub fn begin_layer(&mut self, read_scheds: &[PortSchedule], macs: u64) {
-        assert_eq!(read_scheds.len(), self.geom.read_ports);
+        assert_eq!(read_scheds.len(), self.group.read_ports);
         let n = self.geom.words_per_line();
         self.read_ports = read_scheds
             .iter()
@@ -122,8 +205,8 @@ impl LayerProcessor {
     /// processor moves to `Drain` and streams it out.
     pub fn supply_output(&mut self, write_scheds: &[PortSchedule], data_per_port: Vec<VecDeque<Word>>) {
         assert_eq!(self.phase, Phase::Compute);
-        assert_eq!(write_scheds.len(), self.geom.write_ports);
-        assert_eq!(data_per_port.len(), self.geom.write_ports);
+        assert_eq!(write_scheds.len(), self.group.write_ports);
+        assert_eq!(data_per_port.len(), self.group.write_ports);
         let n = self.geom.words_per_line();
         self.write_ports = write_scheds
             .iter()
@@ -156,24 +239,27 @@ impl LayerProcessor {
         match self.phase {
             Phase::Load => {
                 self.load_cycles += 1;
+                let rbase = self.group.read_base;
                 let mut all_done = true;
                 for (p, st) in self.read_ports.iter_mut().enumerate() {
+                    let gp = rbase + p;
                     // Submit the next burst request (the arbiter
                     // back-pressures via its bounded queue).
                     if let Some(&b) = st.pending_bursts.front() {
-                        if arbiter.submit_read(ReadRequest { port: p, addr: b.base, burst_len: b.lines }) {
+                        if arbiter.submit_read(ReadRequest { port: gp, addr: b.base, burst_len: b.lines }) {
                             st.pending_bursts.pop_front();
                             stats.bump(Counter::LpReadBurstsSubmitted);
                         }
                     }
                     // Consume one word per cycle — the paper's port rate.
                     if st.words_left > 0 {
-                        if rd_net.port_word_available(p) {
-                            st.received.push(rd_net.port_take_word(p).unwrap());
+                        if rd_net.port_word_available(gp) {
+                            st.received.push(rd_net.port_take_word(gp).unwrap());
                             st.words_left -= 1;
                             stats.bump(Counter::LpWordsLoaded);
                         } else {
                             stats.bump(Counter::LpLoadStallPortCycles);
+                            self.read_wait_cycles[p] += 1;
                         }
                     }
                     all_done &= st.words_left == 0 && st.pending_bursts.is_empty();
@@ -191,21 +277,24 @@ impl LayerProcessor {
             }
             Phase::Drain => {
                 self.drain_cycles += 1;
+                let wbase = self.group.write_base;
                 let mut all_done = true;
                 for (p, st) in self.write_ports.iter_mut().enumerate() {
+                    let gp = wbase + p;
                     if let Some(&b) = st.pending_bursts.front() {
-                        if arbiter.submit_write(WriteRequest { port: p, addr: b.base, burst_len: b.lines }) {
+                        if arbiter.submit_write(WriteRequest { port: gp, addr: b.base, burst_len: b.lines }) {
                             st.pending_bursts.pop_front();
                             stats.bump(Counter::LpWriteBurstsSubmitted);
                         }
                     }
                     if let Some(&w) = st.to_send.front() {
-                        if wr_net.port_can_accept(p) {
-                            wr_net.port_push_word(p, w);
+                        if wr_net.port_can_accept(gp) {
+                            wr_net.port_push_word(gp, w);
                             st.to_send.pop_front();
                             stats.bump(Counter::LpWordsDrained);
                         } else {
                             stats.bump(Counter::LpDrainStallPortCycles);
+                            self.write_wait_cycles[p] += 1;
                         }
                     }
                     all_done &= st.to_send.is_empty() && st.pending_bursts.is_empty();

@@ -114,32 +114,43 @@ impl SystemConfig {
         let raw = parse_toml_subset(text)?;
         let mut cfg = SystemConfig::default();
         for (key, value) in &raw {
-            match key.as_str() {
-                "system.design" | "design" => {
-                    cfg.design = Design::parse(value.as_str()?)
-                        .ok_or_else(|| anyhow!("unknown design {value:?}"))?;
-                }
-                "geometry.w_line" => cfg.geometry.w_line = value.as_usize()?,
-                "geometry.w_acc" => cfg.geometry.w_acc = value.as_usize()?,
-                "geometry.read_ports" => cfg.geometry.read_ports = value.as_usize()?,
-                "geometry.write_ports" => cfg.geometry.write_ports = value.as_usize()?,
-                "geometry.max_burst" => cfg.geometry.max_burst = value.as_usize()?,
-                "accelerator.dotprod_units" | "dotprod_units" => {
-                    cfg.dotprod_units = value.as_usize()?
-                }
-                "clocks.mem_mhz" => cfg.mem_clock_mhz = value.as_f64()?,
-                "clocks.fabric_mhz" => cfg.fabric_clock_mhz = Some(value.as_f64()?),
-                "memory.ddr3_timing" => cfg.ddr3_timing = value.as_bool()?,
-                "medusa.rotator_stages" => cfg.rotator_stages = value.as_usize()?,
-                "channels.cmd_depth" => cfg.channel_depths.cmd = value.as_usize()?,
-                "channels.rd_line_depth" => cfg.channel_depths.rd_line = value.as_usize()?,
-                "channels.wr_data_depth" => cfg.channel_depths.wr_data = value.as_usize()?,
-                "system.seed" | "seed" => cfg.seed = value.as_usize()? as u64,
-                other => bail!("unknown config key {other:?}"),
+            if !cfg.apply_key(key, value)? {
+                bail!("unknown config key {key:?}");
             }
         }
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Apply one parsed `key = value` to this config. Returns `Ok(false)`
+    /// when the key is not a system-config key (so layered formats —
+    /// scenario files embed a full system config — can route leftovers
+    /// to their own sections).
+    pub fn apply_key(&mut self, key: &str, value: &Value) -> Result<bool> {
+        match key {
+            "system.design" | "design" => {
+                self.design = Design::parse(value.as_str()?)
+                    .ok_or_else(|| anyhow!("unknown design {value:?}"))?;
+            }
+            "geometry.w_line" => self.geometry.w_line = value.as_usize()?,
+            "geometry.w_acc" => self.geometry.w_acc = value.as_usize()?,
+            "geometry.read_ports" => self.geometry.read_ports = value.as_usize()?,
+            "geometry.write_ports" => self.geometry.write_ports = value.as_usize()?,
+            "geometry.max_burst" => self.geometry.max_burst = value.as_usize()?,
+            "accelerator.dotprod_units" | "dotprod_units" => {
+                self.dotprod_units = value.as_usize()?
+            }
+            "clocks.mem_mhz" => self.mem_clock_mhz = value.as_f64()?,
+            "clocks.fabric_mhz" => self.fabric_clock_mhz = Some(value.as_f64()?),
+            "memory.ddr3_timing" => self.ddr3_timing = value.as_bool()?,
+            "medusa.rotator_stages" => self.rotator_stages = value.as_usize()?,
+            "channels.cmd_depth" => self.channel_depths.cmd = value.as_usize()?,
+            "channels.rd_line_depth" => self.channel_depths.rd_line = value.as_usize()?,
+            "channels.wr_data_depth" => self.channel_depths.wr_data = value.as_usize()?,
+            "system.seed" | "seed" => self.seed = value.as_usize()? as u64,
+            _ => return Ok(false),
+        }
+        Ok(true)
     }
 }
 

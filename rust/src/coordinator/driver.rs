@@ -35,6 +35,28 @@ impl ComputeBackend {
     }
 }
 
+/// Deterministic Q8.8 test weights for a (possibly grouped) conv layer:
+/// 1/sqrt(fan-in) scale so receptive fields stay well within range
+/// (realistic trained-net scale). THE one generator — the legacy
+/// inference driver (`groups == 1`) and the workload scenario engine
+/// both route through here so their workload data cannot drift apart.
+pub fn gen_conv_weights(
+    prng: &mut Prng,
+    layer: &ConvLayer,
+    groups: usize,
+) -> (Vec<Fixed16>, Vec<Fixed16>) {
+    let icg = layer.in_c / groups;
+    let wcount = layer.out_c * icg * layer.k * layer.k;
+    let scale = 1.0 / (icg as f32 * layer.k as f32 * layer.k as f32).sqrt();
+    let weights = (0..wcount)
+        .map(|_| Fixed16::from_f32((prng.f64() as f32 * 2.0 - 1.0) * scale))
+        .collect();
+    let bias = (0..layer.out_c)
+        .map(|_| Fixed16::from_f32((prng.f64() as f32 * 2.0 - 1.0) * 0.25))
+        .collect();
+    (weights, bias)
+}
+
 pub struct InferenceDriver {
     pub sys: System,
     backend: ComputeBackend,
@@ -87,15 +109,7 @@ impl InferenceDriver {
     /// Deterministic Q8.8 test weights: small magnitudes so receptive
     /// fields stay well within range (realistic trained-net scale).
     pub fn gen_weights(prng: &mut Prng, layer: &ConvLayer) -> (Vec<Fixed16>, Vec<Fixed16>) {
-        let wcount = layer.out_c * layer.in_c * layer.k * layer.k;
-        let scale = 1.0 / (layer.in_c as f32 * layer.k as f32 * layer.k as f32).sqrt();
-        let weights = (0..wcount)
-            .map(|_| Fixed16::from_f32((prng.f64() as f32 * 2.0 - 1.0) * scale))
-            .collect();
-        let bias = (0..layer.out_c)
-            .map(|_| Fixed16::from_f32((prng.f64() as f32 * 2.0 - 1.0) * 0.25))
-            .collect();
-        (weights, bias)
+        gen_conv_weights(prng, layer, 1)
     }
 
     /// Run one layer whose input already lives at `ifmap_region`;
@@ -121,19 +135,19 @@ impl InferenceDriver {
         let write_scheds = partition(&[map.ofmap], geom.write_ports);
 
         let t0 = self.sys.now_ps();
-        let load0 = self.sys.lp.load_cycles;
-        let comp0 = self.sys.lp.compute_cycles;
-        let drain0 = self.sys.lp.drain_cycles;
+        let load0 = self.sys.lp().load_cycles;
+        let comp0 = self.sys.lp().compute_cycles;
+        let drain0 = self.sys.lp().drain_cycles;
 
         // --- Load phase + compute stall.
-        self.sys.lp.begin_layer(&read_scheds, layer.macs());
+        self.sys.lp_mut().begin_layer(&read_scheds, layer.macs());
         let total_read_lines = (map.ifmap.lines + map.weights.lines) as u64;
         let budget = 64 * (total_read_lines + 64) * n as u64 + layer.macs() / 8 + 10_000;
         self.sys.run_until_compute_done(budget).with_context(|| format!("layer {}", layer.name))?;
 
         // --- Reassemble the loaded tensors from the port streams.
         let line_map = {
-            let lp = &self.sys.lp;
+            let lp = self.sys.lp();
             self.sys.reassemble(&read_scheds, |p| lp.loaded(p).to_vec())
         };
         let extract = |region: Region, words: usize| -> Vec<Fixed16> {
@@ -180,7 +194,7 @@ impl InferenceDriver {
                 q
             })
             .collect();
-        self.sys.lp.supply_output(&write_scheds, data_per_port);
+        self.sys.lp_mut().supply_output(&write_scheds, data_per_port);
         let drain_budget = 64 * (ofmap_region.lines as u64 + 64) * n as u64 + 10_000;
         self.sys.run_until_drained(drain_budget).with_context(|| format!("layer {}", layer.name))?;
 
@@ -194,9 +208,9 @@ impl InferenceDriver {
 
         let report = LayerReport {
             layer: layer.name,
-            load_cycles: self.sys.lp.load_cycles - load0,
-            compute_cycles: self.sys.lp.compute_cycles - comp0,
-            drain_cycles: self.sys.lp.drain_cycles - drain0,
+            load_cycles: self.sys.lp().load_cycles - load0,
+            compute_cycles: self.sys.lp().compute_cycles - comp0,
+            drain_cycles: self.sys.lp().drain_cycles - drain0,
             lines_read: total_read_lines,
             lines_written: ofmap_region.lines as u64,
             sim_time_ps: self.sys.now_ps() - t0,

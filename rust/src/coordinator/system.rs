@@ -1,6 +1,6 @@
 //! System wiring: clocks, networks, arbiter, controller, layer processor.
 
-use crate::accel::layer_processor::{LayerProcessor, Phase};
+use crate::accel::layer_processor::{LayerProcessor, Phase, PortGroup};
 use crate::accel::prefetch::PortSchedule;
 use crate::config::SystemConfig;
 use crate::dram::{DdrTiming, MemoryController};
@@ -28,7 +28,10 @@ pub struct System {
     wr_net: AnyWriteNetwork,
     pub arbiter: Arbiter,
     controller: MemoryController,
-    pub lp: LayerProcessor,
+    /// The layer processors sharing this fabric — one per port group.
+    /// Single-tenant systems have exactly one, covering every port; the
+    /// workload scenario engine builds one per tenant.
+    pub lps: Vec<LayerProcessor>,
     sched: Scheduler,
     /// Fabric -> mem commands.
     cmd_ch: Channel<MemCommand>,
@@ -46,7 +49,19 @@ impl System {
     /// the P&R timing model what this design point closes at — the
     /// system-level consequence of Fig 6.
     pub fn new(cfg: SystemConfig) -> Result<Self> {
+        let group = PortGroup::full(&cfg.geometry);
+        Self::new_with_groups(cfg, &[group])
+    }
+
+    /// Build a system whose fabric ports are sliced into `groups`, with
+    /// one layer processor per group (multi-tenant scenarios). Groups
+    /// must be in-bounds; the scenario layer checks disjointness.
+    pub fn new_with_groups(cfg: SystemConfig, groups: &[PortGroup]) -> Result<Self> {
         cfg.validate()?;
+        anyhow::ensure!(!groups.is_empty(), "system needs at least one port group");
+        for g in groups {
+            g.validate(&cfg.geometry)?;
+        }
         let geom = cfg.geometry;
         let fabric_mhz = match cfg.fabric_clock_mhz {
             Some(f) => f,
@@ -79,7 +94,10 @@ impl System {
             wr_net,
             arbiter: Arbiter::new(geom.read_ports, geom.write_ports, Policy::RoundRobin),
             controller: MemoryController::new(timing, geom.words_per_line()),
-            lp: LayerProcessor::new(geom, cfg.dotprod_units),
+            lps: groups
+                .iter()
+                .map(|&g| LayerProcessor::new_grouped(geom, cfg.dotprod_units, g))
+                .collect(),
             sched: Scheduler::new(vec![
                 ClockDomain::from_mhz("fabric", fabric_mhz),
                 ClockDomain::from_mhz("mem", cfg.mem_clock_mhz),
@@ -100,6 +118,16 @@ impl System {
 
     pub fn controller(&self) -> &MemoryController {
         &self.controller
+    }
+
+    /// The (single) layer processor of a full-fabric system. Multi-group
+    /// systems index `lps` directly.
+    pub fn lp(&self) -> &LayerProcessor {
+        &self.lps[0]
+    }
+
+    pub fn lp_mut(&mut self) -> &mut LayerProcessor {
+        &mut self.lps[0]
     }
 
     pub fn fabric_cycles(&self) -> u64 {
@@ -171,8 +199,10 @@ impl System {
             &mut self.wr_data_ch,
             &mut self.stats,
         );
-        // 4. Layer processor moves its port words.
-        self.lp.tick(&mut self.rd_net, &mut self.wr_net, &mut self.arbiter, &mut self.stats);
+        // 4. Each layer processor moves its port group's words.
+        for lp in &mut self.lps {
+            lp.tick(&mut self.rd_net, &mut self.wr_net, &mut self.arbiter, &mut self.stats);
+        }
         // 5. Commit fabric-side channel pushes.
         self.cmd_ch.commit();
         self.wr_data_ch.commit();
@@ -185,35 +215,40 @@ impl System {
         self.rd_line_ch.commit();
     }
 
-    /// Run until the layer processor's load completes and the compute
+    /// Run until every layer processor's load completes and its compute
     /// stall elapses. Returns fabric cycles spent.
     pub fn run_until_compute_done(&mut self, max_fabric_cycles: u64) -> Result<u64> {
         let start = self.fabric_cycles;
-        while !self.lp.compute_done() {
+        while !self.lps.iter().all(|lp| lp.compute_done()) {
             self.step();
             anyhow::ensure!(
                 self.fabric_cycles - start < max_fabric_cycles,
                 "load/compute did not finish within {max_fabric_cycles} fabric cycles \
                  (phase {:?}, stats:\n{})",
-                self.lp.phase(),
+                self.lp().phase(),
                 self.stats
             );
         }
         Ok(self.fabric_cycles - start)
     }
 
-    /// Run until the drain phase completes AND every issued write has
+    /// No command, write data, or write burst is still anywhere between
+    /// the arbiter and the DRAM store.
+    pub fn writes_flushed(&self) -> bool {
+        self.arbiter.pending_requests() == 0
+            && self.arbiter.writes_in_flight() == 0
+            && self.wr_data_ch.is_empty()
+            && self.cmd_ch.is_empty()
+            && self.controller.is_idle()
+    }
+
+    /// Run until every drain phase completes AND every issued write has
     /// landed in DRAM.
     pub fn run_until_drained(&mut self, max_fabric_cycles: u64) -> Result<u64> {
         let start = self.fabric_cycles;
         loop {
-            let lp_done = self.lp.phase() == Phase::Done;
-            let writes_flushed = self.arbiter.pending_requests() == 0
-                && self.arbiter.writes_in_flight() == 0
-                && self.wr_data_ch.is_empty()
-                && self.cmd_ch.is_empty()
-                && self.controller.is_idle();
-            if lp_done && writes_flushed {
+            let lp_done = self.lps.iter().all(|lp| lp.phase() == Phase::Done);
+            if lp_done && self.writes_flushed() {
                 return Ok(self.fabric_cycles - start);
             }
             self.step();
@@ -221,7 +256,7 @@ impl System {
                 self.fabric_cycles - start < max_fabric_cycles,
                 "drain did not finish within {max_fabric_cycles} fabric cycles \
                  (phase {:?}, stats:\n{})",
-                self.lp.phase(),
+                self.lp().phase(),
                 self.stats
             );
         }
@@ -286,9 +321,9 @@ mod tests {
                 (0..16u64).map(|i| Line::from_words((0..n as u64).map(|y| i * 100 + y).collect())),
             );
             let scheds = partition(&[Region { base: 0, lines: 16 }], 4);
-            sys.lp.begin_layer(&scheds, 1);
+            sys.lp_mut().begin_layer(&scheds, 1);
             sys.run_until_compute_done(100_000).unwrap();
-            let lines = sys.reassemble(&scheds, |p| sys.lp.loaded(p).to_vec());
+            let lines = sys.reassemble(&scheds, |p| sys.lp().loaded(p).to_vec());
             for i in 0..16u64 {
                 let expect: Vec<Word> = (0..n as u64).map(|y| i * 100 + y).collect();
                 assert_eq!(lines[&i], expect, "{design:?} line {i}");
@@ -303,7 +338,7 @@ mod tests {
             let n = sys.cfg.geometry.words_per_line();
             // No reads; straight to compute, then drain 8 lines.
             let scheds = partition(&[], 4);
-            sys.lp.begin_layer(&scheds, 1);
+            sys.lp_mut().begin_layer(&scheds, 1);
             sys.run_until_compute_done(10_000).unwrap();
             let wscheds = partition(&[Region { base: 32, lines: 8 }], 4);
             let data: Vec<std::collections::VecDeque<Word>> = wscheds
@@ -320,7 +355,7 @@ mod tests {
                     q
                 })
                 .collect();
-            sys.lp.supply_output(&wscheds, data);
+            sys.lp_mut().supply_output(&wscheds, data);
             sys.run_until_drained(100_000).unwrap();
             for a in 32..40u64 {
                 let line = sys.controller().dump(a, 1).remove(0);
@@ -340,7 +375,7 @@ mod tests {
             let mut sys = System::new(cfg).unwrap();
             sys.controller_mut().preload(0, (0..512u64).map(|_| Line::zeroed(4)));
             let scheds = partition(&[Region { base: 0, lines: 512 }], 4);
-            sys.lp.begin_layer(&scheds, 1);
+            sys.lp_mut().begin_layer(&scheds, 1);
             sys.run_until_compute_done(10_000_000).unwrap();
             sys.now_ps()
         };
@@ -363,7 +398,7 @@ mod tests {
                 (0..64u64).map(|i| Line::from_words((0..4u64).map(|y| i * 10 + y).collect())),
             );
             let scheds = partition(&[Region { base: 0, lines: 64 }], 4);
-            sys.lp.begin_layer(&scheds, 1);
+            sys.lp_mut().begin_layer(&scheds, 1);
             sys
         };
         let mut a = build();
@@ -394,9 +429,9 @@ mod tests {
             (0..16u64).map(|i| Line::from_words((0..n as u64).map(|y| i * 100 + y).collect())),
         );
         let scheds = partition(&[Region { base: 0, lines: 16 }], 4);
-        sys.lp.begin_layer(&scheds, 1);
+        sys.lp_mut().begin_layer(&scheds, 1);
         sys.run_until_compute_done(200_000).unwrap();
-        let lines = sys.reassemble(&scheds, |p| sys.lp.loaded(p).to_vec());
+        let lines = sys.reassemble(&scheds, |p| sys.lp().loaded(p).to_vec());
         for i in 0..16u64 {
             let expect: Vec<Word> = (0..n as u64).map(|y| i * 100 + y).collect();
             assert_eq!(lines[&i], expect, "line {i}");
@@ -408,6 +443,48 @@ mod tests {
         let mut cfg = small_cfg(Design::Medusa);
         cfg.channel_depths.rd_line = 0;
         assert!(System::new(cfg).is_err());
+    }
+
+    #[test]
+    fn two_port_groups_load_concurrently_without_crosstalk() {
+        use crate::accel::layer_processor::PortGroup;
+        let groups = [
+            PortGroup { read_base: 0, read_ports: 2, write_base: 0, write_ports: 2 },
+            PortGroup { read_base: 2, read_ports: 2, write_base: 2, write_ports: 2 },
+        ];
+        let mut sys = System::new_with_groups(small_cfg(Design::Medusa), &groups).unwrap();
+        let n = sys.cfg.geometry.words_per_line();
+        sys.controller_mut().preload(
+            0,
+            (0..32u64).map(|i| Line::from_words((0..n as u64).map(|y| i * 100 + y).collect())),
+        );
+        // Tenant 0 loads lines 0..16 on ports 0-1; tenant 1 loads lines
+        // 16..32 on ports 2-3, simultaneously.
+        let s0 = partition(&[Region { base: 0, lines: 16 }], 2);
+        let s1 = partition(&[Region { base: 16, lines: 16 }], 2);
+        sys.lps[0].begin_layer(&s0, 1);
+        sys.lps[1].begin_layer(&s1, 1);
+        sys.run_until_compute_done(200_000).unwrap();
+        for (t, scheds) in [(0usize, &s0), (1usize, &s1)] {
+            for (p, sched) in scheds.iter().enumerate() {
+                let mut expect = Vec::new();
+                for r in &sched.runs {
+                    for a in r.base..r.end() {
+                        for y in 0..n as u64 {
+                            expect.push(a * 100 + y);
+                        }
+                    }
+                }
+                assert_eq!(sys.lps[t].loaded(p), &expect[..], "tenant {t} port {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_bounds_port_group_rejected() {
+        use crate::accel::layer_processor::PortGroup;
+        let g = PortGroup { read_base: 3, read_ports: 2, write_base: 0, write_ports: 4 };
+        assert!(System::new_with_groups(small_cfg(Design::Medusa), &[g]).is_err());
     }
 
     #[test]

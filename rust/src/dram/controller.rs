@@ -17,7 +17,7 @@ use std::collections::HashMap;
 #[derive(Debug)]
 enum Active {
     Read { port: usize, next_addr: LineAddr, remaining: usize },
-    Write { next_addr: LineAddr, remaining: usize },
+    Write { port: usize, next_addr: LineAddr, remaining: usize },
 }
 
 pub struct MemoryController {
@@ -31,6 +31,10 @@ pub struct MemoryController {
     /// Busy until this controller cycle (timing stall).
     busy_until: u64,
     cycle: u64,
+    /// Lines committed to the store per originating write port (grown on
+    /// demand). The scenario engine uses this as a data-independent
+    /// "this tenant's writes have landed" signal.
+    write_lines_landed: Vec<u64>,
 }
 
 impl MemoryController {
@@ -43,7 +47,14 @@ impl MemoryController {
             active: None,
             busy_until: 0,
             cycle: 0,
+            write_lines_landed: Vec::new(),
         }
+    }
+
+    /// Lines committed to the store on behalf of write port `port` so
+    /// far (0 if the port never wrote).
+    pub fn write_lines_landed(&self, port: usize) -> u64 {
+        self.write_lines_landed.get(port).copied().unwrap_or(0)
     }
 
     /// Preload lines into the backing store (tensor upload path).
@@ -110,8 +121,9 @@ impl MemoryController {
                         self.busy_until = cycle + self.timing.read_latency_cycles;
                         stats.bump(Counter::DramReadBursts);
                     }
-                    MemCommand::Write { addr, burst_len, .. } => {
-                        self.active = Some(Active::Write { next_addr: addr, remaining: burst_len });
+                    MemCommand::Write { port, addr, burst_len } => {
+                        self.active =
+                            Some(Active::Write { port, next_addr: addr, remaining: burst_len });
                         self.busy_until = cycle + self.timing.write_latency_cycles;
                         stats.bump(Counter::DramWriteBursts);
                     }
@@ -156,8 +168,9 @@ impl MemoryController {
                     _ => unreachable!(),
                 }
             }
-            Active::Write { next_addr, remaining: _ } => {
+            Active::Write { port, next_addr, remaining: _ } => {
                 let addr = *next_addr;
+                let port = *port;
                 let ready = self.access_ready_cycle(addr, stats);
                 if ready > cycle {
                     self.busy_until = ready;
@@ -170,8 +183,12 @@ impl MemoryController {
                 };
                 self.store.insert(addr, line);
                 stats.bump(Counter::DramWriteLines);
+                if port >= self.write_lines_landed.len() {
+                    self.write_lines_landed.resize(port + 1, 0);
+                }
+                self.write_lines_landed[port] += 1;
                 match self.active.as_mut().unwrap() {
-                    Active::Write { next_addr, remaining } => {
+                    Active::Write { next_addr, remaining, .. } => {
                         *next_addr += 1;
                         *remaining -= 1;
                         if *remaining == 0 {

@@ -5,9 +5,11 @@
 
 pub mod fig6;
 pub mod report;
+pub mod scenarios;
 pub mod table1;
 pub mod table2;
 
 pub use fig6::fig6;
+pub use scenarios::scenarios;
 pub use table1::table1;
 pub use table2::table2;

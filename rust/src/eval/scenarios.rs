@@ -1,0 +1,105 @@
+//! Scenario matrix: every built-in workload scenario on every
+//! interconnect design, with golden-model verification. This is the
+//! system-level counterpart of the resource/frequency tables — where
+//! Fig 6 asks "does the fabric build?", this asks "how does each
+//! workload class actually move through it?".
+//!
+//! Scenario/design points are independent deterministic simulations, so
+//! the matrix runs them across threads (`util::par_map`); results are
+//! ordered and bit-identical to a sequential run.
+
+use crate::eval::report::Table;
+use crate::interconnect::Design;
+use crate::util::{par_map, par_map_with};
+use crate::workload::engine::run_scenario;
+use crate::workload::scenario::Scenario;
+
+/// One cell of the matrix.
+#[derive(Clone, Debug)]
+pub struct ScenarioPoint {
+    pub scenario: &'static str,
+    pub design: Design,
+    pub tenants: usize,
+    pub fabric_cycles: u64,
+    pub sim_time_us: f64,
+    pub lines_moved: u64,
+    pub verified: bool,
+    /// Fingerprint of the full outcome (determinism checks).
+    pub fingerprint: u64,
+}
+
+fn matrix_points() -> Vec<(&'static str, Design)> {
+    let mut out = Vec::new();
+    for &name in Scenario::builtin_names() {
+        for design in [Design::Baseline, Design::Medusa] {
+            out.push((name, design));
+        }
+    }
+    out
+}
+
+fn run_point(name: &'static str, design: Design) -> ScenarioPoint {
+    let mut sc = Scenario::builtin(name).expect("builtin scenario");
+    sc.cfg.design = design;
+    let out = run_scenario(&sc).expect("builtin scenario runs");
+    ScenarioPoint {
+        scenario: name,
+        design,
+        tenants: out.tenants.len(),
+        fabric_cycles: out.fabric_cycles,
+        sim_time_us: out.now_ps as f64 / 1e6,
+        lines_moved: out.tenants.iter().map(|t| t.report.total_lines_moved()).sum(),
+        verified: out.all_verified(),
+        fingerprint: out.fingerprint(),
+    }
+}
+
+/// Run the matrix with an explicit worker count (determinism tests).
+pub fn sweep_with_threads(workers: usize) -> Vec<ScenarioPoint> {
+    par_map_with(workers, &matrix_points(), |&(name, design)| run_point(name, design))
+}
+
+/// Run the full matrix (threaded per `MEDUSA_THREADS`).
+pub fn sweep() -> Vec<ScenarioPoint> {
+    par_map(&matrix_points(), |&(name, design)| run_point(name, design))
+}
+
+/// Render the matrix as a table.
+pub fn scenarios() -> Table {
+    let mut t = Table::new(
+        "Scenario matrix — workload classes through both interconnects",
+        &["scenario", "design", "tenants", "fabric cycles", "sim us", "lines moved", "verified"],
+    );
+    for p in sweep() {
+        t.row(vec![
+            p.scenario.to_string(),
+            p.design.name().to_string(),
+            p.tenants.to_string(),
+            p.fabric_cycles.to_string(),
+            format!("{:.1}", p.sim_time_us),
+            p.lines_moved.to_string(),
+            if p.verified { "✓".to_string() } else { "✗".to_string() },
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_covers_all_builtins_on_both_designs() {
+        let pts = sweep_with_threads(1);
+        assert_eq!(pts.len(), Scenario::builtin_names().len() * 2);
+        assert!(pts.iter().all(|p| p.verified), "every matrix point must verify");
+        assert!(pts.iter().all(|p| p.lines_moved > 0));
+    }
+
+    #[test]
+    fn table_renders() {
+        let t = scenarios();
+        assert!(t.to_text().contains("multi-tenant-mix"));
+        assert_eq!(t.rows.len(), Scenario::builtin_names().len() * 2);
+    }
+}

@@ -38,5 +38,6 @@ pub mod sim;
 pub mod testing;
 pub mod types;
 pub mod util;
+pub mod workload;
 
 pub use types::{Geometry, Line, PortId, Word};

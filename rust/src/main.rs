@@ -2,9 +2,14 @@
 //! and design-space tools for the Medusa interconnect reproduction.
 //!
 //! Subcommands:
-//!   eval <table1|table2|fig6|all>   regenerate the paper's tables/figures
+//!   eval <table1|table2|fig6|scenarios|all>  regenerate the evaluation
 //!   infer [--design D] [...]        run tiny-VGG inference through the
 //!                                   simulated system (golden or PJRT)
+//!   run --scenario FILE [...]       run a workload scenario (TOML or a
+//!                                   built-in name), optionally capturing
+//!                                   a canonical trace
+//!   replay FILE                     replay a canonical trace and check
+//!                                   it against its recorded stats
 //!   resources [--design D] [...]    resource report for a design point
 //!   freq [--design D] [...]         P&R frequency for a design point
 //!   sweep                           Fig 6 sweep as CSV
@@ -42,6 +47,8 @@ fn run(argv: &[String]) -> Result<()> {
     match cmd.as_str() {
         "eval" => cmd_eval(rest),
         "infer" => cmd_infer(rest),
+        "run" => cmd_run(rest),
+        "replay" => cmd_replay(rest),
         "resources" => cmd_resources(rest),
         "freq" => cmd_freq(rest),
         "sweep" => cmd_sweep(rest),
@@ -59,8 +66,10 @@ fn print_usage() {
         "medusa — transposition-based memory interconnect reproduction\n\n\
          usage: medusa <subcommand> [options]\n\n\
          subcommands:\n\
-         \x20 eval <table1|table2|fig6|all>   regenerate the paper's evaluation\n\
+         \x20 eval <table1|table2|fig6|scenarios|all>  regenerate the paper's evaluation\n\
          \x20 infer [options]                 tiny-VGG inference through the simulator\n\
+         \x20 run --scenario FILE [options]   run a workload scenario (file or built-in name)\n\
+         \x20 replay FILE                     replay + verify a canonical scenario trace\n\
          \x20 resources [options]             resource report for one design point\n\
          \x20 freq [options]                  P&R peak frequency for one design point\n\
          \x20 sweep                           Fig 6 sweep as CSV\n\
@@ -107,8 +116,9 @@ fn cmd_eval(rest: &[String]) -> Result<()> {
             println!();
             print!("{}", eval::fig6::ascii_plot());
         }
+        "scenarios" => print!("{}", eval::scenarios().to_text()),
         "all" => {
-            for t in ["table1", "table2", "fig6"] {
+            for t in ["table1", "table2", "fig6", "scenarios"] {
                 cmd_eval(&[t.to_string()])?;
                 println!();
             }
@@ -163,6 +173,88 @@ fn cmd_infer(rest: &[String]) -> Result<()> {
     );
     anyhow::ensure!(report.all_verified(), "verification FAILED");
     println!("all layers verified ✓");
+    Ok(())
+}
+
+fn cmd_run(rest: &[String]) -> Result<()> {
+    let args = Args::default()
+        .opt("scenario", "scenario TOML file or a built-in name")
+        .opt("design", "override the scenario's design (baseline | medusa | axis)")
+        .opt("capture", "write the run's canonical trace to this file")
+        .opt("seed", "override the system seed (re-derives tenant workload seeds)")
+        .parse(rest)?;
+    let which = args
+        .get("scenario")
+        .ok_or_else(|| anyhow::anyhow!("run needs --scenario <file|builtin>\n{}", args.usage()))?;
+    let mut sc = match medusa::workload::Scenario::builtin(which) {
+        Some(sc) => sc,
+        None => medusa::workload::Scenario::from_file(which)?,
+    };
+    if let Some(d) = args.get("design") {
+        sc.cfg.design =
+            Design::parse(d).ok_or_else(|| anyhow::anyhow!("unknown design {d:?}"))?;
+    }
+    if let Some(s) = args.get_usize("seed")? {
+        sc.reseed(s as u64);
+    }
+    let capture = args.get("capture");
+    let (outcome, trace) = if capture.is_some() {
+        let (o, t) = medusa::workload::run_scenario_captured(&sc)?;
+        (o, Some(t))
+    } else {
+        (medusa::workload::run_scenario(&sc)?, None)
+    };
+    println!(
+        "scenario {} on {} @ {:.0} MHz fabric: {} tenants, {} fabric cycles, {:.3} ms simulated",
+        outcome.scenario,
+        outcome.design,
+        outcome.fabric_mhz,
+        outcome.tenants.len(),
+        outcome.fabric_cycles,
+        outcome.now_ps as f64 / 1e9,
+    );
+    for (i, t) in outcome.tenants.iter().enumerate() {
+        println!("--- tenant {i} ({}) ---", t.network);
+        print!("{}", t.report);
+        let waits: u64 = t.read_waits.iter().chain(t.write_waits.iter()).sum();
+        println!("port wait cycles (total): {waits}");
+    }
+    println!("stats:\n{}", outcome.stats);
+    // Verify BEFORE persisting the trace: a failed run must never be
+    // laundered into a replayable "golden" whose expect block records
+    // the broken counters as ground truth.
+    anyhow::ensure!(outcome.all_verified(), "verification FAILED (no trace written)");
+    if let (Some(path), Some(trace)) = (capture, trace) {
+        trace.save(path)?;
+        println!("captured trace -> {path}");
+    }
+    println!("all tenants verified ✓ (fingerprint {:#018x})", outcome.fingerprint());
+    Ok(())
+}
+
+fn cmd_replay(rest: &[String]) -> Result<()> {
+    let args = Args::default().parse(rest)?;
+    let [path] = args.positional() else {
+        bail!("replay needs exactly one trace file argument");
+    };
+    let trace = medusa::sim::trace::ScenarioTrace::from_file(path)?;
+    let out = medusa::workload::verify_replay(&trace)?;
+    println!(
+        "replayed {} ({} steps, {} tenants) on {}: {} fabric cycles",
+        trace.header.scenario,
+        trace.steps.len(),
+        trace.header.tenants.len(),
+        trace.header.design,
+        out.fabric_cycles
+    );
+    if trace.expect.timing_recorded {
+        println!("exact + timing expectations reproduced ✓");
+    } else {
+        println!(
+            "exact (data-movement) expectations reproduced ✓ \
+             (trace has no recorded timing; re-capture to lock cycles)"
+        );
+    }
     Ok(())
 }
 

@@ -13,7 +13,9 @@
 //!   (the DDR3 controller runs in its own 200 MHz domain; the fabric
 //!   runs at whatever the P&R model says the design closes at).
 //! * [`stats::Stats`] — named counters shared by all components.
-//! * [`trace::Trace`] — optional bounded event trace for debugging.
+//! * [`trace::Trace`] — optional bounded event trace for debugging;
+//!   [`trace::ScenarioTrace`] — the canonical capture/replay trace the
+//!   workload scenario engine records and re-drives.
 
 pub mod channel;
 pub mod clock;
@@ -23,7 +25,7 @@ pub mod trace;
 pub use channel::Channel;
 pub use clock::{ClockDomain, Fired, Scheduler};
 pub use stats::{Counter, SampleId, Stats};
-pub use trace::Trace;
+pub use trace::{ScenarioTrace, Trace};
 
 /// A clocked hardware component. `tick` evaluates one cycle's worth of
 /// combinational logic + register updates against the component's *own*

@@ -1,11 +1,77 @@
-//! Bounded event trace for debugging cycle-level behaviour.
+//! Event traces: a bounded debug ring buffer, and the **canonical
+//! scenario trace** used for deterministic capture/replay.
 //!
-//! Off by default (zero cost beyond a branch); when enabled it records
-//! `(cycle, component, event)` tuples into a ring buffer and can dump
-//! them as text or a minimal VCD-like listing. Used heavily while
-//! bringing up the transposition control logic.
+//! # Debug trace
+//!
+//! [`Trace`] is off by default (zero cost beyond a branch); when enabled
+//! it records `(cycle, component, event)` tuples into a ring buffer and
+//! can dump them as text. Used heavily while bringing up the
+//! transposition control logic.
+//!
+//! # Canonical scenario trace format (v1)
+//!
+//! A [`ScenarioTrace`] is the compact, replayable record of one workload
+//! scenario run: everything the interconnect saw, nothing the workload
+//! layer computed. Replaying a trace re-drives the same port-level
+//! transfer schedule through a freshly built system — skipping network
+//! construction, weight generation, and golden math entirely — and must
+//! reproduce the captured cycle counts and statistics bit-for-bit.
+//! Capture is seeded ([`util::Prng`]) and single-threaded inside one
+//! system, so traces are bit-identical regardless of `MEDUSA_THREADS`.
+//!
+//! Traces serialize to the same TOML subset `config.rs` parses
+//! (`medusa replay <file>` and the golden-trace regression tests read
+//! them back). Layout:
+//!
+//! ```text
+//! [header]            # full system configuration of the run
+//! version = 1
+//! scenario = "..."    # scenario name (provenance only)
+//! design   = "medusa" # baseline | medusa | axis
+//! w_line / w_acc / read_ports / write_ports / max_burst = ...
+//! dotprod_units / rotator_stages = ...
+//! mem_mhz / fabric_mhz = ...     # fabric_mhz is the *resolved* clock
+//! ddr3_timing = true|false
+//! cmd_depth / rd_line_depth / wr_data_depth = ...
+//! seed = ...
+//! tenants = N
+//!
+//! [tenant.T]          # port group + phase offset of tenant T
+//! read_base / read_ports / write_base / write_ports = ...
+//! start_cycle = ...   # tenant idles until this fabric cycle
+//!
+//! [step.I]            # one layer pass; steps are grouped by tenant,
+//!                     # each tenant's steps in its execution order
+//!                     # (replay re-queues them per the `tenant` field,
+//!                     # so the global index is NOT a timeline)
+//! tenant = T
+//! label = "conv1"     # layer name (reporting only)
+//! macs = ...          # compute-stall model input
+//! write_seed = ...    # seeds synthesized write data on replay
+//! reads.P  = "base:lines,base:lines,..."   # local port P's runs
+//! writes.P = "base:lines,..."              # ports with no runs omitted
+//!
+//! [expect]            # cross-check block
+//! steps = I_max+1
+//! timing_recorded = true|false
+//! [expect.exact]      # data-movement counters: always asserted
+//! lp.words_loaded = ...
+//! [expect.timing]     # cycle/stall numbers: asserted when recorded
+//! fabric_cycles / mem_cycles / now_ps = ...
+//! wait.tN.read.P / wait.tN.write.P = ...   # per-port wait cycles
+//! <every other touched counter> = ...
+//! ```
+//!
+//! The `exact` block holds counters fully determined by the schedule
+//! (words/lines/bursts moved); the `timing` block holds everything that
+//! depends on cycle-level interleaving. Checked-in golden traces may
+//! ship with `timing_recorded = false` (movement locked, timing not yet
+//! measured); regenerating them with `MEDUSA_REGEN_GOLDEN=1` or
+//! `medusa run --capture` records both.
 
+use anyhow::{anyhow, bail, Context, Result};
 use std::collections::VecDeque;
+use std::path::Path;
 
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Event {
@@ -73,6 +139,531 @@ impl Trace {
             out.push_str(&format!("@{:>8} {:<24} {}\n", e.cycle, e.component, e.detail));
         }
         out
+    }
+}
+
+/// Counters whose value is fully determined by the transfer schedule
+/// (how much data moved), independent of cycle-level interleaving.
+/// These go into a trace's `exact` expect block.
+pub const MOVEMENT_COUNTERS: &[&str] = &[
+    "arbiter.reads_issued",
+    "arbiter.write_lines_streamed",
+    "arbiter.writes_issued",
+    "axis_read.lines_through_slices",
+    "axis_write.lines_through_slices",
+    "baseline_read.lines_into_converter",
+    "baseline_write.lines_into_fifo",
+    "dram.read_bursts",
+    "dram.read_lines",
+    "dram.write_bursts",
+    "dram.write_lines",
+    "lp.read_bursts_submitted",
+    "lp.words_drained",
+    "lp.words_loaded",
+    "lp.write_bursts_submitted",
+    "medusa_read.lines_transposed",
+    "medusa_read.words_rotated",
+    "medusa_write.lines_transposed",
+    "medusa_write.words_rotated",
+    "sys.read_lines_into_fabric",
+];
+
+/// One tenant's port group and phase offset, as recorded in a trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceTenant {
+    pub read_base: usize,
+    pub read_ports: usize,
+    pub write_base: usize,
+    pub write_ports: usize,
+    /// Fabric cycle before which the tenant stays idle.
+    pub start_cycle: u64,
+}
+
+/// The system configuration a trace was captured under (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceHeader {
+    pub scenario: String,
+    pub design: String,
+    pub w_line: usize,
+    pub w_acc: usize,
+    pub read_ports: usize,
+    pub write_ports: usize,
+    pub max_burst: usize,
+    pub dotprod_units: usize,
+    pub rotator_stages: usize,
+    pub mem_mhz: f64,
+    /// The *resolved* fabric clock of the captured run (pinned on
+    /// replay so the P&R model cannot drift the comparison).
+    pub fabric_mhz: f64,
+    pub ddr3_timing: bool,
+    pub cmd_depth: usize,
+    pub rd_line_depth: usize,
+    pub wr_data_depth: usize,
+    pub seed: u64,
+    pub tenants: Vec<TraceTenant>,
+}
+
+/// A contiguous run of lines `(base, lines)` one local port streams.
+pub type TraceRun = (u64, u64);
+
+/// One layer pass: the exact burst schedule each local port executes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceStep {
+    pub tenant: usize,
+    pub label: String,
+    pub macs: u64,
+    /// Seeds the synthesized write data on replay (timing-neutral).
+    pub write_seed: u64,
+    /// Per local read port: ordered address runs.
+    pub reads: Vec<Vec<TraceRun>>,
+    /// Per local write port: ordered address runs.
+    pub writes: Vec<Vec<TraceRun>>,
+}
+
+impl TraceStep {
+    pub fn read_lines(&self) -> u64 {
+        self.reads.iter().flatten().map(|&(_, l)| l).sum()
+    }
+
+    pub fn write_lines(&self) -> u64 {
+        self.writes.iter().flatten().map(|&(_, l)| l).sum()
+    }
+}
+
+/// Cross-check block: what a replay of the trace must reproduce.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceExpect {
+    /// When false, only the `exact` entries are meaningful (hand-written
+    /// or not-yet-regenerated golden files).
+    pub timing_recorded: bool,
+    pub fabric_cycles: u64,
+    pub mem_cycles: u64,
+    pub now_ps: u64,
+    /// Data-movement counters (`name -> value`), asserted always.
+    pub exact: Vec<(String, u64)>,
+    /// Timing-dependent counters and per-port waits, asserted when
+    /// `timing_recorded`.
+    pub timing: Vec<(String, u64)>,
+}
+
+/// A complete captured scenario run. See the module docs for the format.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioTrace {
+    pub header: TraceHeader,
+    pub steps: Vec<TraceStep>,
+    pub expect: TraceExpect,
+}
+
+fn fmt_runs(runs: &[TraceRun]) -> String {
+    runs.iter().map(|(b, l)| format!("{b}:{l}")).collect::<Vec<_>>().join(",")
+}
+
+fn parse_runs(s: &str) -> Result<Vec<TraceRun>> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Ok(Vec::new());
+    }
+    s.split(',')
+        .map(|part| {
+            let (b, l) = part
+                .split_once(':')
+                .ok_or_else(|| anyhow!("malformed run {part:?} (want base:lines)"))?;
+            Ok((b.trim().parse::<u64>()?, l.trim().parse::<u64>()?))
+        })
+        .collect()
+}
+
+impl ScenarioTrace {
+    /// Serialize to the canonical text format.
+    pub fn to_text(&self) -> String {
+        let h = &self.header;
+        let mut out = String::new();
+        out.push_str("# medusa canonical scenario trace (format: sim/trace.rs module docs)\n");
+        out.push_str("[header]\n");
+        out.push_str("version = 1\n");
+        out.push_str(&format!("scenario = \"{}\"\n", h.scenario));
+        out.push_str(&format!("design = \"{}\"\n", h.design));
+        out.push_str(&format!("w_line = {}\n", h.w_line));
+        out.push_str(&format!("w_acc = {}\n", h.w_acc));
+        out.push_str(&format!("read_ports = {}\n", h.read_ports));
+        out.push_str(&format!("write_ports = {}\n", h.write_ports));
+        out.push_str(&format!("max_burst = {}\n", h.max_burst));
+        out.push_str(&format!("dotprod_units = {}\n", h.dotprod_units));
+        out.push_str(&format!("rotator_stages = {}\n", h.rotator_stages));
+        out.push_str(&format!("mem_mhz = {}\n", h.mem_mhz));
+        out.push_str(&format!("fabric_mhz = {}\n", h.fabric_mhz));
+        out.push_str(&format!("ddr3_timing = {}\n", h.ddr3_timing));
+        out.push_str(&format!("cmd_depth = {}\n", h.cmd_depth));
+        out.push_str(&format!("rd_line_depth = {}\n", h.rd_line_depth));
+        out.push_str(&format!("wr_data_depth = {}\n", h.wr_data_depth));
+        out.push_str(&format!("seed = {}\n", h.seed));
+        out.push_str(&format!("tenants = {}\n", h.tenants.len()));
+        for (t, ten) in h.tenants.iter().enumerate() {
+            out.push_str(&format!("\n[tenant.{t}]\n"));
+            out.push_str(&format!("read_base = {}\n", ten.read_base));
+            out.push_str(&format!("read_ports = {}\n", ten.read_ports));
+            out.push_str(&format!("write_base = {}\n", ten.write_base));
+            out.push_str(&format!("write_ports = {}\n", ten.write_ports));
+            out.push_str(&format!("start_cycle = {}\n", ten.start_cycle));
+        }
+        for (i, s) in self.steps.iter().enumerate() {
+            out.push_str(&format!("\n[step.{i}]\n"));
+            out.push_str(&format!("tenant = {}\n", s.tenant));
+            out.push_str(&format!("label = \"{}\"\n", s.label));
+            out.push_str(&format!("macs = {}\n", s.macs));
+            out.push_str(&format!("write_seed = {}\n", s.write_seed));
+            for (p, runs) in s.reads.iter().enumerate() {
+                if !runs.is_empty() {
+                    out.push_str(&format!("reads.{p} = \"{}\"\n", fmt_runs(runs)));
+                }
+            }
+            for (p, runs) in s.writes.iter().enumerate() {
+                if !runs.is_empty() {
+                    out.push_str(&format!("writes.{p} = \"{}\"\n", fmt_runs(runs)));
+                }
+            }
+        }
+        out.push_str("\n[expect]\n");
+        out.push_str(&format!("steps = {}\n", self.steps.len()));
+        out.push_str(&format!("timing_recorded = {}\n", self.expect.timing_recorded));
+        out.push_str("\n[expect.exact]\n");
+        for (k, v) in &self.expect.exact {
+            out.push_str(&format!("{k} = {v}\n"));
+        }
+        if self.expect.timing_recorded {
+            out.push_str("\n[expect.timing]\n");
+            out.push_str(&format!("fabric_cycles = {}\n", self.expect.fabric_cycles));
+            out.push_str(&format!("mem_cycles = {}\n", self.expect.mem_cycles));
+            out.push_str(&format!("now_ps = {}\n", self.expect.now_ps));
+            for (k, v) in &self.expect.timing {
+                out.push_str(&format!("{k} = {v}\n"));
+            }
+        }
+        out
+    }
+
+    /// Parse the canonical text format.
+    #[allow(clippy::should_implement_trait)]
+    pub fn from_str(text: &str) -> Result<Self> {
+        use crate::config::{parse_toml_subset, Value};
+        fn lookup<'a>(
+            map: &'a std::collections::BTreeMap<String, Value>,
+            key: &str,
+        ) -> Result<&'a Value> {
+            map.get(key).ok_or_else(|| anyhow!("trace missing key {key:?}"))
+        }
+        let map = parse_toml_subset(text)?;
+        let get = |key: &str| lookup(&map, key);
+        let get_usize = |key: &str| -> Result<usize> { lookup(&map, key)?.as_usize() };
+        let get_u64 = |key: &str| -> Result<u64> { Ok(lookup(&map, key)?.as_usize()? as u64) };
+        let version = get_usize("header.version")?;
+        anyhow::ensure!(version == 1, "unsupported trace version {version}");
+        let ntenants = get_usize("header.tenants")?;
+        anyhow::ensure!(ntenants >= 1, "trace needs at least one tenant");
+        let mut tenants = Vec::with_capacity(ntenants);
+        for t in 0..ntenants {
+            tenants.push(TraceTenant {
+                read_base: get_usize(&format!("tenant.{t}.read_base"))?,
+                read_ports: get_usize(&format!("tenant.{t}.read_ports"))?,
+                write_base: get_usize(&format!("tenant.{t}.write_base"))?,
+                write_ports: get_usize(&format!("tenant.{t}.write_ports"))?,
+                start_cycle: get_u64(&format!("tenant.{t}.start_cycle"))?,
+            });
+        }
+        let header = TraceHeader {
+            scenario: get("header.scenario")?.as_str()?.to_string(),
+            design: get("header.design")?.as_str()?.to_string(),
+            w_line: get_usize("header.w_line")?,
+            w_acc: get_usize("header.w_acc")?,
+            read_ports: get_usize("header.read_ports")?,
+            write_ports: get_usize("header.write_ports")?,
+            max_burst: get_usize("header.max_burst")?,
+            dotprod_units: get_usize("header.dotprod_units")?,
+            rotator_stages: get_usize("header.rotator_stages")?,
+            mem_mhz: get("header.mem_mhz")?.as_f64()?,
+            fabric_mhz: get("header.fabric_mhz")?.as_f64()?,
+            ddr3_timing: get("header.ddr3_timing")?.as_bool()?,
+            cmd_depth: get_usize("header.cmd_depth")?,
+            rd_line_depth: get_usize("header.rd_line_depth")?,
+            wr_data_depth: get_usize("header.wr_data_depth")?,
+            seed: get_u64("header.seed")?,
+            tenants,
+        };
+        let nsteps = get_usize("expect.steps")?;
+        anyhow::ensure!(
+            map.get(&format!("step.{nsteps}.tenant")).is_none(),
+            "trace declares {nsteps} steps in [expect] but contains [step.{nsteps}] — \
+             truncated or tampered expect block"
+        );
+        let mut steps = Vec::with_capacity(nsteps);
+        for i in 0..nsteps {
+            let tenant = get_usize(&format!("step.{i}.tenant"))?;
+            anyhow::ensure!(tenant < ntenants, "step {i} references unknown tenant {tenant}");
+            let ten = header.tenants[tenant];
+            let runs_of = |kind: &str, ports: usize| -> Result<Vec<Vec<TraceRun>>> {
+                // A schedule key for a port the tenant does not own would
+                // be silently unreachable — reject it like the other
+                // tampering checks instead of dropping data.
+                let prefix = format!("step.{i}.{kind}.");
+                for (k, _) in map.range(prefix.clone()..) {
+                    let Some(rest) = k.strip_prefix(prefix.as_str()) else { break };
+                    let p: usize = rest
+                        .parse()
+                        .map_err(|_| anyhow!("malformed schedule key {k:?}"))?;
+                    anyhow::ensure!(
+                        p < ports,
+                        "{k:?} addresses port {p}, but step {i}'s tenant owns only {ports} \
+                         {kind} ports"
+                    );
+                }
+                let mut out = Vec::with_capacity(ports);
+                for p in 0..ports {
+                    let key = format!("step.{i}.{kind}.{p}");
+                    match map.get(&key) {
+                        Some(v) => out.push(
+                            parse_runs(v.as_str()?).with_context(|| format!("key {key}"))?,
+                        ),
+                        None => out.push(Vec::new()),
+                    }
+                }
+                Ok(out)
+            };
+            steps.push(TraceStep {
+                tenant,
+                label: get(&format!("step.{i}.label"))?.as_str()?.to_string(),
+                macs: get_u64(&format!("step.{i}.macs"))?,
+                write_seed: get_u64(&format!("step.{i}.write_seed"))?,
+                reads: runs_of("reads", ten.read_ports)?,
+                writes: runs_of("writes", ten.write_ports)?,
+            });
+        }
+        let timing_recorded = get("expect.timing_recorded")?.as_bool()?;
+        let collect_prefixed = |prefix: &str, skip: &[&str]| -> Result<Vec<(String, u64)>> {
+            let mut out = Vec::new();
+            for (k, v) in map.range(prefix.to_string()..) {
+                let Some(rest) = k.strip_prefix(prefix) else { break };
+                if skip.contains(&rest) {
+                    continue;
+                }
+                out.push((rest.to_string(), v.as_usize()? as u64));
+            }
+            Ok(out)
+        };
+        let exact = collect_prefixed("expect.exact.", &[])?;
+        let timing =
+            collect_prefixed("expect.timing.", &["fabric_cycles", "mem_cycles", "now_ps"])?;
+        let (fabric_cycles, mem_cycles, now_ps) = if timing_recorded {
+            (
+                get_u64("expect.timing.fabric_cycles")?,
+                get_u64("expect.timing.mem_cycles")?,
+                get_u64("expect.timing.now_ps")?,
+            )
+        } else {
+            (0, 0, 0)
+        };
+        Ok(ScenarioTrace {
+            header,
+            steps,
+            expect: TraceExpect { timing_recorded, fabric_cycles, mem_cycles, now_ps, exact, timing },
+        })
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading trace {}", path.as_ref().display()))?;
+        Self::from_str(&text).with_context(|| format!("parsing trace {}", path.as_ref().display()))
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_text())
+            .with_context(|| format!("writing trace {}", path.as_ref().display()))
+    }
+
+    /// Sanity-check internal consistency (port counts, tenant bounds,
+    /// group disjointness).
+    pub fn validate(&self) -> Result<()> {
+        let h = &self.header;
+        anyhow::ensure!(!h.tenants.is_empty(), "trace has no tenants");
+        let mut read_owner = vec![usize::MAX; h.read_ports];
+        let mut write_owner = vec![usize::MAX; h.write_ports];
+        for (t, ten) in h.tenants.iter().enumerate() {
+            anyhow::ensure!(
+                ten.read_base + ten.read_ports <= h.read_ports
+                    && ten.write_base + ten.write_ports <= h.write_ports,
+                "tenant {t} port group exceeds geometry"
+            );
+            anyhow::ensure!(ten.read_ports >= 1 && ten.write_ports >= 1, "tenant {t} empty group");
+            for p in ten.read_base..ten.read_base + ten.read_ports {
+                anyhow::ensure!(
+                    read_owner[p] == usize::MAX,
+                    "tenants {} and {t} overlap on read port {p}",
+                    read_owner[p]
+                );
+                read_owner[p] = t;
+            }
+            for p in ten.write_base..ten.write_base + ten.write_ports {
+                anyhow::ensure!(
+                    write_owner[p] == usize::MAX,
+                    "tenants {} and {t} overlap on write port {p}",
+                    write_owner[p]
+                );
+                write_owner[p] = t;
+            }
+        }
+        for (i, s) in self.steps.iter().enumerate() {
+            anyhow::ensure!(s.tenant < h.tenants.len(), "step {i}: bad tenant");
+            let ten = h.tenants[s.tenant];
+            anyhow::ensure!(
+                s.reads.len() == ten.read_ports && s.writes.len() == ten.write_ports,
+                "step {i}: schedule width does not match tenant group"
+            );
+        }
+        Ok(())
+    }
+
+    /// The deterministic word replay feeds write-port streams with:
+    /// a mix of the step's `write_seed`, the line address, and the word
+    /// lane, so corrupted routing cannot alias to the right value.
+    pub fn synth_word(write_seed: u64, addr: u64, lane: u64) -> u64 {
+        let mut z = write_seed ^ addr.wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ (lane << 17);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z ^ (z >> 31)
+    }
+}
+
+#[cfg(test)]
+mod canonical_tests {
+    use super::*;
+
+    fn sample() -> ScenarioTrace {
+        ScenarioTrace {
+            header: TraceHeader {
+                scenario: "unit".into(),
+                design: "medusa".into(),
+                w_line: 64,
+                w_acc: 16,
+                read_ports: 4,
+                write_ports: 4,
+                max_burst: 4,
+                dotprod_units: 4,
+                rotator_stages: 0,
+                mem_mhz: 200.0,
+                fabric_mhz: 200.0,
+                ddr3_timing: false,
+                cmd_depth: 8,
+                rd_line_depth: 8,
+                wr_data_depth: 8,
+                seed: 7,
+                tenants: vec![TraceTenant {
+                    read_base: 0,
+                    read_ports: 4,
+                    write_base: 0,
+                    write_ports: 4,
+                    start_cycle: 0,
+                }],
+            },
+            steps: vec![TraceStep {
+                tenant: 0,
+                label: "conv1".into(),
+                macs: 4608,
+                write_seed: 7,
+                reads: vec![vec![(0, 12)], vec![(12, 13)], vec![(25, 7), (32, 6)], vec![(38, 13)]],
+                writes: vec![vec![(51, 16)], vec![(67, 16)], vec![(83, 16)], vec![(99, 16)]],
+            }],
+            expect: TraceExpect {
+                timing_recorded: true,
+                fabric_cycles: 1234,
+                mem_cycles: 1200,
+                now_ps: 99_000,
+                exact: vec![("lp.words_loaded".into(), 204)],
+                timing: vec![("wait.t0.read.0".into(), 3)],
+            },
+        }
+    }
+
+    #[test]
+    fn round_trips_through_text() {
+        let t = sample();
+        let text = t.to_text();
+        let back = ScenarioTrace::from_str(&text).unwrap();
+        assert_eq!(t, back);
+        back.validate().unwrap();
+    }
+
+    #[test]
+    fn unrecorded_timing_round_trips() {
+        let mut t = sample();
+        t.expect.timing_recorded = false;
+        t.expect.fabric_cycles = 0;
+        t.expect.mem_cycles = 0;
+        t.expect.now_ps = 0;
+        t.expect.timing.clear();
+        let back = ScenarioTrace::from_str(&t.to_text()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn step_line_totals() {
+        let t = sample();
+        assert_eq!(t.steps[0].read_lines(), 51);
+        assert_eq!(t.steps[0].write_lines(), 64);
+    }
+
+    #[test]
+    fn run_parsing_rejects_garbage() {
+        assert!(parse_runs("1:2,3").is_err());
+        assert!(parse_runs("x:2").is_err());
+        assert_eq!(parse_runs("").unwrap(), Vec::<TraceRun>::new());
+        assert_eq!(parse_runs("5:6, 7:8").unwrap(), vec![(5, 6), (7, 8)]);
+    }
+
+    #[test]
+    fn movement_counter_list_is_sorted_and_known() {
+        let mut sorted = MOVEMENT_COUNTERS.to_vec();
+        sorted.sort_unstable();
+        assert_eq!(MOVEMENT_COUNTERS, &sorted[..]);
+        for name in MOVEMENT_COUNTERS {
+            assert!(
+                crate::sim::stats::Counter::from_name(name).is_some(),
+                "{name} is not a registry counter"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_tenant_reference_rejected() {
+        let mut t = sample();
+        t.steps[0].tenant = 3;
+        let text = t.to_text();
+        assert!(ScenarioTrace::from_str(&text).is_err());
+    }
+
+    #[test]
+    fn overlapping_tenant_groups_rejected() {
+        let mut t = sample();
+        t.header.tenants = vec![
+            TraceTenant { read_base: 0, read_ports: 3, write_base: 0, write_ports: 2, start_cycle: 0 },
+            TraceTenant { read_base: 2, read_ports: 2, write_base: 2, write_ports: 2, start_cycle: 0 },
+        ];
+        let err = t.validate().unwrap_err();
+        assert!(format!("{err}").contains("overlap on read port 2"), "{err}");
+    }
+
+    #[test]
+    fn out_of_range_port_schedule_key_rejected() {
+        let t = sample();
+        let text = t.to_text().replace("reads.3 = \"38:13\"", "reads.7 = \"38:13\"");
+        let err = ScenarioTrace::from_str(&text).unwrap_err();
+        assert!(format!("{err}").contains("owns only 4"), "{err}");
+    }
+
+    #[test]
+    fn stray_step_beyond_declared_count_rejected() {
+        let t = sample();
+        let mut text = t.to_text();
+        text.push_str("\n[step.1]\ntenant = 0\nlabel = \"stray\"\nmacs = 1\nwrite_seed = 0\n");
+        let err = ScenarioTrace::from_str(&text).unwrap_err();
+        assert!(format!("{err}").contains("truncated or tampered"), "{err}");
     }
 }
 

@@ -297,6 +297,145 @@ mod medusa_roundtrip_props {
     }
 }
 
+/// Workload-math properties (PR 3 satellite): layer word counts and MAC
+/// counts must agree with closed-form recomputation for randomized
+/// layers of every kind, and every zoo network must chain shape-exactly.
+#[cfg(test)]
+mod workload_math_props {
+    use super::{check, Config, Gen};
+    use crate::accel::dnn::ConvLayer;
+    use crate::util::Prng;
+    use crate::workload::graph::Layer;
+    use crate::workload::zoo;
+
+    struct LayerGen;
+
+    impl Gen<Layer> for LayerGen {
+        fn generate(&self, rng: &mut Prng) -> Layer {
+            match rng.range(0, 2) {
+                0 => {
+                    // Grouped conv with groups dividing both channel counts.
+                    let groups = 1usize << rng.range(0, 2); // 1, 2, 4
+                    let in_c = groups * rng.range(1, 4);
+                    let out_c = groups * rng.range(1, 4);
+                    let k = [1usize, 3, 5][rng.range(0, 2)];
+                    let stride = rng.range(1, 2);
+                    let pad = rng.range(0, k / 2);
+                    let hw = rng.range(k.max(4), 12);
+                    Layer::Conv {
+                        conv: ConvLayer {
+                            name: "prop-conv",
+                            in_c,
+                            in_h: hw,
+                            in_w: hw,
+                            out_c,
+                            k,
+                            stride,
+                            pad,
+                            relu: rng.chance(0.5),
+                        },
+                        groups,
+                    }
+                }
+                1 => Layer::Gemm {
+                    name: "prop-gemm",
+                    m: rng.range(1, 32),
+                    k: rng.range(1, 32),
+                    n: rng.range(1, 32),
+                    relu: rng.chance(0.5),
+                },
+                _ => Layer::Add {
+                    name: "prop-add",
+                    c: rng.range(1, 8),
+                    h: rng.range(1, 8),
+                    w: rng.range(1, 8),
+                    relu: rng.chance(0.5),
+                },
+            }
+        }
+
+        fn shrink(&self, _value: &Layer) -> Vec<Layer> {
+            Vec::new()
+        }
+    }
+
+    #[test]
+    fn prop_layer_word_and_mac_counts_match_closed_form() {
+        check(Config { cases: 128, ..Config::default() }, &LayerGen, |l: &Layer| {
+            l.validate().map_err(|e| e.to_string())?;
+            let (ic, ih, iw) = l.in_shape();
+            let (oc, oh, ow) = l.out_shape();
+            if l.ifmap_words() != ic * ih * iw {
+                return Err(format!("ifmap_words {} != {}", l.ifmap_words(), ic * ih * iw));
+            }
+            if l.ofmap_words() != oc * oh * ow {
+                return Err(format!("ofmap_words {} != {}", l.ofmap_words(), oc * oh * ow));
+            }
+            match l {
+                Layer::Conv { conv, groups } => {
+                    let icg = conv.in_c / groups;
+                    let want_w = conv.out_c * icg * conv.k * conv.k + conv.out_c;
+                    if l.weight_words() != want_w {
+                        return Err(format!("weight_words {} != {want_w}", l.weight_words()));
+                    }
+                    // Closed-form spatial arithmetic.
+                    let want_oh = (conv.in_h + 2 * conv.pad - conv.k) / conv.stride + 1;
+                    if oh != want_oh {
+                        return Err(format!("out_h {oh} != {want_oh}"));
+                    }
+                    let want_macs = (oc * oh * ow * icg * conv.k * conv.k) as u64;
+                    if l.macs() != want_macs {
+                        return Err(format!("macs {} != {want_macs}", l.macs()));
+                    }
+                    // Dense macs scale exactly by the group count.
+                    let dense = Layer::Conv { conv: *conv, groups: 1 };
+                    if dense.macs() != l.macs() * *groups as u64 {
+                        return Err("grouping must divide macs exactly".into());
+                    }
+                }
+                Layer::Gemm { m, k, n, .. } => {
+                    if l.weight_words() != n * k + n {
+                        return Err("gemm weight_words".into());
+                    }
+                    if l.macs() != (m * k * n) as u64 {
+                        return Err("gemm macs".into());
+                    }
+                    // Lowering to a 1x1 conv preserves every count.
+                    let c = l.lowered_conv();
+                    if c.ifmap_words() != l.ifmap_words()
+                        || c.ofmap_words() != l.ofmap_words()
+                        || c.macs() != l.macs()
+                    {
+                        return Err("gemm lowering changed counts".into());
+                    }
+                }
+                Layer::Add { c, h, w, .. } => {
+                    if l.weight_words() != 0 || l.macs() != (c * h * w) as u64 {
+                        return Err("add counts".into());
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_zoo_networks_chain_shapes_exactly() {
+        // Not randomized, but uses the same harness idiom: every zoo
+        // network's node shapes must chain, and its aggregate words/macs
+        // must equal the per-node closed-form sums.
+        for net in zoo::all() {
+            net.validate().unwrap_or_else(|e| panic!("{}: {e}", net.name));
+            let total: u64 = net.nodes.iter().map(|n| n.layer.macs()).sum();
+            assert_eq!(net.total_macs(), total, "{}", net.name);
+            for node in &net.nodes {
+                let (c, h, w) = node.layer.out_shape();
+                assert_eq!(node.layer.ofmap_words(), c * h * w, "{}", node.layer.name());
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -9,5 +9,5 @@ pub mod parallel;
 pub mod prng;
 
 pub use mathutil::{ceil_div, ceil_log2, next_pow2, snap_to_freq_grid};
-pub use parallel::{par_map, par_map_owned};
+pub use parallel::{par_map, par_map_owned, par_map_with};
 pub use prng::Prng;

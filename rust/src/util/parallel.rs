@@ -33,7 +33,19 @@ where
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
-    let workers = max_threads().min(items.len());
+    par_map_with(max_threads(), items, f)
+}
+
+/// [`par_map`] with an explicit worker count (ignores `MEDUSA_THREADS`).
+/// Used by determinism tests to compare a sequential run against a
+/// parallel one without racing on process-global environment state.
+pub fn par_map_with<T, R, F>(workers: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let workers = workers.max(1).min(items.len());
     if workers <= 1 {
         return items.iter().map(f).collect();
     }

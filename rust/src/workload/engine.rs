@@ -1,0 +1,852 @@
+//! The scenario engine: executes a [`Scenario`] — one or many tenant
+//! networks on disjoint port groups of a single simulated system — and
+//! the deterministic trace capture/replay harness built on it.
+//!
+//! # Execution model
+//!
+//! All workload math is *precomputed*: inputs and weights are generated
+//! from the tenant seed, golden outputs are computed layer by layer, and
+//! every layer pass is reduced to an [`ExecStep`] — per-port burst
+//! schedules plus the exact write-port word streams. The simulation
+//! loop then only moves data: each tenant's layer processor walks
+//! Load -> Compute -> Drain, gated per tenant by a data-independent
+//! "my writes have landed in DRAM" signal
+//! ([`MemoryController::write_lines_landed`]) so tenants overlap freely
+//! without read-after-write hazards on their own tensors.
+//!
+//! Because the precomputation is seeded and the simulation is
+//! single-threaded within one system, a scenario run is bit-identical
+//! regardless of `MEDUSA_THREADS`; parallelism happens only *across*
+//! scenario/design points (`eval::scenarios`).
+//!
+//! # Capture / replay
+//!
+//! Capturing a run records the executed steps as a
+//! [`ScenarioTrace`](crate::sim::trace::ScenarioTrace) plus the final
+//! stats. Replaying re-drives the interconnect from the trace alone —
+//! no workload generation, no golden math (write data is synthesized
+//! from the step's `write_seed`) — and must reproduce the captured
+//! cycle counts and counters exactly; [`verify_replay`] asserts that.
+
+use crate::accel::layer_processor::{Phase, PortGroup};
+use crate::accel::prefetch::{partition, PortSchedule, Region};
+use crate::accel::quant::Fixed16;
+use crate::coordinator::driver::gen_conv_weights;
+use crate::coordinator::metrics::{LayerReport, RunReport};
+use crate::coordinator::System;
+use crate::dram::MemoryController;
+use crate::interconnect::Design;
+use crate::sim::trace::{ScenarioTrace, TraceExpect, TraceHeader, TraceStep, TraceTenant, MOVEMENT_COUNTERS};
+use crate::sim::stats::{Counter, SampleId};
+use crate::types::{Line, LineAddr, Word};
+use crate::util::Prng;
+use crate::workload::graph::{Layer, Src, WorkloadNet};
+use crate::workload::scenario::Scenario;
+use anyhow::{ensure, Context, Result};
+use std::collections::{HashMap, VecDeque};
+
+/// One fully precomputed layer pass.
+struct ExecStep {
+    label: &'static str,
+    macs: u64,
+    reads: Vec<PortSchedule>,
+    writes: Vec<PortSchedule>,
+    /// The exact words each local write port will stream, in order.
+    write_data: Vec<VecDeque<Word>>,
+    /// Expected words per local read port (empty = don't verify).
+    expected_ports: Vec<Vec<Word>>,
+    /// Expected DRAM content of the output region after the flush.
+    dram_check: Option<(Region, Vec<Word>)>,
+    /// Recorded into the trace; seeds synthesized data on replay.
+    write_seed: u64,
+}
+
+impl ExecStep {
+    fn read_lines(&self) -> u64 {
+        self.reads.iter().map(|s| s.total_lines() as u64).sum()
+    }
+
+    fn write_lines(&self) -> u64 {
+        self.writes.iter().map(|s| s.total_lines() as u64).sum()
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum TState {
+    WaitStart,
+    Loading,
+    Draining,
+    WaitFlush,
+    Finished,
+}
+
+/// Per-tenant runtime state.
+struct TenantRt {
+    network: &'static str,
+    group: PortGroup,
+    start_cycle: u64,
+    steps: VecDeque<ExecStep>,
+    state: TState,
+    cur: Option<ExecStep>,
+    /// Lines handed to the write network so far (cumulative); compared
+    /// against the controller's landed count for this group.
+    supplied_lines: u64,
+    /// Layer-report baselines.
+    t0_ps: u64,
+    load0: u64,
+    comp0: u64,
+    drain0: u64,
+    report: RunReport,
+    verified: bool,
+    /// Golden final feature map (net mode; empty on replay).
+    final_fm: Vec<Fixed16>,
+    /// DRAM region of the network output (net mode; dumped into the
+    /// outcome after the run so tests can compare what the fabric
+    /// actually delivered, not just the precomputed golden).
+    final_region: Option<Region>,
+}
+
+/// What one tenant produced.
+pub struct TenantOutcome {
+    pub network: &'static str,
+    pub report: RunReport,
+    /// Cumulative per-port wait cycles (local indices).
+    pub read_waits: Vec<u64>,
+    pub write_waits: Vec<u64>,
+    /// The network's final feature map (golden-checked; empty on
+    /// replay).
+    pub final_fm: Vec<Fixed16>,
+    /// The words that actually landed in the output's DRAM region —
+    /// dumped from the simulated store after the run, NOT derived from
+    /// the golden model (empty on replay). This is what cross-design
+    /// data-transparency assertions must compare.
+    pub final_dram: Vec<Word>,
+    pub verified: bool,
+}
+
+/// The result of one scenario (or replay) run.
+pub struct ScenarioOutcome {
+    pub scenario: String,
+    pub design: &'static str,
+    pub fabric_mhz: f64,
+    pub fabric_cycles: u64,
+    pub mem_cycles: u64,
+    pub now_ps: u64,
+    pub tenants: Vec<TenantOutcome>,
+    pub stats: crate::sim::Stats,
+}
+
+impl ScenarioOutcome {
+    pub fn all_verified(&self) -> bool {
+        self.tenants.iter().all(|t| t.verified)
+    }
+
+    /// Stable FNV-1a digest of everything observable: cycle counts,
+    /// every counter, per-port waits, and the tenants' final feature
+    /// maps. Two runs are "bit-identical" iff their fingerprints match.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        };
+        mix(self.fabric_cycles);
+        mix(self.mem_cycles);
+        mix(self.now_ps);
+        // Mix (index, value) over the FULL registry — no zero-filter —
+        // so equal values landing on different counters cannot collide.
+        for &id in Counter::ALL.iter() {
+            mix(id as u64);
+            mix(self.stats.count(id));
+        }
+        for &id in SampleId::ALL.iter() {
+            let s = self.stats.series_of(id);
+            mix(id as u64);
+            mix(s.sum);
+            mix(s.count);
+        }
+        for t in &self.tenants {
+            for &w in t.read_waits.iter().chain(t.write_waits.iter()) {
+                mix(w);
+            }
+            for fm in &t.final_fm {
+                mix(fm.0 as u16 as u64);
+            }
+            mix(t.report.total_cycles());
+        }
+        h
+    }
+}
+
+/// Deterministic workload weights for one layer (none for adds):
+/// delegates to the driver's shared conv generator so legacy-infer and
+/// scenario workloads use identical data.
+fn gen_weights(prng: &mut Prng, layer: &Layer) -> (Vec<Fixed16>, Vec<Fixed16>) {
+    match layer {
+        Layer::Conv { conv, groups } => gen_conv_weights(prng, conv, *groups),
+        Layer::Gemm { .. } => gen_conv_weights(prng, &layer.lowered_conv(), 1),
+        Layer::Add { .. } => (Vec::new(), Vec::new()),
+    }
+}
+
+/// Pack quantized words into zero-padded lines of `n` words.
+fn pad_words(data: &[Fixed16], lines: usize, n: usize) -> Vec<Word> {
+    let mut out: Vec<Word> = data.iter().map(|v| v.to_word()).collect();
+    out.resize(lines * n, 0);
+    out
+}
+
+/// Split a region's padded words into the per-port streams its write
+/// schedule drains (same packing the inference driver uses).
+fn split_write_data(
+    scheds: &[PortSchedule],
+    region: Region,
+    padded: &[Word],
+    n: usize,
+) -> Vec<VecDeque<Word>> {
+    scheds
+        .iter()
+        .map(|s| {
+            let mut q = VecDeque::new();
+            for run in &s.runs {
+                for a in run.base..run.end() {
+                    let off = ((a - region.base) as usize) * n;
+                    q.extend(&padded[off..off + n]);
+                }
+            }
+            q
+        })
+        .collect()
+}
+
+/// Expected words each read port gathers, from the line image.
+fn expected_per_port(
+    scheds: &[PortSchedule],
+    image: &HashMap<LineAddr, Vec<Word>>,
+    n: usize,
+) -> Vec<Vec<Word>> {
+    scheds
+        .iter()
+        .map(|s| {
+            let mut out = Vec::with_capacity(s.total_lines() * n);
+            for run in &s.runs {
+                for a in run.base..run.end() {
+                    out.extend_from_slice(&image[&a]);
+                }
+            }
+            out
+        })
+        .collect()
+}
+
+/// Precompute one tenant's full step list from its network, preloading
+/// inputs and weights into DRAM and advancing the shared line allocator.
+fn precompute_tenant(
+    spec_net: &WorkloadNet,
+    seed: u64,
+    group: PortGroup,
+    n: usize,
+    alloc: &mut LineAddr,
+    controller: &mut MemoryController,
+) -> Result<(VecDeque<ExecStep>, Vec<Fixed16>, Option<Region>)> {
+    spec_net.validate()?;
+    let mut prng = Prng::new(seed);
+    let alloc_lines = |words: usize, alloc: &mut LineAddr| -> Region {
+        let lines = words.div_ceil(n);
+        let r = Region { base: *alloc, lines };
+        *alloc += lines as u64;
+        r
+    };
+    let mut image: HashMap<LineAddr, Vec<Word>> = HashMap::new();
+    let preload = |region: Region, padded: &[Word], image: &mut HashMap<LineAddr, Vec<Word>>, controller: &mut MemoryController, to_dram: bool| {
+        for (li, a) in (region.base..region.end()).enumerate() {
+            image.insert(a, padded[li * n..(li + 1) * n].to_vec());
+        }
+        if to_dram {
+            controller.preload(
+                region.base,
+                padded.chunks(n).map(Line::from_slice),
+            );
+        }
+    };
+
+    // Network input.
+    let input_fm: Vec<Fixed16> = (0..spec_net.input_words())
+        .map(|_| Fixed16::from_f32(prng.f64() as f32 * 2.0 - 1.0))
+        .collect();
+    let input_region = alloc_lines(input_fm.len(), alloc);
+    let input_padded = pad_words(&input_fm, input_region.lines, n);
+    preload(input_region, &input_padded, &mut image, controller, true);
+
+    let mut node_fms: Vec<Vec<Fixed16>> = Vec::with_capacity(spec_net.nodes.len());
+    let mut node_regions: Vec<Region> = Vec::with_capacity(spec_net.nodes.len());
+    let mut steps = VecDeque::with_capacity(spec_net.nodes.len());
+    for (i, node) in spec_net.nodes.iter().enumerate() {
+        let src_of = |s: Src| -> (Region, &Vec<Fixed16>) {
+            match s {
+                Src::Input => (input_region, &input_fm),
+                Src::Node(j) => (node_regions[j], &node_fms[j]),
+            }
+        };
+        let (in_region, in_fm) = src_of(node.input);
+        let (weights, bias) = gen_weights(&mut prng, &node.layer);
+        // Read operands: primary + (weights | skip).
+        let mut read_regions = vec![in_region];
+        let skip_fm: Option<&Vec<Fixed16>> = match (&node.layer, node.skip) {
+            (Layer::Add { .. }, Some(s)) => {
+                let (r, fm) = src_of(s);
+                read_regions.push(r);
+                Some(fm)
+            }
+            _ => None,
+        };
+        if !weights.is_empty() {
+            let mut wdata = weights.clone();
+            wdata.extend_from_slice(&bias);
+            let r = alloc_lines(wdata.len(), alloc);
+            let padded = pad_words(&wdata, r.lines, n);
+            preload(r, &padded, &mut image, controller, true);
+            read_regions.push(r);
+        }
+        let reads = partition(&read_regions, group.read_ports);
+        // Compute the golden output.
+        let out_fm = node.layer.golden(in_fm, skip_fm.map(|v| v.as_slice()), &weights, &bias);
+        ensure!(
+            out_fm.len() == node.layer.ofmap_words(),
+            "{}: golden output size mismatch",
+            node.layer.name()
+        );
+        let ofmap_region = alloc_lines(out_fm.len(), alloc);
+        let out_padded = pad_words(&out_fm, ofmap_region.lines, n);
+        // Image only (the simulation itself must write it to DRAM).
+        preload(ofmap_region, &out_padded, &mut image, controller, false);
+        let writes = partition(&[ofmap_region], group.write_ports);
+        let write_data = split_write_data(&writes, ofmap_region, &out_padded, n);
+        let expected_ports = expected_per_port(&reads, &image, n);
+        steps.push_back(ExecStep {
+            label: node.layer.name(),
+            macs: node.layer.macs(),
+            reads,
+            writes,
+            write_data,
+            expected_ports,
+            dram_check: Some((ofmap_region, out_padded)),
+            write_seed: seed.wrapping_add(i as u64),
+        });
+        node_fms.push(out_fm);
+        node_regions.push(ofmap_region);
+    }
+    let final_region = node_regions.last().copied();
+    let final_fm = node_fms.pop().unwrap_or_default();
+    Ok((steps, final_fm, final_region))
+}
+
+/// Edge budget generous enough for any legal run; hitting it means a
+/// deadlock, which must be an error, not a hang.
+fn edge_budget(tenants: &[TenantRt], n: usize) -> u64 {
+    let mut cycles = 200_000u64;
+    for t in tenants {
+        cycles += 4 * t.start_cycle;
+        for s in &t.steps {
+            cycles += 64 * (s.read_lines() + s.write_lines() + 64) * n as u64
+                + s.macs / 32
+                + 20_000;
+        }
+    }
+    cycles.saturating_mul(8)
+}
+
+fn begin_next(sys: &mut System, t: usize, rt: &mut TenantRt) {
+    match rt.steps.pop_front() {
+        Some(step) => {
+            rt.t0_ps = sys.now_ps();
+            rt.load0 = sys.lps[t].load_cycles;
+            rt.comp0 = sys.lps[t].compute_cycles;
+            rt.drain0 = sys.lps[t].drain_cycles;
+            sys.lps[t].begin_layer(&step.reads, step.macs);
+            rt.cur = Some(step);
+            rt.state = TState::Loading;
+        }
+        None => rt.state = TState::Finished,
+    }
+}
+
+/// Advance one tenant's control state (called once per simulated edge).
+fn service(sys: &mut System, t: usize, rt: &mut TenantRt) {
+    match rt.state {
+        TState::WaitStart => {
+            if sys.fabric_cycles() >= rt.start_cycle {
+                begin_next(sys, t, rt);
+            }
+        }
+        TState::Loading => {
+            if sys.lps[t].compute_done() {
+                let cur = rt.cur.as_mut().expect("loading tenant has a current step");
+                // Verify the read path delivered exactly the preloaded
+                // tensors (transport golden check).
+                for (p, expect) in cur.expected_ports.iter().enumerate() {
+                    if !expect.is_empty() && sys.lps[t].loaded(p) != &expect[..] {
+                        rt.verified = false;
+                    }
+                }
+                let data = std::mem::take(&mut cur.write_data);
+                rt.supplied_lines += cur.write_lines();
+                let writes = std::mem::take(&mut cur.writes);
+                sys.lps[t].supply_output(&writes, data);
+                rt.cur.as_mut().unwrap().writes = writes;
+                rt.state = TState::Draining;
+            }
+        }
+        TState::Draining => {
+            if sys.lps[t].phase() == Phase::Done {
+                rt.state = TState::WaitFlush;
+            }
+        }
+        TState::WaitFlush => {
+            let g = rt.group;
+            let landed: u64 = (g.write_base..g.write_base + g.write_ports)
+                .map(|p| sys.controller().write_lines_landed(p))
+                .sum();
+            debug_assert!(landed <= rt.supplied_lines);
+            if landed == rt.supplied_lines {
+                let cur = rt.cur.take().expect("flushing tenant has a current step");
+                if let Some((region, expect)) = &cur.dram_check {
+                    let dumped = sys.controller().dump(region.base, region.lines);
+                    let mut words: Vec<Word> = Vec::with_capacity(expect.len());
+                    for l in &dumped {
+                        words.extend_from_slice(l.words());
+                    }
+                    if &words != expect {
+                        rt.verified = false;
+                    }
+                }
+                rt.report.layers.push(LayerReport {
+                    layer: cur.label,
+                    load_cycles: sys.lps[t].load_cycles - rt.load0,
+                    compute_cycles: sys.lps[t].compute_cycles - rt.comp0,
+                    drain_cycles: sys.lps[t].drain_cycles - rt.drain0,
+                    lines_read: cur.read_lines(),
+                    lines_written: cur.write_lines(),
+                    sim_time_ps: sys.now_ps() - rt.t0_ps,
+                    verified: rt.verified,
+                });
+                begin_next(sys, t, rt);
+            }
+        }
+        TState::Finished => {}
+    }
+}
+
+/// Drive every tenant to completion.
+fn drive(sys: &mut System, tenants: &mut [TenantRt]) -> Result<()> {
+    let n = sys.cfg.geometry.words_per_line();
+    let max_edges = edge_budget(tenants, n);
+    let mut edges = 0u64;
+    loop {
+        let mut all_done = true;
+        for (t, rt) in tenants.iter_mut().enumerate() {
+            service(sys, t, rt);
+            all_done &= rt.state == TState::Finished;
+        }
+        if all_done {
+            return Ok(());
+        }
+        sys.step();
+        edges += 1;
+        ensure!(
+            edges < max_edges,
+            "scenario stalled after {edges} edges (states: {:?}, stats:\n{})",
+            tenants.iter().map(|t| t.state).collect::<Vec<_>>(),
+            sys.stats
+        );
+    }
+}
+
+fn build_outcome(sc_name: &str, sys: &System, tenants: Vec<TenantRt>) -> ScenarioOutcome {
+    let mut outs = Vec::with_capacity(tenants.len());
+    for (t, rt) in tenants.into_iter().enumerate() {
+        let g = rt.group;
+        let final_dram = match rt.final_region {
+            Some(r) => sys
+                .controller()
+                .dump(r.base, r.lines)
+                .iter()
+                .flat_map(|l| l.words().to_vec())
+                .collect(),
+            None => Vec::new(),
+        };
+        outs.push(TenantOutcome {
+            network: rt.network,
+            read_waits: (0..g.read_ports).map(|p| sys.lps[t].read_wait_cycles(p)).collect(),
+            write_waits: (0..g.write_ports).map(|p| sys.lps[t].write_wait_cycles(p)).collect(),
+            verified: rt.verified && rt.report.layers.iter().all(|l| l.verified),
+            report: rt.report,
+            final_fm: rt.final_fm,
+            final_dram,
+        });
+    }
+    ScenarioOutcome {
+        scenario: sc_name.to_string(),
+        design: sys.cfg.design.name(),
+        fabric_mhz: sys.fabric_mhz,
+        fabric_cycles: sys.fabric_cycles(),
+        mem_cycles: sys.mem_cycles(),
+        now_ps: sys.now_ps(),
+        tenants: outs,
+        stats: sys.stats.clone(),
+    }
+}
+
+/// Canonical timing-entry list (non-movement counters, sample series,
+/// per-tenant per-port waits), sorted by key. ONE construction shared
+/// by capture (`snapshot_expect`) and verification (`verify_replay`) so
+/// the two key schemes can never drift apart.
+fn timing_entries(
+    stats: &crate::sim::Stats,
+    waits: &[(Vec<u64>, Vec<u64>)],
+) -> Vec<(String, u64)> {
+    let mut out: Vec<(String, u64)> = Vec::new();
+    for &id in Counter::ALL.iter() {
+        let name = id.name();
+        if !MOVEMENT_COUNTERS.contains(&name) {
+            out.push((name.to_string(), stats.count(id)));
+        }
+    }
+    for &id in SampleId::ALL.iter() {
+        let s = stats.series_of(id);
+        out.push((format!("series.{}.count", id.name()), s.count));
+        out.push((format!("series.{}.sum", id.name()), s.sum));
+    }
+    for (t, (reads, writes)) in waits.iter().enumerate() {
+        for (p, &w) in reads.iter().enumerate() {
+            out.push((format!("wait.t{t}.read.{p}"), w));
+        }
+        for (p, &w) in writes.iter().enumerate() {
+            out.push((format!("wait.t{t}.write.{p}"), w));
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Per-tenant (read waits, write waits) of a live system.
+fn system_waits(sys: &System) -> Vec<(Vec<u64>, Vec<u64>)> {
+    sys.lps
+        .iter()
+        .map(|lp| {
+            let g = lp.group();
+            (
+                (0..g.read_ports).map(|p| lp.read_wait_cycles(p)).collect(),
+                (0..g.write_ports).map(|p| lp.write_wait_cycles(p)).collect(),
+            )
+        })
+        .collect()
+}
+
+/// The trace expect block for the current system state (full timing).
+fn snapshot_expect(sys: &System) -> TraceExpect {
+    let mut exact: Vec<(String, u64)> = MOVEMENT_COUNTERS
+        .iter()
+        .map(|&name| (name.to_string(), sys.stats.get(name)))
+        .collect();
+    exact.sort();
+    TraceExpect {
+        timing_recorded: true,
+        fabric_cycles: sys.fabric_cycles(),
+        mem_cycles: sys.mem_cycles(),
+        now_ps: sys.now_ps(),
+        exact,
+        timing: timing_entries(&sys.stats, &system_waits(sys)),
+    }
+}
+
+fn build_tenants(
+    sc: &Scenario,
+    groups: &[PortGroup],
+    sys: &mut System,
+) -> Result<Vec<TenantRt>> {
+    let n = sys.cfg.geometry.words_per_line();
+    let mut alloc: LineAddr = 0;
+    let mut tenants = Vec::with_capacity(sc.tenants.len());
+    for (i, (spec, &group)) in sc.tenants.iter().zip(groups.iter()).enumerate() {
+        let (steps, final_fm, final_region) = precompute_tenant(
+            &spec.net,
+            spec.seed,
+            group,
+            n,
+            &mut alloc,
+            sys.controller_mut(),
+        )
+        .with_context(|| format!("tenant {i} ({})", spec.net.name))?;
+        tenants.push(TenantRt {
+            network: spec.net.name,
+            group,
+            start_cycle: spec.start_cycle,
+            steps,
+            state: TState::WaitStart,
+            cur: None,
+            supplied_lines: 0,
+            t0_ps: 0,
+            load0: 0,
+            comp0: 0,
+            drain0: 0,
+            report: RunReport {
+                network: spec.net.name,
+                design: sys.cfg.design.name(),
+                fabric_mhz: sys.fabric_mhz,
+                layers: Vec::new(),
+            },
+            verified: true,
+            final_fm,
+            final_region,
+        });
+    }
+    Ok(tenants)
+}
+
+/// Run a scenario end to end; every tenant's data movement is verified
+/// against the golden model (read path, DRAM content).
+pub fn run_scenario(sc: &Scenario) -> Result<ScenarioOutcome> {
+    Ok(run_inner(sc, false)?.0)
+}
+
+/// Run a scenario and capture its canonical trace (with a fully
+/// recorded expect block).
+pub fn run_scenario_captured(sc: &Scenario) -> Result<(ScenarioOutcome, ScenarioTrace)> {
+    let (out, trace) = run_inner(sc, true)?;
+    Ok((out, trace.expect("capture requested")))
+}
+
+fn run_inner(sc: &Scenario, capture: bool) -> Result<(ScenarioOutcome, Option<ScenarioTrace>)> {
+    sc.validate()?;
+    let groups = sc.groups()?;
+    let mut sys = System::new_with_groups(sc.cfg.clone(), &groups)?;
+    let mut tenants = build_tenants(sc, &groups, &mut sys)?;
+    let trace_steps: Option<Vec<TraceStep>> = capture.then(|| {
+        let mut steps = Vec::new();
+        for (t, rt) in tenants.iter().enumerate() {
+            for s in &rt.steps {
+                steps.push(TraceStep {
+                    tenant: t,
+                    label: s.label.to_string(),
+                    macs: s.macs,
+                    write_seed: s.write_seed,
+                    reads: s
+                        .reads
+                        .iter()
+                        .map(|ps| ps.runs.iter().map(|r| (r.base, r.lines as u64)).collect())
+                        .collect(),
+                    writes: s
+                        .writes
+                        .iter()
+                        .map(|ps| ps.runs.iter().map(|r| (r.base, r.lines as u64)).collect())
+                        .collect(),
+                });
+            }
+        }
+        steps
+    });
+    drive(&mut sys, &mut tenants)?;
+    let trace = trace_steps.map(|steps| ScenarioTrace {
+        header: TraceHeader {
+            scenario: sc.name.clone(),
+            design: sys.cfg.design.name().to_string(),
+            w_line: sc.cfg.geometry.w_line,
+            w_acc: sc.cfg.geometry.w_acc,
+            read_ports: sc.cfg.geometry.read_ports,
+            write_ports: sc.cfg.geometry.write_ports,
+            max_burst: sc.cfg.geometry.max_burst,
+            dotprod_units: sc.cfg.dotprod_units,
+            rotator_stages: sc.cfg.rotator_stages,
+            mem_mhz: sc.cfg.mem_clock_mhz,
+            fabric_mhz: sys.fabric_mhz,
+            ddr3_timing: sc.cfg.ddr3_timing,
+            cmd_depth: sc.cfg.channel_depths.cmd,
+            rd_line_depth: sc.cfg.channel_depths.rd_line,
+            wr_data_depth: sc.cfg.channel_depths.wr_data,
+            seed: sc.cfg.seed,
+            tenants: groups
+                .iter()
+                .zip(sc.tenants.iter())
+                .map(|(g, spec)| TraceTenant {
+                    read_base: g.read_base,
+                    read_ports: g.read_ports,
+                    write_base: g.write_base,
+                    write_ports: g.write_ports,
+                    start_cycle: spec.start_cycle,
+                })
+                .collect(),
+        },
+        steps,
+        expect: snapshot_expect(&sys),
+    });
+    let outcome = build_outcome(&sc.name, &sys, tenants);
+    Ok((outcome, trace))
+}
+
+/// Rebuild the system a trace describes.
+fn system_from_header(h: &TraceHeader) -> Result<(System, Vec<PortGroup>)> {
+    let design = Design::parse(&h.design)
+        .ok_or_else(|| anyhow::anyhow!("trace names unknown design {:?}", h.design))?;
+    let cfg = crate::config::SystemConfig {
+        design,
+        geometry: crate::types::Geometry {
+            w_line: h.w_line,
+            w_acc: h.w_acc,
+            read_ports: h.read_ports,
+            write_ports: h.write_ports,
+            max_burst: h.max_burst,
+        },
+        dotprod_units: h.dotprod_units,
+        mem_clock_mhz: h.mem_mhz,
+        fabric_clock_mhz: Some(h.fabric_mhz),
+        ddr3_timing: h.ddr3_timing,
+        rotator_stages: h.rotator_stages,
+        channel_depths: crate::config::ChannelDepths {
+            cmd: h.cmd_depth,
+            rd_line: h.rd_line_depth,
+            wr_data: h.wr_data_depth,
+        },
+        seed: h.seed,
+    };
+    let groups: Vec<PortGroup> = h
+        .tenants
+        .iter()
+        .map(|t| PortGroup {
+            read_base: t.read_base,
+            read_ports: t.read_ports,
+            write_base: t.write_base,
+            write_ports: t.write_ports,
+        })
+        .collect();
+    let sys = System::new_with_groups(cfg, &groups)?;
+    Ok((sys, groups))
+}
+
+fn sched_from_runs(runs: &[Vec<(u64, u64)>]) -> Vec<PortSchedule> {
+    runs.iter()
+        .map(|rs| PortSchedule {
+            runs: rs.iter().map(|&(base, lines)| Region { base, lines: lines as usize }).collect(),
+        })
+        .collect()
+}
+
+/// Re-drive the interconnect from a trace: no workload generation, no
+/// golden math — pure data movement with synthesized write words.
+pub fn replay(trace: &ScenarioTrace) -> Result<ScenarioOutcome> {
+    trace.validate()?;
+    let (mut sys, groups) = system_from_header(&trace.header)?;
+    let n = sys.cfg.geometry.words_per_line();
+    let mut tenants: Vec<TenantRt> = groups
+        .iter()
+        .zip(trace.header.tenants.iter())
+        .map(|(&group, ht)| TenantRt {
+            network: "replay",
+            group,
+            start_cycle: ht.start_cycle,
+            steps: VecDeque::new(),
+            state: TState::WaitStart,
+            cur: None,
+            supplied_lines: 0,
+            t0_ps: 0,
+            load0: 0,
+            comp0: 0,
+            drain0: 0,
+            report: RunReport {
+                network: "replay",
+                design: sys.cfg.design.name(),
+                fabric_mhz: sys.fabric_mhz,
+                layers: Vec::new(),
+            },
+            verified: true,
+            final_fm: Vec::new(),
+            final_region: None,
+        })
+        .collect();
+    for step in &trace.steps {
+        let reads = sched_from_runs(&step.reads);
+        let writes = sched_from_runs(&step.writes);
+        let write_data: Vec<VecDeque<Word>> = writes
+            .iter()
+            .map(|s| {
+                let mut q = VecDeque::new();
+                for run in &s.runs {
+                    for a in run.base..run.end() {
+                        for lane in 0..n as u64 {
+                            q.push_back(ScenarioTrace::synth_word(step.write_seed, a, lane));
+                        }
+                    }
+                }
+                q
+            })
+            .collect();
+        let expected_ports = vec![Vec::new(); reads.len()];
+        tenants[step.tenant].steps.push_back(ExecStep {
+            label: "replayed",
+            macs: step.macs,
+            reads,
+            writes,
+            write_data,
+            expected_ports,
+            dram_check: None,
+            write_seed: step.write_seed,
+        });
+    }
+    drive(&mut sys, &mut tenants)?;
+    Ok(build_outcome(&trace.header.scenario, &sys, tenants))
+}
+
+/// Replay `trace` and assert it reproduces the recorded expectations:
+/// every `exact` (data-movement) counter always, and — when the trace
+/// has timing recorded — the exact cycle counts, every timing counter,
+/// and the per-port wait cycles.
+pub fn verify_replay(trace: &ScenarioTrace) -> Result<ScenarioOutcome> {
+    let out = replay(trace)?;
+    for (name, want) in &trace.expect.exact {
+        let got = out.stats.get(name);
+        ensure!(
+            got == *want,
+            "replay diverged on exact counter {name}: trace says {want}, replay got {got}"
+        );
+    }
+    if trace.expect.timing_recorded {
+        ensure!(
+            out.fabric_cycles == trace.expect.fabric_cycles,
+            "replay fabric_cycles {} != recorded {}",
+            out.fabric_cycles,
+            trace.expect.fabric_cycles
+        );
+        ensure!(
+            out.mem_cycles == trace.expect.mem_cycles,
+            "replay mem_cycles {} != recorded {}",
+            out.mem_cycles,
+            trace.expect.mem_cycles
+        );
+        ensure!(
+            out.now_ps == trace.expect.now_ps,
+            "replay now_ps {} != recorded {}",
+            out.now_ps,
+            trace.expect.now_ps
+        );
+        let got = replay_timing_map(&out);
+        for (name, want) in &trace.expect.timing {
+            let g = got.get(name).copied();
+            ensure!(
+                g == Some(*want),
+                "replay diverged on timing entry {name}: trace says {want}, replay got {g:?}"
+            );
+        }
+    }
+    Ok(out)
+}
+
+/// The timing-entry map of a finished replay, keyed by the same shared
+/// `timing_entries` scheme the capture side uses.
+fn replay_timing_map(out: &ScenarioOutcome) -> std::collections::BTreeMap<String, u64> {
+    let waits: Vec<(Vec<u64>, Vec<u64>)> = out
+        .tenants
+        .iter()
+        .map(|t| (t.read_waits.clone(), t.write_waits.clone()))
+        .collect();
+    timing_entries(&out.stats, &waits).into_iter().collect()
+}

@@ -1,0 +1,367 @@
+//! Workload graphs: the generalized network representation the scenario
+//! engine executes.
+//!
+//! `accel::dnn::Network` models a straight chain of dense convolutions —
+//! enough for the paper's VGG traffic but not for the residual,
+//! depthwise, or GEMM-shaped workloads whose interconnect behaviour
+//! diverges sharply (Krishnan et al. 2021). A [`WorkloadNet`] is a
+//! topologically ordered DAG of [`Layer`]s: dense/grouped convolutions,
+//! GEMMs (lowered to 1x1 convolutions for compute), and elementwise
+//! residual adds whose second operand may skip back to any earlier
+//! node's output (or the network input).
+
+use crate::accel::dnn::ConvLayer;
+use crate::accel::golden::{add_q88, conv2d_grouped_q88, conv2d_q88};
+use crate::accel::quant::Fixed16;
+use anyhow::{ensure, Result};
+
+/// Feature-map shape, channel-major: (channels, height, width).
+pub type Shape = (usize, usize, usize);
+
+/// One workload layer. All kinds reduce to the same port traffic
+/// pattern: stream the operand tensors in, stall for the modelled
+/// compute, stream the output tensor out.
+#[derive(Clone, Debug)]
+pub enum Layer {
+    /// (Optionally grouped) 2D convolution. `groups == 1` is a dense
+    /// conv; `groups == in_c == out_c` is depthwise.
+    Conv { conv: ConvLayer, groups: usize },
+    /// Token-major GEMM: `m` tokens of `k` features -> `m` tokens of
+    /// `n` features (transformer-style projection / MLP layer).
+    /// Computed by lowering to a 1x1 convolution over a 1 x m map.
+    Gemm { name: &'static str, m: usize, k: usize, n: usize, relu: bool },
+    /// Elementwise residual add of two same-shaped feature maps.
+    Add { name: &'static str, c: usize, h: usize, w: usize, relu: bool },
+}
+
+impl Layer {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Layer::Conv { conv, .. } => conv.name,
+            Layer::Gemm { name, .. } => name,
+            Layer::Add { name, .. } => name,
+        }
+    }
+
+    /// Shape the primary input must have.
+    pub fn in_shape(&self) -> Shape {
+        match self {
+            Layer::Conv { conv, .. } => (conv.in_c, conv.in_h, conv.in_w),
+            Layer::Gemm { m, k, .. } => (*k, 1, *m),
+            Layer::Add { c, h, w, .. } => (*c, *h, *w),
+        }
+    }
+
+    pub fn out_shape(&self) -> Shape {
+        match self {
+            Layer::Conv { conv, .. } => (conv.out_c, conv.out_h(), conv.out_w()),
+            Layer::Gemm { m, n, .. } => (*n, 1, *m),
+            Layer::Add { c, h, w, .. } => (*c, *h, *w),
+        }
+    }
+
+    /// Words of the primary input tensor.
+    pub fn ifmap_words(&self) -> usize {
+        let (c, h, w) = self.in_shape();
+        c * h * w
+    }
+
+    /// Words of the output tensor.
+    pub fn ofmap_words(&self) -> usize {
+        let (c, h, w) = self.out_shape();
+        c * h * w
+    }
+
+    /// Words of weights + one bias word per output channel (0 for Add).
+    pub fn weight_words(&self) -> usize {
+        match self {
+            Layer::Conv { conv, groups } => {
+                conv.out_c * (conv.in_c / groups) * conv.k * conv.k + conv.out_c
+            }
+            Layer::Gemm { k, n, .. } => n * k + n,
+            Layer::Add { .. } => 0,
+        }
+    }
+
+    /// Modelled MAC-array work: multiply-accumulates for convs/GEMMs,
+    /// one op per element for adds.
+    pub fn macs(&self) -> u64 {
+        match self {
+            Layer::Conv { conv, groups } => {
+                (conv.out_c * conv.out_h() * conv.out_w() * (conv.in_c / groups) * conv.k * conv.k)
+                    as u64
+            }
+            Layer::Gemm { m, k, n, .. } => (m * k * n) as u64,
+            Layer::Add { c, h, w, .. } => (c * h * w) as u64,
+        }
+    }
+
+    /// Run the layer's math in the exact Q8.8 golden semantics.
+    /// `skip` is the second operand (Add only).
+    pub fn golden(&self, input: &[Fixed16], skip: Option<&[Fixed16]>, weights: &[Fixed16], bias: &[Fixed16]) -> Vec<Fixed16> {
+        match self {
+            Layer::Conv { conv, groups } => {
+                if *groups == 1 {
+                    conv2d_q88(conv, input, weights, bias)
+                } else {
+                    conv2d_grouped_q88(conv, *groups, input, weights, bias)
+                }
+            }
+            Layer::Gemm { .. } => conv2d_q88(&self.lowered_conv(), input, weights, bias),
+            Layer::Add { relu, .. } => add_q88(input, skip.expect("Add needs a skip operand"), *relu),
+        }
+    }
+
+    /// The 1x1 convolution a GEMM lowers to (panics for other kinds).
+    pub fn lowered_conv(&self) -> ConvLayer {
+        match self {
+            Layer::Gemm { name, m, k, n, relu } => ConvLayer {
+                name: *name,
+                in_c: *k,
+                in_h: 1,
+                in_w: *m,
+                out_c: *n,
+                k: 1,
+                stride: 1,
+                pad: 0,
+                relu: *relu,
+            },
+            _ => panic!("only GEMM layers lower to a conv"),
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            Layer::Conv { conv, groups } => {
+                ensure!(*groups >= 1, "{}: groups must be >= 1", conv.name);
+                ensure!(
+                    conv.in_c % groups == 0 && conv.out_c % groups == 0,
+                    "{}: groups {} must divide in_c {} and out_c {}",
+                    conv.name,
+                    groups,
+                    conv.in_c,
+                    conv.out_c
+                );
+                ensure!(conv.k >= 1 && conv.stride >= 1, "{}: degenerate kernel", conv.name);
+            }
+            Layer::Gemm { name, m, k, n, .. } => {
+                ensure!(*m >= 1 && *k >= 1 && *n >= 1, "{name}: degenerate GEMM");
+            }
+            Layer::Add { name, c, h, w, .. } => {
+                ensure!(*c >= 1 && *h >= 1 && *w >= 1, "{name}: degenerate add");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Where a node's operand comes from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Src {
+    /// The network input tensor.
+    Input,
+    /// The output of an earlier node (index into `WorkloadNet::nodes`).
+    Node(usize),
+}
+
+/// One node of the workload graph.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub layer: Layer,
+    /// Primary input source.
+    pub input: Src,
+    /// Second operand (Add layers only).
+    pub skip: Option<Src>,
+}
+
+impl Node {
+    /// A node consuming the previous node's output (or the network
+    /// input for node 0) — the plain-chain case.
+    pub fn chained(layer: Layer, index: usize) -> Node {
+        let input = if index == 0 { Src::Input } else { Src::Node(index - 1) };
+        Node { layer, input, skip: None }
+    }
+}
+
+/// A topologically ordered workload graph. The network output is the
+/// last node's output.
+#[derive(Clone, Debug)]
+pub struct WorkloadNet {
+    pub name: &'static str,
+    /// Shape of the network input tensor.
+    pub input_shape: Shape,
+    pub nodes: Vec<Node>,
+}
+
+impl WorkloadNet {
+    /// Chain of layers, each feeding the next (first from the input).
+    pub fn chain(name: &'static str, input_shape: Shape, layers: Vec<Layer>) -> WorkloadNet {
+        let nodes = layers.into_iter().enumerate().map(|(i, l)| Node::chained(l, i)).collect();
+        WorkloadNet { name, input_shape, nodes }
+    }
+
+    /// Convert a legacy dense-conv chain.
+    pub fn from_legacy(net: &crate::accel::dnn::Network) -> WorkloadNet {
+        let l0 = &net.layers[0];
+        WorkloadNet::chain(
+            net.name,
+            (l0.in_c, l0.in_h, l0.in_w),
+            net.layers.iter().map(|&conv| Layer::Conv { conv, groups: 1 }).collect(),
+        )
+    }
+
+    pub fn input_words(&self) -> usize {
+        let (c, h, w) = self.input_shape;
+        c * h * w
+    }
+
+    /// Output shape of `src` as seen by a consumer.
+    fn src_shape(&self, src: Src) -> Shape {
+        match src {
+            Src::Input => self.input_shape,
+            Src::Node(i) => self.nodes[i].layer.out_shape(),
+        }
+    }
+
+    pub fn output_shape(&self) -> Shape {
+        self.nodes.last().expect("network has nodes").layer.out_shape()
+    }
+
+    pub fn output_words(&self) -> usize {
+        let (c, h, w) = self.output_shape();
+        c * h * w
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.nodes.iter().map(|n| n.layer.macs()).sum()
+    }
+
+    /// Check topological ordering and that every edge's shapes chain.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.nodes.is_empty(), "{}: network has no nodes", self.name);
+        for (i, node) in self.nodes.iter().enumerate() {
+            node.layer.validate()?;
+            let check_src = |src: Src, what: &str| -> Result<()> {
+                if let Src::Node(j) = src {
+                    ensure!(
+                        j < i,
+                        "{}: node {} ({}) {} references node {} out of topological order",
+                        self.name,
+                        i,
+                        node.layer.name(),
+                        what,
+                        j
+                    );
+                }
+                Ok(())
+            };
+            check_src(node.input, "input")?;
+            let got = self.src_shape(node.input);
+            let want = node.layer.in_shape();
+            ensure!(
+                got == want,
+                "{}: node {} ({}) expects input {:?}, gets {:?}",
+                self.name,
+                i,
+                node.layer.name(),
+                want,
+                got
+            );
+            match (&node.layer, node.skip) {
+                (Layer::Add { .. }, Some(skip)) => {
+                    check_src(skip, "skip")?;
+                    let got = self.src_shape(skip);
+                    ensure!(
+                        got == want,
+                        "{}: node {} ({}) skip operand {:?} != {:?}",
+                        self.name,
+                        i,
+                        node.layer.name(),
+                        got,
+                        want
+                    );
+                }
+                (Layer::Add { .. }, None) => {
+                    anyhow::bail!("{}: add node {} has no skip operand", self.name, i)
+                }
+                (_, Some(_)) => {
+                    anyhow::bail!("{}: non-add node {} has a skip operand", self.name, i)
+                }
+                (_, None) => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::dnn::Network;
+
+    #[test]
+    fn legacy_conversion_chains() {
+        let net = WorkloadNet::from_legacy(&Network::tiny_vgg());
+        net.validate().unwrap();
+        assert_eq!(net.nodes.len(), 6);
+        assert_eq!(net.input_shape, (3, 32, 32));
+        assert_eq!(net.total_macs(), Network::tiny_vgg().total_macs());
+    }
+
+    #[test]
+    fn gemm_lowering_preserves_counts() {
+        let g = Layer::Gemm { name: "proj", m: 8, k: 16, n: 32, relu: true };
+        assert_eq!(g.ifmap_words(), 16 * 8);
+        assert_eq!(g.ofmap_words(), 32 * 8);
+        assert_eq!(g.weight_words(), 32 * 16 + 32);
+        assert_eq!(g.macs(), 8 * 16 * 32);
+        let c = g.lowered_conv();
+        assert_eq!(c.ifmap_words(), g.ifmap_words());
+        assert_eq!(c.ofmap_words(), g.ofmap_words());
+        assert_eq!(c.macs(), g.macs());
+    }
+
+    #[test]
+    fn depthwise_counts() {
+        let conv = ConvLayer { name: "dw", in_c: 8, in_h: 4, in_w: 4, out_c: 8, k: 3, stride: 1, pad: 1, relu: true };
+        let l = Layer::Conv { conv, groups: 8 };
+        l.validate().unwrap();
+        assert_eq!(l.weight_words(), 8 * 9 + 8);
+        assert_eq!(l.macs(), (8 * 16 * 9) as u64);
+    }
+
+    #[test]
+    fn add_without_skip_rejected() {
+        let net = WorkloadNet::chain(
+            "bad",
+            (2, 4, 4),
+            vec![Layer::Add { name: "a", c: 2, h: 4, w: 4, relu: false }],
+        );
+        assert!(net.validate().is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let conv = ConvLayer { name: "c", in_c: 3, in_h: 8, in_w: 8, out_c: 4, k: 3, stride: 1, pad: 1, relu: true };
+        let net = WorkloadNet::chain("bad", (2, 8, 8), vec![Layer::Conv { conv, groups: 1 }]);
+        assert!(net.validate().is_err());
+    }
+
+    #[test]
+    fn forward_skip_reference_rejected() {
+        let conv = ConvLayer { name: "c", in_c: 2, in_h: 4, in_w: 4, out_c: 2, k: 3, stride: 1, pad: 1, relu: true };
+        let net = WorkloadNet {
+            name: "bad",
+            input_shape: (2, 4, 4),
+            nodes: vec![
+                Node {
+                    layer: Layer::Add { name: "a", c: 2, h: 4, w: 4, relu: false },
+                    input: Src::Input,
+                    skip: Some(Src::Node(1)),
+                },
+                Node { layer: Layer::Conv { conv, groups: 1 }, input: Src::Input, skip: None },
+            ],
+        };
+        assert!(net.validate().is_err());
+    }
+}

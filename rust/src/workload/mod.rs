@@ -1,0 +1,24 @@
+//! The workload scenario subsystem.
+//!
+//! Generalizes the legacy dense-conv chains of [`crate::accel::dnn`]
+//! into a full scenario engine:
+//!
+//! * [`graph`] — workload graphs: dense/grouped convs, GEMMs, and
+//!   residual adds with skip connections;
+//! * [`zoo`] — named networks covering the traffic classes (tiny-VGG,
+//!   VGG-16 head, ResNet-style residual stack, MobileNet-style
+//!   depthwise stack, transformer-ish GEMM stack);
+//! * [`scenario`] — TOML-loadable mappings of networks onto port
+//!   groups: single-net, multi-tenant fabric sharing, staggered starts;
+//! * [`engine`] — the execution engine with golden-model verification
+//!   and deterministic trace capture/replay
+//!   (see [`crate::sim::trace`] for the trace format).
+
+pub mod engine;
+pub mod graph;
+pub mod scenario;
+pub mod zoo;
+
+pub use engine::{replay, run_scenario, run_scenario_captured, verify_replay, ScenarioOutcome};
+pub use graph::{Layer, Node, Src, WorkloadNet};
+pub use scenario::{Scenario, TenantSpec};

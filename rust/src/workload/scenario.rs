@@ -1,0 +1,459 @@
+//! Scenario descriptors: which networks run on which port groups of one
+//! simulated system.
+//!
+//! A [`Scenario`] maps one or more zoo networks ([`crate::workload::zoo`])
+//! onto the fabric: a single network owning every port, multiple tenant
+//! networks sharing the fabric on disjoint port groups, or phase-offset
+//! staggered starts (a tenant idles until a given fabric cycle). The
+//! TOML form embeds a full system config plus `[scenario]` /
+//! `[tenant.N]` sections:
+//!
+//! ```text
+//! [scenario]
+//! name = "multi-tenant-mix"
+//!
+//! [system]
+//! design = "medusa"
+//! seed = 7
+//! [geometry]
+//! w_line = 128
+//! read_ports = 8
+//! write_ports = 8
+//! ...
+//!
+//! [tenant.0]
+//! network = "resnet-tiny"   # a zoo name
+//! read_ports = 4            # this tenant's share (assigned in order)
+//! write_ports = 4
+//! start_cycle = 0           # optional phase offset (fabric cycles)
+//! seed = 11                 # optional per-tenant workload seed
+//! ```
+//!
+//! Port groups are carved sequentially: tenant 0 gets the lowest port
+//! indices, tenant 1 the next, and so on. A single tenant may omit the
+//! port counts to take the whole fabric.
+
+use crate::accel::layer_processor::PortGroup;
+use crate::config::{parse_toml_subset, SystemConfig, Value};
+use crate::workload::graph::WorkloadNet;
+use crate::workload::zoo;
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// The default per-tenant workload seed: the system seed hashed with
+/// the tenant index. THE one formula — `Scenario::single`, the file
+/// parser's default, and `Scenario::reseed` all route through here so
+/// CLI `--seed` runs, file defaults, and builtins can never drift.
+pub fn tenant_seed(system_seed: u64, idx: usize) -> u64 {
+    system_seed ^ 0xda7a ^ (idx as u64).wrapping_mul(0x9e37_79b9)
+}
+
+/// One tenant: a network, its share of the fabric ports, and its phase.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    pub net: WorkloadNet,
+    /// Read/write ports this tenant owns (0 = "all of them", only valid
+    /// for a lone tenant).
+    pub read_ports: usize,
+    pub write_ports: usize,
+    /// Fabric cycle before which the tenant stays idle (staggered
+    /// starts).
+    pub start_cycle: u64,
+    /// Workload seed (inputs + weights). Defaults to the system seed
+    /// hashed with the tenant index.
+    pub seed: u64,
+}
+
+/// A complete scenario: system config + tenant mapping.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    pub cfg: SystemConfig,
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl Scenario {
+    /// A single network owning the whole fabric of `cfg`.
+    pub fn single(name: &str, cfg: SystemConfig, net: WorkloadNet) -> Scenario {
+        let seed = tenant_seed(cfg.seed, 0);
+        Scenario {
+            name: name.to_string(),
+            tenants: vec![TenantSpec { net, read_ports: 0, write_ports: 0, start_cycle: 0, seed }],
+            cfg,
+        }
+    }
+
+    /// Load from a TOML-subset file (see module docs).
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading scenario {}", path.as_ref().display()))?;
+        Self::from_str(&text)
+            .with_context(|| format!("parsing scenario {}", path.as_ref().display()))
+    }
+
+    /// Parse from scenario text.
+    #[allow(clippy::should_implement_trait)]
+    pub fn from_str(text: &str) -> Result<Self> {
+        let raw = parse_toml_subset(text)?;
+        let mut cfg = SystemConfig::default();
+        let mut name = String::new();
+        let mut tenant_keys: BTreeMap<usize, BTreeMap<String, Value>> = BTreeMap::new();
+        for (key, value) in &raw {
+            if cfg.apply_key(key, value)? {
+                continue;
+            }
+            if key == "scenario.name" {
+                name = value.as_str()?.to_string();
+                continue;
+            }
+            if let Some(rest) = key.strip_prefix("tenant.") {
+                let (idx, field) = rest
+                    .split_once('.')
+                    .ok_or_else(|| anyhow!("malformed tenant key {key:?}"))?;
+                let idx: usize =
+                    idx.parse().map_err(|_| anyhow!("bad tenant index in {key:?}"))?;
+                tenant_keys.entry(idx).or_default().insert(field.to_string(), value.clone());
+                continue;
+            }
+            bail!("unknown scenario key {key:?}");
+        }
+        ensure!(!name.is_empty(), "scenario file must set scenario.name");
+        ensure!(!tenant_keys.is_empty(), "scenario needs at least one [tenant.N]");
+        let expected: Vec<usize> = (0..tenant_keys.len()).collect();
+        let got: Vec<usize> = tenant_keys.keys().copied().collect();
+        ensure!(got == expected, "tenant indices must be 0..N contiguous, got {got:?}");
+        let mut tenants = Vec::with_capacity(tenant_keys.len());
+        for (idx, fields) in &tenant_keys {
+            let mut net = None;
+            let mut read_ports = 0usize;
+            let mut write_ports = 0usize;
+            let mut start_cycle = 0u64;
+            let mut seed = tenant_seed(cfg.seed, *idx);
+            for (field, value) in fields {
+                match field.as_str() {
+                    "network" => {
+                        let n = value.as_str()?;
+                        net = Some(zoo::by_name(n).ok_or_else(|| {
+                            anyhow!("tenant {idx}: unknown network {n:?} (zoo: {:?})", zoo::names())
+                        })?);
+                    }
+                    "read_ports" => read_ports = value.as_usize()?,
+                    "write_ports" => write_ports = value.as_usize()?,
+                    "start_cycle" => start_cycle = value.as_usize()? as u64,
+                    "seed" => seed = value.as_usize()? as u64,
+                    other => bail!("tenant {idx}: unknown key {other:?}"),
+                }
+            }
+            let net = net.ok_or_else(|| anyhow!("tenant {idx}: missing network"))?;
+            tenants.push(TenantSpec { net, read_ports, write_ports, start_cycle, seed });
+        }
+        let sc = Scenario { name, cfg, tenants };
+        sc.validate()?;
+        Ok(sc)
+    }
+
+    /// Override the system seed and re-derive every tenant's workload
+    /// seed from it with the default formula (the CLI `--seed` path).
+    /// Explicit per-tenant seeds from a scenario file are replaced —
+    /// a reseeded scenario is a wholly new workload instance.
+    pub fn reseed(&mut self, seed: u64) {
+        self.cfg.seed = seed;
+        for (i, t) in self.tenants.iter_mut().enumerate() {
+            t.seed = tenant_seed(seed, i);
+        }
+    }
+
+    /// Carve the fabric into per-tenant port groups, in tenant order.
+    pub fn groups(&self) -> Result<Vec<PortGroup>> {
+        let geom = &self.cfg.geometry;
+        let mut out = Vec::with_capacity(self.tenants.len());
+        let (mut rcur, mut wcur) = (0usize, 0usize);
+        for (i, t) in self.tenants.iter().enumerate() {
+            let (r, w) = if t.read_ports == 0 && t.write_ports == 0 {
+                ensure!(
+                    self.tenants.len() == 1,
+                    "tenant {i}: port counts are required when sharing the fabric"
+                );
+                (geom.read_ports, geom.write_ports)
+            } else {
+                ensure!(
+                    t.read_ports >= 1 && t.write_ports >= 1,
+                    "tenant {i}: needs at least one read and one write port"
+                );
+                (t.read_ports, t.write_ports)
+            };
+            let g = PortGroup { read_base: rcur, read_ports: r, write_base: wcur, write_ports: w };
+            g.validate(geom).with_context(|| format!("tenant {i} port group"))?;
+            rcur += r;
+            wcur += w;
+            out.push(g);
+        }
+        ensure!(
+            rcur <= geom.read_ports && wcur <= geom.write_ports,
+            "tenants claim {rcur} read / {wcur} write ports; geometry has {} / {}",
+            geom.read_ports,
+            geom.write_ports
+        );
+        Ok(out)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.cfg.validate()?;
+        ensure!(!self.tenants.is_empty(), "scenario {:?} has no tenants", self.name);
+        for t in &self.tenants {
+            t.net.validate()?;
+        }
+        self.groups().map(|_| ())
+    }
+
+    /// The built-in scenario suite the evaluation matrix and the
+    /// conformance tests run: single-net, multi-tenant, and staggered.
+    pub fn builtin(name: &str) -> Option<Scenario> {
+        let small = |read_ports: usize, dpus: usize| SystemConfig {
+            geometry: crate::types::Geometry {
+                w_line: 16 * read_ports.max(8),
+                w_acc: 16,
+                read_ports: read_ports.max(8),
+                write_ports: read_ports.max(8),
+                max_burst: 8,
+            },
+            dotprod_units: dpus,
+            mem_clock_mhz: 200.0,
+            fabric_clock_mhz: Some(200.0),
+            ddr3_timing: false,
+            seed: 7,
+            ..SystemConfig::default()
+        };
+        match name {
+            "single-tiny-vgg" => Some(Scenario::single("single-tiny-vgg", small(8, 16), zoo::tiny_vgg())),
+            "multi-tenant-mix" => {
+                let cfg = small(8, 8);
+                Some(Scenario {
+                    name: "multi-tenant-mix".into(),
+                    tenants: vec![
+                        TenantSpec {
+                            net: zoo::resnet_tiny(),
+                            read_ports: 4,
+                            write_ports: 4,
+                            start_cycle: 0,
+                            seed: 11,
+                        },
+                        TenantSpec {
+                            net: zoo::mobilenet_tiny(),
+                            read_ports: 4,
+                            write_ports: 4,
+                            start_cycle: 0,
+                            seed: 13,
+                        },
+                    ],
+                    cfg,
+                })
+            }
+            "staggered-gemm" => {
+                let cfg = small(8, 8);
+                Some(Scenario {
+                    name: "staggered-gemm".into(),
+                    tenants: vec![
+                        TenantSpec {
+                            net: zoo::gemm_mlp(),
+                            read_ports: 4,
+                            write_ports: 4,
+                            start_cycle: 0,
+                            seed: 21,
+                        },
+                        TenantSpec {
+                            net: zoo::gemm_mlp(),
+                            read_ports: 4,
+                            write_ports: 4,
+                            start_cycle: 1500,
+                            seed: 22,
+                        },
+                    ],
+                    cfg,
+                })
+            }
+            _ => None,
+        }
+    }
+
+    /// Names of the built-in scenarios.
+    pub fn builtin_names() -> &'static [&'static str] {
+        &["single-tiny-vgg", "multi-tenant-mix", "staggered-gemm"]
+    }
+
+    /// The micro scenario behind the checked-in golden traces
+    /// (`rust/golden/micro_{baseline,medusa}.trace`): one tiny conv on a
+    /// 4-port / 64-bit geometry, small enough that its data-movement
+    /// counters are verifiable by hand. Regenerate the goldens with
+    /// `MEDUSA_REGEN_GOLDEN=1 cargo test -q golden_trace`.
+    pub fn golden_micro(design: crate::interconnect::Design) -> Scenario {
+        use crate::accel::dnn::ConvLayer;
+        use crate::workload::graph::{Layer, WorkloadNet};
+        let net = WorkloadNet::chain(
+            "micro-conv",
+            (2, 8, 8),
+            vec![Layer::Conv {
+                conv: ConvLayer {
+                    name: "conv1",
+                    in_c: 2,
+                    in_h: 8,
+                    in_w: 8,
+                    out_c: 4,
+                    k: 3,
+                    stride: 1,
+                    pad: 1,
+                    relu: true,
+                },
+                groups: 1,
+            }],
+        );
+        let cfg = SystemConfig {
+            design,
+            geometry: crate::types::Geometry {
+                w_line: 64,
+                w_acc: 16,
+                read_ports: 4,
+                write_ports: 4,
+                max_burst: 4,
+            },
+            dotprod_units: 4,
+            mem_clock_mhz: 200.0,
+            fabric_clock_mhz: Some(200.0),
+            ddr3_timing: false,
+            seed: 7,
+            ..SystemConfig::default()
+        };
+        Scenario {
+            name: format!("micro-{}", design.name()),
+            tenants: vec![TenantSpec { net, read_ports: 0, write_ports: 0, start_cycle: 0, seed: 5 }],
+            cfg,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interconnect::Design;
+
+    const MIX: &str = r#"
+[scenario]
+name = "mix"
+
+[system]
+design = "medusa"
+seed = 3
+
+[geometry]
+w_line = 128
+w_acc = 16
+read_ports = 8
+write_ports = 8
+max_burst = 8
+
+[clocks]
+mem_mhz = 200
+fabric_mhz = 200
+
+[memory]
+ddr3_timing = false
+
+[tenant.0]
+network = "resnet-tiny"
+read_ports = 4
+write_ports = 4
+
+[tenant.1]
+network = "mobilenet-tiny"
+read_ports = 4
+write_ports = 4
+start_cycle = 500
+seed = 99
+"#;
+
+    #[test]
+    fn parses_multi_tenant_scenario() {
+        let sc = Scenario::from_str(MIX).unwrap();
+        assert_eq!(sc.name, "mix");
+        assert_eq!(sc.cfg.design, Design::Medusa);
+        assert_eq!(sc.cfg.seed, 3);
+        assert_eq!(sc.tenants.len(), 2);
+        assert_eq!(sc.tenants[0].net.name, "resnet-tiny");
+        assert_eq!(sc.tenants[1].start_cycle, 500);
+        assert_eq!(sc.tenants[1].seed, 99);
+        let groups = sc.groups().unwrap();
+        assert_eq!(groups[0].read_base, 0);
+        assert_eq!(groups[1].read_base, 4);
+        assert_eq!(groups[1].write_base, 4);
+    }
+
+    #[test]
+    fn lone_tenant_defaults_to_full_fabric() {
+        let text = r#"
+[scenario]
+name = "solo"
+[geometry]
+w_line = 128
+read_ports = 8
+write_ports = 8
+[clocks]
+fabric_mhz = 200
+[memory]
+ddr3_timing = false
+[tenant.0]
+network = "gemm-mlp"
+"#;
+        let sc = Scenario::from_str(text).unwrap();
+        let g = sc.groups().unwrap();
+        assert_eq!(g.len(), 1);
+        assert_eq!(g[0].read_ports, 8);
+        assert_eq!(g[0].write_ports, 8);
+    }
+
+    #[test]
+    fn oversubscribed_ports_rejected() {
+        let text = MIX.replace("read_ports = 4\nwrite_ports = 4\nstart_cycle", "read_ports = 6\nwrite_ports = 6\nstart_cycle");
+        assert!(Scenario::from_str(&text).is_err());
+    }
+
+    #[test]
+    fn unknown_network_rejected() {
+        let text = MIX.replace("mobilenet-tiny", "imaginary-net");
+        let err = Scenario::from_str(&text).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown network"));
+    }
+
+    #[test]
+    fn missing_name_rejected() {
+        let text = MIX.replace("name = \"mix\"", "");
+        assert!(Scenario::from_str(&text).is_err());
+    }
+
+    #[test]
+    fn noncontiguous_tenant_indices_rejected() {
+        let text = MIX.replace("[tenant.1]", "[tenant.2]");
+        assert!(Scenario::from_str(&text).is_err());
+    }
+
+    #[test]
+    fn reseed_rederives_tenant_seeds() {
+        let mut sc = Scenario::from_str(MIX).unwrap();
+        assert_eq!(sc.tenants[1].seed, 99);
+        sc.reseed(123);
+        assert_eq!(sc.cfg.seed, 123);
+        assert_eq!(sc.tenants[0].seed, 123 ^ 0xda7a);
+        assert_ne!(sc.tenants[1].seed, 99, "explicit seeds must be re-derived");
+        assert_ne!(sc.tenants[0].seed, sc.tenants[1].seed);
+    }
+
+    #[test]
+    fn builtins_validate() {
+        for name in Scenario::builtin_names() {
+            let sc = Scenario::builtin(name).unwrap();
+            sc.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(&sc.name, name);
+        }
+        assert!(Scenario::builtin("nope").is_none());
+    }
+}

@@ -1,0 +1,208 @@
+//! The network zoo: named workload graphs covering the traffic classes
+//! whose interconnect behaviour diverges (dense conv chains, residual
+//! stacks with downsample skips, depthwise+pointwise stacks, GEMM-heavy
+//! transformer-style layers).
+//!
+//! Every zoo entry is sized so a full end-to-end run through the
+//! cycle-accurate interconnect — golden math included — finishes in
+//! test time; `vgg16-head` keeps VGG-16's head *structure* (3x3 convs,
+//! channel doubling at the downsample) at a reduced input/width. The
+//! paper-scale `accel::dnn::Network::vgg16_head` remains available for
+//! bandwidth-realistic benchmarks.
+
+use crate::accel::dnn::{ConvLayer, Network};
+use crate::workload::graph::{Layer, Node, Src, WorkloadNet};
+
+fn conv(name: &'static str, in_c: usize, in_hw: usize, out_c: usize, stride: usize) -> Layer {
+    Layer::Conv {
+        conv: ConvLayer {
+            name,
+            in_c,
+            in_h: in_hw,
+            in_w: in_hw,
+            out_c,
+            k: 3,
+            stride,
+            pad: 1,
+            relu: true,
+        },
+        groups: 1,
+    }
+}
+
+/// The legacy tiny-VGG chain, as a workload graph.
+pub fn tiny_vgg() -> WorkloadNet {
+    WorkloadNet::from_legacy(&Network::tiny_vgg())
+}
+
+/// VGG-16 head structure (conv1_1, conv1_2, downsample, conv2_1) with
+/// the characteristic channel doubling, test-scaled to 28x28 / 16ch.
+pub fn vgg16_head() -> WorkloadNet {
+    WorkloadNet::chain(
+        "vgg16-head",
+        (3, 28, 28),
+        vec![
+            conv("conv1_1", 3, 28, 16, 1),
+            conv("conv1_2", 16, 28, 16, 1),
+            // Stride-2 conv stands in for the 2x2 pool, doubling channels
+            // as VGG does across the pool boundary.
+            conv("down1", 16, 28, 32, 2),
+            conv("conv2_1", 32, 14, 32, 1),
+        ],
+    )
+}
+
+/// ResNet-style residual stack: an identity block, then a downsample
+/// block whose skip path is a strided 1x1 projection.
+pub fn resnet_tiny() -> WorkloadNet {
+    let mut nodes = Vec::new();
+    // Identity block on (8, 16, 16).
+    nodes.push(Node {
+        layer: conv("b1_conv1", 8, 16, 8, 1),
+        input: Src::Input,
+        skip: None,
+    });
+    nodes.push(Node {
+        layer: Layer::Conv {
+            conv: ConvLayer { name: "b1_conv2", in_c: 8, in_h: 16, in_w: 16, out_c: 8, k: 3, stride: 1, pad: 1, relu: false },
+            groups: 1,
+        },
+        input: Src::Node(0),
+        skip: None,
+    });
+    nodes.push(Node {
+        layer: Layer::Add { name: "b1_add", c: 8, h: 16, w: 16, relu: true },
+        input: Src::Node(1),
+        skip: Some(Src::Input),
+    });
+    // Downsample block to (16, 8, 8) with a projection skip.
+    nodes.push(Node {
+        layer: conv("b2_conv1", 8, 16, 16, 2),
+        input: Src::Node(2),
+        skip: None,
+    });
+    nodes.push(Node {
+        layer: Layer::Conv {
+            conv: ConvLayer { name: "b2_conv2", in_c: 16, in_h: 8, in_w: 8, out_c: 16, k: 3, stride: 1, pad: 1, relu: false },
+            groups: 1,
+        },
+        input: Src::Node(3),
+        skip: None,
+    });
+    nodes.push(Node {
+        layer: Layer::Conv {
+            conv: ConvLayer { name: "b2_proj", in_c: 8, in_h: 16, in_w: 16, out_c: 16, k: 1, stride: 2, pad: 0, relu: false },
+            groups: 1,
+        },
+        input: Src::Node(2),
+        skip: None,
+    });
+    nodes.push(Node {
+        layer: Layer::Add { name: "b2_add", c: 16, h: 8, w: 8, relu: true },
+        input: Src::Node(4),
+        skip: Some(Src::Node(5)),
+    });
+    WorkloadNet { name: "resnet-tiny", input_shape: (8, 16, 16), nodes }
+}
+
+/// MobileNet-style stack: a dense stem, then depthwise + pointwise
+/// pairs (the second pair downsampling).
+pub fn mobilenet_tiny() -> WorkloadNet {
+    let dw = |name: &'static str, c: usize, hw: usize, stride: usize| Layer::Conv {
+        conv: ConvLayer { name, in_c: c, in_h: hw, in_w: hw, out_c: c, k: 3, stride, pad: 1, relu: true },
+        groups: c,
+    };
+    let pw = |name: &'static str, in_c: usize, hw: usize, out_c: usize| Layer::Conv {
+        conv: ConvLayer { name, in_c, in_h: hw, in_w: hw, out_c, k: 1, stride: 1, pad: 0, relu: true },
+        groups: 1,
+    };
+    WorkloadNet::chain(
+        "mobilenet-tiny",
+        (4, 16, 16),
+        vec![
+            conv("stem", 4, 16, 8, 1),
+            dw("dw1", 8, 16, 1),
+            pw("pw1", 8, 16, 16),
+            dw("dw2", 16, 16, 2),
+            pw("pw2", 16, 8, 32),
+        ],
+    )
+}
+
+/// Transformer-ish GEMM stack: token-major projection + MLP layers
+/// (32-feature tokens, expand to 64, contract to 32).
+pub fn gemm_mlp() -> WorkloadNet {
+    WorkloadNet::chain(
+        "gemm-mlp",
+        (32, 1, 16),
+        vec![
+            Layer::Gemm { name: "qkv_proj", m: 16, k: 32, n: 64, relu: true },
+            Layer::Gemm { name: "mlp_up", m: 16, k: 64, n: 64, relu: true },
+            Layer::Gemm { name: "mlp_down", m: 16, k: 64, n: 32, relu: false },
+        ],
+    )
+}
+
+/// Every zoo network name, in registry order.
+pub fn names() -> &'static [&'static str] {
+    &["tiny-vgg", "vgg16-head", "resnet-tiny", "mobilenet-tiny", "gemm-mlp"]
+}
+
+/// Look a zoo network up by its registry name.
+pub fn by_name(name: &str) -> Option<WorkloadNet> {
+    match name {
+        "tiny-vgg" => Some(tiny_vgg()),
+        "vgg16-head" => Some(vgg16_head()),
+        "resnet-tiny" => Some(resnet_tiny()),
+        "mobilenet-tiny" => Some(mobilenet_tiny()),
+        "gemm-mlp" => Some(gemm_mlp()),
+        _ => None,
+    }
+}
+
+/// All zoo networks.
+pub fn all() -> Vec<WorkloadNet> {
+    names().iter().map(|n| by_name(n).unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_zoo_network_validates() {
+        for net in all() {
+            net.validate().unwrap_or_else(|e| panic!("{}: {e}", net.name));
+            assert!(net.total_macs() > 0, "{}", net.name);
+        }
+    }
+
+    #[test]
+    fn registry_is_consistent() {
+        assert_eq!(names().len(), all().len());
+        for (n, net) in names().iter().zip(all()) {
+            assert_eq!(*n, net.name);
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn resnet_has_skips_and_mobilenet_has_depthwise() {
+        let r = resnet_tiny();
+        assert!(r.nodes.iter().any(|n| n.skip.is_some()));
+        let m = mobilenet_tiny();
+        assert!(m
+            .nodes
+            .iter()
+            .any(|n| matches!(n.layer, Layer::Conv { groups, .. } if groups > 1)));
+        let g = gemm_mlp();
+        assert!(g.nodes.iter().all(|n| matches!(n.layer, Layer::Gemm { .. })));
+    }
+
+    #[test]
+    fn vgg_head_doubles_channels_at_downsample() {
+        let v = vgg16_head();
+        assert_eq!(v.nodes[1].layer.out_shape().0 * 2, v.nodes[2].layer.out_shape().0);
+        assert_eq!(v.output_shape(), (32, 14, 14));
+    }
+}

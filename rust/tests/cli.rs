@@ -103,3 +103,47 @@ fn info_reports_environment() {
     assert!(stdout.contains("device model"));
     assert!(stdout.contains("PJRT"));
 }
+
+#[test]
+fn run_builtin_scenario_verifies() {
+    let (ok, stdout, stderr) = medusa(&["run", "--scenario", "multi-tenant-mix"]);
+    assert!(ok, "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("resnet-tiny"));
+    assert!(stdout.contains("mobilenet-tiny"));
+    assert!(stdout.contains("all tenants verified"));
+}
+
+#[test]
+fn run_scenario_file_capture_and_replay_roundtrip() {
+    let dir = std::env::temp_dir().join(format!("medusa_cli_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("mix.trace");
+    let trace_s = trace.to_str().unwrap();
+    let (ok, stdout, stderr) = medusa(&[
+        "run",
+        "--scenario",
+        "configs/scenarios/multi_tenant_mix.toml",
+        "--capture",
+        trace_s,
+    ]);
+    assert!(ok, "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(trace.exists(), "capture must write the trace file");
+    let (ok, stdout, stderr) = medusa(&["replay", trace_s]);
+    assert!(ok, "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("exact + timing expectations reproduced"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn run_unknown_scenario_fails() {
+    let (ok, _, stderr) = medusa(&["run", "--scenario", "no-such-scenario.toml"]);
+    assert!(!ok);
+    assert!(stderr.contains("error"), "{stderr}");
+}
+
+#[test]
+fn replay_golden_trace_checks_movement_counters() {
+    let (ok, stdout, stderr) = medusa(&["replay", "golden/micro_medusa.trace"]);
+    assert!(ok, "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("reproduced"), "{stdout}");
+}
