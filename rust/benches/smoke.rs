@@ -1,9 +1,11 @@
 //! Smoke benchmark: a short fig6 sweep plus the simulation-core
 //! throughput number (simulated fabric cycles per wall-second on the
-//! paper-default geometry), written to `BENCH_PR1.json`, and the
+//! paper-default geometry), written to `BENCH_PR1.json`, the
 //! scenario-engine numbers (per-scenario wall time, capture overhead,
-//! replay speedup) written to `BENCH_PR3.json` — the perf trajectory
-//! future PRs compare against.
+//! replay speedup) written to `BENCH_PR3.json`, and the design-space
+//! explorer numbers (smoke-grid sweep seq vs parallel, cold vs warm
+//! cache) written to `BENCH_PR4.json` — the perf trajectory future PRs
+//! compare against.
 //!
 //! Run with `cargo bench --bench smoke` (set `MEDUSA_BENCH_SAMPLES=1`
 //! for the quickest run). The fig6 sweep runs twice — sequentially
@@ -185,4 +187,64 @@ fn main() {
     j.push_str("}\n");
     std::fs::write(&pr3_path, &j).expect("writing BENCH_PR3.json");
     println!("wrote {pr3_path}");
+
+    // --- 5. PR 4: design-space explorer on the smoke grid — sequential
+    // vs parallel (bit-identical), then cold vs warm cache (also
+    // bit-identical; the warm run must be pure cache reads).
+    use medusa::explore::{run_search, DesignSpace, ExploreCache, Strategy};
+    let space = DesignSpace::smoke();
+    let t0 = Instant::now();
+    let seq = run_search(&space, &Strategy::Grid, 1, 1, None).expect("sequential explore");
+    let seq_secs = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let par = run_search(
+        &space,
+        &Strategy::Grid,
+        1,
+        medusa::util::parallel::max_threads(),
+        None,
+    )
+    .expect("parallel explore");
+    let par_secs = t0.elapsed().as_secs_f64();
+    let identical = seq.evaluated == par.evaluated && seq.frontier.len() == par.frontier.len();
+    assert!(identical, "parallel explore sweep diverged from sequential run");
+    println!(
+        "explore smoke grid: sequential {seq_secs:.4}s, parallel {par_secs:.4}s ({:.2}x), results identical",
+        seq_secs / par_secs.max(1e-12)
+    );
+    let cache_path = std::env::temp_dir().join(format!("medusa-bench-explore-{}.cache", std::process::id()));
+    let _ = std::fs::remove_file(&cache_path);
+    let mut cache = ExploreCache::open(&cache_path);
+    let t0 = Instant::now();
+    let cold = run_search(&space, &Strategy::Grid, 1, medusa::util::parallel::max_threads(), Some(&mut cache))
+        .expect("cold explore");
+    let cold_secs = t0.elapsed().as_secs_f64();
+    let mut cache = ExploreCache::open(&cache_path);
+    let t0 = Instant::now();
+    let warm = run_search(&space, &Strategy::Grid, 1, medusa::util::parallel::max_threads(), Some(&mut cache))
+        .expect("warm explore");
+    let warm_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(cold.evaluated, warm.evaluated, "warm cache diverged from cold run");
+    assert_eq!(warm.cache_hits, warm.evaluated.len(), "warm run must be pure cache hits");
+    let _ = std::fs::remove_file(&cache_path);
+    println!(
+        "explore cache: cold {cold_secs:.4}s, warm {warm_secs:.4}s ({:.2}x incremental speedup)",
+        cold_secs / warm_secs.max(1e-12)
+    );
+    let extras = [
+        ("smoke_sequential_s", json_f(seq_secs)),
+        ("smoke_parallel_s", json_f(par_secs)),
+        ("smoke_parallel_speedup", json_f(seq_secs / par_secs.max(1e-12))),
+        ("results_identical", identical.to_string()),
+        ("cache_cold_s", json_f(cold_secs)),
+        ("cache_warm_s", json_f(warm_secs)),
+        ("cache_speedup", json_f(cold_secs / warm_secs.max(1e-12))),
+    ];
+    let pr4_path = format!("{json_dir}/BENCH_PR4.json");
+    std::fs::write(
+        &pr4_path,
+        medusa::eval::explore::bench_json(&seq, &space, "grid-smoke", &extras),
+    )
+    .expect("writing BENCH_PR4.json");
+    println!("wrote {pr4_path}");
 }

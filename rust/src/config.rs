@@ -93,6 +93,10 @@ impl SystemConfig {
     pub fn validate(&self) -> Result<()> {
         self.geometry.validate()?;
         self.channel_depths.validate()?;
+        if let Design::Hybrid(hc) = self.design {
+            hc.validate(&self.geometry)
+                .with_context(|| format!("hybrid design {:?} on this geometry", hc))?;
+        }
         anyhow::ensure!(self.dotprod_units >= 1, "need at least one dot-product unit");
         anyhow::ensure!(self.mem_clock_mhz > 0.0, "mem clock must be positive");
         if let Some(f) = self.fabric_clock_mhz {
@@ -336,6 +340,24 @@ ddr3_timing = true
         assert_eq!(cfg.geometry.w_line, 512);
         assert_eq!(cfg.dotprod_units, 64);
         assert_eq!(cfg.channel_depths, ChannelDepths::default());
+    }
+
+    #[test]
+    fn hybrid_design_parses_and_validates_against_geometry() {
+        use crate::interconnect::hybrid::HybridConfig;
+        let text = "[system]\ndesign = \"hybrid:r8:s2\"\n[geometry]\nw_line = 512\n";
+        let cfg = SystemConfig::from_str(text).unwrap();
+        assert_eq!(
+            cfg.design,
+            Design::Hybrid(HybridConfig {
+                transpose_radix: 8,
+                stage_pipelining: 2,
+                port_group_width: 1
+            })
+        );
+        // Radix above W_line/W_acc fails validation with the geometry.
+        let bad = "[system]\ndesign = \"hybrid:r64\"\n[geometry]\nw_line = 512\n";
+        assert!(SystemConfig::from_str(bad).is_err());
     }
 
     #[test]

@@ -1,0 +1,161 @@
+//! Rendering for the design-space explorer (`medusa explore`): the
+//! Pareto-frontier table, the full evaluated-set CSV, and the
+//! BENCH_PR4.json trajectory record. EXPERIMENTS.md documents how these
+//! outputs relate to the paper's two-point comparison.
+
+use crate::eval::report::Table;
+use crate::explore::{DesignSpace, SearchResult};
+
+fn point_row(
+    p: &crate::explore::ExplorePoint,
+    m: &crate::explore::Metrics,
+    on_frontier: bool,
+) -> Vec<String> {
+    vec![
+        p.design.spec(),
+        format!("{}", p.geometry.w_line),
+        format!("{}", p.geometry.read_ports),
+        format!("{}", p.channel_depth),
+        m.resources.lut.to_string(),
+        m.resources.ff.to_string(),
+        m.resources.bram18.to_string(),
+        if m.feasible() { m.fmax_mhz.to_string() } else { "FAIL".to_string() },
+        if m.feasible() { format!("{:.2}", m.gbps()) } else { "-".to_string() },
+        if on_frontier { "*".to_string() } else { "".to_string() },
+    ]
+}
+
+const HEADER: &[&str] = &[
+    "design", "iface", "ports", "depth", "LUT", "FF", "BRAM18", "Fmax MHz", "Gbit/s", "pareto",
+];
+
+/// The Pareto frontier as a table.
+pub fn frontier_table(result: &SearchResult) -> Table {
+    let mut t = Table::new(
+        "Design-space explorer — Pareto frontier over {LUT, FF, Fmax, bandwidth}",
+        HEADER,
+    );
+    for e in &result.frontier {
+        t.row(point_row(&e.point, &e.metrics, true));
+    }
+    t
+}
+
+/// Every evaluated point (canonical grid order) with frontier markers.
+pub fn full_table(result: &SearchResult) -> Table {
+    let mut t = Table::new("Design-space explorer — evaluated points", HEADER);
+    let on_frontier: Vec<bool> = {
+        let mut v = vec![false; result.evaluated.len()];
+        for e in &result.frontier {
+            v[e.index] = true;
+        }
+        v
+    };
+    for ((p, m), f) in result.evaluated.iter().zip(on_frontier) {
+        t.row(point_row(p, m, f));
+    }
+    t
+}
+
+/// One-line human summary.
+pub fn summary_line(result: &SearchResult, space: &DesignSpace, strategy: &str) -> String {
+    format!(
+        "explore[{strategy}] probe={}: {} points evaluated ({} computed, {} cache hits), \
+         {} feasible, frontier size {}",
+        space.probe,
+        result.evaluated.len(),
+        result.computed,
+        result.cache_hits,
+        result.evaluated.iter().filter(|(_, m)| m.feasible()).count(),
+        result.frontier.len(),
+    )
+}
+
+/// The BENCH_PR4.json document. `extras` appends pre-rendered JSON
+/// fields (the smoke benchmark's timing measurements); each entry is
+/// `(key, raw_json_value)`.
+pub fn bench_json(
+    result: &SearchResult,
+    space: &DesignSpace,
+    strategy: &str,
+    extras: &[(&str, String)],
+) -> String {
+    let mut j = String::from("{\n");
+    j.push_str("  \"bench\": \"explore_pr4\",\n");
+    j.push_str(&format!("  \"strategy\": \"{strategy}\",\n"));
+    j.push_str(&format!("  \"probe\": \"{}\",\n", space.probe));
+    j.push_str(&format!("  \"points_evaluated\": {},\n", result.evaluated.len()));
+    j.push_str(&format!("  \"points_computed\": {},\n", result.computed));
+    j.push_str(&format!("  \"cache_hits\": {},\n", result.cache_hits));
+    for (k, v) in extras {
+        j.push_str(&format!("  \"{k}\": {v},\n"));
+    }
+    j.push_str("  \"frontier\": [\n");
+    for (i, e) in result.frontier.iter().enumerate() {
+        j.push_str(&format!(
+            "    {{\"design\": \"{}\", \"w_line\": {}, \"ports\": {}, \"channel_depth\": {}, \
+             \"lut\": {}, \"ff\": {}, \"bram18\": {}, \"fmax_mhz\": {}, \"gbps\": {:.4}}}{}\n",
+            e.point.design.spec(),
+            e.point.geometry.w_line,
+            e.point.geometry.read_ports,
+            e.point.channel_depth,
+            e.metrics.resources.lut,
+            e.metrics.resources.ff,
+            e.metrics.resources.bram18,
+            e.metrics.fmax_mhz,
+            e.metrics.gbps(),
+            if i + 1 < result.frontier.len() { "," } else { "" }
+        ));
+    }
+    j.push_str("  ]\n}\n");
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::{run_search, Strategy};
+
+    fn smoke_result() -> (SearchResult, DesignSpace) {
+        let space = DesignSpace::smoke();
+        let r = run_search(&space, &Strategy::Grid, 1, 2, None).unwrap();
+        (r, space)
+    }
+
+    #[test]
+    fn tables_and_json_render() {
+        let (r, space) = smoke_result();
+        let ft = frontier_table(&r);
+        assert_eq!(ft.rows.len(), r.frontier.len());
+        assert!(ft.to_text().contains("Pareto"));
+        let full = full_table(&r);
+        assert_eq!(full.rows.len(), r.evaluated.len());
+        assert_eq!(
+            full.rows.iter().filter(|row| row.last().unwrap() == "*").count(),
+            r.frontier.len()
+        );
+        let csv = full.to_csv();
+        assert!(csv.lines().count() > r.evaluated.len());
+        let j = bench_json(&r, &space, "grid", &[("elapsed_s", "1.5".to_string())]);
+        assert!(j.contains("\"bench\": \"explore_pr4\""));
+        assert!(j.contains("\"elapsed_s\": 1.5"));
+        assert!(j.contains("\"frontier\""));
+        let line = summary_line(&r, &space, "grid");
+        assert!(line.contains("frontier size"));
+    }
+
+    #[test]
+    fn frontier_contains_medusa_like_points_on_smoke_grid() {
+        // On small geometries the baseline is competitive (Fig 6's
+        // left region), so the frontier should contain more than one
+        // design family — the whole reason the explorer exists.
+        let (r, _) = smoke_result();
+        assert!(r.frontier.len() >= 2, "degenerate frontier: {:?}", r.frontier.len());
+        let specs: Vec<String> = r.frontier.iter().map(|e| e.point.design.spec()).collect();
+        let families: std::collections::BTreeSet<&str> = specs
+            .iter()
+            .map(|s| s.split(':').next().unwrap())
+            .collect();
+        assert!(families.len() >= 2, "frontier collapsed to one family: {specs:?}");
+    }
+}

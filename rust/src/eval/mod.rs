@@ -1,8 +1,10 @@
 //! Evaluation harness: regenerates every table and figure of the paper's
-//! evaluation section (§IV). Each submodule produces the same rows /
-//! series the paper reports; `report` renders them as aligned text and
-//! CSV. EXPERIMENTS.md records paper-vs-measured for each cell.
+//! evaluation section (§IV), plus the design-space explorer output that
+//! goes beyond it. Each submodule produces the same rows / series the
+//! paper reports; `report` renders them as aligned text and CSV.
+//! EXPERIMENTS.md (repo root) records paper-vs-measured for each cell.
 
+pub mod explore;
 pub mod fig6;
 pub mod report;
 pub mod scenarios;

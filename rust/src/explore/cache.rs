@@ -1,0 +1,254 @@
+//! On-disk result cache for design-space sweeps.
+//!
+//! Keyed by a stable FNV-1a hash of a design point's full identity (the
+//! parseable design spec, every geometry field, the layer-processor
+//! size, the channel depths, the probe network, and a format/version
+//! tag that invalidates entries whenever the models change). Values are
+//! the exact integer [`Metrics`], so a warm sweep reproduces a cold one
+//! bit-for-bit — the incremental-sweep correctness contract, locked by
+//! `tests/explore_conformance.rs`.
+//!
+//! The format is one line per entry, written sorted by key, so cache
+//! files are deterministic, diffable, and trivially inspectable:
+//!
+//! ```text
+//! medusa-explore-cache v3
+//! <key:016x> <lut> <ff> <bram18> <dsp> <fmax> <lines> <bits> <ps> <cycles> <verified>
+//! ```
+//!
+//! Unreadable or version-mismatched files are treated as empty (a cache
+//! must never be able to wedge a sweep), and saving rewrites the whole
+//! file atomically-enough (write + rename is overkill here: the cache is
+//! a pure accelerator whose loss costs only recomputation).
+
+use crate::explore::space::{ExplorePoint, Metrics};
+use crate::fpga::Resources;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Bump on any change to the resource/timing models, the probe scenario
+/// semantics, or the entry layout — stale entries must never be served.
+pub const CACHE_VERSION: u64 = 3;
+
+const HEADER: &str = "medusa-explore-cache v3";
+
+/// Stable identity hash of one (point, probe) evaluation.
+pub fn point_key(point: &ExplorePoint, probe: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    };
+    mix(CACHE_VERSION);
+    for b in point.design.spec().bytes() {
+        mix(b as u64);
+    }
+    mix(point.geometry.w_line as u64);
+    mix(point.geometry.w_acc as u64);
+    mix(point.geometry.read_ports as u64);
+    mix(point.geometry.write_ports as u64);
+    mix(point.geometry.max_burst as u64);
+    mix(point.dpus as u64);
+    mix(point.channel_depth as u64);
+    for b in probe.bytes() {
+        mix(b as u64);
+    }
+    h
+}
+
+pub struct ExploreCache {
+    path: PathBuf,
+    map: BTreeMap<u64, Metrics>,
+    dirty: bool,
+}
+
+impl ExploreCache {
+    /// Open a cache file; missing, unreadable, or version-mismatched
+    /// files yield an empty cache at that path.
+    pub fn open(path: impl AsRef<Path>) -> Self {
+        let path = path.as_ref().to_path_buf();
+        let map = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|text| parse(&text))
+            .unwrap_or_default();
+        ExploreCache { path, map, dirty: false }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn get(&self, key: u64) -> Option<Metrics> {
+        self.map.get(&key).copied()
+    }
+
+    pub fn insert(&mut self, key: u64, m: Metrics) {
+        if self.map.insert(key, m) != Some(m) {
+            self.dirty = true;
+        }
+    }
+
+    /// Persist if anything changed since open/last save.
+    pub fn save(&mut self) -> Result<()> {
+        if !self.dirty {
+            return Ok(());
+        }
+        let mut out = String::with_capacity(64 * (self.map.len() + 1));
+        out.push_str(HEADER);
+        out.push('\n');
+        for (key, m) in &self.map {
+            out.push_str(&format!(
+                "{key:016x} {} {} {} {} {} {} {} {} {} {}\n",
+                m.resources.lut,
+                m.resources.ff,
+                m.resources.bram18,
+                m.resources.dsp,
+                m.fmax_mhz,
+                m.lines_moved,
+                m.bits_moved,
+                m.sim_ps,
+                m.fabric_cycles,
+                u64::from(m.verified),
+            ));
+        }
+        if let Some(dir) = self.path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating cache dir {}", dir.display()))?;
+            }
+        }
+        std::fs::write(&self.path, out)
+            .with_context(|| format!("writing explore cache {}", self.path.display()))?;
+        self.dirty = false;
+        Ok(())
+    }
+}
+
+fn parse(text: &str) -> Option<BTreeMap<u64, Metrics>> {
+    let mut lines = text.lines();
+    if lines.next()? != HEADER {
+        return None;
+    }
+    let mut map = BTreeMap::new();
+    for line in lines {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let f: Vec<&str> = line.split_ascii_whitespace().collect();
+        if f.len() != 11 {
+            return None;
+        }
+        let key = u64::from_str_radix(f[0], 16).ok()?;
+        let num = |i: usize| f[i].parse::<u64>().ok();
+        map.insert(
+            key,
+            Metrics {
+                resources: Resources {
+                    lut: num(1)?,
+                    ff: num(2)?,
+                    bram18: num(3)?,
+                    dsp: num(4)?,
+                },
+                fmax_mhz: num(5)? as u32,
+                lines_moved: num(6)?,
+                bits_moved: num(7)?,
+                sim_ps: num(8)?,
+                fabric_cycles: num(9)?,
+                verified: num(10)? != 0,
+            },
+        );
+    }
+    Some(map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::space::DesignSpace;
+
+    fn sample_metrics() -> Metrics {
+        Metrics {
+            resources: Resources { lut: 1234, ff: 5678, bram18: 9, dsp: 512 },
+            fmax_mhz: 225,
+            lines_moved: 1000,
+            bits_moved: 128_000,
+            sim_ps: 7_777_777,
+            fabric_cycles: 4321,
+            verified: true,
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("medusa-cache-test-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn round_trips_entries_exactly() {
+        let path = tmp("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let mut c = ExploreCache::open(&path);
+        assert!(c.is_empty());
+        c.insert(42, sample_metrics());
+        c.insert(7, Metrics { verified: false, fmax_mhz: 0, ..sample_metrics() });
+        c.save().unwrap();
+        let c2 = ExploreCache::open(&path);
+        assert_eq!(c2.len(), 2);
+        assert_eq!(c2.get(42), Some(sample_metrics()));
+        assert_eq!(c2.get(7).unwrap().fmax_mhz, 0);
+        assert_eq!(c2.get(99), None);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn corrupt_or_foreign_files_read_as_empty() {
+        let path = tmp("corrupt");
+        std::fs::write(&path, "not a cache\n123 nonsense\n").unwrap();
+        assert!(ExploreCache::open(&path).is_empty());
+        std::fs::write(&path, format!("{HEADER}\nzzzz bad line\n")).unwrap();
+        assert!(ExploreCache::open(&path).is_empty());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn save_is_idempotent_and_deterministic() {
+        let path = tmp("determ");
+        let _ = std::fs::remove_file(&path);
+        let mut c = ExploreCache::open(&path);
+        c.insert(3, sample_metrics());
+        c.insert(1, sample_metrics());
+        c.save().unwrap();
+        let first = std::fs::read_to_string(&path).unwrap();
+        // Re-inserting identical values does not dirty the cache.
+        c.insert(3, sample_metrics());
+        c.save().unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), first);
+        // Sorted by key regardless of insertion order.
+        let keys: Vec<&str> =
+            first.lines().skip(1).map(|l| l.split_whitespace().next().unwrap()).collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn keys_distinguish_every_grid_point() {
+        let pts = DesignSpace::default_grid().points();
+        let mut keys: Vec<u64> = pts.iter().map(|p| point_key(p, "gemm-mlp")).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), pts.len(), "cache keys must be collision-free on the grid");
+        // The probe participates in the key.
+        assert_ne!(point_key(&pts[0], "gemm-mlp"), point_key(&pts[0], "tiny-vgg"));
+    }
+}

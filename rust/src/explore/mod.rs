@@ -1,0 +1,37 @@
+//! Design-space exploration: search the hybrid interconnect family (and
+//! its baseline/Medusa endpoints) for Pareto-efficient design points.
+//!
+//! The paper's evaluation compares exactly two designs at a handful of
+//! geometries; its own complexity analysis (§II-B, §III-D) describes a
+//! whole family in between. This subsystem turns the repo's pieces —
+//! the fast simulation core, the calibrated `fpga` resource/timing
+//! models, the `workload` zoo, and `util::parallel` sweeps — into a
+//! search over that family:
+//!
+//! * [`space`] — the design-point grid (ports 4–64, interface width,
+//!   transpose radix, rotator pipelining, CDC channel depths) and the
+//!   evaluation of one point: analytical LUT/FF/BRAM, searched post-P&R
+//!   peak frequency, and *achieved* bandwidth measured by actually
+//!   running a `workload::zoo` probe network through the simulated
+//!   fabric at that frequency.
+//! * [`search`] — exhaustive grid, deterministic seeded random
+//!   sampling, and seeded hill-climbing (all strategies are
+//!   bit-identical under `MEDUSA_THREADS=1` vs parallel execution).
+//! * [`pareto`] — the non-dominated frontier over
+//!   {LUT, FF, Fmax, achieved bandwidth}.
+//! * [`cache`] — an on-disk result cache keyed by a stable design-point
+//!   hash, so repeated sweeps are incremental (warm runs re-read rather
+//!   than re-simulate, and must produce bit-identical output).
+//!
+//! The CLI front-end is `medusa explore` (see `eval::explore` for the
+//! table/CSV/JSON rendering).
+
+pub mod cache;
+pub mod pareto;
+pub mod search;
+pub mod space;
+
+pub use cache::{point_key, ExploreCache};
+pub use pareto::{pareto_frontier, FrontierEntry};
+pub use search::{run_search, SearchResult, Strategy};
+pub use space::{DesignSpace, ExplorePoint, Metrics};

@@ -1,0 +1,154 @@
+//! Pareto frontier over {LUT, FF, Fmax, achieved bandwidth}.
+//!
+//! A point dominates another when it is no worse on every objective
+//! (fewer-or-equal LUTs and FFs, higher-or-equal Fmax and bandwidth)
+//! and strictly better on at least one. Bandwidth is compared as the
+//! exact integer ratio `bits_moved / sim_ps` via cross-multiplication —
+//! no floating point anywhere in the dominance test, so the frontier is
+//! bit-stable across platforms and thread counts.
+
+use crate::explore::space::{ExplorePoint, Metrics};
+use std::cmp::Ordering;
+
+/// One non-dominated design point.
+#[derive(Clone, Copy, Debug)]
+pub struct FrontierEntry {
+    /// Index into the evaluated slice the frontier was computed from.
+    pub index: usize,
+    pub point: ExplorePoint,
+    pub metrics: Metrics,
+}
+
+/// Exact comparison of achieved bandwidth (bits/ps as a ratio).
+pub fn cmp_bandwidth(a: &Metrics, b: &Metrics) -> Ordering {
+    match (a.sim_ps, b.sim_ps) {
+        (0, 0) => Ordering::Equal,
+        (0, _) => Ordering::Less,
+        (_, 0) => Ordering::Greater,
+        (pa, pb) => {
+            (a.bits_moved as u128 * pb as u128).cmp(&(b.bits_moved as u128 * pa as u128))
+        }
+    }
+}
+
+/// Does `a` dominate `b`?
+fn dominates(a: &Metrics, b: &Metrics) -> bool {
+    let bw = cmp_bandwidth(a, b);
+    let no_worse = a.resources.lut <= b.resources.lut
+        && a.resources.ff <= b.resources.ff
+        && a.fmax_mhz >= b.fmax_mhz
+        && bw != Ordering::Less;
+    let strictly_better = a.resources.lut < b.resources.lut
+        || a.resources.ff < b.resources.ff
+        || a.fmax_mhz > b.fmax_mhz
+        || bw == Ordering::Greater;
+    no_worse && strictly_better
+}
+
+/// The non-dominated subset of `evaluated`, in a deterministic order
+/// (ascending LUT, then FF, then the design spec string). Infeasible
+/// (failed-timing) and unverified points are never frontier members —
+/// a design that moves no data must not survive as "cheapest".
+pub fn pareto_frontier(evaluated: &[(ExplorePoint, Metrics)]) -> Vec<FrontierEntry> {
+    let candidates: Vec<usize> = evaluated
+        .iter()
+        .enumerate()
+        .filter(|(_, (_, m))| m.feasible() && m.verified)
+        .map(|(i, _)| i)
+        .collect();
+    let mut out: Vec<FrontierEntry> = candidates
+        .iter()
+        .filter(|&&i| {
+            let (_, mi) = &evaluated[i];
+            !candidates.iter().any(|&j| j != i && dominates(&evaluated[j].1, mi))
+        })
+        .map(|&i| FrontierEntry { index: i, point: evaluated[i].0, metrics: evaluated[i].1 })
+        .collect();
+    out.sort_by(|a, b| {
+        (a.metrics.resources.lut, a.metrics.resources.ff, a.point.design.spec(), a.index).cmp(&(
+            b.metrics.resources.lut,
+            b.metrics.resources.ff,
+            b.point.design.spec(),
+            b.index,
+        ))
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::Resources;
+    use crate::interconnect::Design;
+    use crate::types::Geometry;
+
+    fn pt() -> ExplorePoint {
+        ExplorePoint {
+            design: Design::Medusa,
+            geometry: Geometry { w_line: 128, w_acc: 16, read_ports: 8, write_ports: 8, max_burst: 8 },
+            dpus: 16,
+            channel_depth: 8,
+        }
+    }
+
+    fn m(lut: u64, ff: u64, fmax: u32, bits: u64, ps: u64) -> Metrics {
+        Metrics {
+            resources: Resources { lut, ff, bram18: 0, dsp: 0 },
+            fmax_mhz: fmax,
+            lines_moved: bits / 128,
+            bits_moved: bits,
+            sim_ps: ps,
+            fabric_cycles: 1,
+            verified: true,
+        }
+    }
+
+    #[test]
+    fn dominated_points_are_dropped() {
+        let evaluated = vec![
+            (pt(), m(100, 100, 200, 1000, 10)), // dominates the next
+            (pt(), m(200, 200, 100, 500, 10)),
+            (pt(), m(50, 300, 200, 1000, 10)), // cheaper LUT, worse FF: stays
+        ];
+        let f = pareto_frontier(&evaluated);
+        let idxs: Vec<usize> = f.iter().map(|e| e.index).collect();
+        assert_eq!(idxs.len(), 2);
+        assert!(idxs.contains(&0) && idxs.contains(&2));
+    }
+
+    #[test]
+    fn bandwidth_compares_exactly_not_in_floats() {
+        // Equal ratios expressed with different denominators are equal.
+        let a = m(1, 1, 25, 1000, 3);
+        let b = m(1, 1, 25, 2000, 6);
+        assert_eq!(cmp_bandwidth(&a, &b), Ordering::Equal);
+        // One part per trillion apart still orders correctly.
+        let c = m(1, 1, 25, 1_000_000_000_001, 3_000_000_000_000);
+        let d = m(1, 1, 25, 1_000_000_000_000, 3_000_000_000_000);
+        assert_eq!(cmp_bandwidth(&c, &d), Ordering::Greater);
+    }
+
+    #[test]
+    fn infeasible_and_unverified_points_never_make_the_frontier() {
+        let cheap_but_broken = Metrics { fmax_mhz: 0, ..m(1, 1, 0, 0, 0) };
+        let unverified = Metrics { verified: false, ..m(2, 2, 200, 1000, 10) };
+        let honest = m(500, 500, 100, 800, 10);
+        let evaluated = vec![(pt(), cheap_but_broken), (pt(), unverified), (pt(), honest)];
+        let f = pareto_frontier(&evaluated);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].index, 2);
+    }
+
+    #[test]
+    fn incomparable_points_all_survive_in_lut_order() {
+        let evaluated = vec![
+            (pt(), m(300, 100, 100, 100, 10)),
+            (pt(), m(100, 300, 100, 100, 10)),
+            (pt(), m(200, 200, 100, 100, 10)),
+        ];
+        let f = pareto_frontier(&evaluated);
+        assert_eq!(f.len(), 3);
+        let luts: Vec<u64> = f.iter().map(|e| e.metrics.resources.lut).collect();
+        assert_eq!(luts, vec![100, 200, 300], "frontier must come out sorted by LUT");
+    }
+}

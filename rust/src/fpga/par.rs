@@ -31,7 +31,7 @@ fn par_jitter(p: &DesignPoint, target_mhz: u32) -> f64 {
         p.dpus as u64,
         p.geometry.w_line as u64,
         p.geometry.read_ports as u64,
-        p.design.name().len() as u64,
+        p.design.par_seed(),
         target_mhz as u64,
     ] {
         h ^= v;

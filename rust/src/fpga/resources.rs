@@ -201,6 +201,105 @@ pub fn medusa_write(g: &Geometry) -> Resources {
     Resources { lut, ff, bram18: bram, dsp: 0 }
 }
 
+// ---------------------------------------------------------------------------
+// Hybrid (partial-transpose) family
+
+/// Fine-select steering decode per chunk per control group — the
+/// hybrid's analogue of `BASE_SELECT_LUT`, covering the wider per-chunk
+/// enable fan-in of the grouped datapath.
+const HYBRID_SELECT_LUT: u64 = 8;
+
+/// Hybrid read network: the structural interpolation between
+/// [`baseline_read`] and [`medusa_read`] along the transpose radix.
+///
+/// The radix endpoints *are* the endpoint designs (the simulator
+/// instantiates those exact datapaths — see `interconnect::hybrid`), so
+/// their costs are taken from the calibrated endpoint models verbatim.
+/// Intermediate radices are counted structurally with the same method
+/// the endpoints were calibrated with: a shared radix-`r` rotator
+/// (`W_line x log2 r` mux2 + stage registers), a per-port `(N/r):1`
+/// fine-select mux (`W_acc x (N/r - 1)` mux2), Medusa's banked BRAM
+/// input buffer and LUTRAM output double buffer, and Medusa-style
+/// per-port control plus per-group chunk-select decode
+/// (`port_group_width` ports share one decoder).
+pub fn hybrid_read(g: &Geometry, hc: &crate::interconnect::hybrid::HybridConfig) -> Resources {
+    let n = g.words_per_line();
+    let r = hc.transpose_radix;
+    assert!(
+        r.is_power_of_two() && (2..=n).contains(&r),
+        "hybrid radix {r} invalid for N = {n} (validate the config against the geometry first)"
+    );
+    if r == 2 {
+        return baseline_read(g);
+    }
+    if r == n {
+        return medusa_read(g);
+    }
+    let p = g.read_ports as u64;
+    let w = g.w_line as u64;
+    let chunks = (n / r) as u64;
+    let stages = ceil_log2(r) as u64;
+    let rot_mux2 = w * stages;
+    let addr_bits = ceil_log2(g.read_ports.max(2) * g.max_burst) as u64;
+    let addr_rot_mux2 = stages * (n as u64) * addr_bits;
+    let fine_mux2 = (g.w_acc as u64) * (chunks - 1) * p;
+    let groups = hc.select_groups(g.read_ports) as u64;
+    let lut = (rot_mux2 as f64 * LUT_PER_MUX2) as u64
+        + (addr_rot_mux2 as f64 * LUT_PER_MUX2) as u64
+        + (fine_mux2 as f64 * LUT_PER_MUX2) as u64
+        + lutram_luts(g.w_acc, 2 * n) * p          // output double buffer
+        + HYBRID_SELECT_LUT * chunks * groups      // chunk-select decode
+        + MEDUSA_PORT_CTRL_LUT * p
+        + MEDUSA_GLOBAL_LUT;
+    let ff = (w + n as u64) * stages               // rotator data+valid pipeline
+        + addr_bits * (n as u64)                   // address pipeline (one stage)
+        + ceil_log2(chunks as usize) as u64 * p    // fine-select registers
+        + (g.w_acc as u64) * p                     // port output register
+        + MEDUSA_PORT_CTRL_FF * p
+        + MEDUSA_GLOBAL_FF;
+    let bram = (n as u64) * bram18_for(g.w_acc, g.read_ports * g.max_burst);
+    Resources { lut, ff, bram18: bram, dsp: 0 }
+}
+
+/// Hybrid write network (mirror of [`hybrid_read`]; see there).
+pub fn hybrid_write(g: &Geometry, hc: &crate::interconnect::hybrid::HybridConfig) -> Resources {
+    let n = g.words_per_line();
+    let r = hc.transpose_radix;
+    assert!(
+        r.is_power_of_two() && (2..=n).contains(&r),
+        "hybrid radix {r} invalid for N = {n} (validate the config against the geometry first)"
+    );
+    if r == 2 {
+        return baseline_write(g);
+    }
+    if r == n {
+        return medusa_write(g);
+    }
+    let p = g.write_ports as u64;
+    let w = g.w_line as u64;
+    let chunks = (n / r) as u64;
+    let stages = ceil_log2(r) as u64;
+    let rot_mux2 = w * stages;
+    let addr_bits = ceil_log2(g.write_ports.max(2) * g.max_burst) as u64;
+    let addr_rot_mux2 = stages * (n as u64) * addr_bits;
+    let fine_mux2 = (g.w_acc as u64) * (chunks - 1) * p;
+    let groups = hc.select_groups(g.write_ports) as u64;
+    let lut = (rot_mux2 as f64 * LUT_PER_MUX2) as u64
+        + (addr_rot_mux2 as f64 * LUT_PER_MUX2) as u64
+        + (fine_mux2 as f64 * LUT_PER_MUX2_PACK) as u64
+        + lutram_luts(g.w_acc, 2 * n) * p          // input double buffer
+        + HYBRID_SELECT_LUT * chunks * groups
+        + MEDUSA_PORT_CTRL_LUT * p
+        + MEDUSA_GLOBAL_LUT;
+    let ff = (w + n as u64) * stages
+        + addr_bits * (n as u64)
+        + ceil_log2(chunks as usize) as u64 * p
+        + MEDUSA_PORT_CTRL_FF * p
+        + MEDUSA_GLOBAL_FF;
+    let bram = (n as u64) * bram18_for(g.w_acc, g.write_ports * g.max_burst);
+    Resources { lut, ff, bram18: bram, dsp: 0 }
+}
+
 /// AXI4-Stream read network (Table I): baseline datapath + per-port
 /// protocol plumbing + register-built FIFO stages on the wide path
 /// (TDATA + TKEEP + control per stage).
@@ -275,6 +374,7 @@ pub fn full_design(
         Design::Baseline => (baseline_read(g), baseline_write(g)),
         Design::Medusa => (medusa_read(g), medusa_write(g)),
         Design::Axis => (axis_read(g), axis_write(g)),
+        Design::Hybrid(hc) => (hybrid_read(g, &hc), hybrid_write(g, &hc)),
     };
     layer_processor(dpus) + rd + wr
 }
@@ -397,6 +497,61 @@ mod tests {
         let ff_factor = b.ff as f64 / m.ff as f64;
         assert!((3.8..=5.6).contains(&lut_factor), "LUT factor {lut_factor:.2} (paper 4.73)");
         assert!((4.8..=7.2).contains(&ff_factor), "FF factor {ff_factor:.2} (paper 6.02)");
+    }
+
+    #[test]
+    fn hybrid_endpoints_cost_exactly_like_the_endpoint_designs() {
+        use crate::interconnect::hybrid::HybridConfig;
+        for g in [table1_geom(), table2_geom()] {
+            let n = g.words_per_line();
+            let r2 = HybridConfig { transpose_radix: 2, ..Default::default() };
+            assert_eq!(hybrid_read(&g, &r2), baseline_read(&g));
+            assert_eq!(hybrid_write(&g, &r2), baseline_write(&g));
+            let rn = HybridConfig { transpose_radix: n, ..Default::default() };
+            assert_eq!(hybrid_read(&g, &rn), medusa_read(&g));
+            assert_eq!(hybrid_write(&g, &rn), medusa_write(&g));
+        }
+    }
+
+    #[test]
+    fn hybrid_family_lut_interpolates_monotonically() {
+        // §II-B vs §III-D: the family's mux count walks from
+        // W x (N-1)-shaped down to W x log2(N)-shaped as the radix
+        // grows; total LUTs must decrease strictly with radix.
+        use crate::interconnect::hybrid::HybridConfig;
+        let g = table2_geom(); // N = 32
+        let lut_of = |r: usize| {
+            let hc = HybridConfig { transpose_radix: r, ..Default::default() };
+            (hybrid_read(&g, &hc) + hybrid_write(&g, &hc)).lut
+        };
+        let series: Vec<u64> = [2usize, 4, 8, 16, 32].iter().map(|&r| lut_of(r)).collect();
+        for w in series.windows(2) {
+            assert!(w[1] < w[0], "LUT must fall as radix grows: {series:?}");
+        }
+        // Partial points stay strictly between the endpoints on both
+        // LUT and FF (FF: shared banks remove the baseline's per-port
+        // wide registers immediately; the rotator pipeline then grows
+        // with log2 r toward Medusa's fully pipelined count).
+        let base = baseline_read(&g) + baseline_write(&g);
+        for r in [4usize, 8, 16] {
+            let hc = HybridConfig { transpose_radix: r, ..Default::default() };
+            let h = hybrid_read(&g, &hc) + hybrid_write(&g, &hc);
+            assert!(h.lut < base.lut && h.ff < base.ff, "radix {r} vs baseline");
+            assert!(h.bram18 > 0, "partial transpose keeps the banked BRAM buffers");
+        }
+    }
+
+    #[test]
+    fn hybrid_port_grouping_amortizes_select_decode() {
+        use crate::interconnect::hybrid::HybridConfig;
+        let g = table2_geom();
+        let lut_of = |pgw: usize| {
+            let hc =
+                HybridConfig { transpose_radix: 8, stage_pipelining: 0, port_group_width: pgw };
+            hybrid_read(&g, &hc).lut
+        };
+        assert!(lut_of(4) < lut_of(1), "wider control groups must shed decode LUTs");
+        assert!(lut_of(8) <= lut_of(4));
     }
 
     #[test]

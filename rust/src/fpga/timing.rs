@@ -27,6 +27,18 @@ use crate::fpga::{DesignPoint, Device};
 use crate::interconnect::Design;
 use crate::util::{ceil_log2, snap_to_freq_grid};
 
+/// Route hybrid radix endpoints through the endpoint designs' timing
+/// arms: those radices instantiate the *exact* baseline/Medusa
+/// datapaths (see `interconnect::hybrid`), so they must cost exactly
+/// like them here too.
+fn canonical_design(design: Design, n_words: usize) -> Design {
+    match design {
+        Design::Hybrid(hc) if hc.transpose_radix == 2 => Design::Baseline,
+        Design::Hybrid(hc) if hc.transpose_radix == n_words => Design::Medusa,
+        d => d,
+    }
+}
+
 /// Calibrated timing-model constants (Virtex-7 speed grade -2-ish).
 #[derive(Clone, Copy, Debug)]
 pub struct TimingModel {
@@ -61,7 +73,7 @@ impl TimingModel {
 
     /// Logic-levels delay of the design's critical path (ns).
     fn logic_delay_ns(&self, design: Design, n_words: usize) -> f64 {
-        match design {
+        match canonical_design(design, n_words) {
             Design::Baseline | Design::Axis => {
                 // LUTRAM FIFO read, then the N:1 converter mux tree
                 // (4:1 per LUT level), plus a control level.
@@ -73,6 +85,19 @@ impl TimingModel {
                 // staging level.
                 self.t_ff_ns + self.t_bram_ns + 2.0 * self.t_lut_ns
             }
+            Design::Hybrid(hc) => {
+                // BRAM bank read, the unpipelined remainder of the
+                // radix-r rotator, the (N/r):1 fine chunk mux (4:1 per
+                // LUT level), and an output staging level. Fully
+                // pipelining the rotator (stage_pipelining >= log2 r)
+                // leaves one stage on the path — continuous with the
+                // Medusa formula as the chunk count reaches 1.
+                let chunks = n_words / hc.transpose_radix;
+                let rot_levels =
+                    ceil_log2(hc.transpose_radix).saturating_sub(hc.stage_pipelining).max(1) as f64;
+                let fine_levels = ceil_log2(chunks).div_ceil(2) as f64;
+                self.t_ff_ns + self.t_bram_ns + (rot_levels + fine_levels + 1.0) * self.t_lut_ns
+            }
         }
     }
 
@@ -82,7 +107,7 @@ impl TimingModel {
         let w = p.geometry.w_line as f64;
         let ports = p.geometry.read_ports.max(p.geometry.write_ports) as f64;
         let n_words = p.geometry.words_per_line() as f64;
-        let (bus_bits, spread) = match p.design {
+        let (bus_bits, spread) = match canonical_design(p.design, p.geometry.words_per_line()) {
             Design::Baseline | Design::Axis => {
                 // N wide buses (demux legs + mux legs) distributed across
                 // the die; their span grows as placed logic pushes
@@ -96,6 +121,21 @@ impl TimingModel {
                 let stages = n_words.log2().ceil().max(1.0);
                 let loc = 1.0 + 0.25 * u;
                 (w * (stages + 2.0) + p.geometry.w_acc as f64 * ports, loc * loc)
+            }
+            Design::Hybrid(hc) => {
+                // log2(r) rotator stages of localized W_line wiring plus
+                // the fine-select chunk buses (W_acc per chunk per port),
+                // whose spread interpolates between Medusa's localized
+                // 0.25 coefficient (1 chunk) and the baseline's
+                // distributed 0.8 (N/2 chunks) as the radix shrinks.
+                let stages = ceil_log2(hc.transpose_radix) as f64;
+                let chunks = (p.geometry.words_per_line() / hc.transpose_radix) as f64;
+                let frac = (chunks - 1.0) / (n_words / 2.0 - 1.0).max(1.0);
+                let loc = 1.0 + (0.25 + 0.55 * frac) * u;
+                (
+                    w * (stages + 2.0) + p.geometry.w_acc as f64 * ports * chunks,
+                    loc * loc,
+                )
             }
         };
         bus_bits * spread / dev.routing_supply
@@ -218,6 +258,68 @@ mod tests {
         let b = DesignPoint::fig6_step(Design::Baseline, 6);
         assert!(peak_frequency(&m) >= 200);
         assert!(peak_frequency(&b) < 200);
+    }
+
+    #[test]
+    fn hybrid_endpoints_clock_exactly_like_the_endpoint_designs() {
+        use crate::interconnect::hybrid::HybridConfig;
+        for step in [3usize, 6, 9] {
+            let m = DesignPoint::fig6_step(Design::Medusa, step);
+            let b = DesignPoint::fig6_step(Design::Baseline, step);
+            let n = m.geometry.words_per_line();
+            let h2 = DesignPoint {
+                design: Design::Hybrid(HybridConfig { transpose_radix: 2, ..Default::default() }),
+                ..b
+            };
+            assert_eq!(peak_frequency(&h2), peak_frequency(&b), "step {step} radix 2");
+            let hn = DesignPoint {
+                design: Design::Hybrid(HybridConfig { transpose_radix: n, ..Default::default() }),
+                ..m
+            };
+            assert_eq!(peak_frequency(&hn), peak_frequency(&m), "step {step} radix N");
+        }
+    }
+
+    #[test]
+    fn hybrid_frequency_interpolates_between_endpoints() {
+        use crate::interconnect::hybrid::HybridConfig;
+        // The representative 512-bit point (step 6, N = 32): partial
+        // radices with a fully pipelined rotator must land between the
+        // baseline's collapsed clock and Medusa's, improving with radix.
+        let step = 6usize;
+        let base = peak_frequency(&DesignPoint::fig6_step(Design::Baseline, step));
+        let med = peak_frequency(&DesignPoint::fig6_step(Design::Medusa, step));
+        let mut prev = base;
+        for r in [4usize, 8, 16] {
+            let hc = HybridConfig {
+                transpose_radix: r,
+                stage_pipelining: crate::util::ceil_log2(r),
+                port_group_width: 1,
+            };
+            let p = DesignPoint {
+                design: Design::Hybrid(hc),
+                ..DesignPoint::fig6_step(Design::Medusa, step)
+            };
+            let f = peak_frequency(&p);
+            assert!(f >= prev, "radix {r}: {f} MHz should be >= {prev}");
+            assert!(f <= med, "radix {r}: {f} MHz should not beat Medusa's {med}");
+            prev = f;
+        }
+        assert!(prev > base, "the pipelined partial transpose must beat the baseline");
+    }
+
+    #[test]
+    fn pipelining_raises_hybrid_frequency() {
+        use crate::interconnect::hybrid::HybridConfig;
+        let mk = |s: usize| DesignPoint {
+            design: Design::Hybrid(HybridConfig {
+                transpose_radix: 8,
+                stage_pipelining: s,
+                port_group_width: 1,
+            }),
+            ..DesignPoint::fig6_step(Design::Medusa, 6)
+        };
+        assert!(peak_frequency(&mk(3)) >= peak_frequency(&mk(0)));
     }
 
     #[test]

@@ -51,6 +51,10 @@ impl AxisReadNetwork {
 }
 
 impl ReadNetwork for AxisReadNetwork {
+    fn design(&self) -> crate::interconnect::Design {
+        crate::interconnect::Design::Axis
+    }
+
     fn geometry(&self) -> &Geometry {
         self.inner.geometry()
     }
@@ -116,6 +120,10 @@ impl AxisWriteNetwork {
 }
 
 impl WriteNetwork for AxisWriteNetwork {
+    fn design(&self) -> crate::interconnect::Design {
+        crate::interconnect::Design::Axis
+    }
+
     fn geometry(&self) -> &Geometry {
         self.inner.geometry()
     }

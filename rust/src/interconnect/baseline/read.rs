@@ -48,6 +48,10 @@ impl BaselineReadNetwork {
 }
 
 impl ReadNetwork for BaselineReadNetwork {
+    fn design(&self) -> crate::interconnect::Design {
+        crate::interconnect::Design::Baseline
+    }
+
     fn geometry(&self) -> &Geometry {
         &self.geom
     }

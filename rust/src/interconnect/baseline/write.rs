@@ -45,6 +45,10 @@ impl BaselineWriteNetwork {
 }
 
 impl WriteNetwork for BaselineWriteNetwork {
+    fn design(&self) -> crate::interconnect::Design {
+        crate::interconnect::Design::Baseline
+    }
+
     fn geometry(&self) -> &Geometry {
         &self.geom
     }

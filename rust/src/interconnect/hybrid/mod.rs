@@ -1,0 +1,208 @@
+//! The hybrid (partial-transpose) interconnect family.
+//!
+//! The paper compares exactly two points of a design space its own
+//! complexity analysis describes as a continuum: the baseline mux-tree
+//! datapath costs `W_line x (N-1)` mux2 equivalents (§II-B) while the
+//! fully transposed Medusa datapath costs `W_line x log2(N)` (§III-D).
+//! This module fills in the family between them with a single dial,
+//! [`HybridConfig::transpose_radix`]:
+//!
+//! * **radix 2** — no shared rotation at all; a radix-2 rotate block *is*
+//!   a 2:1 mux, the primitive the baseline's per-port mux trees are built
+//!   from, so the family collapses to the exact baseline datapath
+//!   (per-port wide FIFOs + width converters). The simulator instantiates
+//!   [`crate::interconnect::baseline`] directly, which is what makes the
+//!   radix-2 point *bit-identical* to `baseline` in both data and stats.
+//! * **radix N** — the generalized schedule below degenerates exactly to
+//!   Medusa's full-transpose diagonal schedule (set `r = N` in the
+//!   formulas: the chunk index vanishes and `k = (j + c) mod N` remains),
+//!   so the simulator instantiates [`crate::interconnect::medusa`]
+//!   directly — bit-identical to `medusa`.
+//! * **2 < radix < N** — the genuinely new *grouped partial transpose*:
+//!   the line's `N` words are viewed as `N/r` chunks of `r` words; a
+//!   shared radix-`r` rotator (cost `W_line x log2 r` mux2) rotates
+//!   *within* chunks under one global control, while a per-port
+//!   `(N/r):1` fine-select mux (cost `W_acc x (N/r - 1)` mux2 per port)
+//!   walks the chunks. Storage stays in shared banked SRAM exactly as in
+//!   Medusa.
+//!
+//! ## The generalized diagonal schedule
+//!
+//! With `r = transpose_radix`, `C = N / r` chunks, on fabric cycle `c`
+//! an active read port `j` reads input bank
+//!
+//! ```text
+//! k = m*r + w,   w = ((j mod r) + c) mod r          (shared rotation)
+//!                m = ((j div r) + (c div r)) mod C   (per-port fine select)
+//! ```
+//!
+//! and stores the word at line index `k` of its output buffer. Two
+//! distinct active ports can never collide on a bank: ports differing
+//! mod `r` read different in-chunk offsets `w`; ports equal mod `r`
+//! differ in `j div r` and therefore in `m`. Over any `N` *consecutive*
+//! active cycles the pair `(m, w)` covers every bank exactly once (the
+//! `w` sequence covers all `r` residues per `r`-cycle block while `m`
+//! steps through the chunks, the wrapped first/last partial blocks
+//! covering complementary offsets of the same chunk), so a line still
+//! completes in exactly `N` cycles — the §III-E constant-latency law
+//! holds across the whole family — and ports join and leave the schedule
+//! independently (§III-F). The write direction runs the inverse schedule,
+//! mirroring `medusa::write`.
+//!
+//! `stage_pipelining` adds pipeline stages to the shared rotator (same
+//! semantics as [`MedusaTuning::rotator_stages`]): latency up, achievable
+//! frequency up. `port_group_width` is a floorplanning knob consumed by
+//! the resource/timing models only — ports in one group share a
+//! fine-select decoder — and does not change simulated behaviour.
+//!
+//! [`MedusaTuning::rotator_stages`]: crate::interconnect::medusa::MedusaTuning
+
+mod read;
+mod write;
+
+pub use read::HybridReadNetwork;
+pub use write::HybridWriteNetwork;
+
+use crate::types::Geometry;
+use anyhow::{ensure, Result};
+
+/// Parameters of one member of the hybrid family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HybridConfig {
+    /// Transpose radix `r`: 2 = baseline endpoint, `N` = Medusa endpoint,
+    /// intermediate powers of two = grouped partial transpose. Must be a
+    /// power of two with `2 <= r <= N` for the instantiating geometry.
+    pub transpose_radix: usize,
+    /// Extra pipeline stages in the shared rotator (0 = combinational).
+    /// Must be 0 at radix 2 — that endpoint has no shared rotator.
+    pub stage_pipelining: usize,
+    /// Ports per fine-select control group (resource/timing model knob;
+    /// behaviour-neutral). Must be at least 1.
+    pub port_group_width: usize,
+}
+
+impl Default for HybridConfig {
+    fn default() -> Self {
+        HybridConfig { transpose_radix: 4, stage_pipelining: 0, port_group_width: 1 }
+    }
+}
+
+impl HybridConfig {
+    /// Validate against the geometry this config will instantiate on.
+    pub fn validate(&self, geom: &Geometry) -> Result<()> {
+        let n = geom.words_per_line();
+        let r = self.transpose_radix;
+        ensure!(r.is_power_of_two(), "transpose_radix {r} must be a power of two");
+        ensure!((2..=n).contains(&r), "transpose_radix {r} out of range [2, {n}] for W_line/W_acc = {n}");
+        ensure!(
+            self.transpose_radix != 2 || self.stage_pipelining == 0,
+            "radix-2 hybrid has no shared rotator to pipeline (stage_pipelining must be 0)"
+        );
+        ensure!(self.stage_pipelining <= 16, "stage_pipelining {} is implausibly deep", self.stage_pipelining);
+        ensure!(self.port_group_width >= 1, "port_group_width must be at least 1");
+        ensure!(
+            self.port_group_width <= geom.read_ports.max(geom.write_ports),
+            "port_group_width {} exceeds the port count",
+            self.port_group_width
+        );
+        Ok(())
+    }
+
+    /// Canonical spec-string form, `hybrid:r<radix>:s<stages>:g<group>`.
+    /// [`parse_spec`] inverts this exactly (round-trip locked by tests).
+    pub fn spec(&self) -> String {
+        format!("hybrid:r{}:s{}:g{}", self.transpose_radix, self.stage_pipelining, self.port_group_width)
+    }
+
+    /// Number of fine-select control groups for `ports` ports.
+    pub fn select_groups(&self, ports: usize) -> usize {
+        ports.div_ceil(self.port_group_width.max(1))
+    }
+}
+
+/// Parse a hybrid spec string: `hybrid`, `hybrid:r8`, `hybrid:r8:s2`,
+/// `hybrid:r8:s2:g4` (segments optional, any order after the family
+/// name; unspecified fields take [`HybridConfig::default`] values).
+/// Returns `None` for anything that is not a hybrid spec.
+pub fn parse_spec(s: &str) -> Option<HybridConfig> {
+    let rest = s.strip_prefix("hybrid")?;
+    let mut cfg = HybridConfig::default();
+    if rest.is_empty() {
+        return Some(cfg);
+    }
+    let rest = rest.strip_prefix(':')?;
+    for seg in rest.split(':') {
+        let (key, val) = seg.split_at(1.min(seg.len()));
+        let val: usize = val.parse().ok()?;
+        match key {
+            "r" => cfg.transpose_radix = val,
+            "s" => cfg.stage_pipelining = val,
+            "g" => cfg.port_group_width = val,
+            _ => return None,
+        }
+    }
+    Some(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom(n_ports: usize, w_line: usize) -> Geometry {
+        Geometry { w_line, w_acc: 16, read_ports: n_ports, write_ports: n_ports, max_burst: 4 }
+    }
+
+    #[test]
+    fn spec_round_trips() {
+        for cfg in [
+            HybridConfig::default(),
+            HybridConfig { transpose_radix: 8, stage_pipelining: 3, port_group_width: 4 },
+            HybridConfig { transpose_radix: 2, stage_pipelining: 0, port_group_width: 1 },
+        ] {
+            assert_eq!(parse_spec(&cfg.spec()), Some(cfg));
+        }
+    }
+
+    #[test]
+    fn spec_parsing_variants() {
+        assert_eq!(parse_spec("hybrid"), Some(HybridConfig::default()));
+        assert_eq!(
+            parse_spec("hybrid:r8"),
+            Some(HybridConfig { transpose_radix: 8, ..HybridConfig::default() })
+        );
+        assert_eq!(
+            parse_spec("hybrid:r16:s4"),
+            Some(HybridConfig { transpose_radix: 16, stage_pipelining: 4, port_group_width: 1 })
+        );
+        assert_eq!(parse_spec("hybrid:x3"), None);
+        assert_eq!(parse_spec("hybrid:"), None);
+        assert_eq!(parse_spec("medusa"), None);
+    }
+
+    #[test]
+    fn validation_rules() {
+        let g = geom(8, 128); // N = 8
+        for r in [2usize, 4, 8] {
+            HybridConfig { transpose_radix: r, ..Default::default() }.validate(&g).unwrap();
+        }
+        // Radix above N, not a power of two, or below 2: rejected.
+        assert!(HybridConfig { transpose_radix: 16, ..Default::default() }.validate(&g).is_err());
+        assert!(HybridConfig { transpose_radix: 3, ..Default::default() }.validate(&g).is_err());
+        assert!(HybridConfig { transpose_radix: 1, ..Default::default() }.validate(&g).is_err());
+        // Radix 2 cannot pipeline a rotator it does not have.
+        assert!(HybridConfig { transpose_radix: 2, stage_pipelining: 1, port_group_width: 1 }
+            .validate(&g)
+            .is_err());
+        // Group width above the port count is meaningless.
+        assert!(HybridConfig { transpose_radix: 4, stage_pipelining: 0, port_group_width: 9 }
+            .validate(&g)
+            .is_err());
+    }
+
+    #[test]
+    fn select_groups_rounds_up() {
+        let c = HybridConfig { transpose_radix: 4, stage_pipelining: 0, port_group_width: 3 };
+        assert_eq!(c.select_groups(8), 3);
+        assert_eq!(c.select_groups(3), 1);
+    }
+}

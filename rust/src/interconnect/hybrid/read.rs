@@ -1,0 +1,515 @@
+//! Hybrid memory-read data transfer network (see the module docs in
+//! [`super`] for the family and the generalized diagonal schedule).
+//!
+//! The wrapper selects the datapath by radix: the endpoints instantiate
+//! the exact baseline / Medusa networks (which is what makes them
+//! bit-identical to those designs in data *and* stats), intermediate
+//! radices instantiate [`PartialReadNetwork`] — Medusa's banked-buffer
+//! structure driven by the chunked schedule.
+
+use super::HybridConfig;
+use crate::hw::BankedSram;
+use crate::interconnect::baseline::BaselineReadNetwork;
+use crate::interconnect::medusa::{MedusaReadNetwork, MedusaTuning};
+use crate::interconnect::{Design, ReadNetwork};
+use crate::sim::stats::Counter;
+use crate::sim::Stats;
+use crate::types::{Geometry, PortId, TaggedLine, Word};
+use std::collections::VecDeque;
+
+/// Per-port control state of the partial datapath — the same pointer set
+/// Medusa's read network keeps (input region head/tail/count, output
+/// double-buffer halves).
+#[derive(Debug)]
+struct PortCtl {
+    in_count: usize,
+    head: usize,
+    tail: usize,
+    done_words: usize,
+    active: bool,
+    fill_half: usize,
+    drain_half: usize,
+    half_full: [bool; 2],
+    drain_idx: usize,
+    word_taken_this_cycle: bool,
+}
+
+impl PortCtl {
+    fn new() -> Self {
+        PortCtl {
+            in_count: 0,
+            head: 0,
+            tail: 0,
+            done_words: 0,
+            active: false,
+            fill_half: 0,
+            drain_half: 0,
+            half_full: [false; 2],
+            drain_idx: 0,
+            word_taken_this_cycle: false,
+        }
+    }
+}
+
+/// A completed fill waiting for the pipelined rotator to flush.
+#[derive(Debug)]
+struct PendingHalf {
+    port: PortId,
+    half: usize,
+    ready_cycle: u64,
+}
+
+/// The grouped-partial-transpose read datapath (2 < radix < N).
+pub(crate) struct PartialReadNetwork {
+    geom: Geometry,
+    cfg: HybridConfig,
+    /// N banks (one per word index), W_acc wide, `ports * max_burst` deep
+    /// — identical to Medusa's input buffer.
+    input: BankedSram,
+    /// One bank per port, 2 * N deep (double buffer).
+    output: BankedSram,
+    ports: Vec<PortCtl>,
+    pending_halves: VecDeque<PendingHalf>,
+    delivered_this_cycle: bool,
+    cycle: u64,
+}
+
+impl PartialReadNetwork {
+    fn new(geom: Geometry, cfg: HybridConfig) -> Self {
+        let n = geom.words_per_line();
+        debug_assert!(cfg.transpose_radix > 2 && cfg.transpose_radix < n);
+        PartialReadNetwork {
+            geom,
+            cfg,
+            input: BankedSram::new(n, geom.read_ports * geom.max_burst),
+            output: BankedSram::new(geom.read_ports, 2 * n),
+            ports: (0..geom.read_ports).map(|_| PortCtl::new()).collect(),
+            pending_halves: VecDeque::new(),
+            delivered_this_cycle: false,
+            cycle: 0,
+        }
+    }
+
+    fn n(&self) -> usize {
+        self.geom.words_per_line()
+    }
+
+    fn region(&self, port: PortId) -> usize {
+        port * self.geom.max_burst
+    }
+
+    fn tick(&mut self, cycle: u64, stats: &mut Stats) {
+        self.cycle = cycle;
+        self.delivered_this_cycle = false;
+        self.input.new_cycle();
+        self.output.new_cycle();
+        let n = self.n();
+        let r = self.cfg.transpose_radix;
+        let chunks = n / r;
+        // Shared in-chunk rotation amount and the fine-select chunk phase.
+        let rot_w = (cycle % r as u64) as usize;
+        let rot_m = ((cycle / r as u64) % chunks as u64) as usize;
+
+        while let Some(p) = self.pending_halves.front() {
+            if p.ready_cycle <= cycle {
+                let p = self.pending_halves.pop_front().unwrap();
+                self.ports[p.port].half_full[p.half] = true;
+            } else {
+                break;
+            }
+        }
+
+        // Activation: identical policy to Medusa — a port starts on its
+        // head line when one is resident and its fill half is free.
+        for port in 0..self.geom.read_ports {
+            let pending_blocks = self
+                .pending_halves
+                .iter()
+                .any(|ph| ph.port == port && ph.half == self.ports[port].fill_half);
+            let ctl = &mut self.ports[port];
+            ctl.word_taken_this_cycle = false;
+            if !ctl.active && ctl.in_count > 0 && !ctl.half_full[ctl.fill_half] && !pending_blocks
+            {
+                ctl.active = true;
+                ctl.done_words = 0;
+            }
+        }
+
+        // Chunked diagonal: shared rotation picks the in-chunk offset,
+        // the per-port fine mux picks the chunk. Bank-conflict freedom
+        // and N-cycle coverage are proved in the module docs; the SRAM
+        // models enforce the physical port limits regardless.
+        let mut completed = 0u64;
+        let mut words_rotated = 0u64;
+        for j in 0..self.geom.read_ports {
+            if !self.ports[j].active {
+                continue;
+            }
+            let w = ((j % r) + rot_w) % r;
+            let m = ((j / r) + rot_m) % chunks;
+            let k = m * r + w;
+            let slot = self.region(j) + self.ports[j].head;
+            let word = self.input.read(k, slot);
+            let ctl = &self.ports[j];
+            self.output.write(j, ctl.fill_half * n + k, word);
+            let ctl = &mut self.ports[j];
+            ctl.done_words += 1;
+            words_rotated += 1;
+            if ctl.done_words == n {
+                ctl.active = false;
+                ctl.done_words = 0;
+                ctl.head = (ctl.head + 1) % self.geom.max_burst;
+                ctl.in_count -= 1;
+                if self.cfg.stage_pipelining == 0 {
+                    ctl.half_full[ctl.fill_half] = true;
+                } else {
+                    self.pending_halves.push_back(PendingHalf {
+                        port: j,
+                        half: ctl.fill_half,
+                        ready_cycle: cycle + self.cfg.stage_pipelining as u64,
+                    });
+                }
+                ctl.fill_half = 1 - ctl.fill_half;
+                completed += 1;
+            }
+        }
+        stats.add(Counter::HybridReadWordsRotated, words_rotated);
+        stats.add(Counter::HybridReadLinesTransposed, completed);
+    }
+
+    fn mem_can_deliver(&self, port: PortId) -> bool {
+        !self.delivered_this_cycle && self.ports[port].in_count < self.geom.max_burst
+    }
+
+    fn mem_deliver(&mut self, tl: TaggedLine) {
+        assert!(!self.delivered_this_cycle, "second line on the memory interface in one cycle");
+        let n = self.n();
+        assert_eq!(tl.line.num_words(), n);
+        let p = tl.port;
+        assert!(self.ports[p].in_count < self.geom.max_burst, "input region overflow, port {p}");
+        self.delivered_this_cycle = true;
+        let slot = self.region(p) + self.ports[p].tail;
+        for y in 0..n {
+            self.input.write(y, slot, tl.line.word(y) & self.geom.word_mask());
+        }
+        let ctl = &mut self.ports[p];
+        ctl.tail = (ctl.tail + 1) % self.geom.max_burst;
+        ctl.in_count += 1;
+    }
+
+    fn port_take_word(&mut self, port: PortId) -> Option<Word> {
+        let n = self.n();
+        let ctl = &mut self.ports[port];
+        assert!(!ctl.word_taken_this_cycle, "port {port} popped twice in one cycle");
+        if !ctl.half_full[ctl.drain_half] {
+            return None;
+        }
+        let addr = ctl.drain_half * n + ctl.drain_idx;
+        let w = self.output.read(port, addr);
+        ctl.word_taken_this_cycle = true;
+        ctl.drain_idx += 1;
+        if ctl.drain_idx == n {
+            ctl.half_full[ctl.drain_half] = false;
+            ctl.drain_half = 1 - ctl.drain_half;
+            ctl.drain_idx = 0;
+        }
+        Some(w)
+    }
+}
+
+enum ReadInner {
+    /// Radix 2 — the exact baseline datapath.
+    Baseline(BaselineReadNetwork),
+    /// Radix N — the exact Medusa datapath.
+    Medusa(MedusaReadNetwork),
+    /// 2 < radix < N — grouped partial transpose.
+    Partial(PartialReadNetwork),
+}
+
+/// A read network of the hybrid family. See the module docs of
+/// [`super`]; the endpoints share the baseline/Medusa implementations,
+/// which makes their stat- and data-equivalence structural rather than
+/// merely tested.
+pub struct HybridReadNetwork {
+    cfg: HybridConfig,
+    inner: ReadInner,
+}
+
+impl HybridReadNetwork {
+    pub fn new(geom: Geometry, cfg: HybridConfig) -> Self {
+        geom.validate().expect("invalid geometry");
+        cfg.validate(&geom).expect("invalid hybrid config");
+        let n = geom.words_per_line();
+        let inner = if cfg.transpose_radix == 2 {
+            ReadInner::Baseline(BaselineReadNetwork::new(geom))
+        } else if cfg.transpose_radix == n {
+            ReadInner::Medusa(MedusaReadNetwork::with_tuning(
+                geom,
+                MedusaTuning { rotator_stages: cfg.stage_pipelining },
+            ))
+        } else {
+            ReadInner::Partial(PartialReadNetwork::new(geom, cfg))
+        };
+        HybridReadNetwork { cfg, inner }
+    }
+
+    pub fn config(&self) -> HybridConfig {
+        self.cfg
+    }
+}
+
+macro_rules! read_delegate {
+    ($self:expr, $net:ident => $body:expr, partial $p:ident => $pbody:expr) => {
+        match &$self.inner {
+            ReadInner::Baseline($net) => $body,
+            ReadInner::Medusa($net) => $body,
+            ReadInner::Partial($p) => $pbody,
+        }
+    };
+    (mut $self:expr, $net:ident => $body:expr, partial $p:ident => $pbody:expr) => {
+        match &mut $self.inner {
+            ReadInner::Baseline($net) => $body,
+            ReadInner::Medusa($net) => $body,
+            ReadInner::Partial($p) => $pbody,
+        }
+    };
+}
+
+impl ReadNetwork for HybridReadNetwork {
+    fn design(&self) -> Design {
+        Design::Hybrid(self.cfg)
+    }
+
+    fn geometry(&self) -> &Geometry {
+        read_delegate!(self, n => n.geometry(), partial p => &p.geom)
+    }
+
+    fn mem_can_deliver(&self, port: PortId) -> bool {
+        read_delegate!(self, n => n.mem_can_deliver(port), partial p => p.mem_can_deliver(port))
+    }
+
+    fn mem_deliver(&mut self, line: TaggedLine) {
+        read_delegate!(mut self, n => n.mem_deliver(line), partial p => p.mem_deliver(line))
+    }
+
+    fn port_free_lines(&self, port: PortId) -> usize {
+        read_delegate!(self, n => n.port_free_lines(port),
+            partial p => p.geom.max_burst - p.ports[port].in_count)
+    }
+
+    fn port_word_available(&self, port: PortId) -> bool {
+        read_delegate!(self, n => n.port_word_available(port), partial p => {
+            let c = &p.ports[port];
+            !c.word_taken_this_cycle && c.half_full[c.drain_half]
+        })
+    }
+
+    fn port_take_word(&mut self, port: PortId) -> Option<Word> {
+        read_delegate!(mut self, n => n.port_take_word(port), partial p => p.port_take_word(port))
+    }
+
+    fn tick(&mut self, cycle: u64, stats: &mut Stats) {
+        read_delegate!(mut self, n => n.tick(cycle, stats), partial p => p.tick(cycle, stats))
+    }
+
+    fn nominal_latency(&self) -> usize {
+        read_delegate!(self, n => n.nominal_latency(),
+            partial p => p.n() + p.cfg.stage_pipelining + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Line;
+
+    fn geom(n_ports: usize, w_line: usize, max_burst: usize) -> Geometry {
+        Geometry { w_line, w_acc: 16, read_ports: n_ports, write_ports: n_ports, max_burst }
+    }
+
+    fn cfg(r: usize) -> HybridConfig {
+        HybridConfig { transpose_radix: r, ..HybridConfig::default() }
+    }
+
+    fn mk_line(port: usize, tag: u64, n: usize) -> Line {
+        Line::from_words(
+            (0..n as u64)
+                .map(|y| (((port as u64) & 0x1f) << 11) | ((tag & 0x1f) << 6) | y)
+                .collect(),
+        )
+    }
+
+    /// Deliver lines when possible, pop eagerly; per-port word streams.
+    fn run(net: &mut HybridReadNetwork, lines: Vec<TaggedLine>, max_cycles: u64) -> Vec<Vec<Word>> {
+        let mut stats = Stats::new();
+        let nports = net.geometry().read_ports;
+        let total_words = lines.len() * net.geometry().words_per_line();
+        let mut got: Vec<Vec<Word>> = vec![Vec::new(); nports];
+        let mut next = 0usize;
+        for c in 0..max_cycles {
+            net.tick(c, &mut stats);
+            if next < lines.len() && net.mem_can_deliver(lines[next].port) {
+                net.mem_deliver(lines[next].clone());
+                next += 1;
+            }
+            for p in 0..nports {
+                if net.port_word_available(p) {
+                    got[p].push(net.port_take_word(p).unwrap());
+                }
+            }
+            if got.iter().map(|v| v.len()).sum::<usize>() == total_words {
+                break;
+            }
+        }
+        got
+    }
+
+    #[test]
+    fn intermediate_radix_delivers_each_ports_lines_in_order() {
+        // N = 16, radix 4: 4 chunks of 4 — a genuinely partial transpose.
+        let g = geom(16, 256, 4);
+        let n = g.words_per_line();
+        let mut net = HybridReadNetwork::new(g, cfg(4));
+        let lines: Vec<TaggedLine> =
+            (0..32).map(|i| TaggedLine { port: i % 16, line: mk_line(i % 16, i as u64, n) }).collect();
+        let got = run(&mut net, lines, 2000);
+        for p in 0..16 {
+            let mut expect = Vec::new();
+            for i in 0..32 {
+                if i % 16 == p {
+                    expect.extend(mk_line(p, i as u64, n).words().to_vec());
+                }
+            }
+            assert_eq!(got[p], expect, "port {p}");
+        }
+    }
+
+    #[test]
+    fn all_valid_radices_move_identical_data() {
+        // The whole family is behaviourally transparent: only timing may
+        // differ between radices, never data.
+        let g = geom(8, 128, 4);
+        let n = g.words_per_line();
+        let lines: Vec<TaggedLine> =
+            (0..24).map(|i| TaggedLine { port: i % 8, line: mk_line(i % 8, i as u64, n) }).collect();
+        let golden = run(&mut HybridReadNetwork::new(g, cfg(8)), lines.clone(), 2000);
+        for r in [2usize, 4] {
+            let got = run(&mut HybridReadNetwork::new(g, cfg(r)), lines.clone(), 2000);
+            assert_eq!(got, golden, "radix {r}");
+        }
+    }
+
+    #[test]
+    fn full_bandwidth_at_intermediate_radix() {
+        // All ports busy: one line absorbed and one word per port
+        // delivered per cycle, sustained — the partial transpose keeps
+        // Medusa's full-bandwidth property.
+        let g = geom(8, 128, 4);
+        let n = g.words_per_line();
+        let mut net = HybridReadNetwork::new(g, cfg(4));
+        let total = 64usize;
+        let lines: Vec<TaggedLine> =
+            (0..total).map(|i| TaggedLine { port: i % 8, line: mk_line(i % 8, i as u64, n) }).collect();
+        let mut stats = Stats::new();
+        let mut next = 0usize;
+        let mut popped = 0usize;
+        let mut done_at = 0u64;
+        for c in 0..4000u64 {
+            net.tick(c, &mut stats);
+            if next < lines.len() && net.mem_can_deliver(lines[next].port) {
+                net.mem_deliver(lines[next].clone());
+                next += 1;
+            }
+            for p in 0..8 {
+                if net.port_word_available(p) {
+                    net.port_take_word(p).unwrap();
+                    popped += 1;
+                }
+            }
+            if popped == total * n {
+                done_at = c;
+                break;
+            }
+        }
+        assert_eq!(popped, total * n, "did not drain");
+        assert!(done_at <= total as u64 + 3 * n as u64, "took {done_at} cycles");
+        assert!(stats.get("hybrid_read.lines_transposed") == total as u64);
+    }
+
+    #[test]
+    fn ports_join_at_arbitrary_phases() {
+        // The wrapped chunk walk must cover all N banks from any start
+        // cycle; start one port at every phase offset mod N.
+        let g = geom(8, 128, 4);
+        let n = g.words_per_line();
+        for warm in 0..n as u64 {
+            let mut net = HybridReadNetwork::new(g, cfg(4));
+            let mut stats = Stats::new();
+            for c in 0..warm {
+                net.tick(c, &mut stats);
+            }
+            net.mem_deliver(TaggedLine { port: 3, line: mk_line(3, 1, n) });
+            let mut got = Vec::new();
+            for c in warm..warm + 60 {
+                net.tick(c, &mut stats);
+                if net.port_word_available(3) {
+                    got.push(net.port_take_word(3).unwrap());
+                }
+                if got.len() == n {
+                    break;
+                }
+            }
+            assert_eq!(got, mk_line(3, 1, n).words().to_vec(), "warm-up {warm}");
+        }
+    }
+
+    #[test]
+    fn stage_pipelining_adds_latency_not_data_change() {
+        let g = geom(8, 128, 4);
+        let n = g.words_per_line();
+        let lines: Vec<TaggedLine> =
+            (0..16).map(|i| TaggedLine { port: i % 8, line: mk_line(i % 8, i as u64, n) }).collect();
+        let plain = HybridReadNetwork::new(g, cfg(4));
+        let piped = HybridReadNetwork::new(
+            g,
+            HybridConfig { transpose_radix: 4, stage_pipelining: 2, port_group_width: 1 },
+        );
+        assert_eq!(piped.nominal_latency(), plain.nominal_latency() + 2);
+        let mut plain = plain;
+        let mut piped = piped;
+        let a = run(&mut plain, lines.clone(), 2000);
+        let b = run(&mut piped, lines, 2000);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn irregular_port_count_intermediate_radix() {
+        // 6 ports on a 16-word interface, radix 4: ports 4 and 5 share
+        // residues with ports 0 and 1 but sit in a different chunk row.
+        let g = geom(6, 256, 4);
+        let n = g.words_per_line();
+        let mut net = HybridReadNetwork::new(g, cfg(4));
+        let lines: Vec<TaggedLine> =
+            (0..18).map(|i| TaggedLine { port: i % 6, line: mk_line(i % 6, i as u64, n) }).collect();
+        let got = run(&mut net, lines, 4000);
+        for p in 0..6 {
+            let mut expect = Vec::new();
+            for i in 0..18 {
+                if i % 6 == p {
+                    expect.extend(mk_line(p, i as u64, n).words().to_vec());
+                }
+            }
+            assert_eq!(got[p], expect, "port {p}");
+        }
+    }
+
+    #[test]
+    fn endpoint_radices_instantiate_endpoint_datapaths() {
+        let g = geom(4, 64, 4);
+        let r2 = HybridReadNetwork::new(g, cfg(2));
+        assert!(matches!(r2.inner, ReadInner::Baseline(_)));
+        let rn = HybridReadNetwork::new(g, cfg(4));
+        assert!(matches!(rn.inner, ReadInner::Medusa(_)));
+        assert_eq!(r2.design(), Design::Hybrid(cfg(2)));
+    }
+}

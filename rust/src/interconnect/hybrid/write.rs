@@ -1,0 +1,445 @@
+//! Hybrid memory-write data transfer network — the mirror image of
+//! [`super::read`], running the inverse of the generalized diagonal
+//! schedule (see the module docs in [`super`]). As on the read side, the
+//! radix endpoints instantiate the exact baseline / Medusa write
+//! datapaths; intermediate radices run the grouped partial transpose
+//! over Medusa's banked-buffer structure.
+
+use super::HybridConfig;
+use crate::hw::BankedSram;
+use crate::interconnect::baseline::BaselineWriteNetwork;
+use crate::interconnect::medusa::{MedusaTuning, MedusaWriteNetwork};
+use crate::interconnect::{Design, WriteNetwork};
+use crate::sim::stats::Counter;
+use crate::sim::Stats;
+use crate::types::{Geometry, Line, PortId, Word};
+use std::collections::VecDeque;
+
+/// Per-port control — the same pointer set Medusa's write network keeps.
+#[derive(Debug)]
+struct PortCtl {
+    fill_half: usize,
+    fill_idx: usize,
+    half_full: [bool; 2],
+    drain_half: usize,
+    active: bool,
+    done_words: usize,
+    out_tail: usize,
+    out_head: usize,
+    ready: usize,
+    out_count: usize,
+    word_pushed_this_cycle: bool,
+}
+
+impl PortCtl {
+    fn new() -> Self {
+        PortCtl {
+            fill_half: 0,
+            fill_idx: 0,
+            half_full: [false; 2],
+            drain_half: 0,
+            active: false,
+            done_words: 0,
+            out_tail: 0,
+            out_head: 0,
+            ready: 0,
+            out_count: 0,
+            word_pushed_this_cycle: false,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct PendingReady {
+    port: PortId,
+    ready_cycle: u64,
+}
+
+/// The grouped-partial-transpose write datapath (2 < radix < N).
+pub(crate) struct PartialWriteNetwork {
+    geom: Geometry,
+    cfg: HybridConfig,
+    /// One bank per port, 2 * N deep (input double buffer).
+    input: BankedSram,
+    /// N banks (one per word index), `ports * max_burst` deep.
+    output: BankedSram,
+    ports: Vec<PortCtl>,
+    pending_ready: VecDeque<PendingReady>,
+    line_taken_this_cycle: bool,
+    cycle: u64,
+}
+
+impl PartialWriteNetwork {
+    fn new(geom: Geometry, cfg: HybridConfig) -> Self {
+        let n = geom.words_per_line();
+        debug_assert!(cfg.transpose_radix > 2 && cfg.transpose_radix < n);
+        PartialWriteNetwork {
+            geom,
+            cfg,
+            input: BankedSram::new(geom.write_ports, 2 * n),
+            output: BankedSram::new(n, geom.write_ports * geom.max_burst),
+            ports: (0..geom.write_ports).map(|_| PortCtl::new()).collect(),
+            pending_ready: VecDeque::new(),
+            line_taken_this_cycle: false,
+            cycle: 0,
+        }
+    }
+
+    fn n(&self) -> usize {
+        self.geom.words_per_line()
+    }
+
+    fn region(&self, port: PortId) -> usize {
+        port * self.geom.max_burst
+    }
+
+    fn tick(&mut self, cycle: u64, stats: &mut Stats) {
+        self.cycle = cycle;
+        self.line_taken_this_cycle = false;
+        self.input.new_cycle();
+        self.output.new_cycle();
+        let n = self.n();
+        let r = self.cfg.transpose_radix;
+        let chunks = n / r;
+        let rot_w = (cycle % r as u64) as usize;
+        let rot_m = ((cycle / r as u64) % chunks as u64) as usize;
+
+        while let Some(p) = self.pending_ready.front() {
+            if p.ready_cycle <= cycle {
+                let p = self.pending_ready.pop_front().unwrap();
+                self.ports[p.port].ready += 1;
+            } else {
+                break;
+            }
+        }
+
+        for port in 0..self.geom.write_ports {
+            let ctl = &mut self.ports[port];
+            ctl.word_pushed_this_cycle = false;
+            if !ctl.active && ctl.half_full[ctl.drain_half] && ctl.out_count < self.geom.max_burst
+            {
+                ctl.active = true;
+                ctl.done_words = 0;
+                ctl.out_count += 1; // reserve the slot at out_tail
+            }
+        }
+
+        // Inverse chunked diagonal: active port p reads word index j of
+        // its own input half (j = chunk-select * r + shared offset) and
+        // stores it to output bank j at the port's reserved line slot.
+        // Distinct active ports land in distinct output banks by the
+        // same residue/chunk argument as the read direction.
+        let mut completed = 0u64;
+        let mut words_rotated = 0u64;
+        for p in 0..self.geom.write_ports {
+            if !self.ports[p].active {
+                continue;
+            }
+            let w = ((p % r) + rot_w) % r;
+            let m = ((p / r) + rot_m) % chunks;
+            let j = m * r + w;
+            let addr = self.ports[p].drain_half * n + j;
+            let word = self.input.read(p, addr);
+            let slot = self.region(p) + self.ports[p].out_tail;
+            self.output.write(j, slot, word);
+            let ctl = &mut self.ports[p];
+            ctl.done_words += 1;
+            words_rotated += 1;
+            if ctl.done_words == n {
+                ctl.active = false;
+                ctl.done_words = 0;
+                ctl.half_full[ctl.drain_half] = false;
+                ctl.drain_half = 1 - ctl.drain_half;
+                ctl.out_tail = (ctl.out_tail + 1) % self.geom.max_burst;
+                if self.cfg.stage_pipelining == 0 {
+                    ctl.ready += 1;
+                } else {
+                    self.pending_ready.push_back(PendingReady {
+                        port: p,
+                        ready_cycle: cycle + self.cfg.stage_pipelining as u64,
+                    });
+                }
+                completed += 1;
+            }
+        }
+        stats.add(Counter::HybridWriteWordsRotated, words_rotated);
+        stats.add(Counter::HybridWriteLinesTransposed, completed);
+    }
+
+    fn port_push_word(&mut self, port: PortId, w: Word) {
+        let n = self.n();
+        let mask = self.geom.word_mask();
+        let ctl = &mut self.ports[port];
+        assert!(!ctl.word_pushed_this_cycle, "port {port} pushed twice in one cycle");
+        assert!(!ctl.half_full[ctl.fill_half], "input half overflow, port {port}");
+        let addr = ctl.fill_half * n + ctl.fill_idx;
+        ctl.word_pushed_this_cycle = true;
+        ctl.fill_idx += 1;
+        let fill_half = ctl.fill_half;
+        if ctl.fill_idx == n {
+            ctl.half_full[fill_half] = true;
+            ctl.fill_half = 1 - fill_half;
+            ctl.fill_idx = 0;
+        }
+        self.input.write(port, addr, w & mask);
+    }
+
+    fn mem_take_line(&mut self, port: PortId) -> Option<Line> {
+        assert!(!self.line_taken_this_cycle, "second line on the memory interface in one cycle");
+        let n = self.n();
+        if self.ports[port].ready == 0 {
+            return None;
+        }
+        let slot = self.region(port) + self.ports[port].out_head;
+        let output = &mut self.output;
+        let line = Line::from_fn(n, |y| output.read(y, slot));
+        let ctl = &mut self.ports[port];
+        ctl.out_head = (ctl.out_head + 1) % self.geom.max_burst;
+        ctl.ready -= 1;
+        ctl.out_count -= 1;
+        self.line_taken_this_cycle = true;
+        Some(line)
+    }
+}
+
+enum WriteInner {
+    Baseline(BaselineWriteNetwork),
+    Medusa(MedusaWriteNetwork),
+    Partial(PartialWriteNetwork),
+}
+
+/// A write network of the hybrid family (see [`HybridReadNetwork`] and
+/// the module docs of [`super`] for the endpoint-sharing structure).
+///
+/// [`HybridReadNetwork`]: super::HybridReadNetwork
+pub struct HybridWriteNetwork {
+    cfg: HybridConfig,
+    inner: WriteInner,
+}
+
+impl HybridWriteNetwork {
+    pub fn new(geom: Geometry, cfg: HybridConfig) -> Self {
+        geom.validate().expect("invalid geometry");
+        cfg.validate(&geom).expect("invalid hybrid config");
+        let n = geom.words_per_line();
+        let inner = if cfg.transpose_radix == 2 {
+            WriteInner::Baseline(BaselineWriteNetwork::new(geom))
+        } else if cfg.transpose_radix == n {
+            WriteInner::Medusa(MedusaWriteNetwork::with_tuning(
+                geom,
+                MedusaTuning { rotator_stages: cfg.stage_pipelining },
+            ))
+        } else {
+            WriteInner::Partial(PartialWriteNetwork::new(geom, cfg))
+        };
+        HybridWriteNetwork { cfg, inner }
+    }
+
+    pub fn config(&self) -> HybridConfig {
+        self.cfg
+    }
+}
+
+macro_rules! write_delegate {
+    ($self:expr, $net:ident => $body:expr, partial $p:ident => $pbody:expr) => {
+        match &$self.inner {
+            WriteInner::Baseline($net) => $body,
+            WriteInner::Medusa($net) => $body,
+            WriteInner::Partial($p) => $pbody,
+        }
+    };
+    (mut $self:expr, $net:ident => $body:expr, partial $p:ident => $pbody:expr) => {
+        match &mut $self.inner {
+            WriteInner::Baseline($net) => $body,
+            WriteInner::Medusa($net) => $body,
+            WriteInner::Partial($p) => $pbody,
+        }
+    };
+}
+
+impl WriteNetwork for HybridWriteNetwork {
+    fn design(&self) -> Design {
+        Design::Hybrid(self.cfg)
+    }
+
+    fn geometry(&self) -> &Geometry {
+        write_delegate!(self, n => n.geometry(), partial p => &p.geom)
+    }
+
+    fn port_can_accept(&self, port: PortId) -> bool {
+        write_delegate!(self, n => n.port_can_accept(port), partial p => {
+            let c = &p.ports[port];
+            !c.word_pushed_this_cycle && !c.half_full[c.fill_half]
+        })
+    }
+
+    fn port_push_word(&mut self, port: PortId, w: Word) {
+        write_delegate!(mut self, n => n.port_push_word(port, w),
+            partial p => p.port_push_word(port, w))
+    }
+
+    fn mem_lines_ready(&self, port: PortId) -> usize {
+        write_delegate!(self, n => n.mem_lines_ready(port), partial p => p.ports[port].ready)
+    }
+
+    fn mem_take_line(&mut self, port: PortId) -> Option<Line> {
+        write_delegate!(mut self, n => n.mem_take_line(port), partial p => p.mem_take_line(port))
+    }
+
+    fn tick(&mut self, cycle: u64, stats: &mut Stats) {
+        write_delegate!(mut self, n => n.tick(cycle, stats), partial p => p.tick(cycle, stats))
+    }
+
+    fn nominal_latency(&self) -> usize {
+        write_delegate!(self, n => n.nominal_latency(),
+            partial p => p.n() + p.cfg.stage_pipelining + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom(n_ports: usize, w_line: usize, max_burst: usize) -> Geometry {
+        Geometry { w_line, w_acc: 16, read_ports: n_ports, write_ports: n_ports, max_burst }
+    }
+
+    fn cfg(r: usize) -> HybridConfig {
+        HybridConfig { transpose_radix: r, ..HybridConfig::default() }
+    }
+
+    fn word_of(port: usize, line: u64, y: usize) -> Word {
+        ((port as u64) << 12) | ((line & 0x3f) << 6) | y as u64
+    }
+
+    /// Push `lines_per_port` lines on every port, drain round-robin.
+    fn run(net: &mut HybridWriteNetwork, lines_per_port: usize, max_cycles: u64) -> Vec<Vec<Line>> {
+        let mut stats = Stats::new();
+        let g = *net.geometry();
+        let n = g.words_per_line();
+        let mut pushed = vec![0usize; g.write_ports];
+        let mut got: Vec<Vec<Line>> = vec![Vec::new(); g.write_ports];
+        let mut rr = 0usize;
+        for c in 0..max_cycles {
+            net.tick(c, &mut stats);
+            for k in 0..g.write_ports {
+                let p = (rr + k) % g.write_ports;
+                if net.mem_lines_ready(p) > 0 {
+                    got[p].push(net.mem_take_line(p).unwrap());
+                    rr = p + 1;
+                    break;
+                }
+            }
+            for p in 0..g.write_ports {
+                if pushed[p] < lines_per_port * n && net.port_can_accept(p) {
+                    let line_idx = (pushed[p] / n) as u64;
+                    let y = pushed[p] % n;
+                    net.port_push_word(p, word_of(p, line_idx, y));
+                    pushed[p] += 1;
+                }
+            }
+            if got.iter().map(|v| v.len()).sum::<usize>() == lines_per_port * g.write_ports {
+                break;
+            }
+        }
+        got
+    }
+
+    #[test]
+    fn intermediate_radix_transposes_port_words_into_lines() {
+        let g = geom(16, 256, 4);
+        let n = g.words_per_line();
+        let mut net = HybridWriteNetwork::new(g, cfg(4));
+        let got = run(&mut net, 3, 2000);
+        for p in 0..16 {
+            assert_eq!(got[p].len(), 3, "port {p}");
+            for (li, line) in got[p].iter().enumerate() {
+                for y in 0..n {
+                    assert_eq!(line.word(y), word_of(p, li as u64, y), "port {p} line {li} word {y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_valid_radices_write_identical_lines() {
+        let g = geom(8, 128, 4);
+        let golden = run(&mut HybridWriteNetwork::new(g, cfg(8)), 4, 4000);
+        for r in [2usize, 4] {
+            let got = run(&mut HybridWriteNetwork::new(g, cfg(r)), 4, 4000);
+            // Compare line *content* per port (arrival interleave across
+            // ports differs between datapath timings, content must not).
+            for p in 0..8 {
+                assert_eq!(got[p], golden[p], "radix {r} port {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn irregular_port_count_intermediate_radix() {
+        let g = Geometry { w_line: 256, w_acc: 16, read_ports: 6, write_ports: 6, max_burst: 4 };
+        let n = g.words_per_line();
+        let mut net = HybridWriteNetwork::new(g, cfg(4));
+        let got = run(&mut net, 3, 4000);
+        for p in 0..6 {
+            assert_eq!(got[p].len(), 3);
+            for (li, line) in got[p].iter().enumerate() {
+                for y in 0..n {
+                    assert_eq!(line.word(y), word_of(p, li as u64, y));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn aggregate_bandwidth_at_intermediate_radix() {
+        // 8 ports x 1 word/cycle = 1 line/cycle aggregate, sustained.
+        let g = geom(8, 128, 8);
+        let n = g.words_per_line();
+        let mut net = HybridWriteNetwork::new(g, cfg(4));
+        let lines_per_port = 8usize;
+        let mut stats = Stats::new();
+        let mut pushed = vec![0usize; 8];
+        let mut taken = 0usize;
+        let total = lines_per_port * 8;
+        let mut rr = 0;
+        let mut done_at = 0u64;
+        for c in 0..8000u64 {
+            net.tick(c, &mut stats);
+            for k in 0..8 {
+                let p = (rr + k) % 8;
+                if net.mem_lines_ready(p) > 0 {
+                    net.mem_take_line(p).unwrap();
+                    taken += 1;
+                    rr = p + 1;
+                    break;
+                }
+            }
+            for p in 0..8 {
+                if pushed[p] < lines_per_port * n && net.port_can_accept(p) {
+                    net.port_push_word(p, word_of(p, (pushed[p] / n) as u64, pushed[p] % n));
+                    pushed[p] += 1;
+                }
+            }
+            if taken == total {
+                done_at = c;
+                break;
+            }
+        }
+        assert_eq!(taken, total);
+        assert!(done_at <= (lines_per_port * n) as u64 + 4 * n as u64, "took {done_at} cycles");
+    }
+
+    #[test]
+    fn pipelined_partial_rotator_same_data() {
+        let g = geom(8, 256, 4); // N = 16, radix 4 partial
+        let mut plain = HybridWriteNetwork::new(g, cfg(4));
+        let got_plain = run(&mut plain, 3, 4000);
+        let mut piped = HybridWriteNetwork::new(
+            g,
+            HybridConfig { transpose_radix: 4, stage_pipelining: 2, port_group_width: 1 },
+        );
+        let got_piped = run(&mut piped, 3, 4000);
+        assert_eq!(got_plain, got_piped);
+    }
+}

@@ -110,6 +110,10 @@ impl MedusaReadNetwork {
 }
 
 impl ReadNetwork for MedusaReadNetwork {
+    fn design(&self) -> crate::interconnect::Design {
+        crate::interconnect::Design::Medusa
+    }
+
     fn geometry(&self) -> &Geometry {
         &self.geom
     }

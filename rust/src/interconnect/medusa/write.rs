@@ -112,6 +112,10 @@ impl MedusaWriteNetwork {
 }
 
 impl WriteNetwork for MedusaWriteNetwork {
+    fn design(&self) -> crate::interconnect::Design {
+        crate::interconnect::Design::Medusa
+    }
+
     fn geometry(&self) -> &Geometry {
         &self.geom
     }

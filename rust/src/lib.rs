@@ -22,7 +22,9 @@
 //!
 //! The evaluation harness ([`eval`]) regenerates every table and figure
 //! of the paper's evaluation section; see `EXPERIMENTS.md` for
-//! paper-vs-measured numbers.
+//! paper-vs-measured numbers. Beyond the paper, [`interconnect::hybrid`]
+//! generalizes the two designs into a radix-parameterized family and
+//! [`explore`] searches that family for Pareto-efficient design points.
 
 pub mod accel;
 pub mod cli;
@@ -30,6 +32,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dram;
 pub mod eval;
+pub mod explore;
 pub mod fpga;
 pub mod hw;
 pub mod interconnect;

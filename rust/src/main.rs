@@ -13,6 +13,8 @@
 //!   resources [--design D] [...]    resource report for a design point
 //!   freq [--design D] [...]         P&R frequency for a design point
 //!   sweep                           Fig 6 sweep as CSV
+//!   explore [...]                   design-space Pareto search over the
+//!                                   hybrid interconnect family
 //!   info                            environment / artifact status
 
 use anyhow::{bail, Result};
@@ -52,6 +54,7 @@ fn run(argv: &[String]) -> Result<()> {
         "resources" => cmd_resources(rest),
         "freq" => cmd_freq(rest),
         "sweep" => cmd_sweep(rest),
+        "explore" => cmd_explore(rest),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -73,6 +76,7 @@ fn print_usage() {
          \x20 resources [options]             resource report for one design point\n\
          \x20 freq [options]                  P&R peak frequency for one design point\n\
          \x20 sweep                           Fig 6 sweep as CSV\n\
+         \x20 explore [options]               Pareto search over the hybrid design space\n\
          \x20 info                            environment / artifacts status\n"
     );
 }
@@ -80,6 +84,15 @@ fn print_usage() {
 fn design_opt(args: &Args) -> Result<Design> {
     let s = args.get_or("design", "medusa");
     Design::parse(s).ok_or_else(|| anyhow::anyhow!("unknown design {s:?}"))
+}
+
+/// Hybrid specs carry parameters that only make sense on a geometry;
+/// check them before handing the pair to any model.
+fn check_design(design: Design, g: &Geometry) -> Result<()> {
+    if let Design::Hybrid(hc) = design {
+        hc.validate(g)?;
+    }
+    Ok(())
 }
 
 fn geometry_opts(args: &Args) -> Result<Geometry> {
@@ -268,6 +281,7 @@ fn cmd_resources(rest: &[String]) -> Result<()> {
         .parse(rest)?;
     let design = design_opt(&args)?;
     let g = geometry_opts(&args)?;
+    check_design(design, &g)?;
     let dpus = args.get_usize("dpus")?.unwrap_or(64);
     let dev = Device::virtex7_690t();
     let dp = DesignPoint { design, geometry: g, dpus };
@@ -302,6 +316,7 @@ fn cmd_freq(rest: &[String]) -> Result<()> {
         .parse(rest)?;
     let design = design_opt(&args)?;
     let g = geometry_opts(&args)?;
+    check_design(design, &g)?;
     let dpus = args.get_usize("dpus")?.unwrap_or(64);
     let dp = DesignPoint { design, geometry: g, dpus };
     let f = peak_frequency(&dp);
@@ -315,6 +330,97 @@ fn cmd_freq(rest: &[String]) -> Result<()> {
 
 fn cmd_sweep(_rest: &[String]) -> Result<()> {
     print!("{}", eval::fig6().to_csv());
+    Ok(())
+}
+
+fn cmd_explore(rest: &[String]) -> Result<()> {
+    use medusa::explore::{run_search, DesignSpace, ExploreCache, Strategy};
+    let args = Args::default()
+        .opt("strategy", "grid | random | hill (default grid)")
+        .opt("samples", "random strategy: points to sample (default 32)")
+        .opt("restarts", "hill strategy: independent climbs (default 4)")
+        .opt("steps", "hill strategy: max moves per climb (default 8)")
+        .opt("seed", "search seed for random/hill (default 1)")
+        .opt("probe", "zoo network driven through each point (default gemm-mlp)")
+        .opt("cache", "result cache file (default .medusa-explore.cache)")
+        .opt("json", "write BENCH_PR4.json-format results to this path")
+        .flag("smoke", "tiny CI grid instead of the default 100+ point grid")
+        .flag("no-cache", "evaluate everything fresh, do not read or write the cache")
+        .flag("csv", "emit the full evaluated set as CSV instead of tables")
+        .parse(rest)?;
+    let mut space = if args.has_flag("smoke") {
+        DesignSpace::smoke()
+    } else {
+        DesignSpace::default_grid()
+    };
+    if let Some(p) = args.get("probe") {
+        anyhow::ensure!(
+            medusa::workload::zoo::by_name(p).is_some(),
+            "unknown probe network {p:?} (zoo: {:?})",
+            medusa::workload::zoo::names()
+        );
+        space.probe = p.to_string();
+    }
+    let seed = args.get_usize("seed")?.unwrap_or(1) as u64;
+    let strategy = match args.get_or("strategy", "grid") {
+        "grid" => Strategy::Grid,
+        "random" => Strategy::Random { samples: args.get_usize("samples")?.unwrap_or(32) },
+        "hill" => Strategy::HillClimb {
+            restarts: args.get_usize("restarts")?.unwrap_or(4),
+            steps: args.get_usize("steps")?.unwrap_or(8),
+        },
+        other => bail!("unknown strategy {other:?} (grid | random | hill)"),
+    };
+    let mut cache = if args.has_flag("no-cache") {
+        None
+    } else {
+        Some(ExploreCache::open(args.get_or("cache", ".medusa-explore.cache")))
+    };
+    let t0 = std::time::Instant::now();
+    let result = run_search(
+        &space,
+        &strategy,
+        seed,
+        medusa::util::parallel::max_threads(),
+        cache.as_mut(),
+    )?;
+    let elapsed = t0.elapsed().as_secs_f64();
+    let label = strategy.label();
+    // In --csv mode stdout carries ONLY the CSV (the `medusa sweep`
+    // contract); the human summary goes to stderr instead.
+    let csv = args.has_flag("csv");
+    if csv {
+        print!("{}", medusa::eval::explore::full_table(&result).to_csv());
+    } else {
+        print!("{}", medusa::eval::explore::full_table(&result).to_text());
+        println!();
+        print!("{}", medusa::eval::explore::frontier_table(&result).to_text());
+    }
+    let note = |line: String| {
+        if csv {
+            eprintln!("{line}");
+        } else {
+            println!("{line}");
+        }
+    };
+    note(format!(
+        "{} in {elapsed:.2}s",
+        medusa::eval::explore::summary_line(&result, &space, &label)
+    ));
+    if let Some(c) = &cache {
+        note(format!("cache: {} entries at {}", c.len(), c.path().display()));
+    }
+    if let Some(path) = args.get("json") {
+        let extras = [("elapsed_s", format!("{elapsed:.4}"))];
+        std::fs::write(path, medusa::eval::explore::bench_json(&result, &space, &label, &extras))?;
+        note(format!("wrote {path}"));
+    }
+    // Every feasible point must have golden-verified its probe run; a
+    // silent verification failure would poison the frontier.
+    anyhow::ensure!(
+        result.evaluated.iter().all(|(_, m)| !m.feasible() || m.verified),
+        "some feasible points failed golden verification"
+    );
     Ok(())
 }
 

@@ -74,6 +74,14 @@ counters! {
     DramWriteBursts => "dram.write_bursts",
     DramWriteDataStall => "dram.write_data_stall",
     DramWriteLines => "dram.write_lines",
+    // Hybrid (partial-transpose) networks. Only the intermediate-radix
+    // datapaths touch these: the radix endpoints instantiate the exact
+    // baseline/Medusa datapaths and bump those counters instead (the
+    // bit-for-bit endpoint-equivalence contract).
+    HybridReadLinesTransposed => "hybrid_read.lines_transposed",
+    HybridReadWordsRotated => "hybrid_read.words_rotated",
+    HybridWriteLinesTransposed => "hybrid_write.lines_transposed",
+    HybridWriteWordsRotated => "hybrid_write.words_rotated",
     // Layer processor.
     LpDrainStallPortCycles => "lp.drain_stall_port_cycles",
     LpLoadStallPortCycles => "lp.load_stall_port_cycles",

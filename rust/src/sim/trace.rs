@@ -27,7 +27,7 @@
 //! [header]            # full system configuration of the run
 //! version = 1
 //! scenario = "..."    # scenario name (provenance only)
-//! design   = "medusa" # baseline | medusa | axis
+//! design   = "medusa" # a Design spec: baseline | medusa | axis | hybrid:r<R>:s<S>:g<G>
 //! w_line / w_acc / read_ports / write_ports / max_burst = ...
 //! dotprod_units / rotator_stages = ...
 //! mem_mhz / fabric_mhz = ...     # fabric_mhz is the *resolved* clock
@@ -157,6 +157,10 @@ pub const MOVEMENT_COUNTERS: &[&str] = &[
     "dram.read_lines",
     "dram.write_bursts",
     "dram.write_lines",
+    "hybrid_read.lines_transposed",
+    "hybrid_read.words_rotated",
+    "hybrid_write.lines_transposed",
+    "hybrid_write.words_rotated",
     "lp.read_bursts_submitted",
     "lp.words_drained",
     "lp.words_loaded",

@@ -297,6 +297,179 @@ mod medusa_roundtrip_props {
     }
 }
 
+/// Hybrid-family properties (PR 4 satellite): across randomized
+/// irregular geometries, the radix-2 and radix-N family endpoints must
+/// be *indistinguishable* from the baseline and Medusa networks — same
+/// words, same per-port order, same cycle counts under the shared
+/// saturation harness — and every intermediate radix must move data
+/// with perfect integrity in both directions.
+#[cfg(test)]
+mod hybrid_family_props {
+    use super::{check, Config, Gen};
+    use crate::interconnect::harness::{
+        drive_read, drive_write_streams, gen_lines, gen_write_streams,
+    };
+    use crate::interconnect::hybrid::HybridConfig;
+    use crate::interconnect::{build_read_network, build_write_network, Design};
+    use crate::types::{Geometry, Word};
+    use crate::util::Prng;
+
+    #[derive(Clone, Debug)]
+    struct FamilyCase {
+        geom: Geometry,
+        lines: usize,
+        seed: u64,
+    }
+
+    struct FamilyGen;
+
+    impl Gen<FamilyCase> for FamilyGen {
+        fn generate(&self, rng: &mut Prng) -> FamilyCase {
+            // N in {4, 8, 16, 32} so both endpoints are distinct designs
+            // and intermediate radices exist from N = 8 up; port counts
+            // skew irregular (§III-G).
+            let n = 1usize << rng.range(2, 5);
+            let w_acc = 16;
+            let ports = rng.range(1, n);
+            let max_burst = [1usize, 2, 3, 5, 8][rng.range(0, 4)];
+            FamilyCase {
+                geom: Geometry {
+                    w_line: n * w_acc,
+                    w_acc,
+                    read_ports: ports,
+                    write_ports: ports,
+                    max_burst,
+                },
+                lines: rng.range(1, 48),
+                seed: rng.next_u64(),
+            }
+        }
+
+        fn shrink(&self, c: &FamilyCase) -> Vec<FamilyCase> {
+            let mut out = Vec::new();
+            if c.lines > 1 {
+                out.push(FamilyCase { lines: c.lines / 2, ..c.clone() });
+            }
+            if c.geom.read_ports > 1 {
+                let mut g = c.geom;
+                g.read_ports -= 1;
+                g.write_ports -= 1;
+                out.push(FamilyCase { geom: g, ..c.clone() });
+            }
+            if c.geom.max_burst > 1 {
+                let mut g = c.geom;
+                g.max_burst = 1;
+                out.push(FamilyCase { geom: g, ..c.clone() });
+            }
+            out
+        }
+    }
+
+    fn hybrid(r: usize) -> Design {
+        Design::Hybrid(HybridConfig { transpose_radix: r, ..HybridConfig::default() })
+    }
+
+    /// Valid intermediate radices for `n` words per line.
+    fn intermediates(n: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut r = 4usize;
+        while r < n {
+            out.push(r);
+            r *= 2;
+        }
+        out
+    }
+
+    fn cfg() -> Config {
+        Config { cases: 40, ..Config::default() }
+    }
+
+    #[test]
+    fn prop_read_endpoints_indistinguishable_from_endpoint_designs() {
+        check(cfg(), &FamilyGen, |c: &FamilyCase| {
+            let n = c.geom.words_per_line();
+            let lines = gen_lines(&c.geom, c.lines, c.seed);
+            for (radix, partner) in [(2usize, Design::Baseline), (n, Design::Medusa)] {
+                let mut h = build_read_network(hybrid(radix), c.geom);
+                let (hres, hgot) = drive_read(h.as_mut(), &lines, true);
+                let mut p = build_read_network(partner, c.geom);
+                let (pres, pgot) = drive_read(p.as_mut(), &lines, true);
+                if hgot != pgot {
+                    return Err(format!("radix {radix} data diverged from {partner:?} ({c:?})"));
+                }
+                if (hres.cycles, hres.lines_moved, hres.words_moved)
+                    != (pres.cycles, pres.lines_moved, pres.words_moved)
+                {
+                    return Err(format!(
+                        "radix {radix} timing diverged from {partner:?}: {hres:?} vs {pres:?} ({c:?})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_write_endpoints_indistinguishable_from_endpoint_designs() {
+        check(cfg(), &FamilyGen, |c: &FamilyCase| {
+            let n = c.geom.words_per_line();
+            let lines_per_port = (c.lines / c.geom.write_ports).clamp(1, 12);
+            let streams = gen_write_streams(&c.geom, lines_per_port, c.seed);
+            for (radix, partner) in [(2usize, Design::Baseline), (n, Design::Medusa)] {
+                let mut h = build_write_network(hybrid(radix), c.geom);
+                let (hres, hgot) = drive_write_streams(h.as_mut(), &streams, true);
+                let mut p = build_write_network(partner, c.geom);
+                let (pres, pgot) = drive_write_streams(p.as_mut(), &streams, true);
+                if hgot != pgot {
+                    return Err(format!("radix {radix} data diverged from {partner:?} ({c:?})"));
+                }
+                if (hres.cycles, hres.lines_moved) != (pres.cycles, pres.lines_moved) {
+                    return Err(format!(
+                        "radix {radix} timing diverged from {partner:?} ({c:?})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_intermediate_radices_preserve_data_integrity() {
+        check(cfg(), &FamilyGen, |c: &FamilyCase| {
+            let n = c.geom.words_per_line();
+            let lines = gen_lines(&c.geom, c.lines, c.seed);
+            let golden: Vec<Vec<Word>> = (0..c.geom.read_ports)
+                .map(|p| {
+                    lines
+                        .iter()
+                        .filter(|l| l.port == p)
+                        .flat_map(|l| l.line.words().to_vec())
+                        .collect()
+                })
+                .collect();
+            let lines_per_port = (c.lines / c.geom.write_ports).clamp(1, 12);
+            let streams = gen_write_streams(&c.geom, lines_per_port, c.seed ^ 0xdead);
+            for r in intermediates(n) {
+                let mut net = build_read_network(hybrid(r), c.geom);
+                let (_, got) = drive_read(net.as_mut(), &lines, true);
+                if got != golden {
+                    return Err(format!("radix {r} read diverged from golden transpose ({c:?})"));
+                }
+                let mut wnet = build_write_network(hybrid(r), c.geom);
+                let (_, wgot) = drive_write_streams(wnet.as_mut(), &streams, true);
+                for p in 0..c.geom.write_ports {
+                    let flat: Vec<Word> =
+                        wgot[p].iter().flat_map(|l| l.words().to_vec()).collect();
+                    if flat != streams[p] {
+                        return Err(format!("radix {r} write port {p} diverged ({c:?})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
 /// Workload-math properties (PR 3 satellite): layer word counts and MAC
 /// counts must agree with closed-form recomputation for randomized
 /// layers of every kind, and every zoo network must chain shape-exactly.

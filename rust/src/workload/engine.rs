@@ -650,7 +650,9 @@ fn run_inner(sc: &Scenario, capture: bool) -> Result<(ScenarioOutcome, Option<Sc
     let trace = trace_steps.map(|steps| ScenarioTrace {
         header: TraceHeader {
             scenario: sc.name.clone(),
-            design: sys.cfg.design.name().to_string(),
+            // The parseable spec (not the bare family name): replay must
+            // reconstruct parameterized designs exactly.
+            design: sys.cfg.design.spec(),
             w_line: sc.cfg.geometry.w_line,
             w_acc: sc.cfg.geometry.w_acc,
             read_ports: sc.cfg.geometry.read_ports,

@@ -147,3 +147,33 @@ fn replay_golden_trace_checks_movement_counters() {
     assert!(ok, "stdout:\n{stdout}\nstderr:\n{stderr}");
     assert!(stdout.contains("reproduced"), "{stdout}");
 }
+
+#[test]
+fn resources_accepts_hybrid_specs_and_validates_them() {
+    let (ok, stdout, _) = medusa(&["resources", "--design", "hybrid:r8", "--ports", "32"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("hybrid"));
+    // Radix above W_line/W_acc is rejected with a clean error.
+    let (ok, _, stderr) =
+        medusa(&["resources", "--design", "hybrid:r64", "--w-line", "128", "--ports", "8"]);
+    assert!(!ok);
+    assert!(stderr.contains("error"), "{stderr}");
+}
+
+#[test]
+fn run_scenario_on_hybrid_design_verifies() {
+    let (ok, stdout, stderr) =
+        medusa(&["run", "--scenario", "multi-tenant-mix", "--design", "hybrid:r4"]);
+    assert!(ok, "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("all tenants verified"));
+}
+
+#[test]
+fn explore_smoke_emits_frontier() {
+    let (ok, stdout, stderr) = medusa(&["explore", "--smoke", "--no-cache"]);
+    assert!(ok, "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("Pareto frontier"), "{stdout}");
+    assert!(stdout.contains("frontier size"), "{stdout}");
+    // The evaluated table carries at least one hybrid family member.
+    assert!(stdout.contains("hybrid:r4"), "{stdout}");
+}

@@ -1,0 +1,203 @@
+//! Conformance suite for the hybrid interconnect family and the
+//! design-space explorer (PR 4).
+//!
+//! What it locks down:
+//!
+//! * the family endpoints are *bit-for-bit* the endpoint designs at the
+//!   system level: for every zoo network, a radix-2 hybrid run has the
+//!   same fingerprint (every stat counter, cycle count, per-port wait,
+//!   final feature map) and the same DRAM-delivered bytes as `baseline`,
+//!   and a radix-N hybrid run the same as `medusa`;
+//! * intermediate radices run every zoo network golden-verified and
+//!   deliver identical data (the whole family is data-transparent);
+//! * hybrid runs capture and replay through the canonical trace format
+//!   (the spec string round-trips through the header);
+//! * explorer searches are deterministic: sequential vs parallel and
+//!   cold-cache vs warm-cache runs produce identical evaluated sets and
+//!   identical Pareto frontiers, with the warm run answered entirely
+//!   from the cache;
+//! * the default grid meets the ≥ 100 design-point floor.
+
+use medusa::config::SystemConfig;
+use medusa::explore::{point_key, run_search, DesignSpace, ExploreCache, Strategy};
+use medusa::interconnect::hybrid::HybridConfig;
+use medusa::interconnect::Design;
+use medusa::types::Geometry;
+use medusa::workload::{self, zoo, Scenario};
+
+/// The conformance geometry: N = 8 words/line, so radix 2 and radix 8
+/// are the family endpoints and radix 4 is a genuine intermediate.
+fn cfg(design: Design) -> SystemConfig {
+    SystemConfig {
+        design,
+        geometry: Geometry { w_line: 128, w_acc: 16, read_ports: 8, write_ports: 8, max_burst: 8 },
+        dotprod_units: 16,
+        mem_clock_mhz: 200.0,
+        fabric_clock_mhz: Some(200.0),
+        ddr3_timing: false,
+        rotator_stages: 0,
+        channel_depths: Default::default(),
+        seed: 7,
+    }
+}
+
+fn hybrid(radix: usize) -> Design {
+    Design::Hybrid(HybridConfig { transpose_radix: radix, ..HybridConfig::default() })
+}
+
+fn run_single(name: &str, design: Design, net: workload::WorkloadNet) -> workload::ScenarioOutcome {
+    let sc = Scenario::single(name, cfg(design), net);
+    workload::run_scenario(&sc).unwrap_or_else(|e| panic!("{name} on {design:?}: {e:#}"))
+}
+
+#[test]
+fn hybrid_endpoints_are_bit_identical_to_endpoint_designs_on_every_zoo_network() {
+    for net in zoo::all() {
+        for (radix, partner) in [(2usize, Design::Baseline), (8, Design::Medusa)] {
+            let h = run_single(&format!("hx-{}", net.name), hybrid(radix), net.clone());
+            let p = run_single(&format!("hx-{}", net.name), partner, net.clone());
+            assert!(h.all_verified(), "{} radix {radix}", net.name);
+            // Full-outcome fingerprint: every counter in the registry,
+            // cycle counts, per-port waits, final feature maps.
+            assert_eq!(
+                h.fingerprint(),
+                p.fingerprint(),
+                "{}: radix-{radix} hybrid not stat-identical to {partner:?}",
+                net.name
+            );
+            // And the words the fabric actually landed in DRAM.
+            assert_eq!(
+                h.tenants[0].final_dram, p.tenants[0].final_dram,
+                "{}: radix-{radix} hybrid delivered different DRAM bytes than {partner:?}",
+                net.name
+            );
+        }
+    }
+}
+
+#[test]
+fn intermediate_radix_runs_every_zoo_network_with_identical_data() {
+    for net in zoo::all() {
+        let mid = run_single(&format!("mid-{}", net.name), hybrid(4), net.clone());
+        assert!(mid.all_verified(), "{} on radix-4 hybrid", net.name);
+        let med = run_single(&format!("mid-{}", net.name), Design::Medusa, net.clone());
+        // Data transparency across the family: same DRAM bytes, even
+        // though timing (and therefore fingerprints) may differ.
+        assert_eq!(
+            mid.tenants[0].final_dram, med.tenants[0].final_dram,
+            "{}: intermediate radix broke data transparency",
+            net.name
+        );
+        // The intermediate datapath really ran (its counters moved).
+        assert!(
+            mid.stats.get("hybrid_read.lines_transposed") > 0
+                && mid.stats.get("hybrid_write.lines_transposed") > 0,
+            "{}: partial-transpose counters untouched",
+            net.name
+        );
+        assert_eq!(mid.stats.get("medusa_read.lines_transposed"), 0, "{}", net.name);
+    }
+}
+
+#[test]
+fn multi_tenant_scenarios_match_across_family_endpoints() {
+    for (radix, partner) in [(2usize, Design::Baseline), (8, Design::Medusa)] {
+        let mut h = Scenario::builtin("multi-tenant-mix").unwrap();
+        h.cfg.design = hybrid(radix);
+        let mut p = Scenario::builtin("multi-tenant-mix").unwrap();
+        p.cfg.design = partner;
+        let ho = workload::run_scenario(&h).unwrap();
+        let po = workload::run_scenario(&p).unwrap();
+        assert!(ho.all_verified());
+        assert_eq!(ho.fingerprint(), po.fingerprint(), "radix {radix} vs {partner:?}");
+    }
+}
+
+#[test]
+fn hybrid_trace_captures_and_replays_through_the_spec_string() {
+    // An intermediate radix: the header must carry "hybrid:r4:s0:g1"
+    // and replay must rebuild that exact datapath and reproduce every
+    // recorded counter and cycle count.
+    let sc = Scenario::single("hx-trace", cfg(hybrid(4)), zoo::gemm_mlp());
+    let (out, trace) = workload::run_scenario_captured(&sc).unwrap();
+    assert!(out.all_verified());
+    assert_eq!(trace.header.design, "hybrid:r4:s0:g1");
+    let replayed = workload::verify_replay(&trace).unwrap();
+    assert_eq!(replayed.fabric_cycles, out.fabric_cycles);
+    // Round-trip through the on-disk text form too.
+    let text = trace.to_text();
+    let back = medusa::sim::trace::ScenarioTrace::from_str(&text).unwrap();
+    workload::verify_replay(&back).unwrap();
+}
+
+#[test]
+fn explorer_is_deterministic_sequential_vs_parallel() {
+    let space = DesignSpace::smoke();
+    let seq = run_search(&space, &Strategy::Grid, 1, 1, None).unwrap();
+    let par = run_search(&space, &Strategy::Grid, 1, 8, None).unwrap();
+    assert_eq!(seq.evaluated, par.evaluated, "thread count changed explorer results");
+    let fs: Vec<usize> = seq.frontier.iter().map(|e| e.index).collect();
+    let fp: Vec<usize> = par.frontier.iter().map(|e| e.index).collect();
+    assert_eq!(fs, fp, "thread count changed the Pareto frontier");
+    assert!(!seq.frontier.is_empty());
+    // Feasible points all golden-verified their probe runs.
+    assert!(seq.evaluated.iter().all(|(_, m)| !m.feasible() || m.verified));
+}
+
+#[test]
+fn explorer_cache_hit_equals_recompute() {
+    let path = std::env::temp_dir()
+        .join(format!("medusa-explore-conformance-{}.cache", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let space = DesignSpace::smoke();
+
+    let mut cache = ExploreCache::open(&path);
+    let cold = run_search(&space, &Strategy::Grid, 1, 4, Some(&mut cache)).unwrap();
+    assert_eq!(cold.cache_hits, 0);
+    assert_eq!(cold.computed, cold.evaluated.len());
+
+    // Fresh handle: everything must come back from disk, bit-identical.
+    let mut cache = ExploreCache::open(&path);
+    assert_eq!(cache.len(), cold.evaluated.len());
+    let warm = run_search(&space, &Strategy::Grid, 1, 4, Some(&mut cache)).unwrap();
+    assert_eq!(warm.cache_hits, warm.evaluated.len(), "warm run must be pure cache reads");
+    assert_eq!(warm.computed, 0);
+    assert_eq!(cold.evaluated, warm.evaluated, "cache round-trip changed results");
+    let fc: Vec<usize> = cold.frontier.iter().map(|e| e.index).collect();
+    let fw: Vec<usize> = warm.frontier.iter().map(|e| e.index).collect();
+    assert_eq!(fc, fw, "cache round-trip changed the frontier");
+
+    // Cache keys are stable across runs (the incremental contract).
+    let pts = space.points();
+    for p in &pts {
+        assert!(cache.get(point_key(p, &space.probe)).is_some(), "missing entry {}", p.label());
+    }
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn default_grid_meets_the_acceptance_floor() {
+    let pts = DesignSpace::default_grid().points();
+    assert!(pts.len() >= 100, "default grid: {} points (acceptance floor is 100)", pts.len());
+    // It spans the required port range and contains the whole family.
+    assert!(pts.iter().any(|p| p.geometry.read_ports == 4));
+    assert!(pts.iter().any(|p| p.geometry.read_ports == 64));
+    assert!(pts.iter().any(|p| p.design == Design::Baseline));
+    assert!(pts.iter().any(|p| p.design == Design::Medusa));
+    assert!(pts
+        .iter()
+        .any(|p| matches!(p.design, Design::Hybrid(hc) if hc.stage_pipelining > 0)));
+}
+
+#[test]
+fn seeded_strategies_are_reproducible() {
+    let space = DesignSpace::smoke();
+    for strat in [
+        Strategy::Random { samples: 4 },
+        Strategy::HillClimb { restarts: 2, steps: 3 },
+    ] {
+        let a = run_search(&space, &strat, 99, 4, None).unwrap();
+        let b = run_search(&space, &strat, 99, 1, None).unwrap();
+        assert_eq!(a.evaluated, b.evaluated, "{strat:?} not reproducible");
+    }
+}
