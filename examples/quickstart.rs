@@ -85,6 +85,7 @@ fn main() -> anyhow::Result<()> {
         rotator_stages: 0,
         channel_depths: Default::default(),
         seed: 1,
+        sim: Default::default(),
     };
     let mut drv = InferenceDriver::new(cfg, backend)?;
     let region = drv.alloc_and_preload(&ifmap);

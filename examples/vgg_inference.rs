@@ -63,6 +63,7 @@ fn main() -> anyhow::Result<()> {
             rotator_stages: 0,
             channel_depths: Default::default(),
             seed: 2024,
+            sim: Default::default(),
         };
         // PJRT backend only for the first run to keep runtime modest;
         // data equality across designs is asserted below either way.

@@ -247,4 +247,87 @@ fn main() {
     )
     .expect("writing BENCH_PR4.json");
     println!("wrote {pr4_path}");
+
+    // --- 6. PR 5: the stats-exact fast backend — full-vs-elided and
+    // stepwise-vs-leap wall-time ratios on a full scenario run and on
+    // the explorer smoke grid. (The fig6 sweep itself is a pure P&R
+    // model sweep with no simulated payload, so the explorer grid —
+    // which runs a zoo probe through every feasible fig6-style point —
+    // is its simulation-bearing analogue.) Every variant must land on
+    // identical cycle counts; only the wall clock may move.
+    use medusa::config::{EdgeMode, PayloadMode, SimBackend};
+    use medusa::explore::run_search_with;
+    let scenario_with = |sim: SimBackend| -> (f64, u64) {
+        let mut sc = medusa::workload::Scenario::builtin("single-tiny-vgg").unwrap();
+        sc.cfg.sim = sim;
+        let t0 = Instant::now();
+        let out = medusa::workload::run_scenario(&sc).expect("scenario run");
+        (t0.elapsed().as_secs_f64(), out.fabric_cycles)
+    };
+    let (sc_full_s, sc_full_cycles) = scenario_with(SimBackend::full());
+    let (sc_elided_s, sc_elided_cycles) =
+        scenario_with(SimBackend { payload: PayloadMode::Elided, edges: EdgeMode::Stepwise });
+    let (sc_leap_s, sc_leap_cycles) =
+        scenario_with(SimBackend { payload: PayloadMode::Full, edges: EdgeMode::Leap });
+    let (sc_fast_s, sc_fast_cycles) = scenario_with(SimBackend::fast());
+    assert_eq!(sc_full_cycles, sc_elided_cycles, "elision changed cycles");
+    assert_eq!(sc_full_cycles, sc_leap_cycles, "leaping changed cycles");
+    assert_eq!(sc_full_cycles, sc_fast_cycles, "fast backend changed cycles");
+    println!(
+        "fast backend (single-tiny-vgg): full {sc_full_s:.4}s, elided {sc_elided_s:.4}s \
+         ({:.2}x), leap {sc_leap_s:.4}s ({:.2}x), fast {sc_fast_s:.4}s ({:.2}x) — cycles identical",
+        sc_full_s / sc_elided_s.max(1e-12),
+        sc_full_s / sc_leap_s.max(1e-12),
+        sc_full_s / sc_fast_s.max(1e-12),
+    );
+    let explore_with = |sim: SimBackend| {
+        let t0 = Instant::now();
+        let r = run_search_with(
+            &space,
+            &Strategy::Grid,
+            1,
+            medusa::util::parallel::max_threads(),
+            None,
+            sim,
+        )
+        .expect("explore");
+        (t0.elapsed().as_secs_f64(), r)
+    };
+    let (ex_full_s, ex_full) = explore_with(SimBackend::full());
+    let (ex_fast_s, ex_fast) = explore_with(SimBackend::fast());
+    let ex_identical = ex_full.evaluated == ex_fast.evaluated;
+    assert!(ex_identical, "fast-backend explore metrics diverged from full backend");
+    let ex_full_n = ex_full.evaluated.len();
+    println!(
+        "fast backend (explore smoke grid, {ex_full_n} points): full {ex_full_s:.4}s, \
+         fast {ex_fast_s:.4}s ({:.2}x), results identical",
+        ex_full_s / ex_fast_s.max(1e-12)
+    );
+    let pr5_path = format!("{json_dir}/BENCH_PR5.json");
+    let mut j = String::from("{\n");
+    j.push_str("  \"bench\": \"fast_backend_pr5\",\n");
+    j.push_str(&format!("  \"threads_parallel\": {},\n", medusa::util::parallel::max_threads()));
+    j.push_str(&format!(
+        "  \"scenario\": {{\"name\": \"single-tiny-vgg\", \"fabric_cycles\": {sc_full_cycles}, \
+         \"full_s\": {}, \"elided_s\": {}, \"leap_s\": {}, \"fast_s\": {}, \
+         \"elided_speedup\": {}, \"leap_speedup\": {}, \"fast_speedup\": {}, \
+         \"cycles_identical\": true}},\n",
+        json_f(sc_full_s),
+        json_f(sc_elided_s),
+        json_f(sc_leap_s),
+        json_f(sc_fast_s),
+        json_f(sc_full_s / sc_elided_s.max(1e-12)),
+        json_f(sc_full_s / sc_leap_s.max(1e-12)),
+        json_f(sc_full_s / sc_fast_s.max(1e-12)),
+    ));
+    j.push_str(&format!(
+        "  \"explore_smoke\": {{\"points\": {ex_full_n}, \"full_s\": {}, \"fast_s\": {}, \
+         \"fast_speedup\": {}, \"results_identical\": {ex_identical}}}\n",
+        json_f(ex_full_s),
+        json_f(ex_fast_s),
+        json_f(ex_full_s / ex_fast_s.max(1e-12)),
+    ));
+    j.push_str("}\n");
+    std::fs::write(&pr5_path, &j).expect("writing BENCH_PR5.json");
+    println!("wrote {pr5_path}");
 }

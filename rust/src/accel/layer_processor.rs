@@ -7,6 +7,7 @@
 //! or the PJRT artifact by the coordinator).
 
 use crate::accel::prefetch::{bursts, PortSchedule, Region};
+use crate::config::PayloadMode;
 use crate::interconnect::arbiter::Arbiter;
 use crate::interconnect::{ReadNetwork, WriteNetwork};
 use crate::sim::stats::Counter;
@@ -85,10 +86,46 @@ struct ReadPortState {
     received: Vec<Word>,
 }
 
+/// The words a write port still has to stream: real data (full mode)
+/// or a bare count of shadow words (payload-elided mode). Front/advance
+/// semantics are identical, so the drain loop — and every stat and
+/// stall decision in it — cannot tell the difference.
+enum WordStream {
+    Data(VecDeque<Word>),
+    Counted(usize),
+}
+
+impl WordStream {
+    /// The next word to push, if any (shadow words read as 0).
+    fn front(&self) -> Option<Word> {
+        match self {
+            WordStream::Data(q) => q.front().copied(),
+            WordStream::Counted(0) => None,
+            WordStream::Counted(_) => Some(0),
+        }
+    }
+
+    fn advance(&mut self) {
+        match self {
+            WordStream::Data(q) => {
+                q.pop_front();
+            }
+            WordStream::Counted(left) => *left -= 1,
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        match self {
+            WordStream::Data(q) => q.is_empty(),
+            WordStream::Counted(left) => *left == 0,
+        }
+    }
+}
+
 struct WritePortState {
     pending_bursts: VecDeque<Region>,
     /// Words queued for pushing on this port.
-    to_send: VecDeque<Word>,
+    to_send: WordStream,
 }
 
 pub struct LayerProcessor {
@@ -114,6 +151,8 @@ pub struct LayerProcessor {
     read_wait_cycles: Vec<u64>,
     /// Cumulative cycles each local write port spent back-pressured.
     write_wait_cycles: Vec<u64>,
+    /// Fast backend: don't retain loaded words (payload is shadows).
+    payload: PayloadMode,
 }
 
 impl LayerProcessor {
@@ -137,8 +176,15 @@ impl LayerProcessor {
             drain_cycles: 0,
             read_wait_cycles: vec![0; group.read_ports],
             write_wait_cycles: vec![0; group.write_ports],
+            payload: PayloadMode::Full,
             group,
         }
+    }
+
+    /// Select payload handling; call before the first `begin_layer`.
+    pub fn set_payload_mode(&mut self, mode: PayloadMode) {
+        assert_eq!(self.phase, Phase::Done, "payload mode change mid-layer");
+        self.payload = mode;
     }
 
     pub fn phase(&self) -> Phase {
@@ -165,6 +211,7 @@ impl LayerProcessor {
     pub fn begin_layer(&mut self, read_scheds: &[PortSchedule], macs: u64) {
         assert_eq!(read_scheds.len(), self.group.read_ports);
         let n = self.geom.words_per_line();
+        let elided = self.payload.is_elided();
         self.read_ports = read_scheds
             .iter()
             .map(|s| {
@@ -172,7 +219,10 @@ impl LayerProcessor {
                 ReadPortState {
                     pending_bursts: bursts(s, self.geom.max_burst).into(),
                     words_left: words,
-                    received: Vec::with_capacity(words),
+                    // Elided mode gathers nothing: `words_left` alone
+                    // drives phase progress (and it must — the PR 3
+                    // determinism invariant forbids data-driven control).
+                    received: Vec::with_capacity(if elided { 0 } else { words }),
                 }
             })
             .collect();
@@ -204,16 +254,46 @@ impl LayerProcessor {
     /// Supply the computed output and its per-port write schedules; the
     /// processor moves to `Drain` and streams it out.
     pub fn supply_output(&mut self, write_scheds: &[PortSchedule], data_per_port: Vec<VecDeque<Word>>) {
-        assert_eq!(self.phase, Phase::Compute);
-        assert_eq!(write_scheds.len(), self.group.write_ports);
+        assert!(!self.payload.is_elided(), "full-payload output supplied in elided mode");
         assert_eq!(data_per_port.len(), self.group.write_ports);
         let n = self.geom.words_per_line();
+        self.supply_output_streams(
+            write_scheds,
+            write_scheds
+                .iter()
+                .zip(data_per_port)
+                .map(|(s, data)| {
+                    assert_eq!(data.len(), s.total_lines() * n, "write data must fill whole lines");
+                    WordStream::Data(data)
+                })
+                .collect(),
+        );
+    }
+
+    /// Payload-elided twin of [`supply_output`]: arm the drain phase
+    /// with shadow word counts derived from the schedules alone. Word
+    /// counts, burst submissions, and phase transitions are identical
+    /// to a full-mode drain of the same schedules.
+    ///
+    /// [`supply_output`]: LayerProcessor::supply_output
+    pub fn supply_output_elided(&mut self, write_scheds: &[PortSchedule]) {
+        assert!(self.payload.is_elided(), "elided output supplied in full mode");
+        let n = self.geom.words_per_line();
+        self.supply_output_streams(
+            write_scheds,
+            write_scheds.iter().map(|s| WordStream::Counted(s.total_lines() * n)).collect(),
+        );
+    }
+
+    fn supply_output_streams(&mut self, write_scheds: &[PortSchedule], streams: Vec<WordStream>) {
+        assert_eq!(self.phase, Phase::Compute);
+        assert_eq!(write_scheds.len(), self.group.write_ports);
         self.write_ports = write_scheds
             .iter()
-            .zip(data_per_port)
-            .map(|(s, data)| {
-                assert_eq!(data.len(), s.total_lines() * n, "write data must fill whole lines");
-                WritePortState { pending_bursts: bursts(s, self.geom.max_burst).into(), to_send: data }
+            .zip(streams)
+            .map(|(s, to_send)| WritePortState {
+                pending_bursts: bursts(s, self.geom.max_burst).into(),
+                to_send,
             })
             .collect();
         self.phase = if self.write_ports.iter().all(|w| w.to_send.is_empty()) {
@@ -236,6 +316,7 @@ impl LayerProcessor {
         R: ReadNetwork + ?Sized,
         W: WriteNetwork + ?Sized,
     {
+        let elided = self.payload.is_elided();
         match self.phase {
             Phase::Load => {
                 self.load_cycles += 1;
@@ -254,7 +335,13 @@ impl LayerProcessor {
                     // Consume one word per cycle — the paper's port rate.
                     if st.words_left > 0 {
                         if rd_net.port_word_available(gp) {
-                            st.received.push(rd_net.port_take_word(gp).unwrap());
+                            // The pop must happen in elided mode too —
+                            // it advances the network's drain pointers;
+                            // only the retention is payload.
+                            let w = rd_net.port_take_word(gp).unwrap();
+                            if !elided {
+                                st.received.push(w);
+                            }
                             st.words_left -= 1;
                             stats.bump(Counter::LpWordsLoaded);
                         } else {
@@ -287,10 +374,10 @@ impl LayerProcessor {
                             stats.bump(Counter::LpWriteBurstsSubmitted);
                         }
                     }
-                    if let Some(&w) = st.to_send.front() {
+                    if let Some(w) = st.to_send.front() {
                         if wr_net.port_can_accept(gp) {
                             wr_net.port_push_word(gp, w);
-                            st.to_send.pop_front();
+                            st.to_send.advance();
                             stats.bump(Counter::LpWordsDrained);
                         } else {
                             stats.bump(Counter::LpDrainStallPortCycles);
@@ -312,6 +399,36 @@ impl LayerProcessor {
     /// should run the math + supply the output.
     pub fn compute_done(&self) -> bool {
         self.phase == Phase::Compute && self.compute_cycles_left == 0
+    }
+
+    /// Remaining modelled compute-stall cycles (0 outside `Compute`).
+    /// This is the layer processor's `next_activity_edge()`: while in
+    /// `Compute`, nothing observable happens for exactly this many
+    /// fabric cycles.
+    pub fn compute_cycles_left(&self) -> u64 {
+        if self.phase == Phase::Compute {
+            self.compute_cycles_left
+        } else {
+            0
+        }
+    }
+
+    /// The idle-edge bulk skip: account `k` fabric cycles of compute
+    /// stall at once. Exact: a `Compute` tick does nothing but
+    /// `compute_cycles += 1; compute_cycles_left -= 1 (saturating)` —
+    /// no stats, no network interaction — so `k` ticks compose in
+    /// closed form. A skip that would cross the `compute_done` flip is
+    /// refused (the caller's horizon must re-check at the flip); past
+    /// the flip (`left == 0`, coordinator not yet reacted) any `k` is
+    /// pure counter accumulation, exactly as stepwise.
+    pub fn skip_compute_cycles(&mut self, k: u64) {
+        assert_eq!(self.phase, Phase::Compute, "bulk compute skip outside Compute");
+        assert!(
+            self.compute_cycles_left == 0 || k <= self.compute_cycles_left,
+            "compute skip overshoots the stall"
+        );
+        self.compute_cycles += k;
+        self.compute_cycles_left = self.compute_cycles_left.saturating_sub(k);
     }
 }
 

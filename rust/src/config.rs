@@ -45,6 +45,110 @@ impl ChannelDepths {
     }
 }
 
+/// Whether the simulation carries real payload words or tag/occupancy
+/// shadows.
+///
+/// In [`PayloadMode::Elided`] mode every `Line` travelling through the
+/// DRAM controller, the CDC channels, the networks, and the layer
+/// processors is a header-only shadow ([`crate::types::Line::elided`]):
+/// hops skip bank/store/converter word traffic entirely. Every control
+/// decision in the simulator is data-independent (the PR 3 flush-gating
+/// invariant), so all counters and cycle counts are bit-identical to
+/// full mode — only the payload (and therefore golden data checks) is
+/// gone. See DESIGN.md §"Fast backend" for the soundness argument.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PayloadMode {
+    /// Carry and verify real word contents (the default).
+    #[default]
+    Full,
+    /// Tag/occupancy-only shadows; stats-exact, payload-free.
+    Elided,
+}
+
+impl PayloadMode {
+    pub fn parse(s: &str) -> Option<PayloadMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "full" => Some(PayloadMode::Full),
+            "elided" | "elide" => Some(PayloadMode::Elided),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PayloadMode::Full => "full",
+            PayloadMode::Elided => "elided",
+        }
+    }
+
+    #[inline(always)]
+    pub fn is_elided(self) -> bool {
+        matches!(self, PayloadMode::Elided)
+    }
+}
+
+/// How simulated time advances across globally idle spans.
+///
+/// In [`EdgeMode::Leap`] mode the system asks every clocked component
+/// (networks, arbiter, CDC channels, memory controller, layer
+/// processors) for its next activity; when nothing can fire before some
+/// future fabric edge, the scheduler leaps there in one arithmetic step
+/// instead of ticking empty edges. Exact by construction: a skipped
+/// edge is one where every tick is a provable no-op except bulk-
+/// appliable counter updates (compute countdown, DRAM idle cycles),
+/// which the leap applies in closed form.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EdgeMode {
+    /// Tick every scheduler edge (the default).
+    #[default]
+    Stepwise,
+    /// Skip globally idle spans in O(1).
+    Leap,
+}
+
+impl EdgeMode {
+    pub fn parse(s: &str) -> Option<EdgeMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "stepwise" | "step" => Some(EdgeMode::Stepwise),
+            "leap" | "skip" => Some(EdgeMode::Leap),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EdgeMode::Stepwise => "stepwise",
+            EdgeMode::Leap => "leap",
+        }
+    }
+
+    #[inline(always)]
+    pub fn is_leap(self) -> bool {
+        matches!(self, EdgeMode::Leap)
+    }
+}
+
+/// The simulation backend selection: payload handling + time stepping.
+/// Both axes are stats-exact; [`SimBackend::fast`] is what explorer-
+/// scale sweeps run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SimBackend {
+    pub payload: PayloadMode,
+    pub edges: EdgeMode,
+}
+
+impl SimBackend {
+    /// The reference backend: full payload, every edge ticked.
+    pub fn full() -> Self {
+        SimBackend { payload: PayloadMode::Full, edges: EdgeMode::Stepwise }
+    }
+
+    /// The fast backend: payload elision + idle-edge leaping.
+    pub fn fast() -> Self {
+        SimBackend { payload: PayloadMode::Elided, edges: EdgeMode::Leap }
+    }
+}
+
 /// A fully specified system configuration: what the launcher builds.
 #[derive(Clone, Debug)]
 pub struct SystemConfig {
@@ -65,6 +169,14 @@ pub struct SystemConfig {
     pub channel_depths: ChannelDepths,
     /// PRNG seed for workload generation.
     pub seed: u64,
+    /// Simulation backend (payload elision / idle-edge leaping). Not
+    /// part of the modelled hardware: any backend must produce
+    /// bit-identical stats and cycles, so trace headers deliberately do
+    /// NOT record it. (The explore cache keys entries per payload mode
+    /// — not because numbers differ, but because `verified` means
+    /// "golden-checked" only under full payload; see
+    /// `explore::cache::point_key`.)
+    pub sim: SimBackend,
 }
 
 impl Default for SystemConfig {
@@ -79,6 +191,7 @@ impl Default for SystemConfig {
             rotator_stages: 0,
             channel_depths: ChannelDepths::default(),
             seed: 7,
+            sim: SimBackend::default(),
         }
     }
 }
@@ -152,6 +265,14 @@ impl SystemConfig {
             "channels.rd_line_depth" => self.channel_depths.rd_line = value.as_usize()?,
             "channels.wr_data_depth" => self.channel_depths.wr_data = value.as_usize()?,
             "system.seed" | "seed" => self.seed = value.as_usize()? as u64,
+            "sim.payload" => {
+                self.sim.payload = PayloadMode::parse(value.as_str()?)
+                    .ok_or_else(|| anyhow!("sim.payload must be \"full\" or \"elided\", got {value:?}"))?
+            }
+            "sim.edges" => {
+                self.sim.edges = EdgeMode::parse(value.as_str()?)
+                    .ok_or_else(|| anyhow!("sim.edges must be \"stepwise\" or \"leap\", got {value:?}"))?
+            }
             _ => return Ok(false),
         }
         Ok(true)
@@ -358,6 +479,20 @@ ddr3_timing = true
         // Radix above W_line/W_acc fails validation with the geometry.
         let bad = "[system]\ndesign = \"hybrid:r64\"\n[geometry]\nw_line = 512\n";
         assert!(SystemConfig::from_str(bad).is_err());
+    }
+
+    #[test]
+    fn sim_backend_parses_and_defaults_to_full_stepwise() {
+        let cfg = SystemConfig::from_str("").unwrap();
+        assert_eq!(cfg.sim, SimBackend::full());
+        let cfg =
+            SystemConfig::from_str("[sim]\npayload = \"elided\"\nedges = \"leap\"\n").unwrap();
+        assert_eq!(cfg.sim, SimBackend::fast());
+        assert!(SystemConfig::from_str("[sim]\npayload = \"half\"\n").is_err());
+        assert!(SystemConfig::from_str("[sim]\nedges = \"sprint\"\n").is_err());
+        assert_eq!(PayloadMode::parse("FULL"), Some(PayloadMode::Full));
+        assert_eq!(PayloadMode::parse(PayloadMode::Elided.name()), Some(PayloadMode::Elided));
+        assert_eq!(EdgeMode::parse(EdgeMode::Leap.name()), Some(EdgeMode::Leap));
     }
 
     #[test]

@@ -66,6 +66,16 @@ pub struct InferenceDriver {
 
 impl InferenceDriver {
     pub fn new(cfg: SystemConfig, backend: ComputeBackend) -> Result<Self> {
+        // Inference exists to produce (and golden-check) real feature
+        // maps; a payload-elided fabric retains no loaded words, so an
+        // elided config would only fail later, deep in run_layer, with
+        // an opaque panic. Refuse it up front instead. (Edge leaping is
+        // payload-preserving and fine here.)
+        anyhow::ensure!(
+            !cfg.sim.payload.is_elided(),
+            "InferenceDriver needs full payload (sim.payload = \"elided\" computes no data); \
+             use the workload scenario engine for elided runs"
+        );
         let sys = System::new(cfg)?;
         Ok(InferenceDriver { sys, backend, alloc: 0 })
     }
@@ -268,6 +278,7 @@ mod tests {
             rotator_stages: 0,
             channel_depths: Default::default(),
             seed: 11,
+            sim: Default::default(),
         }
     }
 

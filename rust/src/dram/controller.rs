@@ -7,6 +7,7 @@
 //! write lines in (in command order). The interconnect under test is the
 //! only thing between this controller and the accelerator ports.
 
+use crate::config::PayloadMode;
 use crate::dram::DdrTiming;
 use crate::interconnect::arbiter::MemCommand;
 use crate::sim::stats::Counter;
@@ -35,6 +36,10 @@ pub struct MemoryController {
     /// demand). The scenario engine uses this as a data-independent
     /// "this tenant's writes have landed" signal.
     write_lines_landed: Vec<u64>,
+    /// Fast backend: reads return header-only shadows without touching
+    /// the store; writes land as shadows (landed counters and row/bank
+    /// timing are address-driven and stay bit-identical).
+    payload: PayloadMode,
 }
 
 impl MemoryController {
@@ -48,7 +53,25 @@ impl MemoryController {
             busy_until: 0,
             cycle: 0,
             write_lines_landed: Vec::new(),
+            payload: PayloadMode::Full,
         }
+    }
+
+    /// Select payload handling; call before any traffic. In elided
+    /// mode `preload` becomes a no-op (reads never consult the store)
+    /// and `dump` returns shadows.
+    pub fn set_payload_mode(&mut self, mode: PayloadMode) {
+        assert!(self.store.is_empty() && self.active.is_none(), "mode change mid-run");
+        self.payload = mode;
+    }
+
+    /// The idle-edge bulk skip: account `n` controller cycles in which
+    /// a stepwise run would have ticked an idle controller. Exact
+    /// because an idle tick with an empty command channel does nothing
+    /// but bump [`Counter::DramIdleCycles`].
+    pub fn skip_idle_cycles(&self, n: u64, stats: &mut Stats) {
+        debug_assert!(self.is_idle(), "bulk-skipping a busy controller");
+        stats.add(Counter::DramIdleCycles, n);
     }
 
     /// Lines committed to the store on behalf of write port `port` so
@@ -57,16 +80,26 @@ impl MemoryController {
         self.write_lines_landed.get(port).copied().unwrap_or(0)
     }
 
-    /// Preload lines into the backing store (tensor upload path).
+    /// Preload lines into the backing store (tensor upload path). A
+    /// no-op in elided mode: reads never consult the store there, so
+    /// storing payload would only cost memory.
     pub fn preload(&mut self, base: LineAddr, lines: impl IntoIterator<Item = Line>) {
+        if self.payload.is_elided() {
+            return;
+        }
         for (i, line) in lines.into_iter().enumerate() {
             assert_eq!(line.num_words(), self.words_per_line);
             self.store.insert(base + i as u64, line);
         }
     }
 
-    /// Read lines back out (result download / golden checks).
+    /// Read lines back out (result download / golden checks). In
+    /// elided mode every line is a shadow — content checks are
+    /// meaningless there by construction.
     pub fn dump(&self, base: LineAddr, count: usize) -> Vec<Line> {
+        if self.payload.is_elided() {
+            return (0..count).map(|_| Line::elided(self.words_per_line)).collect();
+        }
         (0..count as u64)
             .map(|i| {
                 self.store
@@ -150,11 +183,14 @@ impl MemoryController {
                     stats.bump(Counter::DramTimingStallCycles);
                     return;
                 }
-                let line = self
-                    .store
-                    .get(&addr)
-                    .cloned()
-                    .unwrap_or_else(|| Line::zeroed(self.words_per_line));
+                let line = if self.payload.is_elided() {
+                    Line::elided(self.words_per_line)
+                } else {
+                    self.store
+                        .get(&addr)
+                        .cloned()
+                        .unwrap_or_else(|| Line::zeroed(self.words_per_line))
+                };
                 rd_line_ch.push(TaggedLine { port, line });
                 stats.bump(Counter::DramReadLines);
                 match self.active.as_mut().unwrap() {
@@ -181,7 +217,12 @@ impl MemoryController {
                     stats.bump(Counter::DramWriteDataStall);
                     return;
                 };
-                self.store.insert(addr, line);
+                // Elided mode: the landed counter below is the only
+                // observable consequence of a write (the PR 3 flush
+                // signal); storing a shadow would buy nothing.
+                if !self.payload.is_elided() {
+                    self.store.insert(addr, line);
+                }
                 stats.bump(Counter::DramWriteLines);
                 if port >= self.write_lines_landed.len() {
                     self.write_lines_landed.resize(port + 1, 0);

@@ -8,6 +8,7 @@
 //! the matrix runs them across threads (`util::par_map`); results are
 //! ordered and bit-identical to a sequential run.
 
+use crate::config::SimBackend;
 use crate::eval::report::Table;
 use crate::interconnect::Design;
 use crate::util::{par_map, par_map_with};
@@ -38,9 +39,10 @@ fn matrix_points() -> Vec<(&'static str, Design)> {
     out
 }
 
-fn run_point(name: &'static str, design: Design) -> ScenarioPoint {
+fn run_point(name: &'static str, design: Design, backend: SimBackend) -> ScenarioPoint {
     let mut sc = Scenario::builtin(name).expect("builtin scenario");
     sc.cfg.design = design;
+    sc.cfg.sim = backend;
     let out = run_scenario(&sc).expect("builtin scenario runs");
     ScenarioPoint {
         scenario: name,
@@ -55,13 +57,25 @@ fn run_point(name: &'static str, design: Design) -> ScenarioPoint {
 }
 
 /// Run the matrix with an explicit worker count (determinism tests).
+/// Uses the full reference backend: this matrix is where golden-model
+/// verification earns its ✓ column.
 pub fn sweep_with_threads(workers: usize) -> Vec<ScenarioPoint> {
-    par_map_with(workers, &matrix_points(), |&(name, design)| run_point(name, design))
+    sweep_with_threads_backend(workers, SimBackend::full())
+}
+
+/// The matrix under an explicit simulation backend. Cycle counts,
+/// lines moved, and fabric timing are backend-invariant; the elided
+/// backend reports `verified` vacuously (nothing to check) and the
+/// fingerprint differs only in the absent feature maps.
+pub fn sweep_with_threads_backend(workers: usize, backend: SimBackend) -> Vec<ScenarioPoint> {
+    par_map_with(workers, &matrix_points(), move |&(name, design)| {
+        run_point(name, design, backend)
+    })
 }
 
 /// Run the full matrix (threaded per `MEDUSA_THREADS`).
 pub fn sweep() -> Vec<ScenarioPoint> {
-    par_map(&matrix_points(), |&(name, design)| run_point(name, design))
+    par_map(&matrix_points(), |&(name, design)| run_point(name, design, SimBackend::full()))
 }
 
 /// Render the matrix as a table.
@@ -94,6 +108,20 @@ mod tests {
         assert_eq!(pts.len(), Scenario::builtin_names().len() * 2);
         assert!(pts.iter().all(|p| p.verified), "every matrix point must verify");
         assert!(pts.iter().all(|p| p.lines_moved > 0));
+    }
+
+    #[test]
+    fn fast_backend_matrix_matches_full_backend_timing() {
+        let full = sweep_with_threads_backend(2, SimBackend::full());
+        let fast = sweep_with_threads_backend(2, SimBackend::fast());
+        assert_eq!(full.len(), fast.len());
+        for (a, b) in full.iter().zip(fast.iter()) {
+            assert_eq!((a.scenario, a.design), (b.scenario, b.design));
+            assert_eq!(a.fabric_cycles, b.fabric_cycles, "{} {:?}", a.scenario, a.design);
+            assert_eq!(a.lines_moved, b.lines_moved, "{} {:?}", a.scenario, a.design);
+            assert_eq!(a.sim_time_us, b.sim_time_us, "{} {:?}", a.scenario, a.design);
+            assert!(a.verified && b.verified);
+        }
     }
 
     #[test]

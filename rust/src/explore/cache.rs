@@ -2,9 +2,10 @@
 //!
 //! Keyed by a stable FNV-1a hash of a design point's full identity (the
 //! parseable design spec, every geometry field, the layer-processor
-//! size, the channel depths, the probe network, and a format/version
-//! tag that invalidates entries whenever the models change). Values are
-//! the exact integer [`Metrics`], so a warm sweep reproduces a cold one
+//! size, the channel depths, the probe network, the evaluation payload
+//! mode — see [`point_key`] for why — and a format/version tag that
+//! invalidates entries whenever the models change). Values are the
+//! exact integer [`Metrics`], so a warm sweep reproduces a cold one
 //! bit-for-bit — the incremental-sweep correctness contract, locked by
 //! `tests/explore_conformance.rs`.
 //!
@@ -12,7 +13,7 @@
 //! files are deterministic, diffable, and trivially inspectable:
 //!
 //! ```text
-//! medusa-explore-cache v3
+//! medusa-explore-cache v4
 //! <key:016x> <lut> <ff> <bram18> <dsp> <fmax> <lines> <bits> <ps> <cycles> <verified>
 //! ```
 //!
@@ -21,6 +22,7 @@
 //! file atomically-enough (write + rename is overkill here: the cache is
 //! a pure accelerator whose loss costs only recomputation).
 
+use crate::config::PayloadMode;
 use crate::explore::space::{ExplorePoint, Metrics};
 use crate::fpga::Resources;
 use anyhow::{Context, Result};
@@ -28,19 +30,34 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 /// Bump on any change to the resource/timing models, the probe scenario
-/// semantics, or the entry layout — stale entries must never be served.
-pub const CACHE_VERSION: u64 = 3;
+/// semantics, the evaluation backend, or the entry layout — stale
+/// entries must never be served. v4: point evaluation moved to the
+/// stats-exact fast backend (payload elision + idle-edge leaping);
+/// values are proven bit-identical to v3's, but the policy is to never
+/// serve entries across an evaluation-path change.
+pub const CACHE_VERSION: u64 = 4;
 
-const HEADER: &str = "medusa-explore-cache v3";
+const HEADER: &str = "medusa-explore-cache v4";
 
-/// Stable identity hash of one (point, probe) evaluation.
-pub fn point_key(point: &ExplorePoint, probe: &str) -> u64 {
+/// Stable identity hash of one (point, probe, payload-mode) evaluation.
+///
+/// The payload mode participates because `Metrics::verified` means
+/// different things per mode: a full-payload evaluation golden-checks
+/// the probe's data, an elided one has no data to check (vacuously
+/// true). Every *numeric* metric is backend-invariant (the fast-backend
+/// conformance contract), but serving an elided entry to a
+/// `--payload=full` sweep would silently skip the golden verification
+/// the caller explicitly asked for — so the two modes keep separate
+/// entries. Edge mode does NOT participate: leaping changes no field,
+/// verification included.
+pub fn point_key(point: &ExplorePoint, probe: &str, payload: PayloadMode) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     let mut mix = |v: u64| {
         h ^= v;
         h = h.wrapping_mul(0x1000_0000_01b3);
     };
     mix(CACHE_VERSION);
+    mix(payload as u64);
     for b in point.design.spec().bytes() {
         mix(b as u64);
     }
@@ -244,11 +261,21 @@ mod tests {
     #[test]
     fn keys_distinguish_every_grid_point() {
         let pts = DesignSpace::default_grid().points();
-        let mut keys: Vec<u64> = pts.iter().map(|p| point_key(p, "gemm-mlp")).collect();
+        let mut keys: Vec<u64> =
+            pts.iter().map(|p| point_key(p, "gemm-mlp", PayloadMode::Elided)).collect();
         keys.sort_unstable();
         keys.dedup();
         assert_eq!(keys.len(), pts.len(), "cache keys must be collision-free on the grid");
         // The probe participates in the key.
-        assert_ne!(point_key(&pts[0], "gemm-mlp"), point_key(&pts[0], "tiny-vgg"));
+        assert_ne!(
+            point_key(&pts[0], "gemm-mlp", PayloadMode::Elided),
+            point_key(&pts[0], "tiny-vgg", PayloadMode::Elided)
+        );
+        // So does the payload mode: a full-payload sweep must never be
+        // served an elided (vacuously verified) evaluation.
+        assert_ne!(
+            point_key(&pts[0], "gemm-mlp", PayloadMode::Elided),
+            point_key(&pts[0], "gemm-mlp", PayloadMode::Full)
+        );
     }
 }

@@ -33,5 +33,5 @@ pub mod space;
 
 pub use cache::{point_key, ExploreCache};
 pub use pareto::{pareto_frontier, FrontierEntry};
-pub use search::{run_search, SearchResult, Strategy};
+pub use search::{run_search, run_search_with, SearchResult, Strategy};
 pub use space::{DesignSpace, ExplorePoint, Metrics};

@@ -7,9 +7,10 @@
 //! bit-identical whether it ran on one thread (`MEDUSA_THREADS=1`) or
 //! many, and whether the cache was cold or warm.
 
+use crate::config::SimBackend;
 use crate::explore::cache::{point_key, ExploreCache};
 use crate::explore::pareto::{pareto_frontier, FrontierEntry};
-use crate::explore::space::{evaluate, DesignSpace, ExplorePoint, Metrics};
+use crate::explore::space::{evaluate_with, DesignSpace, ExplorePoint, Metrics};
 use crate::util::{par_map_with, Prng};
 use anyhow::Result;
 use std::collections::{BTreeMap, HashMap};
@@ -63,6 +64,7 @@ struct Evaluator<'a> {
     probe: &'a str,
     all: &'a [ExplorePoint],
     workers: usize,
+    backend: SimBackend,
     memo: BTreeMap<usize, Metrics>,
     cache_hits: usize,
     computed: usize,
@@ -76,7 +78,7 @@ impl<'a> Evaluator<'a> {
                 continue;
             }
             if let Some(c) = cache.as_deref() {
-                if let Some(m) = c.get(point_key(&self.all[i], self.probe)) {
+                if let Some(m) = c.get(point_key(&self.all[i], self.probe, self.backend.payload)) {
                     self.memo.insert(i, m);
                     self.cache_hits += 1;
                     continue;
@@ -88,11 +90,12 @@ impl<'a> Evaluator<'a> {
             return;
         }
         let probe = self.probe;
+        let backend = self.backend;
         let points: Vec<ExplorePoint> = todo.iter().map(|&i| self.all[i]).collect();
-        let metrics = par_map_with(self.workers, &points, |p| evaluate(p, probe));
+        let metrics = par_map_with(self.workers, &points, |p| evaluate_with(p, probe, backend));
         for (&i, m) in todo.iter().zip(metrics) {
             if let Some(c) = cache.as_deref_mut() {
-                c.insert(point_key(&self.all[i], self.probe), m);
+                c.insert(point_key(&self.all[i], self.probe, self.backend.payload), m);
             }
             self.memo.insert(i, m);
             self.computed += 1;
@@ -100,22 +103,39 @@ impl<'a> Evaluator<'a> {
     }
 }
 
-/// Run a search. `workers` is the parallel width for evaluation batches
-/// (pass `util::parallel::max_threads()` to honour `MEDUSA_THREADS`);
-/// results are bit-identical for any value. A cache, when given, is
-/// both consulted and extended (and saved before returning).
+/// Run a search with the fast (stats-exact) evaluation backend — the
+/// explorer default. See [`run_search_with`].
 pub fn run_search(
     space: &DesignSpace,
     strategy: &Strategy,
     seed: u64,
     workers: usize,
+    cache: Option<&mut ExploreCache>,
+) -> Result<SearchResult> {
+    run_search_with(space, strategy, seed, workers, cache, SimBackend::fast())
+}
+
+/// Run a search. `workers` is the parallel width for evaluation batches
+/// (pass `util::parallel::max_threads()` to honour `MEDUSA_THREADS`);
+/// results are bit-identical for any value — and for any `backend`,
+/// since evaluation metrics are backend-invariant. A cache, when given,
+/// is both consulted and extended (and saved before returning); entries
+/// are keyed per payload mode so a full-payload sweep never silently
+/// reuses an elided (unverifying) evaluation — see [`point_key`].
+pub fn run_search_with(
+    space: &DesignSpace,
+    strategy: &Strategy,
+    seed: u64,
+    workers: usize,
     mut cache: Option<&mut ExploreCache>,
+    backend: SimBackend,
 ) -> Result<SearchResult> {
     let all = space.points();
     let mut ev = Evaluator {
         probe: &space.probe,
         all: &all,
         workers,
+        backend,
         memo: BTreeMap::new(),
         cache_hits: 0,
         computed: 0,

@@ -77,6 +77,11 @@ pub struct Packer {
     acc: Line,
     acc_len: usize,
     ready_line: Option<Line>,
+    /// Fast-backend payload elision: count words instead of storing
+    /// them, and promote [`Line::elided`] shadows. All readiness and
+    /// occupancy behaviour (`can_accept`, `has_line`, `pending_words`)
+    /// is word-count-driven and therefore identical in both modes.
+    elided: bool,
 }
 
 impl Packer {
@@ -87,7 +92,18 @@ impl Packer {
             acc: Line::zeroed(words_per_line),
             acc_len: 0,
             ready_line: None,
+            elided: false,
         }
+    }
+
+    /// Switch this packer to payload-elided assembly. Only valid while
+    /// empty (mode is fixed per run, set at system construction).
+    pub fn set_elided(&mut self, elided: bool) {
+        assert!(
+            self.acc_len == 0 && self.ready_line.is_none(),
+            "payload mode change on a non-empty packer"
+        );
+        self.elided = elided;
     }
 
     /// Can a word be accepted this cycle? Blocked only while a completed
@@ -99,7 +115,9 @@ impl Packer {
 
     pub fn accept(&mut self, w: Word) {
         assert!(self.acc_len < self.words_per_line, "packer accumulator full");
-        self.acc.set_word(self.acc_len, w);
+        if !self.elided {
+            self.acc.set_word(self.acc_len, w);
+        }
         self.acc_len += 1;
         if self.acc_len == self.words_per_line && self.ready_line.is_none() {
             self.promote();
@@ -108,7 +126,11 @@ impl Packer {
 
     /// Move the full accumulator into the output register and reset it.
     fn promote(&mut self) {
-        let full = std::mem::replace(&mut self.acc, Line::zeroed(self.words_per_line));
+        let full = if self.elided {
+            Line::elided(self.words_per_line)
+        } else {
+            std::mem::replace(&mut self.acc, Line::zeroed(self.words_per_line))
+        };
         self.ready_line = Some(full);
         self.acc_len = 0;
     }
@@ -183,6 +205,29 @@ mod tests {
         assert_eq!(p.take_line().unwrap(), Line::from_words(vec![1, 2]));
         assert!(p.has_line(), "second line promoted on take");
         assert_eq!(p.take_line().unwrap(), Line::from_words(vec![3, 4]));
+    }
+
+    #[test]
+    fn elided_packer_counts_and_emits_shadows() {
+        let mut p = Packer::new(4);
+        p.set_elided(true);
+        for w in [9u64, 9, 9, 9] {
+            assert!(p.can_accept());
+            p.accept(w);
+        }
+        assert!(p.has_line());
+        let line = p.take_line().unwrap();
+        assert!(line.is_elided());
+        assert_eq!(line.num_words(), 4);
+        // Double-buffering semantics are unchanged.
+        p.accept(1);
+        assert_eq!(p.pending_words(), 1);
+        // Unpacker streams shadow words from an elided line.
+        let mut u = Unpacker::new(4);
+        u.load(Line::elided(4));
+        assert!(u.has_word());
+        assert_eq!((0..4).map(|_| u.take_word().unwrap()).collect::<Vec<_>>(), vec![0; 4]);
+        assert!(u.can_load());
     }
 
     #[test]

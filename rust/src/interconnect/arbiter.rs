@@ -108,6 +108,17 @@ impl Arbiter {
         self.issued_writes.len()
     }
 
+    /// True iff `tick` is a complete no-op (no grants possible, no
+    /// write data to stream, no stats) and stays one until a new
+    /// request is submitted — the arbiter's `next_activity_edge()`.
+    /// Read credits in flight don't matter: they only *unblock* queued
+    /// requests, of which there are none when this returns true.
+    pub fn is_leap_idle(&self) -> bool {
+        self.issued_writes.is_empty()
+            && self.read_q.iter().all(|q| q.is_empty())
+            && self.write_q.iter().all(|q| q.is_empty())
+    }
+
     /// The interface adapter calls this when a read line lands in the
     /// read network (credit return).
     pub fn on_read_line_delivered(&mut self, port: PortId) {

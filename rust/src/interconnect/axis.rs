@@ -12,6 +12,7 @@
 //! The AXI4-Stream Interconnect IP also tops out at 16 ports (§IV-B),
 //! which `AxisReadNetwork::new` enforces.
 
+use crate::config::PayloadMode;
 use crate::interconnect::baseline::{BaselineReadNetwork, BaselineWriteNetwork};
 use crate::interconnect::{ReadNetwork, WriteNetwork};
 use crate::sim::stats::Counter;
@@ -100,6 +101,16 @@ impl ReadNetwork for AxisReadNetwork {
     fn nominal_latency(&self) -> usize {
         self.inner.nominal_latency() + REG_SLICE_STAGES as usize
     }
+
+    fn set_payload_mode(&mut self, mode: PayloadMode) {
+        // The register slices carry whole lines by value; shadows flow
+        // through them unchanged. Only the inner converters care.
+        self.inner.set_payload_mode(mode);
+    }
+
+    fn is_leap_idle(&self) -> bool {
+        self.slice.is_empty() && self.inner.is_leap_idle()
+    }
 }
 
 pub struct AxisWriteNetwork {
@@ -175,6 +186,14 @@ impl WriteNetwork for AxisWriteNetwork {
 
     fn nominal_latency(&self) -> usize {
         self.inner.nominal_latency() + REG_SLICE_STAGES as usize
+    }
+
+    fn set_payload_mode(&mut self, mode: PayloadMode) {
+        self.inner.set_payload_mode(mode);
+    }
+
+    fn is_leap_idle(&self) -> bool {
+        self.slice.is_empty() && self.inner.is_leap_idle()
     }
 }
 

@@ -6,6 +6,7 @@
 //! port can request, so bursts never back-pressure the controller); each
 //! FIFO feeds a data-width converter presenting the narrow `W_acc` port.
 
+use crate::config::PayloadMode;
 use crate::hw::{BoundedFifo, Unpacker};
 use crate::interconnect::ReadNetwork;
 use crate::sim::stats::Counter;
@@ -105,6 +106,18 @@ impl ReadNetwork for BaselineReadNetwork {
     fn nominal_latency(&self) -> usize {
         // Demux register + FIFO fall-through + converter load.
         2
+    }
+
+    fn set_payload_mode(&mut self, _mode: PayloadMode) {
+        // Nothing to gate: the controller already delivers elided
+        // shadows in elided mode, the per-port FIFOs store whatever
+        // line value arrives (a shadow is a header-only value), and the
+        // unpacker streams shadow words from it. Occupancy, credits,
+        // and stats are line/word-count-driven either way.
+    }
+
+    fn is_leap_idle(&self) -> bool {
+        self.lanes.iter().all(|l| l.fifo.is_empty() && l.conv.remaining() == 0)
     }
 }
 

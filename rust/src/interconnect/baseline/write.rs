@@ -6,6 +6,7 @@
 //! completed line per cycle to the memory controller — full bursts stream
 //! back-to-back at the controller's full bandwidth.
 
+use crate::config::PayloadMode;
 use crate::hw::{BoundedFifo, Packer};
 use crate::interconnect::WriteNetwork;
 use crate::sim::stats::Counter;
@@ -94,6 +95,21 @@ impl WriteNetwork for BaselineWriteNetwork {
     fn nominal_latency(&self) -> usize {
         // Converter output register + FIFO + mux register.
         2
+    }
+
+    fn set_payload_mode(&mut self, mode: PayloadMode) {
+        // The packers assemble the lines, so they are the one place the
+        // write path touches payload: in elided mode they count words
+        // and promote header-only shadows.
+        for lane in self.lanes.iter_mut() {
+            lane.conv.set_elided(mode.is_elided());
+        }
+    }
+
+    fn is_leap_idle(&self) -> bool {
+        self.lanes
+            .iter()
+            .all(|l| l.fifo.is_empty() && !l.conv.has_line() && l.conv.pending_words() == 0)
     }
 }
 

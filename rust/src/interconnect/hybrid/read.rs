@@ -8,6 +8,7 @@
 //! structure driven by the chunked schedule.
 
 use super::HybridConfig;
+use crate::config::PayloadMode;
 use crate::hw::BankedSram;
 use crate::interconnect::baseline::BaselineReadNetwork;
 use crate::interconnect::medusa::{MedusaReadNetwork, MedusaTuning};
@@ -71,6 +72,8 @@ pub(crate) struct PartialReadNetwork {
     ports: Vec<PortCtl>,
     pending_halves: VecDeque<PendingHalf>,
     delivered_this_cycle: bool,
+    /// Fast backend: skip bank payload traffic (see `medusa::read`).
+    payload: PayloadMode,
     cycle: u64,
 }
 
@@ -86,6 +89,7 @@ impl PartialReadNetwork {
             ports: (0..geom.read_ports).map(|_| PortCtl::new()).collect(),
             pending_halves: VecDeque::new(),
             delivered_this_cycle: false,
+            payload: PayloadMode::Full,
             cycle: 0,
         }
     }
@@ -101,8 +105,11 @@ impl PartialReadNetwork {
     fn tick(&mut self, cycle: u64, stats: &mut Stats) {
         self.cycle = cycle;
         self.delivered_this_cycle = false;
-        self.input.new_cycle();
-        self.output.new_cycle();
+        let elided = self.payload.is_elided();
+        if !elided {
+            self.input.new_cycle();
+            self.output.new_cycle();
+        }
         let n = self.n();
         let r = self.cfg.transpose_radix;
         let chunks = n / r;
@@ -148,10 +155,12 @@ impl PartialReadNetwork {
             let w = ((j % r) + rot_w) % r;
             let m = ((j / r) + rot_m) % chunks;
             let k = m * r + w;
-            let slot = self.region(j) + self.ports[j].head;
-            let word = self.input.read(k, slot);
-            let ctl = &self.ports[j];
-            self.output.write(j, ctl.fill_half * n + k, word);
+            if !elided {
+                let slot = self.region(j) + self.ports[j].head;
+                let word = self.input.read(k, slot);
+                let ctl = &self.ports[j];
+                self.output.write(j, ctl.fill_half * n + k, word);
+            }
             let ctl = &mut self.ports[j];
             ctl.done_words += 1;
             words_rotated += 1;
@@ -188,9 +197,11 @@ impl PartialReadNetwork {
         let p = tl.port;
         assert!(self.ports[p].in_count < self.geom.max_burst, "input region overflow, port {p}");
         self.delivered_this_cycle = true;
-        let slot = self.region(p) + self.ports[p].tail;
-        for y in 0..n {
-            self.input.write(y, slot, tl.line.word(y) & self.geom.word_mask());
+        if !self.payload.is_elided() {
+            let slot = self.region(p) + self.ports[p].tail;
+            for y in 0..n {
+                self.input.write(y, slot, tl.line.word(y) & self.geom.word_mask());
+            }
         }
         let ctl = &mut self.ports[p];
         ctl.tail = (ctl.tail + 1) % self.geom.max_burst;
@@ -199,13 +210,19 @@ impl PartialReadNetwork {
 
     fn port_take_word(&mut self, port: PortId) -> Option<Word> {
         let n = self.n();
+        let elided = self.payload.is_elided();
         let ctl = &mut self.ports[port];
         assert!(!ctl.word_taken_this_cycle, "port {port} popped twice in one cycle");
         if !ctl.half_full[ctl.drain_half] {
             return None;
         }
-        let addr = ctl.drain_half * n + ctl.drain_idx;
-        let w = self.output.read(port, addr);
+        let w = if elided {
+            0
+        } else {
+            let addr = ctl.drain_half * n + ctl.drain_idx;
+            self.output.read(port, addr)
+        };
+        let ctl = &mut self.ports[port];
         ctl.word_taken_this_cycle = true;
         ctl.drain_idx += 1;
         if ctl.drain_idx == n {
@@ -315,6 +332,19 @@ impl ReadNetwork for HybridReadNetwork {
     fn nominal_latency(&self) -> usize {
         read_delegate!(self, n => n.nominal_latency(),
             partial p => p.n() + p.cfg.stage_pipelining + 1)
+    }
+
+    fn set_payload_mode(&mut self, mode: PayloadMode) {
+        read_delegate!(mut self, n => n.set_payload_mode(mode), partial p => p.payload = mode)
+    }
+
+    fn is_leap_idle(&self) -> bool {
+        read_delegate!(self, n => n.is_leap_idle(), partial p => {
+            p.pending_halves.is_empty()
+                && p.ports.iter().all(|c| {
+                    c.in_count == 0 && !c.active && !c.half_full[0] && !c.half_full[1]
+                })
+        })
     }
 }
 

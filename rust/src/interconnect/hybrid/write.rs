@@ -6,6 +6,7 @@
 //! over Medusa's banked-buffer structure.
 
 use super::HybridConfig;
+use crate::config::PayloadMode;
 use crate::hw::BankedSram;
 use crate::interconnect::baseline::BaselineWriteNetwork;
 use crate::interconnect::medusa::{MedusaTuning, MedusaWriteNetwork};
@@ -66,6 +67,8 @@ pub(crate) struct PartialWriteNetwork {
     ports: Vec<PortCtl>,
     pending_ready: VecDeque<PendingReady>,
     line_taken_this_cycle: bool,
+    /// Fast backend: skip bank payload traffic (see `medusa::write`).
+    payload: PayloadMode,
     cycle: u64,
 }
 
@@ -81,6 +84,7 @@ impl PartialWriteNetwork {
             ports: (0..geom.write_ports).map(|_| PortCtl::new()).collect(),
             pending_ready: VecDeque::new(),
             line_taken_this_cycle: false,
+            payload: PayloadMode::Full,
             cycle: 0,
         }
     }
@@ -96,8 +100,11 @@ impl PartialWriteNetwork {
     fn tick(&mut self, cycle: u64, stats: &mut Stats) {
         self.cycle = cycle;
         self.line_taken_this_cycle = false;
-        self.input.new_cycle();
-        self.output.new_cycle();
+        let elided = self.payload.is_elided();
+        if !elided {
+            self.input.new_cycle();
+            self.output.new_cycle();
+        }
         let n = self.n();
         let r = self.cfg.transpose_radix;
         let chunks = n / r;
@@ -138,10 +145,12 @@ impl PartialWriteNetwork {
             let w = ((p % r) + rot_w) % r;
             let m = ((p / r) + rot_m) % chunks;
             let j = m * r + w;
-            let addr = self.ports[p].drain_half * n + j;
-            let word = self.input.read(p, addr);
-            let slot = self.region(p) + self.ports[p].out_tail;
-            self.output.write(j, slot, word);
+            if !elided {
+                let addr = self.ports[p].drain_half * n + j;
+                let word = self.input.read(p, addr);
+                let slot = self.region(p) + self.ports[p].out_tail;
+                self.output.write(j, slot, word);
+            }
             let ctl = &mut self.ports[p];
             ctl.done_words += 1;
             words_rotated += 1;
@@ -169,6 +178,7 @@ impl PartialWriteNetwork {
     fn port_push_word(&mut self, port: PortId, w: Word) {
         let n = self.n();
         let mask = self.geom.word_mask();
+        let elided = self.payload.is_elided();
         let ctl = &mut self.ports[port];
         assert!(!ctl.word_pushed_this_cycle, "port {port} pushed twice in one cycle");
         assert!(!ctl.half_full[ctl.fill_half], "input half overflow, port {port}");
@@ -181,7 +191,9 @@ impl PartialWriteNetwork {
             ctl.fill_half = 1 - fill_half;
             ctl.fill_idx = 0;
         }
-        self.input.write(port, addr, w & mask);
+        if !elided {
+            self.input.write(port, addr, w & mask);
+        }
     }
 
     fn mem_take_line(&mut self, port: PortId) -> Option<Line> {
@@ -190,9 +202,13 @@ impl PartialWriteNetwork {
         if self.ports[port].ready == 0 {
             return None;
         }
-        let slot = self.region(port) + self.ports[port].out_head;
-        let output = &mut self.output;
-        let line = Line::from_fn(n, |y| output.read(y, slot));
+        let line = if self.payload.is_elided() {
+            Line::elided(n)
+        } else {
+            let slot = self.region(port) + self.ports[port].out_head;
+            let output = &mut self.output;
+            Line::from_fn(n, |y| output.read(y, slot))
+        };
         let ctl = &mut self.ports[port];
         ctl.out_head = (ctl.out_head + 1) % self.geom.max_burst;
         ctl.ready -= 1;
@@ -293,6 +309,24 @@ impl WriteNetwork for HybridWriteNetwork {
     fn nominal_latency(&self) -> usize {
         write_delegate!(self, n => n.nominal_latency(),
             partial p => p.n() + p.cfg.stage_pipelining + 1)
+    }
+
+    fn set_payload_mode(&mut self, mode: PayloadMode) {
+        write_delegate!(mut self, n => n.set_payload_mode(mode), partial p => p.payload = mode)
+    }
+
+    fn is_leap_idle(&self) -> bool {
+        write_delegate!(self, n => n.is_leap_idle(), partial p => {
+            p.pending_ready.is_empty()
+                && p.ports.iter().all(|c| {
+                    !c.active
+                        && c.fill_idx == 0
+                        && !c.half_full[0]
+                        && !c.half_full[1]
+                        && c.ready == 0
+                        && c.out_count == 0
+                })
+        })
     }
 }
 

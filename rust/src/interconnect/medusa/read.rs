@@ -1,6 +1,7 @@
 //! Medusa memory-read data transfer network (paper §III-A1, Figs 3a/4).
 
 use super::MedusaTuning;
+use crate::config::PayloadMode;
 use crate::hw::BankedSram;
 use crate::interconnect::ReadNetwork;
 use crate::sim::stats::{Counter, SampleId};
@@ -76,6 +77,10 @@ pub struct MedusaReadNetwork {
     ports: Vec<PortCtl>,
     pending_halves: VecDeque<PendingHalf>,
     delivered_this_cycle: bool,
+    /// Fast backend: skip all bank payload traffic; every pointer,
+    /// counter, and stat update stays identical (see DESIGN.md §"Fast
+    /// backend").
+    payload: PayloadMode,
     cycle: u64,
 }
 
@@ -95,6 +100,7 @@ impl MedusaReadNetwork {
             ports: (0..geom.read_ports).map(|_| PortCtl::new()).collect(),
             pending_halves: VecDeque::new(),
             delivered_this_cycle: false,
+            payload: PayloadMode::Full,
             cycle: 0,
         }
     }
@@ -129,11 +135,15 @@ impl ReadNetwork for MedusaReadNetwork {
         let p = tl.port;
         assert!(self.ports[p].in_count < self.geom.max_burst, "input region overflow, port {p}");
         self.delivered_this_cycle = true;
-        let slot = self.region(p) + self.ports[p].tail;
         // The W_line line is written across all N banks in one cycle
-        // (word y -> bank y), at the port's tail slot address.
-        for y in 0..n {
-            self.input.write(y, slot, tl.line.word(y) & self.geom.word_mask());
+        // (word y -> bank y), at the port's tail slot address. Elided
+        // mode skips the payload writes; the pointer bookkeeping below
+        // is what the rest of the datapath actually keys off.
+        if !self.payload.is_elided() {
+            let slot = self.region(p) + self.ports[p].tail;
+            for y in 0..n {
+                self.input.write(y, slot, tl.line.word(y) & self.geom.word_mask());
+            }
         }
         let ctl = &mut self.ports[p];
         ctl.tail = (ctl.tail + 1) % self.geom.max_burst;
@@ -152,13 +162,19 @@ impl ReadNetwork for MedusaReadNetwork {
 
     fn port_take_word(&mut self, port: PortId) -> Option<Word> {
         let n = self.n();
+        let elided = self.payload.is_elided();
         let ctl = &mut self.ports[port];
         assert!(!ctl.word_taken_this_cycle, "port {port} popped twice in one cycle");
         if !ctl.half_full[ctl.drain_half] {
             return None;
         }
-        let addr = ctl.drain_half * n + ctl.drain_idx;
-        let w = self.output.read(port, addr);
+        let w = if elided {
+            0 // the canonical shadow word; drain pointers advance as usual
+        } else {
+            let addr = ctl.drain_half * n + ctl.drain_idx;
+            self.output.read(port, addr)
+        };
+        let ctl = &mut self.ports[port];
         ctl.word_taken_this_cycle = true;
         ctl.drain_idx += 1;
         if ctl.drain_idx == n {
@@ -172,8 +188,11 @@ impl ReadNetwork for MedusaReadNetwork {
     fn tick(&mut self, cycle: u64, stats: &mut Stats) {
         self.cycle = cycle;
         self.delivered_this_cycle = false;
-        self.input.new_cycle();
-        self.output.new_cycle();
+        let elided = self.payload.is_elided();
+        if !elided {
+            self.input.new_cycle();
+            self.output.new_cycle();
+        }
         let n = self.n();
         let rot = (cycle % n as u64) as usize;
 
@@ -225,11 +244,16 @@ impl ReadNetwork for MedusaReadNetwork {
             if !self.ports[j].active {
                 continue;
             }
+            // The diagonal address math stays live in elided mode (it
+            // drives no state, but keeping it out of the gate would
+            // invite drift); only the bank accesses are skipped.
             let k = (j + rot) % n;
-            let slot = self.region(j) + self.ports[j].head;
-            let word = self.input.read(k, slot);
-            let ctl = &self.ports[j];
-            self.output.write(j, ctl.fill_half * n + k, word);
+            if !elided {
+                let slot = self.region(j) + self.ports[j].head;
+                let word = self.input.read(k, slot);
+                let ctl = &self.ports[j];
+                self.output.write(j, ctl.fill_half * n + k, word);
+            }
             let ctl = &mut self.ports[j];
             ctl.done_words += 1;
             words_rotated += 1;
@@ -264,6 +288,21 @@ impl ReadNetwork for MedusaReadNetwork {
         // §III-E: constant W_line / W_acc cycles, plus rotator pipelining
         // if enabled, plus one activation cycle.
         self.n() + self.tuning.rotator_stages + 1
+    }
+
+    fn set_payload_mode(&mut self, mode: PayloadMode) {
+        assert!(
+            self.ports.iter().all(|c| c.in_count == 0 && !c.active),
+            "payload mode change on a non-empty network"
+        );
+        self.payload = mode;
+    }
+
+    fn is_leap_idle(&self) -> bool {
+        self.pending_halves.is_empty()
+            && self.ports.iter().all(|c| {
+                c.in_count == 0 && !c.active && !c.half_full[0] && !c.half_full[1]
+            })
     }
 }
 

@@ -14,6 +14,7 @@
 //! it at port `p`'s current output line slot.
 
 use super::MedusaTuning;
+use crate::config::PayloadMode;
 use crate::hw::BankedSram;
 use crate::interconnect::WriteNetwork;
 use crate::sim::stats::Counter;
@@ -79,6 +80,8 @@ pub struct MedusaWriteNetwork {
     ports: Vec<PortCtl>,
     pending_ready: VecDeque<PendingReady>,
     line_taken_this_cycle: bool,
+    /// Fast backend: skip bank payload traffic, emit elided lines.
+    payload: PayloadMode,
     cycle: u64,
 }
 
@@ -98,6 +101,7 @@ impl MedusaWriteNetwork {
             ports: (0..geom.write_ports).map(|_| PortCtl::new()).collect(),
             pending_ready: VecDeque::new(),
             line_taken_this_cycle: false,
+            payload: PayloadMode::Full,
             cycle: 0,
         }
     }
@@ -128,6 +132,7 @@ impl WriteNetwork for MedusaWriteNetwork {
     fn port_push_word(&mut self, port: PortId, w: Word) {
         let n = self.n();
         let mask = self.geom.word_mask();
+        let elided = self.payload.is_elided();
         let ctl = &mut self.ports[port];
         assert!(!ctl.word_pushed_this_cycle, "port {port} pushed twice in one cycle");
         assert!(!ctl.half_full[ctl.fill_half], "input half overflow, port {port}");
@@ -140,7 +145,9 @@ impl WriteNetwork for MedusaWriteNetwork {
             ctl.fill_half = 1 - fill_half;
             ctl.fill_idx = 0;
         }
-        self.input.write(port, addr, w & mask);
+        if !elided {
+            self.input.write(port, addr, w & mask);
+        }
     }
 
     fn mem_lines_ready(&self, port: PortId) -> usize {
@@ -153,11 +160,16 @@ impl WriteNetwork for MedusaWriteNetwork {
         if self.ports[port].ready == 0 {
             return None;
         }
-        let slot = self.region(port) + self.ports[port].out_head;
         // Fill the line straight from the banks — no intermediate Vec,
         // and for inline-sized lines (N <= 32) no allocation at all.
-        let output = &mut self.output;
-        let line = Line::from_fn(n, |y| output.read(y, slot));
+        // Elided mode emits a header-only shadow instead.
+        let line = if self.payload.is_elided() {
+            Line::elided(n)
+        } else {
+            let slot = self.region(port) + self.ports[port].out_head;
+            let output = &mut self.output;
+            Line::from_fn(n, |y| output.read(y, slot))
+        };
         let ctl = &mut self.ports[port];
         ctl.out_head = (ctl.out_head + 1) % self.geom.max_burst;
         ctl.ready -= 1;
@@ -169,8 +181,11 @@ impl WriteNetwork for MedusaWriteNetwork {
     fn tick(&mut self, cycle: u64, stats: &mut Stats) {
         self.cycle = cycle;
         self.line_taken_this_cycle = false;
-        self.input.new_cycle();
-        self.output.new_cycle();
+        let elided = self.payload.is_elided();
+        if !elided {
+            self.input.new_cycle();
+            self.output.new_cycle();
+        }
         let n = self.n();
         let rot = (cycle % n as u64) as usize;
 
@@ -215,10 +230,12 @@ impl WriteNetwork for MedusaWriteNetwork {
                 continue;
             }
             let j = (p + rot) % n;
-            let addr = self.ports[p].drain_half * n + j;
-            let word = self.input.read(p, addr);
-            let slot = self.region(p) + self.ports[p].out_tail;
-            self.output.write(j, slot, word);
+            if !elided {
+                let addr = self.ports[p].drain_half * n + j;
+                let word = self.input.read(p, addr);
+                let slot = self.region(p) + self.ports[p].out_tail;
+                self.output.write(j, slot, word);
+            }
             let ctl = &mut self.ports[p];
             ctl.done_words += 1;
             words_rotated += 1;
@@ -247,6 +264,26 @@ impl WriteNetwork for MedusaWriteNetwork {
 
     fn nominal_latency(&self) -> usize {
         self.n() + self.tuning.rotator_stages + 1
+    }
+
+    fn set_payload_mode(&mut self, mode: PayloadMode) {
+        assert!(
+            self.ports.iter().all(|c| c.fill_idx == 0 && !c.active && c.out_count == 0),
+            "payload mode change on a non-empty network"
+        );
+        self.payload = mode;
+    }
+
+    fn is_leap_idle(&self) -> bool {
+        self.pending_ready.is_empty()
+            && self.ports.iter().all(|c| {
+                !c.active
+                    && c.fill_idx == 0
+                    && !c.half_full[0]
+                    && !c.half_full[1]
+                    && c.ready == 0
+                    && c.out_count == 0
+            })
     }
 }
 

@@ -21,7 +21,7 @@ use anyhow::{bail, Result};
 use medusa::accel::dnn::Network;
 use medusa::accel::quant::Fixed16;
 use medusa::cli::Args;
-use medusa::config::SystemConfig;
+use medusa::config::{EdgeMode, PayloadMode, SimBackend, SystemConfig};
 use medusa::coordinator::{ComputeBackend, InferenceDriver};
 use medusa::eval;
 use medusa::fpga::timing::peak_frequency;
@@ -84,6 +84,20 @@ fn print_usage() {
 fn design_opt(args: &Args) -> Result<Design> {
     let s = args.get_or("design", "medusa");
     Design::parse(s).ok_or_else(|| anyhow::anyhow!("unknown design {s:?}"))
+}
+
+/// Resolve `--payload` / `--edges` into a backend, over a default.
+fn backend_opts(args: &Args, default: SimBackend) -> Result<SimBackend> {
+    let mut b = default;
+    if let Some(p) = args.get("payload") {
+        b.payload = PayloadMode::parse(p)
+            .ok_or_else(|| anyhow::anyhow!("--payload must be full|elided, got {p:?}"))?;
+    }
+    if let Some(e) = args.get("edges") {
+        b.edges = EdgeMode::parse(e)
+            .ok_or_else(|| anyhow::anyhow!("--edges must be stepwise|leap, got {e:?}"))?;
+    }
+    Ok(b)
 }
 
 /// Hybrid specs carry parameters that only make sense on a geometry;
@@ -195,6 +209,8 @@ fn cmd_run(rest: &[String]) -> Result<()> {
         .opt("design", "override the scenario's design (baseline | medusa | axis)")
         .opt("capture", "write the run's canonical trace to this file")
         .opt("seed", "override the system seed (re-derives tenant workload seeds)")
+        .opt("payload", "full | elided — elided skips payload, stats stay exact (no data checks)")
+        .opt("edges", "stepwise | leap — leap skips globally idle clock edges, exactly")
         .parse(rest)?;
     let which = args
         .get("scenario")
@@ -209,6 +225,12 @@ fn cmd_run(rest: &[String]) -> Result<()> {
     }
     if let Some(s) = args.get_usize("seed")? {
         sc.reseed(s as u64);
+    }
+    // Default to whatever the scenario file configured ([sim] section,
+    // full/stepwise if absent); CLI flags override it.
+    sc.cfg.sim = backend_opts(&args, sc.cfg.sim)?;
+    if sc.cfg.sim.payload.is_elided() {
+        println!("payload elided: stats/cycles exact, golden data checks skipped");
     }
     let capture = args.get("capture");
     let (outcome, trace) = if capture.is_some() {
@@ -246,12 +268,16 @@ fn cmd_run(rest: &[String]) -> Result<()> {
 }
 
 fn cmd_replay(rest: &[String]) -> Result<()> {
-    let args = Args::default().parse(rest)?;
+    let args = Args::default()
+        .opt("payload", "full | elided — replay with payload shadows (stats still verified)")
+        .opt("edges", "stepwise | leap — skip globally idle clock edges, exactly")
+        .parse(rest)?;
     let [path] = args.positional() else {
         bail!("replay needs exactly one trace file argument");
     };
+    let backend = backend_opts(&args, SimBackend::full())?;
     let trace = medusa::sim::trace::ScenarioTrace::from_file(path)?;
-    let out = medusa::workload::verify_replay(&trace)?;
+    let out = medusa::workload::verify_replay_with(&trace, backend)?;
     println!(
         "replayed {} ({} steps, {} tenants) on {}: {} fabric cycles",
         trace.header.scenario,
@@ -334,7 +360,7 @@ fn cmd_sweep(_rest: &[String]) -> Result<()> {
 }
 
 fn cmd_explore(rest: &[String]) -> Result<()> {
-    use medusa::explore::{run_search, DesignSpace, ExploreCache, Strategy};
+    use medusa::explore::{run_search_with, DesignSpace, ExploreCache, Strategy};
     let args = Args::default()
         .opt("strategy", "grid | random | hill (default grid)")
         .opt("samples", "random strategy: points to sample (default 32)")
@@ -344,10 +370,13 @@ fn cmd_explore(rest: &[String]) -> Result<()> {
         .opt("probe", "zoo network driven through each point (default gemm-mlp)")
         .opt("cache", "result cache file (default .medusa-explore.cache)")
         .opt("json", "write BENCH_PR4.json-format results to this path")
+        .opt("payload", "full | elided (default elided — stats-exact fast backend)")
+        .opt("edges", "stepwise | leap (default leap)")
         .flag("smoke", "tiny CI grid instead of the default 100+ point grid")
         .flag("no-cache", "evaluate everything fresh, do not read or write the cache")
         .flag("csv", "emit the full evaluated set as CSV instead of tables")
         .parse(rest)?;
+    let backend = backend_opts(&args, SimBackend::fast())?;
     let mut space = if args.has_flag("smoke") {
         DesignSpace::smoke()
     } else {
@@ -377,12 +406,13 @@ fn cmd_explore(rest: &[String]) -> Result<()> {
         Some(ExploreCache::open(args.get_or("cache", ".medusa-explore.cache")))
     };
     let t0 = std::time::Instant::now();
-    let result = run_search(
+    let result = run_search_with(
         &space,
         &strategy,
         seed,
         medusa::util::parallel::max_threads(),
         cache.as_mut(),
+        backend,
     )?;
     let elapsed = t0.elapsed().as_secs_f64();
     let label = strategy.label();

@@ -129,6 +129,77 @@ impl Iterator for FiredIter {
 
 impl ExactSizeIterator for FiredIter {}
 
+/// Outcome of one [`Scheduler::leap`]: how much stepwise work the leap
+/// replaced, exactly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Leap {
+    /// Distinct edge instants covered — the number of `step()` calls a
+    /// stepwise run would have used for the same span.
+    pub steps: u64,
+    /// Edges fired per domain index (leaping supports at most two
+    /// domains; unused slots stay 0).
+    pub fired: [u64; 2],
+}
+
+fn gcd(mut a: u64, mut b: u64) -> u64 {
+    while b != 0 {
+        (a, b) = (b, a % b);
+    }
+    a
+}
+
+/// Modular inverse of `a` modulo `m` (`m >= 1`; returns 0 when m == 1).
+/// `a` and `m` must be coprime — guaranteed at the call site, where
+/// both are divided by their gcd.
+fn mod_inverse(a: u64, m: u64) -> u64 {
+    if m == 1 {
+        return 0;
+    }
+    // Extended Euclid over i128 (inputs fit u64, intermediates may not).
+    let (mut old_r, mut r) = (a as i128 % m as i128, m as i128);
+    let (mut old_s, mut s) = (1i128, 0i128);
+    while r != 0 {
+        let q = old_r / r;
+        (old_r, r) = (r, old_r - q * r);
+        (old_s, s) = (s, old_s - q * s);
+    }
+    debug_assert_eq!(old_r, 1, "mod_inverse of non-coprime inputs");
+    old_s.rem_euclid(m as i128) as u64
+}
+
+/// Count instants `t` with `lo_implied ≤ t ≤ hi` lying on BOTH arithmetic
+/// progressions `a + i*p` (i ≥ 0) and `b + j*q` (j ≥ 0) — the
+/// simultaneous-edge count a leap must subtract so its step accounting
+/// matches stepwise execution (simultaneous edges fire in one step).
+fn coincidences(a: u64, p: u64, b: u64, q: u64, hi: u64) -> u64 {
+    let lo = a.max(b);
+    if lo > hi {
+        return 0;
+    }
+    let g = gcd(p, q);
+    let diff = a.abs_diff(b);
+    if diff % g != 0 {
+        return 0;
+    }
+    // qg >= 1 always (g divides q); the qg == 1 degenerate case is
+    // handled inside mod_inverse (returns 0, making t == 0, x0 == a).
+    let qg = q / g;
+    let lcm = (p as u128) * (qg as u128);
+    // x = a + p*t with t ≡ (b - a)/g · inv(p/g) (mod q/g).
+    let dg = ((b as i128 - a as i128) / g as i128).rem_euclid(qg as i128) as u128;
+    let inv = mod_inverse((p / g) % qg, qg) as u128;
+    let t = (dg * inv) % qg as u128;
+    let mut x0 = a as u128 + t * p as u128; // smallest common instant ≥ a
+    if x0 < lo as u128 {
+        x0 += lcm * (lo as u128 - x0).div_ceil(lcm);
+    }
+    if x0 > hi as u128 {
+        0
+    } else {
+        ((hi as u128 - x0) / lcm + 1) as u64
+    }
+}
+
 /// Edge-ordered scheduler over a set of clock domains.
 #[derive(Clone, Debug)]
 pub struct Scheduler {
@@ -191,6 +262,98 @@ impl Scheduler {
             }
         }
         Fired(mask)
+    }
+
+    /// Scheduler steps a stepwise run would use to reach (inclusively)
+    /// the `k`-th future edge of `domain`, and the edges the other
+    /// domain fires on the way. Pure accounting; no state change.
+    fn span_for(&self, domain: usize, k: u64) -> (u64, [u64; 2]) {
+        debug_assert!(k >= 1 && self.domains.len() <= 2);
+        let d = &self.domains[domain];
+        let t_stop = d
+            .next_edge_fs
+            .checked_add((k - 1).checked_mul(d.period_fs).expect("leap span overflow"))
+            .expect("leap span overflowed u64 femtoseconds");
+        let mut fired = [0u64; 2];
+        fired[domain] = k;
+        let mut steps = k;
+        if self.domains.len() == 2 {
+            let other = 1 - domain;
+            let o = &self.domains[other];
+            if o.next_edge_fs <= t_stop {
+                let m = (t_stop - o.next_edge_fs) / o.period_fs + 1;
+                fired[other] = m;
+                steps += m;
+                steps -= coincidences(
+                    d.next_edge_fs,
+                    d.period_fs,
+                    o.next_edge_fs,
+                    o.period_fs,
+                    t_stop,
+                );
+            }
+        }
+        (steps, fired)
+    }
+
+    /// Leap over up to `k` future edges of `domain` (and every other
+    /// domain's edges up to the same instant) in one arithmetic move —
+    /// the idle-edge-skipping primitive. Produces EXACTLY the state a
+    /// stepwise run reaches after `Leap::steps` calls to [`step`]: same
+    /// `now_fs`, same per-domain cycle counters, same next-edge times.
+    /// The caller is responsible for applying the skipped edges'
+    /// component effects in bulk (that is what makes a span skippable).
+    ///
+    /// `max_steps` bounds the stepwise-step budget: if covering all `k`
+    /// edges would exceed it, the leap shrinks to the largest prefix
+    /// that fits. Returns `None` (and changes nothing) when no edge
+    /// fits, or when the scheduler has more than two domains (exact
+    /// simultaneity accounting is implemented for the paper's
+    /// fabric+controller pair; more domains fall back to stepping).
+    ///
+    /// [`step`]: Scheduler::step
+    pub fn leap(&mut self, domain: usize, k: u64, max_steps: u64) -> Option<Leap> {
+        if self.domains.len() > 2 || k == 0 || max_steps == 0 {
+            return None;
+        }
+        // A span of k domain edges always costs >= k steps, so k can be
+        // pre-clamped to the step budget — this also keeps "unbounded
+        // horizon, bounded budget" callers clear of span overflow.
+        let k = k.min(max_steps);
+        // Largest k' ≤ k whose span fits max_steps (span is monotone).
+        let (mut steps, mut fired) = self.span_for(domain, k);
+        let mut kk = k;
+        if steps > max_steps {
+            let (mut lo, mut hi) = (0u64, k); // span(lo) fits, span(hi) doesn't
+            while hi - lo > 1 {
+                let mid = lo + (hi - lo) / 2;
+                if self.span_for(domain, mid).0 <= max_steps {
+                    lo = mid;
+                } else {
+                    hi = mid;
+                }
+            }
+            if lo == 0 {
+                return None;
+            }
+            kk = lo;
+            (steps, fired) = self.span_for(domain, kk);
+        }
+        let t_stop = self.domains[domain].next_edge_fs
+            + (kk - 1) * self.domains[domain].period_fs;
+        for (i, d) in self.domains.iter_mut().enumerate() {
+            let n = fired[i];
+            if n == 0 {
+                continue;
+            }
+            d.cycles += n;
+            d.next_edge_fs = d
+                .next_edge_fs
+                .checked_add(n.checked_mul(d.period_fs).expect("leap advance overflow"))
+                .expect("simulated time overflowed u64 femtoseconds (~5.1 h)");
+        }
+        self.now_fs = t_stop;
+        Some(Leap { steps, fired })
     }
 }
 
@@ -301,6 +464,98 @@ mod tests {
         let fired = s.step();
         assert_eq!(fired_vec(fired), vec![0, 1]);
         assert_eq!(fired.count(), 2);
+    }
+
+    /// Drive `a` with one leap and `b` stepwise for the reported step
+    /// count; the two schedulers must be indistinguishable afterwards.
+    fn assert_leap_matches_steps(mhz: &[f64], warm: u64, domain: usize, k: u64) {
+        let mk = || {
+            let mut s = Scheduler::new(
+                mhz.iter().enumerate().map(|(i, &m)| ClockDomain::from_mhz(["a", "b"][i], m)).collect(),
+            );
+            for _ in 0..warm {
+                s.step();
+            }
+            s
+        };
+        let mut a = mk();
+        let mut b = mk();
+        let leap = a.leap(domain, k, u64::MAX).expect("leap supported");
+        assert_eq!(leap.fired[domain], k);
+        for _ in 0..leap.steps {
+            b.step();
+        }
+        assert_eq!(a.now_fs(), b.now_fs(), "now_fs diverged ({mhz:?}, warm {warm}, k {k})");
+        for i in 0..mhz.len() {
+            assert_eq!(a.domain(i).cycles, b.domain(i).cycles, "domain {i} cycles");
+        }
+        // The post-leap edge stream must continue identically.
+        for _ in 0..16 {
+            assert_eq!(a.step(), b.step());
+            assert_eq!(a.now_fs(), b.now_fs());
+        }
+    }
+
+    #[test]
+    fn leap_is_bit_identical_to_stepping() {
+        for warm in [0u64, 1, 7] {
+            for k in [1u64, 2, 3, 17, 1000] {
+                // Rational 2:1, the paper's 225:200 pair (9:8 with huge
+                // fs periods), equal clocks (all edges simultaneous),
+                // and a single domain.
+                assert_leap_matches_steps(&[100.0, 200.0], warm, 0, k);
+                assert_leap_matches_steps(&[100.0, 200.0], warm, 1, k);
+                assert_leap_matches_steps(&[225.0, 200.0], warm, 0, k);
+                assert_leap_matches_steps(&[225.0, 200.0], warm, 1, k);
+                assert_leap_matches_steps(&[150.0, 150.0], warm, 0, k);
+                assert_leap_matches_steps(&[225.0], warm, 0, k);
+                // Irrational-ish pair: periods share only tiny factors.
+                assert_leap_matches_steps(&[333.0, 200.0], warm, 0, k);
+            }
+        }
+    }
+
+    #[test]
+    fn leap_respects_the_step_budget() {
+        // 2:1 clocks: covering k fabric edges costs ~3k/2 steps (some
+        // coincide). A tight budget must shrink the leap, exactly.
+        let mut a = Scheduler::new(vec![
+            ClockDomain::from_mhz("fabric", 100.0),
+            ClockDomain::from_mhz("mem", 200.0),
+        ]);
+        let mut b = a.clone();
+        let leap = a.leap(0, 1000, 10).expect("some prefix fits");
+        assert!(leap.steps <= 10);
+        assert!(leap.fired[0] < 1000, "budget should have shrunk the leap");
+        for _ in 0..leap.steps {
+            b.step();
+        }
+        assert_eq!(a.now_fs(), b.now_fs());
+        assert_eq!(a.domain(0).cycles, b.domain(0).cycles);
+        assert_eq!(a.domain(1).cycles, b.domain(1).cycles);
+        // Zero-budget and zero-edge leaps refuse without touching state.
+        let before = a.now_fs();
+        assert!(a.leap(0, 0, 100).is_none());
+        assert!(a.leap(0, 5, 0).is_none());
+        assert_eq!(a.now_fs(), before);
+    }
+
+    #[test]
+    fn coincidence_counting_matches_brute_force() {
+        // Cross-check the CRT against direct enumeration on small grids.
+        for (a, p, b, q, hi) in [
+            (0u64, 3u64, 0u64, 5u64, 100u64),
+            (2, 4, 6, 6, 200),
+            (1, 7, 3, 11, 500),
+            (5, 10, 5, 15, 1000),
+            (4, 8, 7, 12, 0),
+            (9, 2, 4, 2, 50),
+        ] {
+            let brute = (0..=hi)
+                .filter(|&t| t >= a && t >= b && (t - a) % p == 0 && (t - b) % q == 0)
+                .count() as u64;
+            assert_eq!(coincidences(a, p, b, q, hi), brute, "({a},{p},{b},{q},{hi})");
+        }
     }
 
     #[test]

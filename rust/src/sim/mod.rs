@@ -23,7 +23,7 @@ pub mod stats;
 pub mod trace;
 
 pub use channel::Channel;
-pub use clock::{ClockDomain, Fired, Scheduler};
+pub use clock::{ClockDomain, Fired, Leap, Scheduler};
 pub use stats::{Counter, SampleId, Stats};
 pub use trace::{ScenarioTrace, Trace};
 

@@ -470,6 +470,239 @@ mod hybrid_family_props {
     }
 }
 
+/// Fast-backend properties (PR 5 satellite): over randomized irregular
+/// geometries, (a) payload-elided networks of every family must move
+/// the same *amount* of traffic in the same number of cycles as their
+/// full-payload twins under the shared saturation harness, emitting
+/// correctly sized shadow lines; and (b) `Scheduler::leap` must be
+/// bit-identical to the equivalent number of `step()` calls for random
+/// clock pairs, warm-ups, and spans.
+#[cfg(test)]
+mod fast_backend_props {
+    use super::{check, Config, Gen};
+    use crate::config::PayloadMode;
+    use crate::interconnect::harness::{drive_read, drive_write_streams, gen_lines, gen_write_streams};
+    use crate::interconnect::hybrid::HybridConfig;
+    use crate::interconnect::{build_read_network, build_write_network, Design};
+    use crate::sim::{ClockDomain, Scheduler};
+    use crate::types::Geometry;
+    use crate::util::Prng;
+
+    #[derive(Clone, Debug)]
+    struct ElisionCase {
+        geom: Geometry,
+        lines: usize,
+        seed: u64,
+    }
+
+    struct ElisionGen;
+
+    impl Gen<ElisionCase> for ElisionGen {
+        fn generate(&self, rng: &mut Prng) -> ElisionCase {
+            let n = 1usize << rng.range(2, 5); // N in {4, 8, 16, 32}
+            let w_acc = 16;
+            let ports = rng.range(1, n);
+            let max_burst = [1usize, 2, 3, 5, 8][rng.range(0, 4)];
+            ElisionCase {
+                geom: Geometry {
+                    w_line: n * w_acc,
+                    w_acc,
+                    read_ports: ports,
+                    write_ports: ports,
+                    max_burst,
+                },
+                lines: rng.range(1, 48),
+                seed: rng.next_u64(),
+            }
+        }
+
+        fn shrink(&self, c: &ElisionCase) -> Vec<ElisionCase> {
+            let mut out = Vec::new();
+            if c.lines > 1 {
+                out.push(ElisionCase { lines: c.lines / 2, ..c.clone() });
+            }
+            if c.geom.read_ports > 1 {
+                let mut g = c.geom;
+                g.read_ports -= 1;
+                g.write_ports -= 1;
+                out.push(ElisionCase { geom: g, ..c.clone() });
+            }
+            out
+        }
+    }
+
+    /// Every family on this geometry: both endpoints plus one genuine
+    /// intermediate radix when N allows one.
+    fn family(geom: &Geometry) -> Vec<Design> {
+        let n = geom.words_per_line();
+        let mut out = vec![Design::Baseline, Design::Medusa];
+        if n >= 8 {
+            out.push(Design::Hybrid(HybridConfig { transpose_radix: 4, ..Default::default() }));
+        }
+        if geom.read_ports <= 16 {
+            out.push(Design::Axis);
+        }
+        out
+    }
+
+    fn cfg() -> Config {
+        Config { cases: 40, ..Config::default() }
+    }
+
+    #[test]
+    fn prop_elided_read_networks_keep_full_mode_timing() {
+        check(cfg(), &ElisionGen, |c: &ElisionCase| {
+            let lines = gen_lines(&c.geom, c.lines, c.seed);
+            // What an elided-mode controller would deliver: the same
+            // port sequence, header-only shadows instead of payload.
+            let shadows: Vec<crate::types::TaggedLine> = lines
+                .iter()
+                .map(|tl| crate::types::TaggedLine {
+                    port: tl.port,
+                    line: crate::types::Line::elided(c.geom.words_per_line()),
+                })
+                .collect();
+            for design in family(&c.geom) {
+                let mut full = build_read_network(design, c.geom);
+                let (fres, _) = drive_read(full.as_mut(), &lines, false);
+                let mut elided = build_read_network(design, c.geom);
+                elided.set_payload_mode(PayloadMode::Elided);
+                let (eres, egot) = drive_read(elided.as_mut(), &shadows, true);
+                if (fres.cycles, fres.lines_moved, fres.words_moved)
+                    != (eres.cycles, eres.lines_moved, eres.words_moved)
+                {
+                    return Err(format!(
+                        "{design:?}: elided read timing diverged ({fres:?} vs {eres:?}, {c:?})"
+                    ));
+                }
+                // Elided ports deliver exactly the scheduled number of
+                // shadow words (all zeros by definition).
+                let total: usize = egot.iter().map(|v| v.len()).sum();
+                if total != lines.len() * c.geom.words_per_line() {
+                    return Err(format!("{design:?}: wrong shadow word count ({c:?})"));
+                }
+                if egot.iter().flatten().any(|&w| w != 0) {
+                    return Err(format!("{design:?}: nonzero shadow word ({c:?})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_elided_write_networks_keep_full_mode_timing() {
+        check(cfg(), &ElisionGen, |c: &ElisionCase| {
+            let n = c.geom.words_per_line();
+            let lines_per_port = (c.lines / c.geom.write_ports).clamp(1, 12);
+            let streams = gen_write_streams(&c.geom, lines_per_port, c.seed);
+            for design in family(&c.geom) {
+                let mut full = build_write_network(design, c.geom);
+                let (fres, _) = drive_write_streams(full.as_mut(), &streams, false);
+                let mut elided = build_write_network(design, c.geom);
+                elided.set_payload_mode(PayloadMode::Elided);
+                let (eres, egot) = drive_write_streams(elided.as_mut(), &streams, true);
+                if (fres.cycles, fres.lines_moved) != (eres.cycles, eres.lines_moved) {
+                    return Err(format!(
+                        "{design:?}: elided write timing diverged ({fres:?} vs {eres:?}, {c:?})"
+                    ));
+                }
+                for (p, got) in egot.iter().enumerate() {
+                    if got.len() != lines_per_port {
+                        return Err(format!("{design:?} port {p}: wrong line count ({c:?})"));
+                    }
+                    if got.iter().any(|l| !l.is_elided() || l.num_words() != n) {
+                        return Err(format!(
+                            "{design:?} port {p}: expected {n}-word shadows ({c:?})"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[derive(Clone, Debug)]
+    struct LeapCase {
+        mhz_a: usize,
+        mhz_b: usize,
+        warm: usize,
+        k: usize,
+    }
+
+    struct LeapGen;
+
+    impl Gen<LeapCase> for LeapGen {
+        fn generate(&self, rng: &mut Prng) -> LeapCase {
+            LeapCase {
+                mhz_a: rng.range(25, 450),
+                mhz_b: rng.range(25, 450),
+                warm: rng.range(0, 32),
+                k: rng.range(1, 5000),
+            }
+        }
+
+        fn shrink(&self, c: &LeapCase) -> Vec<LeapCase> {
+            let mut out = Vec::new();
+            if c.k > 1 {
+                out.push(LeapCase { k: c.k / 2, ..c.clone() });
+                out.push(LeapCase { k: 1, ..c.clone() });
+            }
+            if c.warm > 0 {
+                out.push(LeapCase { warm: 0, ..c.clone() });
+            }
+            out
+        }
+    }
+
+    #[test]
+    fn prop_scheduler_leap_equals_stepping() {
+        check(Config { cases: 96, ..Config::default() }, &LeapGen, |c: &LeapCase| {
+            for domain in [0usize, 1] {
+                let mk = || {
+                    let mut s = Scheduler::new(vec![
+                        ClockDomain::from_mhz("a", c.mhz_a as f64),
+                        ClockDomain::from_mhz("b", c.mhz_b as f64),
+                    ]);
+                    for _ in 0..c.warm {
+                        s.step();
+                    }
+                    s
+                };
+                let mut leaped = mk();
+                let mut stepped = mk();
+                let leap = leaped
+                    .leap(domain, c.k as u64, u64::MAX)
+                    .ok_or_else(|| format!("leap refused ({c:?})"))?;
+                if leap.fired[domain] != c.k as u64 {
+                    return Err(format!("leap truncated without budget ({c:?})"));
+                }
+                for _ in 0..leap.steps {
+                    stepped.step();
+                }
+                if leaped.now_fs() != stepped.now_fs() {
+                    return Err(format!(
+                        "now_fs {} != {} ({c:?}, domain {domain})",
+                        leaped.now_fs(),
+                        stepped.now_fs()
+                    ));
+                }
+                for d in 0..2 {
+                    if leaped.domain(d).cycles != stepped.domain(d).cycles {
+                        return Err(format!("domain {d} cycle drift ({c:?})"));
+                    }
+                }
+                // The subsequent edge stream must continue in lockstep.
+                for _ in 0..4 {
+                    if leaped.step() != stepped.step() || leaped.now_fs() != stepped.now_fs() {
+                        return Err(format!("post-leap edge stream diverged ({c:?})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
 /// Workload-math properties (PR 3 satellite): layer word counts and MAC
 /// counts must agree with closed-form recomputation for randomized
 /// layers of every kind, and every zoo network must chain shape-exactly.

@@ -28,6 +28,14 @@ enum LineRepr {
     Inline { len: u8, words: [Word; LINE_INLINE_WORDS] },
     /// Fallback for wide interfaces (1024-bit regions of Fig 6).
     Heap(Box<[Word]>),
+    /// Payload-elided shadow: the line knows how many words it carries
+    /// but stores none of them (fast-backend mode,
+    /// [`crate::config::PayloadMode::Elided`]). Occupancy/credit logic
+    /// sees an ordinary `len`-word line; payload accessors panic so a
+    /// datapath that forgot to gate on the mode fails loudly instead of
+    /// silently reading garbage. `word()` reads 0 (the canonical shadow
+    /// word) because width converters legitimately stream shadow words.
+    Elided { len: u16 },
 }
 
 /// One `W_line`-bit memory line, as the `N = W_line / W_acc` accelerator
@@ -85,18 +93,44 @@ impl Line {
         line
     }
 
+    /// A payload-elided shadow of an `n`-word line (fast backend). It
+    /// reports `num_words() == n` so every occupancy assertion and
+    /// credit computation behaves exactly as in full mode, but carries
+    /// no payload: cloning/moving it never copies word data.
+    #[inline]
+    pub fn elided(n: usize) -> Self {
+        debug_assert!(n <= u16::MAX as usize, "elided line too wide");
+        Line { repr: LineRepr::Elided { len: n as u16 } }
+    }
+
+    /// Is this a payload-elided shadow?
+    #[inline]
+    pub fn is_elided(&self) -> bool {
+        matches!(self.repr, LineRepr::Elided { .. })
+    }
+
     /// Number of `W_acc` words in the line (= interconnect port count N).
     #[inline]
     pub fn num_words(&self) -> usize {
         match &self.repr {
             LineRepr::Inline { len, .. } => *len as usize,
             LineRepr::Heap(w) => w.len(),
+            LineRepr::Elided { len } => *len as usize,
         }
     }
 
+    /// One word of the line. For elided shadows this is the canonical
+    /// shadow word 0 (width converters stream it in place of payload);
+    /// the index is still bounds-checked so occupancy bugs don't hide.
     #[inline]
     pub fn word(&self, idx: usize) -> Word {
-        self.words()[idx]
+        match &self.repr {
+            LineRepr::Elided { len } => {
+                assert!(idx < *len as usize, "word index {idx} out of elided line");
+                0
+            }
+            _ => self.words()[idx],
+        }
     }
 
     #[inline]
@@ -104,11 +138,17 @@ impl Line {
         self.words_mut()[idx] = w;
     }
 
+    /// The payload slice. Panics on elided shadows — any caller that
+    /// reads payload must be gated off in elided mode, and a loud panic
+    /// here is what keeps the fast backend honest.
     #[inline]
     pub fn words(&self) -> &[Word] {
         match &self.repr {
             LineRepr::Inline { len, words } => &words[..*len as usize],
             LineRepr::Heap(w) => w,
+            LineRepr::Elided { .. } => {
+                panic!("payload access on an elided line (fast-backend gating bug)")
+            }
         }
     }
 
@@ -117,12 +157,22 @@ impl Line {
         match &mut self.repr {
             LineRepr::Inline { len, words } => &mut words[..*len as usize],
             LineRepr::Heap(w) => w,
+            LineRepr::Elided { .. } => {
+                panic!("payload write on an elided line (fast-backend gating bug)")
+            }
         }
     }
 
     /// Deterministic content hash (FNV-1a), used by integrity checks.
+    /// Elided shadows hash their length under a distinct tag (content
+    /// checks are meaningless in elided mode, but the hash must still
+    /// be deterministic and length-sensitive).
     pub fn fnv1a(&self) -> u64 {
         let mut h = 0xcbf2_9ce4_8422_2325u64;
+        if let LineRepr::Elided { len } = self.repr {
+            h ^= 0xe11d_ed00 ^ len as u64;
+            return h.wrapping_mul(0x1000_0000_01b3);
+        }
         for w in self.words() {
             for b in w.to_le_bytes() {
                 h ^= b as u64;
@@ -135,7 +185,14 @@ impl Line {
 
 impl PartialEq for Line {
     fn eq(&self, other: &Self) -> bool {
-        self.words() == other.words()
+        match (&self.repr, &other.repr) {
+            // Two shadows are equal iff they shadow the same width; a
+            // shadow never equals a payload-carrying line (there is no
+            // content to compare).
+            (LineRepr::Elided { len: a }, LineRepr::Elided { len: b }) => a == b,
+            (LineRepr::Elided { .. }, _) | (_, LineRepr::Elided { .. }) => false,
+            _ => self.words() == other.words(),
+        }
     }
 }
 
@@ -143,6 +200,9 @@ impl Eq for Line {}
 
 impl fmt::Debug for Line {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if let LineRepr::Elided { len } = self.repr {
+            return write!(f, "Line[elided x{len}]");
+        }
         write!(f, "Line[")?;
         for (i, w) in self.words().iter().enumerate() {
             if i > 0 {
@@ -304,6 +364,39 @@ mod tests {
             assert_eq!(a.fnv1a(), c.fnv1a(), "n={n}");
             assert_eq!(a.words().len(), n);
         }
+    }
+
+    #[test]
+    fn elided_lines_are_header_only_shadows() {
+        let e = Line::elided(32);
+        assert!(e.is_elided());
+        assert_eq!(e.num_words(), 32);
+        // The shadow word is 0, bounds-checked.
+        assert_eq!(e.word(0), 0);
+        assert_eq!(e.word(31), 0);
+        // Clone preserves the shadow.
+        let c = e.clone();
+        assert!(c.is_elided());
+        assert_eq!(e, c);
+        // Same width ⇒ equal; different width or full line ⇒ not.
+        assert_ne!(Line::elided(32), Line::elided(16));
+        assert_ne!(Line::elided(4), Line::zeroed(4));
+        // Hash is deterministic and width-sensitive.
+        assert_eq!(Line::elided(8).fnv1a(), Line::elided(8).fnv1a());
+        assert_ne!(Line::elided(8).fnv1a(), Line::elided(9).fnv1a());
+        assert!(format!("{e:?}").contains("elided"));
+    }
+
+    #[test]
+    #[should_panic(expected = "payload access on an elided line")]
+    fn elided_payload_read_panics() {
+        let _ = Line::elided(4).words();
+    }
+
+    #[test]
+    #[should_panic(expected = "out of elided line")]
+    fn elided_word_is_bounds_checked() {
+        let _ = Line::elided(4).word(4);
     }
 
     #[test]

@@ -241,6 +241,14 @@ fn expected_per_port(
 
 /// Precompute one tenant's full step list from its network, preloading
 /// inputs and weights into DRAM and advancing the shared line allocator.
+///
+/// In payload-elided mode the entire data plane is skipped — no input
+/// generation, no weight material, no golden math, no DRAM preload —
+/// because every burst schedule below derives from layer *shapes* alone
+/// ([`Layer::ifmap_words`]/[`Layer::weight_words`]/[`Layer::ofmap_words`]),
+/// never from values. The step list (and therefore every counter and
+/// cycle of the simulated run) is identical either way; only the
+/// verification payloads are absent.
 fn precompute_tenant(
     spec_net: &WorkloadNet,
     seed: u64,
@@ -248,15 +256,54 @@ fn precompute_tenant(
     n: usize,
     alloc: &mut LineAddr,
     controller: &mut MemoryController,
+    elided: bool,
 ) -> Result<(VecDeque<ExecStep>, Vec<Fixed16>, Option<Region>)> {
     spec_net.validate()?;
-    let mut prng = Prng::new(seed);
     let alloc_lines = |words: usize, alloc: &mut LineAddr| -> Region {
         let lines = words.div_ceil(n);
         let r = Region { base: *alloc, lines };
         *alloc += lines as u64;
         r
     };
+    if elided {
+        // Shape-only twin of the full path below: identical region
+        // allocation order, identical schedules, empty payloads.
+        let input_region = alloc_lines(spec_net.input_words(), alloc);
+        let mut node_regions: Vec<Region> = Vec::with_capacity(spec_net.nodes.len());
+        let mut steps = VecDeque::with_capacity(spec_net.nodes.len());
+        for (i, node) in spec_net.nodes.iter().enumerate() {
+            let region_of = |s: Src| -> Region {
+                match s {
+                    Src::Input => input_region,
+                    Src::Node(j) => node_regions[j],
+                }
+            };
+            let mut read_regions = vec![region_of(node.input)];
+            if let (Layer::Add { .. }, Some(s)) = (&node.layer, node.skip) {
+                read_regions.push(region_of(s));
+            }
+            if node.layer.weight_words() > 0 {
+                read_regions.push(alloc_lines(node.layer.weight_words(), alloc));
+            }
+            let reads = partition(&read_regions, group.read_ports);
+            let ofmap_region = alloc_lines(node.layer.ofmap_words(), alloc);
+            let writes = partition(&[ofmap_region], group.write_ports);
+            steps.push_back(ExecStep {
+                label: node.layer.name(),
+                macs: node.layer.macs(),
+                reads,
+                writes,
+                write_data: Vec::new(),
+                expected_ports: Vec::new(),
+                dram_check: None,
+                write_seed: seed.wrapping_add(i as u64),
+            });
+            node_regions.push(ofmap_region);
+        }
+        let final_region = node_regions.last().copied();
+        return Ok((steps, Vec::new(), final_region));
+    }
+    let mut prng = Prng::new(seed);
     let mut image: HashMap<LineAddr, Vec<Word>> = HashMap::new();
     let preload = |region: Region, padded: &[Word], image: &mut HashMap<LineAddr, Vec<Word>>, controller: &mut MemoryController, to_dram: bool| {
         for (li, a) in (region.base..region.end()).enumerate() {
@@ -383,7 +430,8 @@ fn service(sys: &mut System, t: usize, rt: &mut TenantRt) {
             if sys.lps[t].compute_done() {
                 let cur = rt.cur.as_mut().expect("loading tenant has a current step");
                 // Verify the read path delivered exactly the preloaded
-                // tensors (transport golden check).
+                // tensors (transport golden check; no payloads exist to
+                // check in elided mode).
                 for (p, expect) in cur.expected_ports.iter().enumerate() {
                     if !expect.is_empty() && sys.lps[t].loaded(p) != &expect[..] {
                         rt.verified = false;
@@ -392,7 +440,11 @@ fn service(sys: &mut System, t: usize, rt: &mut TenantRt) {
                 let data = std::mem::take(&mut cur.write_data);
                 rt.supplied_lines += cur.write_lines();
                 let writes = std::mem::take(&mut cur.writes);
-                sys.lps[t].supply_output(&writes, data);
+                if sys.cfg.sim.payload.is_elided() {
+                    sys.lps[t].supply_output_elided(&writes);
+                } else {
+                    sys.lps[t].supply_output(&writes, data);
+                }
                 rt.cur.as_mut().unwrap().writes = writes;
                 rt.state = TState::Draining;
             }
@@ -451,8 +503,27 @@ fn drive(sys: &mut System, tenants: &mut [TenantRt]) -> Result<()> {
         if all_done {
             return Ok(());
         }
-        sys.step();
-        edges += 1;
+        // Leap backend: skip the idle span, but never past a staggered
+        // tenant's start cycle — `service` observes `fabric_cycles`
+        // between edges, and a tenant must begin on exactly the edge a
+        // stepwise run would give it. (All other `service` conditions
+        // are covered by the system-level horizon: a waiting-for-flush
+        // or loading tenant keeps some component non-idle.)
+        let mut cap = u64::MAX;
+        for rt in tenants.iter() {
+            if rt.state == TState::WaitStart {
+                // start_cycle > fabric_cycles here: service() above
+                // starts any tenant whose cycle has arrived.
+                cap = cap.min(rt.start_cycle - sys.fabric_cycles());
+            }
+        }
+        match sys.try_leap_idle(cap, max_edges - edges) {
+            Some(leap) => edges += leap.steps,
+            None => {
+                sys.step();
+                edges += 1;
+            }
+        }
         ensure!(
             edges < max_edges,
             "scenario stalled after {edges} edges (states: {:?}, stats:\n{})",
@@ -467,6 +538,9 @@ fn build_outcome(sc_name: &str, sys: &System, tenants: Vec<TenantRt>) -> Scenari
     for (t, rt) in tenants.into_iter().enumerate() {
         let g = rt.group;
         let final_dram = match rt.final_region {
+            // No payload landed in elided mode — there is nothing to
+            // dump (and shadow lines have no words to flatten).
+            Some(_) if sys.cfg.sim.payload.is_elided() => Vec::new(),
             Some(r) => sys
                 .controller()
                 .dump(r.base, r.lines)
@@ -568,6 +642,7 @@ fn build_tenants(
     let n = sys.cfg.geometry.words_per_line();
     let mut alloc: LineAddr = 0;
     let mut tenants = Vec::with_capacity(sc.tenants.len());
+    let elided = sys.cfg.sim.payload.is_elided();
     for (i, (spec, &group)) in sc.tenants.iter().zip(groups.iter()).enumerate() {
         let (steps, final_fm, final_region) = precompute_tenant(
             &spec.net,
@@ -576,6 +651,7 @@ fn build_tenants(
             n,
             &mut alloc,
             sys.controller_mut(),
+            elided,
         )
         .with_context(|| format!("tenant {i} ({})", spec.net.name))?;
         tenants.push(TenantRt {
@@ -686,8 +762,11 @@ fn run_inner(sc: &Scenario, capture: bool) -> Result<(ScenarioOutcome, Option<Sc
     Ok((outcome, trace))
 }
 
-/// Rebuild the system a trace describes.
-fn system_from_header(h: &TraceHeader) -> Result<(System, Vec<PortGroup>)> {
+/// Rebuild the system a trace describes, under the given backend.
+fn system_from_header(
+    h: &TraceHeader,
+    backend: crate::config::SimBackend,
+) -> Result<(System, Vec<PortGroup>)> {
     let design = Design::parse(&h.design)
         .ok_or_else(|| anyhow::anyhow!("trace names unknown design {:?}", h.design))?;
     let cfg = crate::config::SystemConfig {
@@ -710,6 +789,7 @@ fn system_from_header(h: &TraceHeader) -> Result<(System, Vec<PortGroup>)> {
             wr_data: h.wr_data_depth,
         },
         seed: h.seed,
+        sim: backend,
     };
     let groups: Vec<PortGroup> = h
         .tenants
@@ -736,9 +816,22 @@ fn sched_from_runs(runs: &[Vec<(u64, u64)>]) -> Vec<PortSchedule> {
 /// Re-drive the interconnect from a trace: no workload generation, no
 /// golden math — pure data movement with synthesized write words.
 pub fn replay(trace: &ScenarioTrace) -> Result<ScenarioOutcome> {
+    replay_with(trace, crate::config::SimBackend::full())
+}
+
+/// [`replay`] under an explicit simulation backend. Trace headers
+/// deliberately don't record a backend (any backend reproduces the
+/// same stats), so the choice is the caller's: the CLI's `--payload` /
+/// `--edges` flags and the fast-backend conformance suite both land
+/// here.
+pub fn replay_with(
+    trace: &ScenarioTrace,
+    backend: crate::config::SimBackend,
+) -> Result<ScenarioOutcome> {
     trace.validate()?;
-    let (mut sys, groups) = system_from_header(&trace.header)?;
+    let (mut sys, groups) = system_from_header(&trace.header, backend)?;
     let n = sys.cfg.geometry.words_per_line();
+    let elided = backend.payload.is_elided();
     let mut tenants: Vec<TenantRt> = groups
         .iter()
         .zip(trace.header.tenants.iter())
@@ -768,20 +861,24 @@ pub fn replay(trace: &ScenarioTrace) -> Result<ScenarioOutcome> {
     for step in &trace.steps {
         let reads = sched_from_runs(&step.reads);
         let writes = sched_from_runs(&step.writes);
-        let write_data: Vec<VecDeque<Word>> = writes
-            .iter()
-            .map(|s| {
-                let mut q = VecDeque::new();
-                for run in &s.runs {
-                    for a in run.base..run.end() {
-                        for lane in 0..n as u64 {
-                            q.push_back(ScenarioTrace::synth_word(step.write_seed, a, lane));
+        let write_data: Vec<VecDeque<Word>> = if elided {
+            Vec::new() // shadow counts come from the schedules at supply time
+        } else {
+            writes
+                .iter()
+                .map(|s| {
+                    let mut q = VecDeque::new();
+                    for run in &s.runs {
+                        for a in run.base..run.end() {
+                            for lane in 0..n as u64 {
+                                q.push_back(ScenarioTrace::synth_word(step.write_seed, a, lane));
+                            }
                         }
                     }
-                }
-                q
-            })
-            .collect();
+                    q
+                })
+                .collect()
+        };
         let expected_ports = vec![Vec::new(); reads.len()];
         tenants[step.tenant].steps.push_back(ExecStep {
             label: "replayed",
@@ -803,7 +900,18 @@ pub fn replay(trace: &ScenarioTrace) -> Result<ScenarioOutcome> {
 /// has timing recorded — the exact cycle counts, every timing counter,
 /// and the per-port wait cycles.
 pub fn verify_replay(trace: &ScenarioTrace) -> Result<ScenarioOutcome> {
-    let out = replay(trace)?;
+    verify_replay_with(trace, crate::config::SimBackend::full())
+}
+
+/// [`verify_replay`] under an explicit backend — the fast-backend
+/// conformance path: a trace captured by a full run must replay to the
+/// same counters, cycles, and waits under payload elision and edge
+/// leaping (the recorded expect block is the cross-backend oracle).
+pub fn verify_replay_with(
+    trace: &ScenarioTrace,
+    backend: crate::config::SimBackend,
+) -> Result<ScenarioOutcome> {
+    let out = replay_with(trace, backend)?;
     for (name, want) in &trace.expect.exact {
         let got = out.stats.get(name);
         ensure!(

@@ -19,6 +19,9 @@ pub mod graph;
 pub mod scenario;
 pub mod zoo;
 
-pub use engine::{replay, run_scenario, run_scenario_captured, verify_replay, ScenarioOutcome};
+pub use engine::{
+    replay, replay_with, run_scenario, run_scenario_captured, verify_replay, verify_replay_with,
+    ScenarioOutcome,
+};
 pub use graph::{Layer, Node, Src, WorkloadNet};
 pub use scenario::{Scenario, TenantSpec};

@@ -23,6 +23,7 @@ fn paper_cfg(design: Design) -> SystemConfig {
         rotator_stages: 0,
         channel_depths: Default::default(),
         seed: 2024,
+        sim: Default::default(),
     }
 }
 

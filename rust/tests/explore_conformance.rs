@@ -38,6 +38,7 @@ fn cfg(design: Design) -> SystemConfig {
         rotator_stages: 0,
         channel_depths: Default::default(),
         seed: 7,
+        sim: Default::default(),
     }
 }
 
@@ -168,9 +169,17 @@ fn explorer_cache_hit_equals_recompute() {
     assert_eq!(fc, fw, "cache round-trip changed the frontier");
 
     // Cache keys are stable across runs (the incremental contract).
+    // `run_search` evaluates with the fast backend, so entries live
+    // under the elided payload key.
     let pts = space.points();
     for p in &pts {
-        assert!(cache.get(point_key(p, &space.probe)).is_some(), "missing entry {}", p.label());
+        assert!(
+            cache
+                .get(point_key(p, &space.probe, medusa::config::PayloadMode::Elided))
+                .is_some(),
+            "missing entry {}",
+            p.label()
+        );
     }
     std::fs::remove_file(&path).unwrap();
 }

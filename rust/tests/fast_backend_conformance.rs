@@ -1,0 +1,244 @@
+//! Conformance suite for the stats-exact fast simulation backend
+//! (PR 5): payload elision and idle-edge leaping, alone and combined,
+//! must be **bit-identical** to the full stepwise reference on every
+//! observable except the payload itself.
+//!
+//! What it locks down, per ISSUE 5's acceptance criteria:
+//!
+//! * every zoo scenario × all three design families (baseline, medusa,
+//!   hybrid — intermediate radix): elided-vs-full and leap-vs-stepwise
+//!   runs agree on every counter, every sample series, all three cycle
+//!   clocks, and all per-port wait cycles;
+//! * captured traces agree structurally: identical headers, identical
+//!   step schedules, identical `exact` AND `timing` expect blocks;
+//! * a trace captured by the full backend replays cleanly under the
+//!   fast backend (`verify_replay_with` asserts the recorded expect
+//!   block, so the golden files are a cross-backend oracle);
+//! * staggered multi-tenant scenarios leap without perturbing tenant
+//!   start edges;
+//! * the explorer smoke grid evaluates to byte-identical Pareto output
+//!   (JSON and CSV) under both backends.
+
+use medusa::config::{EdgeMode, PayloadMode, SimBackend, SystemConfig};
+use medusa::eval::explore::{bench_json, full_table};
+use medusa::explore::{run_search_with, DesignSpace, Strategy};
+use medusa::interconnect::hybrid::HybridConfig;
+use medusa::interconnect::Design;
+use medusa::sim::stats::{Counter, SampleId};
+use medusa::types::Geometry;
+use medusa::workload::{self, zoo, Scenario, ScenarioOutcome};
+
+/// N = 8 geometry: radix 4 is a genuine partial transpose, so the
+/// hybrid family member below exercises the third datapath, not an
+/// endpoint alias of the other two.
+fn cfg(design: Design, sim: SimBackend) -> SystemConfig {
+    SystemConfig {
+        design,
+        geometry: Geometry { w_line: 128, w_acc: 16, read_ports: 8, write_ports: 8, max_burst: 8 },
+        dotprod_units: 16,
+        mem_clock_mhz: 200.0,
+        fabric_clock_mhz: Some(225.0), // irrational vs mem: edges interleave non-trivially
+        ddr3_timing: true,             // exercise row/bank timing under elision too
+        rotator_stages: 0,
+        channel_depths: Default::default(),
+        seed: 7,
+        sim,
+    }
+}
+
+fn families() -> [Design; 3] {
+    [
+        Design::Baseline,
+        Design::Medusa,
+        Design::Hybrid(HybridConfig { transpose_radix: 4, ..HybridConfig::default() }),
+    ]
+}
+
+/// Every observable the fast backend promises to preserve. NOT the
+/// outcome fingerprint: that mixes the final feature map, which elided
+/// runs intentionally don't carry.
+fn assert_stats_exact(a: &ScenarioOutcome, b: &ScenarioOutcome, what: &str) {
+    assert_eq!(a.fabric_cycles, b.fabric_cycles, "{what}: fabric_cycles");
+    assert_eq!(a.mem_cycles, b.mem_cycles, "{what}: mem_cycles");
+    assert_eq!(a.now_ps, b.now_ps, "{what}: now_ps");
+    for &id in Counter::ALL.iter() {
+        assert_eq!(
+            a.stats.count(id),
+            b.stats.count(id),
+            "{what}: counter {}",
+            id.name()
+        );
+    }
+    for &id in SampleId::ALL.iter() {
+        let (sa, sb) = (a.stats.series_of(id), b.stats.series_of(id));
+        assert_eq!(
+            (sa.min, sa.max, sa.sum, sa.count),
+            (sb.min, sb.max, sb.sum, sb.count),
+            "{what}: series {}",
+            id.name()
+        );
+    }
+    assert_eq!(a.tenants.len(), b.tenants.len(), "{what}: tenant count");
+    for (t, (ta, tb)) in a.tenants.iter().zip(b.tenants.iter()).enumerate() {
+        assert_eq!(ta.read_waits, tb.read_waits, "{what}: tenant {t} read waits");
+        assert_eq!(ta.write_waits, tb.write_waits, "{what}: tenant {t} write waits");
+        assert_eq!(
+            ta.report.total_cycles(),
+            tb.report.total_cycles(),
+            "{what}: tenant {t} busy cycles"
+        );
+        assert_eq!(
+            ta.report.total_lines_moved(),
+            tb.report.total_lines_moved(),
+            "{what}: tenant {t} lines moved"
+        );
+    }
+}
+
+fn run(name: &str, design: Design, net: workload::WorkloadNet, sim: SimBackend) -> ScenarioOutcome {
+    let sc = Scenario::single(name, cfg(design, sim), net);
+    workload::run_scenario(&sc)
+        .unwrap_or_else(|e| panic!("{name} / {design:?} / {sim:?}: {e:#}"))
+}
+
+#[test]
+fn every_fast_variant_matches_full_on_every_zoo_scenario_and_family() {
+    // One full word-level reference per (net, design) — the expensive
+    // run by design — compared against all three fast variants:
+    // elision alone, leaping alone, and the combined fast backend.
+    for net in zoo::all() {
+        for design in families() {
+            let full = run(&format!("fb-{}", net.name), design, net.clone(), SimBackend::full());
+            assert!(full.all_verified(), "{} on {design:?}: full run must verify", net.name);
+
+            let elided = run(
+                &format!("fb-{}", net.name),
+                design,
+                net.clone(),
+                SimBackend { payload: PayloadMode::Elided, edges: EdgeMode::Stepwise },
+            );
+            assert_stats_exact(&full, &elided, &format!("{} {design:?} elided", net.name));
+
+            let leap = run(
+                &format!("fb-{}", net.name),
+                design,
+                net.clone(),
+                SimBackend { payload: PayloadMode::Full, edges: EdgeMode::Leap },
+            );
+            // Leap preserves payload, so the FULL fingerprint (feature
+            // maps included) must match, not just the stat surface.
+            assert_eq!(
+                full.fingerprint(),
+                leap.fingerprint(),
+                "{} {design:?}: leap changed the outcome fingerprint",
+                net.name
+            );
+            assert!(leap.all_verified(), "{} {design:?}: leap broke golden checks", net.name);
+            assert_stats_exact(&full, &leap, &format!("{} {design:?} leap", net.name));
+
+            let fast = run(&format!("fb-{}", net.name), design, net.clone(), SimBackend::fast());
+            assert_stats_exact(&full, &fast, &format!("{} {design:?} fast", net.name));
+        }
+    }
+}
+
+#[test]
+fn captured_traces_agree_across_backends_headers_schedules_expects() {
+    for design in families() {
+        let full_sc = Scenario::single("fb-trace", cfg(design, SimBackend::full()), zoo::gemm_mlp());
+        let fast_sc = Scenario::single("fb-trace", cfg(design, SimBackend::fast()), zoo::gemm_mlp());
+        let (_, full_trace) = workload::run_scenario_captured(&full_sc).unwrap();
+        let (_, fast_trace) = workload::run_scenario_captured(&fast_sc).unwrap();
+        // Headers (including the resolved clock and the design spec),
+        // the step schedules, and the complete expect block — exact
+        // movement counters AND timing entries — must be identical; a
+        // trace cannot tell which backend captured it.
+        assert_eq!(full_trace, fast_trace, "{design:?}: captured traces differ");
+        assert!(full_trace.expect.timing_recorded);
+        // And the canonical text forms are byte-identical.
+        assert_eq!(full_trace.to_text(), fast_trace.to_text(), "{design:?}");
+    }
+}
+
+#[test]
+fn full_captured_trace_replays_under_every_backend() {
+    let sc = Scenario::single(
+        "fb-replay",
+        cfg(Design::Medusa, SimBackend::full()),
+        zoo::gemm_mlp(),
+    );
+    let (_, trace) = workload::run_scenario_captured(&sc).unwrap();
+    for backend in [
+        SimBackend::full(),
+        SimBackend { payload: PayloadMode::Elided, edges: EdgeMode::Stepwise },
+        SimBackend { payload: PayloadMode::Full, edges: EdgeMode::Leap },
+        SimBackend::fast(),
+    ] {
+        // verify_replay_with asserts every recorded exact counter,
+        // every timing entry, and the three cycle clocks.
+        workload::verify_replay_with(&trace, backend)
+            .unwrap_or_else(|e| panic!("replay under {backend:?}: {e:#}"));
+    }
+}
+
+#[test]
+fn multi_tenant_and_staggered_scenarios_survive_the_fast_backend() {
+    for name in ["multi-tenant-mix", "staggered-gemm"] {
+        let mut full_sc = Scenario::builtin(name).unwrap();
+        full_sc.cfg.sim = SimBackend::full();
+        let mut fast_sc = full_sc.clone();
+        fast_sc.cfg.sim = SimBackend::fast();
+        let full = workload::run_scenario(&full_sc).unwrap();
+        let fast = workload::run_scenario(&fast_sc).unwrap();
+        assert_stats_exact(&full, &fast, name);
+        // The stagger really is preserved: tenant 1's busy window still
+        // fits after its start offset (the scenario_conformance bound).
+        if name == "staggered-gemm" {
+            let offset = fast_sc.tenants[1].start_cycle;
+            let busy = fast.tenants[1].report.total_cycles();
+            assert!(busy + offset <= fast.fabric_cycles, "leap overran the stagger");
+        }
+    }
+}
+
+#[test]
+fn golden_traces_replay_under_the_fast_backend() {
+    // The checked-in goldens are the long-lived oracle; the fast
+    // backend must reproduce whatever they record (all movement
+    // counters always; cycles too once timing is recorded).
+    for file in ["micro_baseline.trace", "micro_medusa.trace"] {
+        let path = ["golden", "rust/golden"]
+            .iter()
+            .map(|b| std::path::Path::new(b).join(file))
+            .find(|p| p.exists())
+            .unwrap_or_else(|| panic!("golden trace {file} not found"));
+        let trace = medusa::sim::trace::ScenarioTrace::from_file(&path).unwrap();
+        workload::verify_replay_with(&trace, SimBackend::fast())
+            .unwrap_or_else(|e| panic!("{file} under fast backend: {e:#}"));
+    }
+}
+
+#[test]
+fn explorer_smoke_grid_pareto_output_is_byte_identical_across_backends() {
+    let space = DesignSpace::smoke();
+    let workers = 4;
+    let full = run_search_with(&space, &Strategy::Grid, 1, workers, None, SimBackend::full())
+        .expect("full-backend explore");
+    let fast = run_search_with(&space, &Strategy::Grid, 1, workers, None, SimBackend::fast())
+        .expect("fast-backend explore");
+    assert_eq!(full.evaluated, fast.evaluated, "evaluated sets differ across backends");
+    let fi: Vec<usize> = full.frontier.iter().map(|e| e.index).collect();
+    let fa: Vec<usize> = fast.frontier.iter().map(|e| e.index).collect();
+    assert_eq!(fi, fa, "Pareto frontiers differ across backends");
+    // Byte-identical rendered artifacts — what the CI step diffs.
+    assert_eq!(
+        bench_json(&full, &space, "grid", &[]),
+        bench_json(&fast, &space, "grid", &[]),
+        "Pareto JSON differs across backends"
+    );
+    assert_eq!(
+        full_table(&full).to_csv(),
+        full_table(&fast).to_csv(),
+        "evaluated-set CSV differs across backends"
+    );
+}

@@ -32,6 +32,7 @@ fn conformance_cfg(design: Design) -> SystemConfig {
         rotator_stages: 0,
         channel_depths: Default::default(),
         seed: 7,
+        sim: Default::default(),
     }
 }
 
