@@ -126,10 +126,11 @@ fn main() {
 
     // --- 4. PR 3: scenario engine + trace capture/replay numbers.
     let t0 = Instant::now();
-    let seq = medusa::eval::scenarios::sweep_with_threads(1);
+    let seq = medusa::eval::scenarios::sweep_with_threads(1).expect("sequential scenario matrix");
     let seq_secs = t0.elapsed().as_secs_f64();
     let t0 = Instant::now();
-    let par = medusa::eval::scenarios::sweep_with_threads(medusa::util::parallel::max_threads());
+    let par = medusa::eval::scenarios::sweep_with_threads(medusa::util::parallel::max_threads())
+        .expect("parallel scenario matrix");
     let par_secs = t0.elapsed().as_secs_f64();
     let identical = seq.len() == par.len()
         && seq.iter().zip(par.iter()).all(|(a, b)| a.fingerprint == b.fingerprint);
@@ -330,4 +331,58 @@ fn main() {
     j.push_str("}\n");
     std::fs::write(&pr5_path, &j).expect("writing BENCH_PR5.json");
     println!("wrote {pr5_path}");
+
+    // --- 7. PR 6: fault-injection overhead — the standard stall+corrupt
+    // campaign on a full scenario run, full vs fast backend. Faults are
+    // pre-scheduled, so the faulted run must stay cycle-identical across
+    // backends; the interesting numbers are the wall-time overhead of
+    // injection and how much leaping the fault windows forfeit.
+    use medusa::fault::FaultSpec;
+    let faulted_with = |sim: SimBackend| -> (f64, u64, u64) {
+        let mut sc = medusa::workload::Scenario::builtin("single-tiny-vgg").unwrap();
+        sc.faults = FaultSpec::parse_cli("dram_refresh=64/8,cdc=96/6,slow=128/12,corrupt=7,seed=3")
+            .expect("builtin fault campaign");
+        sc.cfg.sim = sim;
+        let t0 = Instant::now();
+        let out = medusa::workload::run_scenario(&sc).expect("faulted scenario run");
+        let injected = out.stats.get("fault.dram_refresh_stall_cycles")
+            + out.stats.get("fault.cdc_stall_cycles")
+            + out.stats.get("fault.lp_slowdown_cycles")
+            + out.stats.get("fault.corrupt_injected");
+        (t0.elapsed().as_secs_f64(), out.fabric_cycles, injected)
+    };
+    let (flt_full_s, flt_full_cycles, flt_full_events) = faulted_with(SimBackend::full());
+    let (flt_fast_s, flt_fast_cycles, flt_fast_events) = faulted_with(SimBackend::fast());
+    assert_eq!(flt_full_cycles, flt_fast_cycles, "faulted run cycles diverged across backends");
+    assert_eq!(flt_full_events, flt_fast_events, "faulted run events diverged across backends");
+    assert!(flt_full_events > 0, "standard campaign injected no faults");
+    let fault_overhead = flt_full_s / sc_full_s.max(1e-12);
+    println!(
+        "fault campaign (single-tiny-vgg): full {flt_full_s:.4}s ({fault_overhead:.2}x vs clean), \
+         fast {flt_fast_s:.4}s ({:.2}x vs clean fast), {flt_full_events} fault events, \
+         cycles identical across backends",
+        flt_fast_s / sc_fast_s.max(1e-12)
+    );
+    let pr6_path = format!("{json_dir}/BENCH_PR6.json");
+    let mut j = String::from("{\n");
+    j.push_str("  \"bench\": \"fault_injection_pr6\",\n");
+    j.push_str(
+        "  \"campaign\": \"dram_refresh=64/8,cdc=96/6,slow=128/12,corrupt=7,seed=3\",\n",
+    );
+    j.push_str(&format!(
+        "  \"faulted_scenario\": {{\"name\": \"single-tiny-vgg\", \"fabric_cycles\": {flt_full_cycles}, \
+         \"fault_events\": {flt_full_events}, \"full_s\": {}, \"fast_s\": {}, \
+         \"clean_full_s\": {}, \"clean_fast_s\": {}, \
+         \"fault_overhead_full\": {}, \"fault_overhead_fast\": {}, \
+         \"cycles_identical\": true}}\n",
+        json_f(flt_full_s),
+        json_f(flt_fast_s),
+        json_f(sc_full_s),
+        json_f(sc_fast_s),
+        json_f(fault_overhead),
+        json_f(flt_fast_s / sc_fast_s.max(1e-12)),
+    ));
+    j.push_str("}\n");
+    std::fs::write(&pr6_path, &j).expect("writing BENCH_PR6.json");
+    println!("wrote {pr6_path}");
 }

@@ -395,6 +395,27 @@ impl LayerProcessor {
         self.phase
     }
 
+    /// A forward-progress signature for the engine's per-tenant
+    /// watchdog: changes whenever this processor does *anything* in a
+    /// tick (every phase bumps its cycle counter unconditionally), so
+    /// it freezes exactly when ticks are suppressed — a wedge — and
+    /// keeps moving through ordinary backpressure stalls. Built only
+    /// from backend-exact, payload-independent state, so the watchdog
+    /// fires at the identical cycle under every backend.
+    pub fn progress_sig(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV offset basis
+        for v in [
+            self.phase as u64,
+            self.compute_cycles_left,
+            self.load_cycles,
+            self.compute_cycles,
+            self.drain_cycles,
+        ] {
+            h = (h ^ v).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
     /// True when the compute stall has elapsed and the coordinator
     /// should run the math + supply the output.
     pub fn compute_done(&self) -> bool {

@@ -4,6 +4,7 @@ use crate::accel::layer_processor::{LayerProcessor, Phase, PortGroup};
 use crate::accel::prefetch::PortSchedule;
 use crate::config::SystemConfig;
 use crate::dram::{DdrTiming, MemoryController};
+use crate::fault::{FaultSpec, FaultState};
 use crate::fpga::timing::peak_frequency;
 use crate::fpga::DesignPoint;
 use crate::interconnect::arbiter::{Arbiter, MemCommand, Policy};
@@ -42,6 +43,16 @@ pub struct System {
     pub stats: Stats,
     fabric_cycles: u64,
     mem_cycles: u64,
+    /// The materialized fault schedule (disabled by default; see
+    /// [`System::install_faults`]).
+    faults: FaultState,
+    /// Tenants quiesced by the degrade policy: their layer processors
+    /// are no longer ticked and their read ports are force-drained.
+    quiesced: Vec<bool>,
+    any_quiesced: bool,
+    /// Words force-drained per quiesced tenant (the engine's recovery
+    /// progress signal).
+    quiesce_drained: Vec<u64>,
 }
 
 impl System {
@@ -118,8 +129,89 @@ impl System {
             stats: Stats::new(),
             fabric_cycles: 0,
             mem_cycles: 0,
+            faults: FaultState::none(),
+            quiesced: vec![false; groups.len()],
+            any_quiesced: false,
+            quiesce_drained: vec![0; groups.len()],
             cfg,
         })
+    }
+
+    /// Materialize and arm a fault campaign. Call before any traffic;
+    /// per-tenant fault streams are keyed by each group's read base, so
+    /// a given port group sees the same schedule regardless of tenant
+    /// ordering. A no-fault spec leaves the system bit-identical to one
+    /// that never heard of faults.
+    pub fn install_faults(&mut self, spec: &FaultSpec) -> Result<()> {
+        let bases: Vec<usize> = self.lps.iter().map(|lp| lp.group().read_base).collect();
+        self.faults = FaultState::build(spec, &bases)?;
+        Ok(())
+    }
+
+    /// The installed campaign's spec (the no-fault spec by default).
+    pub fn fault_spec(&self) -> &FaultSpec {
+        &self.faults.spec
+    }
+
+    /// Degrade policy: stop ticking tenant `t`'s layer processor and
+    /// start force-draining its read ports so shared buffers (and the
+    /// CDC crossing behind them) cannot wedge the other tenants.
+    pub fn quiesce_tenant(&mut self, t: usize) {
+        self.quiesced[t] = true;
+        self.any_quiesced = true;
+    }
+
+    pub fn is_quiesced(&self, t: usize) -> bool {
+        self.quiesced.get(t).copied().unwrap_or(false)
+    }
+
+    /// Words force-drained from tenant `t`'s read ports since it was
+    /// quiesced.
+    pub fn quiesce_drained(&self, t: usize) -> u64 {
+        self.quiesce_drained.get(t).copied().unwrap_or(0)
+    }
+
+    /// One-glance state dump: per-domain elapsed cycles plus each layer
+    /// processor's phase and progress counters. Shared by the watchdog's
+    /// `SimError::TenantStalled` report, the engine's edge-budget error,
+    /// and the `run_until_*` timeout diagnostics.
+    pub fn state_dump(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "  clocks: fabric={} cycles, mem={} cycles, t={} ps",
+            self.fabric_cycles,
+            self.mem_cycles,
+            self.now_ps()
+        );
+        let _ = writeln!(
+            s,
+            "  channels: cmd={} rd_line={} wr_data={}; arbiter: pending={} writes_in_flight={}; controller: {}",
+            self.cmd_ch.occupancy(),
+            self.rd_line_ch.occupancy(),
+            self.wr_data_ch.occupancy(),
+            self.arbiter.pending_requests(),
+            self.arbiter.writes_in_flight(),
+            if self.controller.is_idle() { "idle" } else { "busy" },
+        );
+        for (i, lp) in self.lps.iter().enumerate() {
+            let _ = writeln!(
+                s,
+                "  lp{i}: phase={:?} compute_left={} load={} compute={} drain={}{}",
+                lp.phase(),
+                lp.compute_cycles_left(),
+                lp.load_cycles,
+                lp.compute_cycles,
+                lp.drain_cycles,
+                if self.is_quiesced(i) {
+                    format!(" [quiesced, {} words drained]", self.quiesce_drained(i))
+                } else {
+                    String::new()
+                },
+            );
+        }
+        s
     }
 
     pub fn controller_mut(&mut self) -> &mut MemoryController {
@@ -248,7 +340,16 @@ impl System {
         if !self.cfg.sim.edges.is_leap() {
             return None;
         }
-        let k = self.leap_horizon()?.min(max_fabric);
+        // Fault edges cap the horizon exactly like tenant start cycles:
+        // a leap may reach the next slowdown-window start or wedge cycle
+        // but never cross it, and leaping is disabled outright while a
+        // suppression (slowdown/wedge/quiesce) is in force — those
+        // per-cycle effects must be stepped to stay bit-identical.
+        if self.any_quiesced {
+            return None;
+        }
+        let fault_cap = self.faults.fabric_leap_cap(self.fabric_cycles)?;
+        let k = self.leap_horizon()?.min(max_fabric).min(fault_cap);
         if k == 0 {
             return None;
         }
@@ -257,7 +358,10 @@ impl System {
         let mem = leap.fired[DOM_MEM];
         // Bulk-apply exactly what the skipped edges would have done:
         // fabric edges advance compute countdowns, memory edges bump
-        // the controller's idle counter. Everything else was inert.
+        // the controller's idle counter — except the memory edges that
+        // fall inside a scheduled refresh window, which a stepwise run
+        // would count as refresh stalls instead (closed-form split, so
+        // the leap stays exact under DRAM fault campaigns).
         self.fabric_cycles += fab;
         for lp in &mut self.lps {
             if lp.phase() == Phase::Compute {
@@ -266,7 +370,11 @@ impl System {
         }
         self.mem_cycles += mem;
         if mem > 0 {
-            self.controller.skip_idle_cycles(mem, &mut self.stats);
+            let refresh = self.faults.refresh_count_in(self.mem_cycles - mem, self.mem_cycles);
+            if refresh > 0 {
+                self.controller.skip_refresh_cycles(refresh, &mut self.stats);
+            }
+            self.controller.skip_idle_cycles(mem - refresh, &mut self.stats);
         }
         Some(leap)
     }
@@ -283,12 +391,37 @@ impl System {
         //    controller, bandwidth is lost right here, which is exactly
         //    the Fig 6 system-level effect).
         if let Some(tl) = self.rd_line_ch.peek() {
-            if self.rd_net.mem_can_deliver(tl.port) {
+            if self.faults.cdc_active(c) {
+                // Scheduled CDC stall: the crossing delivers nothing
+                // this cycle. Counted only when a line was actually
+                // ready — a stall over an empty crossing is a no-op,
+                // which is what lets idle-edge leaps ignore CDC windows
+                // (a leap requires the crossing to be empty).
+                self.stats.bump(Counter::FaultCdcStallCycles);
+            } else if self.rd_net.mem_can_deliver(tl.port) {
                 let tl = self.rd_line_ch.pop().unwrap();
                 let port = tl.port;
                 self.rd_net.mem_deliver(tl);
                 self.arbiter.on_read_line_delivered(port);
                 self.stats.bump(Counter::SysReadLinesIntoFabric);
+                // Corrupt fault: every line delivery advances the
+                // schedule; scheduled events tag this line corrupt and
+                // a seeded parity bit decides whether the fabric's line
+                // parity catches it. Detection-only — the payload is
+                // never mutated — so golden checks and payload elision
+                // stay bit-identical.
+                if let Some(cs) = self.faults.corrupt.as_mut() {
+                    let idx = cs.delivered;
+                    cs.delivered += 1;
+                    if let Some(detected) = cs.event(idx) {
+                        self.stats.bump(Counter::FaultCorruptInjected);
+                        self.stats.bump(if detected {
+                            Counter::FaultDetected
+                        } else {
+                            Counter::FaultMasked
+                        });
+                    }
+                }
             } else {
                 self.stats.bump(Counter::SysReadLineBackpressure);
             }
@@ -301,9 +434,42 @@ impl System {
             &mut self.wr_data_ch,
             &mut self.stats,
         );
-        // 4. Each layer processor moves its port group's words.
-        for lp in &mut self.lps {
+        // 4. Each layer processor moves its port group's words — unless
+        //    its tenant's tick is suppressed this cycle by a scheduled
+        //    slowdown window, a permanent wedge, or a degrade-policy
+        //    quiesce (a suppressed processor is the fault model for a
+        //    stalled port group: it takes no words, submits no bursts,
+        //    and its progress counters freeze).
+        let inject = !self.faults.is_none() || self.any_quiesced;
+        for (t, lp) in self.lps.iter_mut().enumerate() {
+            if inject {
+                let slow = self.faults.lp_slow_active(t, c);
+                if slow || self.quiesced[t] || self.faults.wedged(t, c) {
+                    if slow && lp.phase() != Phase::Done {
+                        self.stats.bump(Counter::FaultLpSlowdownCycles);
+                    }
+                    continue;
+                }
+            }
             lp.tick(&mut self.rd_net, &mut self.wr_net, &mut self.arbiter, &mut self.stats);
+        }
+        // 4b. Force-drain quiesced tenants' read ports (one word per
+        //     port per cycle, like a live processor would) so shared
+        //     buffers and the CDC crossing behind them cannot wedge the
+        //     surviving tenants.
+        if self.any_quiesced {
+            for t in 0..self.lps.len() {
+                if !self.quiesced[t] {
+                    continue;
+                }
+                let g = self.lps[t].group();
+                for p in g.read_base..g.read_base + g.read_ports {
+                    if self.rd_net.port_word_available(p) && self.rd_net.port_take_word(p).is_some()
+                    {
+                        self.quiesce_drained[t] += 1;
+                    }
+                }
+            }
         }
         // 5. Commit fabric-side channel pushes.
         self.cmd_ch.commit();
@@ -313,7 +479,14 @@ impl System {
     fn mem_edge(&mut self) {
         let c = self.mem_cycles;
         self.mem_cycles += 1;
-        self.controller.tick(c, &mut self.cmd_ch, &mut self.rd_line_ch, &mut self.wr_data_ch, &mut self.stats);
+        // A scheduled DRAM refresh window freezes the controller for
+        // the cycle (no command accept, no line return, no write
+        // drain); wall-clock time still passes through the window.
+        if self.faults.refresh_active(c) {
+            self.controller.refresh_stall(c, &mut self.stats);
+        } else {
+            self.controller.tick(c, &mut self.cmd_ch, &mut self.rd_line_ch, &mut self.wr_data_ch, &mut self.stats);
+        }
         self.rd_line_ch.commit();
     }
 
@@ -331,9 +504,8 @@ impl System {
             }
             anyhow::ensure!(
                 self.fabric_cycles - start < max_fabric_cycles,
-                "load/compute did not finish within {max_fabric_cycles} fabric cycles \
-                 (phase {:?}, stats:\n{})",
-                self.lp().phase(),
+                "load/compute did not finish within {max_fabric_cycles} fabric cycles\n{}  stats:\n{}",
+                self.state_dump(),
                 self.stats
             );
         }
@@ -365,9 +537,8 @@ impl System {
             }
             anyhow::ensure!(
                 self.fabric_cycles - start < max_fabric_cycles,
-                "drain did not finish within {max_fabric_cycles} fabric cycles \
-                 (phase {:?}, stats:\n{})",
-                self.lp().phase(),
+                "drain did not finish within {max_fabric_cycles} fabric cycles\n{}  stats:\n{}",
+                self.state_dump(),
                 self.stats
             );
         }
@@ -609,6 +780,46 @@ mod tests {
             b.step();
         }
         assert_same_observables(&a, &b);
+    }
+
+    #[test]
+    fn faulted_run_is_bit_identical_across_backends() {
+        use crate::config::{EdgeMode, PayloadMode, SimBackend};
+        use crate::fault::FaultSpec;
+        let spec = FaultSpec::parse_cli("dram_refresh=64/8,cdc=96/6,slow=128/12,corrupt=7,seed=3")
+            .unwrap();
+        let run = |sim: SimBackend| {
+            let mut cfg = small_cfg(Design::Medusa);
+            cfg.sim = sim;
+            let mut sys = System::new(cfg).unwrap();
+            sys.install_faults(&spec).unwrap();
+            let n = sys.cfg.geometry.words_per_line();
+            if !sim.payload.is_elided() {
+                sys.controller_mut().preload(
+                    0,
+                    (0..32u64)
+                        .map(|i| Line::from_words((0..n as u64).map(|y| i * 10 + y).collect())),
+                );
+            }
+            let scheds = partition(&[Region { base: 0, lines: 32 }], 4);
+            sys.lp_mut().begin_layer(&scheds, 1 << 18);
+            sys.run_until_compute_done(1_000_000).unwrap();
+            sys
+        };
+        let step = run(SimBackend::full());
+        let leap = run(SimBackend { edges: EdgeMode::Leap, ..SimBackend::full() });
+        assert_same_observables(&step, &leap);
+        let elided = run(SimBackend { payload: PayloadMode::Elided, ..SimBackend::full() });
+        assert_same_observables(&step, &elided);
+        let fast = run(SimBackend::fast());
+        assert_same_observables(&step, &fast);
+        // The campaign really fired (teeth for the whole comparison).
+        assert!(step.stats.get("fault.dram_refresh_stall_cycles") > 0);
+        assert!(step.stats.get("fault.lp_slowdown_cycles") > 0);
+        assert!(step.stats.get("fault.corrupt_injected") > 0);
+        // Detection-only corruption: payload untouched, data verifies.
+        let loaded = step.lp().loaded(0);
+        assert!(!loaded.is_empty());
     }
 
     #[test]

@@ -74,6 +74,28 @@ impl MemoryController {
         stats.add(Counter::DramIdleCycles, n);
     }
 
+    /// A refresh-stall cycle (fault injection): the system calls this
+    /// *instead of* [`MemoryController::tick`] while a scheduled DRAM
+    /// refresh window is open. The controller freezes — no command
+    /// accept, no line return, no write drain — but wall-clock time
+    /// still passes (`busy_until` comparisons use absolute cycles, so a
+    /// pending access "ages" through the window exactly as a real
+    /// refresh-blocked command would).
+    pub fn refresh_stall(&mut self, cycle: u64, stats: &mut Stats) {
+        self.cycle = cycle;
+        stats.bump(Counter::FaultDramRefreshStallCycles);
+    }
+
+    /// Refresh-stall cycles inside a leapt span (closed-form companion
+    /// of [`MemoryController::refresh_stall`]): exact because a leap
+    /// only engages when the controller is idle and the command channel
+    /// empty, and then a refresh-stall tick differs from an idle tick
+    /// only in which counter it bumps.
+    pub fn skip_refresh_cycles(&self, n: u64, stats: &mut Stats) {
+        debug_assert!(self.is_idle(), "bulk-skipping a busy controller");
+        stats.add(Counter::FaultDramRefreshStallCycles, n);
+    }
+
     /// Lines committed to the store on behalf of write port `port` so
     /// far (0 if the port never wrote).
     pub fn write_lines_landed(&self, port: usize) -> u64 {

@@ -14,6 +14,7 @@ use crate::interconnect::Design;
 use crate::util::{par_map, par_map_with};
 use crate::workload::engine::run_scenario;
 use crate::workload::scenario::Scenario;
+use anyhow::{Context, Result};
 
 /// One cell of the matrix.
 #[derive(Clone, Debug)]
@@ -39,12 +40,14 @@ fn matrix_points() -> Vec<(&'static str, Design)> {
     out
 }
 
-fn run_point(name: &'static str, design: Design, backend: SimBackend) -> ScenarioPoint {
-    let mut sc = Scenario::builtin(name).expect("builtin scenario");
+fn run_point(name: &'static str, design: Design, backend: SimBackend) -> Result<ScenarioPoint> {
+    let mut sc = Scenario::builtin(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown builtin scenario {name:?}"))?;
     sc.cfg.design = design;
     sc.cfg.sim = backend;
-    let out = run_scenario(&sc).expect("builtin scenario runs");
-    ScenarioPoint {
+    let out =
+        run_scenario(&sc).with_context(|| format!("scenario {name} on {}", design.name()))?;
+    Ok(ScenarioPoint {
         scenario: name,
         design,
         tenants: out.tenants.len(),
@@ -53,13 +56,13 @@ fn run_point(name: &'static str, design: Design, backend: SimBackend) -> Scenari
         lines_moved: out.tenants.iter().map(|t| t.report.total_lines_moved()).sum(),
         verified: out.all_verified(),
         fingerprint: out.fingerprint(),
-    }
+    })
 }
 
 /// Run the matrix with an explicit worker count (determinism tests).
 /// Uses the full reference backend: this matrix is where golden-model
 /// verification earns its ✓ column.
-pub fn sweep_with_threads(workers: usize) -> Vec<ScenarioPoint> {
+pub fn sweep_with_threads(workers: usize) -> Result<Vec<ScenarioPoint>> {
     sweep_with_threads_backend(workers, SimBackend::full())
 }
 
@@ -67,24 +70,31 @@ pub fn sweep_with_threads(workers: usize) -> Vec<ScenarioPoint> {
 /// lines moved, and fabric timing are backend-invariant; the elided
 /// backend reports `verified` vacuously (nothing to check) and the
 /// fingerprint differs only in the absent feature maps.
-pub fn sweep_with_threads_backend(workers: usize, backend: SimBackend) -> Vec<ScenarioPoint> {
+pub fn sweep_with_threads_backend(
+    workers: usize,
+    backend: SimBackend,
+) -> Result<Vec<ScenarioPoint>> {
     par_map_with(workers, &matrix_points(), move |&(name, design)| {
         run_point(name, design, backend)
     })
+    .into_iter()
+    .collect()
 }
 
 /// Run the full matrix (threaded per `MEDUSA_THREADS`).
-pub fn sweep() -> Vec<ScenarioPoint> {
+pub fn sweep() -> Result<Vec<ScenarioPoint>> {
     par_map(&matrix_points(), |&(name, design)| run_point(name, design, SimBackend::full()))
+        .into_iter()
+        .collect()
 }
 
 /// Render the matrix as a table.
-pub fn scenarios() -> Table {
+pub fn scenarios() -> Result<Table> {
     let mut t = Table::new(
         "Scenario matrix — workload classes through both interconnects",
         &["scenario", "design", "tenants", "fabric cycles", "sim us", "lines moved", "verified"],
     );
-    for p in sweep() {
+    for p in sweep()? {
         t.row(vec![
             p.scenario.to_string(),
             p.design.name().to_string(),
@@ -95,7 +105,7 @@ pub fn scenarios() -> Table {
             if p.verified { "✓".to_string() } else { "✗".to_string() },
         ]);
     }
-    t
+    Ok(t)
 }
 
 #[cfg(test)]
@@ -104,7 +114,7 @@ mod tests {
 
     #[test]
     fn matrix_covers_all_builtins_on_both_designs() {
-        let pts = sweep_with_threads(1);
+        let pts = sweep_with_threads(1).unwrap();
         assert_eq!(pts.len(), Scenario::builtin_names().len() * 2);
         assert!(pts.iter().all(|p| p.verified), "every matrix point must verify");
         assert!(pts.iter().all(|p| p.lines_moved > 0));
@@ -112,8 +122,8 @@ mod tests {
 
     #[test]
     fn fast_backend_matrix_matches_full_backend_timing() {
-        let full = sweep_with_threads_backend(2, SimBackend::full());
-        let fast = sweep_with_threads_backend(2, SimBackend::fast());
+        let full = sweep_with_threads_backend(2, SimBackend::full()).unwrap();
+        let fast = sweep_with_threads_backend(2, SimBackend::fast()).unwrap();
         assert_eq!(full.len(), fast.len());
         for (a, b) in full.iter().zip(fast.iter()) {
             assert_eq!((a.scenario, a.design), (b.scenario, b.design));
@@ -126,7 +136,7 @@ mod tests {
 
     #[test]
     fn table_renders() {
-        let t = scenarios();
+        let t = scenarios().unwrap();
         assert!(t.to_text().contains("multi-tenant-mix"));
         assert_eq!(t.rows.len(), Scenario::builtin_names().len() * 2);
     }

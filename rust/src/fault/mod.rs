@@ -1,0 +1,663 @@
+//! Deterministic fault injection (PR 6).
+//!
+//! A fault campaign is a *pre-scheduled*, seed-derived set of events —
+//! never a coin flip taken mid-simulation — so injecting faults keeps
+//! every standing determinism contract intact:
+//!
+//! * **data-independence**: whether a fault fires at cycle `c` depends
+//!   only on `(spec, seed, c)`, never on payload words or occupancy, so
+//!   elided-vs-full runs see the identical schedule;
+//! * **leap-exactness**: every periodic window is closed-form
+//!   ([`FaultWindow::active`], [`FaultWindow::count_active_in`]), so
+//!   `System::try_leap_idle` can split a leapt span into in-window and
+//!   out-of-window cycles arithmetically — fault edges feed the leap
+//!   horizon exactly like staggered tenant starts;
+//! * **seq-vs-par**: the schedule is owned by one `System`, which is
+//!   single-threaded; parallel sweeps shard whole scenarios.
+//!
+//! Four fault classes are modelled (ISSUE 6):
+//!
+//! * **DRAM refresh/stall bursts** — periodic windows (mem-clock cycles)
+//!   during which the controller freezes: no command accept, no line
+//!   return, no write drain. Time still passes (`busy_until` elapses).
+//! * **CDC stalls** — periodic windows (fabric cycles) during which the
+//!   read-line crossing delivers nothing into the fabric.
+//! * **Per-port-group slowdowns and wedges** — periodic windows (or a
+//!   permanent wedge from a given cycle) during which one tenant's
+//!   layer processor is not ticked at all. A wedge is what the
+//!   watchdog/recovery layer exists to catch.
+//! * **Line corruption (detect-only)** — every Nth delivered read line
+//!   is tagged corrupt; a seeded parity bit decides whether the fabric's
+//!   line parity *detects* it (`fault.detected`) or the flip lands on
+//!   bits the parity misses (`fault.masked`). The payload is never
+//!   mutated: the model measures detection coverage, not data loss, so
+//!   golden verification and payload elision stay bit-identical.
+//!
+//! The watchdog/recovery half lives in `workload::engine` (progress
+//! tracking, [`SimError::TenantStalled`], the degrade policy); the
+//! injection points live in `coordinator::system` and
+//! `dram::controller`.
+
+use crate::config::Value;
+use crate::util::Prng;
+use anyhow::{anyhow, bail, ensure, Result};
+use std::fmt;
+
+/// Domain-separation keys so each component draws its window phase from
+/// an independent stream of the campaign seed.
+const DRAM_KEY: u64 = 0x6472_616d_5f66_6c74; // "dram_flt"
+const CDC_KEY: u64 = 0x6364_635f_5f66_6c74; // "cdc__flt"
+const LP_KEY: u64 = 0x6c70_5f5f_5f66_6c74; // "lp___flt"
+const CORRUPT_KEY: u64 = 0x636f_7272_5f66_6c74; // "corr_flt"
+
+/// Watchdog horizon used when the spec leaves `watchdog_cycles = 0`.
+pub const DEFAULT_WATCHDOG_CYCLES: u64 = 10_000;
+
+/// splitmix64 finalizer: cheap, well-mixed 64-bit hash for stream
+/// keying and the corrupt detected/masked parity bit.
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// What the engine does when the watchdog declares a tenant stalled.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FaultPolicy {
+    /// Abort the run with [`SimError::TenantStalled`] (the default).
+    #[default]
+    Error,
+    /// Quiesce and drain the stalled tenant's port group; the remaining
+    /// tenants keep running (degraded goodput is reported).
+    Degrade,
+}
+
+impl FaultPolicy {
+    pub fn parse(s: &str) -> Option<FaultPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" | "abort" => Some(FaultPolicy::Error),
+            "degrade" | "quiesce" => Some(FaultPolicy::Degrade),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultPolicy::Error => "error",
+            FaultPolicy::Degrade => "degrade",
+        }
+    }
+}
+
+/// A periodic stall window with a seed-drawn phase: active on cycles
+/// `c` where `(c - phase) mod period < len`. Everything about it is
+/// closed-form, which is what keeps idle-edge leaping exact under
+/// faults.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultWindow {
+    /// First active cycle of each period, in `[0, period)`.
+    pub phase: u64,
+    pub period: u64,
+    pub len: u64,
+}
+
+impl FaultWindow {
+    /// Draw the phase for a `(period, len)` window from `prng`.
+    /// Returns `None` when the window is disabled (`period == 0`).
+    pub fn draw(prng: &mut Prng, period: u64, len: u64) -> Option<FaultWindow> {
+        if period == 0 || len == 0 {
+            return None;
+        }
+        Some(FaultWindow { phase: prng.below(period), period, len })
+    }
+
+    /// Is the window active at `cycle`?
+    #[inline]
+    pub fn active(&self, cycle: u64) -> bool {
+        // phase < period, so the shift never underflows.
+        (cycle + self.period - self.phase) % self.period < self.len
+    }
+
+    /// Number of active cycles in `[0, n)` (closed form).
+    fn active_before(&self, n: u64) -> u64 {
+        // Shift so windows start at multiples of `period`, then count
+        // `y in [0, x)` with `y mod period < len`.
+        let h = |x: u64| (x / self.period) * self.len + (x % self.period).min(self.len);
+        let offset = self.period - self.phase;
+        h(n + offset) - h(offset)
+    }
+
+    /// Number of active cycles in `[lo, hi)` (closed form). This is the
+    /// leap-split primitive: a leapt span of idle controller edges
+    /// divides into `count_active_in` refresh-stall cycles and the rest
+    /// plain idle cycles.
+    pub fn count_active_in(&self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo <= hi);
+        self.active_before(hi) - self.active_before(lo)
+    }
+
+    /// The first window-start cycle `>= cycle` (equals `cycle` when the
+    /// window starts exactly there). Used to cap a leap so stepwise
+    /// execution resumes before the window opens.
+    pub fn next_start(&self, cycle: u64) -> u64 {
+        let r = cycle % self.period;
+        cycle + (self.phase + self.period - r) % self.period
+    }
+}
+
+/// The user-facing fault campaign description: what a `[faults]`
+/// scenario section or a `--faults=` CLI spec parses into, and what a
+/// trace header records so capture/replay of faulty runs stays
+/// bit-exact. All-zero (the default) means "no faults".
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Campaign seed: draws every window phase and the corrupt parity
+    /// stream (independent of the workload seed).
+    pub seed: u64,
+    /// DRAM refresh burst window, in memory-clock cycles.
+    pub dram_refresh_period: u64,
+    pub dram_refresh_len: u64,
+    /// Read-line CDC stall window, in fabric cycles.
+    pub cdc_stall_period: u64,
+    pub cdc_stall_len: u64,
+    /// Per-tenant layer-processor slowdown window, in fabric cycles
+    /// (each tenant gets an independently-phased window).
+    pub lp_slow_period: u64,
+    pub lp_slow_len: u64,
+    /// Tag every Nth delivered read line corrupt (0 = disabled).
+    pub corrupt_period: u64,
+    /// Permanently wedge this tenant's layer processor...
+    pub wedge_tenant: Option<usize>,
+    /// ...from this fabric cycle on.
+    pub wedge_cycle: u64,
+    /// Watchdog horizon in fabric cycles; 0 means
+    /// [`DEFAULT_WATCHDOG_CYCLES`].
+    pub watchdog_cycles: u64,
+    /// What to do when the watchdog fires.
+    pub policy: FaultPolicy,
+}
+
+impl FaultSpec {
+    /// The empty campaign (injects nothing, watchdog disarmed).
+    pub fn none() -> FaultSpec {
+        FaultSpec::default()
+    }
+
+    /// True when this spec injects nothing — the watchdog is disarmed
+    /// too, so a no-fault run is bit-identical to pre-fault builds.
+    pub fn is_none(&self) -> bool {
+        self.dram_refresh_period == 0
+            && self.cdc_stall_period == 0
+            && self.lp_slow_period == 0
+            && self.corrupt_period == 0
+            && self.wedge_tenant.is_none()
+    }
+
+    /// The effective watchdog horizon (fabric cycles).
+    pub fn watchdog(&self) -> u64 {
+        if self.watchdog_cycles == 0 {
+            DEFAULT_WATCHDOG_CYCLES
+        } else {
+            self.watchdog_cycles
+        }
+    }
+
+    /// Apply one parsed `faults.*` key (scenario files route their
+    /// `[faults]` section here; trace headers route `faults.*` keys of
+    /// `[header]`). Returns `Ok(false)` for keys outside the `faults.`
+    /// namespace.
+    pub fn apply_key(&mut self, key: &str, value: &Value) -> Result<bool> {
+        let Some(k) = key.strip_prefix("faults.") else {
+            return Ok(false);
+        };
+        let as_u64 = |v: &Value| -> Result<u64> { Ok(v.as_usize()? as u64) };
+        match k {
+            "seed" => self.seed = as_u64(value)?,
+            "dram_refresh_period" => self.dram_refresh_period = as_u64(value)?,
+            "dram_refresh_len" => self.dram_refresh_len = as_u64(value)?,
+            "cdc_stall_period" => self.cdc_stall_period = as_u64(value)?,
+            "cdc_stall_len" => self.cdc_stall_len = as_u64(value)?,
+            "lp_slow_period" => self.lp_slow_period = as_u64(value)?,
+            "lp_slow_len" => self.lp_slow_len = as_u64(value)?,
+            "corrupt_period" => self.corrupt_period = as_u64(value)?,
+            "wedge_tenant" => self.wedge_tenant = Some(value.as_usize()?),
+            "wedge_cycle" => self.wedge_cycle = as_u64(value)?,
+            "watchdog_cycles" => self.watchdog_cycles = as_u64(value)?,
+            "policy" => {
+                self.policy = FaultPolicy::parse(value.as_str()?).ok_or_else(|| {
+                    anyhow!("faults.policy must be \"error\" or \"degrade\", got {value:?}")
+                })?
+            }
+            _ => bail!("unknown faults key {key:?}"),
+        }
+        Ok(true)
+    }
+
+    /// Parse the compact CLI spec: comma-separated items of
+    /// `dram_refresh=P/L`, `cdc=P/L`, `slow=P/L`, `corrupt=N`,
+    /// `wedge=T@C`, `watchdog=N`, `seed=N`, `policy=error|degrade`.
+    /// Example: `--faults=dram_refresh=512/16,cdc=256/8,corrupt=97`.
+    pub fn parse_cli(spec: &str) -> Result<FaultSpec> {
+        let mut out = FaultSpec::default();
+        let num = |s: &str, what: &str| -> Result<u64> {
+            s.parse::<u64>().map_err(|_| anyhow!("--faults: {what} must be an integer, got {s:?}"))
+        };
+        let pair = |s: &str, what: &str| -> Result<(u64, u64)> {
+            let (p, l) = s
+                .split_once('/')
+                .ok_or_else(|| anyhow!("--faults: {what} wants PERIOD/LEN, got {s:?}"))?;
+            Ok((num(p, what)?, num(l, what)?))
+        };
+        for item in spec.split(',').filter(|s| !s.is_empty()) {
+            let (key, val) = item
+                .split_once('=')
+                .ok_or_else(|| anyhow!("--faults item {item:?}: expected key=value"))?;
+            match key {
+                "dram_refresh" => {
+                    (out.dram_refresh_period, out.dram_refresh_len) = pair(val, key)?
+                }
+                "cdc" => (out.cdc_stall_period, out.cdc_stall_len) = pair(val, key)?,
+                "slow" => (out.lp_slow_period, out.lp_slow_len) = pair(val, key)?,
+                "corrupt" => out.corrupt_period = num(val, key)?,
+                "wedge" => {
+                    let (t, c) = val
+                        .split_once('@')
+                        .ok_or_else(|| anyhow!("--faults: wedge wants TENANT@CYCLE, got {val:?}"))?;
+                    out.wedge_tenant = Some(num(t, "wedge tenant")? as usize);
+                    out.wedge_cycle = num(c, "wedge cycle")?;
+                }
+                "watchdog" => out.watchdog_cycles = num(val, key)?,
+                "seed" => out.seed = num(val, key)?,
+                "policy" => {
+                    out.policy = FaultPolicy::parse(val)
+                        .ok_or_else(|| anyhow!("--faults: policy must be error or degrade"))?
+                }
+                _ => bail!("--faults: unknown item {key:?}"),
+            }
+        }
+        out.validate(None)?;
+        Ok(out)
+    }
+
+    /// Sanity-check the spec; `tenants`, when known, bounds
+    /// `wedge_tenant`.
+    pub fn validate(&self, tenants: Option<usize>) -> Result<()> {
+        for (what, period, len) in [
+            ("dram_refresh", self.dram_refresh_period, self.dram_refresh_len),
+            ("cdc_stall", self.cdc_stall_period, self.cdc_stall_len),
+            ("lp_slow", self.lp_slow_period, self.lp_slow_len),
+        ] {
+            ensure!(
+                (period == 0) == (len == 0),
+                "faults: {what} needs both period and len (got {period}/{len})"
+            );
+            ensure!(len <= period, "faults: {what} len {len} exceeds period {period}");
+            // A stall window longer than the watchdog horizon would trip
+            // the watchdog on a fault that is transient by construction.
+            ensure!(
+                len < self.watchdog(),
+                "faults: {what} len {len} must stay below the watchdog horizon {}",
+                self.watchdog()
+            );
+        }
+        if let (Some(t), Some(n)) = (self.wedge_tenant, tenants) {
+            ensure!(t < n, "faults: wedge_tenant {t} out of range (scenario has {n} tenants)");
+        }
+        Ok(())
+    }
+
+    /// Canonical `(key, value)` pairs for trace headers (TOML-subset
+    /// syntax, fixed order). Empty for the no-fault spec, so non-faulty
+    /// captures stay byte-identical to pre-fault builds.
+    pub fn header_kv(&self) -> Vec<(&'static str, String)> {
+        if self.is_none() {
+            return Vec::new();
+        }
+        let mut kv: Vec<(&'static str, String)> = vec![
+            ("faults.seed", self.seed.to_string()),
+            ("faults.dram_refresh_period", self.dram_refresh_period.to_string()),
+            ("faults.dram_refresh_len", self.dram_refresh_len.to_string()),
+            ("faults.cdc_stall_period", self.cdc_stall_period.to_string()),
+            ("faults.cdc_stall_len", self.cdc_stall_len.to_string()),
+            ("faults.lp_slow_period", self.lp_slow_period.to_string()),
+            ("faults.lp_slow_len", self.lp_slow_len.to_string()),
+            ("faults.corrupt_period", self.corrupt_period.to_string()),
+        ];
+        if let Some(t) = self.wedge_tenant {
+            kv.push(("faults.wedge_tenant", t.to_string()));
+            kv.push(("faults.wedge_cycle", self.wedge_cycle.to_string()));
+        }
+        kv.push(("faults.watchdog_cycles", self.watchdog_cycles.to_string()));
+        kv.push(("faults.policy", format!("\"{}\"", self.policy.name())));
+        kv
+    }
+}
+
+/// Per-delivery corrupt-line schedule: the `idx % period == phase`
+/// deliveries carry a flipped line, and a seeded parity bit per event
+/// decides detected-vs-masked. Counting deliveries is backend-safe:
+/// line movement is bit-identical across all backends.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CorruptSchedule {
+    pub period: u64,
+    pub phase: u64,
+    pub salt: u64,
+    /// Read lines delivered into the fabric so far.
+    pub delivered: u64,
+}
+
+impl CorruptSchedule {
+    /// If delivery number `idx` is a corrupt event, returns
+    /// `Some(detected)`.
+    #[inline]
+    pub fn event(&self, idx: u64) -> Option<bool> {
+        if idx % self.period == self.phase {
+            Some(mix64(self.salt ^ idx) & 1 == 0)
+        } else {
+            None
+        }
+    }
+}
+
+/// The materialized schedule a `System` executes: seed-drawn windows
+/// per component, each from an independent PRNG stream. Per-tenant
+/// streams are keyed by the port group's read base, so disjoint port
+/// groups get independent fault streams no matter how tenants are
+/// ordered (a property test locks this down).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultState {
+    pub spec: FaultSpec,
+    pub dram_refresh: Option<FaultWindow>,
+    pub cdc_stall: Option<FaultWindow>,
+    /// One slowdown window per tenant/layer processor.
+    pub lp_slow: Vec<Option<FaultWindow>>,
+    pub corrupt: Option<CorruptSchedule>,
+}
+
+impl FaultState {
+    /// The disabled schedule (what a fresh `System` carries).
+    pub fn none() -> FaultState {
+        FaultState {
+            spec: FaultSpec::none(),
+            dram_refresh: None,
+            cdc_stall: None,
+            lp_slow: Vec::new(),
+            corrupt: None,
+        }
+    }
+
+    /// Materialize a spec for a system whose tenants own port groups
+    /// starting at `read_bases` (one entry per layer processor, in
+    /// tenant order).
+    pub fn build(spec: &FaultSpec, read_bases: &[usize]) -> Result<FaultState> {
+        spec.validate(Some(read_bases.len()))?;
+        let mut dram_prng = Prng::new(spec.seed ^ DRAM_KEY);
+        let mut cdc_prng = Prng::new(spec.seed ^ CDC_KEY);
+        let lp_slow = read_bases
+            .iter()
+            .map(|&base| {
+                let mut prng = Prng::new(spec.seed ^ LP_KEY ^ mix64(base as u64));
+                FaultWindow::draw(&mut prng, spec.lp_slow_period, spec.lp_slow_len)
+            })
+            .collect();
+        let corrupt = (spec.corrupt_period > 0).then(|| {
+            let mut prng = Prng::new(spec.seed ^ CORRUPT_KEY);
+            CorruptSchedule {
+                period: spec.corrupt_period,
+                phase: prng.below(spec.corrupt_period),
+                salt: prng.next_u64(),
+                delivered: 0,
+            }
+        });
+        Ok(FaultState {
+            spec: spec.clone(),
+            dram_refresh: FaultWindow::draw(
+                &mut dram_prng,
+                spec.dram_refresh_period,
+                spec.dram_refresh_len,
+            ),
+            cdc_stall: FaultWindow::draw(&mut cdc_prng, spec.cdc_stall_period, spec.cdc_stall_len),
+            lp_slow,
+            corrupt,
+        })
+    }
+
+    #[inline]
+    pub fn is_none(&self) -> bool {
+        self.spec.is_none()
+    }
+
+    /// DRAM refresh window active at this memory-clock cycle?
+    #[inline]
+    pub fn refresh_active(&self, mem_cycle: u64) -> bool {
+        self.dram_refresh.is_some_and(|w| w.active(mem_cycle))
+    }
+
+    /// Refresh-stall cycles inside a leapt span of idle memory edges.
+    pub fn refresh_count_in(&self, lo: u64, hi: u64) -> u64 {
+        self.dram_refresh.map_or(0, |w| w.count_active_in(lo, hi))
+    }
+
+    /// Read-line CDC crossing stalled at this fabric cycle?
+    #[inline]
+    pub fn cdc_active(&self, fab_cycle: u64) -> bool {
+        self.cdc_stall.is_some_and(|w| w.active(fab_cycle))
+    }
+
+    /// Tenant `t`'s layer processor inside its slowdown window?
+    #[inline]
+    pub fn lp_slow_active(&self, t: usize, fab_cycle: u64) -> bool {
+        self.lp_slow.get(t).copied().flatten().is_some_and(|w| w.active(fab_cycle))
+    }
+
+    /// Tenant `t` permanently wedged at this fabric cycle?
+    #[inline]
+    pub fn wedged(&self, t: usize, fab_cycle: u64) -> bool {
+        self.spec.wedge_tenant == Some(t) && fab_cycle >= self.spec.wedge_cycle
+    }
+
+    /// How far may an idle-edge leap extend from `fab_cycle` without
+    /// skipping a fault edge that stepwise execution would observe?
+    ///
+    /// * `None`: leaping is disabled right now — a slowdown window is
+    ///   open (suppressed ticks must be stepped so the per-cycle
+    ///   `fault.lp_slowdown_cycles` accounting stays exact) or a wedge
+    ///   is active (the watchdog must observe every edge).
+    /// * `Some(k)`: leap at most `k` fabric cycles; the cap lands the
+    ///   system exactly on the next slowdown-window start or wedge
+    ///   cycle, like the staggered tenant-start cap in `drive()`.
+    ///
+    /// CDC windows never cap a leap: a leap only engages when the
+    /// crossing channels are empty, and an empty crossing makes a CDC
+    /// stall a no-op in stepwise execution too. DRAM refresh windows
+    /// are split arithmetically by `try_leap_idle` instead.
+    pub fn fabric_leap_cap(&self, fab_cycle: u64) -> Option<u64> {
+        let mut cap = u64::MAX;
+        if let Some(t) = self.spec.wedge_tenant {
+            if self.wedged(t, fab_cycle) {
+                return None;
+            }
+            cap = cap.min(self.spec.wedge_cycle - fab_cycle);
+        }
+        for w in self.lp_slow.iter().flatten() {
+            if w.active(fab_cycle) {
+                return None;
+            }
+            cap = cap.min(w.next_start(fab_cycle) - fab_cycle);
+        }
+        Some(cap)
+    }
+}
+
+/// Typed simulation errors the engine can return instead of panicking
+/// or hanging. Carried inside `anyhow::Error` (downcast to match).
+#[derive(Debug)]
+pub enum SimError {
+    /// The per-tenant progress watchdog fired: `tenant` made no forward
+    /// progress for the watchdog horizon ending at fabric cycle
+    /// `cycle`. `state` is the tenant's engine state; `dump` the full
+    /// per-tenant/per-domain state dump.
+    TenantStalled { tenant: usize, cycle: u64, state: String, dump: String },
+}
+
+impl fmt::Display for SimError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SimError::TenantStalled { tenant, cycle, state, dump } => {
+                write!(
+                    f,
+                    "tenant {tenant} stalled (no progress through fabric cycle {cycle}, \
+                     state {state});\n{dump}"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_active_matches_bruteforce_counts() {
+        let w = FaultWindow { phase: 5, period: 16, len: 3 };
+        for lo in 0..40u64 {
+            for hi in lo..80 {
+                let brute = (lo..hi).filter(|&c| w.active(c)).count() as u64;
+                assert_eq!(w.count_active_in(lo, hi), brute, "[{lo}, {hi})");
+            }
+        }
+    }
+
+    #[test]
+    fn window_next_start_is_first_start_at_or_after() {
+        let w = FaultWindow { phase: 7, period: 12, len: 4 };
+        for c in 0..60u64 {
+            let s = w.next_start(c);
+            assert!(s >= c);
+            assert!(w.active(s), "start {s} must open a window");
+            assert!(s == c || !(c..s).any(|x| x % w.period == w.phase));
+        }
+        // A window-start cycle maps to itself.
+        assert_eq!(w.next_start(7), 7);
+        assert_eq!(w.next_start(19), 19);
+    }
+
+    #[test]
+    fn build_is_deterministic_and_keyed_by_read_base() {
+        let mut spec = FaultSpec::none();
+        spec.seed = 9;
+        spec.lp_slow_period = 1 << 20;
+        spec.lp_slow_len = 64;
+        spec.dram_refresh_period = 4096;
+        spec.dram_refresh_len = 32;
+        let a = FaultState::build(&spec, &[0, 8]).unwrap();
+        let b = FaultState::build(&spec, &[0, 8]).unwrap();
+        assert_eq!(a, b, "same seed + groups must rebuild identically");
+        // Same group (read base 0) keeps its stream when the *other*
+        // group moves; the moved group draws a fresh phase.
+        let c = FaultState::build(&spec, &[0, 16]).unwrap();
+        assert_eq!(a.lp_slow[0], c.lp_slow[0]);
+        assert_ne!(a.lp_slow[1], c.lp_slow[1]);
+    }
+
+    #[test]
+    fn corrupt_schedule_splits_detected_and_masked() {
+        let mut spec = FaultSpec::none();
+        spec.corrupt_period = 3;
+        let st = FaultState::build(&spec, &[0]).unwrap();
+        let c = st.corrupt.unwrap();
+        let events: Vec<bool> = (0..300).filter_map(|i| c.event(i)).collect();
+        assert_eq!(events.len(), 100);
+        assert!(events.iter().any(|&d| d) && events.iter().any(|&d| !d));
+    }
+
+    #[test]
+    fn leap_cap_stops_at_slowdown_and_wedge_edges() {
+        let mut spec = FaultSpec::none();
+        spec.lp_slow_period = 100;
+        spec.lp_slow_len = 10;
+        spec.wedge_tenant = Some(0);
+        spec.wedge_cycle = 1_000;
+        let st = FaultState::build(&spec, &[0]).unwrap();
+        let w = st.lp_slow[0].unwrap();
+        // Just before a window: cap reaches exactly its start.
+        let start = w.next_start(0);
+        if start > 0 {
+            assert_eq!(st.fabric_leap_cap(start - 1), Some(1));
+        }
+        // Inside a window: leaping disabled.
+        assert_eq!(st.fabric_leap_cap(start), None);
+        // After the wedge: leaping disabled for good.
+        assert_eq!(st.fabric_leap_cap(1_000), None);
+        assert_eq!(st.fabric_leap_cap(2_000), None);
+    }
+
+    #[test]
+    fn cli_spec_round_trips_through_header_kv() {
+        let spec =
+            FaultSpec::parse_cli("dram_refresh=512/16,cdc=256/8,slow=1024/32,corrupt=97,wedge=1@5000,watchdog=20000,seed=3,policy=degrade")
+                .unwrap();
+        assert_eq!(spec.dram_refresh_period, 512);
+        assert_eq!(spec.dram_refresh_len, 16);
+        assert_eq!(spec.wedge_tenant, Some(1));
+        assert_eq!(spec.policy, FaultPolicy::Degrade);
+        // Feed the header kv back through apply_key: identical spec.
+        let mut back = FaultSpec::none();
+        for (k, v) in spec.header_kv() {
+            let value = if let Some(inner) = v.strip_prefix('"') {
+                Value::Str(inner.trim_end_matches('"').to_string())
+            } else {
+                Value::Int(v.parse().unwrap())
+            };
+            assert!(back.apply_key(k, &value).unwrap(), "{k} must be a faults key");
+        }
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_with_typed_errors() {
+        assert!(FaultSpec::parse_cli("dram_refresh=16").is_err(), "wants P/L");
+        assert!(FaultSpec::parse_cli("bogus=1").is_err());
+        assert!(FaultSpec::parse_cli("wedge=5").is_err(), "wants T@C");
+        // len > period.
+        assert!(FaultSpec::parse_cli("cdc=8/9").is_err());
+        // Window longer than the watchdog horizon.
+        assert!(FaultSpec::parse_cli("slow=50000/30000,watchdog=20000").is_err());
+        // Wedge tenant bounded by the scenario's tenant count at build.
+        let mut spec = FaultSpec::none();
+        spec.wedge_tenant = Some(3);
+        assert!(FaultState::build(&spec, &[0, 8]).is_err());
+    }
+
+    #[test]
+    fn no_fault_spec_emits_no_header_keys() {
+        assert!(FaultSpec::none().header_kv().is_empty());
+        assert!(FaultSpec::none().is_none());
+        let st = FaultState::none();
+        assert!(st.is_none());
+        assert_eq!(st.fabric_leap_cap(123), Some(u64::MAX));
+        assert!(!st.refresh_active(5));
+        assert!(!st.cdc_active(5));
+        assert!(!st.lp_slow_active(0, 5));
+        assert!(!st.wedged(0, 5));
+    }
+
+    #[test]
+    fn sim_error_displays_and_downcasts() {
+        let e = SimError::TenantStalled {
+            tenant: 2,
+            cycle: 4242,
+            state: "Compute".into(),
+            dump: "  lp2: phase=Compute".into(),
+        };
+        let any = anyhow::Error::new(e);
+        let msg = format!("{any:#}");
+        assert!(msg.contains("tenant 2 stalled"));
+        assert!(msg.contains("4242"));
+        assert!(any.downcast_ref::<SimError>().is_some());
+    }
+}

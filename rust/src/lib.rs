@@ -33,6 +33,7 @@ pub mod coordinator;
 pub mod dram;
 pub mod eval;
 pub mod explore;
+pub mod fault;
 pub mod fpga;
 pub mod hw;
 pub mod interconnect;

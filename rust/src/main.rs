@@ -143,7 +143,7 @@ fn cmd_eval(rest: &[String]) -> Result<()> {
             println!();
             print!("{}", eval::fig6::ascii_plot());
         }
-        "scenarios" => print!("{}", eval::scenarios().to_text()),
+        "scenarios" => print!("{}", eval::scenarios()?.to_text()),
         "all" => {
             for t in ["table1", "table2", "fig6", "scenarios"] {
                 cmd_eval(&[t.to_string()])?;
@@ -211,6 +211,12 @@ fn cmd_run(rest: &[String]) -> Result<()> {
         .opt("seed", "override the system seed (re-derives tenant workload seeds)")
         .opt("payload", "full | elided — elided skips payload, stats stay exact (no data checks)")
         .opt("edges", "stepwise | leap — leap skips globally idle clock edges, exactly")
+        .opt(
+            "faults",
+            "fault campaign: dram_refresh=P/L,cdc=P/L,slow=P/L,corrupt=N,wedge=T@C,\
+             watchdog=N,seed=N,policy=error|degrade (overrides the scenario's [faults])",
+        )
+        .opt("fault-seed", "override the fault campaign seed (keeps the rest of the spec)")
         .parse(rest)?;
     let which = args
         .get("scenario")
@@ -225,6 +231,12 @@ fn cmd_run(rest: &[String]) -> Result<()> {
     }
     if let Some(s) = args.get_usize("seed")? {
         sc.reseed(s as u64);
+    }
+    if let Some(spec) = args.get("faults") {
+        sc.faults = medusa::fault::FaultSpec::parse_cli(spec)?;
+    }
+    if let Some(s) = args.get_usize("fault-seed")? {
+        sc.faults.seed = s as u64;
     }
     // Default to whatever the scenario file configured ([sim] section,
     // full/stepwise if absent); CLI flags override it.
@@ -257,7 +269,25 @@ fn cmd_run(rest: &[String]) -> Result<()> {
     println!("stats:\n{}", outcome.stats);
     // Verify BEFORE persisting the trace: a failed run must never be
     // laundered into a replayable "golden" whose expect block records
-    // the broken counters as ground truth.
+    // the broken counters as ground truth. Under the degrade fault
+    // policy a quiesced tenant is unverified by construction, so the
+    // run reports degraded completion instead of failing outright.
+    let degrade = sc.faults.policy == medusa::fault::FaultPolicy::Degrade && !sc.faults.is_none();
+    if !outcome.all_verified() && degrade {
+        let unverified: Vec<usize> = outcome
+            .tenants
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| !t.verified)
+            .map(|(i, _)| i)
+            .collect();
+        println!(
+            "run completed DEGRADED: tenant(s) {unverified:?} quiesced/unverified \
+             (fingerprint {:#018x}); no trace written",
+            outcome.fingerprint()
+        );
+        return Ok(());
+    }
     anyhow::ensure!(outcome.all_verified(), "verification FAILED (no trace written)");
     if let (Some(path), Some(trace)) = (capture, trace) {
         trace.save(path)?;

@@ -74,6 +74,16 @@ counters! {
     DramWriteBursts => "dram.write_bursts",
     DramWriteDataStall => "dram.write_data_stall",
     DramWriteLines => "dram.write_lines",
+    // Fault injection (PR 6). Delay faults count stalled cycles; the
+    // corrupt fault counts detection outcomes. None of these are
+    // movement counters, so they land in `[expect.timing]`, never in
+    // the golden `[expect.exact]` block.
+    FaultCdcStallCycles => "fault.cdc_stall_cycles",
+    FaultCorruptInjected => "fault.corrupt_injected",
+    FaultDetected => "fault.detected",
+    FaultDramRefreshStallCycles => "fault.dram_refresh_stall_cycles",
+    FaultLpSlowdownCycles => "fault.lp_slowdown_cycles",
+    FaultMasked => "fault.masked",
     // Hybrid (partial-transpose) networks. Only the intermediate-radix
     // datapaths touch these: the radix endpoints instantiate the exact
     // baseline/Medusa datapaths and bump those counters instead (the
@@ -101,6 +111,11 @@ counters! {
 
 counters! {
     SampleId, COUNT, ALL;
+    // Degrade-policy recovery metrics (PR 6): lines each surviving
+    // tenant still moved after a quiesce, and how long the quiesce
+    // drain took.
+    DegradeGoodputLines => "degrade.goodput_lines",
+    DegradeRecoveryCycles => "degrade.recovery_cycles",
     MedusaReadLineLatencyCycles => "medusa_read.line_latency_cycles",
 }
 

@@ -204,6 +204,13 @@ pub struct TraceHeader {
     pub rd_line_depth: usize,
     pub wr_data_depth: usize,
     pub seed: u64,
+    /// The fault-injection campaign of the captured run (PR 6). The
+    /// whole schedule derives deterministically from these few knobs,
+    /// so recording them is enough for a replay to reproduce a faulty
+    /// run bit-exactly. `FaultSpec::none()` (the default) emits no
+    /// header keys at all, keeping fault-free traces byte-identical to
+    /// the pre-fault format.
+    pub faults: crate::fault::FaultSpec,
     pub tenants: Vec<TraceTenant>,
 }
 
@@ -301,6 +308,9 @@ impl ScenarioTrace {
         out.push_str(&format!("rd_line_depth = {}\n", h.rd_line_depth));
         out.push_str(&format!("wr_data_depth = {}\n", h.wr_data_depth));
         out.push_str(&format!("seed = {}\n", h.seed));
+        for (k, v) in h.faults.header_kv() {
+            out.push_str(&format!("{k} = {v}\n"));
+        }
         out.push_str(&format!("tenants = {}\n", h.tenants.len()));
         for (t, ten) in h.tenants.iter().enumerate() {
             out.push_str(&format!("\n[tenant.{t}]\n"));
@@ -374,6 +384,16 @@ impl ScenarioTrace {
                 start_cycle: get_u64(&format!("tenant.{t}.start_cycle"))?,
             });
         }
+        // Fault keys are optional: fault-free traces (and every trace
+        // from before PR 6) carry none and parse to `FaultSpec::none()`.
+        let mut faults = crate::fault::FaultSpec::default();
+        for (k, v) in map.range("header.faults.".to_string()..) {
+            if !k.starts_with("header.faults.") {
+                break;
+            }
+            let rest = &k["header.".len()..];
+            faults.apply_key(rest, v).with_context(|| format!("trace key {k:?}"))?;
+        }
         let header = TraceHeader {
             scenario: get("header.scenario")?.as_str()?.to_string(),
             design: get("header.design")?.as_str()?.to_string(),
@@ -391,6 +411,7 @@ impl ScenarioTrace {
             rd_line_depth: get_usize("header.rd_line_depth")?,
             wr_data_depth: get_usize("header.wr_data_depth")?,
             seed: get_u64("header.seed")?,
+            faults,
             tenants,
         };
         let nsteps = get_usize("expect.steps")?;
@@ -558,6 +579,7 @@ mod canonical_tests {
                 rd_line_depth: 8,
                 wr_data_depth: 8,
                 seed: 7,
+                faults: crate::fault::FaultSpec::none(),
                 tenants: vec![TraceTenant {
                     read_base: 0,
                     read_ports: 4,
@@ -604,6 +626,29 @@ mod canonical_tests {
         t.expect.timing.clear();
         let back = ScenarioTrace::from_str(&t.to_text()).unwrap();
         assert_eq!(t, back);
+    }
+
+    #[test]
+    fn faulted_header_round_trips() {
+        let mut t = sample();
+        t.header.faults = crate::fault::FaultSpec::parse_cli(
+            "dram_refresh=64/8,cdc=96/6,slow=128/12,corrupt=7,wedge=1@500,watchdog=4000,seed=3,policy=degrade",
+        )
+        .unwrap();
+        let text = t.to_text();
+        assert!(text.contains("faults.seed = 3"), "{text}");
+        assert!(text.contains("faults.policy = \"degrade\""), "{text}");
+        let back = ScenarioTrace::from_str(&text).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn fault_free_trace_carries_no_fault_keys() {
+        let t = sample();
+        assert!(t.header.faults.is_none());
+        assert!(!t.to_text().contains("faults."));
+        let back = ScenarioTrace::from_str(&t.to_text()).unwrap();
+        assert!(back.header.faults.is_none());
     }
 
     #[test]

@@ -843,6 +843,238 @@ mod workload_math_props {
 }
 
 #[cfg(test)]
+mod fault_schedule_props {
+    use super::{check, Config, Gen};
+    use crate::fault::{FaultSpec, FaultState, FaultWindow};
+    use crate::util::Prng;
+
+    /// A randomized fault campaign plus the port-group layout it lands
+    /// on: `tenants` groups of `ports_per_tenant` read ports each.
+    #[derive(Clone, Debug)]
+    struct CampaignCase {
+        seed: u64,
+        dram: (u64, u64),
+        cdc: (u64, u64),
+        slow: (u64, u64),
+        corrupt: u64,
+        ports_per_tenant: usize,
+        tenants: usize,
+    }
+
+    impl CampaignCase {
+        fn spec(&self) -> FaultSpec {
+            FaultSpec {
+                seed: self.seed,
+                dram_refresh_period: self.dram.0,
+                dram_refresh_len: self.dram.1,
+                cdc_stall_period: self.cdc.0,
+                cdc_stall_len: self.cdc.1,
+                lp_slow_period: self.slow.0,
+                lp_slow_len: self.slow.1,
+                corrupt_period: self.corrupt,
+                ..FaultSpec::none()
+            }
+        }
+
+        fn bases(&self) -> Vec<usize> {
+            (0..self.tenants).map(|t| t * self.ports_per_tenant).collect()
+        }
+    }
+
+    struct CampaignGen;
+
+    /// A `(period, len)` pair with `1 <= len <= period`, or `(0, 0)`
+    /// (channel disabled) one time in four.
+    fn gen_window(rng: &mut Prng) -> (u64, u64) {
+        if rng.below(4) == 0 {
+            return (0, 0);
+        }
+        let period = rng.range(4, 200) as u64;
+        let len = rng.range(1, period as usize) as u64;
+        (period, len)
+    }
+
+    impl Gen<CampaignCase> for CampaignGen {
+        fn generate(&self, rng: &mut Prng) -> CampaignCase {
+            CampaignCase {
+                seed: rng.next_u64(),
+                dram: gen_window(rng),
+                cdc: gen_window(rng),
+                slow: gen_window(rng),
+                corrupt: if rng.below(4) == 0 { 0 } else { rng.range(1, 32) as u64 },
+                ports_per_tenant: rng.range(1, 8),
+                tenants: rng.range(1, 4),
+            }
+        }
+
+        fn shrink(&self, c: &CampaignCase) -> Vec<CampaignCase> {
+            let mut out = Vec::new();
+            if c.tenants > 1 {
+                out.push(CampaignCase { tenants: c.tenants - 1, ..c.clone() });
+            }
+            if c.dram != (0, 0) {
+                out.push(CampaignCase { dram: (0, 0), ..c.clone() });
+            }
+            if c.cdc != (0, 0) {
+                out.push(CampaignCase { cdc: (0, 0), ..c.clone() });
+            }
+            if c.slow != (0, 0) {
+                out.push(CampaignCase { slow: (0, 0), ..c.clone() });
+            }
+            if c.corrupt != 0 {
+                out.push(CampaignCase { corrupt: 0, ..c.clone() });
+            }
+            out
+        }
+    }
+
+    fn cfg() -> Config {
+        Config { cases: 48, ..Config::default() }
+    }
+
+    #[test]
+    fn prop_same_seed_builds_identical_schedule() {
+        // The determinism contract the trace header stands on: a spec
+        // plus a port layout fully determines the materialized schedule.
+        check(cfg(), &CampaignGen, |c: &CampaignCase| {
+            let spec = c.spec();
+            let a = FaultState::build(&spec, &c.bases()).map_err(|e| e.to_string())?;
+            let b = FaultState::build(&spec, &c.bases()).map_err(|e| e.to_string())?;
+            if a != b {
+                return Err(format!("same seed built different schedules:\n{a:?}\nvs\n{b:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_port_group_streams_are_independent() {
+        check(cfg(), &CampaignGen, |c: &CampaignCase| {
+            let spec = c.spec();
+            let bases = c.bases();
+            let full = FaultState::build(&spec, &bases).map_err(|e| e.to_string())?;
+            // A tenant's slowdown window is keyed by its read base alone,
+            // so building the schedule for that tenant in isolation must
+            // reproduce its window exactly — adding or removing other
+            // tenants cannot perturb the draw.
+            for (t, &base) in bases.iter().enumerate() {
+                let solo = FaultState::build(&spec, &[base]).map_err(|e| e.to_string())?;
+                if solo.lp_slow[0] != full.lp_slow[t] {
+                    return Err(format!(
+                        "tenant {t} (base {base}) window depends on other tenants: \
+                         {:?} vs {:?}",
+                        solo.lp_slow[0], full.lp_slow[t]
+                    ));
+                }
+            }
+            // The shared streams (DRAM refresh, CDC, corruption) must not
+            // move when the port-group layout does.
+            let relaid: Vec<usize> = bases.iter().map(|b| b + 64).collect();
+            let moved = FaultState::build(&spec, &relaid).map_err(|e| e.to_string())?;
+            if moved.dram_refresh != full.dram_refresh
+                || moved.cdc_stall != full.cdc_stall
+                || moved.corrupt != full.corrupt
+            {
+                return Err("shared fault streams moved with the port layout".into());
+            }
+            Ok(())
+        });
+    }
+
+    /// A single window plus a probe range for the closed-form checks.
+    #[derive(Clone, Debug)]
+    struct WindowCase {
+        phase: u64,
+        period: u64,
+        len: u64,
+        lo: u64,
+        span: u64,
+    }
+
+    struct WindowGen;
+
+    impl Gen<WindowCase> for WindowGen {
+        fn generate(&self, rng: &mut Prng) -> WindowCase {
+            let period = rng.range(1, 96) as u64;
+            let len = rng.range(1, period as usize) as u64;
+            WindowCase {
+                phase: rng.below(period),
+                period,
+                len,
+                lo: rng.below(4096),
+                span: rng.below(512),
+            }
+        }
+
+        fn shrink(&self, c: &WindowCase) -> Vec<WindowCase> {
+            let mut out = Vec::new();
+            if c.span > 0 {
+                out.push(WindowCase { span: c.span / 2, ..c.clone() });
+            }
+            if c.lo > 0 {
+                out.push(WindowCase { lo: c.lo / 2, ..c.clone() });
+            }
+            out
+        }
+    }
+
+    #[test]
+    fn prop_window_closed_form_matches_stepwise_count() {
+        // `count_active_in` is the leap-split primitive: it must agree
+        // with walking the same span cycle by cycle, and `next_start`
+        // must be the first window start at or after the probe.
+        check(cfg(), &WindowGen, |c: &WindowCase| {
+            let w = FaultWindow { phase: c.phase, period: c.period, len: c.len };
+            let (lo, hi) = (c.lo, c.lo + c.span);
+            let brute = (lo..hi).filter(|&cy| w.active(cy)).count() as u64;
+            let closed = w.count_active_in(lo, hi);
+            if closed != brute {
+                return Err(format!("count_active_in({lo},{hi}) = {closed}, stepwise = {brute}"));
+            }
+            let start = w.next_start(lo);
+            if start < lo || start % w.period != w.phase {
+                return Err(format!("next_start({lo}) = {start} is not a window start"));
+            }
+            if (lo..start).any(|cy| cy % w.period == w.phase) {
+                return Err(format!("next_start({lo}) = {start} skipped an earlier start"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_leap_cap_never_skips_a_slowdown_edge() {
+        // The leap-exactness guarantee: whenever the schedule allows a
+        // leap of `k` cycles, no slowdown window opens strictly inside
+        // the leapt span; `None` only ever means a window is open now.
+        check(cfg(), &CampaignGen, |c: &CampaignCase| {
+            let spec = c.spec();
+            let st = FaultState::build(&spec, &c.bases()).map_err(|e| e.to_string())?;
+            for probe in [0u64, 17, 63, 200, 999] {
+                match st.fabric_leap_cap(probe) {
+                    None => {
+                        if !(0..c.tenants).any(|t| st.lp_slow_active(t, probe)) {
+                            return Err(format!("cap = None at {probe} with no open window"));
+                        }
+                    }
+                    Some(cap) => {
+                        let hi = probe + cap.min(4096);
+                        for cy in probe..hi {
+                            if (0..c.tenants).any(|t| st.lp_slow_active(t, cy)) {
+                                return Err(format!(
+                                    "leap from {probe} (cap {cap}) skips a slowdown edge at {cy}"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+#[cfg(test)]
 mod tests {
     use super::*;
 

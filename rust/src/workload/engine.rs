@@ -36,6 +36,7 @@ use crate::coordinator::metrics::{LayerReport, RunReport};
 use crate::coordinator::System;
 use crate::dram::MemoryController;
 use crate::interconnect::Design;
+use crate::fault::{FaultPolicy, SimError};
 use crate::sim::trace::{ScenarioTrace, TraceExpect, TraceHeader, TraceStep, TraceTenant, MOVEMENT_COUNTERS};
 use crate::sim::stats::{Counter, SampleId};
 use crate::types::{Line, LineAddr, Word};
@@ -489,18 +490,192 @@ fn service(sys: &mut System, t: usize, rt: &mut TenantRt) {
     }
 }
 
-/// Drive every tenant to completion.
+/// One tenant's forward-progress signature: a hash of everything that
+/// moves when the tenant is healthy — its engine state, remaining
+/// steps, its layer processor's phase/cycle counters, and the lines
+/// landed on its write ports. A wedged tenant's signature freezes
+/// (suppressed processors stop bumping even their stall counters),
+/// while ordinary backpressure keeps bumping wait counters — which is
+/// what makes the signature a precise wedge detector with no false
+/// positives on merely-slow tenants.
+fn progress_sig(sys: &System, t: usize, rt: &TenantRt) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut mix = |v: u64| {
+        h = (h ^ v).wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    mix(rt.state as u64);
+    mix(rt.steps.len() as u64);
+    mix(sys.lps[t].progress_sig());
+    let g = rt.group;
+    let landed: u64 = (g.write_base..g.write_base + g.write_ports)
+        .map(|p| sys.controller().write_lines_landed(p))
+        .sum();
+    mix(landed);
+    h
+}
+
+/// The per-tenant progress watchdog + degrade bookkeeping. Armed only
+/// when a fault campaign is installed, so fault-free runs carry zero
+/// watchdog state and stay bit-identical to pre-watchdog builds.
+struct Watchdog {
+    armed: bool,
+    horizon: u64,
+    policy: FaultPolicy,
+    /// Last observed signature / the fabric cycle it last changed.
+    sig: Vec<u64>,
+    progress_cycle: Vec<u64>,
+    /// Degrade policy: quiesce cycle, last force-drain observation.
+    degraded_at: Vec<Option<u64>>,
+    drain_count: Vec<u64>,
+    drain_change_cycle: Vec<u64>,
+    recovery_sampled: Vec<bool>,
+}
+
+/// Force-drain quiescence window: a quiesced tenant's recovery is
+/// declared complete once its ports have drained nothing for this many
+/// fabric cycles.
+const DRAIN_SETTLE_CYCLES: u64 = 64;
+
+impl Watchdog {
+    fn new(sys: &System, tenants: usize) -> Watchdog {
+        let spec = sys.fault_spec();
+        Watchdog {
+            armed: !spec.is_none(),
+            horizon: spec.watchdog(),
+            policy: spec.policy,
+            sig: vec![0; tenants],
+            progress_cycle: vec![0; tenants],
+            degraded_at: vec![None; tenants],
+            drain_count: vec![0; tenants],
+            drain_change_cycle: vec![0; tenants],
+            recovery_sampled: vec![false; tenants],
+        }
+    }
+
+    /// Observe every tenant once per engine iteration; returns the
+    /// tenant index whose watchdog fired (if any). Pure bookkeeping —
+    /// the policy decision stays in `drive` where `tenants` is mutable.
+    fn observe(&mut self, sys: &System, tenants: &[TenantRt]) -> Option<usize> {
+        let now = sys.fabric_cycles();
+        let mut fired = None;
+        for (t, rt) in tenants.iter().enumerate() {
+            if self.degraded_at[t].is_some() {
+                // Degraded tenants are watched for drain settling, not
+                // progress.
+                let d = sys.quiesce_drained(t);
+                if d != self.drain_count[t] {
+                    self.drain_count[t] = d;
+                    self.drain_change_cycle[t] = now;
+                }
+                continue;
+            }
+            if rt.state == TState::WaitStart || rt.state == TState::Finished {
+                self.progress_cycle[t] = now;
+                continue;
+            }
+            let sig = progress_sig(sys, t, rt);
+            if sig != self.sig[t] {
+                self.sig[t] = sig;
+                self.progress_cycle[t] = now;
+            } else if now - self.progress_cycle[t] >= self.horizon && fired.is_none() {
+                fired = Some(t);
+            }
+        }
+        fired
+    }
+
+    /// A degraded tenant whose force-drain has settled (one-shot).
+    fn settled(&mut self, now: u64) -> Option<(usize, u64)> {
+        for t in 0..self.degraded_at.len() {
+            let Some(at) = self.degraded_at[t] else { continue };
+            if !self.recovery_sampled[t]
+                && now.saturating_sub(self.drain_change_cycle[t]) >= DRAIN_SETTLE_CYCLES
+            {
+                self.recovery_sampled[t] = true;
+                return Some((t, self.drain_change_cycle[t].max(at) - at));
+            }
+        }
+        None
+    }
+
+    fn any_degraded(&self) -> bool {
+        self.degraded_at.iter().any(|d| d.is_some())
+    }
+}
+
+/// Drive every tenant to completion (or a typed watchdog verdict).
 fn drive(sys: &mut System, tenants: &mut [TenantRt]) -> Result<()> {
     let n = sys.cfg.geometry.words_per_line();
     let max_edges = edge_budget(tenants, n);
     let mut edges = 0u64;
+    let mut dog = Watchdog::new(sys, tenants.len());
     loop {
         let mut all_done = true;
         for (t, rt) in tenants.iter_mut().enumerate() {
             service(sys, t, rt);
             all_done &= rt.state == TState::Finished;
         }
+        if dog.armed {
+            if let Some(t) = dog.observe(sys, tenants) {
+                let now = sys.fabric_cycles();
+                let state = format!("{:?}", tenants[t].state);
+                match dog.policy {
+                    FaultPolicy::Error => {
+                        // The typed verdict ISSUE 6 requires: a wedged
+                        // tenant terminates the run with a state dump,
+                        // never a hang or a panic. Fires at the same
+                        // elapsed cycle under stepwise and leap backends
+                        // (suppression disables leaping, so the frozen
+                        // span is stepped in both).
+                        let dump = format!(
+                            "  engine states: {:?}\n{}",
+                            tenants.iter().map(|rt| rt.state).collect::<Vec<_>>(),
+                            sys.state_dump()
+                        );
+                        return Err(anyhow::Error::new(SimError::TenantStalled {
+                            tenant: t,
+                            cycle: now,
+                            state,
+                            dump,
+                        }));
+                    }
+                    FaultPolicy::Degrade => {
+                        // Quiesce the wedged tenant's port group and keep
+                        // the rest of the fabric running; its in-flight
+                        // reads are force-drained by the system so shared
+                        // buffers cannot wedge the survivors.
+                        sys.quiesce_tenant(t);
+                        tenants[t].state = TState::Finished;
+                        tenants[t].verified = false;
+                        dog.degraded_at[t] = Some(now);
+                        dog.drain_count[t] = sys.quiesce_drained(t);
+                        dog.drain_change_cycle[t] = now;
+                        all_done = false;
+                    }
+                }
+            }
+            if let Some((_, recovery)) = dog.settled(sys.fabric_cycles()) {
+                sys.stats.sample(SampleId::DegradeRecoveryCycles, recovery);
+            }
+        }
         if all_done {
+            if dog.any_degraded() {
+                // A degraded tenant that never settled before the run
+                // ended: report the drain time observed so far.
+                while let Some((_, recovery)) = dog.settled(u64::MAX) {
+                    sys.stats.sample(SampleId::DegradeRecoveryCycles, recovery);
+                }
+                // Degraded goodput: lines each surviving tenant still
+                // moved through its completed layers.
+                for (t, rt) in tenants.iter().enumerate() {
+                    if dog.degraded_at[t].is_some() {
+                        continue;
+                    }
+                    let lines: u64 =
+                        rt.report.layers.iter().map(|l| l.lines_read + l.lines_written).sum();
+                    sys.stats.sample(SampleId::DegradeGoodputLines, lines);
+                }
+            }
             return Ok(());
         }
         // Leap backend: skip the idle span, but never past a staggered
@@ -508,7 +683,10 @@ fn drive(sys: &mut System, tenants: &mut [TenantRt]) -> Result<()> {
         // between edges, and a tenant must begin on exactly the edge a
         // stepwise run would give it. (All other `service` conditions
         // are covered by the system-level horizon: a waiting-for-flush
-        // or loading tenant keeps some component non-idle.)
+        // or loading tenant keeps some component non-idle. Fault edges
+        // — slowdown windows, wedges, quiesces — cap or disable the
+        // leap inside `try_leap_idle` itself, which is what makes the
+        // watchdog fire at identical cycles stepwise-vs-leap.)
         let mut cap = u64::MAX;
         for rt in tenants.iter() {
             if rt.state == TState::WaitStart {
@@ -526,8 +704,9 @@ fn drive(sys: &mut System, tenants: &mut [TenantRt]) -> Result<()> {
         }
         ensure!(
             edges < max_edges,
-            "scenario stalled after {edges} edges (states: {:?}, stats:\n{})",
+            "scenario stalled after {edges} edges (states: {:?})\n{}  stats:\n{}",
             tenants.iter().map(|t| t.state).collect::<Vec<_>>(),
+            sys.state_dump(),
             sys.stats
         );
     }
@@ -697,6 +876,7 @@ fn run_inner(sc: &Scenario, capture: bool) -> Result<(ScenarioOutcome, Option<Sc
     sc.validate()?;
     let groups = sc.groups()?;
     let mut sys = System::new_with_groups(sc.cfg.clone(), &groups)?;
+    sys.install_faults(&sc.faults)?;
     let mut tenants = build_tenants(sc, &groups, &mut sys)?;
     let trace_steps: Option<Vec<TraceStep>> = capture.then(|| {
         let mut steps = Vec::new();
@@ -743,6 +923,10 @@ fn run_inner(sc: &Scenario, capture: bool) -> Result<(ScenarioOutcome, Option<Sc
             rd_line_depth: sc.cfg.channel_depths.rd_line,
             wr_data_depth: sc.cfg.channel_depths.wr_data,
             seed: sc.cfg.seed,
+            // Recording the spec (not the materialized windows) is
+            // enough: the whole schedule re-derives from it, so faulty
+            // runs capture/replay bit-exactly.
+            faults: sc.faults.clone(),
             tenants: groups
                 .iter()
                 .zip(sc.tenants.iter())
@@ -830,6 +1014,7 @@ pub fn replay_with(
 ) -> Result<ScenarioOutcome> {
     trace.validate()?;
     let (mut sys, groups) = system_from_header(&trace.header, backend)?;
+    sys.install_faults(&trace.header.faults)?;
     let n = sys.cfg.geometry.words_per_line();
     let elided = backend.payload.is_elided();
     let mut tenants: Vec<TenantRt> = groups

@@ -35,6 +35,7 @@
 
 use crate::accel::layer_processor::PortGroup;
 use crate::config::{parse_toml_subset, SystemConfig, Value};
+use crate::fault::FaultSpec;
 use crate::workload::graph::WorkloadNet;
 use crate::workload::zoo;
 use anyhow::{anyhow, bail, ensure, Context, Result};
@@ -65,12 +66,14 @@ pub struct TenantSpec {
     pub seed: u64,
 }
 
-/// A complete scenario: system config + tenant mapping.
+/// A complete scenario: system config + tenant mapping + (optional)
+/// fault-injection campaign (`[faults]` section; see `fault::FaultSpec`).
 #[derive(Clone, Debug)]
 pub struct Scenario {
     pub name: String,
     pub cfg: SystemConfig,
     pub tenants: Vec<TenantSpec>,
+    pub faults: FaultSpec,
 }
 
 impl Scenario {
@@ -81,6 +84,7 @@ impl Scenario {
             name: name.to_string(),
             tenants: vec![TenantSpec { net, read_ports: 0, write_ports: 0, start_cycle: 0, seed }],
             cfg,
+            faults: FaultSpec::none(),
         }
     }
 
@@ -98,6 +102,7 @@ impl Scenario {
         let raw = parse_toml_subset(text)?;
         let mut cfg = SystemConfig::default();
         let mut name = String::new();
+        let mut faults = FaultSpec::none();
         let mut tenant_keys: BTreeMap<usize, BTreeMap<String, Value>> = BTreeMap::new();
         for (key, value) in &raw {
             if cfg.apply_key(key, value)? {
@@ -105,6 +110,9 @@ impl Scenario {
             }
             if key == "scenario.name" {
                 name = value.as_str()?.to_string();
+                continue;
+            }
+            if faults.apply_key(key, value)? {
                 continue;
             }
             if let Some(rest) = key.strip_prefix("tenant.") {
@@ -148,7 +156,7 @@ impl Scenario {
             let net = net.ok_or_else(|| anyhow!("tenant {idx}: missing network"))?;
             tenants.push(TenantSpec { net, read_ports, write_ports, start_cycle, seed });
         }
-        let sc = Scenario { name, cfg, tenants };
+        let sc = Scenario { name, cfg, tenants, faults };
         sc.validate()?;
         Ok(sc)
     }
@@ -204,6 +212,9 @@ impl Scenario {
         for t in &self.tenants {
             t.net.validate()?;
         }
+        self.faults
+            .validate(Some(self.tenants.len()))
+            .with_context(|| format!("scenario {:?} [faults]", self.name))?;
         self.groups().map(|_| ())
     }
 
@@ -248,6 +259,7 @@ impl Scenario {
                         },
                     ],
                     cfg,
+                    faults: FaultSpec::none(),
                 })
             }
             "staggered-gemm" => {
@@ -271,6 +283,7 @@ impl Scenario {
                         },
                     ],
                     cfg,
+                    faults: FaultSpec::none(),
                 })
             }
             _ => None,
@@ -328,7 +341,22 @@ impl Scenario {
             name: format!("micro-{}", design.name()),
             tenants: vec![TenantSpec { net, read_ports: 0, write_ports: 0, start_cycle: 0, seed: 5 }],
             cfg,
+            faults: FaultSpec::none(),
         }
+    }
+
+    /// The micro golden scenario under a standard stall-only fault
+    /// campaign (refresh bursts + CDC stalls + LP slowdowns + detected
+    /// corruption — no wedge). Behind
+    /// `rust/golden/micro_medusa_faulted.trace`: delay faults cannot
+    /// change data-movement totals, so its `[expect.exact]` block is
+    /// identical to the fault-free golden's.
+    pub fn golden_micro_faulted(design: crate::interconnect::Design) -> Scenario {
+        let mut sc = Scenario::golden_micro(design);
+        sc.name = format!("micro-{}-faulted", design.name());
+        sc.faults = FaultSpec::parse_cli("dram_refresh=64/8,cdc=96/6,slow=128/12,corrupt=7,seed=3")
+            .expect("builtin fault campaign is well-formed");
+        sc
     }
 }
 
@@ -445,6 +473,32 @@ network = "gemm-mlp"
         assert_eq!(sc.tenants[0].seed, 123 ^ 0xda7a);
         assert_ne!(sc.tenants[1].seed, 99, "explicit seeds must be re-derived");
         assert_ne!(sc.tenants[0].seed, sc.tenants[1].seed);
+    }
+
+    #[test]
+    fn parses_faults_section() {
+        let text = format!(
+            "{MIX}\n[faults]\nseed = 9\ndram_refresh_period = 64\ndram_refresh_len = 8\n\
+             wedge_tenant = 1\nwedge_cycle = 2000\nwatchdog_cycles = 5000\npolicy = \"degrade\"\n"
+        );
+        let sc = Scenario::from_str(&text).unwrap();
+        assert_eq!(sc.faults.seed, 9);
+        assert_eq!(sc.faults.dram_refresh_period, 64);
+        assert_eq!(sc.faults.wedge_tenant, Some(1));
+        assert_eq!(sc.faults.policy, crate::fault::FaultPolicy::Degrade);
+    }
+
+    #[test]
+    fn fault_wedge_tenant_out_of_range_rejected() {
+        let text = format!("{MIX}\n[faults]\nwedge_tenant = 5\nwedge_cycle = 100\n");
+        let err = Scenario::from_str(&text).unwrap_err();
+        assert!(format!("{err:#}").contains("wedge_tenant"), "{err:#}");
+    }
+
+    #[test]
+    fn unknown_fault_key_rejected() {
+        let text = format!("{MIX}\n[faults]\nflux_capacitor = 1\n");
+        assert!(Scenario::from_str(&text).is_err());
     }
 
     #[test]

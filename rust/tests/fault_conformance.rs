@@ -1,0 +1,342 @@
+//! Conformance suite for deterministic fault injection (PR 6): a
+//! seeded fault campaign is part of the simulated machine, so every
+//! determinism contract the clean simulator honours must survive with
+//! faults armed.
+//!
+//! What it locks down, per ISSUE 6's acceptance criteria:
+//!
+//! * the standard stall+corrupt campaign on every zoo scenario × all
+//!   three design families is **bit-identical** across all four backend
+//!   combinations (seq runs are covered by `scenario_conformance`'s
+//!   fingerprint tests; here the axes are elided-vs-full and
+//!   leap-vs-stepwise);
+//! * delay faults and detect-only corruption leave the movement
+//!   counters and golden-model verification untouched — a faulted run
+//!   still verifies, it just takes longer;
+//! * a wedged tenant terminates with a typed
+//!   `SimError::TenantStalled` (not a hang, not a panic), at the SAME
+//!   fabric cycle under stepwise and leap edge handling;
+//! * the `degrade` policy quiesces the wedged tenant, drains its port
+//!   group, samples recovery/goodput series, and lets the other tenant
+//!   finish — again bit-identically across backends;
+//! * a captured faulty trace records the campaign in its header and
+//!   replays bit-exactly under every backend;
+//! * the checked-in faulted golden (`micro_medusa_faulted.trace`)
+//!   replays under every backend with its `[expect.exact]` block
+//!   verbatim from the clean micro golden.
+
+use medusa::config::{EdgeMode, PayloadMode, SimBackend, SystemConfig};
+use medusa::fault::{FaultSpec, SimError};
+use medusa::interconnect::hybrid::HybridConfig;
+use medusa::interconnect::Design;
+use medusa::sim::stats::{Counter, SampleId};
+use medusa::sim::trace::ScenarioTrace;
+use medusa::types::Geometry;
+use medusa::workload::{self, zoo, Scenario, ScenarioOutcome};
+
+/// The standard campaign: all three delay classes plus detect-only
+/// corruption, same spec the faulted golden was captured under.
+const CAMPAIGN: &str = "dram_refresh=64/8,cdc=96/6,slow=128/12,corrupt=7,seed=3";
+
+/// The per-cycle/per-event injection counters (not the detect/masked
+/// split, which is asserted separately to sum to `corrupt_injected`).
+const FAULT_CLASSES: [&str; 4] = [
+    "fault.dram_refresh_stall_cycles",
+    "fault.cdc_stall_cycles",
+    "fault.lp_slowdown_cycles",
+    "fault.corrupt_injected",
+];
+
+/// Same geometry as the fast-backend suite: N = 8 so the hybrid family
+/// member is a genuine partial transpose, irrational clock ratio so
+/// fabric and memory edges interleave non-trivially around the fault
+/// windows.
+fn cfg(design: Design, sim: SimBackend) -> SystemConfig {
+    SystemConfig {
+        design,
+        geometry: Geometry { w_line: 128, w_acc: 16, read_ports: 8, write_ports: 8, max_burst: 8 },
+        dotprod_units: 16,
+        mem_clock_mhz: 200.0,
+        fabric_clock_mhz: Some(225.0),
+        ddr3_timing: true,
+        rotator_stages: 0,
+        channel_depths: Default::default(),
+        seed: 7,
+        sim,
+    }
+}
+
+fn families() -> [Design; 3] {
+    [
+        Design::Baseline,
+        Design::Medusa,
+        Design::Hybrid(HybridConfig { transpose_radix: 4, ..HybridConfig::default() }),
+    ]
+}
+
+fn backends() -> [SimBackend; 4] {
+    [
+        SimBackend::full(),
+        SimBackend { payload: PayloadMode::Elided, edges: EdgeMode::Stepwise },
+        SimBackend { payload: PayloadMode::Full, edges: EdgeMode::Leap },
+        SimBackend::fast(),
+    ]
+}
+
+/// Every observable the backends promise to preserve, fault counters
+/// and degrade series included (they live in the ordinary counter and
+/// sample registries).
+fn assert_stats_exact(a: &ScenarioOutcome, b: &ScenarioOutcome, what: &str) {
+    assert_eq!(a.fabric_cycles, b.fabric_cycles, "{what}: fabric_cycles");
+    assert_eq!(a.mem_cycles, b.mem_cycles, "{what}: mem_cycles");
+    assert_eq!(a.now_ps, b.now_ps, "{what}: now_ps");
+    for &id in Counter::ALL.iter() {
+        assert_eq!(a.stats.count(id), b.stats.count(id), "{what}: counter {}", id.name());
+    }
+    for &id in SampleId::ALL.iter() {
+        let (sa, sb) = (a.stats.series_of(id), b.stats.series_of(id));
+        assert_eq!(
+            (sa.min, sa.max, sa.sum, sa.count),
+            (sb.min, sb.max, sb.sum, sb.count),
+            "{what}: series {}",
+            id.name()
+        );
+    }
+    assert_eq!(a.tenants.len(), b.tenants.len(), "{what}: tenant count");
+    for (t, (ta, tb)) in a.tenants.iter().zip(b.tenants.iter()).enumerate() {
+        assert_eq!(ta.read_waits, tb.read_waits, "{what}: tenant {t} read waits");
+        assert_eq!(ta.write_waits, tb.write_waits, "{what}: tenant {t} write waits");
+        assert_eq!(
+            ta.report.total_cycles(),
+            tb.report.total_cycles(),
+            "{what}: tenant {t} busy cycles"
+        );
+        assert_eq!(
+            ta.report.total_lines_moved(),
+            tb.report.total_lines_moved(),
+            "{what}: tenant {t} lines moved"
+        );
+    }
+}
+
+fn run_faulted(
+    name: &str,
+    design: Design,
+    net: workload::WorkloadNet,
+    sim: SimBackend,
+    faults: &str,
+) -> ScenarioOutcome {
+    let mut sc = Scenario::single(name, cfg(design, sim), net);
+    sc.faults = FaultSpec::parse_cli(faults).expect("campaign spec parses");
+    workload::run_scenario(&sc)
+        .unwrap_or_else(|e| panic!("{name} / {design:?} / {sim:?} / {faults}: {e:#}"))
+}
+
+#[test]
+fn standard_campaign_is_bit_identical_across_backends_on_every_zoo_scenario() {
+    // Accumulated per-class totals: every fault class must fire
+    // somewhere in the sweep (each individual net/design pair only has
+    // to inject *something*).
+    let mut class_totals = [0u64; 4];
+    for net in zoo::all() {
+        for design in families() {
+            let full =
+                run_faulted(&format!("flt-{}", net.name), design, net.clone(), SimBackend::full(), CAMPAIGN);
+            // Delay faults + detect-only corruption: the workload's
+            // golden check must still pass on the faulted run.
+            assert!(full.all_verified(), "{} on {design:?}: faulted run must verify", net.name);
+            let injected: u64 = FAULT_CLASSES.iter().map(|n| full.stats.get(n)).sum();
+            assert!(injected > 0, "{} on {design:?}: campaign injected nothing", net.name);
+            // Every corrupt event is either detected or masked; none
+            // silently disappears.
+            assert_eq!(
+                full.stats.get("fault.corrupt_injected"),
+                full.stats.get("fault.detected") + full.stats.get("fault.masked"),
+                "{} on {design:?}: corrupt events unaccounted for",
+                net.name
+            );
+            for (slot, name) in class_totals.iter_mut().zip(FAULT_CLASSES.iter()) {
+                *slot += full.stats.get(name);
+            }
+
+            let elided = run_faulted(
+                &format!("flt-{}", net.name),
+                design,
+                net.clone(),
+                SimBackend { payload: PayloadMode::Elided, edges: EdgeMode::Stepwise },
+                CAMPAIGN,
+            );
+            assert_stats_exact(&full, &elided, &format!("{} {design:?} elided", net.name));
+
+            let leap = run_faulted(
+                &format!("flt-{}", net.name),
+                design,
+                net.clone(),
+                SimBackend { payload: PayloadMode::Full, edges: EdgeMode::Leap },
+                CAMPAIGN,
+            );
+            // Leap preserves payload, so the FULL fingerprint must
+            // match: fault windows cap or split leaps, never get
+            // skipped by one.
+            assert_eq!(
+                full.fingerprint(),
+                leap.fingerprint(),
+                "{} {design:?}: leap changed the faulted outcome fingerprint",
+                net.name
+            );
+            assert_stats_exact(&full, &leap, &format!("{} {design:?} leap", net.name));
+
+            let fast = run_faulted(
+                &format!("flt-{}", net.name),
+                design,
+                net.clone(),
+                SimBackend::fast(),
+                CAMPAIGN,
+            );
+            assert_stats_exact(&full, &fast, &format!("{} {design:?} fast", net.name));
+        }
+    }
+    for (total, name) in class_totals.iter().zip(FAULT_CLASSES.iter()) {
+        assert!(*total > 0, "fault class {name} never fired across the whole sweep");
+    }
+}
+
+#[test]
+fn captured_faulty_trace_records_campaign_and_replays_under_every_backend() {
+    let mut sc =
+        Scenario::single("flt-replay", cfg(Design::Medusa, SimBackend::full()), zoo::gemm_mlp());
+    sc.faults = FaultSpec::parse_cli(CAMPAIGN).unwrap();
+    let (out, trace) = workload::run_scenario_captured(&sc).unwrap();
+    // The header must carry the campaign — replaying a faulty trace
+    // without re-arming the faults could never be bit-exact.
+    assert_eq!(trace.header.faults, sc.faults, "header must record the fault campaign");
+    let text = trace.to_text();
+    assert!(text.contains("faults.seed = 3"), "campaign missing from trace text:\n{text}");
+    let parsed = ScenarioTrace::from_str(&text).unwrap();
+    assert_eq!(parsed, trace, "faulty trace text round-trip");
+    for backend in backends() {
+        let replayed = workload::verify_replay_with(&parsed, backend)
+            .unwrap_or_else(|e| panic!("faulty replay under {backend:?}: {e:#}"));
+        assert_eq!(replayed.fabric_cycles, out.fabric_cycles, "{backend:?}: cycle drift");
+        for name in FAULT_CLASSES {
+            assert_eq!(
+                replayed.stats.get(name),
+                out.stats.get(name),
+                "{backend:?}: replay drifted on {name}"
+            );
+        }
+    }
+}
+
+#[test]
+fn wedged_tenant_errors_with_tenant_stalled_at_identical_cycle_across_backends() {
+    let mut fired = Vec::new();
+    for backend in backends() {
+        let mut sc = Scenario::single("flt-wedge", cfg(Design::Medusa, backend), zoo::gemm_mlp());
+        // Wedge the only tenant mid-load; the watchdog horizon is small
+        // so the run terminates quickly instead of hanging.
+        sc.faults = FaultSpec::parse_cli("wedge=0@400,watchdog=512,seed=11").unwrap();
+        let err = workload::run_scenario(&sc).expect_err("wedged run must error, not hang");
+        let stalled = err
+            .downcast_ref::<SimError>()
+            .unwrap_or_else(|| panic!("{backend:?}: not a typed SimError: {err:#}"));
+        let SimError::TenantStalled { tenant, cycle, state, dump } = stalled;
+        assert_eq!(*tenant, 0, "{backend:?}: wrong tenant blamed");
+        // The wedge lands at 400 and the horizon is 512, so the verdict
+        // must arrive right after cycle 912 (small slack for where the
+        // last pre-wedge tick is observed).
+        assert!(
+            (910..=940).contains(cycle),
+            "{backend:?}: watchdog fired at {cycle}, expected just past 400 + 512"
+        );
+        assert!(!state.is_empty(), "{backend:?}: missing engine state");
+        assert!(dump.contains("lp0"), "{backend:?}: dump must include per-LP state:\n{dump}");
+        fired.push(*cycle);
+    }
+    // The acceptance criterion: identical elapsed cycles under every
+    // backend — the wedge suppresses leaping, so leap-mode execution
+    // steps through the frozen span exactly like the reference.
+    assert!(
+        fired.windows(2).all(|w| w[0] == w[1]),
+        "TenantStalled cycles diverged across backends: {fired:?}"
+    );
+}
+
+#[test]
+fn degrade_policy_quiesces_wedged_tenant_and_keeps_survivors_running() {
+    let mut reference: Option<ScenarioOutcome> = None;
+    for backend in backends() {
+        let mut sc = Scenario::builtin("multi-tenant-mix").unwrap();
+        sc.cfg.sim = backend;
+        // Wedge tenant 1 early (mid-load) so the degrade path also has
+        // in-flight read lines to drain.
+        sc.faults =
+            FaultSpec::parse_cli("wedge=1@64,watchdog=512,policy=degrade,seed=11").unwrap();
+        let out = workload::run_scenario(&sc)
+            .unwrap_or_else(|e| panic!("degraded run must complete under {backend:?}: {e:#}"));
+        assert!(!out.tenants[1].verified, "{backend:?}: wedged tenant must be unverified");
+        assert!(out.tenants[0].verified, "{backend:?}: surviving tenant must verify");
+        let rec = out
+            .stats
+            .series("degrade.recovery_cycles")
+            .unwrap_or_else(|| panic!("{backend:?}: no recovery sample"));
+        assert_eq!(rec.count, 1, "{backend:?}: exactly one quiesce/recovery event");
+        let good = out
+            .stats
+            .series("degrade.goodput_lines")
+            .unwrap_or_else(|| panic!("{backend:?}: no goodput sample"));
+        assert_eq!(good.count, 1, "{backend:?}: one surviving tenant sampled");
+        assert!(good.sum > 0, "{backend:?}: survivor moved no lines");
+        match &reference {
+            Some(r) => assert_stats_exact(r, &out, &format!("degrade under {backend:?}")),
+            None => reference = Some(out),
+        }
+    }
+}
+
+fn golden_path(name: &str) -> std::path::PathBuf {
+    for base in ["golden", "rust/golden"] {
+        let p = std::path::Path::new(base).join(name);
+        if p.exists() {
+            return p;
+        }
+    }
+    panic!("golden trace {name} not found");
+}
+
+#[test]
+fn golden_faulted_trace_replays_under_every_backend() {
+    let path = golden_path("micro_medusa_faulted.trace");
+    if std::env::var("MEDUSA_REGEN_GOLDEN").is_ok() {
+        let sc = Scenario::golden_micro_faulted(Design::Medusa);
+        let (_, trace) = workload::run_scenario_captured(&sc).unwrap();
+        trace.save(&path).unwrap();
+        eprintln!("regenerated {} with full timing", path.display());
+    }
+    let trace = ScenarioTrace::from_file(&path).unwrap();
+    trace.validate().unwrap();
+    let sc = Scenario::golden_micro_faulted(Design::Medusa);
+    assert_eq!(trace.header.faults, sc.faults, "golden campaign drifted from the builtin");
+    let (out, captured) = workload::run_scenario_captured(&sc).unwrap();
+    assert!(out.all_verified(), "faulted micro must still verify (delay + detect-only faults)");
+    assert_eq!(captured.steps, trace.steps, "captured schedule drifted from golden");
+    assert_eq!(captured.header.tenants, trace.header.tenants, "tenant groups drifted");
+    assert_eq!(captured.header.faults, trace.header.faults, "recorded campaign drifted");
+    // The movement counters are VERBATIM the clean micro golden's: the
+    // campaign delays and corrupt-tags traffic but neither adds nor
+    // drops a single line.
+    assert_eq!(
+        captured.expect.exact, trace.expect.exact,
+        "movement counters drifted (fault injection must be movement-invariant)"
+    );
+    for (name, want) in &trace.expect.exact {
+        assert_eq!(out.stats.get(name), *want, "live faulted run diverged from golden on {name}");
+    }
+    for backend in backends() {
+        let replayed = workload::verify_replay_with(&trace, backend)
+            .unwrap_or_else(|e| panic!("golden faulted replay under {backend:?}: {e:#}"));
+        assert_eq!(replayed.fabric_cycles, out.fabric_cycles, "{backend:?}: cycle drift");
+        let injected: u64 = FAULT_CLASSES.iter().map(|n| replayed.stats.get(n)).sum();
+        assert!(injected > 0, "{backend:?}: golden campaign injected nothing");
+    }
+}

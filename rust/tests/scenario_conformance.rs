@@ -219,8 +219,8 @@ fn golden_trace_micro_baseline_replays() {
 fn scenario_matrix_is_bit_identical_sequential_vs_parallel() {
     // The MEDUSA_THREADS contract, without racing on the env var:
     // explicit worker counts, full-outcome fingerprints.
-    let seq = eval_scenarios::sweep_with_threads(1);
-    let par = eval_scenarios::sweep_with_threads(4);
+    let seq = eval_scenarios::sweep_with_threads(1).unwrap();
+    let par = eval_scenarios::sweep_with_threads(4).unwrap();
     assert_eq!(seq.len(), par.len());
     for (a, b) in seq.iter().zip(par.iter()) {
         assert_eq!(a.scenario, b.scenario);
