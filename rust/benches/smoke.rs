@@ -125,11 +125,14 @@ fn main() {
     println!("wrote {out_path}");
 
     // --- 4. PR 3: scenario engine + trace capture/replay numbers.
+    use medusa::run::RunOptions;
     let t0 = Instant::now();
-    let seq = medusa::eval::scenarios::sweep_with_threads(1).expect("sequential scenario matrix");
+    let seq = RunOptions::new().threads(1).sweep().expect("sequential scenario matrix");
     let seq_secs = t0.elapsed().as_secs_f64();
     let t0 = Instant::now();
-    let par = medusa::eval::scenarios::sweep_with_threads(medusa::util::parallel::max_threads())
+    let par = RunOptions::new()
+        .threads(medusa::util::parallel::max_threads())
+        .sweep()
         .expect("parallel scenario matrix");
     let par_secs = t0.elapsed().as_secs_f64();
     let identical = seq.len() == par.len()
@@ -257,7 +260,6 @@ fn main() {
     // is its simulation-bearing analogue.) Every variant must land on
     // identical cycle counts; only the wall clock may move.
     use medusa::config::{EdgeMode, PayloadMode, SimBackend};
-    use medusa::explore::run_search_with;
     let scenario_with = |sim: SimBackend| -> (f64, u64) {
         let mut sc = medusa::workload::Scenario::builtin("single-tiny-vgg").unwrap();
         sc.cfg.sim = sim;
@@ -283,15 +285,10 @@ fn main() {
     );
     let explore_with = |sim: SimBackend| {
         let t0 = Instant::now();
-        let r = run_search_with(
-            &space,
-            &Strategy::Grid,
-            1,
-            medusa::util::parallel::max_threads(),
-            None,
-            sim,
-        )
-        .expect("explore");
+        let r = RunOptions::new()
+            .backend(sim)
+            .run_search(&space, &Strategy::Grid, 1, None)
+            .expect("explore");
         (t0.elapsed().as_secs_f64(), r)
     };
     let (ex_full_s, ex_full) = explore_with(SimBackend::full());
@@ -385,4 +382,57 @@ fn main() {
     j.push_str("}\n");
     std::fs::write(&pr6_path, &j).expect("writing BENCH_PR6.json");
     println!("wrote {pr6_path}");
+
+    // --- 8. PR 7: the serving layer — open-loop arrivals + dynamic
+    // batching on the serving-poisson builtin, across all four backend
+    // combinations. Latency percentiles and the outcome fingerprint
+    // must be bit-identical everywhere (the serving-conformance
+    // contract); the wall clock shows what leaping the idle
+    // inter-arrival gaps buys a steady-state serving run.
+    let serve_with = |sim: SimBackend| -> (f64, u64, u64, u64) {
+        let sc = medusa::workload::Scenario::builtin("serving-poisson").unwrap();
+        let t0 = Instant::now();
+        let out = RunOptions::new().backend(sim).run(&sc).expect("serving run");
+        let rep = out.serving.as_ref().expect("serving report");
+        let worst = rep.tenants.iter().map(|t| t.p99_cycles).max().unwrap_or(0);
+        (t0.elapsed().as_secs_f64(), out.fabric_cycles, worst, out.fingerprint())
+    };
+    let (sv_full_s, sv_cycles, sv_p99, sv_fp) = serve_with(SimBackend::full());
+    let (sv_elided_s, c2, p2, f2) =
+        serve_with(SimBackend { payload: PayloadMode::Elided, edges: EdgeMode::Stepwise });
+    let (sv_leap_s, c3, p3, f3) =
+        serve_with(SimBackend { payload: PayloadMode::Full, edges: EdgeMode::Leap });
+    let (sv_fast_s, c4, p4, f4) = serve_with(SimBackend::fast());
+    assert_eq!((sv_cycles, sv_p99), (c2, p2), "elision changed serving results");
+    // Leap preserves payload, so the FULL fingerprint must match; the
+    // elided variants agree with each other (payload-free fingerprint).
+    assert_eq!((sv_cycles, sv_p99, sv_fp), (c3, p3, f3), "leaping changed serving results");
+    assert_eq!((sv_cycles, sv_p99, f2), (c4, p4, f4), "fast backend changed serving results");
+    println!(
+        "serving (serving-poisson): full {sv_full_s:.4}s, elided {sv_elided_s:.4}s ({:.2}x), \
+         leap {sv_leap_s:.4}s ({:.2}x), fast {sv_fast_s:.4}s ({:.2}x) — p99 {sv_p99} cycles, \
+         results identical",
+        sv_full_s / sv_elided_s.max(1e-12),
+        sv_full_s / sv_leap_s.max(1e-12),
+        sv_full_s / sv_fast_s.max(1e-12),
+    );
+    let pr7_path = format!("{json_dir}/BENCH_PR7.json");
+    let mut j = String::from("{\n");
+    j.push_str("  \"bench\": \"serving_pr7\",\n");
+    j.push_str(&format!(
+        "  \"serving_scenario\": {{\"name\": \"serving-poisson\", \"fabric_cycles\": {sv_cycles}, \
+         \"p99_cycles\": {sv_p99}, \"full_s\": {}, \"elided_s\": {}, \"leap_s\": {}, \
+         \"fast_s\": {}, \"elided_speedup\": {}, \"leap_speedup\": {}, \"fast_speedup\": {}, \
+         \"results_identical\": true}}\n",
+        json_f(sv_full_s),
+        json_f(sv_elided_s),
+        json_f(sv_leap_s),
+        json_f(sv_fast_s),
+        json_f(sv_full_s / sv_elided_s.max(1e-12)),
+        json_f(sv_full_s / sv_leap_s.max(1e-12)),
+        json_f(sv_full_s / sv_fast_s.max(1e-12)),
+    ));
+    j.push_str("}\n");
+    std::fs::write(&pr7_path, &j).expect("writing BENCH_PR7.json");
+    println!("wrote {pr7_path}");
 }

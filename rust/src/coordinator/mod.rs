@@ -16,4 +16,4 @@ pub mod system;
 
 pub use driver::{ComputeBackend, InferenceDriver};
 pub use metrics::{LayerReport, RunReport};
-pub use system::System;
+pub use system::{System, SystemBuilder};

@@ -55,19 +55,74 @@ pub struct System {
     quiesce_drained: Vec<u64>,
 }
 
+/// Builder for [`System`]: port-group slicing and fault campaigns stop
+/// threading through positional constructors.
+///
+/// ```ignore
+/// let sys = System::builder(cfg).port_groups(&groups).faults(&spec).build()?;
+/// ```
+pub struct SystemBuilder {
+    cfg: SystemConfig,
+    groups: Option<Vec<PortGroup>>,
+    faults: FaultSpec,
+}
+
+impl SystemBuilder {
+    /// Slice the fabric ports into `groups`, one layer processor per
+    /// group (multi-tenant scenarios). Default: one group covering the
+    /// full fabric. Groups must be in-bounds; the scenario layer checks
+    /// disjointness.
+    pub fn port_groups(mut self, groups: &[PortGroup]) -> Self {
+        self.groups = Some(groups.to_vec());
+        self
+    }
+
+    /// Arm a fault campaign at build (see [`System::install_faults`]).
+    /// The no-fault spec (the default) is a no-op.
+    pub fn faults(mut self, spec: &FaultSpec) -> Self {
+        self.faults = spec.clone();
+        self
+    }
+
+    pub fn build(self) -> Result<System> {
+        let groups = match &self.groups {
+            Some(g) => g.clone(),
+            None => vec![PortGroup::full(&self.cfg.geometry)],
+        };
+        let mut sys = System::construct(self.cfg, &groups)?;
+        if !self.faults.is_none() {
+            sys.install_faults(&self.faults)?;
+        }
+        Ok(sys)
+    }
+}
+
 impl System {
     /// Build a system from a config. If no fabric clock is pinned, ask
     /// the P&R timing model what this design point closes at — the
     /// system-level consequence of Fig 6.
     pub fn new(cfg: SystemConfig) -> Result<Self> {
-        let group = PortGroup::full(&cfg.geometry);
-        Self::new_with_groups(cfg, &[group])
+        System::builder(cfg).build()
     }
 
-    /// Build a system whose fabric ports are sliced into `groups`, with
-    /// one layer processor per group (multi-tenant scenarios). Groups
-    /// must be in-bounds; the scenario layer checks disjointness.
+    /// Start building a system: groups, faults, then
+    /// [`SystemBuilder::build`].
+    pub fn builder(cfg: SystemConfig) -> SystemBuilder {
+        SystemBuilder { cfg, groups: None, faults: FaultSpec::none() }
+    }
+
+    /// Build a system whose fabric ports are sliced into `groups`.
+    /// Superseded by [`System::builder`].
+    #[deprecated(
+        since = "0.7.0",
+        note = "use System::builder(cfg).port_groups(groups).build()"
+    )]
     pub fn new_with_groups(cfg: SystemConfig, groups: &[PortGroup]) -> Result<Self> {
+        System::builder(cfg).port_groups(groups).build()
+    }
+
+    /// The one true constructor behind [`SystemBuilder::build`].
+    fn construct(cfg: SystemConfig, groups: &[PortGroup]) -> Result<Self> {
         cfg.validate()?;
         anyhow::ensure!(!groups.is_empty(), "system needs at least one port group");
         for g in groups {
@@ -857,7 +912,8 @@ mod tests {
             PortGroup { read_base: 0, read_ports: 2, write_base: 0, write_ports: 2 },
             PortGroup { read_base: 2, read_ports: 2, write_base: 2, write_ports: 2 },
         ];
-        let mut sys = System::new_with_groups(small_cfg(Design::Medusa), &groups).unwrap();
+        let mut sys =
+            System::builder(small_cfg(Design::Medusa)).port_groups(&groups).build().unwrap();
         let n = sys.cfg.geometry.words_per_line();
         sys.controller_mut().preload(
             0,
@@ -889,7 +945,35 @@ mod tests {
     fn out_of_bounds_port_group_rejected() {
         use crate::accel::layer_processor::PortGroup;
         let g = PortGroup { read_base: 3, read_ports: 2, write_base: 0, write_ports: 4 };
-        assert!(System::new_with_groups(small_cfg(Design::Medusa), &[g]).is_err());
+        assert!(System::builder(small_cfg(Design::Medusa)).port_groups(&[g]).build().is_err());
+    }
+
+    #[test]
+    fn builder_matches_positional_construction() {
+        use crate::accel::layer_processor::PortGroup;
+        // The deprecated shim and the builder must construct the same
+        // system (groups, fault spec, clocks).
+        let groups = [
+            PortGroup { read_base: 0, read_ports: 2, write_base: 0, write_ports: 2 },
+            PortGroup { read_base: 2, read_ports: 2, write_base: 2, write_ports: 2 },
+        ];
+        let spec =
+            crate::fault::FaultSpec::parse_cli("dram_refresh=64/8,seed=3").unwrap();
+        let built = System::builder(small_cfg(Design::Medusa))
+            .port_groups(&groups)
+            .faults(&spec)
+            .build()
+            .unwrap();
+        #[allow(deprecated)]
+        let mut old = System::new_with_groups(small_cfg(Design::Medusa), &groups).unwrap();
+        old.install_faults(&spec).unwrap();
+        assert_eq!(built.lps.len(), old.lps.len());
+        assert_eq!(built.fault_spec(), old.fault_spec());
+        assert_eq!(built.fabric_mhz, old.fabric_mhz);
+        // Default builder covers the full fabric with one group.
+        let full = System::builder(small_cfg(Design::Medusa)).build().unwrap();
+        assert_eq!(full.lps.len(), 1);
+        assert!(full.fault_spec().is_none());
     }
 
     #[test]

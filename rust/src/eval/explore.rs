@@ -21,12 +21,14 @@ fn point_row(
         m.resources.bram18.to_string(),
         if m.feasible() { m.fmax_mhz.to_string() } else { "FAIL".to_string() },
         if m.feasible() { format!("{:.2}", m.gbps()) } else { "-".to_string() },
+        if m.serving_p99 > 0 { m.serving_p99.to_string() } else { "-".to_string() },
         if on_frontier { "*".to_string() } else { "".to_string() },
     ]
 }
 
 const HEADER: &[&str] = &[
-    "design", "iface", "ports", "depth", "LUT", "FF", "BRAM18", "Fmax MHz", "Gbit/s", "pareto",
+    "design", "iface", "ports", "depth", "LUT", "FF", "BRAM18", "Fmax MHz", "Gbit/s", "p99 cyc",
+    "pareto",
 ];
 
 /// The Pareto frontier as a table.
@@ -94,7 +96,8 @@ pub fn bench_json(
     for (i, e) in result.frontier.iter().enumerate() {
         j.push_str(&format!(
             "    {{\"design\": \"{}\", \"w_line\": {}, \"ports\": {}, \"channel_depth\": {}, \
-             \"lut\": {}, \"ff\": {}, \"bram18\": {}, \"fmax_mhz\": {}, \"gbps\": {:.4}}}{}\n",
+             \"lut\": {}, \"ff\": {}, \"bram18\": {}, \"fmax_mhz\": {}, \"gbps\": {:.4}, \
+             \"serving_p99\": {}}}{}\n",
             e.point.design.spec(),
             e.point.geometry.w_line,
             e.point.geometry.read_ports,
@@ -104,6 +107,7 @@ pub fn bench_json(
             e.metrics.resources.bram18,
             e.metrics.fmax_mhz,
             e.metrics.gbps(),
+            e.metrics.serving_p99,
             if i + 1 < result.frontier.len() { "," } else { "" }
         ));
     }

@@ -62,18 +62,30 @@ fn run_point(name: &'static str, design: Design, backend: SimBackend) -> Result<
 /// Run the matrix with an explicit worker count (determinism tests).
 /// Uses the full reference backend: this matrix is where golden-model
 /// verification earns its ✓ column.
+#[deprecated(since = "0.7.0", note = "use run::RunOptions::new().threads(n).sweep()")]
 pub fn sweep_with_threads(workers: usize) -> Result<Vec<ScenarioPoint>> {
-    sweep_with_threads_backend(workers, SimBackend::full())
+    sweep_impl(workers, SimBackend::full())
 }
 
-/// The matrix under an explicit simulation backend. Cycle counts,
-/// lines moved, and fabric timing are backend-invariant; the elided
-/// backend reports `verified` vacuously (nothing to check) and the
-/// fingerprint differs only in the absent feature maps.
+/// The matrix under an explicit simulation backend.
+#[deprecated(
+    since = "0.7.0",
+    note = "use run::RunOptions::new().threads(n).backend(b).sweep()"
+)]
 pub fn sweep_with_threads_backend(
     workers: usize,
     backend: SimBackend,
 ) -> Result<Vec<ScenarioPoint>> {
+    sweep_impl(workers, backend)
+}
+
+/// The matrix under an explicit worker count and simulation backend —
+/// the one implementation every public entry point (and
+/// `run::RunOptions::sweep`) funnels through. Cycle counts, lines
+/// moved, and fabric timing are backend-invariant; the elided backend
+/// reports `verified` vacuously (nothing to check) and the fingerprint
+/// differs only in the absent feature maps.
+pub(crate) fn sweep_impl(workers: usize, backend: SimBackend) -> Result<Vec<ScenarioPoint>> {
     par_map_with(workers, &matrix_points(), move |&(name, design)| {
         run_point(name, design, backend)
     })
@@ -111,10 +123,11 @@ pub fn scenarios() -> Result<Table> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::run::RunOptions;
 
     #[test]
     fn matrix_covers_all_builtins_on_both_designs() {
-        let pts = sweep_with_threads(1).unwrap();
+        let pts = RunOptions::new().threads(1).sweep().unwrap();
         assert_eq!(pts.len(), Scenario::builtin_names().len() * 2);
         assert!(pts.iter().all(|p| p.verified), "every matrix point must verify");
         assert!(pts.iter().all(|p| p.lines_moved > 0));
@@ -122,8 +135,8 @@ mod tests {
 
     #[test]
     fn fast_backend_matrix_matches_full_backend_timing() {
-        let full = sweep_with_threads_backend(2, SimBackend::full()).unwrap();
-        let fast = sweep_with_threads_backend(2, SimBackend::fast()).unwrap();
+        let full = RunOptions::new().threads(2).backend(SimBackend::full()).sweep().unwrap();
+        let fast = RunOptions::new().threads(2).backend(SimBackend::fast()).sweep().unwrap();
         assert_eq!(full.len(), fast.len());
         for (a, b) in full.iter().zip(fast.iter()) {
             assert_eq!((a.scenario, a.design), (b.scenario, b.design));

@@ -13,8 +13,8 @@
 //! files are deterministic, diffable, and trivially inspectable:
 //!
 //! ```text
-//! medusa-explore-cache v4
-//! <key:016x> <lut> <ff> <bram18> <dsp> <fmax> <lines> <bits> <ps> <cycles> <verified>
+//! medusa-explore-cache v5
+//! <key:016x> <lut> <ff> <bram18> <dsp> <fmax> <lines> <bits> <ps> <cycles> <verified> <serving_p99>
 //! ```
 //!
 //! Unreadable or version-mismatched files are treated as empty (a cache
@@ -25,21 +25,22 @@
 use crate::config::PayloadMode;
 use crate::explore::space::{ExplorePoint, Metrics};
 use crate::fpga::Resources;
+use crate::serving::ServingSpec;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 /// Bump on any change to the resource/timing models, the probe scenario
 /// semantics, the evaluation backend, or the entry layout — stale
-/// entries must never be served. v4: point evaluation moved to the
-/// stats-exact fast backend (payload elision + idle-edge leaping);
-/// values are proven bit-identical to v3's, but the policy is to never
-/// serve entries across an evaluation-path change.
-pub const CACHE_VERSION: u64 = 4;
+/// entries must never be served. v5: entries grew a `serving_p99`
+/// column and keys a serving-spec component (PR 7); pre-serving caches
+/// have no such column, so they are discarded wholesale.
+pub const CACHE_VERSION: u64 = 5;
 
-const HEADER: &str = "medusa-explore-cache v4";
+const HEADER: &str = "medusa-explore-cache v5";
 
-/// Stable identity hash of one (point, probe, payload-mode) evaluation.
+/// Stable identity hash of one (point, probe, payload-mode, serving)
+/// evaluation.
 ///
 /// The payload mode participates because `Metrics::verified` means
 /// different things per mode: a full-payload evaluation golden-checks
@@ -48,9 +49,18 @@ const HEADER: &str = "medusa-explore-cache v4";
 /// conformance contract), but serving an elided entry to a
 /// `--payload=full` sweep would silently skip the golden verification
 /// the caller explicitly asked for — so the two modes keep separate
-/// entries. Edge mode does NOT participate: leaping changes no field,
-/// verification included.
-pub fn point_key(point: &ExplorePoint, probe: &str, payload: PayloadMode) -> u64 {
+/// entries. The serving spec participates because it changes what the
+/// probe measures (`serving_p99`, and the run length itself): a
+/// closed-loop entry must never answer a serving-probe sweep or vice
+/// versa, and two different arrival schedules are different
+/// experiments. Edge mode does NOT participate: leaping changes no
+/// field, verification included.
+pub fn point_key(
+    point: &ExplorePoint,
+    probe: &str,
+    payload: PayloadMode,
+    serving: Option<&ServingSpec>,
+) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     let mut mix = |v: u64| {
         h ^= v;
@@ -70,6 +80,22 @@ pub fn point_key(point: &ExplorePoint, probe: &str, payload: PayloadMode) -> u64
     mix(point.channel_depth as u64);
     for b in probe.bytes() {
         mix(b as u64);
+    }
+    match serving {
+        None => mix(0),
+        Some(s) => {
+            mix(1);
+            mix(s.seed);
+            mix(s.requests as u64);
+            mix(s.mean_gap);
+            mix(s.max_batch as u64);
+            mix(s.max_wait);
+            mix(s.slo_cycles);
+            mix(s.arrivals.len() as u64);
+            for &a in &s.arrivals {
+                mix(a);
+            }
+        }
     }
     h
 }
@@ -124,7 +150,7 @@ impl ExploreCache {
         out.push('\n');
         for (key, m) in &self.map {
             out.push_str(&format!(
-                "{key:016x} {} {} {} {} {} {} {} {} {} {}\n",
+                "{key:016x} {} {} {} {} {} {} {} {} {} {} {}\n",
                 m.resources.lut,
                 m.resources.ff,
                 m.resources.bram18,
@@ -135,6 +161,7 @@ impl ExploreCache {
                 m.sim_ps,
                 m.fabric_cycles,
                 u64::from(m.verified),
+                m.serving_p99,
             ));
         }
         if let Some(dir) = self.path.parent() {
@@ -162,7 +189,7 @@ fn parse(text: &str) -> Option<BTreeMap<u64, Metrics>> {
             continue;
         }
         let f: Vec<&str> = line.split_ascii_whitespace().collect();
-        if f.len() != 11 {
+        if f.len() != 12 {
             return None;
         }
         let key = u64::from_str_radix(f[0], 16).ok()?;
@@ -182,6 +209,7 @@ fn parse(text: &str) -> Option<BTreeMap<u64, Metrics>> {
                 sim_ps: num(8)?,
                 fabric_cycles: num(9)?,
                 verified: num(10)? != 0,
+                serving_p99: num(11)?,
             },
         );
     }
@@ -202,6 +230,7 @@ mod tests {
             sim_ps: 7_777_777,
             fabric_cycles: 4321,
             verified: true,
+            serving_p99: 86_000,
         }
     }
 
@@ -262,20 +291,45 @@ mod tests {
     fn keys_distinguish_every_grid_point() {
         let pts = DesignSpace::default_grid().points();
         let mut keys: Vec<u64> =
-            pts.iter().map(|p| point_key(p, "gemm-mlp", PayloadMode::Elided)).collect();
+            pts.iter().map(|p| point_key(p, "gemm-mlp", PayloadMode::Elided, None)).collect();
         keys.sort_unstable();
         keys.dedup();
         assert_eq!(keys.len(), pts.len(), "cache keys must be collision-free on the grid");
         // The probe participates in the key.
         assert_ne!(
-            point_key(&pts[0], "gemm-mlp", PayloadMode::Elided),
-            point_key(&pts[0], "tiny-vgg", PayloadMode::Elided)
+            point_key(&pts[0], "gemm-mlp", PayloadMode::Elided, None),
+            point_key(&pts[0], "tiny-vgg", PayloadMode::Elided, None)
         );
         // So does the payload mode: a full-payload sweep must never be
         // served an elided (vacuously verified) evaluation.
         assert_ne!(
-            point_key(&pts[0], "gemm-mlp", PayloadMode::Elided),
-            point_key(&pts[0], "gemm-mlp", PayloadMode::Full)
+            point_key(&pts[0], "gemm-mlp", PayloadMode::Elided, None),
+            point_key(&pts[0], "gemm-mlp", PayloadMode::Full, None)
+        );
+    }
+
+    #[test]
+    fn keys_distinguish_serving_specs() {
+        let pts = DesignSpace::default_grid().points();
+        let spec = ServingSpec {
+            seed: 3,
+            requests: 4,
+            mean_gap: 1_000,
+            max_batch: 2,
+            max_wait: 500,
+            slo_cycles: 0,
+            arrivals: Vec::new(),
+        };
+        // Serving vs closed-loop: separate entries (serving_p99 differs).
+        assert_ne!(
+            point_key(&pts[0], "gemm-mlp", PayloadMode::Elided, None),
+            point_key(&pts[0], "gemm-mlp", PayloadMode::Elided, Some(&spec))
+        );
+        // Two different arrival schedules are different experiments.
+        let other = ServingSpec { seed: 4, ..spec.clone() };
+        assert_ne!(
+            point_key(&pts[0], "gemm-mlp", PayloadMode::Elided, Some(&spec)),
+            point_key(&pts[0], "gemm-mlp", PayloadMode::Elided, Some(&other))
         );
     }
 }

@@ -33,5 +33,9 @@ pub mod space;
 
 pub use cache::{point_key, ExploreCache};
 pub use pareto::{pareto_frontier, FrontierEntry};
-pub use search::{run_search, run_search_with, SearchResult, Strategy};
+pub use search::{run_search, SearchResult, Strategy};
+// Deprecated `_with` shim, kept importable for external callers; new
+// code goes through `crate::run::RunOptions`.
+#[allow(deprecated)]
+pub use search::run_search_with;
 pub use space::{DesignSpace, ExplorePoint, Metrics};

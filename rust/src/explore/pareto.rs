@@ -100,6 +100,7 @@ mod tests {
             sim_ps: ps,
             fabric_cycles: 1,
             verified: true,
+            serving_p99: 0,
         }
     }
 

@@ -10,7 +10,8 @@
 use crate::config::SimBackend;
 use crate::explore::cache::{point_key, ExploreCache};
 use crate::explore::pareto::{pareto_frontier, FrontierEntry};
-use crate::explore::space::{evaluate_with, DesignSpace, ExplorePoint, Metrics};
+use crate::explore::space::{evaluate_impl, DesignSpace, ExplorePoint, Metrics};
+use crate::serving::ServingSpec;
 use crate::util::{par_map_with, Prng};
 use anyhow::Result;
 use std::collections::{BTreeMap, HashMap};
@@ -62,6 +63,7 @@ fn score(m: &Metrics) -> f64 {
 /// Memoized, cache-backed batch evaluator.
 struct Evaluator<'a> {
     probe: &'a str,
+    serving: Option<&'a ServingSpec>,
     all: &'a [ExplorePoint],
     workers: usize,
     backend: SimBackend,
@@ -71,6 +73,10 @@ struct Evaluator<'a> {
 }
 
 impl<'a> Evaluator<'a> {
+    fn key(&self, i: usize) -> u64 {
+        point_key(&self.all[i], self.probe, self.backend.payload, self.serving)
+    }
+
     fn eval_batch(&mut self, idxs: &[usize], cache: &mut Option<&mut ExploreCache>) {
         let mut todo: Vec<usize> = Vec::new();
         for &i in idxs {
@@ -78,7 +84,7 @@ impl<'a> Evaluator<'a> {
                 continue;
             }
             if let Some(c) = cache.as_deref() {
-                if let Some(m) = c.get(point_key(&self.all[i], self.probe, self.backend.payload)) {
+                if let Some(m) = c.get(self.key(i)) {
                     self.memo.insert(i, m);
                     self.cache_hits += 1;
                     continue;
@@ -90,12 +96,15 @@ impl<'a> Evaluator<'a> {
             return;
         }
         let probe = self.probe;
+        let serving = self.serving;
         let backend = self.backend;
         let points: Vec<ExplorePoint> = todo.iter().map(|&i| self.all[i]).collect();
-        let metrics = par_map_with(self.workers, &points, |p| evaluate_with(p, probe, backend));
+        let metrics =
+            par_map_with(self.workers, &points, move |p| evaluate_impl(p, probe, backend, serving));
         for (&i, m) in todo.iter().zip(metrics) {
+            let key = self.key(i);
             if let Some(c) = cache.as_deref_mut() {
-                c.insert(point_key(&self.all[i], self.probe, self.backend.payload), m);
+                c.insert(key, m);
             }
             self.memo.insert(i, m);
             self.computed += 1;
@@ -104,7 +113,7 @@ impl<'a> Evaluator<'a> {
 }
 
 /// Run a search with the fast (stats-exact) evaluation backend — the
-/// explorer default. See [`run_search_with`].
+/// explorer default. See [`run_search_impl`].
 pub fn run_search(
     space: &DesignSpace,
     strategy: &Strategy,
@@ -112,7 +121,23 @@ pub fn run_search(
     workers: usize,
     cache: Option<&mut ExploreCache>,
 ) -> Result<SearchResult> {
-    run_search_with(space, strategy, seed, workers, cache, SimBackend::fast())
+    run_search_impl(space, strategy, seed, workers, cache, SimBackend::fast())
+}
+
+/// Run a search under an explicit backend.
+#[deprecated(
+    since = "0.7.0",
+    note = "use run::RunOptions::new().threads(n).backend(b).run_search(..)"
+)]
+pub fn run_search_with(
+    space: &DesignSpace,
+    strategy: &Strategy,
+    seed: u64,
+    workers: usize,
+    cache: Option<&mut ExploreCache>,
+    backend: SimBackend,
+) -> Result<SearchResult> {
+    run_search_impl(space, strategy, seed, workers, cache, backend)
 }
 
 /// Run a search. `workers` is the parallel width for evaluation batches
@@ -121,8 +146,10 @@ pub fn run_search(
 /// since evaluation metrics are backend-invariant. A cache, when given,
 /// is both consulted and extended (and saved before returning); entries
 /// are keyed per payload mode so a full-payload sweep never silently
-/// reuses an elided (unverifying) evaluation — see [`point_key`].
-pub fn run_search_with(
+/// reuses an elided (unverifying) evaluation — and per serving spec, so
+/// a serving-probe sweep never reuses a closed-loop entry (whose
+/// `serving_p99` is 0) — see [`point_key`].
+pub(crate) fn run_search_impl(
     space: &DesignSpace,
     strategy: &Strategy,
     seed: u64,
@@ -133,6 +160,7 @@ pub fn run_search_with(
     let all = space.points();
     let mut ev = Evaluator {
         probe: &space.probe,
+        serving: space.serving.as_ref(),
         all: &all,
         workers,
         backend,
@@ -246,6 +274,7 @@ mod tests {
             depths: vec![8],
             max_burst: 4,
             probe: "gemm-mlp".to_string(),
+            serving: None,
         }
     }
 
@@ -290,6 +319,26 @@ mod tests {
         // (it only ever moves uphill).
         let best = a.evaluated.iter().map(|(_, m)| score(m)).fold(f64::NEG_INFINITY, f64::max);
         assert!(best.is_finite(), "at least one visited point must be feasible");
+    }
+
+    #[test]
+    fn serving_space_populates_tail_latency_metrics() {
+        let mut space = tiny_space();
+        space.serving = Some(ServingSpec {
+            seed: 3,
+            requests: 2,
+            mean_gap: 1_000,
+            max_batch: 1,
+            max_wait: 200,
+            slo_cycles: 0,
+            arrivals: Vec::new(),
+        });
+        let r = run_search(&space, &Strategy::Random { samples: 2 }, 1, 2, None).unwrap();
+        assert_eq!(r.evaluated.len(), 2);
+        assert!(
+            r.evaluated.iter().all(|(_, m)| !m.feasible() || m.serving_p99 > 0),
+            "every feasible point under a serving probe must measure a tail latency"
+        );
     }
 
     #[test]

@@ -15,6 +15,7 @@ use crate::fpga::timing::TimingModel;
 use crate::fpga::{DesignPoint, Device, Resources};
 use crate::interconnect::hybrid::HybridConfig;
 use crate::interconnect::Design;
+use crate::serving::ServingSpec;
 use crate::types::Geometry;
 use crate::util::{ceil_log2, next_pow2};
 use crate::workload::engine::run_scenario;
@@ -68,6 +69,12 @@ pub struct Metrics {
     pub fabric_cycles: u64,
     /// Golden verification of the probe run (read path + DRAM content).
     pub verified: bool,
+    /// Worst per-tenant p99 serving latency (fabric cycles) when the
+    /// evaluation carried a serving probe; 0 when serving is disabled
+    /// (the default) or the point is infeasible. Lets the Pareto
+    /// explorer rank designs by tail latency under an open-loop load,
+    /// not just raw bandwidth.
+    pub serving_p99: u64,
 }
 
 impl Metrics {
@@ -94,6 +101,7 @@ impl Metrics {
             sim_ps: 0,
             fabric_cycles: 0,
             verified: false,
+            serving_p99: 0,
         }
     }
 }
@@ -118,6 +126,12 @@ pub struct DesignSpace {
     pub max_burst: usize,
     /// Zoo network driven through every feasible point.
     pub probe: String,
+    /// Optional serving front-end attached to every probe run: the
+    /// probe network becomes the per-request pass of an open-loop
+    /// serving tenant, and `Metrics::serving_p99` reports the measured
+    /// tail latency. `None` (the default) keeps the classic closed-loop
+    /// probe and leaves `serving_p99` at 0.
+    pub serving: Option<ServingSpec>,
 }
 
 impl DesignSpace {
@@ -131,6 +145,7 @@ impl DesignSpace {
             depths: vec![2, 8],
             max_burst: 8,
             probe: "gemm-mlp".to_string(),
+            serving: None,
         }
     }
 
@@ -142,6 +157,7 @@ impl DesignSpace {
             depths: vec![8],
             max_burst: 8,
             probe: "gemm-mlp".to_string(),
+            serving: None,
         }
     }
 
@@ -232,17 +248,36 @@ impl DesignSpace {
 /// reproduces bit-identically (locked by
 /// `tests/fast_backend_conformance.rs`), so this is a pure speedup.
 pub fn evaluate(point: &ExplorePoint, probe: &str) -> Metrics {
-    evaluate_with(point, probe, SimBackend::fast())
+    evaluate_impl(point, probe, SimBackend::fast(), None)
 }
 
-/// Evaluate one point under an explicit simulation backend: resource
-/// roll-up, P&R frequency search, then — for feasible points — a
-/// simulated probe run at the searched clock. Pure and deterministic:
-/// same point + same probe → identical `Metrics`, on any thread and
-/// under ANY backend (`verified` reports the golden data checks in
-/// full-payload mode and is vacuously true in elided mode, where the
-/// schedules themselves are the cross-checked artifact).
+/// Evaluate one point under an explicit simulation backend.
+#[deprecated(
+    since = "0.7.0",
+    note = "use run::RunOptions::new().backend(b).evaluate(point, probe)"
+)]
 pub fn evaluate_with(point: &ExplorePoint, probe: &str, backend: SimBackend) -> Metrics {
+    evaluate_impl(point, probe, backend, None)
+}
+
+/// Evaluate one point under an explicit simulation backend and an
+/// optional serving probe: resource roll-up, P&R frequency search, then
+/// — for feasible points — a simulated probe run at the searched clock.
+/// With a serving spec, the probe network becomes the per-request pass
+/// of an open-loop serving tenant and `serving_p99` reports the worst
+/// tenant tail latency. Pure and deterministic: same point + same probe
+/// (+ same serving spec) → identical `Metrics`, on any thread and under
+/// ANY backend (`verified` reports the golden data checks in
+/// full-payload mode and is vacuously true in elided mode, where the
+/// schedules themselves are the cross-checked artifact; serving
+/// latencies are cycle-exact under every backend by the leap-exactness
+/// argument in DESIGN.md §9).
+pub(crate) fn evaluate_impl(
+    point: &ExplorePoint,
+    probe: &str,
+    backend: SimBackend,
+    serving: Option<&ServingSpec>,
+) -> Metrics {
     let dp = point.design_point();
     let resources = dp.resources();
     let model = TimingModel::calibrated();
@@ -269,7 +304,10 @@ pub fn evaluate_with(point: &ExplorePoint, probe: &str, backend: SimBackend) -> 
     };
     let net = zoo::by_name(probe)
         .unwrap_or_else(|| panic!("unknown probe network {probe:?} (zoo: {:?})", zoo::names()));
-    let sc = Scenario::single("explore-probe", cfg, net);
+    let mut sc = Scenario::single("explore-probe", cfg, net);
+    if let Some(spec) = serving {
+        sc.serving = spec.clone();
+    }
     let out = run_scenario(&sc)
         .unwrap_or_else(|e| panic!("probe run failed on {}: {e:#}", point.label()));
     let lines: u64 = out.tenants.iter().map(|t| t.report.total_lines_moved()).sum();
@@ -281,6 +319,7 @@ pub fn evaluate_with(point: &ExplorePoint, probe: &str, backend: SimBackend) -> 
         sim_ps: out.now_ps,
         fabric_cycles: out.fabric_cycles,
         verified: out.all_verified(),
+        serving_p99: out.serving.as_ref().map(|r| r.worst_p99()).unwrap_or(0),
     }
 }
 
@@ -352,6 +391,7 @@ mod tests {
         assert!(m.lines_moved > 0 && m.sim_ps > 0);
         assert!(m.gbps() > 0.0);
         assert_eq!(m.bits_moved, m.lines_moved * 128);
+        assert_eq!(m.serving_p99, 0, "closed-loop probe must not report serving latency");
         // Determinism: a second evaluation is bit-identical.
         assert_eq!(evaluate(&pt, "gemm-mlp"), m);
     }
@@ -362,6 +402,7 @@ mod tests {
         // with a full golden-verified evaluation on every field, for a
         // representative of each family.
         use crate::interconnect::hybrid::HybridConfig;
+        use crate::run::RunOptions;
         let g = Geometry { w_line: 128, w_acc: 16, read_ports: 8, write_ports: 8, max_burst: 8 };
         for design in [
             Design::Baseline,
@@ -369,10 +410,40 @@ mod tests {
             Design::Hybrid(HybridConfig::default()),
         ] {
             let pt = ExplorePoint { design, geometry: g, dpus: 16, channel_depth: 8 };
-            let full = evaluate_with(&pt, "gemm-mlp", SimBackend::full());
-            let fast = evaluate_with(&pt, "gemm-mlp", SimBackend::fast());
+            let full = RunOptions::new().backend(SimBackend::full()).evaluate(&pt, "gemm-mlp");
+            let fast = RunOptions::new().backend(SimBackend::fast()).evaluate(&pt, "gemm-mlp");
             assert!(full.verified, "{design:?}: full probe must golden-verify");
             assert_eq!(full, fast, "{design:?}: fast backend drifted from full");
         }
+    }
+
+    #[test]
+    fn serving_probe_reports_backend_invariant_tail_latency() {
+        use crate::run::RunOptions;
+        let pt = ExplorePoint {
+            design: Design::Medusa,
+            geometry: Geometry { w_line: 128, w_acc: 16, read_ports: 8, write_ports: 8, max_burst: 8 },
+            dpus: 16,
+            channel_depth: 8,
+        };
+        let spec = ServingSpec {
+            seed: 3,
+            requests: 3,
+            mean_gap: 2_000,
+            max_batch: 1,
+            max_wait: 500,
+            slo_cycles: 0,
+            arrivals: Vec::new(),
+        };
+        let full = RunOptions::new()
+            .backend(SimBackend::full())
+            .serving(spec.clone())
+            .evaluate(&pt, "gemm-mlp");
+        let fast = RunOptions::new()
+            .backend(SimBackend::fast())
+            .serving(spec)
+            .evaluate(&pt, "gemm-mlp");
+        assert!(full.serving_p99 > 0, "serving probe must measure a tail latency");
+        assert_eq!(full, fast, "serving metrics drifted between backends");
     }
 }

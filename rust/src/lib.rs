@@ -37,7 +37,9 @@ pub mod fault;
 pub mod fpga;
 pub mod hw;
 pub mod interconnect;
+pub mod run;
 pub mod runtime;
+pub mod serving;
 pub mod sim;
 pub mod testing;
 pub mod types;

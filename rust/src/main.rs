@@ -10,6 +10,8 @@
 //!                                   a canonical trace
 //!   replay FILE                     replay a canonical trace and check
 //!                                   it against its recorded stats
+//!   serve [--scenario S] [...]      open-loop inference serving: arrivals,
+//!                                   dynamic batching, SLO latency report
 //!   resources [--design D] [...]    resource report for a design point
 //!   freq [--design D] [...]         P&R frequency for a design point
 //!   sweep                           Fig 6 sweep as CSV
@@ -51,6 +53,7 @@ fn run(argv: &[String]) -> Result<()> {
         "infer" => cmd_infer(rest),
         "run" => cmd_run(rest),
         "replay" => cmd_replay(rest),
+        "serve" => cmd_serve(rest),
         "resources" => cmd_resources(rest),
         "freq" => cmd_freq(rest),
         "sweep" => cmd_sweep(rest),
@@ -73,6 +76,7 @@ fn print_usage() {
          \x20 infer [options]                 tiny-VGG inference through the simulator\n\
          \x20 run --scenario FILE [options]   run a workload scenario (file or built-in name)\n\
          \x20 replay FILE                     replay + verify a canonical scenario trace\n\
+         \x20 serve [options]                 open-loop serving: arrivals, batching, SLO report\n\
          \x20 resources [options]             resource report for one design point\n\
          \x20 freq [options]                  P&R peak frequency for one design point\n\
          \x20 sweep                           Fig 6 sweep as CSV\n\
@@ -307,7 +311,7 @@ fn cmd_replay(rest: &[String]) -> Result<()> {
     };
     let backend = backend_opts(&args, SimBackend::full())?;
     let trace = medusa::sim::trace::ScenarioTrace::from_file(path)?;
-    let out = medusa::workload::verify_replay_with(&trace, backend)?;
+    let out = medusa::run::RunOptions::new().backend(backend).verify_replay(&trace)?;
     println!(
         "replayed {} ({} steps, {} tenants) on {}: {} fabric cycles",
         trace.header.scenario,
@@ -324,6 +328,108 @@ fn cmd_replay(rest: &[String]) -> Result<()> {
              (trace has no recorded timing; re-capture to lock cycles)"
         );
     }
+    Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let args = Args::default()
+        .opt("scenario", "scenario TOML file or built-in name (default serving-poisson)")
+        .opt("design", "override the scenario's design (baseline | medusa | axis)")
+        .opt(
+            "serving",
+            "serving spec: requests=N,mean_gap=N,max_batch=N,max_wait=N,slo=N,seed=N,\
+             arrivals=C+C+... (overrides the scenario's [serving])",
+        )
+        .opt("seed", "override the system seed (re-derives tenant workload seeds)")
+        .opt("faults", "fault campaign (same syntax as `medusa run --faults`)")
+        .opt("payload", "full | elided — elided skips payload, stats stay exact")
+        .opt("edges", "stepwise | leap — leap skips idle inter-arrival gaps, exactly")
+        .opt("json", "write the serving report as JSON to this path")
+        .flag("smoke", "CI smoke: serving-poisson builtin on the fast backend")
+        .parse(rest)?;
+    let which = args.get_or("scenario", "serving-poisson");
+    let mut sc = match medusa::workload::Scenario::builtin(which) {
+        Some(sc) => sc,
+        None => medusa::workload::Scenario::from_file(which)?,
+    };
+    if let Some(d) = args.get("design") {
+        sc.cfg.design =
+            Design::parse(d).ok_or_else(|| anyhow::anyhow!("unknown design {d:?}"))?;
+    }
+    if let Some(s) = args.get_usize("seed")? {
+        sc.reseed(s as u64);
+    }
+    if let Some(spec) = args.get("faults") {
+        sc.faults = medusa::fault::FaultSpec::parse_cli(spec)?;
+    }
+    if let Some(spec) = args.get("serving") {
+        sc.serving = medusa::serving::ServingSpec::parse_cli(spec)?;
+    }
+    anyhow::ensure!(
+        !sc.serving.is_none(),
+        "scenario {:?} has no [serving] section; pass --serving=requests=N,mean_gap=N,...",
+        sc.name
+    );
+    let default_backend = if args.has_flag("smoke") { SimBackend::fast() } else { sc.cfg.sim };
+    let backend = backend_opts(&args, default_backend)?;
+    let out = medusa::run::RunOptions::new().backend(backend).run(&sc)?;
+    let report = out.serving.as_ref().expect("serving scenario must yield a serving report");
+    println!(
+        "served {} on {} @ {:.0} MHz fabric: {} fabric cycles, {:.3} ms simulated",
+        out.scenario,
+        out.design,
+        out.fabric_mhz,
+        out.fabric_cycles,
+        out.now_ps as f64 / 1e9,
+    );
+    for (i, t) in report.tenants.iter().enumerate() {
+        println!(
+            "  tenant {i}: {} arrived, {} completed in {} batches | latency p50 {} p99 {} \
+             max {} cycles | SLO met {}/{} | goodput {:.1} req/s",
+            t.arrived,
+            t.completed,
+            t.batches,
+            t.p50_cycles,
+            t.p99_cycles,
+            t.max_cycles,
+            t.slo_met,
+            t.completed,
+            t.goodput_rps(out.now_ps),
+        );
+    }
+    if let Some(path) = args.get("json") {
+        let mut s = String::from("{\n");
+        s.push_str(&format!(
+            "  \"scenario\": \"{}\",\n  \"design\": \"{}\",\n  \"fabric_cycles\": {},\n  \
+             \"sim_ps\": {},\n  \"fingerprint\": \"{:#018x}\",\n  \"tenants\": [\n",
+            out.scenario,
+            out.design,
+            out.fabric_cycles,
+            out.now_ps,
+            out.fingerprint()
+        ));
+        for (i, t) in report.tenants.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"tenant\": {i}, \"arrived\": {}, \"completed\": {}, \"batches\": {}, \
+                 \"slo_met\": {}, \"p50_cycles\": {}, \"p99_cycles\": {}, \"max_cycles\": {}, \
+                 \"goodput_rps\": {:.3}}}{}\n",
+                t.arrived,
+                t.completed,
+                t.batches,
+                t.slo_met,
+                t.p50_cycles,
+                t.p99_cycles,
+                t.max_cycles,
+                t.goodput_rps(out.now_ps),
+                if i + 1 == report.tenants.len() { "" } else { "," },
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        std::fs::write(path, s)?;
+        println!("wrote {path}");
+    }
+    anyhow::ensure!(out.all_verified(), "verification FAILED");
+    println!("all tenants verified ✓ (fingerprint {:#018x})", out.fingerprint());
     Ok(())
 }
 
@@ -390,7 +496,7 @@ fn cmd_sweep(_rest: &[String]) -> Result<()> {
 }
 
 fn cmd_explore(rest: &[String]) -> Result<()> {
-    use medusa::explore::{run_search_with, DesignSpace, ExploreCache, Strategy};
+    use medusa::explore::{DesignSpace, ExploreCache, Strategy};
     let args = Args::default()
         .opt("strategy", "grid | random | hill (default grid)")
         .opt("samples", "random strategy: points to sample (default 32)")
@@ -398,6 +504,11 @@ fn cmd_explore(rest: &[String]) -> Result<()> {
         .opt("steps", "hill strategy: max moves per climb (default 8)")
         .opt("seed", "search seed for random/hill (default 1)")
         .opt("probe", "zoo network driven through each point (default gemm-mlp)")
+        .opt(
+            "serve-probe",
+            "attach an open-loop serving front-end to every probe run and measure \
+             serving_p99 (same spec syntax as `medusa serve --serving`)",
+        )
         .opt("cache", "result cache file (default .medusa-explore.cache)")
         .opt("json", "write BENCH_PR4.json-format results to this path")
         .opt("payload", "full | elided (default elided — stats-exact fast backend)")
@@ -420,6 +531,9 @@ fn cmd_explore(rest: &[String]) -> Result<()> {
         );
         space.probe = p.to_string();
     }
+    if let Some(spec) = args.get("serve-probe") {
+        space.serving = Some(medusa::serving::ServingSpec::parse_cli(spec)?);
+    }
     let seed = args.get_usize("seed")?.unwrap_or(1) as u64;
     let strategy = match args.get_or("strategy", "grid") {
         "grid" => Strategy::Grid,
@@ -436,14 +550,9 @@ fn cmd_explore(rest: &[String]) -> Result<()> {
         Some(ExploreCache::open(args.get_or("cache", ".medusa-explore.cache")))
     };
     let t0 = std::time::Instant::now();
-    let result = run_search_with(
-        &space,
-        &strategy,
-        seed,
-        medusa::util::parallel::max_threads(),
-        cache.as_mut(),
-        backend,
-    )?;
+    let result = medusa::run::RunOptions::new()
+        .backend(backend)
+        .run_search(&space, &strategy, seed, cache.as_mut())?;
     let elapsed = t0.elapsed().as_secs_f64();
     let label = strategy.label();
     // In --csv mode stdout carries ONLY the CSV (the `medusa sweep`

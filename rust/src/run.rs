@@ -1,0 +1,238 @@
+//! The unified run API: one builder, every entry point.
+//!
+//! Before PR 7 each subsystem grew its own `_with` variants as knobs
+//! accreted (`replay_with`, `verify_replay_with`, `sweep_with_threads`,
+//! `sweep_with_threads_backend`, `run_search_with`, `evaluate_with`) —
+//! every new knob meant another positional parameter on every entry
+//! point. [`RunOptions`] replaces that family with a single builder:
+//!
+//! ```no_run
+//! use medusa::config::SimBackend;
+//! use medusa::run::RunOptions;
+//! # let sc = medusa::workload::Scenario::builtin("serving-poisson").unwrap();
+//! let out = RunOptions::new().backend(SimBackend::fast()).run(&sc).unwrap();
+//! let matrix = RunOptions::new().threads(2).sweep().unwrap();
+//! ```
+//!
+//! Unset knobs mean "the callee's long-standing default", so migrating
+//! a caller from `replay(t)` to `RunOptions::new().replay(t)` changes
+//! nothing: replay/verify/sweep default to the full reference backend,
+//! the explorer entry points default to the fast (stats-exact) backend,
+//! and the thread count honours `MEDUSA_THREADS`. The old `_with`
+//! functions survive as `#[deprecated]` shims over the same
+//! `pub(crate)` implementations; CI denies the lint so no internal
+//! caller can quietly regress onto them.
+
+use crate::config::SimBackend;
+use crate::eval::scenarios::ScenarioPoint;
+use crate::explore::cache::ExploreCache;
+use crate::explore::search::{SearchResult, Strategy};
+use crate::explore::space::{DesignSpace, ExplorePoint, Metrics};
+use crate::fault::FaultSpec;
+use crate::serving::ServingSpec;
+use crate::sim::trace::ScenarioTrace;
+use crate::workload::engine::ScenarioOutcome;
+use crate::workload::scenario::Scenario;
+use anyhow::Result;
+
+/// Options shared by every run-like entry point. Construct with
+/// [`RunOptions::new`], chain setters, finish with a verb
+/// ([`run`](RunOptions::run), [`replay`](RunOptions::replay),
+/// [`verify_replay`](RunOptions::verify_replay),
+/// [`sweep`](RunOptions::sweep), [`evaluate`](RunOptions::evaluate),
+/// [`run_search`](RunOptions::run_search)). `Default` is "no
+/// overrides": each verb keeps the defaults it has always had.
+#[derive(Clone, Debug, Default)]
+pub struct RunOptions {
+    threads: Option<usize>,
+    backend: Option<SimBackend>,
+    faults: Option<FaultSpec>,
+    serving: Option<ServingSpec>,
+}
+
+impl RunOptions {
+    pub fn new() -> Self {
+        RunOptions::default()
+    }
+
+    /// Parallel width for batch verbs (`sweep`, `run_search`). Unset:
+    /// `util::parallel::max_threads()` (honours `MEDUSA_THREADS`).
+    pub fn threads(mut self, workers: usize) -> Self {
+        self.threads = Some(workers);
+        self
+    }
+
+    /// Simulation backend override. Unset: the verb's own default —
+    /// [`SimBackend::full`] for `run`/`replay`/`verify_replay`/`sweep`
+    /// (these carry golden verification), [`SimBackend::fast`] for the
+    /// explorer verbs (stats-exact by the conformance contract).
+    pub fn backend(mut self, backend: SimBackend) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Fault-injection campaign override for `run` (replaces the
+    /// scenario's own `[faults]` section).
+    pub fn faults(mut self, spec: FaultSpec) -> Self {
+        self.faults = Some(spec);
+        self
+    }
+
+    /// Serving front-end override: replaces the scenario's `[serving]`
+    /// section in `run`, and attaches a serving probe to every
+    /// explorer evaluation in `evaluate`/`run_search` (see
+    /// `DesignSpace::serving` for the space-level equivalent).
+    pub fn serving(mut self, spec: ServingSpec) -> Self {
+        self.serving = Some(spec);
+        self
+    }
+
+    fn workers(&self) -> usize {
+        self.threads.unwrap_or_else(crate::util::parallel::max_threads)
+    }
+
+    fn scenario_with_overrides(&self, sc: &Scenario) -> Scenario {
+        let mut sc = sc.clone();
+        if let Some(b) = self.backend {
+            sc.cfg.sim = b;
+        }
+        if let Some(f) = &self.faults {
+            sc.faults = f.clone();
+        }
+        if let Some(s) = &self.serving {
+            sc.serving = s.clone();
+        }
+        sc
+    }
+
+    /// Run one scenario (with any backend/faults/serving overrides
+    /// applied to a clone — the input scenario is untouched).
+    pub fn run(&self, sc: &Scenario) -> Result<ScenarioOutcome> {
+        crate::workload::engine::run_scenario(&self.scenario_with_overrides(sc))
+    }
+
+    /// Run one scenario and capture its replayable trace.
+    pub fn run_captured(&self, sc: &Scenario) -> Result<(ScenarioOutcome, ScenarioTrace)> {
+        crate::workload::engine::run_scenario_captured(&self.scenario_with_overrides(sc))
+    }
+
+    /// Re-execute a captured trace. Default backend: full reference.
+    pub fn replay(&self, trace: &ScenarioTrace) -> Result<ScenarioOutcome> {
+        crate::workload::engine::replay_impl(trace, self.backend.unwrap_or_else(SimBackend::full))
+    }
+
+    /// Re-execute a captured trace and assert its expect block.
+    /// Default backend: full reference.
+    pub fn verify_replay(&self, trace: &ScenarioTrace) -> Result<ScenarioOutcome> {
+        crate::workload::engine::verify_replay_impl(
+            trace,
+            self.backend.unwrap_or_else(SimBackend::full),
+        )
+    }
+
+    /// The scenario matrix: every builtin scenario on every design.
+    /// Default backend: full reference (this is where golden
+    /// verification earns its column).
+    pub fn sweep(&self) -> Result<Vec<ScenarioPoint>> {
+        crate::eval::scenarios::sweep_impl(
+            self.workers(),
+            self.backend.unwrap_or_else(SimBackend::full),
+        )
+    }
+
+    /// Evaluate one explorer design point. Default backend: fast
+    /// (stats-exact). A `serving` override attaches the serving probe
+    /// and populates `Metrics::serving_p99`.
+    pub fn evaluate(&self, point: &ExplorePoint, probe: &str) -> Metrics {
+        crate::explore::space::evaluate_impl(
+            point,
+            probe,
+            self.backend.unwrap_or_else(SimBackend::fast),
+            self.serving.as_ref(),
+        )
+    }
+
+    /// Run a design-space search. Default backend: fast (stats-exact).
+    /// A `serving` override on the options takes precedence over the
+    /// space's own `serving` probe.
+    pub fn run_search(
+        &self,
+        space: &DesignSpace,
+        strategy: &Strategy,
+        seed: u64,
+        cache: Option<&mut ExploreCache>,
+    ) -> Result<SearchResult> {
+        let space = match &self.serving {
+            Some(s) => {
+                let mut sp = space.clone();
+                sp.serving = Some(s.clone());
+                sp
+            }
+            None => space.clone(),
+        };
+        crate::explore::search::run_search_impl(
+            &space,
+            strategy,
+            seed,
+            self.workers(),
+            cache,
+            self.backend.unwrap_or_else(SimBackend::fast),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_the_plain_entry_points() {
+        let sc = Scenario::builtin("single-tiny-vgg").unwrap();
+        let plain = crate::workload::engine::run_scenario(&sc).unwrap();
+        let via_options = RunOptions::new().run(&sc).unwrap();
+        assert_eq!(plain.fingerprint(), via_options.fingerprint());
+    }
+
+    #[test]
+    fn deprecated_shims_route_to_the_same_implementation() {
+        #[allow(deprecated)]
+        let old = crate::eval::scenarios::sweep_with_threads(1).unwrap();
+        let new = RunOptions::new().threads(1).sweep().unwrap();
+        assert_eq!(old.len(), new.len());
+        for (a, b) in old.iter().zip(new.iter()) {
+            assert_eq!(a.fingerprint, b.fingerprint, "{} {:?}", a.scenario, a.design);
+        }
+    }
+
+    #[test]
+    fn overrides_replace_scenario_sections_without_mutating_the_input() {
+        let sc = Scenario::builtin("single-tiny-vgg").unwrap();
+        let spec = ServingSpec {
+            seed: 9,
+            requests: 2,
+            mean_gap: 500,
+            max_batch: 1,
+            max_wait: 100,
+            slo_cycles: 0,
+            arrivals: Vec::new(),
+        };
+        let out = RunOptions::new()
+            .backend(SimBackend::fast())
+            .serving(spec)
+            .run(&sc)
+            .unwrap();
+        let report = out.serving.expect("serving override must reach the engine");
+        assert_eq!(report.tenants[0].arrived, 2);
+        // The input scenario was cloned, not mutated.
+        assert!(sc.serving.is_none());
+        assert_eq!(sc.cfg.sim, SimBackend::full());
+    }
+
+    #[test]
+    fn replay_roundtrip_through_options() {
+        let sc = Scenario::builtin("serving-poisson").unwrap();
+        let (out, trace) = RunOptions::new().run_captured(&sc).unwrap();
+        let re = RunOptions::new().verify_replay(&trace).unwrap();
+        assert_eq!(out.fingerprint(), re.fingerprint());
+    }
+}

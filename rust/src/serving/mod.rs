@@ -1,0 +1,657 @@
+//! Inference-serving front-end (PR 7): open-loop arrivals, per-model
+//! request queues, dynamic batching, SLO accounting.
+//!
+//! The scenario engine replays fixed layer schedules; this layer turns
+//! each tenant into a *served model*: requests arrive open-loop (seeded
+//! Poisson or an explicit arrival trace), queue per tenant, and are
+//! packed into batches by a max-batch / max-wait policy. One dispatched
+//! batch executes one full pass of the tenant's network through the
+//! fabric (batching amortizes: a pass serves up to `max_batch` queued
+//! requests). Latency is measured arrival → pass completion, against a
+//! per-model SLO target.
+//!
+//! The design follows the `fault` layer's governing rule: **the serving
+//! workload is part of the simulated machine, never an intervention on
+//! the simulator**. Every arrival cycle is pre-materialized at build
+//! into a [`ServingState`] (per-tenant seed-keyed PRNG streams), so:
+//!
+//! * **data-independence**: whether a request arrives at cycle `c`
+//!   depends only on `(spec, tenant)`, never on payload words or
+//!   simulation state — elided-vs-full runs see the identical schedule;
+//! * **leap-exactness**: between bursts the fabric is genuinely idle,
+//!   and [`ServingRun::next_event`] reports the earliest cycle at which
+//!   the serving layer could act (next unadmitted arrival, next
+//!   max-wait dispatch deadline) — the engine caps idle-edge leaps
+//!   there, exactly like staggered tenant starts and
+//!   `FaultState::fabric_leap_cap`, so steady-state serving runs are
+//!   cheap under `SimBackend::fast()` without moving a single event;
+//! * **seq-vs-par**: the schedule is owned by one single-threaded
+//!   `System`; parallel sweeps shard whole scenarios.
+//!
+//! Queue depth, batch occupancy, request latency (the p50/p99 source),
+//! and completion/SLO counters land in the ordinary
+//! `Counter`/`SampleId` registries, so they flow through stats reports,
+//! fingerprints, and captured traces like every other series.
+
+use crate::config::Value;
+use crate::sim::stats::{Counter, SampleId, Stats};
+use crate::util::Prng;
+use anyhow::{anyhow, bail, ensure, Result};
+use std::collections::VecDeque;
+
+/// Domain-separation key for the per-tenant arrival streams (mixes with
+/// the tenant index so each served model draws independently).
+const ARRIVAL_KEY: u64 = 0x7365_7276_5f61_7272; // "serv_arr"
+
+/// One exponential inter-arrival gap (fabric cycles), floored at 1 so
+/// arrivals are strictly increasing and a leap cap is never zero.
+fn poisson_gap(prng: &mut Prng, mean_gap: u64) -> u64 {
+    let u = prng.f64(); // in [0, 1)
+    let g = (-(1.0 - u).ln() * mean_gap as f64).ceil();
+    (g as u64).max(1)
+}
+
+/// The user-facing serving description: what a `[serving]` scenario
+/// section, a `--serving=` CLI spec, or a trace header's `serving.*`
+/// keys parse into. The default (all zero / empty) means "no serving" —
+/// the scenario runs its classic fixed schedule.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ServingSpec {
+    /// Arrival-stream seed (independent of the workload seed).
+    pub seed: u64,
+    /// Requests per tenant under the Poisson process (0 = serving off
+    /// unless `arrivals` is given).
+    pub requests: usize,
+    /// Mean Poisson inter-arrival gap in fabric cycles.
+    pub mean_gap: u64,
+    /// Explicit arrival trace (fabric cycles), shared by every tenant;
+    /// overrides the Poisson process when non-empty.
+    pub arrivals: Vec<u64>,
+    /// Dispatch a batch as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// ... or once the oldest queued request has waited this long.
+    pub max_wait: u64,
+    /// Per-request SLO target, arrival → completion, in fabric cycles
+    /// (0 = no target: every completion counts as goodput).
+    pub slo_cycles: u64,
+}
+
+impl ServingSpec {
+    /// The disabled spec (classic fixed-schedule execution).
+    pub fn none() -> ServingSpec {
+        ServingSpec::default()
+    }
+
+    /// True when this spec serves nothing — the scenario runs exactly
+    /// as it did before the serving layer existed.
+    pub fn is_none(&self) -> bool {
+        self.requests == 0 && self.arrivals.is_empty()
+    }
+
+    /// Requests each tenant will serve.
+    pub fn requests_per_tenant(&self) -> usize {
+        if self.arrivals.is_empty() {
+            self.requests
+        } else {
+            self.arrivals.len()
+        }
+    }
+
+    /// Apply one parsed `serving.*` key (scenario files route their
+    /// `[serving]` section here; trace headers route `serving.*` keys
+    /// of `[header]`). Returns `Ok(false)` for keys outside the
+    /// `serving.` namespace.
+    pub fn apply_key(&mut self, key: &str, value: &Value) -> Result<bool> {
+        let Some(k) = key.strip_prefix("serving.") else {
+            return Ok(false);
+        };
+        let as_u64 = |v: &Value| -> Result<u64> { Ok(v.as_usize()? as u64) };
+        match k {
+            "seed" => self.seed = as_u64(value)?,
+            "requests" => self.requests = value.as_usize()?,
+            "mean_gap" => self.mean_gap = as_u64(value)?,
+            "max_batch" => self.max_batch = value.as_usize()?,
+            "max_wait" => self.max_wait = as_u64(value)?,
+            "slo_cycles" => self.slo_cycles = as_u64(value)?,
+            "arrivals" => self.arrivals = parse_arrivals(value.as_str()?)?,
+            _ => bail!("unknown serving key {key:?}"),
+        }
+        Ok(true)
+    }
+
+    /// Parse the compact CLI spec: comma-separated items of
+    /// `requests=N`, `mean_gap=N`, `max_batch=N`, `max_wait=N`,
+    /// `slo=N`, `seed=N`, `arrivals=C+C+...` (cycles joined by `+`).
+    /// Example: `--serving=requests=32,mean_gap=4096,max_batch=4,slo=60000`.
+    pub fn parse_cli(spec: &str) -> Result<ServingSpec> {
+        let mut out = ServingSpec::default();
+        let num = |s: &str, what: &str| -> Result<u64> {
+            s.parse::<u64>()
+                .map_err(|_| anyhow!("--serving: {what} must be an integer, got {s:?}"))
+        };
+        for item in spec.split(',').filter(|s| !s.is_empty()) {
+            let (key, val) = item
+                .split_once('=')
+                .ok_or_else(|| anyhow!("--serving item {item:?}: expected key=value"))?;
+            match key {
+                "requests" => out.requests = num(val, key)? as usize,
+                "mean_gap" => out.mean_gap = num(val, key)?,
+                "max_batch" => out.max_batch = num(val, key)? as usize,
+                "max_wait" => out.max_wait = num(val, key)?,
+                "slo" => out.slo_cycles = num(val, key)?,
+                "seed" => out.seed = num(val, key)?,
+                "arrivals" => out.arrivals = parse_arrivals(val)?,
+                _ => bail!("--serving: unknown item {key:?}"),
+            }
+        }
+        out.validate()?;
+        Ok(out)
+    }
+
+    /// Sanity-check the spec.
+    pub fn validate(&self) -> Result<()> {
+        if self.is_none() {
+            return Ok(());
+        }
+        ensure!(self.max_batch >= 1, "serving: max_batch must be >= 1");
+        if self.arrivals.is_empty() {
+            ensure!(
+                self.mean_gap >= 1,
+                "serving: the Poisson process needs mean_gap >= 1 (or give explicit arrivals)"
+            );
+        } else {
+            ensure!(
+                self.requests == 0,
+                "serving: give requests+mean_gap or an explicit arrivals trace, not both"
+            );
+        }
+        Ok(())
+    }
+
+    /// Canonical `(key, value)` pairs for trace headers (TOML-subset
+    /// syntax, fixed order). Empty for the no-serving spec, so classic
+    /// captures stay byte-identical to pre-serving builds.
+    pub fn header_kv(&self) -> Vec<(&'static str, String)> {
+        if self.is_none() {
+            return Vec::new();
+        }
+        let mut kv: Vec<(&'static str, String)> = vec![
+            ("serving.seed", self.seed.to_string()),
+            ("serving.requests", self.requests.to_string()),
+            ("serving.mean_gap", self.mean_gap.to_string()),
+            ("serving.max_batch", self.max_batch.to_string()),
+            ("serving.max_wait", self.max_wait.to_string()),
+            ("serving.slo_cycles", self.slo_cycles.to_string()),
+        ];
+        if !self.arrivals.is_empty() {
+            let joined =
+                self.arrivals.iter().map(|c| c.to_string()).collect::<Vec<_>>().join("+");
+            kv.push(("serving.arrivals", format!("\"{joined}\"")));
+        }
+        kv
+    }
+}
+
+/// Parse a `+`- or `,`-separated arrival-cycle list (the `+` form is
+/// what CLI specs and trace headers use, where `,` already separates
+/// items).
+fn parse_arrivals(s: &str) -> Result<Vec<u64>> {
+    s.split(['+', ','])
+        .filter(|t| !t.trim().is_empty())
+        .map(|t| {
+            t.trim()
+                .parse::<u64>()
+                .map_err(|_| anyhow!("serving.arrivals: {t:?} is not a cycle number"))
+        })
+        .collect()
+}
+
+/// The materialized arrival schedule: per-tenant sorted arrival cycles,
+/// drawn once at build from seed-keyed streams (explicit traces are
+/// sorted verbatim). A pure function of the spec and the tenant count,
+/// so capture/replay re-arms the identical workload.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServingState {
+    pub spec: ServingSpec,
+    /// Arrival cycles per tenant, ascending.
+    pub arrivals: Vec<Vec<u64>>,
+}
+
+impl ServingState {
+    /// Materialize a spec for `tenants` served models.
+    pub fn build(spec: &ServingSpec, tenants: usize) -> Result<ServingState> {
+        spec.validate()?;
+        let mut per = Vec::with_capacity(tenants);
+        for t in 0..tenants {
+            let cycles = if !spec.arrivals.is_empty() {
+                let mut v = spec.arrivals.clone();
+                v.sort_unstable();
+                v
+            } else {
+                let mut prng = Prng::new(spec.seed ^ ARRIVAL_KEY ^ crate::fault::mix64(t as u64));
+                let mut now = 0u64;
+                (0..spec.requests)
+                    .map(|_| {
+                        now += poisson_gap(&mut prng, spec.mean_gap);
+                        now
+                    })
+                    .collect()
+            };
+            per.push(cycles);
+        }
+        Ok(ServingState { spec: spec.clone(), arrivals: per })
+    }
+
+    /// The last arrival cycle across every tenant (0 when empty) —
+    /// the engine's run-budget horizon term.
+    pub fn last_arrival(&self) -> u64 {
+        self.arrivals.iter().filter_map(|v| v.last().copied()).max().unwrap_or(0)
+    }
+}
+
+/// The live serving front-end one engine run drives: admission from the
+/// pre-materialized schedule, per-tenant queues, the batcher, and the
+/// latency record. All decisions are functions of (state, fabric
+/// cycle) — nothing here reads payloads or occupancy.
+#[derive(Clone, Debug)]
+pub struct ServingRun {
+    pub state: ServingState,
+    /// Index of the next unadmitted arrival, per tenant.
+    next_arrival: Vec<usize>,
+    /// Admitted-but-undispatched requests: their arrival cycles.
+    queue: Vec<VecDeque<u64>>,
+    /// Dispatched-but-uncompleted requests: their arrival cycles.
+    inflight: Vec<Vec<u64>>,
+    /// Completed request count per tenant.
+    pub completed: Vec<usize>,
+    /// Dispatched batch count per tenant.
+    pub batches: Vec<usize>,
+    /// SLO-met completion count per tenant.
+    pub slo_met: Vec<usize>,
+    /// Completion latencies per tenant, in completion order (the
+    /// percentile source; fingerprinted for determinism checks).
+    pub latencies: Vec<Vec<u64>>,
+}
+
+impl ServingRun {
+    pub fn new(state: ServingState) -> ServingRun {
+        let n = state.arrivals.len();
+        ServingRun {
+            state,
+            next_arrival: vec![0; n],
+            queue: vec![VecDeque::new(); n],
+            inflight: vec![Vec::new(); n],
+            completed: vec![0; n],
+            batches: vec![0; n],
+            slo_met: vec![0; n],
+            latencies: vec![Vec::new(); n],
+        }
+    }
+
+    /// Admit every arrival due at or before `now` into its queue.
+    pub fn admit(&mut self, now: u64, stats: &mut Stats) {
+        for t in 0..self.queue.len() {
+            let arr = &self.state.arrivals[t];
+            while self.next_arrival[t] < arr.len() && arr[self.next_arrival[t]] <= now {
+                self.queue[t].push_back(arr[self.next_arrival[t]]);
+                self.next_arrival[t] += 1;
+                stats.bump(Counter::ServingRequestsArrived);
+                stats.sample(SampleId::ServingQueueDepth, self.queue[t].len() as u64);
+            }
+        }
+    }
+
+    /// Batcher: dispatch tenant `t`'s next batch if the policy fires
+    /// (queue reached `max_batch`, or the oldest request has waited
+    /// `max_wait`). Returns the batch size dispatched.
+    pub fn dispatch(&mut self, t: usize, now: u64, stats: &mut Stats) -> Option<usize> {
+        let q = &mut self.queue[t];
+        let oldest = *q.front()?;
+        let fire = q.len() >= self.state.spec.max_batch || now - oldest >= self.state.spec.max_wait;
+        if !fire {
+            return None;
+        }
+        let k = q.len().min(self.state.spec.max_batch);
+        for _ in 0..k {
+            let arrival = q.pop_front().expect("batch size bounded by queue length");
+            self.inflight[t].push(arrival);
+        }
+        self.batches[t] += 1;
+        stats.bump(Counter::ServingBatches);
+        stats.sample(SampleId::ServingBatchOccupancy, k as u64);
+        Some(k)
+    }
+
+    /// Record tenant `t`'s in-flight batch as completed at `now`.
+    pub fn complete(&mut self, t: usize, now: u64, stats: &mut Stats) {
+        let slo = self.state.spec.slo_cycles;
+        for arrival in std::mem::take(&mut self.inflight[t]) {
+            let lat = now - arrival;
+            self.latencies[t].push(lat);
+            self.completed[t] += 1;
+            stats.bump(Counter::ServingRequestsCompleted);
+            stats.sample(SampleId::ServingLatencyCycles, lat);
+            if slo == 0 || lat <= slo {
+                self.slo_met[t] += 1;
+                stats.bump(Counter::ServingSloMet);
+            }
+        }
+    }
+
+    /// Requests currently dispatched into tenant `t`'s running pass.
+    pub fn in_flight(&self, t: usize) -> usize {
+        self.inflight[t].len()
+    }
+
+    /// Does tenant `t` still have unadmitted, queued, or in-flight
+    /// work?
+    pub fn has_more(&self, t: usize) -> bool {
+        self.next_arrival[t] < self.state.arrivals[t].len()
+            || !self.queue[t].is_empty()
+            || !self.inflight[t].is_empty()
+    }
+
+    /// Every request of every tenant admitted, dispatched, completed?
+    pub fn all_done(&self) -> bool {
+        (0..self.queue.len()).all(|t| !self.has_more(t))
+    }
+
+    /// The earliest future cycle at which the serving layer could act:
+    /// the next unadmitted arrival of any tenant, or the max-wait
+    /// dispatch deadline of a *parked* tenant's oldest queued request
+    /// (busy tenants dispatch at pass completion, not on a timer).
+    /// `u64::MAX` when nothing is pending — this is the engine's leap
+    /// cap, and after `admit`/`dispatch` have run at `now` every value
+    /// returned is strictly greater than `now` (arrivals `<= now` were
+    /// admitted; a parked tenant whose deadline elapsed was dispatched),
+    /// so a leap is never capped at zero.
+    pub fn next_event(&self, parked: &[bool]) -> u64 {
+        let mut next = u64::MAX;
+        for t in 0..self.queue.len() {
+            let arr = &self.state.arrivals[t];
+            if self.next_arrival[t] < arr.len() {
+                next = next.min(arr[self.next_arrival[t]]);
+            }
+            if parked.get(t).copied().unwrap_or(false) {
+                if let Some(&oldest) = self.queue[t].front() {
+                    next = next.min(oldest + self.state.spec.max_wait);
+                }
+            }
+        }
+        next
+    }
+}
+
+/// Per-tenant serving summary, derived from a finished [`ServingRun`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TenantServing {
+    pub arrived: usize,
+    pub completed: usize,
+    pub batches: usize,
+    pub slo_met: usize,
+    pub p50_cycles: u64,
+    pub p99_cycles: u64,
+    pub max_cycles: u64,
+}
+
+impl TenantServing {
+    /// Goodput in requests per simulated second (SLO-met completions
+    /// over the run's simulated wall time).
+    pub fn goodput_rps(&self, now_ps: u64) -> f64 {
+        if now_ps == 0 {
+            0.0
+        } else {
+            self.slo_met as f64 / (now_ps as f64 * 1e-12)
+        }
+    }
+}
+
+/// The serving block of a `ScenarioOutcome`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServingReport {
+    pub tenants: Vec<TenantServing>,
+}
+
+/// Nearest-rank percentile over an unsorted latency series (`q` in
+/// 0..=100); 0 for an empty series.
+pub fn percentile(latencies: &[u64], q: u64) -> u64 {
+    if latencies.is_empty() {
+        return 0;
+    }
+    let mut sorted = latencies.to_vec();
+    sorted.sort_unstable();
+    let idx = (q as usize * (sorted.len() - 1)) / 100;
+    sorted[idx]
+}
+
+impl ServingReport {
+    /// Summarize a finished run.
+    pub fn from_run(run: &ServingRun) -> ServingReport {
+        let tenants = (0..run.latencies.len())
+            .map(|t| {
+                let lats = &run.latencies[t];
+                TenantServing {
+                    arrived: run.state.arrivals[t].len(),
+                    completed: run.completed[t],
+                    batches: run.batches[t],
+                    slo_met: run.slo_met[t],
+                    p50_cycles: percentile(lats, 50),
+                    p99_cycles: percentile(lats, 99),
+                    max_cycles: lats.iter().copied().max().unwrap_or(0),
+                }
+            })
+            .collect();
+        ServingReport { tenants }
+    }
+
+    /// The worst per-tenant p99 (the explorer's serving-probe metric).
+    pub fn worst_p99(&self) -> u64 {
+        self.tenants.iter().map(|t| t.p99_cycles).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn poisson_spec() -> ServingSpec {
+        ServingSpec {
+            seed: 11,
+            requests: 8,
+            mean_gap: 500,
+            max_batch: 3,
+            max_wait: 800,
+            slo_cycles: 50_000,
+            ..ServingSpec::default()
+        }
+    }
+
+    #[test]
+    fn build_is_deterministic_and_arrivals_strictly_increase() {
+        let spec = poisson_spec();
+        let a = ServingState::build(&spec, 2).unwrap();
+        let b = ServingState::build(&spec, 2).unwrap();
+        assert_eq!(a, b, "same spec must rebuild identically");
+        for t in 0..2 {
+            assert_eq!(a.arrivals[t].len(), 8);
+            for w in a.arrivals[t].windows(2) {
+                assert!(w[0] < w[1], "arrivals must strictly increase (gap floor 1)");
+            }
+        }
+        // Tenants draw from independent streams.
+        assert_ne!(a.arrivals[0], a.arrivals[1]);
+        // A different seed moves the schedule.
+        let mut other = spec.clone();
+        other.seed = 12;
+        assert_ne!(ServingState::build(&other, 2).unwrap().arrivals[0], a.arrivals[0]);
+    }
+
+    #[test]
+    fn explicit_arrivals_are_sorted_and_shared() {
+        let spec = ServingSpec {
+            arrivals: vec![900, 100, 500],
+            max_batch: 2,
+            ..ServingSpec::default()
+        };
+        let st = ServingState::build(&spec, 2).unwrap();
+        assert_eq!(st.arrivals[0], vec![100, 500, 900]);
+        assert_eq!(st.arrivals[0], st.arrivals[1]);
+        assert_eq!(st.last_arrival(), 900);
+        assert_eq!(spec.requests_per_tenant(), 3);
+    }
+
+    #[test]
+    fn batcher_fires_on_max_batch_and_on_max_wait() {
+        let spec = ServingSpec {
+            arrivals: vec![10, 20, 1_000],
+            max_batch: 2,
+            max_wait: 300,
+            ..ServingSpec::default()
+        };
+        let mut run = ServingRun::new(ServingState::build(&spec, 1).unwrap());
+        let mut stats = Stats::default();
+        run.admit(25, &mut stats);
+        // Two queued >= max_batch: fires immediately, takes exactly 2.
+        assert_eq!(run.dispatch(0, 25, &mut stats), Some(2));
+        assert_eq!(run.dispatch(0, 25, &mut stats), None, "queue drained");
+        run.complete(0, 600, &mut stats);
+        assert_eq!(run.completed[0], 2);
+        assert_eq!(run.latencies[0], vec![590, 580]);
+        // One request below max_batch: waits for the max-wait deadline.
+        run.admit(1_000, &mut stats);
+        assert_eq!(run.dispatch(0, 1_100, &mut stats), None, "max_wait not reached");
+        assert_eq!(run.dispatch(0, 1_300, &mut stats), Some(1));
+        run.complete(0, 1_500, &mut stats);
+        assert!(run.all_done());
+        assert_eq!(stats.get("serving.requests_arrived"), 3);
+        assert_eq!(stats.get("serving.requests_completed"), 3);
+        assert_eq!(stats.get("serving.batches_dispatched"), 2);
+        assert_eq!(stats.series("serving.latency_cycles").unwrap().count, 3);
+        assert_eq!(stats.series("serving.queue_depth").unwrap().count, 3);
+        assert_eq!(stats.series("serving.batch_occupancy").unwrap().count, 2);
+    }
+
+    #[test]
+    fn next_event_is_strictly_future_after_processing() {
+        let spec = ServingSpec {
+            arrivals: vec![10, 400],
+            max_batch: 4,
+            max_wait: 100,
+            ..ServingSpec::default()
+        };
+        let mut run = ServingRun::new(ServingState::build(&spec, 1).unwrap());
+        let mut stats = Stats::default();
+        // Before anything arrives: the cap is the first arrival.
+        assert_eq!(run.next_event(&[true]), 10);
+        run.admit(10, &mut stats);
+        assert_eq!(run.dispatch(0, 10, &mut stats), None);
+        // Parked with one queued request: cap at the max-wait deadline.
+        assert_eq!(run.next_event(&[true]), 110);
+        assert!(run.next_event(&[true]) > 10);
+        // Busy (not parked): only the future arrival caps.
+        assert_eq!(run.next_event(&[false]), 400);
+        // Deadline elapsed: dispatch happens, cap moves strictly past.
+        assert_eq!(run.dispatch(0, 110, &mut stats), Some(1));
+        assert_eq!(run.next_event(&[true]), 400);
+        run.complete(0, 120, &mut stats);
+        run.admit(400, &mut stats);
+        run.dispatch(0, 500, &mut stats);
+        run.complete(0, 520, &mut stats);
+        assert_eq!(run.next_event(&[true]), u64::MAX);
+        assert!(run.all_done());
+    }
+
+    #[test]
+    fn slo_accounting_splits_met_and_missed() {
+        let spec = ServingSpec {
+            arrivals: vec![0, 0],
+            max_batch: 2,
+            slo_cycles: 100,
+            ..ServingSpec::default()
+        };
+        let mut run = ServingRun::new(ServingState::build(&spec, 1).unwrap());
+        let mut stats = Stats::default();
+        run.admit(0, &mut stats);
+        run.dispatch(0, 0, &mut stats);
+        run.complete(0, 150, &mut stats);
+        assert_eq!(run.completed[0], 2);
+        assert_eq!(run.slo_met[0], 0, "150 > slo 100 on both");
+        let report = ServingReport::from_run(&run);
+        assert_eq!(report.tenants[0].completed, 2);
+        assert_eq!(report.tenants[0].slo_met, 0);
+        assert_eq!(report.tenants[0].p50_cycles, 150);
+        assert_eq!(report.worst_p99(), 150);
+        assert!(report.tenants[0].goodput_rps(1_000_000) == 0.0);
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        assert_eq!(percentile(&[], 99), 0);
+        assert_eq!(percentile(&[7], 50), 7);
+        let lats: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&lats, 0), 1);
+        assert_eq!(percentile(&lats, 50), 50);
+        assert_eq!(percentile(&lats, 99), 99);
+        assert_eq!(percentile(&lats, 100), 100);
+    }
+
+    #[test]
+    fn cli_spec_round_trips_through_header_kv() {
+        let spec = ServingSpec::parse_cli(
+            "requests=16,mean_gap=2048,max_batch=4,max_wait=512,slo=90000,seed=5",
+        )
+        .unwrap();
+        assert_eq!(spec.requests, 16);
+        assert_eq!(spec.mean_gap, 2048);
+        assert_eq!(spec.max_batch, 4);
+        let mut back = ServingSpec::none();
+        for (k, v) in spec.header_kv() {
+            let value = if let Some(inner) = v.strip_prefix('"') {
+                Value::Str(inner.trim_end_matches('"').to_string())
+            } else {
+                Value::Int(v.parse().unwrap())
+            };
+            assert!(back.apply_key(k, &value).unwrap(), "{k} must be a serving key");
+        }
+        assert_eq!(back, spec);
+        // Explicit arrival traces round-trip through the quoted form.
+        let spec = ServingSpec::parse_cli("arrivals=5+25+125,max_batch=2").unwrap();
+        let kv = spec.header_kv();
+        let arr = kv.iter().find(|(k, _)| *k == "serving.arrivals").unwrap();
+        assert_eq!(arr.1, "\"5+25+125\"");
+        let mut back = ServingSpec::none();
+        for (k, v) in kv {
+            let value = if let Some(inner) = v.strip_prefix('"') {
+                Value::Str(inner.trim_end_matches('"').to_string())
+            } else {
+                Value::Int(v.parse().unwrap())
+            };
+            back.apply_key(k, &value).unwrap();
+        }
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_with_typed_errors() {
+        assert!(ServingSpec::parse_cli("bogus=1").is_err());
+        assert!(ServingSpec::parse_cli("requests").is_err(), "wants key=value");
+        assert!(ServingSpec::parse_cli("requests=4").is_err(), "needs mean_gap");
+        assert!(ServingSpec::parse_cli("requests=4,mean_gap=100,max_batch=0").is_err());
+        assert!(
+            ServingSpec::parse_cli("requests=4,mean_gap=100,max_batch=1,arrivals=1+2").is_err(),
+            "poisson and explicit arrivals are exclusive"
+        );
+        assert!(ServingSpec::parse_cli("arrivals=1+x,max_batch=1").is_err());
+    }
+
+    #[test]
+    fn no_serving_spec_emits_no_header_keys() {
+        assert!(ServingSpec::none().header_kv().is_empty());
+        assert!(ServingSpec::none().is_none());
+        assert!(ServingSpec::none().validate().is_ok());
+        // A defaulted max_batch on a disabled spec is not an error.
+        let mut spec = ServingSpec::none();
+        spec.seed = 9;
+        assert!(spec.is_none(), "seed alone does not enable serving");
+    }
+}

@@ -104,6 +104,15 @@ counters! {
     MedusaReadWordsRotated => "medusa_read.words_rotated",
     MedusaWriteLinesTransposed => "medusa_write.lines_transposed",
     MedusaWriteWordsRotated => "medusa_write.words_rotated",
+    // Inference serving (PR 7). Request/batch bookkeeping of the
+    // open-loop serving front-end; like the fault counters these are
+    // not movement counters, so they land in `[expect.timing]` (and
+    // only there when non-zero — serving-free captures stay
+    // byte-identical to pre-serving builds).
+    ServingBatches => "serving.batches_dispatched",
+    ServingRequestsArrived => "serving.requests_arrived",
+    ServingRequestsCompleted => "serving.requests_completed",
+    ServingSloMet => "serving.slo_met",
     // System-level CDC adapters.
     SysReadLineBackpressure => "sys.read_line_backpressure",
     SysReadLinesIntoFabric => "sys.read_lines_into_fabric",
@@ -117,6 +126,12 @@ counters! {
     DegradeGoodputLines => "degrade.goodput_lines",
     DegradeRecoveryCycles => "degrade.recovery_cycles",
     MedusaReadLineLatencyCycles => "medusa_read.line_latency_cycles",
+    // Inference serving (PR 7): per-request latency (the p50/p99
+    // source), queue depth sampled at each admission, and dispatched
+    // batch occupancy.
+    ServingBatchOccupancy => "serving.batch_occupancy",
+    ServingLatencyCycles => "serving.latency_cycles",
+    ServingQueueDepth => "serving.queue_depth",
 }
 
 #[derive(Clone, Copy, Debug)]

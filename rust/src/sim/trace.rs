@@ -211,6 +211,12 @@ pub struct TraceHeader {
     /// header keys at all, keeping fault-free traces byte-identical to
     /// the pre-fault format.
     pub faults: crate::fault::FaultSpec,
+    /// The serving workload of the captured run (PR 7). Like `faults`,
+    /// the whole arrival/batching schedule re-derives deterministically
+    /// from the spec, so recording it re-arms a replay bit-exactly.
+    /// `ServingSpec::none()` emits no header keys, keeping serving-free
+    /// traces byte-identical to the pre-serving format.
+    pub serving: crate::serving::ServingSpec,
     pub tenants: Vec<TraceTenant>,
 }
 
@@ -311,6 +317,9 @@ impl ScenarioTrace {
         for (k, v) in h.faults.header_kv() {
             out.push_str(&format!("{k} = {v}\n"));
         }
+        for (k, v) in h.serving.header_kv() {
+            out.push_str(&format!("{k} = {v}\n"));
+        }
         out.push_str(&format!("tenants = {}\n", h.tenants.len()));
         for (t, ten) in h.tenants.iter().enumerate() {
             out.push_str(&format!("\n[tenant.{t}]\n"));
@@ -394,6 +403,17 @@ impl ScenarioTrace {
             let rest = &k["header.".len()..];
             faults.apply_key(rest, v).with_context(|| format!("trace key {k:?}"))?;
         }
+        // Serving keys are optional too: serving-free traces (and every
+        // trace from before PR 7) carry none and parse to
+        // `ServingSpec::none()`.
+        let mut serving = crate::serving::ServingSpec::default();
+        for (k, v) in map.range("header.serving.".to_string()..) {
+            if !k.starts_with("header.serving.") {
+                break;
+            }
+            let rest = &k["header.".len()..];
+            serving.apply_key(rest, v).with_context(|| format!("trace key {k:?}"))?;
+        }
         let header = TraceHeader {
             scenario: get("header.scenario")?.as_str()?.to_string(),
             design: get("header.design")?.as_str()?.to_string(),
@@ -412,6 +432,7 @@ impl ScenarioTrace {
             wr_data_depth: get_usize("header.wr_data_depth")?,
             seed: get_u64("header.seed")?,
             faults,
+            serving,
             tenants,
         };
         let nsteps = get_usize("expect.steps")?;
@@ -580,6 +601,7 @@ mod canonical_tests {
                 wr_data_depth: 8,
                 seed: 7,
                 faults: crate::fault::FaultSpec::none(),
+                serving: crate::serving::ServingSpec::none(),
                 tenants: vec![TraceTenant {
                     read_base: 0,
                     read_ports: 4,
@@ -640,6 +662,35 @@ mod canonical_tests {
         assert!(text.contains("faults.policy = \"degrade\""), "{text}");
         let back = ScenarioTrace::from_str(&text).unwrap();
         assert_eq!(t, back);
+    }
+
+    #[test]
+    fn serving_header_round_trips() {
+        let mut t = sample();
+        t.header.serving = crate::serving::ServingSpec::parse_cli(
+            "requests=6,mean_gap=4000,max_batch=2,max_wait=2500,slo=200000,seed=5",
+        )
+        .unwrap();
+        let text = t.to_text();
+        assert!(text.contains("serving.requests = 6"), "{text}");
+        assert!(text.contains("serving.slo_cycles = 200000"), "{text}");
+        let back = ScenarioTrace::from_str(&text).unwrap();
+        assert_eq!(t, back);
+        // Explicit arrival traces round-trip through the quoted form.
+        t.header.serving =
+            crate::serving::ServingSpec::parse_cli("arrivals=5+25+125,max_batch=2").unwrap();
+        let text = t.to_text();
+        assert!(text.contains("serving.arrivals = \"5+25+125\""), "{text}");
+        assert_eq!(ScenarioTrace::from_str(&text).unwrap(), t);
+    }
+
+    #[test]
+    fn serving_free_trace_carries_no_serving_keys() {
+        let t = sample();
+        assert!(t.header.serving.is_none());
+        assert!(!t.to_text().contains("serving."));
+        let back = ScenarioTrace::from_str(&t.to_text()).unwrap();
+        assert!(back.header.serving.is_none());
     }
 
     #[test]

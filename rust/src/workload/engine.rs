@@ -37,6 +37,7 @@ use crate::coordinator::System;
 use crate::dram::MemoryController;
 use crate::interconnect::Design;
 use crate::fault::{FaultPolicy, SimError};
+use crate::serving::{ServingReport, ServingRun, ServingState};
 use crate::sim::trace::{ScenarioTrace, TraceExpect, TraceHeader, TraceStep, TraceTenant, MOVEMENT_COUNTERS};
 use crate::sim::stats::{Counter, SampleId};
 use crate::types::{Line, LineAddr, Word};
@@ -47,6 +48,7 @@ use anyhow::{ensure, Context, Result};
 use std::collections::{HashMap, VecDeque};
 
 /// One fully precomputed layer pass.
+#[derive(Clone)]
 struct ExecStep {
     label: &'static str,
     macs: u64,
@@ -79,6 +81,9 @@ enum TState {
     Draining,
     WaitFlush,
     Finished,
+    /// Serving mode only: between batches, waiting for the dispatcher
+    /// to re-arm the tenant's pass template.
+    Parked,
 }
 
 /// Per-tenant runtime state.
@@ -87,6 +92,10 @@ struct TenantRt {
     group: PortGroup,
     start_cycle: u64,
     steps: VecDeque<ExecStep>,
+    /// Serving mode: the tenant's full pass, cloned back into `steps`
+    /// every time the batcher dispatches (one pass serves one batch).
+    /// Empty in classic fixed-schedule runs.
+    template: Vec<ExecStep>,
     state: TState,
     cur: Option<ExecStep>,
     /// Lines handed to the write network so far (cumulative); compared
@@ -135,6 +144,9 @@ pub struct ScenarioOutcome {
     pub now_ps: u64,
     pub tenants: Vec<TenantOutcome>,
     pub stats: crate::sim::Stats,
+    /// Per-tenant serving summary (`None` for classic fixed-schedule
+    /// runs).
+    pub serving: Option<ServingReport>,
 }
 
 impl ScenarioOutcome {
@@ -174,6 +186,20 @@ impl ScenarioOutcome {
                 mix(fm.0 as u16 as u64);
             }
             mix(t.report.total_cycles());
+        }
+        // Serving aggregates (absent for classic runs, so pre-serving
+        // fingerprints are unchanged). The raw latency series already
+        // flows in through the SampleId loop above.
+        if let Some(srv) = &self.serving {
+            for t in &srv.tenants {
+                mix(t.arrived as u64);
+                mix(t.completed as u64);
+                mix(t.batches as u64);
+                mix(t.slo_met as u64);
+                mix(t.p50_cycles);
+                mix(t.p99_cycles);
+                mix(t.max_cycles);
+            }
         }
         h
     }
@@ -391,15 +417,25 @@ fn precompute_tenant(
 
 /// Edge budget generous enough for any legal run; hitting it means a
 /// deadlock, which must be an error, not a hang.
-fn edge_budget(tenants: &[TenantRt], n: usize) -> u64 {
+fn edge_budget(tenants: &[TenantRt], n: usize, srv: Option<&ServingRun>) -> u64 {
     let mut cycles = 200_000u64;
-    for t in tenants {
-        cycles += 4 * t.start_cycle;
-        for s in &t.steps {
-            cycles += 64 * (s.read_lines() + s.write_lines() + 64) * n as u64
+    for (t, rt) in tenants.iter().enumerate() {
+        cycles += 4 * rt.start_cycle;
+        // A serving tenant holds its pass in `template` (steps is
+        // empty until dispatch) and re-runs it once per batch; one
+        // pass per request is the upper bound.
+        let passes =
+            srv.map(|s| s.state.arrivals[t].len().max(1) as u64).unwrap_or(1);
+        for s in rt.steps.iter().chain(rt.template.iter()) {
+            cycles += (64 * (s.read_lines() + s.write_lines() + 64) * n as u64
                 + s.macs / 32
-                + 20_000;
+                + 20_000)
+                .saturating_mul(passes);
         }
+    }
+    if let Some(s) = srv {
+        // Idle inter-arrival gaps are simulated (or leapt) time too.
+        cycles += 4 * s.state.last_arrival();
     }
     cycles.saturating_mul(8)
 }
@@ -487,6 +523,9 @@ fn service(sys: &mut System, t: usize, rt: &mut TenantRt) {
             }
         }
         TState::Finished => {}
+        // Parked tenants move only when the serving dispatcher re-arms
+        // them (in `drive`, which owns the `ServingRun`).
+        TState::Parked => {}
     }
 }
 
@@ -569,7 +608,12 @@ impl Watchdog {
                 }
                 continue;
             }
-            if rt.state == TState::WaitStart || rt.state == TState::Finished {
+            if rt.state == TState::WaitStart
+                || rt.state == TState::Finished
+                || rt.state == TState::Parked
+            {
+                // Deliberately idle (not started, done, or between
+                // serving batches) — not a wedge.
                 self.progress_cycle[t] = now;
                 continue;
             }
@@ -604,15 +648,52 @@ impl Watchdog {
 }
 
 /// Drive every tenant to completion (or a typed watchdog verdict).
-fn drive(sys: &mut System, tenants: &mut [TenantRt]) -> Result<()> {
+///
+/// With a [`ServingRun`] installed, every serving decision — admission,
+/// batch dispatch, completion — happens on the exact fabric edge its
+/// condition becomes observable, before the leap decision at the bottom
+/// of the loop. That ordering is the leap-exactness argument: when the
+/// engine considers leaping, every serving event due at or before `now`
+/// has already been processed, so [`ServingRun::next_event`] is
+/// strictly in the future and capping the leap there reproduces the
+/// stepwise schedule cycle for cycle.
+fn drive(
+    sys: &mut System,
+    tenants: &mut [TenantRt],
+    mut srv: Option<&mut ServingRun>,
+) -> Result<()> {
     let n = sys.cfg.geometry.words_per_line();
-    let max_edges = edge_budget(tenants, n);
+    let max_edges = edge_budget(tenants, n, srv.as_deref());
     let mut edges = 0u64;
     let mut dog = Watchdog::new(sys, tenants.len());
     loop {
+        let now = sys.fabric_cycles();
+        if let Some(srv) = srv.as_deref_mut() {
+            srv.admit(now, &mut sys.stats);
+        }
         let mut all_done = true;
         for (t, rt) in tenants.iter_mut().enumerate() {
             service(sys, t, rt);
+            // A degrade-quiesced tenant's ports are dead: its wedged
+            // batch never completes and it must not be re-armed.
+            if let Some(srv) = srv.as_deref_mut().filter(|_| dog.degraded_at[t].is_none()) {
+                // Pass boundary: the batch that just finished completes
+                // on this edge; the tenant re-parks if more work exists.
+                if rt.state == TState::Finished && srv.in_flight(t) > 0 {
+                    srv.complete(t, now, &mut sys.stats);
+                    if srv.has_more(t) {
+                        rt.state = TState::Parked;
+                    }
+                }
+                // Batcher: a parked tenant whose policy fires re-arms
+                // its template and begins the pass on this same edge.
+                if rt.state == TState::Parked
+                    && srv.dispatch(t, now, &mut sys.stats).is_some()
+                {
+                    rt.steps = rt.template.iter().cloned().collect();
+                    begin_next(sys, t, rt);
+                }
+            }
             all_done &= rt.state == TState::Finished;
         }
         if dog.armed {
@@ -695,6 +776,19 @@ fn drive(sys: &mut System, tenants: &mut [TenantRt]) -> Result<()> {
                 cap = cap.min(rt.start_cycle - sys.fabric_cycles());
             }
         }
+        if let Some(srv) = srv.as_deref() {
+            // Serving horizon: never leap past the next arrival or a
+            // parked tenant's max-wait dispatch deadline. Strictly
+            // future because admit/dispatch above already processed
+            // every event due at `now`.
+            let parked: Vec<bool> =
+                tenants.iter().map(|rt| rt.state == TState::Parked).collect();
+            let next = srv.next_event(&parked);
+            if next != u64::MAX {
+                debug_assert!(next > sys.fabric_cycles());
+                cap = cap.min(next - sys.fabric_cycles());
+            }
+        }
         match sys.try_leap_idle(cap, max_edges - edges) {
             Some(leap) => edges += leap.steps,
             None => {
@@ -712,7 +806,12 @@ fn drive(sys: &mut System, tenants: &mut [TenantRt]) -> Result<()> {
     }
 }
 
-fn build_outcome(sc_name: &str, sys: &System, tenants: Vec<TenantRt>) -> ScenarioOutcome {
+fn build_outcome(
+    sc_name: &str,
+    sys: &System,
+    tenants: Vec<TenantRt>,
+    serving: Option<ServingReport>,
+) -> ScenarioOutcome {
     let mut outs = Vec::with_capacity(tenants.len());
     for (t, rt) in tenants.into_iter().enumerate() {
         let g = rt.group;
@@ -747,6 +846,7 @@ fn build_outcome(sc_name: &str, sys: &System, tenants: Vec<TenantRt>) -> Scenari
         now_ps: sys.now_ps(),
         tenants: outs,
         stats: sys.stats.clone(),
+        serving,
     }
 }
 
@@ -761,12 +861,24 @@ fn timing_entries(
     let mut out: Vec<(String, u64)> = Vec::new();
     for &id in Counter::ALL.iter() {
         let name = id.name();
-        if !MOVEMENT_COUNTERS.contains(&name) {
-            out.push((name.to_string(), stats.count(id)));
+        if MOVEMENT_COUNTERS.contains(&name) {
+            continue;
         }
+        let v = stats.count(id);
+        // Untouched serving entries are elided so serving-free captures
+        // stay byte-identical to pre-serving traces (the serving
+        // registry entries would otherwise appear as zeros in every
+        // classic trace).
+        if v == 0 && name.starts_with("serving.") {
+            continue;
+        }
+        out.push((name.to_string(), v));
     }
     for &id in SampleId::ALL.iter() {
         let s = stats.series_of(id);
+        if s.count == 0 && id.name().starts_with("serving.") {
+            continue;
+        }
         out.push((format!("series.{}.count", id.name()), s.count));
         out.push((format!("series.{}.sum", id.name()), s.sum));
     }
@@ -833,12 +945,21 @@ fn build_tenants(
             elided,
         )
         .with_context(|| format!("tenant {i} ({})", spec.net.name))?;
+        // Serving mode: the precomputed pass becomes the re-armable
+        // template and the tenant parks until its first batch.
+        let serving = !sc.serving.is_none();
+        let (steps, template, state) = if serving {
+            (VecDeque::new(), steps.into_iter().collect(), TState::Parked)
+        } else {
+            (steps, Vec::new(), TState::WaitStart)
+        };
         tenants.push(TenantRt {
             network: spec.net.name,
             group,
             start_cycle: spec.start_cycle,
             steps,
-            state: TState::WaitStart,
+            template,
+            state,
             cur: None,
             supplied_lines: 0,
             t0_ps: 0,
@@ -875,13 +996,22 @@ pub fn run_scenario_captured(sc: &Scenario) -> Result<(ScenarioOutcome, Scenario
 fn run_inner(sc: &Scenario, capture: bool) -> Result<(ScenarioOutcome, Option<ScenarioTrace>)> {
     sc.validate()?;
     let groups = sc.groups()?;
-    let mut sys = System::new_with_groups(sc.cfg.clone(), &groups)?;
-    sys.install_faults(&sc.faults)?;
+    let mut sys = System::builder(sc.cfg.clone())
+        .port_groups(&groups)
+        .faults(&sc.faults)
+        .build()?;
     let mut tenants = build_tenants(sc, &groups, &mut sys)?;
+    let mut srv: Option<ServingRun> = if sc.serving.is_none() {
+        None
+    } else {
+        Some(ServingRun::new(ServingState::build(&sc.serving, sc.tenants.len())?))
+    };
     let trace_steps: Option<Vec<TraceStep>> = capture.then(|| {
         let mut steps = Vec::new();
         for (t, rt) in tenants.iter().enumerate() {
-            for s in &rt.steps {
+            // Exactly one of `steps` / `template` is populated
+            // (classic vs serving), so chaining covers both.
+            for s in rt.steps.iter().chain(rt.template.iter()) {
                 steps.push(TraceStep {
                     tenant: t,
                     label: s.label.to_string(),
@@ -902,7 +1032,7 @@ fn run_inner(sc: &Scenario, capture: bool) -> Result<(ScenarioOutcome, Option<Sc
         }
         steps
     });
-    drive(&mut sys, &mut tenants)?;
+    drive(&mut sys, &mut tenants, srv.as_mut())?;
     let trace = trace_steps.map(|steps| ScenarioTrace {
         header: TraceHeader {
             scenario: sc.name.clone(),
@@ -927,6 +1057,9 @@ fn run_inner(sc: &Scenario, capture: bool) -> Result<(ScenarioOutcome, Option<Sc
             // enough: the whole schedule re-derives from it, so faulty
             // runs capture/replay bit-exactly.
             faults: sc.faults.clone(),
+            // Same story for serving: arrivals re-materialize from the
+            // spec, so a replay re-arms the identical request stream.
+            serving: sc.serving.clone(),
             tenants: groups
                 .iter()
                 .zip(sc.tenants.iter())
@@ -942,11 +1075,14 @@ fn run_inner(sc: &Scenario, capture: bool) -> Result<(ScenarioOutcome, Option<Sc
         steps,
         expect: snapshot_expect(&sys),
     });
-    let outcome = build_outcome(&sc.name, &sys, tenants);
+    let serving = srv.map(|s| ServingReport::from_run(&s));
+    let outcome = build_outcome(&sc.name, &sys, tenants, serving);
     Ok((outcome, trace))
 }
 
 /// Rebuild the system a trace describes, under the given backend.
+/// Rebuild the system a trace describes (faults installed), under the
+/// given backend.
 fn system_from_header(
     h: &TraceHeader,
     backend: crate::config::SimBackend,
@@ -985,7 +1121,7 @@ fn system_from_header(
             write_ports: t.write_ports,
         })
         .collect();
-    let sys = System::new_with_groups(cfg, &groups)?;
+    let sys = System::builder(cfg).port_groups(&groups).faults(&h.faults).build()?;
     Ok((sys, groups))
 }
 
@@ -1000,21 +1136,30 @@ fn sched_from_runs(runs: &[Vec<(u64, u64)>]) -> Vec<PortSchedule> {
 /// Re-drive the interconnect from a trace: no workload generation, no
 /// golden math — pure data movement with synthesized write words.
 pub fn replay(trace: &ScenarioTrace) -> Result<ScenarioOutcome> {
-    replay_with(trace, crate::config::SimBackend::full())
+    replay_impl(trace, crate::config::SimBackend::full())
+}
+
+/// [`replay`] under an explicit simulation backend. Superseded by
+/// [`crate::run::RunOptions::replay`].
+#[deprecated(since = "0.7.0", note = "use run::RunOptions::new().backend(..).replay(..)")]
+pub fn replay_with(
+    trace: &ScenarioTrace,
+    backend: crate::config::SimBackend,
+) -> Result<ScenarioOutcome> {
+    replay_impl(trace, backend)
 }
 
 /// [`replay`] under an explicit simulation backend. Trace headers
 /// deliberately don't record a backend (any backend reproduces the
 /// same stats), so the choice is the caller's: the CLI's `--payload` /
 /// `--edges` flags and the fast-backend conformance suite both land
-/// here.
-pub fn replay_with(
+/// here (via [`crate::run::RunOptions`]).
+pub(crate) fn replay_impl(
     trace: &ScenarioTrace,
     backend: crate::config::SimBackend,
 ) -> Result<ScenarioOutcome> {
     trace.validate()?;
     let (mut sys, groups) = system_from_header(&trace.header, backend)?;
-    sys.install_faults(&trace.header.faults)?;
     let n = sys.cfg.geometry.words_per_line();
     let elided = backend.payload.is_elided();
     let mut tenants: Vec<TenantRt> = groups
@@ -1025,6 +1170,7 @@ pub fn replay_with(
             group,
             start_cycle: ht.start_cycle,
             steps: VecDeque::new(),
+            template: Vec::new(),
             state: TState::WaitStart,
             cur: None,
             supplied_lines: 0,
@@ -1076,8 +1222,21 @@ pub fn replay_with(
             write_seed: step.write_seed,
         });
     }
-    drive(&mut sys, &mut tenants)?;
-    Ok(build_outcome(&trace.header.scenario, &sys, tenants))
+    // A serving trace re-arms the identical request stream: arrivals
+    // re-materialize from the recorded spec, and the replayed steps
+    // become each tenant's batch template.
+    let mut srv: Option<ServingRun> = if trace.header.serving.is_none() {
+        None
+    } else {
+        for rt in tenants.iter_mut() {
+            rt.template = std::mem::take(&mut rt.steps).into_iter().collect();
+            rt.state = TState::Parked;
+        }
+        Some(ServingRun::new(ServingState::build(&trace.header.serving, tenants.len())?))
+    };
+    drive(&mut sys, &mut tenants, srv.as_mut())?;
+    let serving = srv.map(|s| ServingReport::from_run(&s));
+    Ok(build_outcome(&trace.header.scenario, &sys, tenants, serving))
 }
 
 /// Replay `trace` and assert it reproduces the recorded expectations:
@@ -1085,18 +1244,31 @@ pub fn replay_with(
 /// has timing recorded — the exact cycle counts, every timing counter,
 /// and the per-port wait cycles.
 pub fn verify_replay(trace: &ScenarioTrace) -> Result<ScenarioOutcome> {
-    verify_replay_with(trace, crate::config::SimBackend::full())
+    verify_replay_impl(trace, crate::config::SimBackend::full())
+}
+
+/// [`verify_replay`] under an explicit backend. Superseded by
+/// [`crate::run::RunOptions::verify_replay`].
+#[deprecated(
+    since = "0.7.0",
+    note = "use run::RunOptions::new().backend(..).verify_replay(..)"
+)]
+pub fn verify_replay_with(
+    trace: &ScenarioTrace,
+    backend: crate::config::SimBackend,
+) -> Result<ScenarioOutcome> {
+    verify_replay_impl(trace, backend)
 }
 
 /// [`verify_replay`] under an explicit backend — the fast-backend
 /// conformance path: a trace captured by a full run must replay to the
 /// same counters, cycles, and waits under payload elision and edge
 /// leaping (the recorded expect block is the cross-backend oracle).
-pub fn verify_replay_with(
+pub(crate) fn verify_replay_impl(
     trace: &ScenarioTrace,
     backend: crate::config::SimBackend,
 ) -> Result<ScenarioOutcome> {
-    let out = replay_with(trace, backend)?;
+    let out = replay_impl(trace, backend)?;
     for (name, want) in &trace.expect.exact {
         let got = out.stats.get(name);
         ensure!(

@@ -19,9 +19,10 @@ pub mod graph;
 pub mod scenario;
 pub mod zoo;
 
-pub use engine::{
-    replay, replay_with, run_scenario, run_scenario_captured, verify_replay, verify_replay_with,
-    ScenarioOutcome,
-};
+pub use engine::{replay, run_scenario, run_scenario_captured, verify_replay, ScenarioOutcome};
+// Deprecated `_with` shims, kept importable for external callers; new
+// code goes through `crate::run::RunOptions`.
+#[allow(deprecated)]
+pub use engine::{replay_with, verify_replay_with};
 pub use graph::{Layer, Node, Src, WorkloadNet};
 pub use scenario::{Scenario, TenantSpec};

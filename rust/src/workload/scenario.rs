@@ -36,6 +36,7 @@
 use crate::accel::layer_processor::PortGroup;
 use crate::config::{parse_toml_subset, SystemConfig, Value};
 use crate::fault::FaultSpec;
+use crate::serving::ServingSpec;
 use crate::workload::graph::WorkloadNet;
 use crate::workload::zoo;
 use anyhow::{anyhow, bail, ensure, Context, Result};
@@ -67,13 +68,16 @@ pub struct TenantSpec {
 }
 
 /// A complete scenario: system config + tenant mapping + (optional)
-/// fault-injection campaign (`[faults]` section; see `fault::FaultSpec`).
+/// fault-injection campaign (`[faults]` section; see `fault::FaultSpec`)
+/// + (optional) open-loop serving front-end (`[serving]` section; see
+/// `serving::ServingSpec`).
 #[derive(Clone, Debug)]
 pub struct Scenario {
     pub name: String,
     pub cfg: SystemConfig,
     pub tenants: Vec<TenantSpec>,
     pub faults: FaultSpec,
+    pub serving: ServingSpec,
 }
 
 impl Scenario {
@@ -85,6 +89,7 @@ impl Scenario {
             tenants: vec![TenantSpec { net, read_ports: 0, write_ports: 0, start_cycle: 0, seed }],
             cfg,
             faults: FaultSpec::none(),
+            serving: ServingSpec::none(),
         }
     }
 
@@ -103,6 +108,7 @@ impl Scenario {
         let mut cfg = SystemConfig::default();
         let mut name = String::new();
         let mut faults = FaultSpec::none();
+        let mut serving = ServingSpec::none();
         let mut tenant_keys: BTreeMap<usize, BTreeMap<String, Value>> = BTreeMap::new();
         for (key, value) in &raw {
             if cfg.apply_key(key, value)? {
@@ -113,6 +119,9 @@ impl Scenario {
                 continue;
             }
             if faults.apply_key(key, value)? {
+                continue;
+            }
+            if serving.apply_key(key, value)? {
                 continue;
             }
             if let Some(rest) = key.strip_prefix("tenant.") {
@@ -156,7 +165,7 @@ impl Scenario {
             let net = net.ok_or_else(|| anyhow!("tenant {idx}: missing network"))?;
             tenants.push(TenantSpec { net, read_ports, write_ports, start_cycle, seed });
         }
-        let sc = Scenario { name, cfg, tenants, faults };
+        let sc = Scenario { name, cfg, tenants, faults, serving };
         sc.validate()?;
         Ok(sc)
     }
@@ -215,6 +224,9 @@ impl Scenario {
         self.faults
             .validate(Some(self.tenants.len()))
             .with_context(|| format!("scenario {:?} [faults]", self.name))?;
+        self.serving
+            .validate()
+            .with_context(|| format!("scenario {:?} [serving]", self.name))?;
         self.groups().map(|_| ())
     }
 
@@ -260,6 +272,7 @@ impl Scenario {
                     ],
                     cfg,
                     faults: FaultSpec::none(),
+                    serving: ServingSpec::none(),
                 })
             }
             "staggered-gemm" => {
@@ -284,7 +297,21 @@ impl Scenario {
                     ],
                     cfg,
                     faults: FaultSpec::none(),
+                    serving: ServingSpec::none(),
                 })
+            }
+            "serving-poisson" => {
+                let mut sc = Scenario::single("serving-poisson", small(8, 16), zoo::gemm_mlp());
+                sc.serving = ServingSpec {
+                    seed: 5,
+                    requests: 6,
+                    mean_gap: 4_000,
+                    max_batch: 2,
+                    max_wait: 2_500,
+                    slo_cycles: 200_000,
+                    ..ServingSpec::default()
+                };
+                Some(sc)
             }
             _ => None,
         }
@@ -292,7 +319,7 @@ impl Scenario {
 
     /// Names of the built-in scenarios.
     pub fn builtin_names() -> &'static [&'static str] {
-        &["single-tiny-vgg", "multi-tenant-mix", "staggered-gemm"]
+        &["single-tiny-vgg", "multi-tenant-mix", "staggered-gemm", "serving-poisson"]
     }
 
     /// The micro scenario behind the checked-in golden traces
@@ -342,6 +369,7 @@ impl Scenario {
             tenants: vec![TenantSpec { net, read_ports: 0, write_ports: 0, start_cycle: 0, seed: 5 }],
             cfg,
             faults: FaultSpec::none(),
+            serving: ServingSpec::none(),
         }
     }
 
@@ -486,6 +514,33 @@ network = "gemm-mlp"
         assert_eq!(sc.faults.dram_refresh_period, 64);
         assert_eq!(sc.faults.wedge_tenant, Some(1));
         assert_eq!(sc.faults.policy, crate::fault::FaultPolicy::Degrade);
+    }
+
+    #[test]
+    fn parses_serving_section() {
+        let text = format!(
+            "{MIX}\n[serving]\nseed = 4\nrequests = 12\nmean_gap = 2000\nmax_batch = 3\n\
+             max_wait = 800\nslo_cycles = 90000\n"
+        );
+        let sc = Scenario::from_str(&text).unwrap();
+        assert_eq!(sc.serving.seed, 4);
+        assert_eq!(sc.serving.requests, 12);
+        assert_eq!(sc.serving.mean_gap, 2000);
+        assert_eq!(sc.serving.max_batch, 3);
+        assert!(!sc.serving.is_none());
+        // Explicit arrival traces parse from the quoted list form.
+        let text = format!("{MIX}\n[serving]\nmax_batch = 2\narrivals = \"100,400,900\"\n");
+        let sc = Scenario::from_str(&text).unwrap();
+        assert_eq!(sc.serving.arrivals, vec![100, 400, 900]);
+    }
+
+    #[test]
+    fn invalid_serving_section_rejected() {
+        // Enabled serving without a batcher bound is a config error.
+        let text = format!("{MIX}\n[serving]\nrequests = 4\nmean_gap = 100\nmax_batch = 0\n");
+        assert!(Scenario::from_str(&text).is_err());
+        let text = format!("{MIX}\n[serving]\nwarp_factor = 9\n");
+        assert!(Scenario::from_str(&text).is_err());
     }
 
     #[test]

@@ -17,7 +17,7 @@ fn medusa(args: &[&str]) -> (bool, String, String) {
 fn help_lists_subcommands() {
     let (ok, stdout, _) = medusa(&["help"]);
     assert!(ok);
-    for cmd in ["eval", "infer", "resources", "freq", "sweep", "info"] {
+    for cmd in ["eval", "infer", "resources", "freq", "sweep", "info", "serve"] {
         assert!(stdout.contains(cmd), "help missing {cmd}");
     }
 }
@@ -166,6 +166,45 @@ fn run_scenario_on_hybrid_design_verifies() {
         medusa(&["run", "--scenario", "multi-tenant-mix", "--design", "hybrid:r4"]);
     assert!(ok, "stdout:\n{stdout}\nstderr:\n{stderr}");
     assert!(stdout.contains("all tenants verified"));
+}
+
+#[test]
+fn serve_smoke_reports_latency_and_verifies() {
+    let (ok, stdout, stderr) = medusa(&["serve", "--smoke"]);
+    assert!(ok, "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("latency p50"), "{stdout}");
+    assert!(stdout.contains("goodput"), "{stdout}");
+    assert!(stdout.contains("all tenants verified"), "{stdout}");
+}
+
+#[test]
+fn serve_json_report_carries_slo_and_tail_latency() {
+    let dir = std::env::temp_dir().join(format!("medusa_cli_serve_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let json = dir.join("serve.json");
+    let json_s = json.to_str().unwrap();
+    let (ok, stdout, stderr) = medusa(&["serve", "--smoke", "--json", json_s]);
+    assert!(ok, "stdout:\n{stdout}\nstderr:\n{stderr}");
+    let text = std::fs::read_to_string(&json).unwrap();
+    for key in ["\"p50_cycles\"", "\"p99_cycles\"", "\"slo_met\"", "\"goodput_rps\"", "\"fingerprint\""] {
+        assert!(text.contains(key), "serve JSON missing {key}:\n{text}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_scenario_file_with_serving_section_runs() {
+    let (ok, stdout, stderr) =
+        medusa(&["serve", "--scenario", "configs/scenarios/serving_poisson.toml"]);
+    assert!(ok, "stdout:\n{stdout}\nstderr:\n{stderr}");
+    assert!(stdout.contains("latency p50"), "{stdout}");
+}
+
+#[test]
+fn serve_rejects_scenarios_without_a_serving_section() {
+    let (ok, _, stderr) = medusa(&["serve", "--scenario", "single-tiny-vgg"]);
+    assert!(!ok);
+    assert!(stderr.contains("no [serving] section"), "{stderr}");
 }
 
 #[test]

@@ -175,7 +175,7 @@ fn explorer_cache_hit_equals_recompute() {
     for p in &pts {
         assert!(
             cache
-                .get(point_key(p, &space.probe, medusa::config::PayloadMode::Elided))
+                .get(point_key(p, &space.probe, medusa::config::PayloadMode::Elided, None))
                 .is_some(),
             "missing entry {}",
             p.label()

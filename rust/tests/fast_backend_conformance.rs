@@ -12,8 +12,8 @@
 //! * captured traces agree structurally: identical headers, identical
 //!   step schedules, identical `exact` AND `timing` expect blocks;
 //! * a trace captured by the full backend replays cleanly under the
-//!   fast backend (`verify_replay_with` asserts the recorded expect
-//!   block, so the golden files are a cross-backend oracle);
+//!   fast backend (`RunOptions::verify_replay` asserts the recorded
+//!   expect block, so the golden files are a cross-backend oracle);
 //! * staggered multi-tenant scenarios leap without perturbing tenant
 //!   start edges;
 //! * the explorer smoke grid evaluates to byte-identical Pareto output
@@ -21,8 +21,9 @@
 
 use medusa::config::{EdgeMode, PayloadMode, SimBackend, SystemConfig};
 use medusa::eval::explore::{bench_json, full_table};
-use medusa::explore::{run_search_with, DesignSpace, Strategy};
+use medusa::explore::{DesignSpace, Strategy};
 use medusa::interconnect::hybrid::HybridConfig;
+use medusa::run::RunOptions;
 use medusa::interconnect::Design;
 use medusa::sim::stats::{Counter, SampleId};
 use medusa::types::Geometry;
@@ -174,9 +175,11 @@ fn full_captured_trace_replays_under_every_backend() {
         SimBackend { payload: PayloadMode::Full, edges: EdgeMode::Leap },
         SimBackend::fast(),
     ] {
-        // verify_replay_with asserts every recorded exact counter,
-        // every timing entry, and the three cycle clocks.
-        workload::verify_replay_with(&trace, backend)
+        // verify_replay asserts every recorded exact counter, every
+        // timing entry, and the three cycle clocks.
+        RunOptions::new()
+            .backend(backend)
+            .verify_replay(&trace)
             .unwrap_or_else(|e| panic!("replay under {backend:?}: {e:#}"));
     }
 }
@@ -213,7 +216,9 @@ fn golden_traces_replay_under_the_fast_backend() {
             .find(|p| p.exists())
             .unwrap_or_else(|| panic!("golden trace {file} not found"));
         let trace = medusa::sim::trace::ScenarioTrace::from_file(&path).unwrap();
-        workload::verify_replay_with(&trace, SimBackend::fast())
+        RunOptions::new()
+            .backend(SimBackend::fast())
+            .verify_replay(&trace)
             .unwrap_or_else(|e| panic!("{file} under fast backend: {e:#}"));
     }
 }
@@ -222,9 +227,15 @@ fn golden_traces_replay_under_the_fast_backend() {
 fn explorer_smoke_grid_pareto_output_is_byte_identical_across_backends() {
     let space = DesignSpace::smoke();
     let workers = 4;
-    let full = run_search_with(&space, &Strategy::Grid, 1, workers, None, SimBackend::full())
+    let full = RunOptions::new()
+        .threads(workers)
+        .backend(SimBackend::full())
+        .run_search(&space, &Strategy::Grid, 1, None)
         .expect("full-backend explore");
-    let fast = run_search_with(&space, &Strategy::Grid, 1, workers, None, SimBackend::fast())
+    let fast = RunOptions::new()
+        .threads(workers)
+        .backend(SimBackend::fast())
+        .run_search(&space, &Strategy::Grid, 1, None)
         .expect("fast-backend explore");
     assert_eq!(full.evaluated, fast.evaluated, "evaluated sets differ across backends");
     let fi: Vec<usize> = full.frontier.iter().map(|e| e.index).collect();

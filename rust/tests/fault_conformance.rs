@@ -215,7 +215,9 @@ fn captured_faulty_trace_records_campaign_and_replays_under_every_backend() {
     let parsed = ScenarioTrace::from_str(&text).unwrap();
     assert_eq!(parsed, trace, "faulty trace text round-trip");
     for backend in backends() {
-        let replayed = workload::verify_replay_with(&parsed, backend)
+        let replayed = medusa::run::RunOptions::new()
+            .backend(backend)
+            .verify_replay(&parsed)
             .unwrap_or_else(|e| panic!("faulty replay under {backend:?}: {e:#}"));
         assert_eq!(replayed.fabric_cycles, out.fabric_cycles, "{backend:?}: cycle drift");
         for name in FAULT_CLASSES {
@@ -333,7 +335,9 @@ fn golden_faulted_trace_replays_under_every_backend() {
         assert_eq!(out.stats.get(name), *want, "live faulted run diverged from golden on {name}");
     }
     for backend in backends() {
-        let replayed = workload::verify_replay_with(&trace, backend)
+        let replayed = medusa::run::RunOptions::new()
+            .backend(backend)
+            .verify_replay(&trace)
             .unwrap_or_else(|e| panic!("golden faulted replay under {backend:?}: {e:#}"));
         assert_eq!(replayed.fabric_cycles, out.fabric_cycles, "{backend:?}: cycle drift");
         let injected: u64 = FAULT_CLASSES.iter().map(|n| replayed.stats.get(n)).sum();

@@ -13,7 +13,6 @@
 //! * scenario TOML files on disk stay loadable and match the built-ins.
 
 use medusa::config::SystemConfig;
-use medusa::eval::scenarios as eval_scenarios;
 use medusa::interconnect::Design;
 use medusa::sim::trace::ScenarioTrace;
 use medusa::types::Geometry;
@@ -219,8 +218,8 @@ fn golden_trace_micro_baseline_replays() {
 fn scenario_matrix_is_bit_identical_sequential_vs_parallel() {
     // The MEDUSA_THREADS contract, without racing on the env var:
     // explicit worker counts, full-outcome fingerprints.
-    let seq = eval_scenarios::sweep_with_threads(1).unwrap();
-    let par = eval_scenarios::sweep_with_threads(4).unwrap();
+    let seq = medusa::run::RunOptions::new().threads(1).sweep().unwrap();
+    let par = medusa::run::RunOptions::new().threads(4).sweep().unwrap();
     assert_eq!(seq.len(), par.len());
     for (a, b) in seq.iter().zip(par.iter()) {
         assert_eq!(a.scenario, b.scenario);

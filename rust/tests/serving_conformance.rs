@@ -1,0 +1,209 @@
+//! Conformance suite for the inference-serving layer (PR 7): open-loop
+//! arrivals, dynamic batching, and SLO accounting must be **bit-exact**
+//! replicas of themselves under every execution strategy.
+//!
+//! What it locks down, per ISSUE 7's acceptance criteria:
+//!
+//! * a seeded serving scenario reports p50/p99 latency, queue depth,
+//!   and goodput as first-class sampled series, bit-identical across
+//!   all four backend combinations (full/elided x stepwise/leap) and
+//!   across sequential vs parallel matrix execution;
+//! * idle-edge leaping jumps straight through sparse inter-arrival gaps
+//!   without moving a single latency sample;
+//! * serving composes with the PR 6 standard fault campaign (faults
+//!   stall and tag traffic, arrivals keep flowing, results stay
+//!   backend-invariant);
+//! * captured serving traces record the spec in their header and replay
+//!   bit-exactly under every backend;
+//! * serving-free traces (the checked-in goldens) carry no `serving.*`
+//!   keys at all — the format is byte-identical to pre-serving builds.
+
+use medusa::config::{EdgeMode, PayloadMode, SimBackend};
+use medusa::run::RunOptions;
+use medusa::serving::ServingSpec;
+use medusa::sim::stats::{Counter, SampleId};
+use medusa::sim::trace::ScenarioTrace;
+use medusa::workload::{self, Scenario, ScenarioOutcome};
+
+fn backends() -> [SimBackend; 4] {
+    [
+        SimBackend::full(),
+        SimBackend { payload: PayloadMode::Elided, edges: EdgeMode::Stepwise },
+        SimBackend { payload: PayloadMode::Full, edges: EdgeMode::Leap },
+        SimBackend::fast(),
+    ]
+}
+
+/// Everything the serving layer observes: the aggregate report (per
+/// tenant) and the serving counter/sample surface.
+fn assert_serving_exact(a: &ScenarioOutcome, b: &ScenarioOutcome, what: &str) {
+    assert_eq!(a.fabric_cycles, b.fabric_cycles, "{what}: fabric_cycles");
+    assert_eq!(a.now_ps, b.now_ps, "{what}: now_ps");
+    let (ra, rb) = (a.serving.as_ref().unwrap(), b.serving.as_ref().unwrap());
+    assert_eq!(ra.tenants.len(), rb.tenants.len(), "{what}: tenant count");
+    for (t, (ta, tb)) in ra.tenants.iter().zip(rb.tenants.iter()).enumerate() {
+        assert_eq!(ta, tb, "{what}: tenant {t} serving report");
+    }
+    for id in [
+        Counter::ServingBatches,
+        Counter::ServingRequestsArrived,
+        Counter::ServingRequestsCompleted,
+        Counter::ServingSloMet,
+    ] {
+        assert_eq!(a.stats.count(id), b.stats.count(id), "{what}: counter {}", id.name());
+    }
+    for id in
+        [SampleId::ServingBatchOccupancy, SampleId::ServingLatencyCycles, SampleId::ServingQueueDepth]
+    {
+        let (sa, sb) = (a.stats.series_of(id), b.stats.series_of(id));
+        assert_eq!(
+            (sa.min, sa.max, sa.sum, sa.count),
+            (sb.min, sb.max, sb.sum, sb.count),
+            "{what}: series {}",
+            id.name()
+        );
+    }
+}
+
+#[test]
+fn seeded_serving_run_is_bit_identical_across_all_backends() {
+    let reference = {
+        let sc = Scenario::builtin("serving-poisson").unwrap();
+        RunOptions::new().backend(SimBackend::full()).run(&sc).unwrap()
+    };
+    let rep = reference.serving.as_ref().expect("serving report");
+    let t0 = &rep.tenants[0];
+    assert_eq!(t0.arrived, 6, "serving-poisson serves 6 requests");
+    assert_eq!(t0.completed, 6, "every request must complete");
+    assert!(t0.p50_cycles > 0 && t0.p99_cycles >= t0.p50_cycles && t0.max_cycles >= t0.p99_cycles);
+    assert!(t0.goodput_rps(reference.now_ps) > 0.0);
+    assert!(t0.batches >= 3, "max_batch=2 over 6 requests needs at least 3 batches");
+    // Queue depth / latency / occupancy are first-class sampled series.
+    assert!(reference.stats.series("serving.latency_cycles").unwrap().count > 0);
+    assert!(reference.stats.series("serving.queue_depth").unwrap().count > 0);
+    assert!(reference.stats.series("serving.batch_occupancy").unwrap().count > 0);
+    for backend in backends() {
+        let sc = Scenario::builtin("serving-poisson").unwrap();
+        let out = RunOptions::new().backend(backend).run(&sc).unwrap();
+        assert_serving_exact(&reference, &out, &format!("{backend:?}"));
+        // Full-payload variants must agree on the complete fingerprint
+        // (feature maps included), not just the serving surface.
+        if backend.payload == PayloadMode::Full {
+            assert_eq!(reference.fingerprint(), out.fingerprint(), "{backend:?}: fingerprint");
+        }
+    }
+}
+
+#[test]
+fn serving_matrix_rows_are_bit_identical_sequential_vs_parallel() {
+    let seq = RunOptions::new().threads(1).sweep().unwrap();
+    let par = RunOptions::new().threads(4).sweep().unwrap();
+    let rows =
+        |pts: &[medusa::eval::scenarios::ScenarioPoint]| -> Vec<(medusa::interconnect::Design, u64)> {
+            pts.iter()
+                .filter(|p| p.scenario == "serving-poisson")
+                .map(|p| (p.design, p.fingerprint))
+                .collect()
+        };
+    let (s, p) = (rows(&seq), rows(&par));
+    assert_eq!(s.len(), 2, "serving-poisson must appear on both designs in the matrix");
+    assert_eq!(s, p, "serving matrix rows diverged between worker counts");
+}
+
+#[test]
+fn leap_jumps_sparse_inter_arrival_gaps_without_moving_a_sample() {
+    // Three arrivals separated by huge idle gaps: the leap backend must
+    // skip the gaps in O(1) and still land every admission, dispatch,
+    // and completion on the same edge as the stepwise reference.
+    let mut sc = Scenario::builtin("serving-poisson").unwrap();
+    sc.serving = ServingSpec {
+        seed: 1,
+        requests: 0,
+        mean_gap: 0,
+        max_batch: 1,
+        max_wait: 1_000,
+        slo_cycles: 0,
+        arrivals: vec![500, 400_000, 800_000],
+    };
+    let stepwise = RunOptions::new().backend(SimBackend::full()).run(&sc).unwrap();
+    let leap = RunOptions::new()
+        .backend(SimBackend { payload: PayloadMode::Full, edges: EdgeMode::Leap })
+        .run(&sc)
+        .unwrap();
+    assert!(
+        stepwise.fabric_cycles > 800_000,
+        "run must actually reach the last sparse arrival (got {})",
+        stepwise.fabric_cycles
+    );
+    assert_serving_exact(&stepwise, &leap, "sparse-gap leap");
+    assert_eq!(stepwise.fingerprint(), leap.fingerprint(), "sparse-gap leap fingerprint");
+    let rep = leap.serving.as_ref().unwrap();
+    assert_eq!(rep.tenants[0].completed, 3);
+}
+
+#[test]
+fn serving_composes_with_the_standard_fault_campaign() {
+    // PR 6's standard campaign: refresh stalls, CDC backpressure, LP
+    // slowdown, corrupt tagging. Arrivals keep flowing through all of
+    // it, and the whole composition stays backend-invariant.
+    let mut sc = Scenario::builtin("serving-poisson").unwrap();
+    sc.faults = medusa::fault::FaultSpec::parse_cli(
+        "dram_refresh=64/8,cdc=96/6,slow=128/12,corrupt=7,seed=3",
+    )
+    .unwrap();
+    let full = RunOptions::new().backend(SimBackend::full()).run(&sc).unwrap();
+    let fast = RunOptions::new().backend(SimBackend::fast()).run(&sc).unwrap();
+    assert_serving_exact(&full, &fast, "serving under faults");
+    assert!(full.all_verified(), "delay + detect-only faults must still verify");
+    let injected: u64 = [
+        "fault.dram_refresh_stall_cycles",
+        "fault.cdc_stall_cycles",
+        "fault.lp_slowdown_cycles",
+        "fault.corrupt_injected",
+    ]
+    .iter()
+    .map(|n| full.stats.get(n))
+    .sum();
+    assert!(injected > 0, "standard campaign injected nothing");
+    assert_eq!(full.serving.as_ref().unwrap().tenants[0].completed, 6);
+}
+
+#[test]
+fn captured_serving_trace_records_spec_and_replays_under_every_backend() {
+    let sc = Scenario::builtin("serving-poisson").unwrap();
+    let (out, trace) = workload::run_scenario_captured(&sc).unwrap();
+    assert_eq!(trace.header.serving, sc.serving, "header must record the serving spec");
+    let text = trace.to_text();
+    assert!(text.contains("serving.requests = 6"), "spec missing from trace text:\n{text}");
+    let parsed = ScenarioTrace::from_str(&text).unwrap();
+    assert_eq!(parsed, trace, "serving trace text round-trip");
+    for backend in backends() {
+        let replayed = RunOptions::new()
+            .backend(backend)
+            .verify_replay(&parsed)
+            .unwrap_or_else(|e| panic!("serving replay under {backend:?}: {e:#}"));
+        assert_serving_exact(&out, &replayed, &format!("replay {backend:?}"));
+    }
+}
+
+#[test]
+fn serving_free_goldens_carry_no_serving_keys() {
+    // The regression half of the format contract: pre-serving traces
+    // are untouched, byte for byte — so they must contain no serving
+    // namespace at all, and still replay cleanly (their expect blocks
+    // were captured before the serving layer existed).
+    for file in ["micro_baseline.trace", "micro_medusa.trace", "micro_medusa_faulted.trace"] {
+        let path = ["golden", "rust/golden"]
+            .iter()
+            .map(|b| std::path::Path::new(b).join(file))
+            .find(|p| p.exists())
+            .unwrap_or_else(|| panic!("golden trace {file} not found"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(!text.contains("serving."), "{file} must carry no serving keys");
+        let trace = ScenarioTrace::from_str(&text).unwrap();
+        assert!(trace.header.serving.is_none());
+        RunOptions::new()
+            .verify_replay(&trace)
+            .unwrap_or_else(|e| panic!("{file} replay: {e:#}"));
+    }
+}
