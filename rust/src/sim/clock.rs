@@ -267,8 +267,22 @@ impl Scheduler {
     /// Scheduler steps a stepwise run would use to reach (inclusively)
     /// the `k`-th future edge of `domain`, and the edges the other
     /// domain fires on the way. Pure accounting; no state change.
+    ///
+    /// Hard-guarded: the pairwise coincidence subtraction below is only
+    /// exact for ≤ 2 domains, and a silently wrong step count here
+    /// would corrupt every leap-vs-stepwise contract downstream. The
+    /// public guard in [`Scheduler::leap`] refuses >2-domain schedulers
+    /// up front; this assert keeps any future internal caller honest in
+    /// release builds too (it was previously a `debug_assert`, i.e. a
+    /// latent release-mode correctness hole).
     fn span_for(&self, domain: usize, k: u64) -> (u64, [u64; 2]) {
-        debug_assert!(k >= 1 && self.domains.len() <= 2);
+        assert!(k >= 1, "span_for needs k >= 1");
+        assert!(
+            self.domains.len() <= 2,
+            "span_for: exact simultaneity accounting covers at most 2 domains \
+             ({} configured); leap must refuse instead of miscounting",
+            self.domains.len()
+        );
         let d = &self.domains[domain];
         let t_stop = d
             .next_edge_fs
@@ -538,6 +552,70 @@ mod tests {
         assert!(a.leap(0, 0, 100).is_none());
         assert!(a.leap(0, 5, 0).is_none());
         assert_eq!(a.now_fs(), before);
+    }
+
+    #[test]
+    fn many_domain_leap_is_exact_or_refused_never_wrong() {
+        // The release-mode contract for schedulers beyond the paper's
+        // fabric+mem pair (e.g. cluster/trunk/DRAM): a leap must either
+        // reproduce the exact stepwise state or refuse and change
+        // nothing. Pre-fix, the >2-domain span arithmetic was guarded
+        // only by a debug_assert — a release build that reached it
+        // would have leapt with silently wrong step accounting, which
+        // this test catches on every triple below.
+        let freq_sets: &[&[f64]] = &[
+            &[225.0, 300.0, 200.0], // cluster / trunk / DRAM clocks
+            &[100.0, 100.0, 100.0], // all edges simultaneous
+            &[200.0, 100.0, 50.0],  // nested 2:1 ratios
+            &[333.0, 200.0, 225.0], // only tiny shared factors
+        ];
+        for mhz in freq_sets {
+            for warm in [0u64, 1, 5] {
+                for k in [1u64, 2, 13, 400] {
+                    let mk = || {
+                        let mut s = Scheduler::new(
+                            mhz.iter()
+                                .enumerate()
+                                .map(|(i, &m)| {
+                                    ClockDomain::from_mhz(["a", "b", "c", "d"][i], m)
+                                })
+                                .collect(),
+                        );
+                        for _ in 0..warm {
+                            s.step();
+                        }
+                        s
+                    };
+                    let mut a = mk();
+                    let mut b = mk();
+                    match a.leap(0, k, u64::MAX) {
+                        Some(leap) => {
+                            // Exact: indistinguishable from stepping.
+                            assert_eq!(leap.fired[0], k, "{mhz:?} warm {warm}");
+                            for _ in 0..leap.steps {
+                                b.step();
+                            }
+                        }
+                        None => {
+                            // Refused: state untouched.
+                        }
+                    }
+                    assert_eq!(a.now_fs(), b.now_fs(), "{mhz:?} warm {warm} k {k}");
+                    for i in 0..mhz.len() {
+                        assert_eq!(
+                            a.domain(i).cycles,
+                            b.domain(i).cycles,
+                            "{mhz:?} warm {warm} k {k} domain {i}"
+                        );
+                    }
+                    // The post-leap edge stream continues identically.
+                    for _ in 0..8 {
+                        assert_eq!(a.step(), b.step(), "{mhz:?} warm {warm} k {k}");
+                        assert_eq!(a.now_fs(), b.now_fs());
+                    }
+                }
+            }
+        }
     }
 
     #[test]
