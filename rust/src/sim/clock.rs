@@ -35,13 +35,77 @@ pub struct ClockDomain {
     next_edge_fs: u64,
 }
 
+/// Why a clock rate cannot be turned into a femtosecond period.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClockRateError {
+    /// Zero, negative, NaN, or infinite MHz.
+    NonPositive,
+    /// Not an integral number of MHz — the exact-arithmetic
+    /// constructor refuses rather than silently rounding twice
+    /// (once in the float, once to femtoseconds).
+    NonIntegralMhz,
+    /// Above 1e9 MHz: the period would be below 1 fs, the scheduler's
+    /// time quantum.
+    PeriodUnderflow,
+}
+
+impl std::fmt::Display for ClockRateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClockRateError::NonPositive => write!(f, "clock frequency must be positive"),
+            ClockRateError::NonIntegralMhz => {
+                write!(f, "clock frequency must be an integral number of MHz")
+            }
+            ClockRateError::PeriodUnderflow => {
+                write!(f, "clock period underflows 1 fs (frequency above 1e9 MHz)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ClockRateError {}
+
 impl ClockDomain {
+    /// Exact-arithmetic constructor for integral-MHz rates (every rate
+    /// the design space produces: the 25 MHz Fig 6 grid, 200 MHz DDR3,
+    /// 225/300/333 MHz fabrics). The period is derived purely in
+    /// integers — `(1e9 + mhz/2) / mhz`, i.e. 1e9 fs rounded half-up —
+    /// so a float-rounding drift regression (the old 225 MHz → 4444 ps
+    /// bug, one level down) is impossible by construction: when `mhz`
+    /// divides 1e9 the product `period_fs * mhz` is *exactly* 1e9 fs,
+    /// and otherwise the error is at most mhz/2 fs per 1e9, the best
+    /// any integral period can do.
+    pub fn try_from_mhz(name: &'static str, mhz: f64) -> Result<Self, ClockRateError> {
+        if !(mhz > 0.0) || !mhz.is_finite() {
+            return Err(ClockRateError::NonPositive);
+        }
+        if mhz.fract() != 0.0 {
+            return Err(ClockRateError::NonIntegralMhz);
+        }
+        if mhz > 1_000_000_000.0 {
+            return Err(ClockRateError::PeriodUnderflow);
+        }
+        let m = mhz as u64; // exact: integral and ≤ 1e9
+        let period_fs = (1_000_000_000 + m / 2) / m;
+        debug_assert!(period_fs >= 1);
+        Ok(ClockDomain { name, period_fs, cycles: 0, next_edge_fs: 0 })
+    }
+
+    /// Permissive constructor: exact integer arithmetic for integral
+    /// MHz, nearest-femtosecond float rounding for everything else
+    /// (e.g. a hand-entered `--fabric-mhz 212.5`). Panics on
+    /// non-positive rates and sub-femtosecond periods.
     pub fn from_mhz(name: &'static str, mhz: f64) -> Self {
-        assert!(mhz > 0.0, "clock {name} must have positive frequency");
-        // 1 MHz -> 1e9 fs period.
-        let period_fs = (1_000_000_000.0 / mhz).round() as u64;
-        assert!(period_fs > 0, "clock {name} period underflows 1 fs");
-        ClockDomain { name, period_fs, cycles: 0, next_edge_fs: 0 }
+        match Self::try_from_mhz(name, mhz) {
+            Ok(d) => d,
+            Err(ClockRateError::NonIntegralMhz) => {
+                // 1 MHz -> 1e9 fs period.
+                let period_fs = (1_000_000_000.0 / mhz).round() as u64;
+                assert!(period_fs > 0, "clock {name} period underflows 1 fs");
+                ClockDomain { name, period_fs, cycles: 0, next_edge_fs: 0 }
+            }
+            Err(e) => panic!("clock {name}: {e} (got {mhz} MHz)"),
+        }
     }
 
     pub fn period_fs(&self) -> u64 {
@@ -467,6 +531,59 @@ mod tests {
         assert_eq!(d.period_fs(), 4_444_444);
         assert_eq!(d.period_ps(), 4_444);
         assert!((d.freq_mhz() - 225.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn integral_mhz_periods_are_exact_by_construction() {
+        // Every clock rate the design space can produce: the Fig 6
+        // 25 MHz explorer grid, the DDR3 controller's 200 MHz, and the
+        // fabric rates the tests and tuning tables use.
+        let mut rates: Vec<u64> = (1..=16).map(|i| i * 25).collect(); // 25..=400
+        rates.extend([200, 225, 300, 333, 450, 1, 1000]);
+        for m in rates {
+            let d = ClockDomain::try_from_mhz("p", m as f64)
+                .unwrap_or_else(|e| panic!("{m} MHz: {e}"));
+            let product = d.period_fs() as u128 * m as u128;
+            if 1_000_000_000 % m == 0 {
+                // Representable exactly: period_fs * mhz == 1e9 fs.
+                assert_eq!(product, 1_000_000_000, "{m} MHz not exact");
+            } else {
+                // Best integral period: within half a femtosecond-per-
+                // period of 1e9 fs (i.e. |err| * 2 <= mhz).
+                let err = product.abs_diff(1_000_000_000);
+                assert!(err * 2 <= m as u128, "{m} MHz err {err} fs");
+            }
+            // And the permissive constructor agrees bit-for-bit.
+            assert_eq!(ClockDomain::from_mhz("p", m as f64).period_fs(), d.period_fs());
+        }
+    }
+
+    #[test]
+    fn clock_rate_errors_are_typed() {
+        assert_eq!(
+            ClockDomain::try_from_mhz("z", 0.0).unwrap_err(),
+            ClockRateError::NonPositive
+        );
+        assert_eq!(
+            ClockDomain::try_from_mhz("z", -5.0).unwrap_err(),
+            ClockRateError::NonPositive
+        );
+        assert_eq!(
+            ClockDomain::try_from_mhz("z", f64::NAN).unwrap_err(),
+            ClockRateError::NonPositive
+        );
+        assert_eq!(
+            ClockDomain::try_from_mhz("z", 212.5).unwrap_err(),
+            ClockRateError::NonIntegralMhz
+        );
+        assert_eq!(
+            ClockDomain::try_from_mhz("z", 2e9).unwrap_err(),
+            ClockRateError::PeriodUnderflow
+        );
+        // The permissive constructor still accepts fractional MHz via
+        // nearest-femtosecond rounding (legacy behavior, reporting-only
+        // paths), without drifting the integral-MHz cases.
+        assert_eq!(ClockDomain::from_mhz("z", 212.5).period_fs(), 4_705_882);
     }
 
     #[test]
