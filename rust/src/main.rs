@@ -385,7 +385,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     for (i, t) in report.tenants.iter().enumerate() {
         println!(
             "  tenant {i}: {} arrived, {} completed in {} batches | latency p50 {} p99 {} \
-             max {} cycles | SLO met {}/{} | goodput {:.1} req/s",
+             max {} cycles | SLO met {}/{} | goodput {:.1} req/s{}",
             t.arrived,
             t.completed,
             t.batches,
@@ -395,6 +395,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             t.slo_met,
             t.completed,
             t.goodput_rps(out.now_ps),
+            if t.starved { " | STARVED" } else { "" },
         );
     }
     if let Some(path) = args.get("json") {
@@ -411,12 +412,13 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         for (i, t) in report.tenants.iter().enumerate() {
             s.push_str(&format!(
                 "    {{\"tenant\": {i}, \"arrived\": {}, \"completed\": {}, \"batches\": {}, \
-                 \"slo_met\": {}, \"p50_cycles\": {}, \"p99_cycles\": {}, \"max_cycles\": {}, \
-                 \"goodput_rps\": {:.3}}}{}\n",
+                 \"slo_met\": {}, \"starved\": {}, \"p50_cycles\": {}, \"p99_cycles\": {}, \
+                 \"max_cycles\": {}, \"goodput_rps\": {:.3}}}{}\n",
                 t.arrived,
                 t.completed,
                 t.batches,
                 t.slo_met,
+                t.starved,
                 t.p50_cycles,
                 t.p99_cycles,
                 t.max_cycles,

@@ -389,6 +389,12 @@ pub struct TenantServing {
     pub completed: usize,
     pub batches: usize,
     pub slo_met: usize,
+    /// Requests arrived but zero completed — the tenant was admitted
+    /// and then starved (e.g. wedged by a fault campaign and degraded
+    /// out by the watchdog). When set, the percentile fields below are
+    /// defined as 0 by convention; they summarize an empty series, not
+    /// an instantaneous latency.
+    pub starved: bool,
     pub p50_cycles: u64,
     pub p99_cycles: u64,
     pub max_cycles: u64,
@@ -433,6 +439,7 @@ impl ServingReport {
                 TenantServing {
                     arrived: run.state.arrivals[t].len(),
                     completed: run.completed[t],
+                    starved: run.completed[t] == 0 && !run.state.arrivals[t].is_empty(),
                     batches: run.batches[t],
                     slo_met: run.slo_met[t],
                     p50_cycles: percentile(lats, 50),
@@ -582,6 +589,32 @@ mod tests {
         assert_eq!(report.tenants[0].p50_cycles, 150);
         assert_eq!(report.worst_p99(), 150);
         assert!(report.tenants[0].goodput_rps(1_000_000) == 0.0);
+    }
+
+    #[test]
+    fn starved_tenant_reports_defined_zero_percentiles() {
+        // A tenant admitted (arrivals materialized) but with zero
+        // completions — e.g. wedged by a fault campaign before its
+        // first batch finished — must summarize to defined zeros plus
+        // the starved flag, never a panic or a bogus index.
+        let spec =
+            ServingSpec { arrivals: vec![5, 10], max_batch: 4, ..ServingSpec::default() };
+        let mut run = ServingRun::new(ServingState::build(&spec, 1).unwrap());
+        let mut stats = Stats::default();
+        run.admit(10, &mut stats); // arrived, queued, never dispatched
+        let report = ServingReport::from_run(&run);
+        let t = &report.tenants[0];
+        assert_eq!((t.arrived, t.completed), (2, 0));
+        assert!(t.starved, "zero completions out of {} arrivals", t.arrived);
+        assert_eq!((t.p50_cycles, t.p99_cycles, t.max_cycles), (0, 0, 0));
+        assert_eq!(t.goodput_rps(1_000_000), 0.0);
+        assert_eq!(report.worst_p99(), 0);
+        // A tenant with no arrivals at all is idle, not starved.
+        let empty = ServingRun::new(
+            ServingState::build(&ServingSpec { arrivals: vec![], ..ServingSpec::default() }, 1)
+                .unwrap(),
+        );
+        assert!(!ServingReport::from_run(&empty).tenants[0].starved);
     }
 
     #[test]

@@ -169,6 +169,42 @@ fn serving_composes_with_the_standard_fault_campaign() {
 }
 
 #[test]
+fn wedged_tenant_reports_starved_with_defined_zero_percentiles() {
+    // The empty-series audit: a tenant admitted (its arrival schedule
+    // materialized) but wedged before any batch completes must yield a
+    // defined p50/p99 of 0 plus the starved flag — never a panic or a
+    // bogus percentile index. The degrade policy quiesces the wedged
+    // tenant and ends the run cleanly.
+    let mut sc = Scenario::builtin("serving-poisson").unwrap();
+    sc.faults =
+        medusa::fault::FaultSpec::parse_cli("wedge=0@64,watchdog=512,policy=degrade,seed=11")
+            .unwrap();
+    let full = RunOptions::new().backend(SimBackend::full()).run(&sc).unwrap();
+    let rep = full.serving.as_ref().expect("serving report must exist for a starved tenant");
+    let t0 = &rep.tenants[0];
+    assert_eq!(t0.arrived, 6, "arrivals are materialized up front, wedge or not");
+    assert_eq!(t0.completed, 0, "wedged at cycle 64: nothing may complete");
+    assert!(t0.starved, "zero completions out of {} arrivals must set starved", t0.arrived);
+    assert_eq!(
+        (t0.p50_cycles, t0.p99_cycles, t0.max_cycles, t0.slo_met as u64),
+        (0, 0, 0, 0),
+        "empty latency series must summarize to defined zeros"
+    );
+    assert_eq!(t0.goodput_rps(full.now_ps), 0.0);
+    assert_eq!(rep.worst_p99(), 0);
+    assert!(!full.all_verified(), "the degraded tenant cannot verify");
+    // And the whole composition stays backend-invariant.
+    let fast = RunOptions::new().backend(SimBackend::fast()).run(&sc).unwrap();
+    assert_serving_exact(&full, &fast, "starved tenant under fast backend");
+    // The healthy baseline run does NOT carry the flag.
+    let healthy = RunOptions::new()
+        .backend(SimBackend::full())
+        .run(&Scenario::builtin("serving-poisson").unwrap())
+        .unwrap();
+    assert!(!healthy.serving.as_ref().unwrap().tenants[0].starved);
+}
+
+#[test]
 fn captured_serving_trace_records_spec_and_replays_under_every_backend() {
     let sc = Scenario::builtin("serving-poisson").unwrap();
     let (out, trace) = workload::run_scenario_captured(&sc).unwrap();
