@@ -193,6 +193,14 @@ impl Iterator for FiredIter {
 
 impl ExactSizeIterator for FiredIter {}
 
+/// Maximum number of clock domains [`Scheduler::leap`] supports. The
+/// inclusion–exclusion span accounting enumerates all `2^n - 1` domain
+/// subsets, so this cap keeps the enumeration trivially cheap (at most
+/// 255 subsets) while covering every system the simulator builds —
+/// fabric + DRAM + trunk today, with headroom for per-channel DRAM
+/// clocks.
+pub const MAX_LEAP_DOMAINS: usize = 8;
+
 /// Outcome of one [`Scheduler::leap`]: how much stepwise work the leap
 /// replaced, exactly.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -200,9 +208,9 @@ pub struct Leap {
     /// Distinct edge instants covered — the number of `step()` calls a
     /// stepwise run would have used for the same span.
     pub steps: u64,
-    /// Edges fired per domain index (leaping supports at most two
-    /// domains; unused slots stay 0).
-    pub fired: [u64; 2],
+    /// Edges fired per domain index (leaping supports at most
+    /// [`MAX_LEAP_DOMAINS`] domains; unused slots stay 0).
+    pub fired: [u64; MAX_LEAP_DOMAINS],
 }
 
 fn gcd(mut a: u64, mut b: u64) -> u64 {
@@ -231,36 +239,101 @@ fn mod_inverse(a: u64, m: u64) -> u64 {
     old_s.rem_euclid(m as i128) as u64
 }
 
-/// Count instants `t` with `lo_implied ≤ t ≤ hi` lying on BOTH arithmetic
-/// progressions `a + i*p` (i ≥ 0) and `b + j*q` (j ≥ 0) — the
-/// simultaneous-edge count a leap must subtract so its step accounting
-/// matches stepwise execution (simultaneous edges fire in one step).
-fn coincidences(a: u64, p: u64, b: u64, q: u64, hi: u64) -> u64 {
-    let lo = a.max(b);
-    if lo > hi {
-        return 0;
+/// The edge instants of one clock domain inside a leap window, clipped
+/// to `[0, hi]`: empty, a single instant, or a genuine arithmetic
+/// progression `x0 + i*step` with at least two in-window terms.
+///
+/// The normalization invariant — `Arith` implies `x0 + step <= hi`,
+/// i.e. both operand steps handed to [`intersect`] are `<= hi <=
+/// u64::MAX` — is what keeps the u128 CRT arithmetic overflow-free
+/// across an N-way intersection chain: the combined modulus (the lcm)
+/// of two in-window steps always fits u128, and the moment it exceeds
+/// the window the result collapses to `One`/`Empty`, so moduli never
+/// compound beyond one multiplication.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Prog {
+    Empty,
+    One(u64),
+    Arith { x0: u64, step: u64 },
+}
+
+impl Prog {
+    /// The progression `first + i*period` (`i >= 0`) clipped to `hi`.
+    fn new(first: u64, period: u64, hi: u64) -> Prog {
+        debug_assert!(period >= 1);
+        if first > hi {
+            Prog::Empty
+        } else if hi - first < period {
+            Prog::One(first)
+        } else {
+            Prog::Arith { x0: first, step: period }
+        }
     }
-    let g = gcd(p, q);
-    let diff = a.abs_diff(b);
-    if diff % g != 0 {
-        return 0;
+
+    /// Number of in-window instants.
+    fn count(self, hi: u64) -> u64 {
+        match self {
+            Prog::Empty => 0,
+            Prog::One(x) => {
+                debug_assert!(x <= hi);
+                1
+            }
+            Prog::Arith { x0, step } => (hi - x0) / step + 1,
+        }
     }
-    // qg >= 1 always (g divides q); the qg == 1 degenerate case is
-    // handled inside mod_inverse (returns 0, making t == 0, x0 == a).
-    let qg = q / g;
-    let lcm = (p as u128) * (qg as u128);
-    // x = a + p*t with t ≡ (b - a)/g · inv(p/g) (mod q/g).
-    let dg = ((b as i128 - a as i128) / g as i128).rem_euclid(qg as i128) as u128;
-    let inv = mod_inverse((p / g) % qg, qg) as u128;
-    let t = (dg * inv) % qg as u128;
-    let mut x0 = a as u128 + t * p as u128; // smallest common instant ≥ a
-    if x0 < lo as u128 {
-        x0 += lcm * (lo as u128 - x0).div_ceil(lcm);
+
+    /// Membership test (`t` must already be known in-window).
+    fn contains(self, t: u64) -> bool {
+        match self {
+            Prog::Empty => false,
+            Prog::One(x) => x == t,
+            Prog::Arith { x0, step } => t >= x0 && (t - x0) % step == 0,
+        }
     }
-    if x0 > hi as u128 {
-        0
-    } else {
-        ((hi as u128 - x0) / lcm + 1) as u64
+}
+
+/// Intersect two in-window progressions — the instants where both
+/// domains fire simultaneously. By CRT the result is again a single
+/// progression (with the lcm of the steps as its step), a single
+/// instant, or empty, so N-domain simultaneity reduces to a chain of
+/// pairwise intersections with no loss of exactness.
+fn intersect(a: Prog, b: Prog, hi: u64) -> Prog {
+    match (a, b) {
+        (Prog::Empty, _) | (_, Prog::Empty) => Prog::Empty,
+        (Prog::One(x), o) | (o, Prog::One(x)) => {
+            if o.contains(x) {
+                Prog::One(x)
+            } else {
+                Prog::Empty
+            }
+        }
+        (Prog::Arith { x0: a0, step: p }, Prog::Arith { x0: b0, step: q }) => {
+            let g = gcd(p, q);
+            if a0.abs_diff(b0) % g != 0 {
+                return Prog::Empty;
+            }
+            // qg >= 1 always (g divides q); the qg == 1 degenerate case
+            // is handled inside mod_inverse (returns 0, making t == 0,
+            // x0 == a0 before the advance below).
+            let qg = q / g;
+            let lcm = (p as u128) * (qg as u128);
+            // x = a0 + p*t with t ≡ (b0 - a0)/g · inv(p/g) (mod q/g).
+            let dg = ((b0 as i128 - a0 as i128) / g as i128).rem_euclid(qg as i128) as u128;
+            let inv = mod_inverse((p / g) % qg, qg) as u128;
+            let t = (dg * inv) % qg as u128;
+            let lo = a0.max(b0) as u128;
+            let mut x0 = a0 as u128 + t * p as u128; // smallest common instant ≥ a0
+            if x0 < lo {
+                x0 += lcm * (lo - x0).div_ceil(lcm);
+            }
+            if x0 > hi as u128 {
+                Prog::Empty
+            } else if (hi as u128) - x0 < lcm {
+                Prog::One(x0 as u64)
+            } else {
+                Prog::Arith { x0: x0 as u64, step: lcm as u64 }
+            }
+        }
     }
 }
 
@@ -329,22 +402,27 @@ impl Scheduler {
     }
 
     /// Scheduler steps a stepwise run would use to reach (inclusively)
-    /// the `k`-th future edge of `domain`, and the edges the other
+    /// the `k`-th future edge of `domain`, and the edges every other
     /// domain fires on the way. Pure accounting; no state change.
     ///
-    /// Hard-guarded: the pairwise coincidence subtraction below is only
-    /// exact for ≤ 2 domains, and a silently wrong step count here
-    /// would corrupt every leap-vs-stepwise contract downstream. The
-    /// public guard in [`Scheduler::leap`] refuses >2-domain schedulers
-    /// up front; this assert keeps any future internal caller honest in
-    /// release builds too (it was previously a `debug_assert`, i.e. a
-    /// latent release-mode correctness hole).
-    fn span_for(&self, domain: usize, k: u64) -> (u64, [u64; 2]) {
+    /// Exact for any domain count up to [`MAX_LEAP_DOMAINS`]: a
+    /// stepwise run spends one `step()` per *distinct* edge instant
+    /// (simultaneous edges fire together), so the step count is the
+    /// size of the union of the per-domain instant sets in the window —
+    /// counted by inclusion–exclusion over every non-empty domain
+    /// subset, each subset's simultaneity being a single arithmetic
+    /// progression by CRT ([`intersect`]). The public guard in
+    /// [`Scheduler::leap`] refuses larger schedulers up front; the hard
+    /// assert (not `debug_assert` — that was a latent release-mode
+    /// hole) keeps any future internal caller honest in release builds
+    /// too, because a silently wrong count here would corrupt every
+    /// leap-vs-stepwise contract downstream.
+    fn span_for(&self, domain: usize, k: u64) -> (u64, [u64; MAX_LEAP_DOMAINS]) {
         assert!(k >= 1, "span_for needs k >= 1");
         assert!(
-            self.domains.len() <= 2,
-            "span_for: exact simultaneity accounting covers at most 2 domains \
-             ({} configured); leap must refuse instead of miscounting",
+            self.domains.len() <= MAX_LEAP_DOMAINS,
+            "span_for: exact simultaneity accounting covers at most {MAX_LEAP_DOMAINS} \
+             domains ({} configured); leap must refuse instead of miscounting",
             self.domains.len()
         );
         let d = &self.domains[domain];
@@ -352,25 +430,36 @@ impl Scheduler {
             .next_edge_fs
             .checked_add((k - 1).checked_mul(d.period_fs).expect("leap span overflow"))
             .expect("leap span overflowed u64 femtoseconds");
-        let mut fired = [0u64; 2];
-        fired[domain] = k;
-        let mut steps = k;
-        if self.domains.len() == 2 {
-            let other = 1 - domain;
-            let o = &self.domains[other];
-            if o.next_edge_fs <= t_stop {
-                let m = (t_stop - o.next_edge_fs) / o.period_fs + 1;
-                fired[other] = m;
-                steps += m;
-                steps -= coincidences(
-                    d.next_edge_fs,
-                    d.period_fs,
-                    o.next_edge_fs,
-                    o.period_fs,
-                    t_stop,
-                );
+        let n = self.domains.len();
+        let mut fired = [0u64; MAX_LEAP_DOMAINS];
+        let mut single = [Prog::Empty; MAX_LEAP_DOMAINS];
+        for (i, o) in self.domains.iter().enumerate() {
+            single[i] = Prog::new(o.next_edge_fs, o.period_fs, t_stop);
+            fired[i] = single[i].count(t_stop);
+        }
+        debug_assert_eq!(fired[domain], k, "t_stop is domain's k-th edge by construction");
+        // |A_1 ∪ … ∪ A_n| by inclusion–exclusion. Each subset's
+        // intersection is memoized from the subset without its lowest
+        // bit, so every mask costs one pairwise `intersect`. Fixed
+        // stack storage — this runs inside the hot loop's leap path,
+        // which must stay allocation-free.
+        let mut progs = [Prog::Empty; 1 << MAX_LEAP_DOMAINS];
+        let mut steps = 0i128;
+        for mask in 1usize..(1usize << n) {
+            let low = mask.trailing_zeros() as usize;
+            let rest = mask & (mask - 1);
+            let prog =
+                if rest == 0 { single[low] } else { intersect(progs[rest], single[low], t_stop) };
+            progs[mask] = prog;
+            let c = prog.count(t_stop) as i128;
+            if mask.count_ones() % 2 == 1 {
+                steps += c;
+            } else {
+                steps -= c;
             }
         }
+        let steps = u64::try_from(steps).expect("inclusion–exclusion count cannot go negative");
+        debug_assert!(steps >= k);
         (steps, fired)
     }
 
@@ -385,13 +474,14 @@ impl Scheduler {
     /// `max_steps` bounds the stepwise-step budget: if covering all `k`
     /// edges would exceed it, the leap shrinks to the largest prefix
     /// that fits. Returns `None` (and changes nothing) when no edge
-    /// fits, or when the scheduler has more than two domains (exact
-    /// simultaneity accounting is implemented for the paper's
-    /// fabric+controller pair; more domains fall back to stepping).
+    /// fits, or when the scheduler has more than [`MAX_LEAP_DOMAINS`]
+    /// domains (the inclusion–exclusion simultaneity accounting in
+    /// `span_for` is exact up to that cap; larger schedulers fall back
+    /// to stepping).
     ///
     /// [`step`]: Scheduler::step
     pub fn leap(&mut self, domain: usize, k: u64, max_steps: u64) -> Option<Leap> {
-        if self.domains.len() > 2 || k == 0 || max_steps == 0 {
+        if self.domains.len() > MAX_LEAP_DOMAINS || k == 0 || max_steps == 0 {
             return None;
         }
         // A span of k domain edges always costs >= k steps, so k can be
@@ -602,7 +692,10 @@ mod tests {
     fn assert_leap_matches_steps(mhz: &[f64], warm: u64, domain: usize, k: u64) {
         let mk = || {
             let mut s = Scheduler::new(
-                mhz.iter().enumerate().map(|(i, &m)| ClockDomain::from_mhz(["a", "b"][i], m)).collect(),
+                mhz.iter()
+                    .enumerate()
+                    .map(|(i, &m)| ClockDomain::from_mhz(["a", "b", "c", "d"][i], m))
+                    .collect(),
             );
             for _ in 0..warm {
                 s.step();
@@ -642,7 +735,57 @@ mod tests {
                 assert_leap_matches_steps(&[225.0], warm, 0, k);
                 // Irrational-ish pair: periods share only tiny factors.
                 assert_leap_matches_steps(&[333.0, 200.0], warm, 0, k);
+                // Three domains — the hierarchical cluster/trunk/DRAM
+                // shape — leaping on each domain in turn.
+                for dom in 0..3 {
+                    assert_leap_matches_steps(&[225.0, 300.0, 200.0], warm, dom, k);
+                }
+                assert_leap_matches_steps(&[100.0, 100.0, 100.0], warm, 1, k);
+                assert_leap_matches_steps(&[200.0, 100.0, 50.0], warm, 2, k);
+                // Four domains, minimal shared factors.
+                assert_leap_matches_steps(&[333.0, 200.0, 225.0, 300.0], warm, 3, k);
             }
+        }
+    }
+
+    #[test]
+    fn beyond_max_leap_domains_refuses_untouched() {
+        let mk = || {
+            Scheduler::new(
+                (0..MAX_LEAP_DOMAINS + 1)
+                    .map(|i| ClockDomain::from_mhz("x", (100 + 25 * i) as f64))
+                    .collect(),
+            )
+        };
+        let mut s = mk();
+        assert!(s.leap(0, 10, u64::MAX).is_none(), "beyond the cap must refuse");
+        // Refusal leaves the scheduler bit-identical to a fresh one.
+        let mut fresh = mk();
+        assert_eq!(s.now_fs(), fresh.now_fs());
+        for _ in 0..32 {
+            assert_eq!(s.step(), fresh.step());
+        }
+        // At the cap itself, leaping works and stays exact.
+        let mhz: Vec<f64> = (0..MAX_LEAP_DOMAINS).map(|i| (100 + 25 * i) as f64).collect();
+        let names = ["d0", "d1", "d2", "d3", "d4", "d5", "d6", "d7"];
+        let mk8 = || {
+            Scheduler::new(
+                mhz.iter()
+                    .enumerate()
+                    .map(|(i, &m)| ClockDomain::from_mhz(names[i], m))
+                    .collect(),
+            )
+        };
+        let mut a = mk8();
+        let mut b = mk8();
+        let leap = a.leap(0, 50, u64::MAX).expect("8 domains are within the cap");
+        assert_eq!(leap.fired[0], 50);
+        for _ in 0..leap.steps {
+            b.step();
+        }
+        assert_eq!(a.now_fs(), b.now_fs());
+        for i in 0..MAX_LEAP_DOMAINS {
+            assert_eq!(a.domain(i).cycles, b.domain(i).cycles, "domain {i}");
         }
     }
 
@@ -735,6 +878,12 @@ mod tests {
         }
     }
 
+    /// Pairwise simultaneity count through the same Prog/intersect
+    /// machinery `span_for` chains — the 2-domain special case.
+    fn coincidences(a: u64, p: u64, b: u64, q: u64, hi: u64) -> u64 {
+        intersect(Prog::new(a, p, hi), Prog::new(b, q, hi), hi).count(hi)
+    }
+
     #[test]
     fn coincidence_counting_matches_brute_force() {
         // Cross-check the CRT against direct enumeration on small grids.
@@ -750,6 +899,59 @@ mod tests {
                 .filter(|&t| t >= a && t >= b && (t - a) % p == 0 && (t - b) % q == 0)
                 .count() as u64;
             assert_eq!(coincidences(a, p, b, q, hi), brute, "({a},{p},{b},{q},{hi})");
+        }
+    }
+
+    #[test]
+    fn n_domain_union_counting_matches_brute_force() {
+        // The N-domain counting path: inclusion–exclusion over every
+        // non-empty subset, chained through `intersect`, cross-checked
+        // against direct enumeration. Fixed cases cover the degenerate
+        // shapes (identical periods, qg == 1 divisor chains, coprime
+        // and non-coprime triples); the seeded sweep covers random 3–4
+        // domain grids.
+        let mut cases: Vec<Vec<(u64, u64)>> = vec![
+            vec![(0, 3), (0, 5), (0, 7)],            // pairwise coprime
+            vec![(2, 4), (6, 6), (4, 8)],            // shared factors
+            vec![(1, 5), (1, 5), (1, 5)],            // identical progressions
+            vec![(3, 5), (1, 5), (4, 5)],            // equal periods, offsets
+            vec![(0, 2), (0, 4), (0, 8)],            // qg == 1 divisor chain
+            vec![(3, 9), (0, 3), (12, 27)],          // nested multiples, offset
+            vec![(5, 10), (5, 15), (5, 6), (5, 35)], // 4-way, common origin
+            vec![(7, 11), (3, 13), (0, 17), (1, 2)], // 4-way coprime
+            vec![(40, 3), (0, 1), (200, 7)],         // one starts past small hi
+        ];
+        let mut prng = crate::util::Prng::new(0xC10C);
+        for _ in 0..64 {
+            let n = 3 + (prng.below(2) as usize);
+            cases.push((0..n).map(|_| (prng.below(24), 1 + prng.below(12))).collect());
+        }
+        for case in &cases {
+            for hi in [0u64, 1, 17, 100, 251] {
+                let brute = (0..=hi)
+                    .filter(|&t| case.iter().any(|&(a, p)| t >= a && (t - a) % p == 0))
+                    .count() as u64;
+                let mut counted = 0i128;
+                for mask in 1usize..(1 << case.len()) {
+                    let mut prog: Option<Prog> = None;
+                    for (i, &(a, p)) in case.iter().enumerate() {
+                        if mask & (1 << i) != 0 {
+                            let s = Prog::new(a, p, hi);
+                            prog = Some(match prog {
+                                None => s,
+                                Some(q) => intersect(q, s, hi),
+                            });
+                        }
+                    }
+                    let c = prog.unwrap().count(hi) as i128;
+                    if mask.count_ones() % 2 == 1 {
+                        counted += c;
+                    } else {
+                        counted -= c;
+                    }
+                }
+                assert_eq!(counted as u64, brute, "{case:?} hi {hi}");
+            }
         }
     }
 

@@ -623,8 +623,9 @@ mod fast_backend_props {
 
     #[derive(Clone, Debug)]
     struct LeapCase {
-        mhz_a: usize,
-        mhz_b: usize,
+        /// 2–4 clock rates (the N-domain generalization: fabric+mem,
+        /// plus trunk and one more when present).
+        mhz: Vec<usize>,
         warm: usize,
         k: usize,
     }
@@ -633,9 +634,9 @@ mod fast_backend_props {
 
     impl Gen<LeapCase> for LeapGen {
         fn generate(&self, rng: &mut Prng) -> LeapCase {
+            let n = rng.range(2, 4);
             LeapCase {
-                mhz_a: rng.range(25, 450),
-                mhz_b: rng.range(25, 450),
+                mhz: (0..n).map(|_| rng.range(25, 450)).collect(),
                 warm: rng.range(0, 32),
                 k: rng.range(1, 5000),
             }
@@ -650,19 +651,26 @@ mod fast_backend_props {
             if c.warm > 0 {
                 out.push(LeapCase { warm: 0, ..c.clone() });
             }
+            if c.mhz.len() > 2 {
+                out.push(LeapCase { mhz: c.mhz[..c.mhz.len() - 1].to_vec(), ..c.clone() });
+            }
             out
         }
     }
 
     #[test]
     fn prop_scheduler_leap_equals_stepping() {
+        const NAMES: [&str; 4] = ["a", "b", "c", "d"];
         check(Config { cases: 96, ..Config::default() }, &LeapGen, |c: &LeapCase| {
-            for domain in [0usize, 1] {
+            for domain in 0..c.mhz.len() {
                 let mk = || {
-                    let mut s = Scheduler::new(vec![
-                        ClockDomain::from_mhz("a", c.mhz_a as f64),
-                        ClockDomain::from_mhz("b", c.mhz_b as f64),
-                    ]);
+                    let mut s = Scheduler::new(
+                        c.mhz
+                            .iter()
+                            .enumerate()
+                            .map(|(i, &m)| ClockDomain::from_mhz(NAMES[i], m as f64))
+                            .collect(),
+                    );
                     for _ in 0..c.warm {
                         s.step();
                     }
@@ -686,7 +694,7 @@ mod fast_backend_props {
                         stepped.now_fs()
                     ));
                 }
-                for d in 0..2 {
+                for d in 0..c.mhz.len() {
                     if leaped.domain(d).cycles != stepped.domain(d).cycles {
                         return Err(format!("domain {d} cycle drift ({c:?})"));
                     }
