@@ -210,6 +210,10 @@ impl SystemConfig {
             hc.validate(&self.geometry)
                 .with_context(|| format!("hybrid design {:?} on this geometry", hc))?;
         }
+        if let Design::Hierarchical(hc) = self.design {
+            hc.validate(&self.geometry)
+                .with_context(|| format!("hierarchical design {:?} on this geometry", hc))?;
+        }
         anyhow::ensure!(self.dotprod_units >= 1, "need at least one dot-product unit");
         anyhow::ensure!(self.mem_clock_mhz > 0.0, "mem clock must be positive");
         if let Some(f) = self.fabric_clock_mhz {
@@ -478,6 +482,26 @@ ddr3_timing = true
         );
         // Radix above W_line/W_acc fails validation with the geometry.
         let bad = "[system]\ndesign = \"hybrid:r64\"\n[geometry]\nw_line = 512\n";
+        assert!(SystemConfig::from_str(bad).is_err());
+    }
+
+    #[test]
+    fn hierarchical_design_parses_and_validates_against_geometry() {
+        use crate::interconnect::hierarchical::HierConfig;
+        let text = "[system]\ndesign = \"hierarchical:l3:c8:b0:t450\"\n[geometry]\nw_line = 512\n";
+        let cfg = SystemConfig::from_str(text).unwrap();
+        assert_eq!(
+            cfg.design,
+            Design::Hierarchical(HierConfig {
+                levels: 3,
+                cluster_ports: 8,
+                bypass_ports: 0,
+                trunk_mhz: 450
+            })
+        );
+        // Cluster size that does not divide the port count fails with
+        // the geometry.
+        let bad = "[system]\ndesign = \"hierarchical:c5\"\n[geometry]\nw_line = 512\n";
         assert!(SystemConfig::from_str(bad).is_err());
     }
 

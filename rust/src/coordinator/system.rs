@@ -19,6 +19,10 @@ use anyhow::Result;
 const DOM_FABRIC: usize = 0;
 /// Memory-controller domain index.
 const DOM_MEM: usize = 1;
+/// Trunk-bus domain index (hierarchical designs only; systems without a
+/// trunk register two domains and `Leap::fired[DOM_TRUNK]` stays 0, so
+/// the bulk-apply below is unconditionally safe).
+const DOM_TRUNK: usize = 2;
 
 pub struct System {
     pub cfg: SystemConfig,
@@ -43,6 +47,8 @@ pub struct System {
     pub stats: Stats,
     fabric_cycles: u64,
     mem_cycles: u64,
+    /// Trunk-clock edges elapsed (always 0 on designs without a trunk).
+    trunk_cycles: u64,
     /// The materialized fault schedule (disabled by default; see
     /// [`System::install_faults`]).
     faults: FaultState,
@@ -174,16 +180,27 @@ impl System {
                     lp
                 })
                 .collect(),
-            sched: Scheduler::new(vec![
-                ClockDomain::from_mhz("fabric", fabric_mhz),
-                ClockDomain::from_mhz("mem", cfg.mem_clock_mhz),
-            ]),
+            sched: {
+                let mut domains = vec![
+                    ClockDomain::from_mhz("fabric", fabric_mhz),
+                    ClockDomain::from_mhz("mem", cfg.mem_clock_mhz),
+                ];
+                // Hierarchical designs carry the trunk clock in the
+                // design spec itself (so trace headers replay it with
+                // zero extra plumbing); it becomes a third scheduler
+                // domain.
+                if let Design::Hierarchical(hc) = cfg.design {
+                    domains.push(ClockDomain::from_mhz("trunk", hc.trunk_mhz as f64));
+                }
+                Scheduler::new(domains)
+            },
             cmd_ch: Channel::new("cmd", depths.cmd),
             rd_line_ch: Channel::new("rd_lines", depths.rd_line),
             wr_data_ch: Channel::new("wr_lines", depths.wr_data),
             stats: Stats::new(),
             fabric_cycles: 0,
             mem_cycles: 0,
+            trunk_cycles: 0,
             faults: FaultState::none(),
             quiesced: vec![false; groups.len()],
             any_quiesced: false,
@@ -235,9 +252,14 @@ impl System {
         let mut s = String::new();
         let _ = writeln!(
             s,
-            "  clocks: fabric={} cycles, mem={} cycles, t={} ps",
+            "  clocks: fabric={} cycles, mem={} cycles{}, t={} ps",
             self.fabric_cycles,
             self.mem_cycles,
+            if matches!(self.cfg.design, Design::Hierarchical(_)) {
+                format!(", trunk={} cycles", self.trunk_cycles)
+            } else {
+                String::new()
+            },
             self.now_ps()
         );
         let _ = writeln!(
@@ -295,6 +317,11 @@ impl System {
         self.mem_cycles
     }
 
+    /// Trunk-clock edges elapsed (0 on designs without a trunk domain).
+    pub fn trunk_cycles(&self) -> u64 {
+        self.trunk_cycles
+    }
+
     pub fn now_ps(&self) -> u64 {
         self.sched.now_ps()
     }
@@ -311,6 +338,9 @@ impl System {
         }
         if fired.contains(DOM_MEM) {
             self.mem_edge();
+        }
+        if fired.contains(DOM_TRUNK) {
+            self.trunk_edge();
         }
     }
 
@@ -411,6 +441,11 @@ impl System {
         let leap = self.sched.leap(DOM_FABRIC, k, max_steps)?;
         let fab = leap.fired[DOM_FABRIC];
         let mem = leap.fired[DOM_MEM];
+        // Trunk edges over an idle span are pure no-ops (the networks'
+        // is_leap_idle gate requires the trunk queues empty), so the
+        // counter bump is the entire bulk-apply. `fired[DOM_TRUNK]` is
+        // 0 on two-domain systems.
+        self.trunk_cycles += leap.fired[DOM_TRUNK];
         // Bulk-apply exactly what the skipped edges would have done:
         // fabric edges advance compute countdowns, memory edges bump
         // the controller's idle counter — except the memory edges that
@@ -529,6 +564,16 @@ impl System {
         // 5. Commit fabric-side channel pushes.
         self.cmd_ch.commit();
         self.wr_data_ch.commit();
+    }
+
+    /// One trunk-clock edge: both networks advance their trunk
+    /// pipelines. Only reachable on hierarchical designs (the trunk
+    /// domain exists only when the design registered one); flat
+    /// networks' default `trunk_tick` is a no-op regardless.
+    fn trunk_edge(&mut self) {
+        self.trunk_cycles += 1;
+        self.rd_net.trunk_tick(&mut self.stats);
+        self.wr_net.trunk_tick(&mut self.stats);
     }
 
     fn mem_edge(&mut self) {

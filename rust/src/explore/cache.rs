@@ -13,7 +13,7 @@
 //! files are deterministic, diffable, and trivially inspectable:
 //!
 //! ```text
-//! medusa-explore-cache v5
+//! medusa-explore-cache v6
 //! <key:016x> <lut> <ff> <bram18> <dsp> <fmax> <lines> <bits> <ps> <cycles> <verified> <serving_p99>
 //! ```
 //!
@@ -32,12 +32,14 @@ use std::path::{Path, PathBuf};
 
 /// Bump on any change to the resource/timing models, the probe scenario
 /// semantics, the evaluation backend, or the entry layout — stale
-/// entries must never be served. v5: entries grew a `serving_p99`
-/// column and keys a serving-spec component (PR 7); pre-serving caches
-/// have no such column, so they are discarded wholesale.
-pub const CACHE_VERSION: u64 = 5;
+/// entries must never be served. v6: the hierarchical family joined the
+/// grid (PR 8) — the enumeration order behind every cached sweep
+/// changed, and older binaries cannot parse `hierarchical:*` specs, so
+/// pre-hierarchy caches are discarded wholesale. v5: entries grew a
+/// `serving_p99` column and keys a serving-spec component (PR 7).
+pub const CACHE_VERSION: u64 = 6;
 
-const HEADER: &str = "medusa-explore-cache v5";
+const HEADER: &str = "medusa-explore-cache v6";
 
 /// Stable identity hash of one (point, probe, payload-mode, serving)
 /// evaluation.

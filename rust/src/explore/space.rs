@@ -1,8 +1,9 @@
 //! The explorable design space and the evaluation of one point.
 //!
 //! A point is a full accelerator design: an interconnect design (the
-//! baseline, Medusa, or an intermediate hybrid family member), a
-//! geometry, a layer-processor size, and the CDC channel depths. Its
+//! baseline, Medusa, an intermediate hybrid family member, or a
+//! clustered hierarchical member), a geometry, a layer-processor size,
+//! and the CDC channel depths. Its
 //! measured quantities come from the same models the paper evaluation
 //! uses — the analytical resource roll-up, the 25 MHz P&R frequency
 //! search — plus one the paper never reports: *achieved* bandwidth,
@@ -13,6 +14,7 @@ use crate::config::{ChannelDepths, SimBackend, SystemConfig};
 use crate::fpga::par::search_peak_frequency;
 use crate::fpga::timing::TimingModel;
 use crate::fpga::{DesignPoint, Device, Resources};
+use crate::interconnect::hierarchical::HierConfig;
 use crate::interconnect::hybrid::HybridConfig;
 use crate::interconnect::Design;
 use crate::serving::ServingSpec;
@@ -136,7 +138,7 @@ pub struct DesignSpace {
 
 impl DesignSpace {
     /// The default grid: 5 port counts x up to 2 widths x 2 channel
-    /// depths x the full design family per geometry — 116 points, ≥ 100
+    /// depths x the full design family per geometry — 144 points, ≥ 100
     /// as the PR 4 acceptance floor requires (locked by a test).
     pub fn default_grid() -> Self {
         DesignSpace {
@@ -163,10 +165,11 @@ impl DesignSpace {
 
     /// The interconnect designs explored on one geometry, in canonical
     /// order: baseline, intermediate hybrid radices ascending (each
-    /// unpipelined and fully pipelined), Medusa. The radix endpoints are
-    /// the plain designs themselves (`interconnect::hybrid` instantiates
-    /// exactly these datapaths there), so listing them as hybrids too
-    /// would only duplicate points.
+    /// unpipelined and fully pipelined), hierarchical depths ascending
+    /// (where the port count supports >= 2 clusters), Medusa. The radix
+    /// endpoints are the plain designs themselves (`interconnect::hybrid`
+    /// instantiates exactly these datapaths there), so listing them as
+    /// hybrids too would only duplicate points.
     pub fn designs_for(geom: &Geometry) -> Vec<Design> {
         let n = geom.words_per_line();
         let mut out = vec![Design::Baseline];
@@ -180,6 +183,18 @@ impl DesignSpace {
                 }));
             }
             r *= 2;
+        }
+        // Four clusters of ports/4 each — the densest division every
+        // grid port count supports; two trunk depths.
+        if geom.read_ports >= 8 && geom.read_ports % 4 == 0 {
+            for levels in [2usize, 3] {
+                out.push(Design::Hierarchical(HierConfig {
+                    levels,
+                    cluster_ports: geom.read_ports / 4,
+                    bypass_ports: 0,
+                    trunk_mhz: 300,
+                }));
+            }
         }
         out.push(Design::Medusa);
         out
@@ -339,8 +354,10 @@ mod tests {
         assert!(pts.iter().any(|p| matches!(p.design, Design::Hybrid(_))));
         for p in &pts {
             p.geometry.validate().unwrap();
-            if let Design::Hybrid(hc) = p.design {
-                hc.validate(&p.geometry).unwrap();
+            match p.design {
+                Design::Hybrid(hc) => hc.validate(&p.geometry).unwrap(),
+                Design::Hierarchical(hc) => hc.validate(&p.geometry).unwrap(),
+                _ => {}
             }
         }
     }
@@ -364,6 +381,11 @@ mod tests {
             pts.len()
         );
         assert!(pts.iter().all(|p| p.geometry.read_ports <= 8));
+        // The CI smoke gate must exercise the hierarchical family too.
+        assert!(
+            pts.iter().any(|p| matches!(p.design, Design::Hierarchical(_))),
+            "smoke grid lost its hierarchical points"
+        );
     }
 
     #[test]
@@ -372,7 +394,11 @@ mod tests {
         let designs = DesignSpace::designs_for(&g); // N = 16
         assert_eq!(designs.first(), Some(&Design::Baseline));
         assert_eq!(designs.last(), Some(&Design::Medusa));
-        assert_eq!(designs.len(), 2 + 2 * 2); // r in {4, 8}, two pipeline variants
+        // r in {4, 8} x two pipeline variants, then two trunk depths.
+        assert_eq!(designs.len(), 2 + 2 * 2 + 2);
+        assert!(designs[designs.len() - 3..designs.len() - 1]
+            .iter()
+            .all(|d| matches!(d, Design::Hierarchical(_))));
     }
 
     #[test]
@@ -408,6 +434,12 @@ mod tests {
             Design::Baseline,
             Design::Medusa,
             Design::Hybrid(HybridConfig::default()),
+            Design::Hierarchical(HierConfig {
+                levels: 2,
+                cluster_ports: 4,
+                bypass_ports: 0,
+                trunk_mhz: 300,
+            }),
         ] {
             let pt = ExplorePoint { design, geometry: g, dpus: 16, channel_depth: 8 };
             let full = RunOptions::new().backend(SimBackend::full()).evaluate(&pt, "gemm-mlp");

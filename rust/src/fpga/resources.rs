@@ -329,6 +329,56 @@ pub fn axis_write(g: &Geometry) -> Resources {
 }
 
 // ---------------------------------------------------------------------------
+// Hierarchical (clustered) family
+
+/// Shared trunk arbiter/credit control per cluster (head-of-line
+/// bookkeeping, credit counters, round-robin pointer).
+const HIER_CLUSTER_CTRL_LUT: u64 = 40;
+const HIER_CLUSTER_CTRL_FF: u64 = 24;
+
+/// Hierarchical read network: one calibrated Medusa transposer per
+/// cluster (plus one for the bypass group when present), a `W_line`-wide
+/// trunk distribution mux across the clusters, and `levels - 1` trunk
+/// pipeline register stages (one per hierarchy level crossed).
+pub fn hierarchical_read(g: &Geometry, hc: &crate::interconnect::hierarchical::HierConfig) -> Resources {
+    let w = g.w_line as u64;
+    let n_clusters = hc.clusters(g.read_ports) as u64;
+    let mut r = Resources::default();
+    let sub = hc.sub_geom(g, hc.cluster_ports);
+    for _ in 0..n_clusters {
+        r += medusa_read(&sub);
+    }
+    if hc.bypass_ports > 0 {
+        r += medusa_read(&hc.sub_geom(g, hc.bypass_ports));
+    }
+    // Trunk: line-wide (n_clusters):1 steering plus per-level registers.
+    let trunk_mux2 = w * (n_clusters - 1);
+    r.lut += (trunk_mux2 as f64 * LUT_PER_MUX2) as u64 + HIER_CLUSTER_CTRL_LUT * n_clusters;
+    r.ff += w * hc.trunk_crossing() + HIER_CLUSTER_CTRL_FF * n_clusters;
+    r
+}
+
+/// Hierarchical write network (mirror of [`hierarchical_read`]: per-port
+/// staging registers on the memory side replace the distribution mux's
+/// output register, same trunk pipeline).
+pub fn hierarchical_write(g: &Geometry, hc: &crate::interconnect::hierarchical::HierConfig) -> Resources {
+    let w = g.w_line as u64;
+    let n_clusters = hc.clusters(g.write_ports) as u64;
+    let mut r = Resources::default();
+    let sub = hc.sub_geom(g, hc.cluster_ports);
+    for _ in 0..n_clusters {
+        r += medusa_write(&sub);
+    }
+    if hc.bypass_ports > 0 {
+        r += medusa_write(&hc.sub_geom(g, hc.bypass_ports));
+    }
+    let trunk_mux2 = w * (n_clusters - 1);
+    r.lut += (trunk_mux2 as f64 * LUT_PER_MUX2) as u64 + HIER_CLUSTER_CTRL_LUT * n_clusters;
+    r.ff += w * hc.trunk_crossing() + HIER_CLUSTER_CTRL_FF * n_clusters;
+    r
+}
+
+// ---------------------------------------------------------------------------
 // Layer processor (the paper's §IV-A convolutional layer processor)
 
 /// Buffer depths from §IV-A, "suitable for VGGNet and similar CNNs".
@@ -375,6 +425,7 @@ pub fn full_design(
         Design::Medusa => (medusa_read(g), medusa_write(g)),
         Design::Axis => (axis_read(g), axis_write(g)),
         Design::Hybrid(hc) => (hybrid_read(g, &hc), hybrid_write(g, &hc)),
+        Design::Hierarchical(hc) => (hierarchical_read(g, &hc), hierarchical_write(g, &hc)),
     };
     layer_processor(dpus) + rd + wr
 }
@@ -552,6 +603,31 @@ mod tests {
         };
         assert!(lut_of(4) < lut_of(1), "wider control groups must shed decode LUTs");
         assert!(lut_of(8) <= lut_of(4));
+    }
+
+    #[test]
+    fn hierarchical_model_counts_clusters_trunk_and_bypass() {
+        use crate::interconnect::hierarchical::HierConfig;
+        let g = table2_geom(); // 32 ports a side
+        let hc = HierConfig { levels: 2, cluster_ports: 8, bypass_ports: 0, trunk_mhz: 300 };
+        let h = hierarchical_read(&g, &hc) + hierarchical_write(&g, &hc);
+        let flat = medusa_read(&g) + medusa_write(&g);
+        // The hierarchy replicates the rotator per cluster: it buys
+        // locality (see fpga::timing) with logic, never for free.
+        assert!(h.lut > flat.lut, "hier {} !> flat {}", h.lut, flat.lut);
+        assert!(h.bram18 > 0);
+        // More levels = more trunk pipeline registers, nothing else.
+        let deep = HierConfig { levels: 4, ..hc };
+        let hd = hierarchical_read(&g, &deep) + hierarchical_write(&g, &deep);
+        assert_eq!(hd.lut, h.lut);
+        assert_eq!(hd.ff, h.ff + 2 * 2 * g.w_line as u64);
+        // Carving bypass ports out of a cluster costs extra: the bypass
+        // group is a whole additional transposer instance.
+        let byp = HierConfig { cluster_ports: 8, bypass_ports: 8, ..hc }; // 3 clusters + bypass
+        let hb = hierarchical_read(&g, &byp);
+        let three_plus_one = HierConfig { cluster_ports: 8, bypass_ports: 0, ..hc };
+        let four_even = hierarchical_read(&g, &three_plus_one);
+        assert!(hb.bram18 == four_even.bram18, "same total transposer count, same BRAM");
     }
 
     #[test]

@@ -98,6 +98,14 @@ impl TimingModel {
                 let fine_levels = ceil_log2(chunks).div_ceil(2) as f64;
                 self.t_ff_ns + self.t_bram_ns + (rot_levels + fine_levels + 1.0) * self.t_lut_ns
             }
+            Design::Hierarchical(_) => {
+                // A cluster's path is Medusa's (BRAM read + one rotator
+                // stage + staging) plus the trunk distribution mux —
+                // one extra LUT level. Trunk segments are registered
+                // once per hierarchy level, so depth never lengthens
+                // the combinational path.
+                self.t_ff_ns + self.t_bram_ns + 3.0 * self.t_lut_ns
+            }
         }
     }
 
@@ -135,6 +143,26 @@ impl TimingModel {
                 (
                     w * (stages + 2.0) + p.geometry.w_acc as f64 * ports * chunks,
                     loc * loc,
+                )
+            }
+            Design::Hierarchical(hc) => {
+                // Each cluster's rotator competes only for its own
+                // placement region's routing (the cluster regions tile
+                // the die, supply pro-rated), so the hotspot demand is
+                // one cluster's worth of Medusa wiring over its few
+                // local ports — its spread de-rate shrinks with the
+                // cluster's share of the machine. The only die-crossing
+                // wiring left is the trunk: a single W_line bus whose
+                // segments are registered every level, but which spreads
+                // like the baseline's wide buses as the die fills.
+                let stages = n_words.log2().ceil().max(1.0);
+                let cp = hc.cluster_ports as f64;
+                let loc = 1.0 + 0.25 * u * (cp / ports).min(1.0);
+                let die = 1.0 + 0.8 * u;
+                (
+                    (w * (stages + 2.0) + p.geometry.w_acc as f64 * cp) * loc * loc
+                        + w * die * die,
+                    1.0,
                 )
             }
         };
@@ -320,6 +348,52 @@ mod tests {
             ..DesignPoint::fig6_step(Design::Medusa, 6)
         };
         assert!(peak_frequency(&mk(3)) >= peak_frequency(&mk(0)));
+    }
+
+    #[test]
+    fn hierarchical_closes_timing_where_baseline_collapses() {
+        use crate::interconnect::hierarchical::HierConfig;
+        // 1024-bit region (steps 7..=10, 36..48 ports): the baseline is
+        // barely usable; clustered transposers keep the wide wiring
+        // local and only the registered trunk crosses the die, so the
+        // hierarchy stays in fabric-clock territory.
+        for step in 7usize..=10 {
+            let b = DesignPoint::fig6_step(Design::Baseline, step);
+            let hc = HierConfig { levels: 2, cluster_ports: 4, bypass_ports: 0, trunk_mhz: 300 };
+            let h = DesignPoint { design: Design::Hierarchical(hc), ..b };
+            assert!(peak_frequency(&b) <= 50, "step {step}");
+            assert!(
+                peak_frequency(&h) >= 150,
+                "step {step}: hierarchical got {} MHz",
+                peak_frequency(&h)
+            );
+        }
+    }
+
+    #[test]
+    fn hierarchical_pays_the_trunk_mux_but_never_the_depth() {
+        use crate::interconnect::hierarchical::HierConfig;
+        let mk = |step: usize, levels: usize, cp: usize| {
+            let hc = HierConfig { levels, cluster_ports: cp, bypass_ports: 0, trunk_mhz: 300 };
+            DesignPoint { design: Design::Hierarchical(hc), ..DesignPoint::fig6_step(Design::Medusa, step) }
+        };
+        for step in [0usize, 2, 6, 10] {
+            // One extra LUT level (the trunk distribution mux) means the
+            // hierarchy never out-clocks the flat transposer it clusters.
+            let m = DesignPoint::fig6_step(Design::Medusa, step);
+            assert!(
+                peak_frequency(&mk(step, 2, 4)) <= peak_frequency(&m),
+                "step {step}"
+            );
+            // Trunk depth only adds pipeline registers, never logic
+            // levels: the clock is identical at every legal depth.
+            assert_eq!(peak_frequency(&mk(step, 2, 4)), peak_frequency(&mk(step, 4, 4)), "step {step}");
+            // Smaller clusters localize harder; the clock never drops.
+            if step >= 2 {
+                // (step >= 2 has >= 16 ports, so clusters of 8 are legal)
+                assert!(peak_frequency(&mk(step, 2, 4)) >= peak_frequency(&mk(step, 2, 8)), "step {step}");
+            }
+        }
     }
 
     #[test]

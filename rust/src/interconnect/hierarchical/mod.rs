@@ -1,0 +1,278 @@
+//! The hierarchical (clustered) interconnect family.
+//!
+//! The paper's scalability analysis (§III-D) prices a flat Medusa
+//! rotator at `W_line x log2(N)` mux2 — fine at N = 32, but the control
+//! fan-out and the all-ports wiring funnel become the placement
+//! bottleneck well before the LUT count does (the §IV congestion model
+//! captures exactly this). The classical fix is the one every NoC ends
+//! up with: **cluster the ports**. Each cluster of `cluster_ports`
+//! ports gets its own small Medusa transposer; clusters meet on a
+//! shared **trunk bus** that runs in its own clock domain, pipelined
+//! `levels - 1` deep. Latency-critical tenants can be pinned to
+//! **bypass ports** that sit directly on the memory interface (a
+//! dedicated small transposer, no trunk crossing).
+//!
+//! ```text
+//!   DRAM ──┬── trunk (own clock, levels-1 pipeline) ──┬─ cluster 0 ─ ports
+//!          │                                          ├─ cluster 1 ─ ports
+//!          │                                          └─ ...
+//!          └── bypass transposer ── trunk-direct tenant ports
+//! ```
+//!
+//! ## Semantics
+//!
+//! * **Port mapping.** The *last* `bypass_ports` global ports are the
+//!   bypass group; the remaining ports are clustered contiguously:
+//!   global port `p` lives in cluster `p / cluster_ports`, local index
+//!   `p % cluster_ports`.
+//! * **Read path.** The memory controller delivers into the trunk
+//!   (bypass ports: straight into the bypass transposer). A line
+//!   crosses the trunk in `levels - 1` trunk-clock cycles, modelled as
+//!   a per-entry countdown — relative ages, never absolute cycle
+//!   stamps, so trunk state cannot go stale across idle-edge leaps.
+//!   The trunk delivers at most one line per trunk edge (it is a
+//!   single shared bus), in strict FIFO order (which preserves
+//!   per-port order). Credit accounting reserves cluster buffer space
+//!   at trunk entry, so the trunk head can always sink — no deadlock.
+//! * **Write path.** Clusters assemble lines locally; the trunk picks
+//!   at most one completed line per cluster per fabric cycle
+//!   (round-robin over the cluster's local ports), carries it
+//!   `levels - 1` trunk cycles, and stages it at the memory interface
+//!   where the arbiter sees it via `mem_lines_ready`. The staging
+//!   buffer is bounded by the same `max_burst` credit the cluster
+//!   itself enforces.
+//! * **Leap exactness.** Every queue reports through `is_leap_idle`;
+//!   a leap only fires when the trunk is empty, at which point
+//!   `trunk_tick` is a pure no-op and bulk-adding the skipped trunk
+//!   edges reproduces the stepwise counters bit-exactly (DESIGN.md
+//!   §10).
+
+mod read;
+mod write;
+
+pub use read::HierReadNetwork;
+pub use write::HierWriteNetwork;
+
+use crate::types::Geometry;
+use anyhow::{ensure, Result};
+
+/// Parameters of one member of the hierarchical family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HierConfig {
+    /// Hierarchy depth: 2 = clusters directly on the trunk (one
+    /// pipeline stage), 3–4 add trunk pipeline stages. A line crosses
+    /// the trunk in `levels - 1` trunk-clock cycles.
+    pub levels: usize,
+    /// Ports per cluster (each cluster is a small Medusa transposer).
+    pub cluster_ports: usize,
+    /// Trunk-direct ports (the *last* `bypass_ports` global ports):
+    /// they get a dedicated transposer on the memory interface and
+    /// never cross the trunk.
+    pub bypass_ports: usize,
+    /// Trunk clock in MHz — its own scheduler domain, independent of
+    /// both the fabric and the memory clocks.
+    pub trunk_mhz: u32,
+}
+
+impl Default for HierConfig {
+    fn default() -> Self {
+        HierConfig { levels: 2, cluster_ports: 4, bypass_ports: 0, trunk_mhz: 300 }
+    }
+}
+
+impl HierConfig {
+    /// Trunk-crossing latency in trunk-clock cycles.
+    pub fn trunk_crossing(&self) -> u64 {
+        (self.levels - 1) as u64
+    }
+
+    /// Number of clusters on the given side (`ports` = read or write
+    /// port count). Callers must have validated first.
+    pub fn clusters(&self, ports: usize) -> usize {
+        (ports - self.bypass_ports) / self.cluster_ports
+    }
+
+    /// The sub-geometry one transposer (cluster or bypass group)
+    /// instantiates on: same widths and burst, `ports` ports a side.
+    pub fn sub_geom(&self, geom: &Geometry, ports: usize) -> Geometry {
+        Geometry { read_ports: ports, write_ports: ports, ..*geom }
+    }
+
+    /// Validate against the geometry this config will instantiate on.
+    pub fn validate(&self, geom: &Geometry) -> Result<()> {
+        ensure!(
+            (2..=4).contains(&self.levels),
+            "levels {} out of range [2, 4]",
+            self.levels
+        );
+        ensure!(self.cluster_ports >= 1, "cluster_ports must be at least 1");
+        ensure!(
+            (25..=1000).contains(&self.trunk_mhz),
+            "trunk clock {} MHz out of range [25, 1000]",
+            self.trunk_mhz
+        );
+        for (side, ports) in [("read", geom.read_ports), ("write", geom.write_ports)] {
+            ensure!(
+                self.bypass_ports < ports,
+                "bypass_ports {} leaves no clustered {side} ports (of {ports})",
+                self.bypass_ports
+            );
+            let clustered = ports - self.bypass_ports;
+            ensure!(
+                clustered % self.cluster_ports == 0,
+                "{clustered} clustered {side} ports do not divide into clusters of {}",
+                self.cluster_ports
+            );
+            ensure!(
+                clustered / self.cluster_ports >= 2,
+                "a single {side} cluster is just medusa behind a pointless trunk \
+                 (need at least 2 clusters, got {clustered} ports / {} per cluster)",
+                self.cluster_ports
+            );
+            self.sub_geom(geom, self.cluster_ports)
+                .validate()
+                .map_err(|e| e.context(format!("{side} cluster sub-geometry")))?;
+        }
+        if self.bypass_ports > 0 {
+            self.sub_geom(geom, self.bypass_ports)
+                .validate()
+                .map_err(|e| e.context("bypass sub-geometry"))?;
+        }
+        Ok(())
+    }
+
+    /// Canonical spec-string form,
+    /// `hierarchical:l<levels>:c<cluster>:b<bypass>:t<trunk_mhz>`.
+    /// [`parse_spec`] inverts this exactly (round-trip locked by tests).
+    pub fn spec(&self) -> String {
+        format!(
+            "hierarchical:l{}:c{}:b{}:t{}",
+            self.levels, self.cluster_ports, self.bypass_ports, self.trunk_mhz
+        )
+    }
+}
+
+/// Parse a hierarchical spec string: `hierarchical`, `hierarchical:l3`,
+/// `hierarchical:l2:c4:b2:t300` (segments optional, any order after the
+/// family name; unspecified fields take [`HierConfig::default`] values).
+/// Returns `None` for anything that is not a hierarchical spec.
+pub fn parse_spec(s: &str) -> Option<HierConfig> {
+    let rest = s.strip_prefix("hierarchical")?;
+    let mut cfg = HierConfig::default();
+    if rest.is_empty() {
+        return Some(cfg);
+    }
+    let rest = rest.strip_prefix(':')?;
+    for seg in rest.split(':') {
+        let (key, val) = seg.split_at(1.min(seg.len()));
+        match key {
+            "l" => cfg.levels = val.parse().ok()?,
+            "c" => cfg.cluster_ports = val.parse().ok()?,
+            "b" => cfg.bypass_ports = val.parse().ok()?,
+            "t" => cfg.trunk_mhz = val.parse().ok()?,
+            _ => return None,
+        }
+    }
+    Some(cfg)
+}
+
+/// Where a global port lives in the hierarchy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Route {
+    /// `(cluster index, local port index)`.
+    Cluster(usize, usize),
+    /// Local port index within the bypass transposer.
+    Bypass(usize),
+}
+
+impl HierConfig {
+    /// Route a global port (callers must have validated; `ports` is the
+    /// side's total port count).
+    pub(crate) fn route(&self, port: usize, ports: usize) -> Route {
+        let clustered = ports - self.bypass_ports;
+        if port >= clustered {
+            Route::Bypass(port - clustered)
+        } else {
+            Route::Cluster(port / self.cluster_ports, port % self.cluster_ports)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom(n_ports: usize, w_line: usize) -> Geometry {
+        Geometry { w_line, w_acc: 16, read_ports: n_ports, write_ports: n_ports, max_burst: 4 }
+    }
+
+    #[test]
+    fn spec_round_trips() {
+        for cfg in [
+            HierConfig::default(),
+            HierConfig { levels: 3, cluster_ports: 8, bypass_ports: 4, trunk_mhz: 450 },
+            HierConfig { levels: 4, cluster_ports: 2, bypass_ports: 0, trunk_mhz: 25 },
+        ] {
+            assert_eq!(parse_spec(&cfg.spec()), Some(cfg));
+        }
+    }
+
+    #[test]
+    fn spec_parsing_variants() {
+        assert_eq!(parse_spec("hierarchical"), Some(HierConfig::default()));
+        assert_eq!(
+            parse_spec("hierarchical:l3"),
+            Some(HierConfig { levels: 3, ..HierConfig::default() })
+        );
+        assert_eq!(
+            parse_spec("hierarchical:c8:t450"),
+            Some(HierConfig { cluster_ports: 8, trunk_mhz: 450, ..HierConfig::default() })
+        );
+        assert_eq!(parse_spec("hierarchical:x3"), None);
+        assert_eq!(parse_spec("hierarchical:"), None);
+        assert_eq!(parse_spec("hierarchical:l"), None);
+        assert_eq!(parse_spec("hierarchical:l2:"), None);
+        assert_eq!(parse_spec("medusa"), None);
+        assert_eq!(parse_spec("hierarchicall2"), None);
+    }
+
+    #[test]
+    fn validation_rules() {
+        let g = geom(8, 128); // N = 8
+        HierConfig { cluster_ports: 4, ..Default::default() }.validate(&g).unwrap();
+        HierConfig { cluster_ports: 2, bypass_ports: 2, ..Default::default() }
+            .validate(&g)
+            .unwrap();
+        // Levels out of range.
+        assert!(HierConfig { levels: 1, ..Default::default() }.validate(&g).is_err());
+        assert!(HierConfig { levels: 5, ..Default::default() }.validate(&g).is_err());
+        // Ports don't divide into clusters.
+        assert!(HierConfig { cluster_ports: 3, ..Default::default() }.validate(&g).is_err());
+        // A single cluster is not a hierarchy.
+        assert!(HierConfig { cluster_ports: 8, ..Default::default() }.validate(&g).is_err());
+        // Bypass eating every port.
+        assert!(HierConfig { bypass_ports: 8, ..Default::default() }.validate(&g).is_err());
+        // Trunk clock out of range.
+        assert!(HierConfig { trunk_mhz: 0, ..Default::default() }.validate(&g).is_err());
+        assert!(HierConfig { trunk_mhz: 2000, ..Default::default() }.validate(&g).is_err());
+    }
+
+    #[test]
+    fn routing_maps_clusters_then_bypass() {
+        let cfg = HierConfig { cluster_ports: 2, bypass_ports: 2, ..Default::default() };
+        let ports = 8;
+        assert_eq!(cfg.route(0, ports), Route::Cluster(0, 0));
+        assert_eq!(cfg.route(1, ports), Route::Cluster(0, 1));
+        assert_eq!(cfg.route(2, ports), Route::Cluster(1, 0));
+        assert_eq!(cfg.route(5, ports), Route::Cluster(2, 1));
+        assert_eq!(cfg.route(6, ports), Route::Bypass(0));
+        assert_eq!(cfg.route(7, ports), Route::Bypass(1));
+        assert_eq!(cfg.clusters(ports), 3);
+    }
+
+    #[test]
+    fn trunk_crossing_tracks_levels() {
+        assert_eq!(HierConfig { levels: 2, ..Default::default() }.trunk_crossing(), 1);
+        assert_eq!(HierConfig { levels: 4, ..Default::default() }.trunk_crossing(), 3);
+    }
+}

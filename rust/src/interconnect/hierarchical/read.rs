@@ -1,0 +1,402 @@
+//! Hierarchical memory-read network: trunk bus + per-cluster Medusa
+//! transposers + optional trunk-direct bypass transposer (see the
+//! module docs in [`super`] for the port mapping and the trunk model).
+
+use super::{HierConfig, Route};
+use crate::config::PayloadMode;
+use crate::interconnect::medusa::MedusaReadNetwork;
+use crate::interconnect::{Design, ReadNetwork};
+use crate::sim::stats::Counter;
+use crate::sim::Stats;
+use crate::types::{Geometry, PortId, TaggedLine, Word};
+use std::collections::VecDeque;
+
+/// One line in flight on the trunk: the tagged line (global port id)
+/// plus the remaining trunk-cycle countdown. Countdowns are relative
+/// ages, never absolute cycle stamps, so trunk state cannot go stale
+/// across idle-edge leaps (a leap requires the queue empty anyway).
+struct TrunkEntry {
+    tl: TaggedLine,
+    remaining: u64,
+}
+
+pub struct HierReadNetwork {
+    geom: Geometry,
+    cfg: HierConfig,
+    clusters: Vec<MedusaReadNetwork>,
+    bypass: Option<MedusaReadNetwork>,
+    /// The shared trunk bus: strict FIFO (preserves per-port order),
+    /// at most one delivery per trunk edge.
+    trunk: VecDeque<TrunkEntry>,
+    /// Trunk lines in flight per clustered global port — cluster buffer
+    /// slots reserved at trunk entry, so the trunk head can always sink.
+    in_flight: Vec<usize>,
+    /// Memory-interface guard: one line per fabric cycle across all
+    /// ports (same contract every flat network asserts).
+    delivered_this_cycle: bool,
+    /// Bypassed deliveries since the last tick (`mem_deliver` has no
+    /// stats handle; flushed into the counter at the next tick).
+    pending_bypassed: u64,
+}
+
+impl HierReadNetwork {
+    pub fn new(geom: Geometry, cfg: HierConfig) -> Self {
+        geom.validate().expect("invalid geometry");
+        cfg.validate(&geom).expect("invalid hierarchical config");
+        let sub = cfg.sub_geom(&geom, cfg.cluster_ports);
+        HierReadNetwork {
+            clusters: (0..cfg.clusters(geom.read_ports))
+                .map(|_| MedusaReadNetwork::new(sub))
+                .collect(),
+            bypass: (cfg.bypass_ports > 0)
+                .then(|| MedusaReadNetwork::new(cfg.sub_geom(&geom, cfg.bypass_ports))),
+            trunk: VecDeque::new(),
+            in_flight: vec![0; geom.read_ports],
+            delivered_this_cycle: false,
+            pending_bypassed: 0,
+            geom,
+            cfg,
+        }
+    }
+
+    fn route(&self, port: PortId) -> Route {
+        self.cfg.route(port, self.geom.read_ports)
+    }
+}
+
+impl ReadNetwork for HierReadNetwork {
+    fn design(&self) -> Design {
+        Design::Hierarchical(self.cfg)
+    }
+
+    fn geometry(&self) -> &Geometry {
+        &self.geom
+    }
+
+    fn mem_can_deliver(&self, port: PortId) -> bool {
+        if self.delivered_this_cycle {
+            return false;
+        }
+        match self.route(port) {
+            Route::Bypass(l) => self.bypass.as_ref().unwrap().mem_can_deliver(l),
+            // Clustered: the line enters the trunk; it may only do so if
+            // the destination cluster has an unreserved buffer slot.
+            Route::Cluster(c, l) => {
+                self.clusters[c].port_free_lines(l) > self.in_flight[port]
+            }
+        }
+    }
+
+    fn mem_deliver(&mut self, tl: TaggedLine) {
+        assert!(!self.delivered_this_cycle, "second line on the memory interface in one cycle");
+        self.delivered_this_cycle = true;
+        let port = tl.port;
+        match self.route(port) {
+            Route::Bypass(l) => {
+                self.pending_bypassed += 1;
+                self.bypass.as_mut().unwrap().mem_deliver(TaggedLine { port: l, line: tl.line });
+            }
+            Route::Cluster(c, l) => {
+                assert!(
+                    self.clusters[c].port_free_lines(l) > self.in_flight[port],
+                    "trunk entry without a reserved cluster slot, port {port}"
+                );
+                self.in_flight[port] += 1;
+                self.trunk.push_back(TrunkEntry { tl, remaining: self.cfg.trunk_crossing() });
+            }
+        }
+    }
+
+    fn port_free_lines(&self, port: PortId) -> usize {
+        match self.route(port) {
+            Route::Bypass(l) => self.bypass.as_ref().unwrap().port_free_lines(l),
+            // The arbiter's credit view must subtract slots reserved by
+            // lines still on the trunk.
+            Route::Cluster(c, l) => {
+                self.clusters[c].port_free_lines(l).saturating_sub(self.in_flight[port])
+            }
+        }
+    }
+
+    fn port_word_available(&self, port: PortId) -> bool {
+        match self.route(port) {
+            Route::Bypass(l) => self.bypass.as_ref().unwrap().port_word_available(l),
+            Route::Cluster(c, l) => self.clusters[c].port_word_available(l),
+        }
+    }
+
+    fn port_take_word(&mut self, port: PortId) -> Option<Word> {
+        match self.route(port) {
+            Route::Bypass(l) => self.bypass.as_mut().unwrap().port_take_word(l),
+            Route::Cluster(c, l) => self.clusters[c].port_take_word(l),
+        }
+    }
+
+    fn tick(&mut self, cycle: u64, stats: &mut Stats) {
+        if self.pending_bypassed > 0 {
+            stats.add(Counter::HierReadLinesBypassed, self.pending_bypassed);
+            self.pending_bypassed = 0;
+        }
+        self.delivered_this_cycle = false;
+        for cl in &mut self.clusters {
+            cl.tick(cycle, stats);
+        }
+        if let Some(b) = &mut self.bypass {
+            b.tick(cycle, stats);
+        }
+    }
+
+    /// One trunk-clock edge: every in-flight line advances one pipeline
+    /// stage; the (single, shared) bus then delivers at most one
+    /// fully-crossed line into its destination cluster. The cluster's
+    /// own one-delivery-per-fabric-cycle guard serializes a fast trunk
+    /// against a slow fabric; a blocked head simply waits (its slot is
+    /// reserved, so it sinks at the next fabric tick — no deadlock).
+    fn trunk_tick(&mut self, stats: &mut Stats) {
+        for e in &mut self.trunk {
+            if e.remaining > 0 {
+                e.remaining -= 1;
+            }
+        }
+        let ready = match self.trunk.front() {
+            Some(head) if head.remaining == 0 => Some(head.tl.port),
+            _ => None,
+        };
+        if let Some(port) = ready {
+            let Route::Cluster(c, l) = self.route(port) else {
+                unreachable!("bypass line on the trunk")
+            };
+            if self.clusters[c].mem_can_deliver(l) {
+                let e = self.trunk.pop_front().unwrap();
+                self.clusters[c].mem_deliver(TaggedLine { port: l, line: e.tl.line });
+                self.in_flight[port] -= 1;
+                stats.bump(Counter::HierReadLinesOverTrunk);
+            }
+        }
+    }
+
+    fn nominal_latency(&self) -> usize {
+        // Cluster transposer latency plus the trunk crossing (the
+        // bypass path is strictly faster; latency bounds are quoted for
+        // the slow path).
+        self.clusters[0].nominal_latency() + self.cfg.levels
+    }
+
+    fn set_payload_mode(&mut self, mode: PayloadMode) {
+        assert!(self.trunk.is_empty(), "payload mode change with lines on the trunk");
+        for cl in &mut self.clusters {
+            cl.set_payload_mode(mode);
+        }
+        if let Some(b) = &mut self.bypass {
+            b.set_payload_mode(mode);
+        }
+    }
+
+    fn is_leap_idle(&self) -> bool {
+        self.trunk.is_empty()
+            && self.pending_bypassed == 0
+            && self.clusters.iter().all(|c| c.is_leap_idle())
+            && self.bypass.as_ref().map_or(true, |b| b.is_leap_idle())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Line;
+
+    fn geom(n_ports: usize, w_line: usize) -> Geometry {
+        Geometry { w_line, w_acc: 16, read_ports: n_ports, write_ports: n_ports, max_burst: 4 }
+    }
+
+    fn mk_line(port: usize, tag: u64, n: usize) -> Line {
+        Line::from_words(
+            (0..n as u64)
+                .map(|y| (((port as u64) & 0x1f) << 11) | ((tag & 0x1f) << 6) | y)
+                .collect(),
+        )
+    }
+
+    /// Drive the network with a 1:1 trunk:fabric cadence: deliver
+    /// `lines[i]` when possible, pop words eagerly, return per-port
+    /// word streams.
+    fn run(net: &mut HierReadNetwork, lines: Vec<TaggedLine>, max_cycles: u64) -> Vec<Vec<Word>> {
+        let mut stats = Stats::new();
+        let nports = net.geometry().read_ports;
+        let total_words = lines.len() * net.geometry().words_per_line();
+        let mut got: Vec<Vec<Word>> = vec![Vec::new(); nports];
+        let mut next = 0usize;
+        for c in 0..max_cycles {
+            net.tick(c, &mut stats);
+            net.trunk_tick(&mut stats);
+            if next < lines.len() && net.mem_can_deliver(lines[next].port) {
+                net.mem_deliver(lines[next].clone());
+                next += 1;
+            }
+            for p in 0..nports {
+                if net.port_word_available(p) {
+                    got[p].push(net.port_take_word(p).unwrap());
+                }
+            }
+            if got.iter().map(|v| v.len()).sum::<usize>() == total_words {
+                break;
+            }
+        }
+        got
+    }
+
+    #[test]
+    fn all_ports_receive_their_lines_in_order() {
+        // 8 ports, 2 clusters of 3 + 2 bypass: every port gets its own
+        // lines' words, in order, through whichever path it maps to.
+        let g = geom(8, 128);
+        let n = g.words_per_line();
+        let cfg = HierConfig { cluster_ports: 3, bypass_ports: 2, ..Default::default() };
+        let mut net = HierReadNetwork::new(g, cfg);
+        let lines: Vec<TaggedLine> =
+            (0..24).map(|i| TaggedLine { port: i % 8, line: mk_line(i % 8, i as u64, n) }).collect();
+        let got = run(&mut net, lines, 2000);
+        for p in 0..8 {
+            let mut expect = Vec::new();
+            for i in 0..24 {
+                if i % 8 == p {
+                    expect.extend(mk_line(p, i as u64, n).words().to_vec());
+                }
+            }
+            assert_eq!(got[p], expect, "port {p}");
+        }
+        assert!(net.is_leap_idle());
+    }
+
+    #[test]
+    fn bypass_skips_the_trunk_crossing() {
+        // Same line delivered to a clustered port and to a bypass port:
+        // the bypass word arrives at least the trunk crossing earlier.
+        let g = geom(8, 128);
+        let n = g.words_per_line();
+        let cfg = HierConfig { levels: 4, cluster_ports: 3, bypass_ports: 2, ..Default::default() };
+        let first_word_at = |port: usize| -> u64 {
+            let mut net = HierReadNetwork::new(g, cfg);
+            let mut stats = Stats::new();
+            net.tick(0, &mut stats);
+            net.mem_deliver(TaggedLine { port, line: mk_line(port, 0, n) });
+            for c in 1..200u64 {
+                net.tick(c, &mut stats);
+                net.trunk_tick(&mut stats);
+                if net.port_word_available(port) {
+                    return c;
+                }
+            }
+            panic!("word never arrived on port {port}");
+        };
+        let clustered = first_word_at(0);
+        let bypass = first_word_at(6);
+        assert!(
+            clustered >= bypass + cfg.trunk_crossing(),
+            "clustered latency {clustered} must trail bypass latency {bypass} \
+             by the trunk crossing ({})",
+            cfg.trunk_crossing()
+        );
+    }
+
+    #[test]
+    fn trunk_delivers_at_most_one_line_per_trunk_edge() {
+        let g = geom(8, 128);
+        let n = g.words_per_line();
+        let cfg = HierConfig { cluster_ports: 4, ..Default::default() };
+        let mut net = HierReadNetwork::new(g, cfg);
+        let mut stats = Stats::new();
+        net.tick(0, &mut stats);
+        net.mem_deliver(TaggedLine { port: 0, line: mk_line(0, 0, n) });
+        net.tick(1, &mut stats);
+        net.mem_deliver(TaggedLine { port: 4, line: mk_line(4, 1, n) });
+        assert_eq!(net.trunk.len(), 2);
+        // Both have crossed after this edge, but only one may deliver.
+        net.trunk_tick(&mut stats);
+        assert_eq!(net.trunk.len(), 1, "one delivery per trunk edge");
+        assert_eq!(stats.count(Counter::HierReadLinesOverTrunk), 1);
+        net.tick(2, &mut stats);
+        net.trunk_tick(&mut stats);
+        assert_eq!(net.trunk.len(), 0);
+        assert_eq!(stats.count(Counter::HierReadLinesOverTrunk), 2);
+    }
+
+    #[test]
+    fn fast_trunk_respects_the_cluster_delivery_guard() {
+        // Two lines for the same cluster, trunk ticking many times per
+        // fabric tick: the cluster's one-delivery-per-fabric-cycle
+        // contract must hold (the second line waits for the next tick).
+        let g = geom(8, 128);
+        let n = g.words_per_line();
+        let cfg = HierConfig { cluster_ports: 4, ..Default::default() };
+        let mut net = HierReadNetwork::new(g, cfg);
+        let mut stats = Stats::new();
+        net.tick(0, &mut stats);
+        net.mem_deliver(TaggedLine { port: 0, line: mk_line(0, 0, n) });
+        net.tick(1, &mut stats);
+        net.mem_deliver(TaggedLine { port: 1, line: mk_line(1, 1, n) });
+        for _ in 0..5 {
+            net.trunk_tick(&mut stats);
+        }
+        assert_eq!(net.trunk.len(), 1, "second line must wait for the next fabric cycle");
+        net.tick(2, &mut stats);
+        net.trunk_tick(&mut stats);
+        assert!(net.trunk.is_empty());
+    }
+
+    #[test]
+    fn credit_view_subtracts_trunk_occupancy() {
+        let g = geom(8, 128);
+        let n = g.words_per_line();
+        let cfg = HierConfig { cluster_ports: 4, ..Default::default() };
+        let mut net = HierReadNetwork::new(g, cfg);
+        let mut stats = Stats::new();
+        net.tick(0, &mut stats);
+        assert_eq!(net.port_free_lines(0), 4);
+        net.mem_deliver(TaggedLine { port: 0, line: mk_line(0, 0, n) });
+        // The line is on the trunk, not yet in the cluster — the credit
+        // view must already account for it.
+        assert_eq!(net.port_free_lines(0), 3);
+        // Fill the remaining credits without any trunk progress.
+        for i in 1..4u64 {
+            net.tick(i, &mut stats);
+            assert!(net.mem_can_deliver(0));
+            net.mem_deliver(TaggedLine { port: 0, line: mk_line(0, i, n) });
+        }
+        net.tick(4, &mut stats);
+        assert!(!net.mem_can_deliver(0), "all four slots reserved by trunk lines");
+        assert_eq!(net.port_free_lines(0), 0);
+    }
+
+    #[test]
+    fn bypassed_lines_count_and_flush_on_tick() {
+        let g = geom(8, 128);
+        let n = g.words_per_line();
+        let cfg = HierConfig { cluster_ports: 3, bypass_ports: 2, ..Default::default() };
+        let mut net = HierReadNetwork::new(g, cfg);
+        let mut stats = Stats::new();
+        net.tick(0, &mut stats);
+        net.mem_deliver(TaggedLine { port: 7, line: mk_line(7, 0, n) });
+        assert!(!net.is_leap_idle(), "pending counter flush must block leaping");
+        assert_eq!(stats.count(Counter::HierReadLinesBypassed), 0);
+        net.tick(1, &mut stats);
+        assert_eq!(stats.count(Counter::HierReadLinesBypassed), 1);
+        assert_eq!(stats.count(Counter::HierReadLinesOverTrunk), 0);
+    }
+
+    #[test]
+    fn idle_tick_and_trunk_tick_are_no_ops() {
+        let g = geom(8, 128);
+        let cfg = HierConfig { cluster_ports: 4, ..Default::default() };
+        let mut net = HierReadNetwork::new(g, cfg);
+        let mut stats = Stats::new();
+        net.tick(0, &mut stats);
+        assert!(net.is_leap_idle());
+        let before: Vec<(&str, u64)> = stats.counters().collect();
+        net.tick(1, &mut stats);
+        net.trunk_tick(&mut stats);
+        let after: Vec<(&str, u64)> = stats.counters().collect();
+        assert_eq!(before, after, "idle edges must not move a counter");
+        assert!(net.is_leap_idle());
+    }
+}

@@ -1,0 +1,384 @@
+//! Hierarchical memory-write network: per-cluster Medusa transposers
+//! assemble lines locally; the shared trunk carries them to a staging
+//! buffer on the memory interface (see the module docs in [`super`]).
+
+use super::{HierConfig, Route};
+use crate::config::PayloadMode;
+use crate::interconnect::medusa::MedusaWriteNetwork;
+use crate::interconnect::{Design, WriteNetwork};
+use crate::sim::stats::Counter;
+use crate::sim::Stats;
+use crate::types::{Geometry, Line, PortId, Word};
+use std::collections::VecDeque;
+
+/// One assembled line crossing the trunk toward the memory interface.
+/// `remaining` is a relative countdown (see the read-side docs for why
+/// absolute stamps are forbidden).
+struct TrunkEntry {
+    port: PortId,
+    line: Line,
+    remaining: u64,
+}
+
+pub struct HierWriteNetwork {
+    geom: Geometry,
+    cfg: HierConfig,
+    clusters: Vec<MedusaWriteNetwork>,
+    bypass: Option<MedusaWriteNetwork>,
+    /// The shared trunk bus: strict FIFO, at most one line staged per
+    /// trunk edge.
+    trunk: VecDeque<TrunkEntry>,
+    /// Trunk occupancy per clustered global port (bounds the staging
+    /// buffer together with `staged`).
+    in_trunk: Vec<usize>,
+    /// Post-trunk lines per clustered global port, visible to the
+    /// arbiter via `mem_lines_ready`.
+    staged: Vec<VecDeque<Line>>,
+    /// Round-robin scan start per cluster for trunk ingress (prevents
+    /// a low-numbered port from starving its cluster mates).
+    rr: Vec<usize>,
+    /// Memory-interface guard: one line taken per fabric cycle.
+    line_taken_this_cycle: bool,
+    /// Bypassed takes since the last tick (`mem_take_line` has no
+    /// stats handle; flushed into the counter at the next tick).
+    pending_bypassed: u64,
+}
+
+impl HierWriteNetwork {
+    pub fn new(geom: Geometry, cfg: HierConfig) -> Self {
+        geom.validate().expect("invalid geometry");
+        cfg.validate(&geom).expect("invalid hierarchical config");
+        let sub = cfg.sub_geom(&geom, cfg.cluster_ports);
+        let n_clusters = cfg.clusters(geom.write_ports);
+        HierWriteNetwork {
+            clusters: (0..n_clusters).map(|_| MedusaWriteNetwork::new(sub)).collect(),
+            bypass: (cfg.bypass_ports > 0)
+                .then(|| MedusaWriteNetwork::new(cfg.sub_geom(&geom, cfg.bypass_ports))),
+            trunk: VecDeque::new(),
+            in_trunk: vec![0; geom.write_ports],
+            staged: (0..geom.write_ports).map(|_| VecDeque::new()).collect(),
+            rr: vec![0; n_clusters],
+            line_taken_this_cycle: false,
+            pending_bypassed: 0,
+            geom,
+            cfg,
+        }
+    }
+
+    fn route(&self, port: PortId) -> Route {
+        self.cfg.route(port, self.geom.write_ports)
+    }
+}
+
+impl WriteNetwork for HierWriteNetwork {
+    fn design(&self) -> Design {
+        Design::Hierarchical(self.cfg)
+    }
+
+    fn geometry(&self) -> &Geometry {
+        &self.geom
+    }
+
+    fn port_can_accept(&self, port: PortId) -> bool {
+        match self.route(port) {
+            Route::Bypass(l) => self.bypass.as_ref().unwrap().port_can_accept(l),
+            Route::Cluster(c, l) => self.clusters[c].port_can_accept(l),
+        }
+    }
+
+    fn port_push_word(&mut self, port: PortId, w: Word) {
+        match self.route(port) {
+            Route::Bypass(l) => self.bypass.as_mut().unwrap().port_push_word(l, w),
+            Route::Cluster(c, l) => self.clusters[c].port_push_word(l, w),
+        }
+    }
+
+    fn mem_lines_ready(&self, port: PortId) -> usize {
+        match self.route(port) {
+            Route::Bypass(l) => self.bypass.as_ref().unwrap().mem_lines_ready(l),
+            // The arbiter only sees lines that finished the crossing —
+            // it must never issue a write the trunk cannot yet back.
+            Route::Cluster(..) => self.staged[port].len(),
+        }
+    }
+
+    fn mem_take_line(&mut self, port: PortId) -> Option<Line> {
+        assert!(!self.line_taken_this_cycle, "second line on the memory interface in one cycle");
+        let line = match self.route(port) {
+            Route::Bypass(l) => {
+                let line = self.bypass.as_mut().unwrap().mem_take_line(l)?;
+                self.pending_bypassed += 1;
+                Some(line)
+            }
+            Route::Cluster(..) => self.staged[port].pop_front(),
+        };
+        if line.is_some() {
+            self.line_taken_this_cycle = true;
+        }
+        line
+    }
+
+    fn tick(&mut self, cycle: u64, stats: &mut Stats) {
+        if self.pending_bypassed > 0 {
+            stats.add(Counter::HierWriteLinesBypassed, self.pending_bypassed);
+            self.pending_bypassed = 0;
+        }
+        self.line_taken_this_cycle = false;
+        for cl in &mut self.clusters {
+            cl.tick(cycle, stats);
+        }
+        if let Some(b) = &mut self.bypass {
+            b.tick(cycle, stats);
+        }
+        // Trunk ingress: each cluster may surrender at most one
+        // assembled line per fabric cycle (its memory-side interface is
+        // one line wide), chosen round-robin over its local ports. The
+        // `max_burst` gate bounds staging occupancy exactly as the
+        // cluster bounds its own output region, so the trunk head can
+        // always drain — no deadlock.
+        for c in 0..self.clusters.len() {
+            let np = self.cfg.cluster_ports;
+            let start = self.rr[c];
+            for i in 0..np {
+                let l = (start + i) % np;
+                let gp = c * np + l;
+                if self.clusters[c].mem_lines_ready(l) > 0
+                    && self.staged[gp].len() + self.in_trunk[gp] < self.geom.max_burst
+                {
+                    let line = self.clusters[c].mem_take_line(l).unwrap();
+                    self.trunk.push_back(TrunkEntry {
+                        port: gp,
+                        line,
+                        remaining: self.cfg.trunk_crossing(),
+                    });
+                    self.in_trunk[gp] += 1;
+                    self.rr[c] = (l + 1) % np;
+                    break;
+                }
+            }
+        }
+    }
+
+    /// One trunk-clock edge: every in-flight line advances one pipeline
+    /// stage; the bus then stages at most one fully-crossed line at the
+    /// memory interface. Staging space was reserved at trunk entry, so
+    /// the head always sinks.
+    fn trunk_tick(&mut self, stats: &mut Stats) {
+        for e in &mut self.trunk {
+            if e.remaining > 0 {
+                e.remaining -= 1;
+            }
+        }
+        if self.trunk.front().map_or(false, |h| h.remaining == 0) {
+            let e = self.trunk.pop_front().unwrap();
+            self.staged[e.port].push_back(e.line);
+            self.in_trunk[e.port] -= 1;
+            stats.bump(Counter::HierWriteLinesOverTrunk);
+        }
+    }
+
+    fn nominal_latency(&self) -> usize {
+        self.clusters[0].nominal_latency() + self.cfg.levels
+    }
+
+    fn set_payload_mode(&mut self, mode: PayloadMode) {
+        assert!(
+            self.trunk.is_empty() && self.staged.iter().all(|q| q.is_empty()),
+            "payload mode change with lines in flight"
+        );
+        for cl in &mut self.clusters {
+            cl.set_payload_mode(mode);
+        }
+        if let Some(b) = &mut self.bypass {
+            b.set_payload_mode(mode);
+        }
+    }
+
+    fn is_leap_idle(&self) -> bool {
+        self.trunk.is_empty()
+            && self.pending_bypassed == 0
+            && self.staged.iter().all(|q| q.is_empty())
+            && self.clusters.iter().all(|c| c.is_leap_idle())
+            && self.bypass.as_ref().map_or(true, |b| b.is_leap_idle())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom(n_ports: usize, w_line: usize) -> Geometry {
+        Geometry { w_line, w_acc: 16, read_ports: n_ports, write_ports: n_ports, max_burst: 4 }
+    }
+
+    fn words_for(port: usize, tag: u64, n: usize) -> Vec<Word> {
+        (0..n as u64).map(|y| (((port as u64) & 0x1f) << 11) | ((tag & 0x1f) << 6) | y).collect()
+    }
+
+    /// Push `lines_per_port` lines of words into every port, tick with a
+    /// 1:1 trunk cadence, drain the memory side eagerly; return per-port
+    /// line payloads in arrival order.
+    fn run(
+        net: &mut HierWriteNetwork,
+        lines_per_port: usize,
+        max_cycles: u64,
+    ) -> Vec<Vec<Vec<Word>>> {
+        let mut stats = Stats::new();
+        let nports = net.geometry().write_ports;
+        let n = net.geometry().words_per_line();
+        let mut fed: Vec<usize> = vec![0; nports]; // words pushed per port
+        let mut got: Vec<Vec<Vec<Word>>> = vec![Vec::new(); nports];
+        let total = lines_per_port * n;
+        for c in 0..max_cycles {
+            net.tick(c, &mut stats);
+            net.trunk_tick(&mut stats);
+            for p in 0..nports {
+                if fed[p] < total && net.port_can_accept(p) {
+                    let (tag, y) = ((fed[p] / n) as u64, fed[p] % n);
+                    net.port_push_word(p, words_for(p, tag, n)[y]);
+                    fed[p] += 1;
+                }
+            }
+            // One line per cycle across the memory interface, scanning
+            // ports in order (a stand-in for the arbiter).
+            for p in 0..nports {
+                if net.mem_lines_ready(p) > 0 {
+                    let line = net.mem_take_line(p).unwrap();
+                    got[p].push(line.words().to_vec());
+                    break;
+                }
+            }
+            if got.iter().map(|v| v.len()).sum::<usize>() == lines_per_port * nports {
+                break;
+            }
+        }
+        got
+    }
+
+    #[test]
+    fn all_ports_assemble_their_lines_in_order() {
+        let g = geom(8, 128);
+        let n = g.words_per_line();
+        let cfg = HierConfig { cluster_ports: 3, bypass_ports: 2, ..Default::default() };
+        let mut net = HierWriteNetwork::new(g, cfg);
+        let got = run(&mut net, 3, 4000);
+        for p in 0..8 {
+            assert_eq!(got[p].len(), 3, "port {p} line count");
+            for (tag, line) in got[p].iter().enumerate() {
+                assert_eq!(line, &words_for(p, tag as u64, n), "port {p} line {tag}");
+            }
+        }
+        assert!(net.is_leap_idle());
+    }
+
+    #[test]
+    fn clustered_lines_cross_the_trunk_and_count() {
+        let g = geom(8, 128);
+        let n = g.words_per_line();
+        let cfg = HierConfig { cluster_ports: 3, bypass_ports: 2, ..Default::default() };
+        let mut net = HierWriteNetwork::new(g, cfg);
+        let mut stats = Stats::new();
+        // One full line into clustered port 0 and bypass port 6.
+        let mut done = false;
+        for c in 0..200u64 {
+            net.tick(c, &mut stats);
+            net.trunk_tick(&mut stats);
+            let y = c as usize;
+            if y < n {
+                net.port_push_word(0, words_for(0, 0, n)[y]);
+                net.port_push_word(6, words_for(6, 0, n)[y]);
+            }
+            if net.mem_lines_ready(0) > 0 && net.mem_lines_ready(6) > 0 {
+                done = true;
+                break;
+            }
+        }
+        assert!(done, "lines never reached the memory side");
+        assert_eq!(stats.count(Counter::HierWriteLinesOverTrunk), 1, "clustered line crossed");
+        assert_eq!(net.mem_take_line(0).unwrap().words(), &words_for(0, 0, n)[..]);
+        // Bypass takes count on the next tick's flush.
+        net.tick(1000, &mut stats);
+        assert_eq!(net.mem_take_line(6).unwrap().words(), &words_for(6, 0, n)[..]);
+        assert_eq!(stats.count(Counter::HierWriteLinesBypassed), 0);
+        net.tick(1001, &mut stats);
+        assert_eq!(stats.count(Counter::HierWriteLinesBypassed), 1);
+    }
+
+    #[test]
+    fn trunk_ingress_round_robins_cluster_ports() {
+        // Both local ports of one cluster hold finished lines; ingress
+        // must alternate between them rather than always picking the
+        // lower index.
+        let g = geom(8, 128);
+        let n = g.words_per_line();
+        let cfg = HierConfig { cluster_ports: 2, ..Default::default() };
+        let mut net = HierWriteNetwork::new(g, cfg);
+        let mut stats = Stats::new();
+        // Feed two lines into each of ports 0 and 1 (cluster 0), at one
+        // word per port per cycle.
+        for c in 0..(2 * n as u64 + 40) {
+            net.tick(c, &mut stats);
+            net.trunk_tick(&mut stats);
+            let y = c as usize;
+            if y < 2 * n {
+                if net.port_can_accept(0) {
+                    net.port_push_word(0, words_for(0, (y / n) as u64, n)[y % n]);
+                }
+                if net.port_can_accept(1) {
+                    net.port_push_word(1, words_for(1, (y / n) as u64, n)[y % n]);
+                }
+            }
+        }
+        // All four lines staged; order must interleave the two ports.
+        assert_eq!(net.mem_lines_ready(0), 2);
+        assert_eq!(net.mem_lines_ready(1), 2);
+        assert_eq!(stats.count(Counter::HierWriteLinesOverTrunk), 4);
+    }
+
+    #[test]
+    fn staging_respects_the_burst_credit() {
+        // Feed port 0 forever and never drain the memory side: the
+        // ingress gate must cap staged + in-trunk occupancy at
+        // max_burst, and backpressure must eventually reach the port.
+        let g = geom(8, 128);
+        let n = g.words_per_line();
+        let cfg = HierConfig { cluster_ports: 2, ..Default::default() };
+        let mut net = HierWriteNetwork::new(g, cfg);
+        let mut stats = Stats::new();
+        let mut fed = 0usize;
+        for c in 0..400u64 {
+            net.tick(c, &mut stats);
+            net.trunk_tick(&mut stats);
+            assert!(
+                net.staged[0].len() + net.in_trunk[0] <= g.max_burst,
+                "staging credit overrun at cycle {c}"
+            );
+            if net.port_can_accept(0) {
+                net.port_push_word(0, words_for(0, (fed / n) as u64, n)[fed % n]);
+                fed += 1;
+            }
+        }
+        assert_eq!(net.mem_lines_ready(0), g.max_burst, "staging fills to the burst credit");
+        assert!(!net.port_can_accept(0), "backpressure must reach the port");
+        assert!(
+            fed < 400,
+            "an undrained memory side cannot absorb words forever (fed {fed})"
+        );
+    }
+
+    #[test]
+    fn idle_tick_and_trunk_tick_are_no_ops() {
+        let g = geom(8, 128);
+        let cfg = HierConfig { cluster_ports: 4, ..Default::default() };
+        let mut net = HierWriteNetwork::new(g, cfg);
+        let mut stats = Stats::new();
+        net.tick(0, &mut stats);
+        assert!(net.is_leap_idle());
+        let before: Vec<(&str, u64)> = stats.counters().collect();
+        net.tick(1, &mut stats);
+        net.trunk_tick(&mut stats);
+        let after: Vec<(&str, u64)> = stats.counters().collect();
+        assert_eq!(before, after, "idle edges must not move a counter");
+        assert!(net.is_leap_idle());
+    }
+}

@@ -104,10 +104,13 @@ fn backend_opts(args: &Args, default: SimBackend) -> Result<SimBackend> {
     Ok(b)
 }
 
-/// Hybrid specs carry parameters that only make sense on a geometry;
-/// check them before handing the pair to any model.
+/// Hybrid/hierarchical specs carry parameters that only make sense on a
+/// geometry; check them before handing the pair to any model.
 fn check_design(design: Design, g: &Geometry) -> Result<()> {
     if let Design::Hybrid(hc) = design {
+        hc.validate(g)?;
+    }
+    if let Design::Hierarchical(hc) = design {
         hc.validate(g)?;
     }
     Ok(())
@@ -161,7 +164,7 @@ fn cmd_eval(rest: &[String]) -> Result<()> {
 
 fn cmd_infer(rest: &[String]) -> Result<()> {
     let args = Args::default()
-        .opt("design", "baseline | medusa | axis")
+        .opt("design", "baseline | medusa | axis | hybrid:* | hierarchical:*")
         .opt("backend", "golden | pjrt")
         .opt("fabric-mhz", "pin the fabric clock (default: P&R model)")
         .opt("dpus", "dot-product units (default 64)")
@@ -210,7 +213,7 @@ fn cmd_infer(rest: &[String]) -> Result<()> {
 fn cmd_run(rest: &[String]) -> Result<()> {
     let args = Args::default()
         .opt("scenario", "scenario TOML file or a built-in name")
-        .opt("design", "override the scenario's design (baseline | medusa | axis)")
+        .opt("design", "override the scenario's design (baseline | medusa | axis | hybrid:* | hierarchical:*)")
         .opt("capture", "write the run's canonical trace to this file")
         .opt("seed", "override the system seed (re-derives tenant workload seeds)")
         .opt("payload", "full | elided — elided skips payload, stats stay exact (no data checks)")
@@ -334,7 +337,7 @@ fn cmd_replay(rest: &[String]) -> Result<()> {
 fn cmd_serve(rest: &[String]) -> Result<()> {
     let args = Args::default()
         .opt("scenario", "scenario TOML file or built-in name (default serving-poisson)")
-        .opt("design", "override the scenario's design (baseline | medusa | axis)")
+        .opt("design", "override the scenario's design (baseline | medusa | axis | hybrid:* | hierarchical:*)")
         .opt(
             "serving",
             "serving spec: requests=N,mean_gap=N,max_batch=N,max_wait=N,slo=N,seed=N,\
@@ -437,7 +440,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
 
 fn cmd_resources(rest: &[String]) -> Result<()> {
     let args = Args::default()
-        .opt("design", "baseline | medusa | axis")
+        .opt("design", "baseline | medusa | axis | hybrid:* | hierarchical:*")
         .opt("w-line", "memory interface width bits")
         .opt("ports", "read (=write) port count")
         .opt("max-burst", "max burst in lines")
@@ -472,7 +475,7 @@ fn cmd_resources(rest: &[String]) -> Result<()> {
 
 fn cmd_freq(rest: &[String]) -> Result<()> {
     let args = Args::default()
-        .opt("design", "baseline | medusa | axis")
+        .opt("design", "baseline | medusa | axis | hybrid:* | hierarchical:*")
         .opt("w-line", "memory interface width bits")
         .opt("ports", "read (=write) port count")
         .opt("max-burst", "max burst in lines")

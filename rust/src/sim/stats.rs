@@ -84,6 +84,13 @@ counters! {
     FaultDramRefreshStallCycles => "fault.dram_refresh_stall_cycles",
     FaultLpSlowdownCycles => "fault.lp_slowdown_cycles",
     FaultMasked => "fault.masked",
+    // Hierarchical (clustered) networks. The per-cluster transposers
+    // bump the plain Medusa counters; these count only the trunk/bypass
+    // routing the hierarchy adds on top.
+    HierReadLinesBypassed => "hier_read.lines_bypassed",
+    HierReadLinesOverTrunk => "hier_read.lines_over_trunk",
+    HierWriteLinesBypassed => "hier_write.lines_bypassed",
+    HierWriteLinesOverTrunk => "hier_write.lines_over_trunk",
     // Hybrid (partial-transpose) networks. Only the intermediate-radix
     // datapaths touch these: the radix endpoints instantiate the exact
     // baseline/Medusa datapaths and bump those counters instead (the

@@ -157,6 +157,10 @@ pub const MOVEMENT_COUNTERS: &[&str] = &[
     "dram.read_lines",
     "dram.write_bursts",
     "dram.write_lines",
+    "hier_read.lines_bypassed",
+    "hier_read.lines_over_trunk",
+    "hier_write.lines_bypassed",
+    "hier_write.lines_over_trunk",
     "hybrid_read.lines_transposed",
     "hybrid_read.words_rotated",
     "hybrid_write.lines_transposed",
