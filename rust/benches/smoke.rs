@@ -435,4 +435,69 @@ fn main() {
     j.push_str("}\n");
     std::fs::write(&pr7_path, &j).expect("writing BENCH_PR7.json");
     println!("wrote {pr7_path}");
+
+    // --- 9. PR 8: the hierarchical family — a third (trunk) clock
+    // domain under every backend combination. Cycles and trunk-crossing
+    // counters must be bit-identical everywhere (the
+    // hierarchical-conformance contract); the wall clock shows what the
+    // N-domain leap costs on a three-domain system, and the cycle
+    // ratio vs flat Medusa shows what the trunk serialization costs.
+    use medusa::interconnect::hierarchical::HierConfig;
+    let hier = Design::Hierarchical(HierConfig {
+        levels: 2,
+        cluster_ports: 4,
+        bypass_ports: 0,
+        trunk_mhz: 300,
+    });
+    let hier_with = |sim: SimBackend| -> (f64, u64, u64) {
+        let mut sc = medusa::workload::Scenario::builtin("single-tiny-vgg").unwrap();
+        sc.cfg.design = hier;
+        sc.cfg.sim = sim;
+        let t0 = Instant::now();
+        let out = medusa::workload::run_scenario(&sc).expect("hierarchical scenario run");
+        let trunk = out.stats.get("hier_read.lines_over_trunk")
+            + out.stats.get("hier_write.lines_over_trunk");
+        (t0.elapsed().as_secs_f64(), out.fabric_cycles, trunk)
+    };
+    let (hr_full_s, hr_cycles, hr_trunk) = hier_with(SimBackend::full());
+    let (hr_elided_s, hc2, ht2) =
+        hier_with(SimBackend { payload: PayloadMode::Elided, edges: EdgeMode::Stepwise });
+    let (hr_leap_s, hc3, ht3) =
+        hier_with(SimBackend { payload: PayloadMode::Full, edges: EdgeMode::Leap });
+    let (hr_fast_s, hc4, ht4) = hier_with(SimBackend::fast());
+    assert_eq!((hr_cycles, hr_trunk), (hc2, ht2), "elision changed the hierarchical run");
+    assert_eq!((hr_cycles, hr_trunk), (hc3, ht3), "leaping changed the hierarchical run");
+    assert_eq!((hr_cycles, hr_trunk), (hc4, ht4), "fast backend changed the hierarchical run");
+    assert!(hr_trunk > 0, "no lines crossed the trunk");
+    println!(
+        "hierarchical l2:c4 (single-tiny-vgg): full {hr_full_s:.4}s, elided {hr_elided_s:.4}s \
+         ({:.2}x), leap {hr_leap_s:.4}s ({:.2}x), fast {hr_fast_s:.4}s ({:.2}x) — \
+         {hr_trunk} trunk crossings, {:.3}x cycles vs flat, results identical",
+        hr_full_s / hr_elided_s.max(1e-12),
+        hr_full_s / hr_leap_s.max(1e-12),
+        hr_full_s / hr_fast_s.max(1e-12),
+        hr_cycles as f64 / sc_full_cycles.max(1) as f64,
+    );
+    let pr8_path = format!("{json_dir}/BENCH_PR8.json");
+    let mut j = String::from("{\n");
+    j.push_str("  \"bench\": \"hierarchical_pr8\",\n");
+    j.push_str("  \"design\": \"hierarchical:l2:c4:b0:t300\",\n");
+    j.push_str(&format!(
+        "  \"hierarchical_scenario\": {{\"name\": \"single-tiny-vgg\", \"fabric_cycles\": {hr_cycles}, \
+         \"trunk_crossings\": {hr_trunk}, \"flat_fabric_cycles\": {sc_full_cycles}, \
+         \"cycle_ratio_vs_flat\": {}, \"full_s\": {}, \"elided_s\": {}, \"leap_s\": {}, \
+         \"fast_s\": {}, \"elided_speedup\": {}, \"leap_speedup\": {}, \"fast_speedup\": {}, \
+         \"results_identical\": true}}\n",
+        json_f(hr_cycles as f64 / sc_full_cycles.max(1) as f64),
+        json_f(hr_full_s),
+        json_f(hr_elided_s),
+        json_f(hr_leap_s),
+        json_f(hr_fast_s),
+        json_f(hr_full_s / hr_elided_s.max(1e-12)),
+        json_f(hr_full_s / hr_leap_s.max(1e-12)),
+        json_f(hr_full_s / hr_fast_s.max(1e-12)),
+    ));
+    j.push_str("}\n");
+    std::fs::write(&pr8_path, &j).expect("writing BENCH_PR8.json");
+    println!("wrote {pr8_path}");
 }

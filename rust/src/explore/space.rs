@@ -151,7 +151,8 @@ impl DesignSpace {
         }
     }
 
-    /// A tiny grid for CI smoke runs (16 points, small geometries only).
+    /// A tiny grid for CI smoke runs (20 points, small geometries only;
+    /// the 8-port geometries carry the hierarchical members).
     pub fn smoke() -> Self {
         DesignSpace {
             ports: vec![4, 8],
