@@ -500,4 +500,86 @@ fn main() {
     j.push_str("}\n");
     std::fs::write(&pr8_path, &j).expect("writing BENCH_PR8.json");
     println!("wrote {pr8_path}");
+
+    // --- 10. PR 9: the observability layer — profile-on vs profile-off
+    // wall time (the cost of zero-perturbation profiling) and the
+    // busy-edge breakdown of a fast-backend run: per clock domain,
+    // edges stepped vs leapt, plus the leap refusal/cap attribution.
+    use medusa::obs::{CapSource, LeapBlock};
+    let profiled_with = |profile: bool| {
+        let mut sc = medusa::workload::Scenario::builtin("single-tiny-vgg").unwrap();
+        sc.cfg.sim = SimBackend::fast();
+        let mut opts = RunOptions::new();
+        if profile {
+            opts = opts.profile(medusa::obs::DEFAULT_WINDOW);
+        }
+        let t0 = Instant::now();
+        let out = opts.run(&sc).expect("profiled scenario run");
+        (t0.elapsed().as_secs_f64(), out)
+    };
+    let (off_s, off) = profiled_with(false);
+    let (on_s, on) = profiled_with(true);
+    assert_eq!(off.fingerprint(), on.fingerprint(), "profiling perturbed the run");
+    let prof = on.profile.as_ref().expect("profiled run carries a report");
+    let lt = &prof.sys.leap;
+    assert_eq!(lt.refusal_total(), lt.refused(), "refusal breakdown out of balance");
+    assert_eq!(lt.cap_total(), lt.taken, "cap breakdown out of balance");
+    assert!(lt.attempts > 0, "leap backend never attempted a leap");
+    let overhead = on_s / off_s.max(1e-12);
+    println!(
+        "observability (single-tiny-vgg, fast): profile off {off_s:.4}s, on {on_s:.4}s \
+         ({overhead:.2}x), fingerprints identical — {} leaps taken of {} attempts",
+        lt.taken, lt.attempts
+    );
+    let pr9_path = format!("{json_dir}/BENCH_PR9.json");
+    let mut j = String::from("{\n");
+    j.push_str("  \"bench\": \"observability_pr9\",\n");
+    j.push_str("  \"scenario\": \"single-tiny-vgg\",\n");
+    j.push_str("  \"backend\": \"elided+leap\",\n");
+    j.push_str(&format!(
+        "  \"overhead\": {{\"profile_off_s\": {}, \"profile_on_s\": {}, \"ratio\": {}, \
+         \"fingerprints_identical\": true}},\n",
+        json_f(off_s),
+        json_f(on_s),
+        json_f(overhead),
+    ));
+    j.push_str("  \"busy_edges\": {\n    \"domains\": [\n");
+    for (i, d) in prof.sys.domains.iter().enumerate() {
+        j.push_str(&format!(
+            "      {{\"domain\": \"{}\", \"stepped\": {}, \"leapt\": {}, \"total\": {}}}{}\n",
+            d.name,
+            d.stepped,
+            d.leapt,
+            d.total(),
+            if i + 1 < prof.sys.domains.len() { "," } else { "" }
+        ));
+    }
+    j.push_str("    ],\n");
+    j.push_str(&format!(
+        "    \"leap\": {{\"attempts\": {}, \"taken\": {}, \"refused\": {}}},\n",
+        lt.attempts,
+        lt.taken,
+        lt.refused(),
+    ));
+    j.push_str("    \"refusals\": {");
+    for (i, b) in LeapBlock::ALL.iter().enumerate() {
+        j.push_str(&format!(
+            "\"{}\": {}{}",
+            b.name(),
+            lt.refusals[*b as usize],
+            if i + 1 < LeapBlock::ALL.len() { ", " } else { "" }
+        ));
+    }
+    j.push_str("},\n    \"caps\": {");
+    for (i, c) in CapSource::ALL.iter().enumerate() {
+        j.push_str(&format!(
+            "\"{}\": {}{}",
+            c.name(),
+            lt.caps[*c as usize],
+            if i + 1 < CapSource::ALL.len() { ", " } else { "" }
+        ));
+    }
+    j.push_str("}\n  }\n}\n");
+    std::fs::write(&pr9_path, &j).expect("writing BENCH_PR9.json");
+    println!("wrote {pr9_path}");
 }

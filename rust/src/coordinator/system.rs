@@ -10,8 +10,9 @@ use crate::fpga::DesignPoint;
 use crate::interconnect::arbiter::{Arbiter, MemCommand, Policy};
 use crate::interconnect::medusa::MedusaTuning;
 use crate::interconnect::{AnyReadNetwork, AnyWriteNetwork, Design, ReadNetwork, WriteNetwork};
+use crate::obs::{CapSource, LeapBlock, SysProfile, SysRecorder};
 use crate::sim::stats::Counter;
-use crate::sim::{Channel, ClockDomain, Scheduler, Stats};
+use crate::sim::{Channel, ClockDomain, Fired, Scheduler, Stats};
 use crate::types::{Line, LineAddr, TaggedLine, Word};
 use anyhow::Result;
 
@@ -59,6 +60,12 @@ pub struct System {
     /// Words force-drained per quiesced tenant (the engine's recovery
     /// progress signal).
     quiesce_drained: Vec<u64>,
+    /// Observability recorder (PR 9) — `None` unless profiling was
+    /// enabled, in which case every hook *reads* existing state and
+    /// writes only into this box. Nothing in here ever feeds back into
+    /// simulation decisions: that is the zero-perturbation contract
+    /// `tests/profile_conformance.rs` enforces.
+    obs: Option<Box<SysRecorder>>,
 }
 
 /// Builder for [`System`]: port-group slicing and fault campaigns stop
@@ -205,6 +212,7 @@ impl System {
             quiesced: vec![false; groups.len()],
             any_quiesced: false,
             quiesce_drained: vec![0; groups.len()],
+            obs: None,
             cfg,
         })
     }
@@ -241,6 +249,112 @@ impl System {
     /// quiesced.
     pub fn quiesce_drained(&self, t: usize) -> u64 {
         self.quiesce_drained.get(t).copied().unwrap_or(0)
+    }
+
+    /// Turn on the observability recorder (PR 9) with the given
+    /// utilization window, in fabric cycles. Call before any traffic so
+    /// the edge-attribution invariant (`stepped + leapt == elapsed`)
+    /// holds from cycle 0. Profiling never perturbs the run: enabled
+    /// and disabled runs are bit-identical on every observable.
+    pub fn enable_profiling(&mut self, window: u64) {
+        let domains: Vec<&'static str> =
+            (0..self.sched.num_domains()).map(|i| self.sched.domain(i).name).collect();
+        self.obs = Some(Box::new(SysRecorder::new(domains, self.lps.len(), window)));
+    }
+
+    pub fn profiling_enabled(&self) -> bool {
+        self.obs.is_some()
+    }
+
+    /// Detach and finalize the recorder (None if profiling was off).
+    pub fn take_profile(&mut self) -> Option<SysProfile> {
+        self.obs.take().map(|r| r.finish())
+    }
+
+    /// Declare the external cap source in force for subsequent
+    /// [`System::try_leap_idle`] calls (the drive loop's tenant-start /
+    /// serving-horizon caps). No-op unless profiling is on; pure
+    /// attribution metadata — never read by the leap itself.
+    pub fn obs_note_cap_source(&mut self, src: CapSource) {
+        if let Some(obs) = self.obs.as_deref_mut() {
+            obs.pending_cap = src;
+        }
+    }
+
+    /// Record the serving queue depth at the current fabric cycle
+    /// (change-driven; no-op unless profiling is on).
+    pub fn obs_serving_depth(&mut self, depth: u64) {
+        let cycle = self.fabric_cycles;
+        if let Some(obs) = self.obs.as_deref_mut() {
+            obs.serving_depth_sample(cycle, depth);
+        }
+    }
+
+    /// Count a refused leap attempt against `why` (no-op when
+    /// profiling is off).
+    #[inline]
+    fn obs_refuse(&mut self, why: LeapBlock) {
+        if let Some(obs) = self.obs.as_deref_mut() {
+            obs.leap.refusals[why as usize] += 1;
+        }
+    }
+
+    /// Attribute a leap refusal to the first blocking component,
+    /// mirroring [`System::leap_horizon`]'s check order exactly. Only
+    /// meaningful right after `leap_horizon` returned `None`; reads the
+    /// same state and nothing else.
+    fn leap_block(&self) -> LeapBlock {
+        if self.cmd_ch.occupancy() != 0
+            || self.rd_line_ch.occupancy() != 0
+            || self.wr_data_ch.occupancy() != 0
+        {
+            return LeapBlock::ChannelOccupied;
+        }
+        // Trunk traffic is a subset of "network busy"; probe it first so
+        // hierarchical trunk queues attribute distinctly.
+        if self.rd_net.trunk_occupancy() + self.wr_net.trunk_occupancy() > 0 {
+            return LeapBlock::TrunkQueue;
+        }
+        if !self.rd_net.is_leap_idle() || !self.wr_net.is_leap_idle() {
+            return LeapBlock::NetworkBusy;
+        }
+        if !self.arbiter.is_leap_idle() {
+            return LeapBlock::ArbiterBusy;
+        }
+        if !self.controller.is_idle() {
+            return LeapBlock::ControllerBusy;
+        }
+        LeapBlock::LpLoadDrain
+    }
+
+    /// Per-stepped-edge recording: domain edge counts plus, on fabric
+    /// edges, one utilization sample. Called after the edge handlers so
+    /// occupancies reflect the post-edge state. Field-disjoint borrows
+    /// only — the recorder is written, everything else is read.
+    fn record_step(&mut self, fired: Fired) {
+        let obs = match self.obs.as_deref_mut() {
+            Some(o) => o,
+            None => return,
+        };
+        for (d, stepped) in obs.stepped.iter_mut().enumerate() {
+            if fired.contains(d) {
+                *stepped += 1;
+            }
+        }
+        if fired.contains(DOM_FABRIC) {
+            obs.util.begin_edge(self.fabric_cycles - 1);
+            for (g, lp) in self.lps.iter().enumerate() {
+                if lp.phase() != Phase::Done {
+                    obs.util.mark_busy(g);
+                }
+            }
+            obs.util.add_occupancy(
+                self.cmd_ch.occupancy() as u64,
+                self.rd_line_ch.occupancy() as u64,
+                self.wr_data_ch.occupancy() as u64,
+                (self.rd_net.trunk_occupancy() + self.wr_net.trunk_occupancy()) as u64,
+            );
+        }
     }
 
     /// One-glance state dump: per-domain elapsed cycles plus each layer
@@ -287,6 +401,19 @@ impl System {
                     String::new()
                 },
             );
+        }
+        s
+    }
+
+    /// [`System::state_dump`] plus the serving front-end's queue and
+    /// batcher state when a serving run is active. The system does not
+    /// own the `ServingRun` (the scenario engine drives it), so the
+    /// serving-aware dump takes it as an argument; watchdog and
+    /// edge-budget diagnostics on serving runs route through here.
+    pub fn state_dump_with(&self, serving: Option<&crate::serving::ServingRun>) -> String {
+        let mut s = self.state_dump();
+        if let Some(srv) = serving {
+            s.push_str(&srv.state_dump());
         }
         s
     }
@@ -341,6 +468,11 @@ impl System {
         }
         if fired.contains(DOM_TRUNK) {
             self.trunk_edge();
+        }
+        // Observability is read-only and off the hot path: one branch
+        // when disabled, pure recording when enabled.
+        if self.obs.is_some() {
+            self.record_step(fired);
         }
     }
 
@@ -422,8 +554,17 @@ impl System {
     /// points); `max_steps` bounds the scheduler steps replaced
     /// ([`System::run_edges`]' contract).
     pub fn try_leap_idle(&mut self, max_fabric: u64, max_steps: u64) -> Option<crate::sim::Leap> {
+        // Stepwise backends never attempt (attempts stays 0 and the
+        // attribution invariants hold trivially); every path below the
+        // bump records exactly one refusal or one taken leap, so
+        // `attempts == taken + refusals.sum()` by construction. The
+        // recording is observation-only: identical control flow, same
+        // probes a non-profiled run evaluates, in the same order.
         if !self.cfg.sim.edges.is_leap() {
             return None;
+        }
+        if let Some(obs) = self.obs.as_deref_mut() {
+            obs.leap.attempts += 1;
         }
         // Fault edges cap the horizon exactly like tenant start cycles:
         // a leap may reach the next slowdown-window start or wedge cycle
@@ -431,16 +572,58 @@ impl System {
         // suppression (slowdown/wedge/quiesce) is in force — those
         // per-cycle effects must be stepped to stay bit-identical.
         if self.any_quiesced {
+            self.obs_refuse(LeapBlock::Quiesced);
             return None;
         }
-        let fault_cap = self.faults.fabric_leap_cap(self.fabric_cycles)?;
-        let k = self.leap_horizon()?.min(max_fabric).min(fault_cap);
+        let Some(fault_cap) = self.faults.fabric_leap_cap(self.fabric_cycles) else {
+            self.obs_refuse(LeapBlock::FaultWindow);
+            return None;
+        };
+        let Some(horizon) = self.leap_horizon() else {
+            if self.obs.is_some() {
+                let why = self.leap_block();
+                self.obs_refuse(why);
+            }
+            return None;
+        };
+        let k = horizon.min(max_fabric).min(fault_cap);
         if k == 0 {
+            self.obs_refuse(LeapBlock::ZeroCap);
             return None;
         }
-        let leap = self.sched.leap(DOM_FABRIC, k, max_steps)?;
+        let Some(leap) = self.sched.leap(DOM_FABRIC, k, max_steps) else {
+            self.obs_refuse(LeapBlock::StepBudget);
+            return None;
+        };
         let fab = leap.fired[DOM_FABRIC];
         let mem = leap.fired[DOM_MEM];
+        if let Some(obs) = self.obs.as_deref_mut() {
+            obs.leap.taken += 1;
+            for (d, leapt) in obs.leapt.iter_mut().enumerate() {
+                *leapt += leap.fired[d];
+            }
+            // What bounded this leap? Step-budget truncation first
+            // (the scheduler covered fewer fabric edges than asked);
+            // otherwise whichever term of min(horizon, max_fabric,
+            // fault_cap) won, ties to the intrinsic horizon.
+            let src = if fab < k {
+                CapSource::StepBudget
+            } else if horizon <= max_fabric && horizon <= fault_cap {
+                if horizon == u64::MAX {
+                    CapSource::Uncapped
+                } else {
+                    CapSource::LpCompute
+                }
+            } else if fault_cap <= max_fabric {
+                CapSource::FaultWindow
+            } else {
+                // The caller's cap won: the drive loop names it via
+                // obs_note_cap_source (tenant start / serving horizon);
+                // plain run loops default to the edge budget.
+                obs.pending_cap
+            };
+            obs.leap.caps[src as usize] += 1;
+        }
         // Trunk edges over an idle span are pure no-ops (the networks'
         // is_leap_idle gate requires the trunk queues empty), so the
         // counter bump is the entire bulk-apply. `fired[DOM_TRUNK]` is

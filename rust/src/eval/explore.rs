@@ -92,6 +92,24 @@ pub fn bench_json(
     for (k, v) in extras {
         j.push_str(&format!("  \"{k}\": {v},\n"));
     }
+    // Campaign telemetry: per-point eval time and cache hit/miss, in
+    // the same canonical grid order as `evaluated`. Host-side only —
+    // the CSV (what CI byte-compares) never carries it.
+    j.push_str("  \"telemetry\": {\n");
+    let eval_total: f64 = result.timings.iter().map(|t| t.eval_s).sum();
+    j.push_str(&format!("    \"eval_seconds_total\": {eval_total:.6},\n"));
+    j.push_str("    \"points\": [\n");
+    for (i, ((p, _), t)) in result.evaluated.iter().zip(result.timings.iter()).enumerate() {
+        j.push_str(&format!(
+            "      {{\"index\": {}, \"design\": \"{}\", \"cache_hit\": {}, \"eval_ms\": {:.3}}}{}\n",
+            t.index,
+            p.design.spec(),
+            t.cache_hit,
+            t.eval_s * 1e3,
+            if i + 1 < result.evaluated.len() { "," } else { "" }
+        ));
+    }
+    j.push_str("    ]\n  },\n");
     j.push_str("  \"frontier\": [\n");
     for (i, e) in result.frontier.iter().enumerate() {
         j.push_str(&format!(
@@ -144,6 +162,9 @@ mod tests {
         assert!(j.contains("\"bench\": \"explore_pr4\""));
         assert!(j.contains("\"elapsed_s\": 1.5"));
         assert!(j.contains("\"frontier\""));
+        assert!(j.contains("\"telemetry\""), "per-point campaign telemetry must render");
+        assert!(j.contains("\"cache_hit\": false"));
+        assert_eq!(j.matches("\"eval_ms\"").count(), r.evaluated.len());
         let line = summary_line(&r, &space, "grid");
         assert!(line.contains("frontier size"));
     }

@@ -49,6 +49,11 @@ pub struct SearchResult {
     pub cache_hits: usize,
     /// Evaluations actually computed (simulated) this run.
     pub computed: usize,
+    /// Per-point campaign telemetry, aligned with `evaluated` (same
+    /// canonical grid order): whether the point was answered from the
+    /// cache and its host-side evaluation time. Host time only — never
+    /// part of cache keys or metric comparisons.
+    pub timings: Vec<crate::obs::PointTiming>,
 }
 
 /// The hill-climb objective: achieved bandwidth per unit of LUT + FF.
@@ -68,6 +73,7 @@ struct Evaluator<'a> {
     workers: usize,
     backend: SimBackend,
     memo: BTreeMap<usize, Metrics>,
+    timings: BTreeMap<usize, crate::obs::PointTiming>,
     cache_hits: usize,
     computed: usize,
 }
@@ -86,6 +92,10 @@ impl<'a> Evaluator<'a> {
             if let Some(c) = cache.as_deref() {
                 if let Some(m) = c.get(self.key(i)) {
                     self.memo.insert(i, m);
+                    self.timings.insert(
+                        i,
+                        crate::obs::PointTiming { index: i, cache_hit: true, eval_s: 0.0 },
+                    );
                     self.cache_hits += 1;
                     continue;
                 }
@@ -99,14 +109,24 @@ impl<'a> Evaluator<'a> {
         let serving = self.serving;
         let backend = self.backend;
         let points: Vec<ExplorePoint> = todo.iter().map(|&i| self.all[i]).collect();
-        let metrics =
-            par_map_with(self.workers, &points, move |p| evaluate_impl(p, probe, backend, serving));
-        for (&i, m) in todo.iter().zip(metrics) {
+        // Wall-clock per evaluation rides alongside the metrics. It is
+        // campaign telemetry only: the metrics themselves (and the
+        // cache entries keyed off them) are untouched, so search
+        // results stay bit-identical with or without a consumer of
+        // `timings`.
+        let metrics = par_map_with(self.workers, &points, move |p| {
+            let t0 = std::time::Instant::now();
+            let m = evaluate_impl(p, probe, backend, serving);
+            (m, t0.elapsed().as_secs_f64())
+        });
+        for (&i, (m, eval_s)) in todo.iter().zip(metrics) {
             let key = self.key(i);
             if let Some(c) = cache.as_deref_mut() {
                 c.insert(key, m);
             }
             self.memo.insert(i, m);
+            self.timings
+                .insert(i, crate::obs::PointTiming { index: i, cache_hit: false, eval_s });
             self.computed += 1;
         }
     }
@@ -165,6 +185,7 @@ pub(crate) fn run_search_impl(
         workers,
         backend,
         memo: BTreeMap::new(),
+        timings: BTreeMap::new(),
         cache_hits: 0,
         computed: 0,
     };
@@ -213,7 +234,14 @@ pub(crate) fn run_search_impl(
     let evaluated: Vec<(ExplorePoint, Metrics)> =
         ev.memo.iter().map(|(&i, &m)| (all[i], m)).collect();
     let frontier = pareto_frontier(&evaluated);
-    Ok(SearchResult { evaluated, frontier, cache_hits: ev.cache_hits, computed: ev.computed })
+    let timings: Vec<crate::obs::PointTiming> = ev.timings.into_values().collect();
+    Ok(SearchResult {
+        evaluated,
+        frontier,
+        cache_hits: ev.cache_hits,
+        computed: ev.computed,
+        timings,
+    })
 }
 
 /// Grid coordinates (port idx, width-mult idx, depth idx, design rank)
@@ -339,6 +367,27 @@ mod tests {
             r.evaluated.iter().all(|(_, m)| !m.feasible() || m.serving_p99 > 0),
             "every feasible point under a serving probe must measure a tail latency"
         );
+    }
+
+    #[test]
+    fn timings_align_with_the_evaluated_set_and_count_hits() {
+        let space = tiny_space();
+        let dir = std::env::temp_dir().join(format!("medusa-timings-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.tsv");
+        let mut cache = ExploreCache::open(&path);
+        let cold = run_search(&space, &Strategy::Grid, 1, 2, Some(&mut cache)).unwrap();
+        assert_eq!(cold.timings.len(), cold.evaluated.len());
+        assert!(cold.timings.iter().all(|t| !t.cache_hit), "cold run cannot hit the cache");
+        assert_eq!(cold.timings.iter().filter(|t| !t.cache_hit).count(), cold.computed);
+        // Timings are in canonical grid order, like `evaluated`.
+        assert!(cold.timings.windows(2).all(|w| w[0].index < w[1].index));
+        let mut cache = ExploreCache::open(&path);
+        let warm = run_search(&space, &Strategy::Grid, 1, 2, Some(&mut cache)).unwrap();
+        assert!(warm.timings.iter().all(|t| t.cache_hit), "warm run must hit on every point");
+        assert_eq!(warm.timings.iter().filter(|t| t.cache_hit).count(), warm.cache_hits);
+        assert_eq!(cold.evaluated, warm.evaluated, "telemetry must not perturb results");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -198,6 +198,10 @@ impl ReadNetwork for HierReadNetwork {
             && self.clusters.iter().all(|c| c.is_leap_idle())
             && self.bypass.as_ref().map_or(true, |b| b.is_leap_idle())
     }
+
+    fn trunk_occupancy(&self) -> usize {
+        self.trunk.len()
+    }
 }
 
 #[cfg(test)]

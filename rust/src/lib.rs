@@ -37,6 +37,7 @@ pub mod fault;
 pub mod fpga;
 pub mod hw;
 pub mod interconnect;
+pub mod obs;
 pub mod run;
 pub mod runtime;
 pub mod serving;

@@ -58,6 +58,7 @@ fn run(argv: &[String]) -> Result<()> {
         "freq" => cmd_freq(rest),
         "sweep" => cmd_sweep(rest),
         "explore" => cmd_explore(rest),
+        "profile" => cmd_profile(rest),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -81,6 +82,7 @@ fn print_usage() {
          \x20 freq [options]                  P&R peak frequency for one design point\n\
          \x20 sweep                           Fig 6 sweep as CSV\n\
          \x20 explore [options]               Pareto search over the hybrid design space\n\
+         \x20 profile FILE                    pretty-print a --profile observability report\n\
          \x20 info                            environment / artifacts status\n"
     );
 }
@@ -102,6 +104,40 @@ fn backend_opts(args: &Args, default: SimBackend) -> Result<SimBackend> {
             .ok_or_else(|| anyhow::anyhow!("--edges must be stepwise|leap, got {e:?}"))?;
     }
     Ok(b)
+}
+
+/// Resolve `--profile` / `--profile-window` into run options: the
+/// report path (when profiling was requested) plus a [`RunOptions`]
+/// with the profiling knob set accordingly.
+fn profile_opts(args: &Args) -> Result<(Option<&str>, medusa::run::RunOptions)> {
+    let path = args.get("profile");
+    let window = args
+        .get_usize("profile-window")?
+        .map(|w| w as u64)
+        .unwrap_or(medusa::obs::DEFAULT_WINDOW);
+    let mut opts = medusa::run::RunOptions::new();
+    if path.is_some() {
+        opts = opts.profile(window);
+    }
+    Ok((path, opts))
+}
+
+/// Persist a profiled outcome's observability report as JSON (no-op
+/// when `--profile` was not given).
+fn write_profile(
+    out: &medusa::workload::ScenarioOutcome,
+    path: Option<&str>,
+    backend: SimBackend,
+) -> Result<()> {
+    let Some(path) = path else { return Ok(()) };
+    let p = out.profile.as_ref().expect("profiling enabled when --profile is given");
+    let label = format!("{}+{}", backend.payload.name(), backend.edges.name());
+    std::fs::write(
+        path,
+        medusa::obs::report::run_profile_json(p, &out.scenario, out.design, &label),
+    )?;
+    println!("wrote profile -> {path}");
+    Ok(())
 }
 
 /// Hybrid/hierarchical specs carry parameters that only make sense on a
@@ -224,6 +260,8 @@ fn cmd_run(rest: &[String]) -> Result<()> {
              watchdog=N,seed=N,policy=error|degrade (overrides the scenario's [faults])",
         )
         .opt("fault-seed", "override the fault campaign seed (keeps the rest of the spec)")
+        .opt("profile", "write the observability report (cycle attribution, leap telemetry, utilization) as JSON to this path")
+        .opt("profile-window", "utilization sampling window in fabric cycles (default 4096)")
         .parse(rest)?;
     let which = args
         .get("scenario")
@@ -252,12 +290,14 @@ fn cmd_run(rest: &[String]) -> Result<()> {
         println!("payload elided: stats/cycles exact, golden data checks skipped");
     }
     let capture = args.get("capture");
+    let (profile_path, opts) = profile_opts(&args)?;
     let (outcome, trace) = if capture.is_some() {
-        let (o, t) = medusa::workload::run_scenario_captured(&sc)?;
+        let (o, t) = opts.run_captured(&sc)?;
         (o, Some(t))
     } else {
-        (medusa::workload::run_scenario(&sc)?, None)
+        (opts.run(&sc)?, None)
     };
+    write_profile(&outcome, profile_path, sc.cfg.sim)?;
     println!(
         "scenario {} on {} @ {:.0} MHz fabric: {} tenants, {} fabric cycles, {:.3} ms simulated",
         outcome.scenario,
@@ -308,13 +348,17 @@ fn cmd_replay(rest: &[String]) -> Result<()> {
     let args = Args::default()
         .opt("payload", "full | elided — replay with payload shadows (stats still verified)")
         .opt("edges", "stepwise | leap — skip globally idle clock edges, exactly")
+        .opt("profile", "write the observability report as JSON to this path")
+        .opt("profile-window", "utilization sampling window in fabric cycles (default 4096)")
         .parse(rest)?;
     let [path] = args.positional() else {
         bail!("replay needs exactly one trace file argument");
     };
     let backend = backend_opts(&args, SimBackend::full())?;
     let trace = medusa::sim::trace::ScenarioTrace::from_file(path)?;
-    let out = medusa::run::RunOptions::new().backend(backend).verify_replay(&trace)?;
+    let (profile_path, opts) = profile_opts(&args)?;
+    let out = opts.backend(backend).verify_replay(&trace)?;
+    write_profile(&out, profile_path, backend)?;
     println!(
         "replayed {} ({} steps, {} tenants) on {}: {} fabric cycles",
         trace.header.scenario,
@@ -348,6 +392,8 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .opt("payload", "full | elided — elided skips payload, stats stay exact")
         .opt("edges", "stepwise | leap — leap skips idle inter-arrival gaps, exactly")
         .opt("json", "write the serving report as JSON to this path")
+        .opt("profile", "write the observability report as JSON to this path")
+        .opt("profile-window", "utilization sampling window in fabric cycles (default 4096)")
         .flag("smoke", "CI smoke: serving-poisson builtin on the fast backend")
         .parse(rest)?;
     let which = args.get_or("scenario", "serving-poisson");
@@ -375,7 +421,9 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     );
     let default_backend = if args.has_flag("smoke") { SimBackend::fast() } else { sc.cfg.sim };
     let backend = backend_opts(&args, default_backend)?;
-    let out = medusa::run::RunOptions::new().backend(backend).run(&sc)?;
+    let (profile_path, opts) = profile_opts(&args)?;
+    let out = opts.backend(backend).run(&sc)?;
+    write_profile(&out, profile_path, backend)?;
     let report = out.serving.as_ref().expect("serving scenario must yield a serving report");
     println!(
         "served {} on {} @ {:.0} MHz fabric: {} fabric cycles, {:.3} ms simulated",
@@ -500,6 +548,18 @@ fn cmd_sweep(_rest: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_profile(rest: &[String]) -> Result<()> {
+    let args = Args::default().parse(rest)?;
+    let [path] = args.positional() else {
+        bail!("profile needs exactly one report file argument (a --profile output)");
+    };
+    let text = std::fs::read_to_string(path)?;
+    let rendered = medusa::obs::report::pretty_print(&text)
+        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    print!("{rendered}");
+    Ok(())
+}
+
 fn cmd_explore(rest: &[String]) -> Result<()> {
     use medusa::explore::{DesignSpace, ExploreCache, Strategy};
     let args = Args::default()
@@ -516,6 +576,7 @@ fn cmd_explore(rest: &[String]) -> Result<()> {
         )
         .opt("cache", "result cache file (default .medusa-explore.cache)")
         .opt("json", "write BENCH_PR4.json-format results to this path")
+        .opt("profile", "write campaign telemetry (per-point eval time, cache hit/miss, host spans) as JSON to this path")
         .opt("payload", "full | elided (default elided — stats-exact fast backend)")
         .opt("edges", "stepwise | leap (default leap)")
         .flag("smoke", "tiny CI grid instead of the default 100+ point grid")
@@ -563,12 +624,31 @@ fn cmd_explore(rest: &[String]) -> Result<()> {
     // In --csv mode stdout carries ONLY the CSV (the `medusa sweep`
     // contract); the human summary goes to stderr instead.
     let csv = args.has_flag("csv");
+    let t_render = std::time::Instant::now();
     if csv {
         print!("{}", medusa::eval::explore::full_table(&result).to_csv());
     } else {
         print!("{}", medusa::eval::explore::full_table(&result).to_text());
         println!();
         print!("{}", medusa::eval::explore::frontier_table(&result).to_text());
+    }
+    if let Some(path) = args.get("profile") {
+        let host = [("search", elapsed), ("render", t_render.elapsed().as_secs_f64())];
+        let points: Vec<(String, medusa::obs::PointTiming)> = result
+            .evaluated
+            .iter()
+            .zip(result.timings.iter())
+            .map(|((p, _), t)| (p.design.spec(), *t))
+            .collect();
+        std::fs::write(
+            path,
+            medusa::obs::report::explore_profile_json(&label, &space.probe, &host, &points),
+        )?;
+        if csv {
+            eprintln!("wrote profile -> {path}");
+        } else {
+            println!("wrote profile -> {path}");
+        }
     }
     let note = |line: String| {
         if csv {

@@ -1,0 +1,518 @@
+//! Zero-perturbation observability (PR 9).
+//!
+//! An always-compiled, off-by-default profiling layer with one hard
+//! contract: **a run with profiling enabled is bit-identical — stats,
+//! cycles, traces, fingerprints — to the same run with it disabled**
+//! (`tests/profile_conformance.rs` enforces this with the same
+//! discipline as the elided-vs-full and leap-vs-stepwise suites).
+//!
+//! The contract is held structurally, not by care alone:
+//!
+//! * every recorder hook only *reads* state the simulator already
+//!   computes (channel occupancy, `is_leap_idle`, LP phases, the leap
+//!   horizon the scheduler was about to take anyway) — no hook feeds a
+//!   value back into control flow, counters, PRNG draws, or traces;
+//! * profile data lives in its own [`SysRecorder`] / [`RunProfile`]
+//!   structs, never in [`Stats`](crate::sim::Stats) — so the counter
+//!   registry that trace expect blocks and outcome fingerprints
+//!   serialize is untouched;
+//! * host-time spans use `std::time::Instant` only when profiling is
+//!   on, and the readings go straight into the report — they never
+//!   enter cache keys, traces, or anything a conformance test hashes.
+//!
+//! Three instruments:
+//!
+//! 1. **Cycle attribution** — per clock domain, edges stepped vs
+//!    leapt, plus a per-reason breakdown of every refused leap
+//!    ([`LeapBlock`]) and a cap-source breakdown of every taken leap
+//!    ([`CapSource`]). Invariants (property-tested): per domain,
+//!    `stepped + leapt` equals the domain's total elapsed cycles;
+//!    refusal reasons sum exactly to `attempts - taken`; cap sources
+//!    sum exactly to `taken`.
+//! 2. **Utilization timelines** — windowed occupancy series: per
+//!    port-group activity, CDC channel occupancy, trunk queue depth,
+//!    and (on serving runs) a change-driven serving queue-depth
+//!    series. Only *stepped* fabric edges contribute samples: a leapt
+//!    span is idle by construction (that is what made it leapable), so
+//!    absent windows read as "fully idle".
+//! 3. **Host-time spans** — wall-clock per run phase
+//!    (build/precompute/drive/report) and per explorer point
+//!    ([`PointTiming`]: eval seconds + cache hit/miss).
+
+pub mod json;
+pub mod report;
+
+/// Default utilization window, in fabric cycles.
+pub const DEFAULT_WINDOW: u64 = 4096;
+
+/// Cap on retained utilization windows: when a run outgrows it the
+/// series self-coarsens (adjacent windows merge, the window doubles),
+/// so arbitrarily long runs profile in bounded memory.
+const MAX_WINDOWS: usize = 2048;
+
+/// Why a leap attempt was refused outright (no edges were leapt).
+/// Mirrors the check order of `System::leap_horizon` so every refusal
+/// lands on the *first* blocking component, the one that would act on
+/// the very next edge.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LeapBlock {
+    /// A CDC channel (cmd / rd_line / wr_data) holds in-flight data.
+    ChannelOccupied,
+    /// A hierarchical trunk queue is non-empty (checked before the
+    /// generic network probe so trunk traffic attributes distinctly).
+    TrunkQueue,
+    /// A read/write network holds state beyond the trunk queue.
+    NetworkBusy,
+    /// The arbiter has pending requests or writes in flight.
+    ArbiterBusy,
+    /// The memory controller's command engine is mid-operation.
+    ControllerBusy,
+    /// Some layer processor is in its Load or Drain phase.
+    LpLoadDrain,
+    /// A fault suppression window (slowdown/wedge) is in force.
+    FaultWindow,
+    /// A tenant is quiesced by the degrade policy (stepped exactly).
+    Quiesced,
+    /// Every component was idle but the caller's cap (or the fault
+    /// edge) allowed zero fabric cycles.
+    ZeroCap,
+    /// The scheduler could not fit even one fabric edge in the step
+    /// budget (or the domain count exceeds the exact-leap limit).
+    StepBudget,
+}
+
+impl LeapBlock {
+    pub const ALL: [LeapBlock; 10] = [
+        LeapBlock::ChannelOccupied,
+        LeapBlock::TrunkQueue,
+        LeapBlock::NetworkBusy,
+        LeapBlock::ArbiterBusy,
+        LeapBlock::ControllerBusy,
+        LeapBlock::LpLoadDrain,
+        LeapBlock::FaultWindow,
+        LeapBlock::Quiesced,
+        LeapBlock::ZeroCap,
+        LeapBlock::StepBudget,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LeapBlock::ChannelOccupied => "channel_occupied",
+            LeapBlock::TrunkQueue => "trunk_queue",
+            LeapBlock::NetworkBusy => "network_busy",
+            LeapBlock::ArbiterBusy => "arbiter_busy",
+            LeapBlock::ControllerBusy => "controller_busy",
+            LeapBlock::LpLoadDrain => "lp_load_drain",
+            LeapBlock::FaultWindow => "fault_window",
+            LeapBlock::Quiesced => "quiesced",
+            LeapBlock::ZeroCap => "zero_cap",
+            LeapBlock::StepBudget => "step_budget",
+        }
+    }
+}
+
+/// What bounded a *taken* leap — which constraint set the number of
+/// fabric cycles actually covered. Ties attribute to the intrinsic
+/// horizon (the leap would have stopped there regardless of caps).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CapSource {
+    /// No finite bound: everything was Done and the span ran to the
+    /// caller's budget.
+    Uncapped,
+    /// A layer processor's compute countdown set the horizon.
+    LpCompute,
+    /// The next fault edge (refresh/CDC/slowdown window start).
+    FaultWindow,
+    /// A waiting tenant's start cycle (scenario engine cap).
+    TenantStart,
+    /// The serving layer's next arrival/retire event.
+    ServingHorizon,
+    /// The caller's edge/cycle budget (run loops, benchmarks).
+    EdgeBudget,
+    /// The scheduler's step budget truncated the span.
+    StepBudget,
+}
+
+impl CapSource {
+    pub const ALL: [CapSource; 7] = [
+        CapSource::Uncapped,
+        CapSource::LpCompute,
+        CapSource::FaultWindow,
+        CapSource::TenantStart,
+        CapSource::ServingHorizon,
+        CapSource::EdgeBudget,
+        CapSource::StepBudget,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CapSource::Uncapped => "uncapped",
+            CapSource::LpCompute => "lp_compute",
+            CapSource::FaultWindow => "fault_window",
+            CapSource::TenantStart => "tenant_start",
+            CapSource::ServingHorizon => "serving_horizon",
+            CapSource::EdgeBudget => "edge_budget",
+            CapSource::StepBudget => "step_budget",
+        }
+    }
+}
+
+/// Leap attempt accounting. Invariants:
+/// `attempts == taken + refusals.sum()` and `caps.sum() == taken`.
+#[derive(Clone, Debug, Default)]
+pub struct LeapTelemetry {
+    pub attempts: u64,
+    pub taken: u64,
+    /// Refusal count per [`LeapBlock`], indexed by discriminant.
+    pub refusals: [u64; LeapBlock::ALL.len()],
+    /// Cap-source count per [`CapSource`], indexed by discriminant.
+    pub caps: [u64; CapSource::ALL.len()],
+}
+
+impl LeapTelemetry {
+    pub fn refused(&self) -> u64 {
+        self.attempts - self.taken
+    }
+
+    pub fn refusal_total(&self) -> u64 {
+        self.refusals.iter().sum()
+    }
+
+    pub fn cap_total(&self) -> u64 {
+        self.caps.iter().sum()
+    }
+}
+
+/// One utilization window: sums of per-edge observations over up to
+/// `window` stepped fabric cycles starting at `start`. Divide by
+/// `edges` for mean occupancy; `edges < window` happens in the final
+/// window and in windows partially covered by leaps.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WindowSample {
+    /// First fabric cycle the window covers.
+    pub start: u64,
+    /// Stepped fabric edges observed (leapt edges never sample).
+    pub edges: u64,
+    /// Per port group: edges on which that group's layer processor was
+    /// not Done (busy-ish: loading, computing, or draining).
+    pub busy: Vec<u64>,
+    /// Summed cmd-channel occupancy over the window's edges.
+    pub cmd_occ: u64,
+    /// Summed read-line-channel occupancy.
+    pub rd_line_occ: u64,
+    /// Summed write-data-channel occupancy.
+    pub wr_data_occ: u64,
+    /// Summed trunk queue depth (read + write; 0 on flat designs).
+    pub trunk_occ: u64,
+}
+
+impl WindowSample {
+    fn fresh(start: u64, groups: usize) -> Self {
+        WindowSample { start, busy: vec![0; groups], ..Default::default() }
+    }
+
+    fn merge(&mut self, other: &WindowSample) {
+        self.edges += other.edges;
+        for (a, b) in self.busy.iter_mut().zip(other.busy.iter()) {
+            *a += b;
+        }
+        self.cmd_occ += other.cmd_occ;
+        self.rd_line_occ += other.rd_line_occ;
+        self.wr_data_occ += other.wr_data_occ;
+        self.trunk_occ += other.trunk_occ;
+    }
+}
+
+/// Windowed occupancy accumulator (instrument b). Bounded memory: at
+/// [`MAX_WINDOWS`] retained windows the series coarsens in place.
+#[derive(Clone, Debug)]
+pub struct Utilization {
+    pub window: u64,
+    pub groups: usize,
+    samples: Vec<WindowSample>,
+    cur: WindowSample,
+    cur_open: bool,
+}
+
+impl Utilization {
+    fn new(groups: usize, window: u64) -> Self {
+        let window = window.max(1);
+        Utilization {
+            window,
+            groups,
+            samples: Vec::new(),
+            cur: WindowSample::fresh(0, groups),
+            cur_open: false,
+        }
+    }
+
+    /// Called once per *stepped* fabric edge, before the per-edge
+    /// `mark_busy` / `add_occupancy` observations.
+    pub(crate) fn begin_edge(&mut self, cycle: u64) {
+        let start = (cycle / self.window) * self.window;
+        if self.cur_open && self.cur.start != start {
+            self.roll();
+        }
+        if !self.cur_open {
+            self.cur = WindowSample::fresh(start, self.groups);
+            self.cur_open = true;
+        }
+        self.cur.edges += 1;
+    }
+
+    pub(crate) fn mark_busy(&mut self, group: usize) {
+        self.cur.busy[group] += 1;
+    }
+
+    pub(crate) fn add_occupancy(&mut self, cmd: u64, rd_line: u64, wr_data: u64, trunk: u64) {
+        self.cur.cmd_occ += cmd;
+        self.cur.rd_line_occ += rd_line;
+        self.cur.wr_data_occ += wr_data;
+        self.cur.trunk_occ += trunk;
+    }
+
+    fn roll(&mut self) {
+        let groups = self.groups;
+        let done = std::mem::replace(&mut self.cur, WindowSample::fresh(0, groups));
+        self.samples.push(done);
+        self.cur_open = false;
+        if self.samples.len() >= MAX_WINDOWS {
+            self.coarsen();
+        }
+    }
+
+    /// Merge adjacent window pairs and double the window size; an odd
+    /// trailing window stands alone under the new (coarser) width.
+    fn coarsen(&mut self) {
+        self.window *= 2;
+        let mut merged: Vec<WindowSample> = Vec::with_capacity(self.samples.len() / 2 + 1);
+        for s in self.samples.drain(..) {
+            match merged.last_mut() {
+                Some(last) if s.start / self.window == last.start / self.window => {
+                    last.merge(&s);
+                }
+                _ => merged.push(s),
+            }
+        }
+        self.samples = merged;
+    }
+
+    fn finish(mut self) -> (u64, Vec<WindowSample>) {
+        if self.cur_open {
+            self.roll();
+        }
+        (self.window, self.samples)
+    }
+}
+
+/// Live recorder owned by the `System` while profiling is on. Every
+/// field is write-only from the simulator's point of view: nothing in
+/// here is ever read back into simulation decisions.
+#[derive(Clone, Debug)]
+pub struct SysRecorder {
+    /// Clock domain names, scheduler order (fabric, mem[, trunk]).
+    pub domains: Vec<&'static str>,
+    /// Edges executed one at a time, per domain.
+    pub stepped: Vec<u64>,
+    /// Edges covered by idle-span leaps, per domain.
+    pub leapt: Vec<u64>,
+    pub leap: LeapTelemetry,
+    /// The external cap source in force for the next leap attempt —
+    /// set by the drive loop before each `try_leap_idle` call so a
+    /// budget-capped leap attributes to the right constraint. Defaults
+    /// to [`CapSource::EdgeBudget`] (the run-loop budget).
+    pub pending_cap: CapSource,
+    pub util: Utilization,
+    /// Change-driven serving queue-depth series: `(fabric_cycle,
+    /// total_queued)` pushed only when the depth differs from the
+    /// previous sample.
+    pub serving_depth: Vec<(u64, u64)>,
+}
+
+impl SysRecorder {
+    pub fn new(domains: Vec<&'static str>, groups: usize, window: u64) -> Self {
+        let n = domains.len();
+        SysRecorder {
+            domains,
+            stepped: vec![0; n],
+            leapt: vec![0; n],
+            leap: LeapTelemetry::default(),
+            pending_cap: CapSource::EdgeBudget,
+            util: Utilization::new(groups, window),
+            serving_depth: Vec::new(),
+        }
+    }
+
+    pub fn serving_depth_sample(&mut self, cycle: u64, depth: u64) {
+        if self.serving_depth.last().map(|&(_, d)| d) != Some(depth) {
+            self.serving_depth.push((cycle, depth));
+        }
+    }
+
+    pub fn finish(self) -> SysProfile {
+        let domains = self
+            .domains
+            .iter()
+            .zip(self.stepped.iter().zip(self.leapt.iter()))
+            .map(|(&name, (&stepped, &leapt))| DomainEdges { name, stepped, leapt })
+            .collect();
+        let (window, utilization) = self.util.finish();
+        SysProfile {
+            domains,
+            leap: self.leap,
+            window,
+            groups: self.util.groups,
+            utilization,
+            serving_depth: self.serving_depth,
+        }
+    }
+}
+
+/// Per-domain edge attribution: `stepped + leapt == total elapsed
+/// cycles` for that domain, enforced by the conformance suite.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DomainEdges {
+    pub name: &'static str,
+    pub stepped: u64,
+    pub leapt: u64,
+}
+
+impl DomainEdges {
+    pub fn total(&self) -> u64 {
+        self.stepped + self.leapt
+    }
+}
+
+/// Finished simulator-side profile (instruments a and b).
+#[derive(Clone, Debug)]
+pub struct SysProfile {
+    pub domains: Vec<DomainEdges>,
+    pub leap: LeapTelemetry,
+    /// Final utilization window width (>= the configured window if the
+    /// series coarsened).
+    pub window: u64,
+    pub groups: usize,
+    pub utilization: Vec<WindowSample>,
+    pub serving_depth: Vec<(u64, u64)>,
+}
+
+/// A complete run profile: simulator-side attribution plus host-time
+/// spans (instrument c). Attached to `ScenarioOutcome` *outside* the
+/// fingerprint — the outcome hash never sees it.
+#[derive(Clone, Debug)]
+pub struct RunProfile {
+    pub sys: SysProfile,
+    /// `(phase, seconds)` host wall-clock spans in phase order:
+    /// build, precompute, drive, report.
+    pub host: Vec<(&'static str, f64)>,
+}
+
+/// Per-point explorer telemetry: host-side only, never part of the
+/// memo key, the on-disk cache, or the evaluated-set comparison.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PointTiming {
+    /// Grid index of the point in its design space.
+    pub index: usize,
+    /// True when the metrics came from the on-disk cache (eval_s is 0).
+    pub cache_hit: bool,
+    /// Wall-clock seconds the evaluation took (0 on cache hits).
+    pub eval_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_rolls_and_finishes() {
+        let mut u = Utilization::new(2, 4);
+        for c in 0..10u64 {
+            u.begin_edge(c);
+            u.mark_busy(0);
+            u.add_occupancy(1, 0, 0, 0);
+        }
+        let (w, samples) = u.finish();
+        assert_eq!(w, 4);
+        assert_eq!(samples.len(), 3);
+        assert_eq!(samples[0].start, 0);
+        assert_eq!(samples[0].edges, 4);
+        assert_eq!(samples[1].start, 4);
+        assert_eq!(samples[2].start, 8);
+        assert_eq!(samples[2].edges, 2);
+        assert_eq!(samples[0].busy, vec![4, 0]);
+        assert_eq!(samples[0].cmd_occ, 4);
+    }
+
+    #[test]
+    fn sparse_edges_skip_windows() {
+        // Leapt spans never call begin_edge: windows with no stepped
+        // edges simply don't exist in the series.
+        let mut u = Utilization::new(1, 4);
+        u.begin_edge(1);
+        u.begin_edge(100);
+        u.begin_edge(101);
+        let (_, samples) = u.finish();
+        assert_eq!(samples.len(), 2);
+        assert_eq!(samples[0].start, 0);
+        assert_eq!(samples[0].edges, 1);
+        assert_eq!(samples[1].start, 100);
+        assert_eq!(samples[1].edges, 2);
+    }
+
+    #[test]
+    fn coarsening_preserves_totals() {
+        let mut u = Utilization::new(1, 1);
+        let n = (MAX_WINDOWS as u64) * 3;
+        for c in 0..n {
+            u.begin_edge(c);
+            u.mark_busy(0);
+        }
+        let (w, samples) = u.finish();
+        assert!(w > 1, "series must have coarsened");
+        assert!(samples.len() <= MAX_WINDOWS);
+        let edges: u64 = samples.iter().map(|s| s.edges).sum();
+        let busy: u64 = samples.iter().map(|s| s.busy[0]).sum();
+        assert_eq!(edges, n);
+        assert_eq!(busy, n);
+        // Starts strictly increase and stay window-aligned after the
+        // final coarsening pass.
+        for pair in samples.windows(2) {
+            assert!(pair[0].start < pair[1].start);
+        }
+    }
+
+    #[test]
+    fn serving_depth_is_change_driven() {
+        let mut r = SysRecorder::new(vec!["fabric", "mem"], 1, 16);
+        r.serving_depth_sample(0, 0);
+        r.serving_depth_sample(5, 0);
+        r.serving_depth_sample(9, 2);
+        r.serving_depth_sample(12, 2);
+        r.serving_depth_sample(20, 1);
+        assert_eq!(r.serving_depth, vec![(0, 0), (9, 2), (20, 1)]);
+    }
+
+    #[test]
+    fn telemetry_invariants_hold_on_fresh_recorder() {
+        let r = SysRecorder::new(vec!["fabric", "mem", "trunk"], 2, DEFAULT_WINDOW);
+        let p = r.finish();
+        assert_eq!(p.domains.len(), 3);
+        assert_eq!(p.leap.attempts, p.leap.taken + p.leap.refusal_total());
+        assert_eq!(p.leap.cap_total(), p.leap.taken);
+    }
+
+    #[test]
+    fn reason_names_are_unique_within_each_enum() {
+        // CapSource and LeapBlock share fault_window/step_budget by
+        // design (same physical constraint, two roles); everything
+        // else is distinct within its own enum.
+        let mut lbs: Vec<&str> = LeapBlock::ALL.iter().map(|b| b.name()).collect();
+        lbs.sort_unstable();
+        lbs.dedup();
+        assert_eq!(lbs.len(), LeapBlock::ALL.len());
+        let mut css: Vec<&str> = CapSource::ALL.iter().map(|c| c.name()).collect();
+        css.sort_unstable();
+        css.dedup();
+        assert_eq!(css.len(), CapSource::ALL.len());
+    }
+}

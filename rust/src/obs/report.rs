@@ -1,0 +1,602 @@
+//! Profile report rendering: the `--profile` JSON writers, the schema
+//! validator, and the `medusa profile` pretty-printer.
+//!
+//! Two schemas, discriminated by the top-level `"profile"` key:
+//!
+//! * `medusa_run_v1` — one simulated run (run/replay/serve): cycle
+//!   attribution per clock domain, the leap-refusal and cap-source
+//!   breakdowns, utilization windows, and host-time phase spans.
+//! * `medusa_explore_v1` — one explorer campaign: per-point eval time
+//!   and cache hit/miss, plus search/render host spans.
+//!
+//! [`validate`] is the CI gate: it checks required keys *and* the
+//! accounting invariants (refusals sum to refused leaps, cap sources
+//! sum to taken leaps, per-domain stepped+leapt = total), so a report
+//! that parses but lies fails the smoke step.
+
+use super::json::{escape, parse, Value};
+use super::{CapSource, LeapBlock, PointTiming, RunProfile};
+use std::fmt::Write as _;
+
+fn fsec(s: f64) -> String {
+    // Finite by construction (Instant differences); fixed precision
+    // keeps the output stable and valid JSON.
+    format!("{s:.6}")
+}
+
+/// Render a run profile as `medusa_run_v1` JSON.
+pub fn run_profile_json(p: &RunProfile, scenario: &str, design: &str, backend: &str) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "{{");
+    let _ = writeln!(out, "  \"profile\": \"medusa_run_v1\",");
+    let _ = writeln!(out, "  \"scenario\": \"{}\",", escape(scenario));
+    let _ = writeln!(out, "  \"design\": \"{}\",", escape(design));
+    let _ = writeln!(out, "  \"backend\": \"{}\",", escape(backend));
+
+    let _ = writeln!(out, "  \"edges\": {{");
+    let _ = writeln!(out, "    \"domains\": [");
+    for (i, d) in p.sys.domains.iter().enumerate() {
+        let comma = if i + 1 < p.sys.domains.len() { "," } else { "" };
+        let _ = writeln!(
+            out,
+            "      {{\"domain\": \"{}\", \"stepped\": {}, \"leapt\": {}, \"total\": {}}}{comma}",
+            escape(d.name),
+            d.stepped,
+            d.leapt,
+            d.total()
+        );
+    }
+    let _ = writeln!(out, "    ]");
+    let _ = writeln!(out, "  }},");
+
+    let leap = &p.sys.leap;
+    let _ = writeln!(out, "  \"leap\": {{");
+    let _ = writeln!(out, "    \"attempts\": {},", leap.attempts);
+    let _ = writeln!(out, "    \"taken\": {},", leap.taken);
+    let _ = writeln!(out, "    \"refused\": {},", leap.refused());
+    let _ = writeln!(out, "    \"refusals\": {{");
+    for (i, b) in LeapBlock::ALL.iter().enumerate() {
+        let comma = if i + 1 < LeapBlock::ALL.len() { "," } else { "" };
+        let _ = writeln!(out, "      \"{}\": {}{comma}", b.name(), leap.refusals[i]);
+    }
+    let _ = writeln!(out, "    }},");
+    let _ = writeln!(out, "    \"caps\": {{");
+    for (i, c) in CapSource::ALL.iter().enumerate() {
+        let comma = if i + 1 < CapSource::ALL.len() { "," } else { "" };
+        let _ = writeln!(out, "      \"{}\": {}{comma}", c.name(), leap.caps[i]);
+    }
+    let _ = writeln!(out, "    }}");
+    let _ = writeln!(out, "  }},");
+
+    let _ = writeln!(out, "  \"utilization\": {{");
+    let _ = writeln!(out, "    \"window\": {},", p.sys.window);
+    let _ = writeln!(out, "    \"port_groups\": {},", p.sys.groups);
+    let _ = writeln!(out, "    \"windows\": [");
+    for (i, w) in p.sys.utilization.iter().enumerate() {
+        let comma = if i + 1 < p.sys.utilization.len() { "," } else { "" };
+        let busy: Vec<String> = w.busy.iter().map(|b| b.to_string()).collect();
+        let _ = writeln!(
+            out,
+            "      {{\"start\": {}, \"edges\": {}, \"busy\": [{}], \"cmd_occ\": {}, \
+             \"rd_line_occ\": {}, \"wr_data_occ\": {}, \"trunk_occ\": {}}}{comma}",
+            w.start,
+            w.edges,
+            busy.join(", "),
+            w.cmd_occ,
+            w.rd_line_occ,
+            w.wr_data_occ,
+            w.trunk_occ
+        );
+    }
+    let _ = writeln!(out, "    ],");
+    let depth: Vec<String> =
+        p.sys.serving_depth.iter().map(|(c, d)| format!("[{c}, {d}]")).collect();
+    let _ = writeln!(out, "    \"serving_queue_depth\": [{}]", depth.join(", "));
+    let _ = writeln!(out, "  }},");
+
+    let _ = writeln!(out, "  \"host\": {{");
+    let _ = writeln!(out, "    \"spans\": [");
+    for (i, (phase, secs)) in p.host.iter().enumerate() {
+        let comma = if i + 1 < p.host.len() { "," } else { "" };
+        let _ = writeln!(
+            out,
+            "      {{\"phase\": \"{}\", \"seconds\": {}}}{comma}",
+            escape(phase),
+            fsec(*secs)
+        );
+    }
+    let _ = writeln!(out, "    ]");
+    let _ = writeln!(out, "  }}");
+    let _ = writeln!(out, "}}");
+    out
+}
+
+/// Render an explorer campaign profile as `medusa_explore_v1` JSON.
+/// `points` pairs each [`PointTiming`] with its design spec label.
+pub fn explore_profile_json(
+    strategy: &str,
+    probe: &str,
+    host: &[(&'static str, f64)],
+    points: &[(String, PointTiming)],
+) -> String {
+    let computed = points.iter().filter(|(_, t)| !t.cache_hit).count();
+    let hits = points.len() - computed;
+    let mut out = String::new();
+    let _ = writeln!(out, "{{");
+    let _ = writeln!(out, "  \"profile\": \"medusa_explore_v1\",");
+    let _ = writeln!(out, "  \"strategy\": \"{}\",", escape(strategy));
+    let _ = writeln!(out, "  \"probe\": \"{}\",", escape(probe));
+    let _ = writeln!(out, "  \"points_evaluated\": {},", points.len());
+    let _ = writeln!(out, "  \"points_computed\": {computed},");
+    let _ = writeln!(out, "  \"cache_hits\": {hits},");
+    let _ = writeln!(out, "  \"host\": {{");
+    let _ = writeln!(out, "    \"spans\": [");
+    for (i, (phase, secs)) in host.iter().enumerate() {
+        let comma = if i + 1 < host.len() { "," } else { "" };
+        let _ = writeln!(
+            out,
+            "      {{\"phase\": \"{}\", \"seconds\": {}}}{comma}",
+            escape(phase),
+            fsec(*secs)
+        );
+    }
+    let _ = writeln!(out, "    ]");
+    let _ = writeln!(out, "  }},");
+    let _ = writeln!(out, "  \"points\": [");
+    for (i, (design, t)) in points.iter().enumerate() {
+        let comma = if i + 1 < points.len() { "," } else { "" };
+        let _ = writeln!(
+            out,
+            "    {{\"index\": {}, \"design\": \"{}\", \"cache_hit\": {}, \"eval_s\": {}}}{comma}",
+            t.index,
+            escape(design),
+            t.cache_hit,
+            fsec(t.eval_s)
+        );
+    }
+    let _ = writeln!(out, "  ]");
+    let _ = writeln!(out, "}}");
+    out
+}
+
+fn req<'a>(v: &'a Value, key: &str, ctx: &str) -> Result<&'a Value, String> {
+    v.get(key).ok_or_else(|| format!("missing required key \"{key}\" in {ctx}"))
+}
+
+fn req_u64(v: &Value, key: &str, ctx: &str) -> Result<u64, String> {
+    req(v, key, ctx)?
+        .as_u64()
+        .ok_or_else(|| format!("\"{key}\" in {ctx} must be a non-negative integer"))
+}
+
+/// Validate a parsed report against its schema. Returns the schema
+/// name on success. Checks structure *and* the accounting invariants
+/// the conformance suite promises, so this doubles as the CI gate.
+pub fn validate(v: &Value) -> Result<&'static str, String> {
+    let kind = req(v, "profile", "report")?
+        .as_str()
+        .ok_or_else(|| "\"profile\" must be a string".to_string())?;
+    match kind {
+        "medusa_run_v1" => {
+            validate_run(v)?;
+            Ok("medusa_run_v1")
+        }
+        "medusa_explore_v1" => {
+            validate_explore(v)?;
+            Ok("medusa_explore_v1")
+        }
+        other => Err(format!("unknown profile schema \"{other}\"")),
+    }
+}
+
+fn validate_run(v: &Value) -> Result<(), String> {
+    for key in ["scenario", "design", "backend"] {
+        req(v, key, "run report")?
+            .as_str()
+            .ok_or_else(|| format!("\"{key}\" must be a string"))?;
+    }
+    let domains = req(req(v, "edges", "run report")?, "domains", "edges")?
+        .as_arr()
+        .ok_or_else(|| "\"edges.domains\" must be an array".to_string())?;
+    if domains.is_empty() {
+        return Err("\"edges.domains\" must be non-empty".into());
+    }
+    for d in domains {
+        let name = req(d, "domain", "edges.domains[]")?
+            .as_str()
+            .ok_or_else(|| "\"domain\" must be a string".to_string())?;
+        let stepped = req_u64(d, "stepped", "edges.domains[]")?;
+        let leapt = req_u64(d, "leapt", "edges.domains[]")?;
+        let total = req_u64(d, "total", "edges.domains[]")?;
+        if stepped + leapt != total {
+            return Err(format!(
+                "domain \"{name}\": stepped ({stepped}) + leapt ({leapt}) != total ({total})"
+            ));
+        }
+    }
+    let leap = req(v, "leap", "run report")?;
+    let attempts = req_u64(leap, "attempts", "leap")?;
+    let taken = req_u64(leap, "taken", "leap")?;
+    let refused = req_u64(leap, "refused", "leap")?;
+    if attempts != taken + refused {
+        return Err(format!("leap: attempts ({attempts}) != taken ({taken}) + refused ({refused})"));
+    }
+    let refusals = req(leap, "refusals", "leap")?
+        .entries()
+        .ok_or_else(|| "\"leap.refusals\" must be an object".to_string())?;
+    let rsum: u64 = refusals
+        .iter()
+        .map(|(k, n)| n.as_u64().ok_or_else(|| format!("refusal \"{k}\" must be an integer")))
+        .collect::<Result<Vec<_>, _>>()?
+        .iter()
+        .sum();
+    if rsum != refused {
+        return Err(format!("leap refusal reasons sum to {rsum}, expected refused = {refused}"));
+    }
+    let caps = req(leap, "caps", "leap")?
+        .entries()
+        .ok_or_else(|| "\"leap.caps\" must be an object".to_string())?;
+    let csum: u64 = caps
+        .iter()
+        .map(|(k, n)| n.as_u64().ok_or_else(|| format!("cap \"{k}\" must be an integer")))
+        .collect::<Result<Vec<_>, _>>()?
+        .iter()
+        .sum();
+    if csum != taken {
+        return Err(format!("leap cap sources sum to {csum}, expected taken = {taken}"));
+    }
+    let util = req(v, "utilization", "run report")?;
+    req_u64(util, "window", "utilization")?;
+    req_u64(util, "port_groups", "utilization")?;
+    let windows = req(util, "windows", "utilization")?
+        .as_arr()
+        .ok_or_else(|| "\"utilization.windows\" must be an array".to_string())?;
+    for w in windows {
+        req_u64(w, "start", "utilization.windows[]")?;
+        req_u64(w, "edges", "utilization.windows[]")?;
+        req(w, "busy", "utilization.windows[]")?
+            .as_arr()
+            .ok_or_else(|| "\"busy\" must be an array".to_string())?;
+    }
+    req(util, "serving_queue_depth", "utilization")?
+        .as_arr()
+        .ok_or_else(|| "\"serving_queue_depth\" must be an array".to_string())?;
+    validate_spans(v)
+}
+
+fn validate_explore(v: &Value) -> Result<(), String> {
+    let evaluated = req_u64(v, "points_evaluated", "explore report")?;
+    let computed = req_u64(v, "points_computed", "explore report")?;
+    let hits = req_u64(v, "cache_hits", "explore report")?;
+    if computed + hits != evaluated {
+        return Err(format!(
+            "points_computed ({computed}) + cache_hits ({hits}) != points_evaluated ({evaluated})"
+        ));
+    }
+    let points = req(v, "points", "explore report")?
+        .as_arr()
+        .ok_or_else(|| "\"points\" must be an array".to_string())?;
+    if points.len() as u64 != evaluated {
+        return Err(format!(
+            "points array has {} entries, expected points_evaluated = {evaluated}",
+            points.len()
+        ));
+    }
+    for p in points {
+        req_u64(p, "index", "points[]")?;
+        req(p, "cache_hit", "points[]")?
+            .as_bool()
+            .ok_or_else(|| "\"cache_hit\" must be a bool".to_string())?;
+        req(p, "eval_s", "points[]")?
+            .as_f64()
+            .ok_or_else(|| "\"eval_s\" must be a number".to_string())?;
+    }
+    validate_spans(v)
+}
+
+fn validate_spans(v: &Value) -> Result<(), String> {
+    let spans = req(req(v, "host", "report")?, "spans", "host")?
+        .as_arr()
+        .ok_or_else(|| "\"host.spans\" must be an array".to_string())?;
+    for s in spans {
+        req(s, "phase", "host.spans[]")?
+            .as_str()
+            .ok_or_else(|| "\"phase\" must be a string".to_string())?;
+        let secs = req(s, "seconds", "host.spans[]")?
+            .as_f64()
+            .ok_or_else(|| "\"seconds\" must be a number".to_string())?;
+        if !secs.is_finite() || secs < 0.0 {
+            return Err("host span seconds must be finite and non-negative".into());
+        }
+    }
+    Ok(())
+}
+
+/// Parse, validate, and pretty-print a report for `medusa profile`.
+pub fn pretty_print(text: &str) -> Result<String, String> {
+    let v = parse(text)?;
+    match validate(&v)? {
+        "medusa_run_v1" => Ok(pretty_run(&v)),
+        _ => Ok(pretty_explore(&v)),
+    }
+}
+
+fn pct(part: u64, whole: u64) -> String {
+    if whole == 0 {
+        "-".into()
+    } else {
+        format!("{:.1}%", 100.0 * part as f64 / whole as f64)
+    }
+}
+
+/// Non-zero members of an object, rendered `name count · name count`.
+fn breakdown(members: &[(String, Value)]) -> String {
+    let parts: Vec<String> = members
+        .iter()
+        .filter(|(_, n)| n.as_u64().unwrap_or(0) > 0)
+        .map(|(k, n)| format!("{k} {}", n.as_u64().unwrap_or(0)))
+        .collect();
+    if parts.is_empty() {
+        "none".into()
+    } else {
+        parts.join(" · ")
+    }
+}
+
+const SPARK: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+
+/// Busy-fraction sparkline over the utilization windows, downsampled
+/// to at most 64 buckets.
+fn sparkline(windows: &[Value], groups: u64) -> String {
+    if windows.is_empty() || groups == 0 {
+        return String::new();
+    }
+    let fracs: Vec<f64> = windows
+        .iter()
+        .map(|w| {
+            let edges = w.get("edges").and_then(Value::as_u64).unwrap_or(0);
+            let busy: u64 = w
+                .get("busy")
+                .and_then(Value::as_arr)
+                .map(|b| b.iter().filter_map(Value::as_u64).sum())
+                .unwrap_or(0);
+            if edges == 0 {
+                0.0
+            } else {
+                busy as f64 / (edges * groups) as f64
+            }
+        })
+        .collect();
+    let bucket = fracs.len().div_ceil(64);
+    fracs
+        .chunks(bucket)
+        .map(|c| {
+            let mean = c.iter().sum::<f64>() / c.len() as f64;
+            SPARK[((mean * 7.0).round() as usize).min(7)]
+        })
+        .collect()
+}
+
+fn spans_line(v: &Value) -> String {
+    let spans = v.get("host").and_then(|h| h.get("spans")).and_then(Value::as_arr).unwrap_or(&[]);
+    spans
+        .iter()
+        .map(|s| {
+            format!(
+                "{} {:.3}s",
+                s.get("phase").and_then(Value::as_str).unwrap_or("?"),
+                s.get("seconds").and_then(Value::as_f64).unwrap_or(0.0)
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(" · ")
+}
+
+fn pretty_run(v: &Value) -> String {
+    let gs = |k: &str| v.get(k).and_then(Value::as_str).unwrap_or("?").to_string();
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "medusa profile — run {} · design {} · backend {}\n",
+        gs("scenario"),
+        gs("design"),
+        gs("backend")
+    );
+    let _ = writeln!(out, "cycle attribution");
+    let domains =
+        v.get("edges").and_then(|e| e.get("domains")).and_then(Value::as_arr).unwrap_or(&[]);
+    for d in domains {
+        let name = d.get("domain").and_then(Value::as_str).unwrap_or("?");
+        let stepped = d.get("stepped").and_then(Value::as_u64).unwrap_or(0);
+        let leapt = d.get("leapt").and_then(Value::as_u64).unwrap_or(0);
+        let total = stepped + leapt;
+        let _ = writeln!(
+            out,
+            "  {name:<8} total {total:>12}   stepped {stepped:>12} ({})   leapt {leapt:>12} ({})",
+            pct(stepped, total),
+            pct(leapt, total)
+        );
+    }
+    if let Some(leap) = v.get("leap") {
+        let attempts = leap.get("attempts").and_then(Value::as_u64).unwrap_or(0);
+        let taken = leap.get("taken").and_then(Value::as_u64).unwrap_or(0);
+        let refused = leap.get("refused").and_then(Value::as_u64).unwrap_or(0);
+        let _ = writeln!(
+            out,
+            "\nleap telemetry   attempts {attempts} · taken {taken} ({}) · refused {refused}",
+            pct(taken, attempts)
+        );
+        if let Some(r) = leap.get("refusals").and_then(Value::entries) {
+            let _ = writeln!(out, "  refusals   {}", breakdown(r));
+        }
+        if let Some(c) = leap.get("caps").and_then(Value::entries) {
+            let _ = writeln!(out, "  caps       {}", breakdown(c));
+        }
+    }
+    if let Some(util) = v.get("utilization") {
+        let window = util.get("window").and_then(Value::as_u64).unwrap_or(0);
+        let groups = util.get("port_groups").and_then(Value::as_u64).unwrap_or(0);
+        let windows = util.get("windows").and_then(Value::as_arr).unwrap_or(&[]);
+        let _ = writeln!(
+            out,
+            "\nutilization   window {window} cycles · {groups} port group(s) · {} window(s)",
+            windows.len()
+        );
+        let spark = sparkline(windows, groups);
+        if !spark.is_empty() {
+            let _ = writeln!(out, "  busy fraction  {spark}");
+        }
+        let depth = util.get("serving_queue_depth").and_then(Value::as_arr).unwrap_or(&[]);
+        if !depth.is_empty() {
+            let peak = depth
+                .iter()
+                .filter_map(|p| p.as_arr().and_then(|p| p.get(1)).and_then(Value::as_u64))
+                .max()
+                .unwrap_or(0);
+            let _ = writeln!(out, "  serving queue  {} change sample(s) · peak depth {peak}", depth.len());
+        }
+    }
+    let _ = writeln!(out, "\nhost time   {}", spans_line(v));
+    out
+}
+
+fn pretty_explore(v: &Value) -> String {
+    let gs = |k: &str| v.get(k).and_then(Value::as_str).unwrap_or("?").to_string();
+    let gu = |k: &str| v.get(k).and_then(Value::as_u64).unwrap_or(0);
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "medusa profile — explore campaign · strategy {} · probe {}\n",
+        gs("strategy"),
+        gs("probe")
+    );
+    let _ = writeln!(
+        out,
+        "points   {} evaluated · {} computed · {} cache hit(s)",
+        gu("points_evaluated"),
+        gu("points_computed"),
+        gu("cache_hits")
+    );
+    let points = v.get("points").and_then(Value::as_arr).unwrap_or(&[]);
+    let evals: Vec<f64> = points
+        .iter()
+        .filter(|p| p.get("cache_hit").and_then(Value::as_bool) == Some(false))
+        .filter_map(|p| p.get("eval_s").and_then(Value::as_f64))
+        .collect();
+    if !evals.is_empty() {
+        let total: f64 = evals.iter().sum();
+        let max = evals.iter().cloned().fold(0.0f64, f64::max);
+        let _ = writeln!(
+            out,
+            "eval     total {total:.3}s · mean {:.4}s · max {max:.4}s over {} computed point(s)",
+            total / evals.len() as f64,
+            evals.len()
+        );
+    }
+    let _ = writeln!(out, "host     {}", spans_line(v));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{DomainEdges, SysProfile, WindowSample};
+    use super::*;
+
+    fn sample_profile() -> RunProfile {
+        let mut leap = super::super::LeapTelemetry::default();
+        leap.attempts = 10;
+        leap.taken = 7;
+        leap.refusals[LeapBlock::ChannelOccupied as usize] = 2;
+        leap.refusals[LeapBlock::LpLoadDrain as usize] = 1;
+        leap.caps[CapSource::LpCompute as usize] = 6;
+        leap.caps[CapSource::TenantStart as usize] = 1;
+        RunProfile {
+            sys: SysProfile {
+                domains: vec![
+                    DomainEdges { name: "fabric", stepped: 100, leapt: 900 },
+                    DomainEdges { name: "mem", stepped: 80, leapt: 720 },
+                ],
+                leap,
+                window: 64,
+                groups: 2,
+                utilization: vec![WindowSample {
+                    start: 0,
+                    edges: 64,
+                    busy: vec![64, 10],
+                    cmd_occ: 5,
+                    rd_line_occ: 6,
+                    wr_data_occ: 7,
+                    trunk_occ: 0,
+                }],
+                serving_depth: vec![(0, 0), (10, 3)],
+            },
+            host: vec![("build", 0.001), ("drive", 0.5)],
+        }
+    }
+
+    #[test]
+    fn run_report_parses_and_validates() {
+        let text = run_profile_json(&sample_profile(), "zoo-x", "medusa", "elided+leap");
+        let v = parse(&text).unwrap();
+        assert_eq!(validate(&v).unwrap(), "medusa_run_v1");
+        assert_eq!(v.get("scenario").unwrap().as_str(), Some("zoo-x"));
+        let leap = v.get("leap").unwrap();
+        assert_eq!(leap.get("refused").unwrap().as_u64(), Some(3));
+    }
+
+    #[test]
+    fn validator_rejects_broken_accounting() {
+        let mut p = sample_profile();
+        p.sys.leap.refusals[LeapBlock::ChannelOccupied as usize] = 5; // sum now 6 != refused 3
+        let text = run_profile_json(&p, "s", "d", "b");
+        let v = parse(&text).unwrap();
+        let err = validate(&v).unwrap_err();
+        assert!(err.contains("refusal"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn validator_rejects_missing_keys() {
+        let v = parse(r#"{"profile": "medusa_run_v1"}"#).unwrap();
+        assert!(validate(&v).is_err());
+        let v = parse(r#"{"profile": "unknown_v9"}"#).unwrap();
+        assert!(validate(&v).is_err());
+        let v = parse(r#"{"nope": 1}"#).unwrap();
+        assert!(validate(&v).is_err());
+    }
+
+    #[test]
+    fn explore_report_parses_and_validates() {
+        let points = vec![
+            ("medusa".to_string(), PointTiming { index: 0, cache_hit: false, eval_s: 0.25 }),
+            ("baseline".to_string(), PointTiming { index: 1, cache_hit: true, eval_s: 0.0 }),
+        ];
+        let text =
+            explore_profile_json("grid", "single-layer", &[("search", 1.0), ("render", 0.01)], &points);
+        let v = parse(&text).unwrap();
+        assert_eq!(validate(&v).unwrap(), "medusa_explore_v1");
+        assert_eq!(v.get("points_computed").unwrap().as_u64(), Some(1));
+        assert_eq!(v.get("cache_hits").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn pretty_print_renders_both_schemas() {
+        let run_text = run_profile_json(&sample_profile(), "zoo-x", "medusa", "full+stepwise");
+        let rendered = pretty_print(&run_text).unwrap();
+        assert!(rendered.contains("cycle attribution"));
+        assert!(rendered.contains("fabric"));
+        assert!(rendered.contains("leap telemetry"));
+        assert!(rendered.contains("host time"));
+        let points =
+            vec![("medusa".to_string(), PointTiming { index: 0, cache_hit: false, eval_s: 0.1 })];
+        let ex_text = explore_profile_json("random", "probe", &[("search", 0.5)], &points);
+        let rendered = pretty_print(&ex_text).unwrap();
+        assert!(rendered.contains("explore campaign"));
+        assert!(rendered.contains("1 computed"));
+    }
+
+    #[test]
+    fn pretty_print_rejects_invalid_input() {
+        assert!(pretty_print("not json").is_err());
+        assert!(pretty_print(r#"{"profile": "medusa_run_v1"}"#).is_err());
+    }
+}

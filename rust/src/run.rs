@@ -48,6 +48,7 @@ pub struct RunOptions {
     backend: Option<SimBackend>,
     faults: Option<FaultSpec>,
     serving: Option<ServingSpec>,
+    profile: Option<u64>,
 }
 
 impl RunOptions {
@@ -87,6 +88,17 @@ impl RunOptions {
         self
     }
 
+    /// Enable the observability layer on `run`/`run_captured`/
+    /// `replay`/`verify_replay` with the given utilization-window size
+    /// in fabric cycles (see [`crate::obs::DEFAULT_WINDOW`]). The
+    /// outcome then carries [`ScenarioOutcome::profile`]; stats,
+    /// cycles, and traces stay bit-identical to an unprofiled run (the
+    /// zero-perturbation contract, enforced by `profile_conformance`).
+    pub fn profile(mut self, window: u64) -> Self {
+        self.profile = Some(window);
+        self
+    }
+
     fn workers(&self) -> usize {
         self.threads.unwrap_or_else(crate::util::parallel::max_threads)
     }
@@ -108,17 +120,25 @@ impl RunOptions {
     /// Run one scenario (with any backend/faults/serving overrides
     /// applied to a clone — the input scenario is untouched).
     pub fn run(&self, sc: &Scenario) -> Result<ScenarioOutcome> {
-        crate::workload::engine::run_scenario(&self.scenario_with_overrides(sc))
+        let (out, _) =
+            crate::workload::engine::run_impl(&self.scenario_with_overrides(sc), false, self.profile)?;
+        Ok(out)
     }
 
     /// Run one scenario and capture its replayable trace.
     pub fn run_captured(&self, sc: &Scenario) -> Result<(ScenarioOutcome, ScenarioTrace)> {
-        crate::workload::engine::run_scenario_captured(&self.scenario_with_overrides(sc))
+        let (out, trace) =
+            crate::workload::engine::run_impl(&self.scenario_with_overrides(sc), true, self.profile)?;
+        Ok((out, trace.expect("capture requested")))
     }
 
     /// Re-execute a captured trace. Default backend: full reference.
     pub fn replay(&self, trace: &ScenarioTrace) -> Result<ScenarioOutcome> {
-        crate::workload::engine::replay_impl(trace, self.backend.unwrap_or_else(SimBackend::full))
+        crate::workload::engine::replay_impl(
+            trace,
+            self.backend.unwrap_or_else(SimBackend::full),
+            self.profile,
+        )
     }
 
     /// Re-execute a captured trace and assert its expect block.
@@ -127,6 +147,7 @@ impl RunOptions {
         crate::workload::engine::verify_replay_impl(
             trace,
             self.backend.unwrap_or_else(SimBackend::full),
+            self.profile,
         )
     }
 

@@ -343,6 +343,47 @@ impl ServingRun {
         self.inflight[t].len()
     }
 
+    /// Admitted-but-undispatched requests in tenant `t`'s queue.
+    pub fn queue_depth(&self, t: usize) -> usize {
+        self.queue[t].len()
+    }
+
+    /// Admitted-but-undispatched requests summed over every tenant
+    /// (the observability layer's queue-depth timeline source).
+    pub fn total_queued(&self) -> u64 {
+        self.queue.iter().map(|q| q.len() as u64).sum()
+    }
+
+    /// The next unadmitted arrival cycle of tenant `t`, if any.
+    pub fn next_arrival_cycle(&self, t: usize) -> Option<u64> {
+        self.state.arrivals[t].get(self.next_arrival[t]).copied()
+    }
+
+    /// Per-tenant serving state for watchdog dumps: queue depth,
+    /// in-flight batch, completion progress, and the next arrival.
+    /// Appended to `System::state_dump` so a wedged serving run shows
+    /// where its requests are stuck, not just where the fabric is.
+    pub fn state_dump(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        for t in 0..self.queue.len() {
+            let next = match self.next_arrival_cycle(t) {
+                Some(c) => c.to_string(),
+                None => "-".to_string(),
+            };
+            let _ = writeln!(
+                s,
+                "  serving t{t}: queued={} inflight={} completed={}/{} batches={} next_arrival={next}",
+                self.queue[t].len(),
+                self.inflight[t].len(),
+                self.completed[t],
+                self.state.arrivals[t].len(),
+                self.batches[t],
+            );
+        }
+        s
+    }
+
     /// Does tenant `t` still have unadmitted, queued, or in-flight
     /// work?
     pub fn has_more(&self, t: usize) -> bool {
@@ -419,13 +460,21 @@ pub struct ServingReport {
 }
 
 /// Nearest-rank percentile over an unsorted latency series (`q` in
-/// 0..=100); 0 for an empty series.
+/// 0..=100); 0 for an empty series. Sorts a private copy — callers
+/// taking several percentiles of the same series should sort once and
+/// use [`percentile_sorted`] instead.
 pub fn percentile(latencies: &[u64], q: u64) -> u64 {
-    if latencies.is_empty() {
-        return 0;
-    }
     let mut sorted = latencies.to_vec();
     sorted.sort_unstable();
+    percentile_sorted(&sorted, q)
+}
+
+/// Nearest-rank percentile over an already-sorted series (`q` in
+/// 0..=100); 0 for an empty series.
+pub fn percentile_sorted(sorted: &[u64], q: u64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
     let idx = (q as usize * (sorted.len() - 1)) / 100;
     sorted[idx]
 }
@@ -435,16 +484,19 @@ impl ServingReport {
     pub fn from_run(run: &ServingRun) -> ServingReport {
         let tenants = (0..run.latencies.len())
             .map(|t| {
-                let lats = &run.latencies[t];
+                // Sort once per tenant; every percentile (and the max)
+                // indexes the same sorted copy.
+                let mut sorted = run.latencies[t].clone();
+                sorted.sort_unstable();
                 TenantServing {
                     arrived: run.state.arrivals[t].len(),
                     completed: run.completed[t],
                     starved: run.completed[t] == 0 && !run.state.arrivals[t].is_empty(),
                     batches: run.batches[t],
                     slo_met: run.slo_met[t],
-                    p50_cycles: percentile(lats, 50),
-                    p99_cycles: percentile(lats, 99),
-                    max_cycles: lats.iter().copied().max().unwrap_or(0),
+                    p50_cycles: percentile_sorted(&sorted, 50),
+                    p99_cycles: percentile_sorted(&sorted, 99),
+                    max_cycles: sorted.last().copied().unwrap_or(0),
                 }
             })
             .collect();
@@ -626,6 +678,46 @@ mod tests {
         assert_eq!(percentile(&lats, 50), 50);
         assert_eq!(percentile(&lats, 99), 99);
         assert_eq!(percentile(&lats, 100), 100);
+    }
+
+    #[test]
+    fn percentile_sorted_matches_unsorted_wrapper() {
+        let lats: Vec<u64> = vec![90, 10, 50, 70, 30];
+        let mut sorted = lats.clone();
+        sorted.sort_unstable();
+        for q in [0, 25, 50, 75, 99, 100] {
+            assert_eq!(percentile_sorted(&sorted, q), percentile(&lats, q));
+        }
+        assert_eq!(percentile_sorted(&[], 50), 0);
+    }
+
+    #[test]
+    fn state_dump_reports_queue_and_inflight() {
+        let spec = ServingSpec {
+            arrivals: vec![10, 20, 1_000],
+            max_batch: 2,
+            max_wait: 300,
+            ..ServingSpec::default()
+        };
+        let mut run = ServingRun::new(ServingState::build(&spec, 1).unwrap());
+        let mut stats = Stats::default();
+        run.admit(25, &mut stats);
+        assert_eq!(run.queue_depth(0), 2);
+        assert_eq!(run.total_queued(), 2);
+        assert_eq!(run.next_arrival_cycle(0), Some(1_000));
+        run.dispatch(0, 25, &mut stats);
+        let dump = run.state_dump();
+        assert!(dump.contains("serving t0:"), "dump: {dump}");
+        assert!(dump.contains("queued=0"), "dump: {dump}");
+        assert!(dump.contains("inflight=2"), "dump: {dump}");
+        assert!(dump.contains("completed=0/3"), "dump: {dump}");
+        assert!(dump.contains("next_arrival=1000"), "dump: {dump}");
+        run.complete(0, 600, &mut stats);
+        run.admit(1_000, &mut stats);
+        run.dispatch(0, 1_300, &mut stats);
+        run.complete(0, 1_500, &mut stats);
+        assert!(run.state_dump().contains("next_arrival=-"));
+        assert_eq!(run.total_queued(), 0);
     }
 
     #[test]

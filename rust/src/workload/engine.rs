@@ -37,6 +37,7 @@ use crate::coordinator::System;
 use crate::dram::MemoryController;
 use crate::interconnect::Design;
 use crate::fault::{FaultPolicy, SimError};
+use crate::obs::{CapSource, RunProfile};
 use crate::serving::{ServingReport, ServingRun, ServingState};
 use crate::sim::trace::{ScenarioTrace, TraceExpect, TraceHeader, TraceStep, TraceTenant, MOVEMENT_COUNTERS};
 use crate::sim::stats::{Counter, SampleId};
@@ -147,6 +148,10 @@ pub struct ScenarioOutcome {
     /// Per-tenant serving summary (`None` for classic fixed-schedule
     /// runs).
     pub serving: Option<ServingReport>,
+    /// Observability report (`None` unless the run was profiled).
+    /// Strictly outside the determinism domain: never folded into
+    /// [`ScenarioOutcome::fingerprint`], traces, or timing entries.
+    pub profile: Option<Box<RunProfile>>,
 }
 
 impl ScenarioOutcome {
@@ -696,6 +701,13 @@ fn drive(
             }
             all_done &= rt.state == TState::Finished;
         }
+        if sys.profiling_enabled() {
+            // Queue-depth timeline: sampled after this edge's admission
+            // and dispatch decisions, change-driven inside the recorder.
+            if let Some(srv) = srv.as_deref() {
+                sys.obs_serving_depth(srv.total_queued());
+            }
+        }
         if dog.armed {
             if let Some(t) = dog.observe(sys, tenants) {
                 let now = sys.fabric_cycles();
@@ -711,7 +723,7 @@ fn drive(
                         let dump = format!(
                             "  engine states: {:?}\n{}",
                             tenants.iter().map(|rt| rt.state).collect::<Vec<_>>(),
-                            sys.state_dump()
+                            sys.state_dump_with(srv.as_deref())
                         );
                         return Err(anyhow::Error::new(SimError::TenantStalled {
                             tenant: t,
@@ -769,11 +781,21 @@ fn drive(
         // leap inside `try_leap_idle` itself, which is what makes the
         // watchdog fire at identical cycles stepwise-vs-leap.)
         let mut cap = u64::MAX;
+        // Which engine-level term set `cap` — pure attribution for the
+        // profiler (recorded only when the cap turns out to be the
+        // binding constraint of a taken leap). Computing it is branch
+        // arithmetic on values already at hand; it never touches
+        // simulation state, so the zero-perturbation contract holds.
+        let mut cap_src = CapSource::EdgeBudget;
         for rt in tenants.iter() {
             if rt.state == TState::WaitStart {
                 // start_cycle > fabric_cycles here: service() above
                 // starts any tenant whose cycle has arrived.
-                cap = cap.min(rt.start_cycle - sys.fabric_cycles());
+                let d = rt.start_cycle - sys.fabric_cycles();
+                if d < cap {
+                    cap_src = CapSource::TenantStart;
+                }
+                cap = cap.min(d);
             }
         }
         if let Some(srv) = srv.as_deref() {
@@ -786,8 +808,15 @@ fn drive(
             let next = srv.next_event(&parked);
             if next != u64::MAX {
                 debug_assert!(next > sys.fabric_cycles());
-                cap = cap.min(next - sys.fabric_cycles());
+                let d = next - sys.fabric_cycles();
+                if d < cap {
+                    cap_src = CapSource::ServingHorizon;
+                }
+                cap = cap.min(d);
             }
+        }
+        if sys.profiling_enabled() {
+            sys.obs_note_cap_source(cap_src);
         }
         match sys.try_leap_idle(cap, max_edges - edges) {
             Some(leap) => edges += leap.steps,
@@ -800,7 +829,7 @@ fn drive(
             edges < max_edges,
             "scenario stalled after {edges} edges (states: {:?})\n{}  stats:\n{}",
             tenants.iter().map(|t| t.state).collect::<Vec<_>>(),
-            sys.state_dump(),
+            sys.state_dump_with(srv.as_deref()),
             sys.stats
         );
     }
@@ -847,6 +876,7 @@ fn build_outcome(
         tenants: outs,
         stats: sys.stats.clone(),
         serving,
+        profile: None,
     }
 }
 
@@ -980,26 +1010,62 @@ fn build_tenants(
     Ok(tenants)
 }
 
+/// Host wall-clock per run phase. Armed only when profiling: a
+/// disabled clock never calls `Instant::now`, and an enabled one only
+/// records into the profile report — host time can never reach stats,
+/// traces, or cache keys.
+struct PhaseClock {
+    t: Option<std::time::Instant>,
+    spans: Vec<(&'static str, f64)>,
+}
+
+impl PhaseClock {
+    fn new(enabled: bool) -> PhaseClock {
+        PhaseClock { t: enabled.then(std::time::Instant::now), spans: Vec::new() }
+    }
+
+    /// Close the span named `phase` (elapsed since the previous lap).
+    fn lap(&mut self, phase: &'static str) {
+        if let Some(t) = self.t.as_mut() {
+            self.spans.push((phase, t.elapsed().as_secs_f64()));
+            *t = std::time::Instant::now();
+        }
+    }
+}
+
 /// Run a scenario end to end; every tenant's data movement is verified
 /// against the golden model (read path, DRAM content).
 pub fn run_scenario(sc: &Scenario) -> Result<ScenarioOutcome> {
-    Ok(run_inner(sc, false)?.0)
+    Ok(run_impl(sc, false, None)?.0)
 }
 
 /// Run a scenario and capture its canonical trace (with a fully
 /// recorded expect block).
 pub fn run_scenario_captured(sc: &Scenario) -> Result<(ScenarioOutcome, ScenarioTrace)> {
-    let (out, trace) = run_inner(sc, true)?;
+    let (out, trace) = run_impl(sc, true, None)?;
     Ok((out, trace.expect("capture requested")))
 }
 
-fn run_inner(sc: &Scenario, capture: bool) -> Result<(ScenarioOutcome, Option<ScenarioTrace>)> {
+/// The shared run path. `profile` is the utilization-window size; when
+/// set, the system records cycle attribution and the outcome carries a
+/// [`RunProfile`] — with bit-identical stats, cycles, and traces either
+/// way (the profile-conformance suite enforces this).
+pub(crate) fn run_impl(
+    sc: &Scenario,
+    capture: bool,
+    profile: Option<u64>,
+) -> Result<(ScenarioOutcome, Option<ScenarioTrace>)> {
     sc.validate()?;
+    let mut clock = PhaseClock::new(profile.is_some());
     let groups = sc.groups()?;
     let mut sys = System::builder(sc.cfg.clone())
         .port_groups(&groups)
         .faults(&sc.faults)
         .build()?;
+    if let Some(window) = profile {
+        sys.enable_profiling(window);
+    }
+    clock.lap("build");
     let mut tenants = build_tenants(sc, &groups, &mut sys)?;
     let mut srv: Option<ServingRun> = if sc.serving.is_none() {
         None
@@ -1032,7 +1098,9 @@ fn run_inner(sc: &Scenario, capture: bool) -> Result<(ScenarioOutcome, Option<Sc
         }
         steps
     });
+    clock.lap("precompute");
     drive(&mut sys, &mut tenants, srv.as_mut())?;
+    clock.lap("drive");
     let trace = trace_steps.map(|steps| ScenarioTrace {
         header: TraceHeader {
             scenario: sc.name.clone(),
@@ -1076,7 +1144,11 @@ fn run_inner(sc: &Scenario, capture: bool) -> Result<(ScenarioOutcome, Option<Sc
         expect: snapshot_expect(&sys),
     });
     let serving = srv.map(|s| ServingReport::from_run(&s));
-    let outcome = build_outcome(&sc.name, &sys, tenants, serving);
+    let mut outcome = build_outcome(&sc.name, &sys, tenants, serving);
+    clock.lap("report");
+    outcome.profile = sys
+        .take_profile()
+        .map(|sp| Box::new(RunProfile { sys: sp, host: clock.spans }));
     Ok((outcome, trace))
 }
 
@@ -1136,7 +1208,7 @@ fn sched_from_runs(runs: &[Vec<(u64, u64)>]) -> Vec<PortSchedule> {
 /// Re-drive the interconnect from a trace: no workload generation, no
 /// golden math — pure data movement with synthesized write words.
 pub fn replay(trace: &ScenarioTrace) -> Result<ScenarioOutcome> {
-    replay_impl(trace, crate::config::SimBackend::full())
+    replay_impl(trace, crate::config::SimBackend::full(), None)
 }
 
 /// [`replay`] under an explicit simulation backend. Superseded by
@@ -1146,7 +1218,7 @@ pub fn replay_with(
     trace: &ScenarioTrace,
     backend: crate::config::SimBackend,
 ) -> Result<ScenarioOutcome> {
-    replay_impl(trace, backend)
+    replay_impl(trace, backend, None)
 }
 
 /// [`replay`] under an explicit simulation backend. Trace headers
@@ -1157,9 +1229,15 @@ pub fn replay_with(
 pub(crate) fn replay_impl(
     trace: &ScenarioTrace,
     backend: crate::config::SimBackend,
+    profile: Option<u64>,
 ) -> Result<ScenarioOutcome> {
     trace.validate()?;
+    let mut clock = PhaseClock::new(profile.is_some());
     let (mut sys, groups) = system_from_header(&trace.header, backend)?;
+    if let Some(window) = profile {
+        sys.enable_profiling(window);
+    }
+    clock.lap("build");
     let n = sys.cfg.geometry.words_per_line();
     let elided = backend.payload.is_elided();
     let mut tenants: Vec<TenantRt> = groups
@@ -1234,9 +1312,16 @@ pub(crate) fn replay_impl(
         }
         Some(ServingRun::new(ServingState::build(&trace.header.serving, tenants.len())?))
     };
+    clock.lap("precompute");
     drive(&mut sys, &mut tenants, srv.as_mut())?;
+    clock.lap("drive");
     let serving = srv.map(|s| ServingReport::from_run(&s));
-    Ok(build_outcome(&trace.header.scenario, &sys, tenants, serving))
+    let mut outcome = build_outcome(&trace.header.scenario, &sys, tenants, serving);
+    clock.lap("report");
+    outcome.profile = sys
+        .take_profile()
+        .map(|sp| Box::new(RunProfile { sys: sp, host: clock.spans }));
+    Ok(outcome)
 }
 
 /// Replay `trace` and assert it reproduces the recorded expectations:
@@ -1244,7 +1329,7 @@ pub(crate) fn replay_impl(
 /// has timing recorded — the exact cycle counts, every timing counter,
 /// and the per-port wait cycles.
 pub fn verify_replay(trace: &ScenarioTrace) -> Result<ScenarioOutcome> {
-    verify_replay_impl(trace, crate::config::SimBackend::full())
+    verify_replay_impl(trace, crate::config::SimBackend::full(), None)
 }
 
 /// [`verify_replay`] under an explicit backend. Superseded by
@@ -1257,7 +1342,7 @@ pub fn verify_replay_with(
     trace: &ScenarioTrace,
     backend: crate::config::SimBackend,
 ) -> Result<ScenarioOutcome> {
-    verify_replay_impl(trace, backend)
+    verify_replay_impl(trace, backend, None)
 }
 
 /// [`verify_replay`] under an explicit backend — the fast-backend
@@ -1267,8 +1352,9 @@ pub fn verify_replay_with(
 pub(crate) fn verify_replay_impl(
     trace: &ScenarioTrace,
     backend: crate::config::SimBackend,
+    profile: Option<u64>,
 ) -> Result<ScenarioOutcome> {
-    let out = replay_impl(trace, backend)?;
+    let out = replay_impl(trace, backend, profile)?;
     for (name, want) in &trace.expect.exact {
         let got = out.stats.get(name);
         ensure!(

@@ -1,0 +1,328 @@
+//! Conformance suite for the zero-perturbation observability layer
+//! (PR 9): a run with `--profile` enabled must be **bit-identical** —
+//! stats, cycles, traces, fingerprints, serving reports — to the same
+//! run with it disabled, on every zoo scenario under every backend
+//! combination. Same discipline as the elided-vs-full and
+//! leap-vs-stepwise suites: profiling is an observer, never an actor.
+//!
+//! What it locks down, per ISSUE 9's acceptance criteria:
+//!
+//! * profile-on vs profile-off: identical fingerprints, counters,
+//!   sample series, cycle clocks, and per-port waits on every zoo
+//!   scenario × all four backends;
+//! * captured traces cannot tell whether the capturing run was
+//!   profiled, and a profiled replay reproduces the trace's expect
+//!   block bit-for-bit;
+//! * the cycle-attribution invariants hold exactly: per clock domain,
+//!   `stepped + leapt` equals the domain's total elapsed cycles (three
+//!   domains on the hierarchical family); refusal reasons sum to
+//!   `attempts - taken`; cap sources sum to `taken`; stepwise backends
+//!   never attempt;
+//! * utilization windows are internally consistent (busy counts bounded
+//!   by window edges, total window edges equal to stepped fabric
+//!   edges) and host-time spans cover the four run phases;
+//! * the explorer's per-point telemetry marks cold evaluations as
+//!   computed and warm-cache re-runs as hits without changing the
+//!   evaluated set.
+
+use medusa::config::{EdgeMode, PayloadMode, SimBackend, SystemConfig};
+use medusa::interconnect::hierarchical::HierConfig;
+use medusa::interconnect::Design;
+use medusa::obs::DEFAULT_WINDOW;
+use medusa::run::RunOptions;
+use medusa::sim::stats::{Counter, SampleId};
+use medusa::types::Geometry;
+use medusa::workload::{zoo, Scenario, ScenarioOutcome};
+
+/// Same N = 8 geometry as the fast-backend and hierarchical suites:
+/// irrational 225/200 MHz clock pair, DDR3 timing on, so the profiled
+/// runs exercise the same edge interleaving those suites pin down.
+fn cfg(design: Design, sim: SimBackend) -> SystemConfig {
+    SystemConfig {
+        design,
+        geometry: Geometry { w_line: 128, w_acc: 16, read_ports: 8, write_ports: 8, max_burst: 8 },
+        dotprod_units: 16,
+        mem_clock_mhz: 200.0,
+        fabric_clock_mhz: Some(225.0),
+        ddr3_timing: true,
+        rotator_stages: 0,
+        channel_depths: Default::default(),
+        seed: 7,
+        sim,
+    }
+}
+
+fn backends() -> [SimBackend; 4] {
+    [
+        SimBackend::full(),
+        SimBackend { payload: PayloadMode::Elided, edges: EdgeMode::Stepwise },
+        SimBackend { payload: PayloadMode::Full, edges: EdgeMode::Leap },
+        SimBackend::fast(),
+    ]
+}
+
+/// A three-clock-domain family member (fabric + mem + trunk), for the
+/// N-domain attribution tests.
+fn hier() -> Design {
+    Design::Hierarchical(HierConfig { levels: 2, cluster_ports: 4, bypass_ports: 0, trunk_mhz: 300 })
+}
+
+/// Every observable the zero-perturbation contract covers. Same checks
+/// as the fast-backend suite, but here both sides ran the SAME backend
+/// — only the profiling flag differs — so the full fingerprint
+/// (feature maps included) must match too; callers assert it.
+fn assert_stats_exact(a: &ScenarioOutcome, b: &ScenarioOutcome, what: &str) {
+    assert_eq!(a.fabric_cycles, b.fabric_cycles, "{what}: fabric_cycles");
+    assert_eq!(a.mem_cycles, b.mem_cycles, "{what}: mem_cycles");
+    assert_eq!(a.now_ps, b.now_ps, "{what}: now_ps");
+    for &id in Counter::ALL.iter() {
+        assert_eq!(a.stats.count(id), b.stats.count(id), "{what}: counter {}", id.name());
+    }
+    for &id in SampleId::ALL.iter() {
+        let (sa, sb) = (a.stats.series_of(id), b.stats.series_of(id));
+        assert_eq!(
+            (sa.min, sa.max, sa.sum, sa.count),
+            (sb.min, sb.max, sb.sum, sb.count),
+            "{what}: series {}",
+            id.name()
+        );
+    }
+    assert_eq!(a.tenants.len(), b.tenants.len(), "{what}: tenant count");
+    for (t, (ta, tb)) in a.tenants.iter().zip(b.tenants.iter()).enumerate() {
+        assert_eq!(ta.read_waits, tb.read_waits, "{what}: tenant {t} read waits");
+        assert_eq!(ta.write_waits, tb.write_waits, "{what}: tenant {t} write waits");
+    }
+    assert_eq!(a.serving, b.serving, "{what}: serving report");
+}
+
+/// Run `sc` twice on `backend` — profiling off, then on — and return
+/// both outcomes after the bit-identity checks.
+fn run_pair(sc: &Scenario, backend: SimBackend, what: &str) -> (ScenarioOutcome, ScenarioOutcome) {
+    let off = RunOptions::new()
+        .backend(backend)
+        .run(sc)
+        .unwrap_or_else(|e| panic!("{what}: unprofiled run: {e:#}"));
+    let on = RunOptions::new()
+        .backend(backend)
+        .profile(DEFAULT_WINDOW)
+        .run(sc)
+        .unwrap_or_else(|e| panic!("{what}: profiled run: {e:#}"));
+    assert!(off.profile.is_none(), "{what}: unprofiled run grew a profile");
+    assert!(on.profile.is_some(), "{what}: profiled run lost its profile");
+    assert_eq!(off.fingerprint(), on.fingerprint(), "{what}: profiling perturbed the run");
+    assert_stats_exact(&off, &on, what);
+    (off, on)
+}
+
+#[test]
+fn profiling_is_invisible_on_every_zoo_scenario_and_backend() {
+    for net in zoo::all() {
+        for backend in backends() {
+            let sc = Scenario::single(
+                &format!("prof-{}", net.name),
+                cfg(Design::Medusa, backend),
+                net.clone(),
+            );
+            let what = format!("{} {backend:?}", net.name);
+            let (_, on) = run_pair(&sc, backend, &what);
+            let p = on.profile.unwrap();
+            // Two clock domains on the flat family, attribution exact.
+            assert_eq!(p.sys.domains.len(), 2, "{what}");
+            assert_eq!(p.sys.domains[0].total(), on.fabric_cycles, "{what}: fabric edges");
+            assert_eq!(p.sys.domains[1].total(), on.mem_cycles, "{what}: mem edges");
+        }
+    }
+}
+
+#[test]
+fn profiling_is_invisible_on_the_three_domain_family() {
+    for backend in backends() {
+        let sc = Scenario::single("prof-hier", cfg(hier(), backend), zoo::gemm_mlp());
+        let what = format!("hierarchical {backend:?}");
+        let (_, on) = run_pair(&sc, backend, &what);
+        let p = on.profile.unwrap();
+        assert_eq!(p.sys.domains.len(), 3, "{what}: trunk domain missing");
+        assert_eq!(p.sys.domains[0].total(), on.fabric_cycles, "{what}: fabric edges");
+        assert_eq!(p.sys.domains[1].total(), on.mem_cycles, "{what}: mem edges");
+        // The trunk clock ran: its edges are attributed too.
+        assert!(p.sys.domains[2].total() > 0, "{what}: trunk never ticked");
+    }
+}
+
+#[test]
+fn captured_traces_cannot_tell_they_were_profiled() {
+    for backend in [SimBackend::full(), SimBackend::fast()] {
+        let sc = Scenario::single("prof-trace", cfg(Design::Medusa, backend), zoo::gemm_mlp());
+        let (_, plain) = RunOptions::new().backend(backend).run_captured(&sc).unwrap();
+        let (out, profiled) = RunOptions::new()
+            .backend(backend)
+            .profile(DEFAULT_WINDOW)
+            .run_captured(&sc)
+            .unwrap();
+        assert!(out.profile.is_some());
+        assert_eq!(plain, profiled, "{backend:?}: captured traces differ");
+        assert_eq!(plain.to_text(), profiled.to_text(), "{backend:?}: trace text differs");
+    }
+}
+
+#[test]
+fn profiled_replay_reproduces_the_expect_block() {
+    let sc = Scenario::single(
+        "prof-replay",
+        cfg(Design::Medusa, SimBackend::full()),
+        zoo::gemm_mlp(),
+    );
+    let (out, trace) = RunOptions::new().run_captured(&sc).unwrap();
+    for backend in backends() {
+        // verify_replay asserts every recorded counter and clock; a
+        // profiled replay must pass the same gate and land on the same
+        // fingerprint as an unprofiled one.
+        let plain = RunOptions::new()
+            .backend(backend)
+            .verify_replay(&trace)
+            .unwrap_or_else(|e| panic!("plain replay under {backend:?}: {e:#}"));
+        let profiled = RunOptions::new()
+            .backend(backend)
+            .profile(DEFAULT_WINDOW)
+            .verify_replay(&trace)
+            .unwrap_or_else(|e| panic!("profiled replay under {backend:?}: {e:#}"));
+        assert_eq!(plain.fingerprint(), profiled.fingerprint(), "{backend:?}");
+        assert_eq!(out.fabric_cycles, profiled.fabric_cycles, "{backend:?}");
+        assert!(profiled.profile.is_some(), "{backend:?}: replay lost the profile");
+    }
+}
+
+#[test]
+fn leap_accounting_balances_exactly() {
+    for net in zoo::all() {
+        // Leap backend: every attempt is either taken (attributed to
+        // exactly one cap source) or refused (attributed to exactly
+        // one blocking component).
+        let sc = Scenario::single(
+            &format!("prof-leap-{}", net.name),
+            cfg(Design::Medusa, SimBackend::fast()),
+            net.clone(),
+        );
+        let out = RunOptions::new().profile(DEFAULT_WINDOW).run(&sc).unwrap();
+        let lt = out.profile.unwrap().sys.leap;
+        assert!(lt.attempts > 0, "{}: leap backend never attempted", net.name);
+        assert_eq!(lt.attempts, lt.taken + lt.refusal_total(), "{}: refusals", net.name);
+        assert_eq!(lt.cap_total(), lt.taken, "{}: cap sources", net.name);
+
+        // Stepwise backend: attempts stay 0 and nothing is leapt, so
+        // the attribution invariants hold trivially.
+        let sc = Scenario::single(
+            &format!("prof-step-{}", net.name),
+            cfg(Design::Medusa, SimBackend::full()),
+            net.clone(),
+        );
+        let out = RunOptions::new().profile(DEFAULT_WINDOW).run(&sc).unwrap();
+        let p = out.profile.unwrap();
+        assert_eq!(p.sys.leap.attempts, 0, "{}: stepwise attempted a leap", net.name);
+        for d in &p.sys.domains {
+            assert_eq!(d.leapt, 0, "{}: stepwise leapt {} edges on {}", net.name, d.leapt, d.name);
+        }
+    }
+}
+
+#[test]
+fn utilization_windows_are_internally_consistent() {
+    // Full stepwise backend: every fabric edge is stepped, so the
+    // window series covers the whole run densely.
+    let sc = Scenario::single(
+        "prof-util",
+        cfg(Design::Medusa, SimBackend::full()),
+        zoo::gemm_mlp(),
+    );
+    let window = 256;
+    let out = RunOptions::new().profile(window).run(&sc).unwrap();
+    let p = out.profile.unwrap();
+    assert!(!p.sys.utilization.is_empty(), "no utilization windows recorded");
+    assert!(p.sys.window >= window, "window can only widen (coarsening)");
+    let mut total_edges = 0u64;
+    let mut prev_start = None;
+    for s in &p.sys.utilization {
+        assert!(s.edges > 0 && s.edges <= p.sys.window, "window edge count out of range");
+        assert_eq!(s.busy.len(), p.sys.groups, "busy series width != port groups");
+        for &b in &s.busy {
+            assert!(b <= s.edges, "busy count exceeds window edges");
+        }
+        if let Some(prev) = prev_start {
+            assert!(s.start > prev, "window starts must strictly increase");
+        }
+        prev_start = Some(s.start);
+        total_edges += s.edges;
+    }
+    // Every stepped fabric edge sampled exactly one window.
+    assert_eq!(total_edges, p.sys.domains[0].stepped, "window edges != stepped fabric edges");
+    // Something was actually busy at some point — the instrument is
+    // wired to live state, not zeros.
+    assert!(
+        p.sys.utilization.iter().any(|s| s.busy.iter().any(|&b| b > 0)),
+        "no busy edges recorded on a working run"
+    );
+}
+
+#[test]
+fn serving_runs_profile_without_perturbation() {
+    let sc = Scenario::builtin("serving-poisson").expect("builtin serving scenario");
+    for backend in [SimBackend::full(), SimBackend::fast()] {
+        let what = format!("serving-poisson {backend:?}");
+        let (off, on) = run_pair(&sc, backend, &what);
+        assert!(off.serving.is_some(), "{what}: serving report missing");
+        // The profiled run additionally carries the queue-depth series
+        // (change-driven; a run with any arrivals records at least the
+        // first transition).
+        let p = on.profile.unwrap();
+        assert!(!p.sys.serving_depth.is_empty(), "{what}: no serving depth samples");
+        for pair in p.sys.serving_depth.windows(2) {
+            assert!(pair[0].0 <= pair[1].0, "{what}: depth series cycle order");
+            assert_ne!(pair[0].1, pair[1].1, "{what}: depth series not change-driven");
+        }
+    }
+}
+
+#[test]
+fn host_spans_cover_the_run_phases() {
+    let sc = Scenario::single(
+        "prof-host",
+        cfg(Design::Medusa, SimBackend::fast()),
+        zoo::gemm_mlp(),
+    );
+    let out = RunOptions::new().profile(DEFAULT_WINDOW).run(&sc).unwrap();
+    let host = out.profile.unwrap().host;
+    let phases: Vec<&str> = host.iter().map(|&(p, _)| p).collect();
+    assert_eq!(phases, ["build", "precompute", "drive", "report"], "phase order");
+    for (phase, s) in &host {
+        assert!(s.is_finite() && *s >= 0.0, "{phase}: bad span {s}");
+    }
+}
+
+#[test]
+fn explorer_telemetry_marks_cold_computes_and_warm_hits() {
+    use medusa::explore::{DesignSpace, ExploreCache, Strategy};
+    let space = DesignSpace::smoke();
+    let dir = std::env::temp_dir().join(format!("medusa-prof-conf-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cache.tsv");
+
+    let mut cache = ExploreCache::open(&path);
+    let cold = RunOptions::new()
+        .threads(2)
+        .run_search(&space, &Strategy::Grid, 1, Some(&mut cache))
+        .unwrap();
+    cache.save().unwrap();
+    assert_eq!(cold.timings.len(), cold.evaluated.len(), "cold: timings align");
+    assert!(cold.timings.iter().all(|t| !t.cache_hit), "cold: nothing should hit");
+
+    let mut cache = ExploreCache::open(&path);
+    let warm = RunOptions::new()
+        .threads(2)
+        .run_search(&space, &Strategy::Grid, 1, Some(&mut cache))
+        .unwrap();
+    assert!(warm.timings.iter().all(|t| t.cache_hit && t.eval_s == 0.0), "warm: all hits");
+    // Telemetry is an observer here too: the evaluated set is
+    // unchanged by cache state.
+    assert_eq!(cold.evaluated, warm.evaluated, "telemetry perturbed the search");
+    let _ = std::fs::remove_dir_all(&dir);
+}
