@@ -582,4 +582,74 @@ fn main() {
     j.push_str("}\n  }\n}\n");
     std::fs::write(&pr9_path, &j).expect("writing BENCH_PR9.json");
     println!("wrote {pr9_path}");
+
+    // --- 11. PR 10: overload-robust serving — the oversubscribed
+    // serving-overload builtin (bounded drop-oldest queue under a
+    // 12-request burst, deadlines and a retry budget armed) across all
+    // four backend combinations. Shed / timed-out counters and the
+    // fingerprint must be bit-identical everywhere (the
+    // overload-conformance contract); the wall clock vs the PR 7
+    // serving-poisson baseline above shows what bounded admission,
+    // expiry scanning, and the extra next_event terms cost per run.
+    let overload_with = |sim: SimBackend| -> (f64, u64, u64, u64, u64) {
+        let sc = medusa::workload::Scenario::builtin("serving-overload").unwrap();
+        let t0 = Instant::now();
+        let out = RunOptions::new().backend(sim).run(&sc).expect("overload run");
+        let shed = out.stats.get("serving.requests_shed");
+        let timed_out = out.stats.get("serving.requests_timed_out");
+        (t0.elapsed().as_secs_f64(), out.fabric_cycles, shed, timed_out, out.fingerprint())
+    };
+    let (ov_full_s, ov_cycles, ov_shed, ov_to, ov_fp) = overload_with(SimBackend::full());
+    let (ov_elided_s, oc2, os2, ot2, of2) =
+        overload_with(SimBackend { payload: PayloadMode::Elided, edges: EdgeMode::Stepwise });
+    let (ov_leap_s, oc3, os3, ot3, of3) =
+        overload_with(SimBackend { payload: PayloadMode::Full, edges: EdgeMode::Leap });
+    let (ov_fast_s, oc4, os4, ot4, of4) = overload_with(SimBackend::fast());
+    assert_eq!((ov_cycles, ov_shed, ov_to), (oc2, os2, ot2), "elision changed overload results");
+    assert_eq!(
+        (ov_cycles, ov_shed, ov_to, ov_fp),
+        (oc3, os3, ot3, of3),
+        "leaping changed overload results"
+    );
+    assert_eq!(
+        (ov_cycles, ov_shed, ov_to, of2),
+        (oc4, os4, ot4, of4),
+        "fast backend changed overload results"
+    );
+    assert_eq!(ov_shed, 7, "cap-3 drop-oldest queue under the 12-request burst sheds 7");
+    println!(
+        "overload (serving-overload): full {ov_full_s:.4}s, elided {ov_elided_s:.4}s ({:.2}x), \
+         leap {ov_leap_s:.4}s ({:.2}x), fast {ov_fast_s:.4}s ({:.2}x) — {ov_shed} shed, \
+         {ov_to} timed out, {:.2}x full-backend cost vs serving-poisson, results identical",
+        ov_full_s / ov_elided_s.max(1e-12),
+        ov_full_s / ov_leap_s.max(1e-12),
+        ov_full_s / ov_fast_s.max(1e-12),
+        ov_full_s / sv_full_s.max(1e-12),
+    );
+    let pr10_path = format!("{json_dir}/BENCH_PR10.json");
+    let mut j = String::from("{\n");
+    j.push_str("  \"bench\": \"overload_pr10\",\n");
+    j.push_str(&format!(
+        "  \"overload_scenario\": {{\"name\": \"serving-overload\", \"fabric_cycles\": {ov_cycles}, \
+         \"requests_shed\": {ov_shed}, \"requests_timed_out\": {ov_to}, \"full_s\": {}, \
+         \"elided_s\": {}, \"leap_s\": {}, \"fast_s\": {}, \"elided_speedup\": {}, \
+         \"leap_speedup\": {}, \"fast_speedup\": {}, \"results_identical\": true}},\n",
+        json_f(ov_full_s),
+        json_f(ov_elided_s),
+        json_f(ov_leap_s),
+        json_f(ov_fast_s),
+        json_f(ov_full_s / ov_elided_s.max(1e-12)),
+        json_f(ov_full_s / ov_leap_s.max(1e-12)),
+        json_f(ov_full_s / ov_fast_s.max(1e-12)),
+    ));
+    j.push_str(&format!(
+        "  \"vs_pr7_baseline\": {{\"serving_poisson_full_s\": {}, \"overload_full_s\": {}, \
+         \"cost_ratio\": {}}}\n",
+        json_f(sv_full_s),
+        json_f(ov_full_s),
+        json_f(ov_full_s / sv_full_s.max(1e-12)),
+    ));
+    j.push_str("}\n");
+    std::fs::write(&pr10_path, &j).expect("writing BENCH_PR10.json");
+    println!("wrote {pr10_path}");
 }

@@ -290,6 +290,15 @@ impl System {
         }
     }
 
+    /// Record the cumulative shed-request count at the current fabric
+    /// cycle (change-driven; no-op unless profiling is on).
+    pub fn obs_serving_shed(&mut self, shed: u64) {
+        let cycle = self.fabric_cycles;
+        if let Some(obs) = self.obs.as_deref_mut() {
+            obs.serving_shed_sample(cycle, shed);
+        }
+    }
+
     /// Count a refused leap attempt against `why` (no-op when
     /// profiling is off).
     #[inline]

@@ -32,14 +32,18 @@ use std::path::{Path, PathBuf};
 
 /// Bump on any change to the resource/timing models, the probe scenario
 /// semantics, the evaluation backend, or the entry layout — stale
-/// entries must never be served. v6: the hierarchical family joined the
-/// grid (PR 8) — the enumeration order behind every cached sweep
-/// changed, and older binaries cannot parse `hierarchical:*` specs, so
-/// pre-hierarchy caches are discarded wholesale. v5: entries grew a
-/// `serving_p99` column and keys a serving-spec component (PR 7).
-pub const CACHE_VERSION: u64 = 6;
+/// entries must never be served. v7: serving specs grew the overload
+/// controls (queue_cap/overload/deadline/retries/backoff, PR 10) —
+/// they change what a serving probe measures, and older binaries
+/// cannot parse headers carrying them. v6: the hierarchical family
+/// joined the grid (PR 8) — the enumeration order behind every cached
+/// sweep changed, and older binaries cannot parse `hierarchical:*`
+/// specs, so pre-hierarchy caches are discarded wholesale. v5: entries
+/// grew a `serving_p99` column and keys a serving-spec component
+/// (PR 7).
+pub const CACHE_VERSION: u64 = 7;
 
-const HEADER: &str = "medusa-explore-cache v6";
+const HEADER: &str = "medusa-explore-cache v7";
 
 /// Stable identity hash of one (point, probe, payload-mode, serving)
 /// evaluation.
@@ -93,6 +97,11 @@ pub fn point_key(
             mix(s.max_batch as u64);
             mix(s.max_wait);
             mix(s.slo_cycles);
+            mix(s.queue_cap as u64);
+            mix(s.overload as u64);
+            mix(s.deadline);
+            mix(s.retries as u64);
+            mix(s.backoff);
             mix(s.arrivals.len() as u64);
             for &a in &s.arrivals {
                 mix(a);
@@ -319,8 +328,7 @@ mod tests {
             mean_gap: 1_000,
             max_batch: 2,
             max_wait: 500,
-            slo_cycles: 0,
-            arrivals: Vec::new(),
+            ..ServingSpec::default()
         };
         // Serving vs closed-loop: separate entries (serving_p99 differs).
         assert_ne!(
@@ -332,6 +340,12 @@ mod tests {
         assert_ne!(
             point_key(&pts[0], "gemm-mlp", PayloadMode::Elided, Some(&spec)),
             point_key(&pts[0], "gemm-mlp", PayloadMode::Elided, Some(&other))
+        );
+        // So are two different overload policies on the same arrivals.
+        let bounded = ServingSpec { queue_cap: 3, deadline: 20_000, ..spec.clone() };
+        assert_ne!(
+            point_key(&pts[0], "gemm-mlp", PayloadMode::Elided, Some(&spec)),
+            point_key(&pts[0], "gemm-mlp", PayloadMode::Elided, Some(&bounded))
         );
     }
 }

@@ -358,8 +358,7 @@ mod tests {
             mean_gap: 1_000,
             max_batch: 1,
             max_wait: 200,
-            slo_cycles: 0,
-            arrivals: Vec::new(),
+            ..ServingSpec::default()
         });
         let r = run_search(&space, &Strategy::Random { samples: 2 }, 1, 2, None).unwrap();
         assert_eq!(r.evaluated.len(), 2);

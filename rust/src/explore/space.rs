@@ -465,8 +465,7 @@ mod tests {
             mean_gap: 2_000,
             max_batch: 1,
             max_wait: 500,
-            slo_cycles: 0,
-            arrivals: Vec::new(),
+            ..ServingSpec::default()
         };
         let full = RunOptions::new()
             .backend(SimBackend::full())

@@ -385,7 +385,8 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .opt(
             "serving",
             "serving spec: requests=N,mean_gap=N,max_batch=N,max_wait=N,slo=N,seed=N,\
-             arrivals=C+C+... (overrides the scenario's [serving])",
+             arrivals=C+C+...,queue_cap=N,overload=reject|drop-oldest,deadline=N,\
+             retries=K,backoff=N (overrides the scenario's [serving])",
         )
         .opt("seed", "override the system seed (re-derives tenant workload seeds)")
         .opt("faults", "fault campaign (same syntax as `medusa run --faults`)")
@@ -394,9 +395,10 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .opt("json", "write the serving report as JSON to this path")
         .opt("profile", "write the observability report as JSON to this path")
         .opt("profile-window", "utilization sampling window in fabric cycles (default 4096)")
-        .flag("smoke", "CI smoke: serving-poisson builtin on the fast backend")
+        .flag("smoke", "CI smoke: oversubscribed serving-overload builtin on the fast backend")
         .parse(rest)?;
-    let which = args.get_or("scenario", "serving-poisson");
+    let smoke = args.has_flag("smoke");
+    let which = args.get_or("scenario", if smoke { "serving-overload" } else { "serving-poisson" });
     let mut sc = match medusa::workload::Scenario::builtin(which) {
         Some(sc) => sc,
         None => medusa::workload::Scenario::from_file(which)?,
@@ -413,6 +415,18 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     }
     if let Some(spec) = args.get("serving") {
         sc.serving = medusa::serving::ServingSpec::parse_cli(spec)?;
+    } else if smoke {
+        // Oversubscribed smoke spec. The 12-cycle burst overruns the
+        // 3-deep queue (drop-oldest sheds the overflow on admission,
+        // whatever the design's pass latency), and the lone straggler
+        // at cycle 50000 can never dispatch: solo, it only fires on
+        // max_wait (5000 cycles) but its deadline (1000 cycles)
+        // expires first. Nonzero shed + timed-out on every design.
+        sc.serving = medusa::serving::ServingSpec::parse_cli(
+            "arrivals=100+101+102+103+104+105+106+107+108+109+110+111+50000,\
+             max_batch=2,max_wait=5000,slo=150000,seed=5,queue_cap=3,\
+             overload=drop-oldest,deadline=1000,retries=1,backoff=500",
+        )?;
     }
     anyhow::ensure!(
         !sc.serving.is_none(),
@@ -436,7 +450,8 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     for (i, t) in report.tenants.iter().enumerate() {
         println!(
             "  tenant {i}: {} arrived, {} completed in {} batches | latency p50 {} p99 {} \
-             max {} cycles | SLO met {}/{} | goodput {:.1} req/s{}",
+             max {} cycles | SLO met {}/{} | shed {} timed_out {} retried {} failed {} | \
+             goodput {:.1} req/s{}",
             t.arrived,
             t.completed,
             t.batches,
@@ -445,6 +460,10 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             t.max_cycles,
             t.slo_met,
             t.completed,
+            t.shed,
+            t.timed_out,
+            t.retried,
+            t.failed,
             t.goodput_rps(out.now_ps),
             if t.starved { " | STARVED" } else { "" },
         );
@@ -463,13 +482,18 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         for (i, t) in report.tenants.iter().enumerate() {
             s.push_str(&format!(
                 "    {{\"tenant\": {i}, \"arrived\": {}, \"completed\": {}, \"batches\": {}, \
-                 \"slo_met\": {}, \"starved\": {}, \"p50_cycles\": {}, \"p99_cycles\": {}, \
+                 \"slo_met\": {}, \"starved\": {}, \"shed\": {}, \"timed_out\": {}, \
+                 \"retried\": {}, \"failed\": {}, \"p50_cycles\": {}, \"p99_cycles\": {}, \
                  \"max_cycles\": {}, \"goodput_rps\": {:.3}}}{}\n",
                 t.arrived,
                 t.completed,
                 t.batches,
                 t.slo_met,
                 t.starved,
+                t.shed,
+                t.timed_out,
+                t.retried,
+                t.failed,
                 t.p50_cycles,
                 t.p99_cycles,
                 t.max_cycles,

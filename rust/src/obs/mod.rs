@@ -327,6 +327,10 @@ pub struct SysRecorder {
     /// total_queued)` pushed only when the depth differs from the
     /// previous sample.
     pub serving_depth: Vec<(u64, u64)>,
+    /// Change-driven cumulative shed series: `(fabric_cycle,
+    /// total_shed)`. Pairs with `serving_depth` so a flat depth under
+    /// a full bounded queue reads as overload sheds, not idleness.
+    pub serving_shed: Vec<(u64, u64)>,
 }
 
 impl SysRecorder {
@@ -340,12 +344,19 @@ impl SysRecorder {
             pending_cap: CapSource::EdgeBudget,
             util: Utilization::new(groups, window),
             serving_depth: Vec::new(),
+            serving_shed: Vec::new(),
         }
     }
 
     pub fn serving_depth_sample(&mut self, cycle: u64, depth: u64) {
         if self.serving_depth.last().map(|&(_, d)| d) != Some(depth) {
             self.serving_depth.push((cycle, depth));
+        }
+    }
+
+    pub fn serving_shed_sample(&mut self, cycle: u64, shed: u64) {
+        if self.serving_shed.last().map(|&(_, s)| s) != Some(shed) {
+            self.serving_shed.push((cycle, shed));
         }
     }
 
@@ -364,6 +375,7 @@ impl SysRecorder {
             groups: self.util.groups,
             utilization,
             serving_depth: self.serving_depth,
+            serving_shed: self.serving_shed,
         }
     }
 }
@@ -394,6 +406,7 @@ pub struct SysProfile {
     pub groups: usize,
     pub utilization: Vec<WindowSample>,
     pub serving_depth: Vec<(u64, u64)>,
+    pub serving_shed: Vec<(u64, u64)>,
 }
 
 /// A complete run profile: simulator-side attribution plus host-time

@@ -91,7 +91,10 @@ pub fn run_profile_json(p: &RunProfile, scenario: &str, design: &str, backend: &
     let _ = writeln!(out, "    ],");
     let depth: Vec<String> =
         p.sys.serving_depth.iter().map(|(c, d)| format!("[{c}, {d}]")).collect();
-    let _ = writeln!(out, "    \"serving_queue_depth\": [{}]", depth.join(", "));
+    let _ = writeln!(out, "    \"serving_queue_depth\": [{}],", depth.join(", "));
+    let shed: Vec<String> =
+        p.sys.serving_shed.iter().map(|(c, s)| format!("[{c}, {s}]")).collect();
+    let _ = writeln!(out, "    \"serving_requests_shed\": [{}]", shed.join(", "));
     let _ = writeln!(out, "  }},");
 
     let _ = writeln!(out, "  \"host\": {{");
@@ -261,6 +264,9 @@ fn validate_run(v: &Value) -> Result<(), String> {
     req(util, "serving_queue_depth", "utilization")?
         .as_arr()
         .ok_or_else(|| "\"serving_queue_depth\" must be an array".to_string())?;
+    req(util, "serving_requests_shed", "utilization")?
+        .as_arr()
+        .ok_or_else(|| "\"serving_requests_shed\" must be an array".to_string())?;
     validate_spans(v)
 }
 
@@ -455,6 +461,15 @@ fn pretty_run(v: &Value) -> String {
                 .unwrap_or(0);
             let _ = writeln!(out, "  serving queue  {} change sample(s) · peak depth {peak}", depth.len());
         }
+        let shed = util.get("serving_requests_shed").and_then(Value::as_arr).unwrap_or(&[]);
+        if !shed.is_empty() {
+            let total = shed
+                .iter()
+                .filter_map(|p| p.as_arr().and_then(|p| p.get(1)).and_then(Value::as_u64))
+                .max()
+                .unwrap_or(0);
+            let _ = writeln!(out, "  serving shed   {} change sample(s) · {total} shed in total", shed.len());
+        }
     }
     let _ = writeln!(out, "\nhost time   {}", spans_line(v));
     out
@@ -529,6 +544,7 @@ mod tests {
                     trunk_occ: 0,
                 }],
                 serving_depth: vec![(0, 0), (10, 3)],
+                serving_shed: vec![(12, 1)],
             },
             host: vec![("build", 0.001), ("drive", 0.5)],
         }

@@ -234,8 +234,7 @@ mod tests {
             mean_gap: 500,
             max_batch: 1,
             max_wait: 100,
-            slo_cycles: 0,
-            arrivals: Vec::new(),
+            ..ServingSpec::default()
         };
         let out = RunOptions::new()
             .backend(SimBackend::fast())

@@ -1,5 +1,10 @@
 //! Inference-serving front-end (PR 7): open-loop arrivals, per-model
-//! request queues, dynamic batching, SLO accounting.
+//! request queues, dynamic batching, SLO accounting. PR 10 makes it
+//! overload-robust: bounded queues with typed admission policies
+//! (`queue_cap`/`overload`), per-request deadlines (`deadline`),
+//! deterministic retry with pre-drawn exponential backoff
+//! (`retries`/`backoff`), and fault-aware recovery of a
+//! degrade-quiesced tenant's in-flight batch.
 //!
 //! The scenario engine replays fixed layer schedules; this layer turns
 //! each tenant into a *served model*: requests arrive open-loop (seeded
@@ -15,13 +20,18 @@
 //! the simulator**. Every arrival cycle is pre-materialized at build
 //! into a [`ServingState`] (per-tenant seed-keyed PRNG streams), so:
 //!
-//! * **data-independence**: whether a request arrives at cycle `c`
-//!   depends only on `(spec, tenant)`, never on payload words or
-//!   simulation state — elided-vs-full runs see the identical schedule;
+//! * **data-independence**: whether a request arrives at cycle `c` —
+//!   and what every retry attempt would wait, should its batch be
+//!   failed fast — depends only on `(spec, tenant)`, never on payload
+//!   words or simulation state — elided-vs-full runs see the identical
+//!   schedule. Admission (shed), expiry (timeout), and dispatch are
+//!   all functions of `(state, fabric cycle)`, so the overload
+//!   machinery inherits the same property;
 //! * **leap-exactness**: between bursts the fabric is genuinely idle,
 //!   and [`ServingRun::next_event`] reports the earliest cycle at which
 //!   the serving layer could act (next unadmitted arrival, next
-//!   max-wait dispatch deadline) — the engine caps idle-edge leaps
+//!   max-wait dispatch deadline, next request-deadline expiry, next
+//!   backed-off retry re-admission) — the engine caps idle-edge leaps
 //!   there, exactly like staggered tenant starts and
 //!   `FaultState::fabric_leap_cap`, so steady-state serving runs are
 //!   cheap under `SimBackend::fast()` without moving a single event;
@@ -43,12 +53,49 @@ use std::collections::VecDeque;
 /// the tenant index so each served model draws independently).
 const ARRIVAL_KEY: u64 = 0x7365_7276_5f61_7272; // "serv_arr"
 
+/// Domain-separation key for the per-tenant retry-backoff streams —
+/// independent of the arrival stream so adding `retries=` to a spec
+/// never moves a single arrival.
+const BACKOFF_KEY: u64 = 0x7365_7276_5f62_6f66; // "serv_bof"
+
 /// One exponential inter-arrival gap (fabric cycles), floored at 1 so
 /// arrivals are strictly increasing and a leap cap is never zero.
 fn poisson_gap(prng: &mut Prng, mean_gap: u64) -> u64 {
     let u = prng.f64(); // in [0, 1)
     let g = (-(1.0 - u).ln() * mean_gap as f64).ceil();
     (g as u64).max(1)
+}
+
+/// What a bounded queue does when admitting one more request would
+/// overflow it (the `overload=` key; meaningless without `queue_cap`).
+/// Either way exactly one request is shed, counted in
+/// `serving.requests_shed` — the policies differ only in *which* one.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OverloadPolicy {
+    /// Shed the incoming request; queued work keeps its place.
+    #[default]
+    Reject,
+    /// Shed the oldest queued request to make room for the new one
+    /// (fresh work is favoured; stale queued requests were going to
+    /// miss their SLO anyway).
+    DropOldest,
+}
+
+impl OverloadPolicy {
+    pub fn parse(s: &str) -> Option<OverloadPolicy> {
+        match s {
+            "reject" => Some(OverloadPolicy::Reject),
+            "drop-oldest" => Some(OverloadPolicy::DropOldest),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OverloadPolicy::Reject => "reject",
+            OverloadPolicy::DropOldest => "drop-oldest",
+        }
+    }
 }
 
 /// The user-facing serving description: what a `[serving]` scenario
@@ -74,6 +121,25 @@ pub struct ServingSpec {
     /// Per-request SLO target, arrival → completion, in fabric cycles
     /// (0 = no target: every completion counts as goodput).
     pub slo_cycles: u64,
+    /// Bound on each tenant's request queue (0 = unbounded, the
+    /// pre-overload behaviour). A full queue sheds per `overload`.
+    pub queue_cap: usize,
+    /// Admission policy when a bounded queue is full.
+    pub overload: OverloadPolicy,
+    /// Per-request deadline, arrival → completion, in fabric cycles
+    /// (0 = none). A queued or backing-off request whose deadline
+    /// passes is abandoned (`serving.requests_timed_out`); a dispatched
+    /// request always runs to completion — lateness there is the SLO
+    /// tracker's business, not the admission layer's.
+    pub deadline: u64,
+    /// Retry budget for failed-fast requests (a degrade-quiesced
+    /// tenant's in-flight batch): each such request is re-queued up to
+    /// this many times before counting in `serving.requests_failed`.
+    pub retries: usize,
+    /// Exponential-backoff base in fabric cycles: retry attempt `k`
+    /// waits `backoff << k` plus a pre-drawn jitter in `[0, backoff)`.
+    /// Required >= 1 when `retries` is set.
+    pub backoff: u64,
 }
 
 impl ServingSpec {
@@ -114,6 +180,16 @@ impl ServingSpec {
             "max_wait" => self.max_wait = as_u64(value)?,
             "slo_cycles" => self.slo_cycles = as_u64(value)?,
             "arrivals" => self.arrivals = parse_arrivals(value.as_str()?)?,
+            "queue_cap" => self.queue_cap = value.as_usize()?,
+            "overload" => {
+                let s = value.as_str()?;
+                self.overload = OverloadPolicy::parse(s).ok_or_else(|| {
+                    anyhow!("serving.overload: unknown policy {s:?} (reject | drop-oldest)")
+                })?;
+            }
+            "deadline" => self.deadline = as_u64(value)?,
+            "retries" => self.retries = value.as_usize()?,
+            "backoff" => self.backoff = as_u64(value)?,
             _ => bail!("unknown serving key {key:?}"),
         }
         Ok(true)
@@ -121,7 +197,10 @@ impl ServingSpec {
 
     /// Parse the compact CLI spec: comma-separated items of
     /// `requests=N`, `mean_gap=N`, `max_batch=N`, `max_wait=N`,
-    /// `slo=N`, `seed=N`, `arrivals=C+C+...` (cycles joined by `+`).
+    /// `slo=N`, `seed=N`, `arrivals=C+C+...` (cycles joined by `+`),
+    /// plus the overload controls `queue_cap=N`,
+    /// `overload=reject|drop-oldest`, `deadline=N`, `retries=K`,
+    /// `backoff=N`.
     /// Example: `--serving=requests=32,mean_gap=4096,max_batch=4,slo=60000`.
     pub fn parse_cli(spec: &str) -> Result<ServingSpec> {
         let mut out = ServingSpec::default();
@@ -141,6 +220,15 @@ impl ServingSpec {
                 "slo" => out.slo_cycles = num(val, key)?,
                 "seed" => out.seed = num(val, key)?,
                 "arrivals" => out.arrivals = parse_arrivals(val)?,
+                "queue_cap" => out.queue_cap = num(val, key)? as usize,
+                "overload" => {
+                    out.overload = OverloadPolicy::parse(val).ok_or_else(|| {
+                        anyhow!("--serving: unknown overload policy {val:?} (reject | drop-oldest)")
+                    })?;
+                }
+                "deadline" => out.deadline = num(val, key)?,
+                "retries" => out.retries = num(val, key)? as usize,
+                "backoff" => out.backoff = num(val, key)?,
                 _ => bail!("--serving: unknown item {key:?}"),
             }
         }
@@ -160,9 +248,26 @@ impl ServingSpec {
                 "serving: the Poisson process needs mean_gap >= 1 (or give explicit arrivals)"
             );
         } else {
+            // `requests=` and `arrivals=` are mutually exclusive by
+            // design: an explicit trace IS the request list, and a
+            // spec naming both is ambiguous about which one the author
+            // meant. This is a typed error, never a silent override.
             ensure!(
                 self.requests == 0,
-                "serving: give requests+mean_gap or an explicit arrivals trace, not both"
+                "serving: give requests+mean_gap or an explicit arrivals trace, not both \
+                 (arrivals would silently win; drop requests= or the trace)"
+            );
+        }
+        if self.queue_cap == 0 {
+            ensure!(
+                self.overload == OverloadPolicy::Reject,
+                "serving: overload=drop-oldest needs a bounded queue (set queue_cap)"
+            );
+        }
+        if self.retries > 0 {
+            ensure!(
+                self.backoff >= 1,
+                "serving: retries need backoff >= 1 (the exponential-backoff base)"
             );
         }
         Ok(())
@@ -183,6 +288,22 @@ impl ServingSpec {
             ("serving.max_wait", self.max_wait.to_string()),
             ("serving.slo_cycles", self.slo_cycles.to_string()),
         ];
+        // Overload/deadline/retry keys are emitted only when set, so a
+        // spec predating them produces a byte-identical header (and the
+        // goldens stay untouched). Defaults restore exactly on parse.
+        if self.queue_cap > 0 {
+            kv.push(("serving.queue_cap", self.queue_cap.to_string()));
+        }
+        if self.overload != OverloadPolicy::Reject {
+            kv.push(("serving.overload", format!("\"{}\"", self.overload.name())));
+        }
+        if self.deadline > 0 {
+            kv.push(("serving.deadline", self.deadline.to_string()));
+        }
+        if self.retries > 0 {
+            kv.push(("serving.retries", self.retries.to_string()));
+            kv.push(("serving.backoff", self.backoff.to_string()));
+        }
         if !self.arrivals.is_empty() {
             let joined =
                 self.arrivals.iter().map(|c| c.to_string()).collect::<Vec<_>>().join("+");
@@ -215,18 +336,32 @@ pub struct ServingState {
     pub spec: ServingSpec,
     /// Arrival cycles per tenant, ascending.
     pub arrivals: Vec<Vec<u64>>,
+    /// Pre-drawn retry-backoff delays per tenant, request-major:
+    /// `backoffs[t][i * retries + k]` is what attempt `k` of request
+    /// `i` waits before re-admission. Drawn once here (the
+    /// `FaultState` pattern) so a retried schedule is a pure function
+    /// of `(spec, tenant)` — never of simulation state, payload words,
+    /// or thread count. Empty when `retries` is 0.
+    pub backoffs: Vec<Vec<u64>>,
 }
 
 impl ServingState {
     /// Materialize a spec for `tenants` served models.
     pub fn build(spec: &ServingSpec, tenants: usize) -> Result<ServingState> {
         spec.validate()?;
+        // An explicit trace is shared by every tenant: sort it ONCE and
+        // clone the sorted vector (the old per-tenant clone-and-sort
+        // redid identical work `tenants` times).
+        let explicit = {
+            let mut v = spec.arrivals.clone();
+            v.sort_unstable();
+            v
+        };
         let mut per = Vec::with_capacity(tenants);
+        let mut backoffs = Vec::with_capacity(tenants);
         for t in 0..tenants {
-            let cycles = if !spec.arrivals.is_empty() {
-                let mut v = spec.arrivals.clone();
-                v.sort_unstable();
-                v
+            let cycles = if !explicit.is_empty() {
+                explicit.clone()
             } else {
                 let mut prng = Prng::new(spec.seed ^ ARRIVAL_KEY ^ crate::fault::mix64(t as u64));
                 let mut now = 0u64;
@@ -237,9 +372,27 @@ impl ServingState {
                     })
                     .collect()
             };
+            let mut draws = Vec::new();
+            if spec.retries > 0 {
+                // Exponential base + jitter, every draw materialized up
+                // front from a seed-keyed stream independent of the
+                // arrival stream. Shifts saturate so absurd retry
+                // budgets degrade to "practically never" rather than
+                // overflowing.
+                let mut prng = Prng::new(spec.seed ^ BACKOFF_KEY ^ crate::fault::mix64(t as u64));
+                draws.reserve(cycles.len() * spec.retries);
+                for _req in 0..cycles.len() {
+                    for k in 0..spec.retries {
+                        let base =
+                            spec.backoff.checked_shl(k.min(32) as u32).unwrap_or(u64::MAX);
+                        draws.push(base.saturating_add(prng.below(spec.backoff)));
+                    }
+                }
+            }
             per.push(cycles);
+            backoffs.push(draws);
         }
-        Ok(ServingState { spec: spec.clone(), arrivals: per })
+        Ok(ServingState { spec: spec.clone(), arrivals: per, backoffs })
     }
 
     /// The last arrival cycle across every tenant (0 when empty) —
@@ -247,27 +400,77 @@ impl ServingState {
     pub fn last_arrival(&self) -> u64 {
         self.arrivals.iter().filter_map(|v| v.last().copied()).max().unwrap_or(0)
     }
+
+    /// The pre-drawn backoff delay of attempt `attempt` (0-based) of
+    /// tenant `t`'s request `idx`.
+    pub fn backoff_delay(&self, t: usize, idx: usize, attempt: u32) -> u64 {
+        self.backoffs[t][idx * self.spec.retries + attempt as usize]
+    }
+
+    /// Upper bound on the extra simulated time retries can add: the
+    /// largest per-tenant sum of pre-drawn delays (the engine's
+    /// edge-budget term; saturating, never load-bearing for behaviour).
+    pub fn backoff_horizon(&self) -> u64 {
+        self.backoffs
+            .iter()
+            .map(|v| v.iter().fold(0u64, |a, &d| a.saturating_add(d)))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// One admitted request, tracked through queueing, dispatch, and (on a
+/// failed-fast batch) retry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Req {
+    /// Original arrival cycle — the latency and deadline base, stable
+    /// across retries.
+    pub arrival: u64,
+    /// Cycle the request last entered the queue — the max-wait base (a
+    /// retry waits from re-admission, not from first arrival). Equals
+    /// `arrival` until the first retry, so pre-overload specs batch on
+    /// exactly the old schedule.
+    pub enqueued: u64,
+    /// Index into the tenant's arrival schedule; keys the pre-drawn
+    /// backoff stream.
+    pub idx: usize,
+    /// Dispatch attempts so far (0 = never dispatched).
+    pub attempt: u32,
 }
 
 /// The live serving front-end one engine run drives: admission from the
-/// pre-materialized schedule, per-tenant queues, the batcher, and the
-/// latency record. All decisions are functions of (state, fabric
-/// cycle) — nothing here reads payloads or occupancy.
+/// pre-materialized schedule, per-tenant bounded queues, deadline
+/// expiry, the batcher, retry/backoff bookkeeping, and the latency
+/// record. All decisions are functions of (state, fabric cycle) —
+/// nothing here reads payloads or occupancy.
 #[derive(Clone, Debug)]
 pub struct ServingRun {
     pub state: ServingState,
     /// Index of the next unadmitted arrival, per tenant.
     next_arrival: Vec<usize>,
-    /// Admitted-but-undispatched requests: their arrival cycles.
-    queue: Vec<VecDeque<u64>>,
-    /// Dispatched-but-uncompleted requests: their arrival cycles.
-    inflight: Vec<Vec<u64>>,
+    /// Admitted-but-undispatched requests, oldest first.
+    queue: Vec<VecDeque<Req>>,
+    /// Dispatched-but-uncompleted requests.
+    inflight: Vec<Vec<Req>>,
+    /// Failed-fast requests waiting out their backoff: `(ready_at,
+    /// req)`, ascending by `(ready_at, idx)` so re-admission order is
+    /// deterministic.
+    pending: Vec<Vec<(u64, Req)>>,
     /// Completed request count per tenant.
     pub completed: Vec<usize>,
     /// Dispatched batch count per tenant.
     pub batches: Vec<usize>,
     /// SLO-met completion count per tenant.
     pub slo_met: Vec<usize>,
+    /// Requests shed by the bounded-queue admission policy.
+    pub shed: Vec<usize>,
+    /// Requests abandoned by deadline expiry.
+    pub timed_out: Vec<usize>,
+    /// Retry re-admissions scheduled (one request can count several
+    /// times, once per attempt).
+    pub retried: Vec<usize>,
+    /// Requests failed for good (retry budget exhausted).
+    pub failed: Vec<usize>,
     /// Completion latencies per tenant, in completion order (the
     /// percentile source; fingerprinted for determinism checks).
     pub latencies: Vec<Vec<u64>>,
@@ -281,40 +484,101 @@ impl ServingRun {
             next_arrival: vec![0; n],
             queue: vec![VecDeque::new(); n],
             inflight: vec![Vec::new(); n],
+            pending: vec![Vec::new(); n],
             completed: vec![0; n],
             batches: vec![0; n],
             slo_met: vec![0; n],
+            shed: vec![0; n],
+            timed_out: vec![0; n],
+            retried: vec![0; n],
+            failed: vec![0; n],
             latencies: vec![Vec::new(); n],
         }
     }
 
-    /// Admit every arrival due at or before `now` into its queue.
+    /// Admission with the bounded-queue policy applied. Queue depth is
+    /// sampled only when the queue actually grows or its composition
+    /// changes (a rejected request leaves it untouched).
+    fn enqueue(&mut self, t: usize, req: Req, stats: &mut Stats) {
+        let cap = self.state.spec.queue_cap;
+        if cap > 0 && self.queue[t].len() >= cap {
+            match self.state.spec.overload {
+                OverloadPolicy::Reject => {
+                    self.shed[t] += 1;
+                    stats.bump(Counter::ServingRequestsShed);
+                    return;
+                }
+                OverloadPolicy::DropOldest => {
+                    self.queue[t].pop_front();
+                    self.shed[t] += 1;
+                    stats.bump(Counter::ServingRequestsShed);
+                }
+            }
+        }
+        self.queue[t].push_back(req);
+        stats.sample(SampleId::ServingQueueDepth, self.queue[t].len() as u64);
+    }
+
+    /// Admit everything due at or before `now`: backed-off retries
+    /// whose delay has elapsed first (they are the oldest requests by
+    /// arrival), then fresh arrivals — a fixed order, so one edge
+    /// receiving both admits them identically on every backend.
     pub fn admit(&mut self, now: u64, stats: &mut Stats) {
         for t in 0..self.queue.len() {
+            while self.pending[t].first().is_some_and(|&(ready, _)| ready <= now) {
+                let (_, mut req) = self.pending[t].remove(0);
+                req.enqueued = now;
+                self.enqueue(t, req, stats);
+            }
             let arr = &self.state.arrivals[t];
             while self.next_arrival[t] < arr.len() && arr[self.next_arrival[t]] <= now {
-                self.queue[t].push_back(arr[self.next_arrival[t]]);
+                let arrival = arr[self.next_arrival[t]];
+                let idx = self.next_arrival[t];
                 self.next_arrival[t] += 1;
                 stats.bump(Counter::ServingRequestsArrived);
-                stats.sample(SampleId::ServingQueueDepth, self.queue[t].len() as u64);
+                self.enqueue(t, Req { arrival, enqueued: arrival, idx, attempt: 0 }, stats);
             }
+        }
+    }
+
+    /// Abandon every queued or backing-off request whose deadline has
+    /// passed (`arrival + deadline <= now`). Runs right after `admit`
+    /// on every edge, before any dispatch decision — expiry beats
+    /// dispatch on ties, and afterwards every surviving request's
+    /// expiry cycle is strictly future (the `next_event` guarantee).
+    /// In-flight batches are never expired: once dispatched a request
+    /// runs to completion.
+    pub fn expire(&mut self, now: u64, stats: &mut Stats) {
+        let dl = self.state.spec.deadline;
+        if dl == 0 {
+            return;
+        }
+        for t in 0..self.queue.len() {
+            let before = self.queue[t].len() + self.pending[t].len();
+            self.queue[t].retain(|r| r.arrival + dl > now);
+            self.pending[t].retain(|(_, r)| r.arrival + dl > now);
+            let expired = before - self.queue[t].len() - self.pending[t].len();
+            self.timed_out[t] += expired;
+            stats.add(Counter::ServingRequestsTimedOut, expired as u64);
         }
     }
 
     /// Batcher: dispatch tenant `t`'s next batch if the policy fires
     /// (queue reached `max_batch`, or the oldest request has waited
-    /// `max_wait`). Returns the batch size dispatched.
+    /// `max_wait` since it was enqueued). Returns the batch size
+    /// dispatched.
     pub fn dispatch(&mut self, t: usize, now: u64, stats: &mut Stats) -> Option<usize> {
         let q = &mut self.queue[t];
-        let oldest = *q.front()?;
+        let oldest = q.front()?.enqueued;
         let fire = q.len() >= self.state.spec.max_batch || now - oldest >= self.state.spec.max_wait;
         if !fire {
             return None;
         }
         let k = q.len().min(self.state.spec.max_batch);
         for _ in 0..k {
-            let arrival = q.pop_front().expect("batch size bounded by queue length");
-            self.inflight[t].push(arrival);
+            let mut req = q.pop_front().expect("batch size bounded by queue length");
+            req.attempt += 1;
+            self.inflight[t].push(req);
         }
         self.batches[t] += 1;
         stats.bump(Counter::ServingBatches);
@@ -325,8 +589,8 @@ impl ServingRun {
     /// Record tenant `t`'s in-flight batch as completed at `now`.
     pub fn complete(&mut self, t: usize, now: u64, stats: &mut Stats) {
         let slo = self.state.spec.slo_cycles;
-        for arrival in std::mem::take(&mut self.inflight[t]) {
-            let lat = now - arrival;
+        for req in std::mem::take(&mut self.inflight[t]) {
+            let lat = now - req.arrival;
             self.latencies[t].push(lat);
             self.completed[t] += 1;
             stats.bump(Counter::ServingRequestsCompleted);
@@ -336,6 +600,36 @@ impl ServingRun {
                 stats.bump(Counter::ServingSloMet);
             }
         }
+    }
+
+    /// Fail tenant `t`'s in-flight batch fast — the degrade hand-off:
+    /// when the watchdog quiesces a wedged tenant, the batch it was
+    /// running will never complete, so each of its requests either
+    /// schedules a retry after its pre-drawn backoff delay (budget
+    /// left) or counts in `serving.requests_failed` (budget spent).
+    /// Returns how many failed for good.
+    pub fn fail_batch(&mut self, t: usize, now: u64, stats: &mut Stats) -> usize {
+        let retries = self.state.spec.retries as u32;
+        let mut dead = 0;
+        for req in std::mem::take(&mut self.inflight[t]) {
+            // `attempt` was bumped at dispatch, so attempt 1 failing
+            // consumes the first of `retries` budget slots.
+            if req.attempt <= retries {
+                let delay = self.state.backoff_delay(t, req.idx, req.attempt - 1);
+                let ready = now.saturating_add(delay);
+                self.retried[t] += 1;
+                stats.bump(Counter::ServingRequestsRetried);
+                stats.sample(SampleId::ServingRetryBackoffCycles, delay);
+                let pos = self.pending[t]
+                    .partition_point(|p| (p.0, p.1.idx) <= (ready, req.idx));
+                self.pending[t].insert(pos, (ready, req));
+            } else {
+                self.failed[t] += 1;
+                stats.bump(Counter::ServingRequestsFailed);
+                dead += 1;
+            }
+        }
+        dead
     }
 
     /// Requests currently dispatched into tenant `t`'s running pass.
@@ -354,15 +648,40 @@ impl ServingRun {
         self.queue.iter().map(|q| q.len() as u64).sum()
     }
 
+    /// Requests shed so far, summed over every tenant (the
+    /// observability layer's cumulative-shed timeline source — it pairs
+    /// with the queue-depth series so a flat depth under a full queue
+    /// reads as sheds, not idleness).
+    pub fn total_shed(&self) -> u64 {
+        self.shed.iter().map(|&s| s as u64).sum()
+    }
+
     /// The next unadmitted arrival cycle of tenant `t`, if any.
     pub fn next_arrival_cycle(&self, t: usize) -> Option<u64> {
         self.state.arrivals[t].get(self.next_arrival[t]).copied()
     }
 
+    /// The earliest deadline-expiry cycle among tenant `t`'s queued and
+    /// backing-off requests (`None` when deadlines are off or nothing
+    /// can expire).
+    pub fn next_deadline(&self, t: usize) -> Option<u64> {
+        let dl = self.state.spec.deadline;
+        if dl == 0 {
+            return None;
+        }
+        self.queue[t]
+            .iter()
+            .map(|r| r.arrival + dl)
+            .chain(self.pending[t].iter().map(|(_, r)| r.arrival + dl))
+            .min()
+    }
+
     /// Per-tenant serving state for watchdog dumps: queue depth,
-    /// in-flight batch, completion progress, and the next arrival.
-    /// Appended to `System::state_dump` so a wedged serving run shows
-    /// where its requests are stuck, not just where the fabric is.
+    /// in-flight batch, backoff population, completion progress, where
+    /// requests died (shed / timed out / retried / failed), the next
+    /// arrival, and the next pending deadline. Appended to
+    /// `System::state_dump` so an overloaded or wedged serving run
+    /// shows where its requests went, not just where the fabric is.
     pub fn state_dump(&self) -> String {
         use std::fmt::Write as _;
         let mut s = String::new();
@@ -371,41 +690,59 @@ impl ServingRun {
                 Some(c) => c.to_string(),
                 None => "-".to_string(),
             };
+            let nd = match self.next_deadline(t) {
+                Some(c) => c.to_string(),
+                None => "-".to_string(),
+            };
             let _ = writeln!(
                 s,
-                "  serving t{t}: queued={} inflight={} completed={}/{} batches={} next_arrival={next}",
+                "  serving t{t}: queued={} inflight={} backing_off={} completed={}/{} \
+                 batches={} shed={} timed_out={} retried={} failed={} \
+                 next_arrival={next} next_deadline={nd}",
                 self.queue[t].len(),
                 self.inflight[t].len(),
+                self.pending[t].len(),
                 self.completed[t],
                 self.state.arrivals[t].len(),
                 self.batches[t],
+                self.shed[t],
+                self.timed_out[t],
+                self.retried[t],
+                self.failed[t],
             );
         }
         s
     }
 
-    /// Does tenant `t` still have unadmitted, queued, or in-flight
-    /// work?
+    /// Does tenant `t` still have unadmitted, queued, backing-off, or
+    /// in-flight work?
     pub fn has_more(&self, t: usize) -> bool {
         self.next_arrival[t] < self.state.arrivals[t].len()
             || !self.queue[t].is_empty()
             || !self.inflight[t].is_empty()
+            || !self.pending[t].is_empty()
     }
 
     /// Every request of every tenant admitted, dispatched, completed?
+    /// (Shed, timed-out, and failed requests count as resolved.)
     pub fn all_done(&self) -> bool {
         (0..self.queue.len()).all(|t| !self.has_more(t))
     }
 
     /// The earliest future cycle at which the serving layer could act:
-    /// the next unadmitted arrival of any tenant, or the max-wait
-    /// dispatch deadline of a *parked* tenant's oldest queued request
-    /// (busy tenants dispatch at pass completion, not on a timer).
+    /// the next unadmitted arrival of any tenant, the max-wait dispatch
+    /// deadline of a *parked* tenant's oldest queued request (busy
+    /// tenants dispatch at pass completion, not on a timer), the
+    /// re-admission cycle of a backed-off retry, or the deadline expiry
+    /// of any queued/backing-off request (expiry changes queue
+    /// composition — and therefore dispatch decisions — so it must land
+    /// on its exact edge whether the tenant is parked or busy).
     /// `u64::MAX` when nothing is pending — this is the engine's leap
-    /// cap, and after `admit`/`dispatch` have run at `now` every value
-    /// returned is strictly greater than `now` (arrivals `<= now` were
-    /// admitted; a parked tenant whose deadline elapsed was dispatched),
-    /// so a leap is never capped at zero.
+    /// cap, and after `admit`/`expire`/`dispatch` have run at `now`
+    /// every value returned is strictly greater than `now` (arrivals
+    /// and ready retries `<= now` were admitted, expired requests were
+    /// removed, and a parked tenant whose max-wait elapsed was
+    /// dispatched), so a leap is never capped at zero.
     pub fn next_event(&self, parked: &[bool]) -> u64 {
         let mut next = u64::MAX;
         for t in 0..self.queue.len() {
@@ -414,9 +751,15 @@ impl ServingRun {
                 next = next.min(arr[self.next_arrival[t]]);
             }
             if parked.get(t).copied().unwrap_or(false) {
-                if let Some(&oldest) = self.queue[t].front() {
-                    next = next.min(oldest + self.state.spec.max_wait);
+                if let Some(front) = self.queue[t].front() {
+                    next = next.min(front.enqueued + self.state.spec.max_wait);
                 }
+            }
+            if let Some(&(ready, _)) = self.pending[t].first() {
+                next = next.min(ready);
+            }
+            if let Some(dl) = self.next_deadline(t) {
+                next = next.min(dl);
             }
         }
         next
@@ -436,6 +779,15 @@ pub struct TenantServing {
     /// defined as 0 by convention; they summarize an empty series, not
     /// an instantaneous latency.
     pub starved: bool,
+    /// Requests shed by the bounded-queue admission policy.
+    pub shed: usize,
+    /// Requests abandoned by deadline expiry.
+    pub timed_out: usize,
+    /// Retry re-admissions scheduled (attempts, not unique requests).
+    pub retried: usize,
+    /// Requests failed for good (retry budget exhausted on a
+    /// failed-fast batch).
+    pub failed: usize,
     pub p50_cycles: u64,
     pub p99_cycles: u64,
     pub max_cycles: u64,
@@ -494,6 +846,10 @@ impl ServingReport {
                     starved: run.completed[t] == 0 && !run.state.arrivals[t].is_empty(),
                     batches: run.batches[t],
                     slo_met: run.slo_met[t],
+                    shed: run.shed[t],
+                    timed_out: run.timed_out[t],
+                    retried: run.retried[t],
+                    failed: run.failed[t],
                     p50_cycles: percentile_sorted(&sorted, 50),
                     p99_cycles: percentile_sorted(&sorted, 99),
                     max_cycles: sorted.last().copied().unwrap_or(0),
@@ -767,6 +1123,281 @@ mod tests {
             "poisson and explicit arrivals are exclusive"
         );
         assert!(ServingSpec::parse_cli("arrivals=1+x,max_batch=1").is_err());
+    }
+
+    #[test]
+    fn bounded_queue_reject_sheds_the_incoming_request() {
+        let spec = ServingSpec {
+            arrivals: vec![10, 11, 12, 13],
+            max_batch: 8,
+            max_wait: 1_000,
+            queue_cap: 2,
+            ..ServingSpec::default()
+        };
+        let mut run = ServingRun::new(ServingState::build(&spec, 1).unwrap());
+        let mut stats = Stats::default();
+        run.admit(20, &mut stats);
+        // Cap 2: the first two queue, the last two are shed. The queue
+        // keeps the OLDEST work under reject.
+        assert_eq!(run.queue_depth(0), 2);
+        assert_eq!(run.shed[0], 2);
+        assert_eq!(stats.get("serving.requests_arrived"), 4);
+        assert_eq!(stats.get("serving.requests_shed"), 2);
+        assert_eq!(run.dispatch(0, 1_010, &mut stats), Some(2));
+        run.complete(0, 1_020, &mut stats);
+        // Shed requests are resolved work: the run terminates.
+        assert!(run.all_done());
+        let rep = ServingReport::from_run(&run);
+        assert_eq!(rep.tenants[0].shed, 2);
+        assert_eq!(rep.tenants[0].completed, 2);
+        // The survivors are the oldest arrivals (10, 11).
+        assert_eq!(run.latencies[0], vec![1_010, 1_009]);
+    }
+
+    #[test]
+    fn bounded_queue_drop_oldest_sheds_the_front() {
+        let spec = ServingSpec {
+            arrivals: vec![10, 11, 12, 13],
+            max_batch: 8,
+            max_wait: 1_000,
+            queue_cap: 2,
+            overload: OverloadPolicy::DropOldest,
+            ..ServingSpec::default()
+        };
+        let mut run = ServingRun::new(ServingState::build(&spec, 1).unwrap());
+        let mut stats = Stats::default();
+        run.admit(20, &mut stats);
+        assert_eq!(run.queue_depth(0), 2);
+        assert_eq!(run.shed[0], 2);
+        // The oldest survivor is now arrival 12, so max_wait fires at
+        // 12 + 1000.
+        assert_eq!(run.dispatch(0, 1_011, &mut stats), None);
+        assert_eq!(run.dispatch(0, 1_012, &mut stats), Some(2));
+        run.complete(0, 1_022, &mut stats);
+        // The survivors are the NEWEST arrivals (12, 13).
+        assert_eq!(run.latencies[0], vec![1_010, 1_009]);
+        assert!(run.all_done());
+    }
+
+    #[test]
+    fn deadline_expires_queued_requests_on_the_exact_edge() {
+        let spec = ServingSpec {
+            arrivals: vec![10, 400],
+            max_batch: 1,
+            max_wait: 10_000,
+            deadline: 100,
+            ..ServingSpec::default()
+        };
+        let mut run = ServingRun::new(ServingState::build(&spec, 1).unwrap());
+        let mut stats = Stats::default();
+        run.admit(10, &mut stats);
+        run.expire(10, &mut stats);
+        assert_eq!(run.queue_depth(0), 1);
+        // The expiry edge (arrival 10 + deadline 100) caps next_event
+        // for busy AND parked tenants.
+        assert_eq!(run.next_event(&[false]), 110);
+        assert_eq!(run.next_event(&[true]), 110);
+        run.expire(109, &mut stats);
+        assert_eq!(run.timed_out[0], 0, "109 < expiry edge 110");
+        run.expire(110, &mut stats);
+        assert_eq!(run.timed_out[0], 1);
+        assert_eq!(stats.get("serving.requests_timed_out"), 1);
+        assert_eq!(run.queue_depth(0), 0);
+        // After expiry at now=110 the next event is strictly future.
+        assert_eq!(run.next_event(&[true]), 400);
+        run.admit(400, &mut stats);
+        run.expire(400, &mut stats);
+        run.dispatch(0, 400, &mut stats);
+        run.complete(0, 450, &mut stats);
+        assert!(run.all_done());
+        let rep = ServingReport::from_run(&run);
+        assert_eq!((rep.tenants[0].timed_out, rep.tenants[0].completed), (1, 1));
+    }
+
+    #[test]
+    fn backoff_schedules_predraw_deterministically() {
+        let spec = ServingSpec {
+            seed: 7,
+            requests: 4,
+            mean_gap: 1_000,
+            max_batch: 2,
+            retries: 3,
+            backoff: 50,
+            ..ServingSpec::default()
+        };
+        let a = ServingState::build(&spec, 2).unwrap();
+        let b = ServingState::build(&spec, 2).unwrap();
+        assert_eq!(a, b);
+        for t in 0..2 {
+            assert_eq!(a.backoffs[t].len(), 4 * 3);
+            for i in 0..4 {
+                for k in 0..3u32 {
+                    let d = a.backoff_delay(t, i, k);
+                    let base = 50u64 << k;
+                    assert!(d >= base && d < base + 50, "attempt {k}: {d} vs base {base}");
+                }
+            }
+        }
+        // Independent per-tenant streams; independent of arrivals.
+        assert_ne!(a.backoffs[0], a.backoffs[1]);
+        let mut no_retry = spec.clone();
+        no_retry.retries = 0;
+        no_retry.backoff = 0;
+        assert_eq!(
+            ServingState::build(&no_retry, 2).unwrap().arrivals,
+            a.arrivals,
+            "adding retries must not move a single arrival"
+        );
+        assert!(a.backoff_horizon() > 0);
+        assert_eq!(ServingState::build(&no_retry, 2).unwrap().backoff_horizon(), 0);
+    }
+
+    #[test]
+    fn fail_batch_requeues_with_budget_and_fails_without() {
+        let spec = ServingSpec {
+            arrivals: vec![5, 6],
+            max_batch: 2,
+            max_wait: 100,
+            retries: 1,
+            backoff: 40,
+            ..ServingSpec::default()
+        };
+        let mut run = ServingRun::new(ServingState::build(&spec, 1).unwrap());
+        let mut stats = Stats::default();
+        run.admit(6, &mut stats);
+        assert_eq!(run.dispatch(0, 6, &mut stats), Some(2));
+        // First failure: both requests have budget, both back off.
+        assert_eq!(run.fail_batch(0, 10, &mut stats), 0);
+        assert_eq!(run.retried[0], 2);
+        assert_eq!(stats.get("serving.requests_retried"), 2);
+        assert!(run.has_more(0), "backed-off retries are live work");
+        // The retry re-enters the queue at its pre-drawn ready cycle:
+        // base 40 (attempt 0) plus jitter in [0, 40).
+        let ready = run.next_event(&[true]);
+        assert!(ready >= 10 + 40 && ready < 10 + 80, "base 40 + jitter < 40, got {ready}");
+        run.admit(ready - 1, &mut stats);
+        assert_eq!(run.queue_depth(0), 0, "not ready yet");
+        // Both ready cycles are < 10 + 80, so by 200 both re-admit.
+        run.admit(200, &mut stats);
+        assert_eq!(run.queue_depth(0), 2);
+        // Fail again: attempt 2 exceeds the budget of 1 for both.
+        assert_eq!(run.dispatch(0, 200, &mut stats), Some(2));
+        assert_eq!(run.fail_batch(0, 250, &mut stats), 2);
+        assert_eq!(run.failed[0], 2);
+        assert_eq!(stats.get("serving.requests_failed"), 2);
+        assert!(run.all_done(), "failed requests are resolved work");
+        let rep = ServingReport::from_run(&run);
+        assert_eq!((rep.tenants[0].retried, rep.tenants[0].failed), (2, 2));
+        assert_eq!(rep.tenants[0].completed, 0);
+        assert!(rep.tenants[0].starved);
+    }
+
+    #[test]
+    fn retry_latency_counts_from_original_arrival() {
+        let spec = ServingSpec {
+            arrivals: vec![5],
+            max_batch: 1,
+            retries: 2,
+            backoff: 10,
+            ..ServingSpec::default()
+        };
+        let mut run = ServingRun::new(ServingState::build(&spec, 1).unwrap());
+        let mut stats = Stats::default();
+        run.admit(5, &mut stats);
+        run.dispatch(0, 5, &mut stats);
+        run.fail_batch(0, 50, &mut stats);
+        let ready = run.next_event(&[true]);
+        run.admit(ready, &mut stats);
+        run.dispatch(0, ready + 500, &mut stats);
+        run.complete(0, ready + 600, &mut stats);
+        // Latency spans arrival (5) -> completion, backoff included.
+        assert_eq!(run.latencies[0], vec![ready + 595]);
+        assert!(run.all_done());
+    }
+
+    #[test]
+    fn state_dump_reports_overload_columns() {
+        let spec = ServingSpec {
+            arrivals: vec![10, 11, 12],
+            max_batch: 8,
+            max_wait: 1_000,
+            queue_cap: 2,
+            deadline: 500,
+            ..ServingSpec::default()
+        };
+        let mut run = ServingRun::new(ServingState::build(&spec, 1).unwrap());
+        let mut stats = Stats::default();
+        run.admit(20, &mut stats);
+        let dump = run.state_dump();
+        assert!(dump.contains("shed=1"), "dump: {dump}");
+        assert!(dump.contains("timed_out=0"), "dump: {dump}");
+        assert!(dump.contains("retried=0"), "dump: {dump}");
+        assert!(dump.contains("failed=0"), "dump: {dump}");
+        // Next pending deadline: oldest queued arrival (10) + 500.
+        assert!(dump.contains("next_deadline=510"), "dump: {dump}");
+        run.expire(511, &mut stats);
+        let dump = run.state_dump();
+        assert!(dump.contains("timed_out=2"), "dump: {dump}");
+        assert!(dump.contains("next_deadline=-"), "dump: {dump}");
+    }
+
+    #[test]
+    fn overload_keys_round_trip_through_header_kv() {
+        let spec = ServingSpec::parse_cli(
+            "requests=8,mean_gap=512,max_batch=2,queue_cap=3,overload=drop-oldest,\
+             deadline=40000,retries=2,backoff=1000",
+        )
+        .unwrap();
+        assert_eq!(spec.queue_cap, 3);
+        assert_eq!(spec.overload, OverloadPolicy::DropOldest);
+        assert_eq!(spec.deadline, 40_000);
+        assert_eq!((spec.retries, spec.backoff), (2, 1_000));
+        let mut back = ServingSpec::none();
+        for (k, v) in spec.header_kv() {
+            let value = if let Some(inner) = v.strip_prefix('"') {
+                Value::Str(inner.trim_end_matches('"').to_string())
+            } else {
+                Value::Int(v.parse().unwrap())
+            };
+            assert!(back.apply_key(k, &value).unwrap(), "{k} must be a serving key");
+        }
+        assert_eq!(back, spec);
+        // A spec setting none of the overload keys emits none of them —
+        // its header stays byte-identical to a pre-overload build's.
+        let old = ServingSpec::parse_cli("requests=8,mean_gap=512,max_batch=2").unwrap();
+        for (k, _) in old.header_kv() {
+            assert!(
+                !["serving.queue_cap", "serving.overload", "serving.deadline",
+                  "serving.retries", "serving.backoff"]
+                    .contains(&k),
+                "{k} must not appear for a pre-overload spec"
+            );
+        }
+    }
+
+    #[test]
+    fn overload_specs_are_validated() {
+        // drop-oldest without a bound is meaningless.
+        assert!(ServingSpec::parse_cli(
+            "requests=4,mean_gap=100,max_batch=1,overload=drop-oldest"
+        )
+        .is_err());
+        // Retries need a backoff base.
+        assert!(ServingSpec::parse_cli("requests=4,mean_gap=100,max_batch=1,retries=2").is_err());
+        // Unknown policy is a typed parse error.
+        assert!(ServingSpec::parse_cli(
+            "requests=4,mean_gap=100,max_batch=1,queue_cap=2,overload=bogus"
+        )
+        .is_err());
+        // requests= with an explicit trace stays a typed error through
+        // the key-value path (the TOML/[header] route), not a silent
+        // override.
+        let mut spec = ServingSpec::none();
+        spec.apply_key("serving.requests", &Value::Int(4)).unwrap();
+        spec.apply_key("serving.arrivals", &Value::Str("1+2".into())).unwrap();
+        spec.max_batch = 1;
+        let err = spec.validate().unwrap_err().to_string();
+        assert!(err.contains("not both"), "got: {err}");
     }
 
     #[test]

@@ -119,6 +119,14 @@ counters! {
     ServingBatches => "serving.batches_dispatched",
     ServingRequestsArrived => "serving.requests_arrived",
     ServingRequestsCompleted => "serving.requests_completed",
+    // Overload robustness (PR 10): requests resolved by something
+    // other than completion — failed (retry budget exhausted), retried
+    // (failed-fast and re-queued with backoff), shed (bounded-queue
+    // admission), timed out (deadline expiry while queued).
+    ServingRequestsFailed => "serving.requests_failed",
+    ServingRequestsRetried => "serving.requests_retried",
+    ServingRequestsShed => "serving.requests_shed",
+    ServingRequestsTimedOut => "serving.requests_timed_out",
     ServingSloMet => "serving.slo_met",
     // System-level CDC adapters.
     SysReadLineBackpressure => "sys.read_line_backpressure",
@@ -139,6 +147,9 @@ counters! {
     ServingBatchOccupancy => "serving.batch_occupancy",
     ServingLatencyCycles => "serving.latency_cycles",
     ServingQueueDepth => "serving.queue_depth",
+    // Overload robustness (PR 10): the pre-drawn backoff delay applied
+    // to each retried request (base << attempt + jitter).
+    ServingRetryBackoffCycles => "serving.retry_backoff_cycles",
 }
 
 #[derive(Clone, Copy, Debug)]

@@ -1082,6 +1082,276 @@ mod fault_schedule_props {
     }
 }
 
+/// Overload-robustness properties (PR 10 satellite): the retry-backoff
+/// schedule must be a pure function of `(spec, tenant)` — same seed,
+/// same table, independent of the arrival stream and of every queue
+/// knob — and a serving run advanced by `next_event` leaps must be
+/// bit-identical to the same run advanced cycle by cycle, deadlines,
+/// sheds, retries and all, with no leap ever capped at zero.
+#[cfg(test)]
+mod serving_overload_props {
+    use super::{check, Config, Gen};
+    use crate::serving::{OverloadPolicy, ServingRun, ServingSpec, ServingState};
+    use crate::sim::stats::Stats;
+    use crate::util::Prng;
+
+    #[derive(Clone, Debug)]
+    struct SchedCase {
+        seed: u64,
+        tenants: usize,
+        requests: usize,
+        mean_gap: u64,
+        retries: usize,
+        backoff: u64,
+    }
+
+    struct SchedGen;
+
+    impl Gen<SchedCase> for SchedGen {
+        fn generate(&self, rng: &mut Prng) -> SchedCase {
+            SchedCase {
+                seed: rng.next_u64(),
+                tenants: rng.range(1, 4),
+                requests: rng.range(1, 24),
+                mean_gap: rng.range(1, 2000) as u64,
+                retries: rng.range(1, 3),
+                backoff: rng.range(1, 64) as u64,
+            }
+        }
+
+        fn shrink(&self, c: &SchedCase) -> Vec<SchedCase> {
+            let mut out = Vec::new();
+            if c.requests > 1 {
+                out.push(SchedCase { requests: c.requests / 2, ..c.clone() });
+            }
+            if c.tenants > 1 {
+                out.push(SchedCase { tenants: 1, ..c.clone() });
+            }
+            if c.retries > 1 {
+                out.push(SchedCase { retries: 1, ..c.clone() });
+            }
+            out
+        }
+    }
+
+    #[test]
+    fn prop_backoff_schedule_is_a_pure_function_of_spec_and_tenant() {
+        check(Config { cases: 48, ..Config::default() }, &SchedGen, |c: &SchedCase| {
+            let spec = ServingSpec {
+                seed: c.seed,
+                requests: c.requests,
+                mean_gap: c.mean_gap,
+                max_batch: 1,
+                retries: c.retries,
+                backoff: c.backoff,
+                ..ServingSpec::default()
+            };
+            let a = ServingState::build(&spec, c.tenants).map_err(|e| e.to_string())?;
+            let b = ServingState::build(&spec, c.tenants).map_err(|e| e.to_string())?;
+            if a != b {
+                return Err("same spec built different schedules".into());
+            }
+            // The backoff stream is independent of the arrival stream:
+            // turning retries off must not move a single arrival.
+            let bare = ServingState::build(
+                &ServingSpec { retries: 0, backoff: 0, ..spec.clone() },
+                c.tenants,
+            )
+            .map_err(|e| e.to_string())?;
+            if bare.arrivals != a.arrivals {
+                return Err("retry knobs moved the arrival stream".into());
+            }
+            // ... and of every queue knob: bounding the queue, flipping
+            // the policy, or arming deadlines re-draws nothing.
+            let knobbed = ServingState::build(
+                &ServingSpec {
+                    queue_cap: 2,
+                    overload: OverloadPolicy::DropOldest,
+                    deadline: 500,
+                    ..spec.clone()
+                },
+                c.tenants,
+            )
+            .map_err(|e| e.to_string())?;
+            if knobbed.arrivals != a.arrivals || knobbed.backoffs != a.backoffs {
+                return Err("queue knobs perturbed the pre-drawn schedules".into());
+            }
+            for (t, draws) in a.backoffs.iter().enumerate() {
+                if draws.len() != c.requests * c.retries {
+                    return Err(format!("tenant {t}: {} draws, want request-major stride", draws.len()));
+                }
+                for (i, &d) in draws.iter().enumerate() {
+                    let k = (i % c.retries) as u32;
+                    let base = c.backoff << k;
+                    if d < base || d >= base + c.backoff {
+                        return Err(format!(
+                            "tenant {t} draw {i}: {d} outside [{base}, {})",
+                            base + c.backoff
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// A single-tenant serving run with a fixed pass latency and a
+    /// prescribed number of fail-fast batches (the degrade hand-off,
+    /// minus the fabric).
+    #[derive(Clone, Debug)]
+    struct OverloadCase {
+        seed: u64,
+        arrivals: Vec<u64>,
+        max_batch: usize,
+        max_wait: u64,
+        queue_cap: usize,
+        drop_oldest: bool,
+        deadline: u64,
+        retries: usize,
+        backoff: u64,
+        pass_cycles: u64,
+        fail_first: usize,
+    }
+
+    impl OverloadCase {
+        fn spec(&self) -> ServingSpec {
+            ServingSpec {
+                seed: self.seed,
+                arrivals: self.arrivals.clone(),
+                max_batch: self.max_batch,
+                max_wait: self.max_wait,
+                queue_cap: self.queue_cap,
+                overload: if self.drop_oldest && self.queue_cap > 0 {
+                    OverloadPolicy::DropOldest
+                } else {
+                    OverloadPolicy::Reject
+                },
+                deadline: self.deadline,
+                retries: self.retries,
+                backoff: if self.retries > 0 { self.backoff } else { 0 },
+                ..ServingSpec::default()
+            }
+        }
+    }
+
+    struct OverloadGen;
+
+    impl Gen<OverloadCase> for OverloadGen {
+        fn generate(&self, rng: &mut Prng) -> OverloadCase {
+            let n = rng.range(1, 8);
+            OverloadCase {
+                seed: rng.next_u64(),
+                arrivals: (0..n).map(|_| rng.range(1, 1500) as u64).collect(),
+                max_batch: rng.range(1, 4),
+                max_wait: rng.range(1, 200) as u64,
+                queue_cap: rng.range(0, 3),
+                drop_oldest: rng.chance(0.5),
+                deadline: if rng.chance(0.5) { rng.range(50, 800) as u64 } else { 0 },
+                retries: rng.range(0, 2),
+                backoff: rng.range(1, 64) as u64,
+                pass_cycles: rng.range(5, 300) as u64,
+                fail_first: rng.range(0, 2),
+            }
+        }
+
+        fn shrink(&self, c: &OverloadCase) -> Vec<OverloadCase> {
+            let mut out = Vec::new();
+            if c.arrivals.len() > 1 {
+                out.push(OverloadCase { arrivals: c.arrivals[1..].to_vec(), ..c.clone() });
+            }
+            if c.fail_first > 0 {
+                out.push(OverloadCase { fail_first: 0, ..c.clone() });
+            }
+            if c.deadline > 0 {
+                out.push(OverloadCase { deadline: 0, ..c.clone() });
+            }
+            if c.queue_cap > 0 {
+                out.push(OverloadCase { queue_cap: 0, drop_oldest: false, ..c.clone() });
+            }
+            out
+        }
+    }
+
+    /// Drive the serving front-end of one tenant to completion, either
+    /// cycle by cycle (`leap = false`) or jumping straight between
+    /// `next_event` edges and pass completions (`leap = true`). The two
+    /// trajectories must be indistinguishable in every observable.
+    #[allow(clippy::type_complexity)]
+    fn drive(c: &OverloadCase, leap: bool) -> Result<(u64, Vec<u64>, [usize; 6]), String> {
+        let state = ServingState::build(&c.spec(), 1).map_err(|e| e.to_string())?;
+        let mut run = ServingRun::new(state);
+        let mut stats = Stats::new();
+        let mut now = 0u64;
+        let mut busy_until: Option<u64> = None;
+        let mut failed_batches = 0usize;
+        for _guard in 0..2_000_000 {
+            if busy_until == Some(now) {
+                if failed_batches < c.fail_first {
+                    failed_batches += 1;
+                    run.fail_batch(0, now, &mut stats);
+                } else {
+                    run.complete(0, now, &mut stats);
+                }
+                busy_until = None;
+            }
+            run.admit(now, &mut stats);
+            run.expire(now, &mut stats);
+            if busy_until.is_none() && run.dispatch(0, now, &mut stats).is_some() {
+                busy_until = Some(now + c.pass_cycles);
+            }
+            if busy_until.is_none() && !run.has_more(0) {
+                return Ok((
+                    now,
+                    run.latencies[0].clone(),
+                    [
+                        run.completed[0],
+                        run.batches[0],
+                        run.shed[0],
+                        run.timed_out[0],
+                        run.retried[0],
+                        run.failed[0],
+                    ],
+                ));
+            }
+            now = if leap {
+                let parked = [busy_until.is_none()];
+                let ne = run.next_event(&parked);
+                let target = busy_until.map_or(ne, |b| b.min(ne));
+                if target == u64::MAX {
+                    return Err(format!("live run with no next event at {now}"));
+                }
+                if target <= now {
+                    return Err(format!("leap capped at zero: next event {target} at {now}"));
+                }
+                target
+            } else {
+                now + 1
+            };
+        }
+        Err("run did not converge".into())
+    }
+
+    #[test]
+    fn prop_leaping_between_next_events_matches_stepwise_serving() {
+        check(Config { cases: 48, ..Config::default() }, &OverloadGen, |c: &OverloadCase| {
+            let stepped = drive(c, false)?;
+            let leaped = drive(c, true)?;
+            if stepped != leaped {
+                return Err(format!("leap diverged: stepwise {stepped:?} vs leap {leaped:?}"));
+            }
+            let (_, _, counters) = stepped;
+            let resolved = counters[0] + counters[2] + counters[3] + counters[5];
+            if resolved != c.arrivals.len() {
+                return Err(format!(
+                    "{} arrivals but {resolved} resolved (completed+shed+timed_out+failed)",
+                    c.arrivals.len()
+                ));
+            }
+            Ok(())
+        });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -201,6 +201,10 @@ impl ScenarioOutcome {
                 mix(t.completed as u64);
                 mix(t.batches as u64);
                 mix(t.slo_met as u64);
+                mix(t.shed as u64);
+                mix(t.timed_out as u64);
+                mix(t.retried as u64);
+                mix(t.failed as u64);
                 mix(t.p50_cycles);
                 mix(t.p99_cycles);
                 mix(t.max_cycles);
@@ -428,9 +432,15 @@ fn edge_budget(tenants: &[TenantRt], n: usize, srv: Option<&ServingRun>) -> u64 
         cycles += 4 * rt.start_cycle;
         // A serving tenant holds its pass in `template` (steps is
         // empty until dispatch) and re-runs it once per batch; one
-        // pass per request is the upper bound.
-        let passes =
-            srv.map(|s| s.state.arrivals[t].len().max(1) as u64).unwrap_or(1);
+        // pass per request — times one extra pass per retry budget
+        // slot, since a failed-fast request can re-dispatch — is the
+        // upper bound.
+        let passes = srv
+            .map(|s| {
+                (s.state.arrivals[t].len().max(1) as u64)
+                    .saturating_mul(1 + s.state.spec.retries as u64)
+            })
+            .unwrap_or(1);
         for s in rt.steps.iter().chain(rt.template.iter()) {
             cycles += (64 * (s.read_lines() + s.write_lines() + 64) * n as u64
                 + s.macs / 32
@@ -439,8 +449,10 @@ fn edge_budget(tenants: &[TenantRt], n: usize, srv: Option<&ServingRun>) -> u64 
         }
     }
     if let Some(s) = srv {
-        // Idle inter-arrival gaps are simulated (or leapt) time too.
+        // Idle inter-arrival gaps are simulated (or leapt) time too,
+        // and so are backoff waits before retry re-admission.
         cycles += 4 * s.state.last_arrival();
+        cycles = cycles.saturating_add(4 * s.state.backoff_horizon());
     }
     cycles.saturating_mul(8)
 }
@@ -675,6 +687,11 @@ fn drive(
         let now = sys.fabric_cycles();
         if let Some(srv) = srv.as_deref_mut() {
             srv.admit(now, &mut sys.stats);
+            // Expiry runs after admission (a request arriving on its
+            // own deadline edge dies immediately) and before any
+            // dispatch below — expiry beats dispatch on ties, on every
+            // backend.
+            srv.expire(now, &mut sys.stats);
         }
         let mut all_done = true;
         for (t, rt) in tenants.iter_mut().enumerate() {
@@ -692,20 +709,29 @@ fn drive(
                 }
                 // Batcher: a parked tenant whose policy fires re-arms
                 // its template and begins the pass on this same edge.
-                if rt.state == TState::Parked
-                    && srv.dispatch(t, now, &mut sys.stats).is_some()
-                {
-                    rt.steps = rt.template.iter().cloned().collect();
-                    begin_next(sys, t, rt);
+                if rt.state == TState::Parked {
+                    if srv.dispatch(t, now, &mut sys.stats).is_some() {
+                        rt.steps = rt.template.iter().cloned().collect();
+                        begin_next(sys, t, rt);
+                    } else if !srv.has_more(t) {
+                        // Every remaining request was shed, timed out,
+                        // or failed for good: nothing can ever dispatch
+                        // again, so the tenant is done (pre-overload
+                        // specs never reach this — a parked tenant
+                        // always had live work).
+                        rt.state = TState::Finished;
+                    }
                 }
             }
             all_done &= rt.state == TState::Finished;
         }
         if sys.profiling_enabled() {
-            // Queue-depth timeline: sampled after this edge's admission
-            // and dispatch decisions, change-driven inside the recorder.
+            // Queue-depth and cumulative-shed timelines: sampled after
+            // this edge's admission and dispatch decisions,
+            // change-driven inside the recorder.
             if let Some(srv) = srv.as_deref() {
                 sys.obs_serving_depth(srv.total_queued());
+                sys.obs_serving_shed(srv.total_shed());
             }
         }
         if dog.armed {
@@ -743,6 +769,15 @@ fn drive(
                         dog.degraded_at[t] = Some(now);
                         dog.drain_count[t] = sys.quiesce_drained(t);
                         dog.drain_change_cycle[t] = now;
+                        // Serving hand-off: the wedged tenant's
+                        // in-flight batch will never complete. Fail it
+                        // fast so each request either schedules a
+                        // backed-off retry or counts in
+                        // serving.requests_failed — instead of
+                        // silently stranding in `inflight` forever.
+                        if let Some(srv) = srv.as_deref_mut() {
+                            srv.fail_batch(t, now, &mut sys.stats);
+                        }
                         all_done = false;
                     }
                 }
@@ -799,10 +834,12 @@ fn drive(
             }
         }
         if let Some(srv) = srv.as_deref() {
-            // Serving horizon: never leap past the next arrival or a
-            // parked tenant's max-wait dispatch deadline. Strictly
-            // future because admit/dispatch above already processed
-            // every event due at `now`.
+            // Serving horizon: never leap past the next arrival, a
+            // parked tenant's max-wait dispatch deadline, a request's
+            // deadline-expiry edge, or a backed-off retry's
+            // re-admission cycle. Strictly future because
+            // admit/expire/dispatch above already processed every
+            // event due at `now`.
             let parked: Vec<bool> =
                 tenants.iter().map(|rt| rt.state == TState::Parked).collect();
             let next = srv.next_event(&parked);

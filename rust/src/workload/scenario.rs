@@ -36,7 +36,7 @@
 use crate::accel::layer_processor::PortGroup;
 use crate::config::{parse_toml_subset, SystemConfig, Value};
 use crate::fault::FaultSpec;
-use crate::serving::ServingSpec;
+use crate::serving::{OverloadPolicy, ServingSpec};
 use crate::workload::graph::WorkloadNet;
 use crate::workload::zoo;
 use anyhow::{anyhow, bail, ensure, Context, Result};
@@ -313,13 +313,43 @@ impl Scenario {
                 };
                 Some(sc)
             }
+            "serving-overload" => {
+                // Oversubscribed on purpose: a 12-request burst against
+                // a 3-deep bounded queue while the tenant is mid-pass
+                // guarantees drop-oldest sheds on every design, and the
+                // per-request deadline exercises expiry edges under
+                // leap. Retries are armed (header coverage) but never
+                // fire without a fault campaign.
+                let mut sc =
+                    Scenario::single("serving-overload", small(8, 16), zoo::gemm_mlp());
+                sc.serving = ServingSpec {
+                    seed: 5,
+                    arrivals: (0..12).map(|i| 100 + i).collect(),
+                    max_batch: 2,
+                    max_wait: 50,
+                    slo_cycles: 150_000,
+                    queue_cap: 3,
+                    overload: OverloadPolicy::DropOldest,
+                    deadline: 30_000,
+                    retries: 2,
+                    backoff: 1_500,
+                    ..ServingSpec::default()
+                };
+                Some(sc)
+            }
             _ => None,
         }
     }
 
     /// Names of the built-in scenarios.
     pub fn builtin_names() -> &'static [&'static str] {
-        &["single-tiny-vgg", "multi-tenant-mix", "staggered-gemm", "serving-poisson"]
+        &[
+            "single-tiny-vgg",
+            "multi-tenant-mix",
+            "staggered-gemm",
+            "serving-poisson",
+            "serving-overload",
+        ]
     }
 
     /// The micro scenario behind the checked-in golden traces

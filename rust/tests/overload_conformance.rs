@@ -1,0 +1,233 @@
+//! Conformance suite for the overload-robust serving layer (PR 10):
+//! bounded admission, request deadlines, and deterministic
+//! retry/backoff must be **bit-exact** replicas of themselves under
+//! every execution strategy, alone and composed with the PR 6 fault
+//! campaigns.
+//!
+//! What it locks down, per ISSUE 10's acceptance criteria:
+//!
+//! * every zoo serving scenario — including the oversubscribed
+//!   `serving-overload` builtin — reports identical shed / timed-out /
+//!   retried / failed counts across all four backend combinations
+//!   (full/elided x stepwise/leap) and across sequential vs parallel
+//!   matrix execution;
+//! * the oversubscribed builtin actually trips the overload machinery
+//!   (nonzero sheds, every arrival resolved exactly once);
+//! * a wedged tenant under `policy=degrade` hands its in-flight batch
+//!   to the retry layer: with budget the requests re-queue
+//!   (`serving.requests_retried`), without budget they fail for good
+//!   (`serving.requests_failed`) — backend-invariantly either way;
+//! * captured overload traces record the new `serving.*` header keys
+//!   and replay bit-exactly under every backend.
+
+use medusa::config::{EdgeMode, PayloadMode, SimBackend};
+use medusa::run::RunOptions;
+use medusa::serving::ServingSpec;
+use medusa::sim::stats::{Counter, SampleId};
+use medusa::sim::trace::ScenarioTrace;
+use medusa::workload::{self, Scenario, ScenarioOutcome};
+
+const SERVING_SCENARIOS: [&str; 2] = ["serving-poisson", "serving-overload"];
+
+fn backends() -> [SimBackend; 4] {
+    [
+        SimBackend::full(),
+        SimBackend { payload: PayloadMode::Elided, edges: EdgeMode::Stepwise },
+        SimBackend { payload: PayloadMode::Full, edges: EdgeMode::Leap },
+        SimBackend::fast(),
+    ]
+}
+
+/// Everything the overload layer observes: the per-tenant report
+/// (which now carries shed / timed-out / retried / failed) and the
+/// full serving counter/sample surface including the PR 10 additions.
+fn assert_overload_exact(a: &ScenarioOutcome, b: &ScenarioOutcome, what: &str) {
+    assert_eq!(a.fabric_cycles, b.fabric_cycles, "{what}: fabric_cycles");
+    assert_eq!(a.now_ps, b.now_ps, "{what}: now_ps");
+    let (ra, rb) = (a.serving.as_ref().unwrap(), b.serving.as_ref().unwrap());
+    assert_eq!(ra.tenants.len(), rb.tenants.len(), "{what}: tenant count");
+    for (t, (ta, tb)) in ra.tenants.iter().zip(rb.tenants.iter()).enumerate() {
+        assert_eq!(ta, tb, "{what}: tenant {t} serving report");
+    }
+    for id in [
+        Counter::ServingBatches,
+        Counter::ServingRequestsArrived,
+        Counter::ServingRequestsCompleted,
+        Counter::ServingRequestsFailed,
+        Counter::ServingRequestsRetried,
+        Counter::ServingRequestsShed,
+        Counter::ServingRequestsTimedOut,
+        Counter::ServingSloMet,
+    ] {
+        assert_eq!(a.stats.count(id), b.stats.count(id), "{what}: counter {}", id.name());
+    }
+    for id in [
+        SampleId::ServingBatchOccupancy,
+        SampleId::ServingLatencyCycles,
+        SampleId::ServingQueueDepth,
+        SampleId::ServingRetryBackoffCycles,
+    ] {
+        let (sa, sb) = (a.stats.series_of(id), b.stats.series_of(id));
+        assert_eq!(
+            (sa.min, sa.max, sa.sum, sa.count),
+            (sb.min, sb.max, sb.sum, sb.count),
+            "{what}: series {}",
+            id.name()
+        );
+    }
+}
+
+#[test]
+fn overload_scenarios_are_bit_identical_across_all_backends() {
+    for which in SERVING_SCENARIOS {
+        let reference = {
+            let sc = Scenario::builtin(which).unwrap();
+            RunOptions::new().backend(SimBackend::full()).run(&sc).unwrap()
+        };
+        for backend in backends() {
+            let sc = Scenario::builtin(which).unwrap();
+            let out = RunOptions::new().backend(backend).run(&sc).unwrap();
+            assert_overload_exact(&reference, &out, &format!("{which} on {backend:?}"));
+            if backend.payload == PayloadMode::Full {
+                assert_eq!(
+                    reference.fingerprint(),
+                    out.fingerprint(),
+                    "{which} on {backend:?}: fingerprint"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn overload_matrix_rows_are_bit_identical_sequential_vs_parallel() {
+    // The overload counters feed the outcome fingerprint, so matrix
+    // bit-equality across worker counts covers shed / timed-out /
+    // retried / failed bookkeeping too.
+    let seq = RunOptions::new().threads(1).sweep().unwrap();
+    let par = RunOptions::new().threads(4).sweep().unwrap();
+    let rows = |pts: &[medusa::eval::scenarios::ScenarioPoint]| -> Vec<(&'static str, medusa::interconnect::Design, u64)> {
+        pts.iter()
+            .filter(|p| SERVING_SCENARIOS.contains(&p.scenario))
+            .map(|p| (p.scenario, p.design, p.fingerprint))
+            .collect()
+    };
+    let (s, p) = (rows(&seq), rows(&par));
+    assert_eq!(s.len(), 4, "each serving scenario must appear on both matrix designs");
+    assert_eq!(s, p, "serving matrix rows diverged between worker counts");
+}
+
+#[test]
+fn oversubscribed_builtin_trips_the_overload_machinery() {
+    let sc = Scenario::builtin("serving-overload").unwrap();
+    let out = RunOptions::new().backend(SimBackend::full()).run(&sc).unwrap();
+    assert!(out.all_verified(), "shedding load must not corrupt the passes that do run");
+    let t0 = &out.serving.as_ref().unwrap().tenants[0];
+    assert_eq!(t0.arrived, 12, "the 12-request burst is materialized up front");
+    // The burst lands while the first batch's pass is running: 10
+    // requests contend for a 3-deep queue, so drop-oldest must shed
+    // exactly 7 whatever the design's pass latency.
+    assert_eq!(t0.shed, 7, "cap-3 queue under a 12-request burst sheds 7");
+    // No faults: the retry budget is armed but never drawn on.
+    assert_eq!((t0.retried, t0.failed), (0, 0), "retries need a failed-fast batch");
+    // Conservation: every arrival resolves exactly once.
+    assert_eq!(
+        t0.completed + t0.shed + t0.timed_out,
+        12,
+        "every request must complete, shed, or time out"
+    );
+    // The report and the raw counters are the same bookkeeping.
+    assert_eq!(out.stats.get("serving.requests_shed"), t0.shed as u64);
+    assert_eq!(out.stats.get("serving.requests_timed_out"), t0.timed_out as u64);
+    assert_eq!(out.stats.get("serving.requests_failed"), 0);
+}
+
+#[test]
+fn degraded_batch_requeues_through_the_retry_budget() {
+    // serving-overload arms retries=2. Wedge the tenant at cycle 64:
+    // the first batch (2 requests, dispatched at cycle 101) stalls,
+    // the watchdog degrades the tenant, and fail-fast hands both
+    // requests to the retry layer — budget left, so they re-queue and
+    // count in `serving.requests_retried`, never in failed.
+    let mut sc = Scenario::builtin("serving-overload").unwrap();
+    sc.faults =
+        medusa::fault::FaultSpec::parse_cli("wedge=0@64,watchdog=512,policy=degrade,seed=11")
+            .unwrap();
+    let full = RunOptions::new().backend(SimBackend::full()).run(&sc).unwrap();
+    let t0 = &full.serving.as_ref().unwrap().tenants[0];
+    assert_eq!(t0.completed, 0, "wedged at cycle 64: nothing may complete");
+    assert_eq!(t0.shed, 7, "admission bookkeeping is independent of the wedge");
+    assert!(t0.retried >= 2, "the failed-fast batch must schedule retries, got {}", t0.retried);
+    assert_eq!(t0.failed, 0, "budget of 2 is never exhausted on a quiesced tenant");
+    assert!(
+        full.stats.series("serving.retry_backoff_cycles").unwrap().count >= 2,
+        "each retry must record its pre-drawn backoff delay"
+    );
+    assert!(!full.all_verified(), "the degraded tenant cannot verify");
+    // And the whole composition stays backend-invariant.
+    let fast = RunOptions::new().backend(SimBackend::fast()).run(&sc).unwrap();
+    assert_overload_exact(&full, &fast, "retried batch under fast backend");
+}
+
+#[test]
+fn degraded_batch_without_budget_fails_for_good() {
+    // Same wedge, retries disarmed: the failed-fast batch has no
+    // budget, so both requests count in `serving.requests_failed` on
+    // the spot.
+    let mut sc = Scenario::builtin("serving-overload").unwrap();
+    sc.serving = ServingSpec { retries: 0, backoff: 0, ..sc.serving.clone() };
+    sc.faults =
+        medusa::fault::FaultSpec::parse_cli("wedge=0@64,watchdog=512,policy=degrade,seed=11")
+            .unwrap();
+    let full = RunOptions::new().backend(SimBackend::full()).run(&sc).unwrap();
+    let t0 = &full.serving.as_ref().unwrap().tenants[0];
+    assert_eq!(t0.completed, 0);
+    assert_eq!(t0.failed, 2, "the 2-request batch fails for good without a retry budget");
+    assert_eq!(t0.retried, 0);
+    assert_eq!(full.stats.get("serving.requests_failed"), 2);
+    let fast = RunOptions::new().backend(SimBackend::fast()).run(&sc).unwrap();
+    assert_overload_exact(&full, &fast, "failed batch under fast backend");
+}
+
+#[test]
+fn captured_overload_trace_records_new_keys_and_replays_everywhere() {
+    let sc = Scenario::builtin("serving-overload").unwrap();
+    let (out, trace) = workload::run_scenario_captured(&sc).unwrap();
+    assert_eq!(trace.header.serving, sc.serving, "header must record the overload spec");
+    let text = trace.to_text();
+    for key in [
+        "serving.queue_cap = 3",
+        "serving.overload = \"drop-oldest\"",
+        "serving.deadline = 30000",
+        "serving.retries = 2",
+        "serving.backoff = 1500",
+    ] {
+        assert!(text.contains(key), "{key:?} missing from trace text:\n{text}");
+    }
+    let parsed = ScenarioTrace::from_str(&text).unwrap();
+    assert_eq!(parsed, trace, "overload trace text round-trip");
+    assert_eq!(parsed.header.serving, sc.serving, "defaults must restore exactly on parse");
+    for backend in backends() {
+        let replayed = RunOptions::new()
+            .backend(backend)
+            .verify_replay(&parsed)
+            .unwrap_or_else(|e| panic!("overload replay under {backend:?}: {e:#}"));
+        assert_overload_exact(&out, &replayed, &format!("replay {backend:?}"));
+    }
+}
+
+#[test]
+fn pre_overload_specs_emit_no_new_header_keys() {
+    // The format-regression half: a serving spec that sets none of the
+    // PR 10 knobs must capture a header byte-identical to what PR 7
+    // produced — no queue_cap / overload / deadline / retries keys.
+    let sc = Scenario::builtin("serving-poisson").unwrap();
+    let (_, trace) = workload::run_scenario_captured(&sc).unwrap();
+    let text = trace.to_text();
+    for key in ["serving.queue_cap", "serving.overload", "serving.deadline", "serving.retries", "serving.backoff"]
+    {
+        assert!(!text.contains(key), "{key} leaked into a pre-overload trace:\n{text}");
+    }
+    let parsed = ScenarioTrace::from_str(&text).unwrap();
+    assert_eq!(parsed.header.serving, sc.serving, "defaults restore to the disabled knobs");
+}

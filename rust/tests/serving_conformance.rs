@@ -118,12 +118,10 @@ fn leap_jumps_sparse_inter_arrival_gaps_without_moving_a_sample() {
     let mut sc = Scenario::builtin("serving-poisson").unwrap();
     sc.serving = ServingSpec {
         seed: 1,
-        requests: 0,
-        mean_gap: 0,
         max_batch: 1,
         max_wait: 1_000,
-        slo_cycles: 0,
         arrivals: vec![500, 400_000, 800_000],
+        ..ServingSpec::default()
     };
     let stepwise = RunOptions::new().backend(SimBackend::full()).run(&sc).unwrap();
     let leap = RunOptions::new()
